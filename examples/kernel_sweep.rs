@@ -1,0 +1,18 @@
+//! Kernel sweep: the full Fig. 2 left axis (performance + energy
+//! efficiency) across baseline / SM / MM, printed as tables — the same
+//! harness the bench targets use.
+
+use spatzformer::experiments;
+
+fn main() {
+    let seed = 0xC0FFEE;
+    let rows = experiments::fig2_rows(seed);
+    println!("=== Fig. 2 left axis — performance ===");
+    println!("{}", experiments::render_fig2_perf(&rows));
+    println!("=== Fig. 2 left axis — energy efficiency ===");
+    println!("{}", experiments::render_fig2_energy(&rows));
+    println!("=== area (E4) ===");
+    println!("{}", experiments::render_area());
+    println!("=== fmax (E5) ===");
+    println!("{}", experiments::render_fmax());
+}

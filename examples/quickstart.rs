@@ -1,0 +1,40 @@
+//! Quickstart: run one vector kernel on the Spatzformer cluster in both
+//! modes and print the paper-style metrics.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use spatzformer::config::SimConfig;
+use spatzformer::coordinator::{Coordinator, Job, ModePolicy};
+use spatzformer::kernels::KernelId;
+use spatzformer::runtime::XlaRuntime;
+
+fn main() -> anyhow::Result<()> {
+    // 1. a coordinator over the reconfigurable cluster
+    let mut coord = Coordinator::new(SimConfig::spatzformer())?;
+
+    // 2. optional: attach the AOT artifacts so every run is cross-checked
+    //    against the XLA golden model (requires `make artifacts`)
+    let artifacts = XlaRuntime::default_dir();
+    if artifacts.join("manifest.txt").exists() {
+        coord.attach_runtime(&artifacts)?;
+        println!("XLA verification: ON\n");
+    } else {
+        println!("XLA verification: OFF (run `make artifacts`)\n");
+    }
+
+    // 3. run the FFT in split mode and merge mode
+    for policy in [ModePolicy::Split, ModePolicy::Merge] {
+        let report = coord.submit(&Job::Kernel { kernel: KernelId::Fft, policy })?;
+        println!("fft in {:?} mode ({})", policy, report.deploy.name());
+        println!("  cycles      : {}", report.kernel_cycles);
+        println!("  FLOP/cycle  : {:.3}", report.flop_per_cycle());
+        println!("  GFLOPS/W    : {:.2}", report.metrics.gflops_per_watt());
+        if let Some(err) = report.verified_max_rel_err {
+            println!("  verified    : OK (max rel err {err:.2e} vs XLA)");
+        }
+        println!();
+    }
+    Ok(())
+}

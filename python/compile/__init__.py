@@ -1,0 +1,3 @@
+# Build-time-only package: authors the kernels (L1 Pallas), the compute
+# graphs (L2 JAX) and AOT-lowers them to HLO text artifacts consumed by
+# the Rust runtime. Never imported on the request path.

@@ -1,0 +1,2 @@
+# L1: Pallas kernels for the compute hot-spots (tiled matmul, radix-2
+# FFT butterfly stage) plus the pure-jnp oracle in ref.py.

@@ -1,0 +1,99 @@
+"""L1 Pallas kernel: radix-2 DIT butterfly stage, split-complex fp32.
+
+One stage updates all N elements: butterfly pairs (a, b) with twiddle w
+compute ``a' = a + w*b`` and ``b' = a - w*b``. The per-stage pairing and
+twiddles are compile-time constants (static tables, exactly like the
+index/twiddle tables the simulated kernel stages into the TCDM), so the
+kernel body is pure vector arithmetic plus static gathers — which is why
+it lowers to plain HLO under ``interpret=True`` and runs on the Rust
+PJRT CPU client.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+@functools.lru_cache(maxsize=None)
+def stage_tables(n: int, s: int):
+    """(a indices, b indices, twiddle re, twiddle im) for stage ``s``.
+
+    Identical tables to the Rust generator (`kernels::fft::stage_tables`),
+    with indices in elements rather than bytes.
+    """
+    h = 1 << s
+    a_idx, b_idx, w_re, w_im = [], [], [], []
+    for g in range(0, n, 2 * h):
+        for j in range(h):
+            a = g + j
+            a_idx.append(a)
+            b_idx.append(a + h)
+            ang = -np.pi * j / h
+            w_re.append(np.cos(ang))
+            w_im.append(np.sin(ang))
+    return (
+        np.asarray(a_idx, np.int32),
+        np.asarray(b_idx, np.int32),
+        np.asarray(w_re, np.float32),
+        np.asarray(w_im, np.float32),
+    )
+
+
+def _stage_kernel(re_ref, im_ref, aidx_ref, bidx_ref, wre_ref, wim_ref, ore_ref, oim_ref):
+    re = re_ref[...]
+    im = im_ref[...]
+    a_idx = aidx_ref[...]
+    b_idx = bidx_ref[...]
+    w_re = wre_ref[...]
+    w_im = wim_ref[...]
+    ar, ai = re[a_idx], im[a_idx]
+    br, bi = re[b_idx], im[b_idx]
+    # t = w * b (split-complex), same operation order as the simulator
+    t_im = w_re * bi + w_im * br
+    t_re = w_re * br - w_im * bi
+    new_re = re.at[a_idx].set(ar + t_re).at[b_idx].set(ar - t_re)
+    new_im = im.at[a_idx].set(ai + t_im).at[b_idx].set(ai - t_im)
+    ore_ref[...] = new_re
+    oim_ref[...] = new_im
+
+
+def fft_stage(re: jax.Array, im: jax.Array, s: int):
+    """Apply butterfly stage ``s`` to split-complex arrays of length N.
+
+    The stage tables travel as kernel *inputs* (Pallas does not capture
+    constant arrays) — mirroring the simulated kernel, which loads the
+    very same tables from the TCDM."""
+    n = re.shape[0]
+    a_idx, b_idx, w_re, w_im = stage_tables(n, s)
+    return pl.pallas_call(
+        _stage_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ),
+        interpret=True,
+    )(
+        re,
+        im,
+        jnp.asarray(a_idx),
+        jnp.asarray(b_idx),
+        jnp.asarray(w_re),
+        jnp.asarray(w_im),
+    )
+
+
+def fft(re: jax.Array, im: jax.Array):
+    """Full radix-2 DIT FFT from Pallas stage kernels (N power of two)."""
+    n = re.shape[0]
+    bits = int(np.log2(n))
+    assert 1 << bits == n, f"N={n} must be a power of two"
+    brv = np.array(
+        [int(f"{i:0{bits}b}"[::-1], 2) for i in range(n)], dtype=np.int32
+    )
+    re, im = re[brv], im[brv]
+    for s in range(bits):
+        re, im = fft_stage(re, im, s)
+    return re, im

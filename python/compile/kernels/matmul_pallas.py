@@ -1,0 +1,52 @@
+"""L1 Pallas kernel: tiled fp32 matmul.
+
+The VRF-blocking discipline of the simulated Spatz fmatmul kernel mapped
+to Pallas: the grid tiles C into (BM, BN) blocks (the accumulator tile
+lives in VMEM like the vfmacc accumulator group lives in the VRF), and
+each grid step streams the A row-panel and B column-panel it needs.
+
+``interpret=True`` everywhere: the CPU PJRT backend cannot run Mosaic
+custom-calls, and the AOT artifacts must execute inside the Rust runtime
+(see DESIGN.md §Hardware-Adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile shape: matches one VRF-sized accumulator strip of the
+# simulated kernel (2 rows x 128-column vector at LMUL=8).
+DEF_BM = 8
+DEF_BN = 64
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    # One (BM, BN) tile of C: full-K contraction of the A row-panel with
+    # the B column-panel, accumulated in fp32.
+    o_ref[...] = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def matmul(a: jax.Array, b: jax.Array, bm: int = DEF_BM, bn: int = DEF_BN) -> jax.Array:
+    """C = A @ B with a tiled Pallas kernel (fp32).
+
+    Shapes must tile evenly: M % bm == 0 and N % bn == 0.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch: {a.shape} @ {b.shape}"
+    assert m % bm == 0 and n % bn == 0, f"({m},{n}) not tiled by ({bm},{bn})"
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),  # A row-panel
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),  # B column-panel
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,66 @@
+"""Pure-jnp oracle for every kernel — the correctness reference the
+Pallas kernels and the L2 model are tested against (and, transitively,
+what the Rust simulator's RVV datapath is verified against through the
+AOT artifacts)."""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def matmul(a, b):
+    """C = A @ B, fp32."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def conv2d_valid(img, k):
+    """3x3 valid cross-correlation (no kernel flip), matching the
+    simulated kernel's tap order."""
+    kh, kw = k.shape
+    oh = img.shape[0] - kh + 1
+    ow = img.shape[1] - kw + 1
+    out = jnp.zeros((oh, ow), jnp.float32)
+    for ki in range(kh):
+        for kj in range(kw):
+            out = out + k[ki, kj] * img[ki : ki + oh, kj : kj + ow]
+    return out
+
+
+def fft_split(re, im):
+    """FFT of split-complex input via jnp.fft (the gold standard the
+    radix-2 pallas pipeline is checked against)."""
+    x = re.astype(jnp.complex64) + 1j * im.astype(jnp.complex64)
+    y = jnp.fft.fft(x)
+    return jnp.real(y).astype(jnp.float32), jnp.imag(y).astype(jnp.float32)
+
+
+def dotp(x, y):
+    """Inner product, accumulated in fp32 -> shape (1,)."""
+    return jnp.dot(x, y, preferred_element_type=jnp.float32).reshape(1)
+
+
+def axpy(alpha, x, y):
+    """y + alpha*x; alpha arrives as a (1,)-shaped array."""
+    return y + alpha[0] * x
+
+
+def dct_matrix(b: int = 8) -> np.ndarray:
+    """The 8x8 DCT-II matrix — identical to `kernels::fdct::dct_matrix`."""
+    d = np.zeros((b, b), np.float32)
+    for u in range(b):
+        scale = np.sqrt(1.0 / b) if u == 0 else np.sqrt(2.0 / b)
+        for c in range(b):
+            d[u, c] = scale * np.cos((2 * c + 1) * u * np.pi / (2 * b))
+    return d
+
+
+def dct2_blockwise(img, b: int = 8):
+    """Blockwise 2-D DCT-II: Y_block = D X_block D^T for every 8x8 block
+    of a (64, 64) image."""
+    d = jnp.asarray(dct_matrix(b))
+    n = img.shape[0]
+    nb = n // b
+    # x[i, r, j, c]: block (i, j), in-block row r, in-block column c
+    x = img.reshape(nb, b, nb, b)
+    # Y[i, u, j, v] = sum_{r, c} D[u, r] * X[i, r, j, c] * D[v, c]
+    y = jnp.einsum("ur,irjc,vc->iujv", d, x, d, preferred_element_type=jnp.float32)
+    return y.reshape(n, n)

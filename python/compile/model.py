@@ -1,0 +1,69 @@
+"""L2: the JAX compute graphs for the paper's six-kernel suite.
+
+Each function is the golden model of one simulated kernel, at the exact
+shapes the simulator runs (see `rust/src/kernels/*`). The two
+highest-arithmetic-intensity kernels call the L1 Pallas kernels
+(`kernels.matmul_pallas`, `kernels.fft_pallas`); the rest are plain jnp.
+`aot.py` lowers each once to an HLO-text artifact for the Rust runtime —
+Python never runs at request time.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import fft_pallas, matmul_pallas, ref
+
+# Shapes fixed to the simulator's workloads (kernels::*::{M,K,N,...}).
+MATMUL_M, MATMUL_K, MATMUL_N = 64, 64, 128
+CONV_IN, CONV_K = 64, 3
+FFT_N = 256
+DOTP_N = 8192
+AXPY_N = 8192
+DCT_DIM = 8 * 8  # 64x64 image, 8x8 blocks
+
+
+def matmul(a, b):
+    """fmatmul: C[64,128] = A[64,64] @ B[64,128] via the Pallas tile
+    kernel."""
+    return (matmul_pallas.matmul(a, b),)
+
+
+def conv2d(img, k):
+    """conv2d: 3x3 valid cross-correlation over 64x64 -> 62x62."""
+    return (ref.conv2d_valid(img, k),)
+
+
+def fft(re, im):
+    """fft: 256-point radix-2 DIT, split-complex, via the Pallas
+    butterfly-stage kernel."""
+    return fft_pallas.fft(re, im)
+
+
+def dotp(x, y):
+    """fdotp: inner product of 8192-element vectors -> (1,)."""
+    return (ref.dotp(x, y),)
+
+
+def axpy(alpha, x, y):
+    """faxpy: y + alpha*x over 8192 elements (alpha is a (1,) array)."""
+    return (ref.axpy(alpha, x, y),)
+
+
+def dct(img):
+    """fdct: blockwise 8x8 2-D DCT-II over a 64x64 image. The per-block
+    transform D X D^T is two small matmuls; they ride through the same
+    einsum the oracle uses (fused by XLA), keeping the artifact exactly
+    equal to the reference."""
+    return (ref.dct2_blockwise(img),)
+
+
+def specs():
+    """(name, fn, input shapes) for every artifact, in manifest order."""
+    f32 = jnp.float32
+    return [
+        ("matmul", matmul, [((MATMUL_M, MATMUL_K), f32), ((MATMUL_K, MATMUL_N), f32)]),
+        ("conv2d", conv2d, [((CONV_IN, CONV_IN), f32), ((CONV_K, CONV_K), f32)]),
+        ("fft", fft, [((FFT_N,), f32), ((FFT_N,), f32)]),
+        ("dotp", dotp, [((DOTP_N,), f32), ((DOTP_N,), f32)]),
+        ("axpy", axpy, [((1,), f32), ((AXPY_N,), f32), ((AXPY_N,), f32)]),
+        ("dct", dct, [((DCT_DIM, DCT_DIM), f32)]),
+    ]

@@ -1,0 +1,145 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes (and tile configurations) for the matmul tile
+kernel and FFT sizes for the butterfly pipeline; every case asserts
+allclose against ref.py.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import fft_pallas, matmul_pallas, ref
+
+RNG = np.random.default_rng(0xC0FFEE)
+
+
+def rand(shape, lo=-1.0, hi=1.0):
+    return RNG.uniform(lo, hi, size=shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------- matmul
+
+def test_matmul_fixed_shape_matches_ref():
+    a, b = rand((64, 64)), rand((64, 128))
+    got = matmul_pallas.matmul(a, b)
+    assert_allclose(np.asarray(got), np.asarray(ref.matmul(a, b)), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    mt=st.integers(1, 8),
+    kt=st.integers(1, 6),
+    nt=st.integers(1, 4),
+    bm=st.sampled_from([2, 4, 8]),
+    bn=st.sampled_from([8, 16, 32]),
+)
+def test_matmul_shape_sweep(mt, kt, nt, bm, bn):
+    m, k, n = mt * bm, kt * 8, nt * bn
+    a, b = rand((m, k)), rand((k, n))
+    got = matmul_pallas.matmul(a, b, bm=bm, bn=bn)
+    assert got.shape == (m, n)
+    assert_allclose(np.asarray(got), np.asarray(ref.matmul(a, b)), rtol=1e-4, atol=1e-5)
+
+
+def test_matmul_rejects_untiled_shapes():
+    with pytest.raises(AssertionError):
+        matmul_pallas.matmul(rand((65, 64)), rand((64, 128)))
+
+
+def test_matmul_identity():
+    a = np.eye(32, dtype=np.float32)
+    b = rand((32, 64))
+    got = matmul_pallas.matmul(a, b, bm=8, bn=32)
+    assert_allclose(np.asarray(got), b, rtol=1e-6)
+
+
+# ------------------------------------------------------------------- fft
+
+def test_fft_stage_tables_match_radix2_structure():
+    a, b, wre, wim = fft_pallas.stage_tables(16, 1)
+    # stage 1: h=2 -> pairs (0,2),(1,3),(4,6),...
+    assert list(a[:4]) == [0, 1, 4, 5]
+    assert list(b[:4]) == [2, 3, 6, 7]
+    # every element appears exactly once across a and b
+    assert sorted(list(a) + list(b)) == list(range(16))
+    assert np.allclose(wre**2 + wim**2, 1.0, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(bits=st.integers(3, 9), seed=st.integers(0, 2**31 - 1))
+def test_fft_matches_jnp_fft(bits, seed):
+    n = 1 << bits
+    rng = np.random.default_rng(seed)
+    re = rng.uniform(-1, 1, n).astype(np.float32)
+    im = rng.uniform(-1, 1, n).astype(np.float32)
+    got_re, got_im = fft_pallas.fft(re, im)
+    want_re, want_im = ref.fft_split(re, im)
+    assert_allclose(np.asarray(got_re), np.asarray(want_re), rtol=2e-3, atol=2e-3)
+    assert_allclose(np.asarray(got_im), np.asarray(want_im), rtol=2e-3, atol=2e-3)
+
+
+def test_fft_impulse_is_flat_spectrum():
+    n = 64
+    re = np.zeros(n, np.float32)
+    re[0] = 1.0
+    im = np.zeros(n, np.float32)
+    got_re, got_im = fft_pallas.fft(re, im)
+    assert_allclose(np.asarray(got_re), np.ones(n, np.float32), atol=1e-6)
+    assert_allclose(np.asarray(got_im), np.zeros(n, np.float32), atol=1e-6)
+
+
+def test_fft_linearity():
+    n = 128
+    x1, y1 = rand(n), rand(n)
+    x2, y2 = rand(n), rand(n)
+    r1, i1 = fft_pallas.fft(x1, y1)
+    r2, i2 = fft_pallas.fft(x2, y2)
+    r12, i12 = fft_pallas.fft(x1 + x2, y1 + y2)
+    assert_allclose(np.asarray(r12), np.asarray(r1) + np.asarray(r2), rtol=1e-3, atol=1e-3)
+    assert_allclose(np.asarray(i12), np.asarray(i1) + np.asarray(i2), rtol=1e-3, atol=1e-3)
+
+
+# ------------------------------------------------------------ other refs
+
+def test_conv2d_valid_against_naive():
+    img, k = rand((16, 16)), rand((3, 3))
+    got = np.asarray(ref.conv2d_valid(img, k))
+    want = np.zeros((14, 14), np.float32)
+    for i in range(14):
+        for j in range(14):
+            want[i, j] = float((img[i : i + 3, j : j + 3] * k).sum())
+    assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_dct_matrix_orthonormal():
+    d = ref.dct_matrix()
+    assert_allclose(d @ d.T, np.eye(8, dtype=np.float32), atol=1e-6)
+
+
+def test_dct_blockwise_equals_per_block_transform():
+    img = rand((64, 64))
+    got = np.asarray(ref.dct2_blockwise(img))
+    d = ref.dct_matrix()
+    for bi in range(0, 64, 8):
+        for bj in range(0, 64, 8):
+            block = img[bi : bi + 8, bj : bj + 8]
+            want = d @ block @ d.T
+            assert_allclose(got[bi : bi + 8, bj : bj + 8], want, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(4, 512), seed=st.integers(0, 2**31 - 1))
+def test_axpy_and_dotp_sweep(n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-1, 1, n).astype(np.float32)
+    y = rng.uniform(-1, 1, n).astype(np.float32)
+    alpha = np.asarray([0.75], np.float32)
+    assert_allclose(np.asarray(ref.axpy(alpha, x, y)), y + 0.75 * x, rtol=1e-6)
+    assert_allclose(
+        np.asarray(ref.dotp(x, y)),
+        np.asarray([np.dot(x.astype(np.float64), y.astype(np.float64))], np.float32),
+        rtol=1e-3,
+        atol=1e-4,
+    )

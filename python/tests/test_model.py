@@ -1,0 +1,60 @@
+"""L2 correctness: the model's compute graphs at artifact shapes."""
+
+import numpy as np
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref
+
+RNG = np.random.default_rng(7)
+
+
+def rand(shape):
+    return RNG.uniform(-1, 1, size=shape).astype(np.float32)
+
+
+def test_specs_cover_all_six_kernels():
+    names = [name for name, _, _ in model.specs()]
+    assert names == ["matmul", "conv2d", "fft", "dotp", "axpy", "dct"]
+
+
+def test_all_models_run_at_artifact_shapes():
+    for name, fn, in_specs in model.specs():
+        args = [rand(shape) for shape, _ in in_specs]
+        outs = fn(*args)
+        assert isinstance(outs, tuple), name
+        for o in outs:
+            assert np.all(np.isfinite(np.asarray(o))), name
+
+
+def test_matmul_model_matches_ref():
+    a, b = rand((64, 64)), rand((64, 128))
+    (got,) = model.matmul(a, b)
+    assert_allclose(np.asarray(got), np.asarray(ref.matmul(a, b)), rtol=1e-5, atol=1e-5)
+
+
+def test_fft_model_matches_jnp_fft():
+    re, im = rand(256), rand(256)
+    got_re, got_im = model.fft(re, im)
+    want_re, want_im = ref.fft_split(re, im)
+    assert_allclose(np.asarray(got_re), np.asarray(want_re), rtol=2e-3, atol=2e-3)
+    assert_allclose(np.asarray(got_im), np.asarray(want_im), rtol=2e-3, atol=2e-3)
+
+
+def test_dotp_model_shape_is_vector_of_one():
+    x, y = rand(8192), rand(8192)
+    (got,) = model.dotp(x, y)
+    assert got.shape == (1,)
+
+
+def test_axpy_model():
+    alpha = np.asarray([0.75], np.float32)
+    x, y = rand(8192), rand(8192)
+    (got,) = model.axpy(alpha, x, y)
+    assert_allclose(np.asarray(got), y + 0.75 * x, rtol=1e-6)
+
+
+def test_conv_output_shape():
+    img, k = rand((64, 64)), rand((3, 3))
+    (got,) = model.conv2d(img, k)
+    assert got.shape == (62, 62)

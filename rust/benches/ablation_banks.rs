@@ -1,0 +1,41 @@
+//! A2 — ablation: TCDM bank count under the mixed scalar-vector
+//! workload. Fewer banks -> more conflicts between the kernel's LSUs and
+//! the scalar task -> the MM mixed-workload speedup erodes.
+
+use spatzformer::config::SimConfig;
+use spatzformer::coordinator::{Coordinator, Job, ModePolicy};
+use spatzformer::kernels::KernelId;
+use spatzformer::metrics::Table;
+use spatzformer::util::bench::section;
+
+fn main() {
+    section("A2: TCDM bank count sweep (faxpy ∥ coremark)");
+    let mut t = Table::new(&["banks", "SM kernel cyc", "MM kernel cyc", "MM speedup", "conflicts (MM)"]);
+    for banks in [8usize, 16, 32] {
+        let mut cfg = SimConfig::spatzformer();
+        cfg.cluster.tcdm_banks = banks;
+        let mut c = Coordinator::new(cfg).unwrap();
+        let sm = c
+            .submit(&Job::Mixed {
+                kernel: KernelId::Faxpy,
+                policy: ModePolicy::Split,
+                coremark_iterations: 1,
+            })
+            .unwrap();
+        let mm = c
+            .submit(&Job::Mixed {
+                kernel: KernelId::Faxpy,
+                policy: ModePolicy::Merge,
+                coremark_iterations: 1,
+            })
+            .unwrap();
+        t.row(&[
+            banks.to_string(),
+            sm.kernel_cycles.to_string(),
+            mm.kernel_cycles.to_string(),
+            format!("{:.2}x", sm.kernel_cycles as f64 / mm.kernel_cycles as f64),
+            mm.metrics.tcdm.conflicts.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+}

@@ -1,0 +1,31 @@
+//! E4 — regenerates the paper's area comparison: +55 kGE (+1.4%) for
+//! reconfigurability vs >= +6% (>4x larger) for a dedicated third core.
+
+use spatzformer::experiments;
+use spatzformer::ppa::AreaModel;
+use spatzformer::util::bench::section;
+
+fn main() {
+    section("E4: area (12-nm, kGE)");
+    println!("{}", experiments::render_area());
+
+    let base = AreaModel::baseline();
+    let sf = AreaModel::spatzformer();
+    let alt = AreaModel::dedicated_core_alternative();
+    let sf_delta = sf.total_kge() - base.total_kge();
+    let alt_delta = alt.total_kge() - base.total_kge();
+    println!(
+        "reconfigurability: +{:.0} kGE (+{:.1}%)   [paper: +55 kGE, +1.4%]",
+        sf_delta,
+        sf.overhead_vs(&base)
+    );
+    println!(
+        "dedicated core   : +{:.0} kGE (+{:.1}%)   [paper: >= +6%]",
+        alt_delta,
+        alt.overhead_vs(&base)
+    );
+    println!(
+        "alternative is {:.1}x larger than the reconfig logic [paper: > 4x]",
+        alt_delta / sf_delta
+    );
+}

@@ -1,0 +1,21 @@
+//! E2 — regenerates Fig. 2 (left axis, energy efficiency). Paper shape:
+//! SM ~-5% vs baseline (worst -7%), MM ~-1%, MM fft > SM fft by ~2.5%.
+
+use spatzformer::experiments;
+use spatzformer::util::bench::section;
+
+fn main() {
+    section("E2: Fig.2 energy efficiency (left axis)");
+    let rows = experiments::fig2_rows(0xC0FFEE);
+    println!("{}", experiments::render_fig2_energy(&rows));
+
+    // the fft MM-vs-SM EE claim, explicitly
+    let fft = rows
+        .iter()
+        .find(|r| r.kernel == spatzformer::kernels::KernelId::Fft)
+        .unwrap();
+    println!(
+        "fft MM vs SM energy efficiency: {:+.1}% (paper: +2.5%)",
+        (fft.mm.2 / fft.sm.2 - 1.0) * 100.0
+    );
+}

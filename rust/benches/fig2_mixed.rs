@@ -1,0 +1,23 @@
+//! E3 — regenerates Fig. 2 (right axis): MM speedup of each kernel when
+//! run concurrently with the CoreMark-workalike scalar task. Paper
+//! shape: average 1.8x, best ~2x.
+
+use spatzformer::experiments;
+use spatzformer::util::bench::section;
+
+fn main() {
+    section("E3: Fig.2 mixed scalar-vector workload (right axis)");
+    let rows = experiments::mixed_rows(0xC0FFEE, 1);
+    println!("{}", experiments::render_fig2_mixed(&rows));
+
+    // heavier scalar load ablation: longer CoreMark runs
+    section("ablation: coremark iterations");
+    for iters in [1u32, 2, 4] {
+        let rows = experiments::mixed_rows(0xC0FFEE, iters);
+        let geo = spatzformer::util::Summary::from_samples(
+            &rows.iter().map(|r| r.speedup).collect::<Vec<_>>(),
+        )
+        .geomean();
+        println!("coremark x{iters}: average MM speedup {geo:.2}x");
+    }
+}

@@ -1,0 +1,27 @@
+//! E1 — regenerates Fig. 2 (left axis, performance): six kernels on
+//! baseline / Spatzformer-SM / Spatzformer-MM. Paper shape: SM == base,
+//! MM >= SM on average, MM fft > +20%.
+
+use spatzformer::experiments;
+use spatzformer::util::bench::{section, Bencher};
+
+fn main() {
+    section("E1: Fig.2 performance (left axis)");
+    let rows = experiments::fig2_rows(0xC0FFEE);
+    println!("{}", experiments::render_fig2_perf(&rows));
+
+    // host-side throughput of the harness (simulator perf, §Perf)
+    let total_sim_cycles: u64 = rows
+        .iter()
+        .map(|r| r.baseline.0 + r.sm.0 + r.mm.0)
+        .sum();
+    let result = Bencher::new("fig2_perf_full_sweep")
+        .warmup(1)
+        .iters(3)
+        .run(|| {
+            let rows = experiments::fig2_rows(0xC0FFEE);
+            rows.len() as u64
+        });
+    let rate = total_sim_cycles as f64 / result.median.as_secs_f64() / 1e6;
+    println!("simulator throughput: {rate:.1} Msim-cycles/s (kernel regions only)");
+}

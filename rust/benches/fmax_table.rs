@@ -1,0 +1,25 @@
+//! E5 — regenerates the fmax corner results: 1.2 GHz (TT, 0.8 V, 25 C),
+//! 950 MHz (SS, 0.72 V, 125 C), and no degradation from the added
+//! reconfiguration logic.
+
+use spatzformer::config::Corner;
+use spatzformer::experiments;
+use spatzformer::ppa::FreqModel;
+use spatzformer::util::bench::section;
+
+fn main() {
+    section("E5: fmax corners");
+    println!("{}", experiments::render_fmax());
+
+    let f = FreqModel::new();
+    for (corner, paper) in [(Corner::Tt, 1.2), (Corner::Ss, 0.95)] {
+        let got = f.fmax_ghz(spatzformer::config::ArchKind::Spatzformer, corner);
+        println!(
+            "{}: {:.3} GHz  [paper: {:.2} GHz]  delta {:+.1}%",
+            corner.name(),
+            got,
+            paper,
+            (got / paper - 1.0) * 100.0
+        );
+    }
+}

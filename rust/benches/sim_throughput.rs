@@ -1,0 +1,55 @@
+//! §Perf — host-side simulator throughput (Msim-cycles/s) per workload
+//! class. This is the L3 hot-path number tracked in EXPERIMENTS.md §Perf.
+
+use spatzformer::cluster::Cluster;
+use spatzformer::config::SimConfig;
+use spatzformer::coordinator::{Coordinator, Job, ModePolicy};
+use spatzformer::kernels::{execute, Deployment, KernelId};
+use spatzformer::util::bench::{section, Bencher};
+
+fn main() {
+    section("simulator throughput");
+    for (name, kernel, deploy) in [
+        ("fmatmul (fpu-bound)", KernelId::Fmatmul, Deployment::SplitDual),
+        ("faxpy (lsu-bound)", KernelId::Faxpy, Deployment::SplitDual),
+        ("fft (gather/sync)", KernelId::Fft, Deployment::SplitDual),
+    ] {
+        let cfg = SimConfig::spatzformer();
+        let inst = kernel.build(&cfg.cluster, deploy, 1);
+        // measure sim cycles once
+        let mut cl = Cluster::new(cfg.clone()).unwrap();
+        let (m, _) = execute(&mut cl, &inst).unwrap();
+        let sim_cycles = m.cycles;
+        let r = Bencher::new(name).warmup(2).iters(10).run(|| {
+            let mut cl = Cluster::new(cfg.clone()).unwrap();
+            let (m, _) = execute(&mut cl, &inst).unwrap();
+            m.cycles
+        });
+        println!(
+            "  -> {:.1} Msim-cycles/s ({} sim cycles per run)",
+            sim_cycles as f64 / r.median.as_secs_f64() / 1e6,
+            sim_cycles
+        );
+    }
+
+    section("coordinator end-to-end (mixed workload)");
+    let r = Bencher::new("mixed fmatmul SM+MM").warmup(1).iters(5).run(|| {
+        let mut c = Coordinator::new(SimConfig::spatzformer()).unwrap();
+        let sm = c
+            .submit(&Job::Mixed {
+                kernel: KernelId::Fmatmul,
+                policy: ModePolicy::Split,
+                coremark_iterations: 1,
+            })
+            .unwrap();
+        let mm = c
+            .submit(&Job::Mixed {
+                kernel: KernelId::Fmatmul,
+                policy: ModePolicy::Merge,
+                coremark_iterations: 1,
+            })
+            .unwrap();
+        sm.kernel_cycles + mm.kernel_cycles
+    });
+    let _ = r;
+}

@@ -1,0 +1,358 @@
+//! Command-line interface (hand-rolled; `clap` is unavailable offline).
+//!
+//! ```text
+//! spatzformer run   --kernel fft --mode merge [--arch spatzformer]
+//! spatzformer mixed --kernel fmatmul --mode auto [--iters 2]
+//! spatzformer bench fig2-perf|fig2-energy|fig2-mixed|area|fmax|all
+//! spatzformer ppa
+//! spatzformer verify [--artifacts DIR]
+//! spatzformer disasm --kernel fdotp --mode split
+//! ```
+
+use crate::config::SimConfig;
+use crate::coordinator::{Coordinator, Job, ModePolicy};
+use crate::experiments;
+use crate::isa::asm;
+use crate::kernels::{Deployment, KernelId};
+
+const USAGE: &str = "\
+spatzformer — reconfigurable dual-core RVV cluster simulator (paper reproduction)
+
+USAGE:
+  spatzformer <COMMAND> [OPTIONS]
+
+COMMANDS:
+  run      run one vector kernel           --kernel <name> --mode <split|merge|auto>
+  mixed    kernel ∥ CoreMark-workalike     --kernel <name> --mode <split|merge|auto> [--iters N]
+  bench    regenerate a paper artifact     <fig2-perf|fig2-energy|fig2-mixed|area|fmax|all>
+  ppa      print the area/frequency model
+  verify   cross-check all kernels vs the XLA artifacts [--artifacts DIR]
+  disasm   print a kernel's vector program --kernel <name> --mode <split|merge>
+  help     this text
+
+COMMON OPTIONS:
+  --arch <spatzformer|baseline>   cluster variant (default spatzformer)
+  --seed <u64>                    workload seed (default 0xC0FFEE)
+  --config <file.toml>            load config file
+  --set <section.key=value>       override one config knob (repeatable)
+  --artifacts <dir>               artifact directory (default: artifacts/)
+
+KERNELS: fmatmul conv2d fft fdotp faxpy fdct
+";
+
+struct Args {
+    positional: Vec<String>,
+    options: Vec<(String, String)>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self, String> {
+        let mut positional = Vec::new();
+        let mut options = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let value = argv
+                    .get(i + 1)
+                    .ok_or_else(|| format!("--{name} needs a value"))?
+                    .clone();
+                options.push((name.to_string(), value));
+                i += 2;
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(Self { positional, options })
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.options
+            .iter()
+            .rev()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn get_all(&self, name: &str) -> Vec<&str> {
+        self.options
+            .iter()
+            .filter(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+            .collect()
+    }
+}
+
+fn build_config(args: &Args) -> anyhow::Result<SimConfig> {
+    let mut cfg = match args.get("arch") {
+        Some("baseline") => SimConfig::baseline(),
+        Some("spatzformer") | None => SimConfig::spatzformer(),
+        Some(other) => anyhow::bail!("unknown arch: {other}"),
+    };
+    if let Some(path) = args.get("config") {
+        cfg.apply_file(path)?;
+    }
+    for ov in args.get_all("set") {
+        let (k, v) = crate::config::toml::parse_override(ov)
+            .map_err(|e| anyhow::anyhow!("bad --set: {e}"))?;
+        cfg.apply(&k, &v)?;
+    }
+    if let Some(seed) = args.get("seed") {
+        cfg.seed = seed
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad --seed: {seed}"))?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn parse_kernel(args: &Args) -> anyhow::Result<KernelId> {
+    let name = args
+        .get("kernel")
+        .ok_or_else(|| anyhow::anyhow!("--kernel is required"))?;
+    KernelId::from_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown kernel: {name} (see `spatzformer help`)"))
+}
+
+fn parse_policy(args: &Args) -> anyhow::Result<ModePolicy> {
+    match args.get("mode").unwrap_or("auto") {
+        "split" => Ok(ModePolicy::Split),
+        "merge" => Ok(ModePolicy::Merge),
+        "auto" => Ok(ModePolicy::Auto),
+        other => anyhow::bail!("unknown mode: {other}"),
+    }
+}
+
+fn attach_runtime_if_available(c: &mut Coordinator, args: &Args) {
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(crate::runtime::XlaRuntime::default_dir);
+    if dir.join("manifest.txt").exists() {
+        match c.attach_runtime(&dir) {
+            Ok(()) => eprintln!("[verify] artifacts attached from {}", dir.display()),
+            Err(e) => eprintln!("[verify] artifacts unavailable ({e}); running unverified"),
+        }
+    }
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let cfg = build_config(args)?;
+    let kernel = parse_kernel(args)?;
+    let policy = parse_policy(args)?;
+    let mut c = Coordinator::new(cfg)?;
+    attach_runtime_if_available(&mut c, args);
+    let r = c.submit(&Job::Kernel { kernel, policy })?;
+    println!("job       : {}", r.job_name);
+    println!("deploy    : {}", r.deploy.name());
+    println!("cycles    : {}", r.kernel_cycles);
+    println!("flop/cyc  : {:.3}", r.flop_per_cycle());
+    println!("energy    : {:.1} nJ", r.metrics.energy_pj / 1000.0);
+    println!("GFLOPS/W  : {:.2}", r.metrics.gflops_per_watt());
+    println!("fpu util  : {:.1}%", r.metrics.fpu_utilization(2, 4) * 100.0);
+    if let Some(err) = r.verified_max_rel_err {
+        println!("verified  : OK (max rel err {err:.2e} vs XLA artifact)");
+    }
+    Ok(())
+}
+
+fn cmd_mixed(args: &Args) -> anyhow::Result<()> {
+    let cfg = build_config(args)?;
+    let kernel = parse_kernel(args)?;
+    let policy = parse_policy(args)?;
+    let iters: u32 = args.get("iters").unwrap_or("1").parse()?;
+    let mut c = Coordinator::new(cfg)?;
+    attach_runtime_if_available(&mut c, args);
+    let r = c.submit(&Job::Mixed { kernel, policy, coremark_iterations: iters })?;
+    println!("job            : {}", r.job_name);
+    println!("deploy         : {}", r.deploy.name());
+    println!("kernel cycles  : {}", r.kernel_cycles);
+    println!("scalar cycles  : {}", r.scalar_cycles.unwrap_or(0));
+    println!("coremark crc   : {:#06x}", r.coremark_checksum.unwrap_or(0));
+    println!("energy         : {:.1} nJ", r.metrics.energy_pj / 1000.0);
+    if let Some(err) = r.verified_max_rel_err {
+        println!("verified       : OK (max rel err {err:.2e})");
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    let what = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let seed = build_config(args)?.seed;
+    let run_fig2 = |energy: bool| {
+        let rows = experiments::fig2_rows(seed);
+        if energy {
+            println!("{}", experiments::render_fig2_energy(&rows));
+        } else {
+            println!("{}", experiments::render_fig2_perf(&rows));
+        }
+    };
+    match what {
+        "fig2-perf" => run_fig2(false),
+        "fig2-energy" => run_fig2(true),
+        "fig2-mixed" => {
+            let rows = experiments::mixed_rows(seed, 1);
+            println!("{}", experiments::render_fig2_mixed(&rows));
+        }
+        "area" => println!("{}", experiments::render_area()),
+        "fmax" => println!("{}", experiments::render_fmax()),
+        "all" => {
+            let rows = experiments::fig2_rows(seed);
+            println!("=== E1: Fig.2 performance (left axis) ===");
+            println!("{}", experiments::render_fig2_perf(&rows));
+            println!("=== E2: Fig.2 energy efficiency (left axis) ===");
+            println!("{}", experiments::render_fig2_energy(&rows));
+            println!("=== E3: Fig.2 mixed workload speedup (right axis) ===");
+            let mixed = experiments::mixed_rows(seed, 1);
+            println!("{}", experiments::render_fig2_mixed(&mixed));
+            println!("=== E4: area ===");
+            println!("{}", experiments::render_area());
+            println!("=== E5: fmax ===");
+            println!("{}", experiments::render_fmax());
+        }
+        other => anyhow::bail!("unknown bench target: {other}"),
+    }
+    Ok(())
+}
+
+fn cmd_ppa(_args: &Args) -> anyhow::Result<()> {
+    println!("{}", experiments::render_area());
+    println!("{}", experiments::render_fmax());
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> anyhow::Result<()> {
+    let cfg = build_config(args)?;
+    let mut c = Coordinator::new(cfg)?;
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(crate::runtime::XlaRuntime::default_dir);
+    c.attach_runtime(&dir)?;
+    let mut failures = 0;
+    for kernel in KernelId::all() {
+        for policy in [ModePolicy::Split, ModePolicy::Merge] {
+            match c.submit(&Job::Kernel { kernel, policy }) {
+                Ok(r) => println!(
+                    "{:<8} {:<12} OK  (max rel err {:.2e})",
+                    kernel.name(),
+                    r.deploy.name(),
+                    r.verified_max_rel_err.unwrap_or(f64::NAN)
+                ),
+                Err(e) => {
+                    failures += 1;
+                    println!("{:<8} {policy:?} FAIL: {e}", kernel.name());
+                }
+            }
+        }
+    }
+    anyhow::ensure!(failures == 0, "{failures} verification failures");
+    println!("all kernels verified against XLA artifacts");
+    Ok(())
+}
+
+fn cmd_disasm(args: &Args) -> anyhow::Result<()> {
+    let cfg = build_config(args)?;
+    let kernel = parse_kernel(args)?;
+    let deploy = match args.get("mode").unwrap_or("split") {
+        "split" => Deployment::SplitDual,
+        "single" => Deployment::SplitSingle,
+        "merge" => Deployment::Merge,
+        other => anyhow::bail!("unknown mode: {other}"),
+    };
+    let inst = kernel.build(&cfg.cluster, deploy, cfg.seed);
+    for (i, p) in inst.programs.iter().enumerate() {
+        println!("===== core {i} =====");
+        println!("{}", asm::print_program(p));
+    }
+    Ok(())
+}
+
+/// CLI entry point; returns the process exit code.
+pub fn main() -> i32 {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            return 2;
+        }
+    };
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let result = match cmd {
+        "run" => cmd_run(&args),
+        "mixed" => cmd_mixed(&args),
+        "bench" => cmd_bench(&args),
+        "ppa" => cmd_ppa(&args),
+        "verify" => cmd_verify(&args),
+        "disasm" => cmd_disasm(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command: {other}\n\n{USAGE}");
+            return 2;
+        }
+    };
+    match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse(&v.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn parses_positionals_and_options() {
+        let a = args(&["run", "--kernel", "fft", "--mode", "merge"]);
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.get("kernel"), Some("fft"));
+        assert_eq!(a.get("mode"), Some("merge"));
+        assert_eq!(a.get("nope"), None);
+    }
+
+    #[test]
+    fn repeated_set_options_collected() {
+        let a = args(&["run", "--set", "cluster.lanes=8", "--set", "seed=3"]);
+        assert_eq!(a.get_all("set").len(), 2);
+    }
+
+    #[test]
+    fn missing_value_is_an_error() {
+        let v = vec!["run".to_string(), "--kernel".to_string()];
+        assert!(Args::parse(&v).is_err());
+    }
+
+    #[test]
+    fn build_config_applies_overrides() {
+        let a = args(&["run", "--arch", "baseline", "--set", "cluster.tcdm_banks=32", "--seed", "5"]);
+        let cfg = build_config(&a).unwrap();
+        assert_eq!(cfg.cluster.tcdm_banks, 32);
+        assert_eq!(cfg.seed, 5);
+        assert_eq!(cfg.cluster.arch, crate::config::ArchKind::Baseline);
+    }
+
+    #[test]
+    fn kernel_and_policy_parsing() {
+        let a = args(&["run", "--kernel", "fdotp", "--mode", "split"]);
+        assert_eq!(parse_kernel(&a).unwrap(), KernelId::Fdotp);
+        assert_eq!(parse_policy(&a).unwrap(), ModePolicy::Split);
+        let bad = args(&["run", "--kernel", "bogus"]);
+        assert!(parse_kernel(&bad).is_err());
+    }
+}

@@ -1,0 +1,138 @@
+//! Cluster hardware barrier.
+//!
+//! Cores arrive (and clock-gate); when every participating core has
+//! arrived, the barrier releases all of them `barrier_latency` cycles
+//! later (wake-up + fetch restart, the synchronization overhead the
+//! paper's MM-fft result eliminates).
+
+use crate::snitch::BarrierPort;
+
+/// The barrier unit.
+pub struct BarrierUnit {
+    latency: u64,
+    participants: u8,
+    arrived: u8,
+    releasing: bool,
+    release_at: u64,
+    consumed: u8,
+    /// Completed barrier episodes.
+    pub episodes: u64,
+}
+
+impl BarrierUnit {
+    pub fn new(latency: u64) -> Self {
+        Self {
+            latency,
+            participants: 0b11, // both cores by default
+            arrived: 0,
+            releasing: false,
+            release_at: 0,
+            consumed: 0,
+            episodes: 0,
+        }
+    }
+
+    /// Set which cores participate (bitmask). A barrier instruction from
+    /// a non-participating core is a programming error.
+    pub fn set_participants(&mut self, mask: u8) {
+        assert!(mask != 0, "barrier needs at least one participant");
+        assert!(
+            self.arrived == 0 && !self.releasing,
+            "cannot change participants mid-episode"
+        );
+        self.participants = mask;
+    }
+
+    pub fn participants(&self) -> u8 {
+        self.participants
+    }
+}
+
+impl BarrierPort for BarrierUnit {
+    fn arrive(&mut self, core: usize, now: u64) {
+        let bit = 1u8 << core;
+        assert!(
+            self.participants & bit != 0,
+            "core {core} is not a barrier participant (mask {:#b})",
+            self.participants
+        );
+        assert!(self.arrived & bit == 0, "core {core} arrived twice");
+        self.arrived |= bit;
+        if self.arrived == self.participants {
+            self.releasing = true;
+            self.release_at = now + self.latency;
+        }
+    }
+
+    fn poll(&mut self, core: usize, now: u64) -> bool {
+        let bit = 1u8 << core;
+        if self.releasing && now >= self.release_at && self.arrived & bit != 0 {
+            self.consumed |= bit;
+            if self.consumed == self.participants {
+                // episode complete; reset for reuse
+                self.arrived = 0;
+                self.consumed = 0;
+                self.releasing = false;
+                self.episodes += 1;
+            }
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn releases_after_latency_when_all_arrive() {
+        let mut b = BarrierUnit::new(8);
+        b.arrive(0, 10);
+        assert!(!b.poll(0, 11));
+        b.arrive(1, 20);
+        assert!(!b.poll(0, 27)); // release at 28
+        assert!(b.poll(0, 28));
+        assert!(b.poll(1, 28));
+        assert_eq!(b.episodes, 1);
+    }
+
+    #[test]
+    fn reusable_across_episodes() {
+        let mut b = BarrierUnit::new(0);
+        for ep in 0..5u64 {
+            let t = ep * 10;
+            b.arrive(0, t);
+            b.arrive(1, t + 1);
+            assert!(b.poll(0, t + 1));
+            assert!(b.poll(1, t + 1));
+        }
+        assert_eq!(b.episodes, 5);
+    }
+
+    #[test]
+    fn single_participant_barrier() {
+        let mut b = BarrierUnit::new(2);
+        b.set_participants(0b01);
+        b.arrive(0, 0);
+        assert!(!b.poll(0, 1));
+        assert!(b.poll(0, 2));
+    }
+
+    #[test]
+    #[should_panic(expected = "arrived twice")]
+    fn double_arrival_is_an_error() {
+        let mut b = BarrierUnit::new(1);
+        b.arrive(0, 0);
+        b.arrive(0, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a barrier participant")]
+    fn non_participant_arrival_is_an_error() {
+        let mut b = BarrierUnit::new(1);
+        b.set_participants(0b01);
+        b.arrive(1, 0);
+    }
+}

@@ -1,0 +1,490 @@
+//! The dual-core cluster: wiring + cycle loop.
+//!
+//! Owns the two Snitch cores, the two Spatz units, the reconfiguration
+//! stage, the TCDM, the shared icache, the barrier unit and the DMA
+//! engine, and advances everything one cycle at a time. The step order
+//! within a cycle is the TCDM arbitration priority: scalar cores first
+//! (their accesses are rare and latency-critical), then vector LSUs,
+//! with the intra-class order rotating every cycle for fairness.
+
+pub mod barrier;
+
+pub use barrier::BarrierUnit;
+
+use crate::config::{ArchKind, Mode, SimConfig};
+use crate::isa::{Instr, Program};
+use crate::mem::{Dma, ICache, Tcdm};
+use crate::metrics::{Counters, RunMetrics};
+use crate::reconfig::ReconfigStage;
+use crate::snitch::Snitch;
+use crate::spatz::{RetireMsg, SpatzUnit};
+
+/// The simulated cluster.
+pub struct Cluster {
+    pub cfg: SimConfig,
+    pub tcdm: Tcdm,
+    pub icache: ICache,
+    pub dma: Dma,
+    cores: [Snitch; 2],
+    units: [SpatzUnit; 2],
+    pub reconfig: ReconfigStage,
+    barrier: BarrierUnit,
+    pub counters: Counters,
+    now: u64,
+    /// Monotonic stream-id allocator for icache tagging across program
+    /// loads.
+    next_stream: u32,
+    retire_buf: Vec<RetireMsg>,
+    /// DMA staging cycles accumulated by workload setup.
+    pub dma_cycles: u64,
+    /// Cycle at which each core halted (mixed workloads measure the
+    /// kernel core's completion independently of the co-runner).
+    halt_cycle: [Option<u64>; 2],
+}
+
+impl Cluster {
+    pub fn new(cfg: SimConfig) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        Ok(Self {
+            tcdm: Tcdm::new(&cfg.cluster),
+            icache: ICache::new(&cfg.cluster),
+            dma: Dma::default(),
+            cores: [Snitch::new(0, &cfg.cluster), Snitch::new(1, &cfg.cluster)],
+            units: [SpatzUnit::new(0, &cfg.cluster), SpatzUnit::new(1, &cfg.cluster)],
+            reconfig: ReconfigStage::new(&cfg.cluster),
+            barrier: BarrierUnit::new(cfg.cluster.barrier_latency),
+            counters: Counters::default(),
+            now: 0,
+            next_stream: 0,
+            retire_buf: Vec::with_capacity(8),
+            cfg,
+            dma_cycles: 0,
+            halt_cycle: [None; 2],
+        })
+    }
+
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    pub fn mode(&self) -> Mode {
+        self.reconfig.mode()
+    }
+
+    /// Direct mode set before a run (the runtime path is the `SetMode`
+    /// instruction). Requires drained units.
+    pub fn set_mode(&mut self, mode: Mode) -> anyhow::Result<()> {
+        if mode == self.reconfig.mode() {
+            return Ok(());
+        }
+        anyhow::ensure!(
+            self.cfg.cluster.arch == ArchKind::Spatzformer,
+            "baseline cluster is not reconfigurable"
+        );
+        anyhow::ensure!(
+            self.reconfig.all_drained() && self.units.iter().all(|u| u.is_idle()),
+            "mode switch requires drained vector units"
+        );
+        self.reconfig.set_mode(mode);
+        Ok(())
+    }
+
+    /// Read-only views for tests/metrics.
+    pub fn unit(&self, i: usize) -> &SpatzUnit {
+        &self.units[i]
+    }
+    pub fn core(&self, i: usize) -> &Snitch {
+        &self.cores[i]
+    }
+    /// Direct access to the barrier unit (tests / advanced scheduling).
+    pub fn barrier_mut(&mut self) -> &mut BarrierUnit {
+        &mut self.barrier
+    }
+    /// Cycle at which core `i` halted in the current run (if it has).
+    pub fn core_halt_cycle(&self, i: usize) -> Option<u64> {
+        self.halt_cycle[i]
+    }
+
+    /// Stage data into TCDM via the DMA engine (tracked separately from
+    /// kernel cycles, like the paper's setup phase).
+    pub fn stage_f32(&mut self, addr: u32, data: &[f32]) {
+        self.dma_cycles += self.dma.copy_in_f32(&mut self.tcdm, addr, data);
+    }
+    pub fn stage_u32(&mut self, addr: u32, data: &[u32]) {
+        self.dma_cycles += self.dma.copy_in_u32(&mut self.tcdm, addr, data);
+    }
+
+    /// Load programs onto the cores. Validates them against the
+    /// architecture (the baseline cluster rejects `setmode`) and the
+    /// current mode (merge mode forbids vector work on core 1). The
+    /// barrier participant set is every core with a non-trivial program
+    /// containing a barrier.
+    pub fn load_programs(&mut self, programs: [Program; 2]) -> anyhow::Result<()> {
+        let mut barrier_mask = 0u8;
+        for (i, p) in programs.iter().enumerate() {
+            p.validate(self.cfg.cluster.vregs)?;
+            let uses_barrier = p.instrs.iter().any(|x| matches!(x, Instr::Barrier));
+            let uses_setmode = p.instrs.iter().any(|x| matches!(x, Instr::SetMode(_)));
+            let uses_vector = p.vector_count() > 0;
+            if uses_barrier {
+                barrier_mask |= 1 << i;
+            }
+            if self.cfg.cluster.arch == ArchKind::Baseline {
+                anyhow::ensure!(
+                    !uses_setmode,
+                    "program '{}' uses setmode on the baseline cluster",
+                    p.name
+                );
+            }
+            if uses_setmode {
+                anyhow::ensure!(
+                    i == 0,
+                    "program '{}': only core 0 may reconfigure",
+                    p.name
+                );
+            }
+            if self.reconfig.mode() == Mode::Merge && i == 1 {
+                anyhow::ensure!(
+                    !uses_vector,
+                    "program '{}': core 1 cannot issue vector work in merge mode",
+                    p.name
+                );
+            }
+        }
+        if barrier_mask != 0 {
+            self.barrier.set_participants(barrier_mask);
+        }
+        let [p0, p1] = programs;
+        let s0 = self.next_stream;
+        self.cores[0].load(p0, s0);
+        self.cores[1].load(p1, s0 + 1);
+        self.next_stream += 2;
+        self.halt_cycle = [None; 2];
+        Ok(())
+    }
+
+    /// True when both cores halted and the vector pipeline is empty.
+    pub fn finished(&self) -> bool {
+        self.cores.iter().all(|c| c.halted())
+            && self.units.iter().all(|u| u.is_idle())
+            && self.reconfig.all_drained()
+    }
+
+    /// Advance one cycle.
+    pub fn step(&mut self) {
+        self.tcdm.begin_cycle();
+        let flip = (self.now & 1) == 1;
+
+        // scalar cores (rotating priority)
+        let order = if flip { [1usize, 0] } else { [0usize, 1] };
+        for &i in &order {
+            self.cores[i].step(
+                self.now,
+                &mut self.icache,
+                &mut self.tcdm,
+                &mut self.reconfig,
+                &mut self.units,
+                &mut self.barrier,
+                &mut self.counters,
+            );
+        }
+
+        // vector units (rotating priority; skip fully-idle units — a
+        // measured 10-20% of the cycle loop on single-unit phases)
+        self.retire_buf.clear();
+        for &i in &order {
+            if self.units[i].is_idle() {
+                self.units[i].busy_this_cycle = false;
+            } else {
+                self.units[i].step(self.now, &mut self.tcdm, &mut self.retire_buf);
+            }
+        }
+        for msg in self.retire_buf.drain(..) {
+            self.reconfig.on_retire(msg);
+        }
+
+        // busy accounting for the leakage model + halt timestamps
+        for i in 0..2 {
+            if self.cores[i].busy() {
+                self.counters.cycles_core_busy[i] += 1;
+            }
+            if self.units[i].busy_this_cycle {
+                self.counters.cycles_unit_busy[i] += 1;
+            }
+            if self.halt_cycle[i].is_none() && self.cores[i].halted() {
+                self.halt_cycle[i] = Some(self.now);
+            }
+        }
+
+        self.now += 1;
+    }
+
+    /// Run until completion; returns the cycle count of this run segment.
+    pub fn run(&mut self) -> anyhow::Result<u64> {
+        let start = self.now;
+        while !self.finished() {
+            anyhow::ensure!(
+                self.cfg.max_cycles == 0 || self.now - start < self.cfg.max_cycles,
+                "simulation exceeded max_cycles={} (deadlock?)",
+                self.cfg.max_cycles
+            );
+            self.step();
+        }
+        Ok(self.now - start)
+    }
+
+    /// Snapshot metrics accumulated so far (cycles = total elapsed).
+    pub fn metrics(&self, flops: u64) -> RunMetrics {
+        RunMetrics {
+            cycles: self.now,
+            flops,
+            counters: self.counters.clone(),
+            tcdm: self.tcdm.stats.clone(),
+            icache: self.icache.stats.clone(),
+            dma_cycles: self.dma_cycles,
+            energy_pj: 0.0,
+        }
+    }
+
+    /// Reset time, counters and stats but keep memory contents and mode
+    /// (used between the warmup/setup phase and a measured region).
+    pub fn reset_stats(&mut self) {
+        self.now = 0;
+        self.counters = Counters::default();
+        self.tcdm.stats = Default::default();
+        self.icache.stats = Default::default();
+        self.dma_cycles = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{ElemWidth, Lmul, ScalarOp, VReg, VectorOp};
+
+    fn vec_program(name: &str, base: u32, n: u32, f: f32) -> Program {
+        // y[i] = x[i] * f over n elements (single strip per 128)
+        let mut p = Program::new(name);
+        let mut off = 0;
+        while off < n {
+            let vl = (n - off).min(128);
+            p.vector(VectorOp::SetVl { avl: vl, ew: ElemWidth::E32, lmul: Lmul::M8 });
+            p.vector(VectorOp::Load { vd: VReg(8), base: base + off * 4, stride: 1 });
+            p.vector(VectorOp::MulVF { vd: VReg(16), vs: VReg(8), f });
+            p.vector(VectorOp::Store { vs: VReg(16), base: base + 0x4000 + off * 4, stride: 1 });
+            p.scalar(ScalarOp::Alu); // loop bookkeeping
+            p.scalar(ScalarOp::Branch { taken: true });
+            off += vl;
+        }
+        p.push(Instr::Fence);
+        p.push(Instr::Halt);
+        p
+    }
+
+    #[test]
+    fn dual_core_split_mode_end_to_end() {
+        let mut cl = Cluster::new(SimConfig::spatzformer()).unwrap();
+        let x: Vec<f32> = (0..512).map(|i| i as f32 * 0.5).collect();
+        cl.stage_f32(0, &x);
+        // core 0 handles the first half, core 1 the second
+        let p0 = vec_program("half0", 0, 256, 2.0);
+        let p1 = vec_program("half1", 256 * 4, 256, 2.0);
+        cl.load_programs([p0, p1]).unwrap();
+        let cycles = cl.run().unwrap();
+        assert!(cycles > 0);
+        let out = cl.tcdm.read_f32_slice(0x4000, 256);
+        for (i, &o) in out.iter().enumerate() {
+            assert_eq!(o, x[i] * 2.0, "elem {i}");
+        }
+        let out1 = cl.tcdm.read_f32_slice(256 * 4 + 0x4000, 256);
+        for (i, &o) in out1.iter().enumerate() {
+            assert_eq!(o, x[256 + i] * 2.0, "elem {}", 256 + i);
+        }
+    }
+
+    #[test]
+    fn merge_mode_single_core_drives_both_units() {
+        let mut cl = Cluster::new(SimConfig::spatzformer()).unwrap();
+        cl.set_mode(Mode::Merge).unwrap();
+        let x: Vec<f32> = (0..512).map(|i| (i as f32).cos()).collect();
+        cl.stage_f32(0, &x);
+        let mut p = Program::new("mm");
+        let mut off = 0;
+        while off < 512 {
+            let vl = (512 - off).min(256);
+            p.vector(VectorOp::SetVl { avl: vl, ew: ElemWidth::E32, lmul: Lmul::M8 });
+            p.vector(VectorOp::Load { vd: VReg(8), base: off * 4, stride: 1 });
+            p.vector(VectorOp::AddVF { vd: VReg(16), vs: VReg(8), f: 1.0 });
+            p.vector(VectorOp::Store { vs: VReg(16), base: 0x4000 + off * 4, stride: 1 });
+            off += vl;
+        }
+        p.push(Instr::Fence);
+        p.push(Instr::Halt);
+        cl.load_programs([p, Program::idle()]).unwrap();
+        cl.run().unwrap();
+        let out = cl.tcdm.read_f32_slice(0x4000, 512);
+        for (i, &o) in out.iter().enumerate() {
+            assert_eq!(o, x[i] + 1.0, "elem {i}");
+        }
+        // both units did work
+        assert!(cl.counters.cycles_unit_busy[0] > 0);
+        assert!(cl.counters.cycles_unit_busy[1] > 0);
+        assert!(cl.counters.broadcast_dispatch > 0);
+    }
+
+    #[test]
+    fn merge_mode_halves_dispatches_vs_split() {
+        // identical elementwise work; MM should need ~half the vector
+        // instructions at hart level but per-unit dispatches equal out.
+        let x: Vec<f32> = (0..512).map(|i| i as f32).collect();
+
+        let mut sm = Cluster::new(SimConfig::spatzformer()).unwrap();
+        sm.stage_f32(0, &x);
+        sm.load_programs([
+            vec_program("h0", 0, 256, 3.0),
+            vec_program("h1", 1024, 256, 3.0),
+        ])
+        .unwrap();
+        sm.run().unwrap();
+
+        let mut mm = Cluster::new(SimConfig::spatzformer()).unwrap();
+        mm.set_mode(Mode::Merge).unwrap();
+        mm.stage_f32(0, &x);
+        let mut p = Program::new("mm");
+        let mut off = 0u32;
+        while off < 512 {
+            p.vector(VectorOp::SetVl { avl: 256, ew: ElemWidth::E32, lmul: Lmul::M8 });
+            p.vector(VectorOp::Load { vd: VReg(8), base: off * 4, stride: 1 });
+            p.vector(VectorOp::MulVF { vd: VReg(16), vs: VReg(8), f: 3.0 });
+            p.vector(VectorOp::Store { vs: VReg(16), base: 0x4000 + off * 4, stride: 1 });
+            off += 256;
+        }
+        p.push(Instr::Fence);
+        p.push(Instr::Halt);
+        mm.load_programs([p, Program::idle()]).unwrap();
+        mm.run().unwrap();
+
+        // scalar ifetch: MM fetches roughly half the vector instructions
+        assert!(
+            (mm.counters.scalar_ifetch as f64) < 0.75 * sm.counters.scalar_ifetch as f64,
+            "mm={} sm={}",
+            mm.counters.scalar_ifetch,
+            sm.counters.scalar_ifetch
+        );
+    }
+
+    #[test]
+    fn barrier_synchronizes_cores() {
+        let mut cl = Cluster::new(SimConfig::spatzformer()).unwrap();
+        // core 0 does long work then barrier; core 1 barriers immediately
+        let mut p0 = Program::new("slow");
+        for _ in 0..200 {
+            p0.scalar(ScalarOp::Alu);
+        }
+        p0.push(Instr::Barrier);
+        p0.push(Instr::Halt);
+        let mut p1 = Program::new("fast");
+        p1.push(Instr::Barrier);
+        p1.push(Instr::Halt);
+        cl.load_programs([p0, p1]).unwrap();
+        cl.run().unwrap();
+        assert_eq!(cl.counters.barriers, 2); // two arrivals
+        assert!(cl.counters.barrier_wait_cycles > 150, "fast core should wait");
+    }
+
+    #[test]
+    fn runtime_mode_switch_roundtrip() {
+        let mut cl = Cluster::new(SimConfig::spatzformer()).unwrap();
+        let x: Vec<f32> = (0..256).map(|i| i as f32).collect();
+        cl.stage_f32(0, &x);
+        let mut p = Program::new("switchy");
+        // split-mode strip
+        p.vector(VectorOp::SetVl { avl: 128, ew: ElemWidth::E32, lmul: Lmul::M8 });
+        p.vector(VectorOp::Load { vd: VReg(8), base: 0, stride: 1 });
+        p.vector(VectorOp::MulVF { vd: VReg(16), vs: VReg(8), f: 2.0 });
+        p.vector(VectorOp::Store { vs: VReg(16), base: 0x4000, stride: 1 });
+        // switch to merge, do a 256-wide strip
+        p.push(Instr::SetMode(Mode::Merge));
+        p.vector(VectorOp::SetVl { avl: 256, ew: ElemWidth::E32, lmul: Lmul::M8 });
+        p.vector(VectorOp::Load { vd: VReg(8), base: 0, stride: 1 });
+        p.vector(VectorOp::MulVF { vd: VReg(16), vs: VReg(8), f: 4.0 });
+        p.vector(VectorOp::Store { vs: VReg(16), base: 0x5000, stride: 1 });
+        // and back to split
+        p.push(Instr::SetMode(Mode::Split));
+        p.vector(VectorOp::SetVl { avl: 128, ew: ElemWidth::E32, lmul: Lmul::M8 });
+        p.vector(VectorOp::Load { vd: VReg(8), base: 0, stride: 1 });
+        p.vector(VectorOp::AddVF { vd: VReg(16), vs: VReg(8), f: 0.5 });
+        p.vector(VectorOp::Store { vs: VReg(16), base: 0x6000, stride: 1 });
+        p.push(Instr::Fence);
+        p.push(Instr::Halt);
+        cl.load_programs([p, Program::idle()]).unwrap();
+        cl.run().unwrap();
+        assert_eq!(cl.counters.mode_switches, 2);
+        assert_eq!(cl.mode(), Mode::Split);
+        let a = cl.tcdm.read_f32_slice(0x4000, 128);
+        let b = cl.tcdm.read_f32_slice(0x5000, 256);
+        let c = cl.tcdm.read_f32_slice(0x6000, 128);
+        for i in 0..128 {
+            assert_eq!(a[i], x[i] * 2.0);
+            assert_eq!(c[i], x[i] + 0.5);
+        }
+        for i in 0..256 {
+            assert_eq!(b[i], x[i] * 4.0);
+        }
+    }
+
+    #[test]
+    fn baseline_rejects_setmode_and_merge() {
+        let mut cl = Cluster::new(SimConfig::baseline()).unwrap();
+        assert!(cl.set_mode(Mode::Merge).is_err());
+        let mut p = Program::new("bad");
+        p.push(Instr::SetMode(Mode::Merge));
+        p.push(Instr::Halt);
+        assert!(cl.load_programs([p, Program::idle()]).is_err());
+    }
+
+    #[test]
+    fn merge_mode_rejects_vector_on_core1() {
+        let mut cl = Cluster::new(SimConfig::spatzformer()).unwrap();
+        cl.set_mode(Mode::Merge).unwrap();
+        let mut p1 = Program::new("vec-on-1");
+        p1.vector(VectorOp::MovVF { vd: VReg(0), f: 0.0 });
+        p1.push(Instr::Halt);
+        assert!(cl.load_programs([Program::idle(), p1]).is_err());
+    }
+
+    #[test]
+    fn deadlock_detection_via_max_cycles() {
+        let mut cfg = SimConfig::spatzformer();
+        cfg.max_cycles = 1000;
+        let mut cl = Cluster::new(cfg).unwrap();
+        // deadlock: barrier participants include core 1, but core 1's
+        // program never reaches a barrier
+        let mut p0 = Program::new("hang");
+        p0.push(Instr::Barrier);
+        p0.push(Instr::Halt);
+        cl.load_programs([p0, Program::idle()]).unwrap();
+        cl.barrier_mut().set_participants(0b11);
+        let r = cl.run();
+        assert!(r.is_err(), "expected deadlock detection");
+    }
+
+    #[test]
+    fn determinism_same_seed_same_cycles() {
+        let build = || {
+            let mut cl = Cluster::new(SimConfig::spatzformer()).unwrap();
+            let x: Vec<f32> = (0..512).map(|i| i as f32).collect();
+            cl.stage_f32(0, &x);
+            cl.load_programs([
+                vec_program("h0", 0, 256, 3.0),
+                vec_program("h1", 1024, 256, 3.0),
+            ])
+            .unwrap();
+            cl
+        };
+        let mut a = build();
+        let mut b = build();
+        assert_eq!(a.run().unwrap(), b.run().unwrap());
+        assert_eq!(a.counters, b.counters);
+    }
+}

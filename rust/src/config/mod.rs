@@ -1,0 +1,454 @@
+//! Typed configuration for the simulator, PPA model and coordinator.
+//!
+//! Configs are plain structs with named presets ([`SimConfig::baseline`],
+//! [`SimConfig::spatzformer`]) and can be loaded from / overridden by a
+//! TOML-subset file ([`toml`]) or CLI `--set section.key=value` flags.
+//! Every knob that the paper's evaluation varies is a field here.
+
+pub mod toml;
+
+use toml::Value;
+
+/// Which architecture is simulated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArchKind {
+    /// Non-reconfigurable Spatz cluster (the paper's baseline). Always
+    /// operates like split mode; carries no reconfiguration hardware.
+    Baseline,
+    /// Spatzformer: baseline + broadcast/retire-merge stage + mode CSR.
+    Spatzformer,
+}
+
+impl ArchKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ArchKind::Baseline => "baseline",
+            ArchKind::Spatzformer => "spatzformer",
+        }
+    }
+}
+
+/// Operating mode of a Spatzformer cluster (§II of the paper).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Mode {
+    /// Two independent scalar+vector cores.
+    Split,
+    /// Core 0 drives both vector units; core 1 is free for scalar work.
+    Merge,
+}
+
+impl Mode {
+    pub fn name(self) -> &'static str {
+        match self {
+            Mode::Split => "split",
+            Mode::Merge => "merge",
+        }
+    }
+}
+
+/// Microarchitectural shape + latencies of the simulated cluster.
+///
+/// Defaults follow the published Spatz dual-core cluster configuration:
+/// 2 Snitch cores, 2 Spatz units with 4 x 32-bit FPU lanes and VLEN=512,
+/// a 128 KiB TCDM with 16 banks, shared 4 KiB icache.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    pub arch: ArchKind,
+    /// Number of scalar+vector core pairs (the paper's cluster has 2).
+    pub cores: usize,
+    /// Vector register length per Spatz unit, in bits.
+    pub vlen_bits: usize,
+    /// FPU lanes (32-bit) per Spatz unit.
+    pub lanes: usize,
+    /// Architectural vector registers.
+    pub vregs: usize,
+    /// TCDM capacity in KiB and bank count (single-ported banks).
+    pub tcdm_kib: usize,
+    pub tcdm_banks: usize,
+    /// Cycles for a granted TCDM access to return data.
+    pub tcdm_latency: u64,
+    /// Shared instruction cache: total lines, instructions per line,
+    /// and refill penalty (cycles) on a miss.
+    pub icache_lines: usize,
+    pub icache_line_instrs: usize,
+    pub icache_miss_penalty: u64,
+    /// Associativity of the shared icache (ways). Two cores run two
+    /// independent streams; a direct-mapped shared cache would thrash.
+    pub icache_ways: usize,
+    /// Accelerator offload queue depth between a Snitch core and its
+    /// Spatz unit (back-pressure when full).
+    pub offload_queue_depth: usize,
+    /// Scalar-core latencies (cycles).
+    pub lat_mul: u64,
+    pub lat_div: u64,
+    /// Extra cycles on a taken branch (front-end refill).
+    pub branch_penalty: u64,
+    /// FPU pipeline depth: cycles from first element-group issue to first
+    /// result write (fills once per instruction).
+    pub fpu_pipe_depth: u64,
+    /// Cluster hardware-barrier release latency (cycles between the last
+    /// arrival and all cores resuming). Snitch-style clusters barrier by
+    /// clock-gated WFI sleep; release crosses the event unit, ungates the
+    /// clock and restarts the fetch pipeline — tens of cycles end to end.
+    pub barrier_latency: u64,
+    /// --- Spatzformer-only knobs (ignored for the baseline) ---
+    /// Extra dispatch pipeline stage through the broadcast unit in MM.
+    pub broadcast_latency: u64,
+    /// Cycles to execute a mode switch once both units are drained.
+    pub mode_switch_latency: u64,
+    /// Extra cycles for a cross-unit reduction merge in MM.
+    pub mm_reduction_merge_latency: u64,
+}
+
+impl ClusterConfig {
+    /// Elements of `ew` bits that fit one vector register.
+    pub fn elems_per_vreg(&self, ew_bits: usize) -> usize {
+        self.vlen_bits / ew_bits
+    }
+
+    /// VLMAX for a unit at the given element width and LMUL.
+    pub fn vlmax(&self, ew_bits: usize, lmul: usize) -> usize {
+        self.elems_per_vreg(ew_bits) * lmul
+    }
+
+    /// TCDM size in bytes.
+    pub fn tcdm_bytes(&self) -> usize {
+        self.tcdm_kib * 1024
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.cores == 2, "this cluster model is dual-core (got {})", self.cores);
+        anyhow::ensure!(self.vlen_bits % 32 == 0 && self.vlen_bits >= 128, "vlen_bits must be a multiple of 32 >= 128");
+        anyhow::ensure!(self.lanes.is_power_of_two() && self.lanes >= 1, "lanes must be a power of two");
+        anyhow::ensure!(self.vregs == 32, "RVV requires 32 architectural vregs");
+        anyhow::ensure!(self.tcdm_banks.is_power_of_two(), "tcdm_banks must be a power of two");
+        anyhow::ensure!(self.tcdm_kib >= 16, "tcdm too small");
+        anyhow::ensure!(self.offload_queue_depth >= 1, "offload queue must hold >= 1 entry");
+        anyhow::ensure!(self.icache_line_instrs.is_power_of_two(), "icache_line_instrs must be a power of two");
+        anyhow::ensure!(self.icache_ways >= 1 && self.icache_lines % self.icache_ways == 0, "icache_ways must divide icache_lines");
+        Ok(())
+    }
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            arch: ArchKind::Spatzformer,
+            cores: 2,
+            vlen_bits: 512,
+            lanes: 4,
+            vregs: 32,
+            tcdm_kib: 128,
+            tcdm_banks: 16,
+            tcdm_latency: 1,
+            icache_lines: 128,
+            icache_line_instrs: 8,
+            icache_miss_penalty: 12,
+            icache_ways: 4,
+            offload_queue_depth: 4,
+            lat_mul: 3,
+            lat_div: 21,
+            branch_penalty: 2,
+            fpu_pipe_depth: 4,
+            barrier_latency: 40,
+            broadcast_latency: 1,
+            mode_switch_latency: 16,
+            mm_reduction_merge_latency: 4,
+        }
+    }
+}
+
+/// Process/voltage/temperature corner for frequency + energy scaling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Corner {
+    /// Typical-typical, 0.8 V, 25 °C — the paper's 1.2 GHz point.
+    Tt,
+    /// Slow-slow, 0.72 V, 125 °C — the paper's 950 MHz point.
+    Ss,
+}
+
+impl Corner {
+    pub fn name(self) -> &'static str {
+        match self {
+            Corner::Tt => "tt",
+            Corner::Ss => "ss",
+        }
+    }
+}
+
+/// PPA model knobs: per-event energies (pJ), per-block leakage/clock
+/// power, and the corner. Area is modeled in `ppa::area` from the
+/// block inventory; the energy numbers here are calibrated so that the
+/// *relative* efficiency deltas land where 12-nm silicon puts them
+/// (see DESIGN.md §Substitutions).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PpaConfig {
+    pub corner: Corner,
+    /// Scalar core events.
+    pub pj_scalar_ifetch: f64,
+    pub pj_icache_refill_per_instr: f64,
+    pub pj_scalar_exec: f64,
+    pub pj_scalar_mem: f64,
+    /// Vector unit events.
+    pub pj_vec_dispatch: f64,
+    pub pj_vec_elem_alu: f64,
+    pub pj_vec_elem_mul: f64,
+    pub pj_vec_elem_mac: f64,
+    pub pj_vrf_access_per_elem: f64,
+    /// Memory events.
+    pub pj_tcdm_access: f64,
+    /// Cluster events.
+    pub pj_barrier: f64,
+    /// Reconfiguration hardware (Spatzformer only).
+    pub pj_broadcast_dispatch: f64,
+    /// Static + clock-tree power, expressed as pJ/cycle per block when
+    /// active and a gated fraction when idle.
+    pub pj_cycle_scalar_core: f64,
+    pub pj_cycle_vec_unit: f64,
+    pub pj_cycle_tcdm: f64,
+    pub pj_cycle_icache: f64,
+    pub pj_cycle_interconnect: f64,
+    pub pj_cycle_reconfig: f64,
+    /// Fraction of the per-cycle block power still burned when the block
+    /// is idle (clock gating efficiency).
+    pub idle_power_fraction: f64,
+}
+
+impl Default for PpaConfig {
+    fn default() -> Self {
+        // Calibrated for a 12-nm, 0.8 V, ~1.2 GHz operating point; see
+        // EXPERIMENTS.md for the calibration trail. Only *ratios* matter
+        // for the paper's claims.
+        Self {
+            corner: Corner::Tt,
+            pj_scalar_ifetch: 2.2,
+            pj_icache_refill_per_instr: 2.4,
+            pj_scalar_exec: 0.9,
+            pj_scalar_mem: 1.3,
+            pj_vec_dispatch: 1.6,
+            pj_vec_elem_alu: 0.55,
+            pj_vec_elem_mul: 0.80,
+            pj_vec_elem_mac: 0.95,
+            pj_vrf_access_per_elem: 0.16,
+            pj_tcdm_access: 1.15,
+            pj_barrier: 6.0,
+            pj_broadcast_dispatch: 6.0,
+            pj_cycle_scalar_core: 0.6,
+            pj_cycle_vec_unit: 1.4,
+            pj_cycle_tcdm: 1.0,
+            pj_cycle_icache: 0.35,
+            pj_cycle_interconnect: 0.45,
+            pj_cycle_reconfig: 0.5,
+            idle_power_fraction: 0.25,
+        }
+    }
+}
+
+/// Top-level simulation config.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimConfig {
+    pub cluster: ClusterConfig,
+    pub ppa: PpaConfig,
+    /// Seed for workload/data generation.
+    pub seed: u64,
+    /// Emit a per-event trace (slow; debugging only).
+    pub trace: bool,
+    /// Safety valve: abort a run after this many cycles (0 = unlimited).
+    pub max_cycles: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self {
+            cluster: ClusterConfig::default(),
+            ppa: PpaConfig::default(),
+            seed: 0xC0FFEE,
+            trace: false,
+            max_cycles: 500_000_000,
+        }
+    }
+}
+
+impl SimConfig {
+    /// The paper's non-reconfigurable Spatz cluster.
+    pub fn baseline() -> Self {
+        let mut cfg = Self::default();
+        cfg.cluster.arch = ArchKind::Baseline;
+        cfg
+    }
+
+    /// The reconfigurable Spatzformer cluster.
+    pub fn spatzformer() -> Self {
+        Self::default()
+    }
+
+    /// Apply one `section.key = value` setting; errors on unknown keys so
+    /// typos in config files fail loudly.
+    pub fn apply(&mut self, key: &str, value: &Value) -> anyhow::Result<()> {
+        let bad = || anyhow::anyhow!("invalid value for `{key}`: {value}");
+        let c = &mut self.cluster;
+        let p = &mut self.ppa;
+        match key {
+            "seed" => self.seed = value.as_u64().ok_or_else(bad)?,
+            "trace" => self.trace = value.as_bool().ok_or_else(bad)?,
+            "max_cycles" => self.max_cycles = value.as_u64().ok_or_else(bad)?,
+            "cluster.arch" => {
+                c.arch = match value.as_str() {
+                    Some("baseline") => ArchKind::Baseline,
+                    Some("spatzformer") => ArchKind::Spatzformer,
+                    _ => return Err(bad()),
+                }
+            }
+            "cluster.cores" => c.cores = value.as_usize().ok_or_else(bad)?,
+            "cluster.vlen_bits" => c.vlen_bits = value.as_usize().ok_or_else(bad)?,
+            "cluster.lanes" => c.lanes = value.as_usize().ok_or_else(bad)?,
+            "cluster.vregs" => c.vregs = value.as_usize().ok_or_else(bad)?,
+            "cluster.tcdm_kib" => c.tcdm_kib = value.as_usize().ok_or_else(bad)?,
+            "cluster.tcdm_banks" => c.tcdm_banks = value.as_usize().ok_or_else(bad)?,
+            "cluster.tcdm_latency" => c.tcdm_latency = value.as_u64().ok_or_else(bad)?,
+            "cluster.icache_lines" => c.icache_lines = value.as_usize().ok_or_else(bad)?,
+            "cluster.icache_line_instrs" => c.icache_line_instrs = value.as_usize().ok_or_else(bad)?,
+            "cluster.icache_miss_penalty" => c.icache_miss_penalty = value.as_u64().ok_or_else(bad)?,
+            "cluster.icache_ways" => c.icache_ways = value.as_usize().ok_or_else(bad)?,
+            "cluster.offload_queue_depth" => c.offload_queue_depth = value.as_usize().ok_or_else(bad)?,
+            "cluster.lat_mul" => c.lat_mul = value.as_u64().ok_or_else(bad)?,
+            "cluster.lat_div" => c.lat_div = value.as_u64().ok_or_else(bad)?,
+            "cluster.branch_penalty" => c.branch_penalty = value.as_u64().ok_or_else(bad)?,
+            "cluster.fpu_pipe_depth" => c.fpu_pipe_depth = value.as_u64().ok_or_else(bad)?,
+            "cluster.barrier_latency" => c.barrier_latency = value.as_u64().ok_or_else(bad)?,
+            "cluster.broadcast_latency" => c.broadcast_latency = value.as_u64().ok_or_else(bad)?,
+            "cluster.mode_switch_latency" => c.mode_switch_latency = value.as_u64().ok_or_else(bad)?,
+            "cluster.mm_reduction_merge_latency" => c.mm_reduction_merge_latency = value.as_u64().ok_or_else(bad)?,
+            "ppa.corner" => {
+                p.corner = match value.as_str() {
+                    Some("tt") => Corner::Tt,
+                    Some("ss") => Corner::Ss,
+                    _ => return Err(bad()),
+                }
+            }
+            "ppa.pj_scalar_ifetch" => p.pj_scalar_ifetch = value.as_f64().ok_or_else(bad)?,
+            "ppa.pj_icache_refill_per_instr" => p.pj_icache_refill_per_instr = value.as_f64().ok_or_else(bad)?,
+            "ppa.pj_scalar_exec" => p.pj_scalar_exec = value.as_f64().ok_or_else(bad)?,
+            "ppa.pj_scalar_mem" => p.pj_scalar_mem = value.as_f64().ok_or_else(bad)?,
+            "ppa.pj_vec_dispatch" => p.pj_vec_dispatch = value.as_f64().ok_or_else(bad)?,
+            "ppa.pj_vec_elem_alu" => p.pj_vec_elem_alu = value.as_f64().ok_or_else(bad)?,
+            "ppa.pj_vec_elem_mul" => p.pj_vec_elem_mul = value.as_f64().ok_or_else(bad)?,
+            "ppa.pj_vec_elem_mac" => p.pj_vec_elem_mac = value.as_f64().ok_or_else(bad)?,
+            "ppa.pj_vrf_access_per_elem" => p.pj_vrf_access_per_elem = value.as_f64().ok_or_else(bad)?,
+            "ppa.pj_tcdm_access" => p.pj_tcdm_access = value.as_f64().ok_or_else(bad)?,
+            "ppa.pj_barrier" => p.pj_barrier = value.as_f64().ok_or_else(bad)?,
+            "ppa.pj_broadcast_dispatch" => p.pj_broadcast_dispatch = value.as_f64().ok_or_else(bad)?,
+            "ppa.pj_cycle_scalar_core" => p.pj_cycle_scalar_core = value.as_f64().ok_or_else(bad)?,
+            "ppa.pj_cycle_vec_unit" => p.pj_cycle_vec_unit = value.as_f64().ok_or_else(bad)?,
+            "ppa.pj_cycle_tcdm" => p.pj_cycle_tcdm = value.as_f64().ok_or_else(bad)?,
+            "ppa.pj_cycle_icache" => p.pj_cycle_icache = value.as_f64().ok_or_else(bad)?,
+            "ppa.pj_cycle_interconnect" => p.pj_cycle_interconnect = value.as_f64().ok_or_else(bad)?,
+            "ppa.pj_cycle_reconfig" => p.pj_cycle_reconfig = value.as_f64().ok_or_else(bad)?,
+            "ppa.idle_power_fraction" => p.idle_power_fraction = value.as_f64().ok_or_else(bad)?,
+            _ => anyhow::bail!("unknown config key: {key}"),
+        }
+        Ok(())
+    }
+
+    /// Load and apply a TOML-subset config file on top of `self`.
+    pub fn apply_file(&mut self, path: &str) -> anyhow::Result<()> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read config {path}: {e}"))?;
+        let map = toml::parse(&text)?;
+        for (k, v) in &map {
+            self.apply(k, v)?;
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        self.cluster.validate()?;
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.ppa.idle_power_fraction),
+            "idle_power_fraction must be in [0,1]"
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        SimConfig::default().validate().unwrap();
+        SimConfig::baseline().validate().unwrap();
+        SimConfig::spatzformer().validate().unwrap();
+    }
+
+    #[test]
+    fn baseline_is_not_reconfigurable() {
+        assert_eq!(SimConfig::baseline().cluster.arch, ArchKind::Baseline);
+        assert_eq!(SimConfig::spatzformer().cluster.arch, ArchKind::Spatzformer);
+    }
+
+    #[test]
+    fn vlmax_matches_spec() {
+        let c = ClusterConfig::default();
+        assert_eq!(c.elems_per_vreg(32), 16); // VLEN=512 / 32b
+        assert_eq!(c.vlmax(32, 8), 128); // LMUL=8
+        assert_eq!(c.vlmax(64, 4), 32);
+    }
+
+    #[test]
+    fn apply_known_keys() {
+        let mut cfg = SimConfig::default();
+        cfg.apply("cluster.tcdm_banks", &Value::Int(32)).unwrap();
+        assert_eq!(cfg.cluster.tcdm_banks, 32);
+        cfg.apply("ppa.corner", &Value::Str("ss".into())).unwrap();
+        assert_eq!(cfg.ppa.corner, Corner::Ss);
+        cfg.apply("seed", &Value::Int(99)).unwrap();
+        assert_eq!(cfg.seed, 99);
+        cfg.apply("cluster.arch", &Value::Str("baseline".into())).unwrap();
+        assert_eq!(cfg.cluster.arch, ArchKind::Baseline);
+    }
+
+    #[test]
+    fn apply_unknown_key_errors() {
+        let mut cfg = SimConfig::default();
+        assert!(cfg.apply("cluster.bogus", &Value::Int(1)).is_err());
+    }
+
+    #[test]
+    fn apply_wrong_type_errors() {
+        let mut cfg = SimConfig::default();
+        assert!(cfg.apply("cluster.tcdm_banks", &Value::Str("many".into())).is_err());
+        assert!(cfg.apply("ppa.corner", &Value::Int(3)).is_err());
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut cfg = SimConfig::default();
+        cfg.cluster.tcdm_banks = 12; // not a power of two
+        assert!(cfg.validate().is_err());
+        let mut cfg = SimConfig::default();
+        cfg.cluster.cores = 3;
+        assert!(cfg.validate().is_err());
+        let mut cfg = SimConfig::default();
+        cfg.ppa.idle_power_fraction = 1.5;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn config_file_roundtrip() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("spatzformer_cfg_test.toml");
+        std::fs::write(
+            &path,
+            "[cluster]\nlanes = 8\nvlen_bits = 1024\n[ppa]\npj_barrier = 9.5\n",
+        )
+        .unwrap();
+        let mut cfg = SimConfig::default();
+        cfg.apply_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(cfg.cluster.lanes, 8);
+        assert_eq!(cfg.cluster.vlen_bits, 1024);
+        assert!((cfg.ppa.pj_barrier - 9.5).abs() < 1e-12);
+        std::fs::remove_file(path).ok();
+    }
+}

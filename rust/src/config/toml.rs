@@ -1,0 +1,263 @@
+//! Minimal TOML-subset parser (offline environment: the `toml` crate is
+//! unavailable).
+//!
+//! Supported grammar — exactly what the config files need:
+//!
+//! ```toml
+//! # comment
+//! [section]            # headers
+//! key = 123            # integers
+//! ratio = 0.5          # floats
+//! flag = true          # booleans
+//! name = "merge"       # strings
+//! ```
+//!
+//! Values are stored flat as `section.key -> Value`. Arrays/tables-in-
+//! tables are intentionally out of scope; the typed config layer
+//! ([`super::SimConfig::apply`]) rejects unknown keys loudly.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+}
+
+impl Value {
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as u64),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_u64().map(|v| v as usize)
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Str(s) => write!(f, "\"{s}\""),
+        }
+    }
+}
+
+/// Parse error with line information.
+#[derive(Debug, thiserror::Error)]
+#[error("config parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Parse TOML-subset text into a flat `section.key -> Value` map.
+/// Keys before any `[section]` header are stored without a prefix.
+pub fn parse(text: &str) -> Result<BTreeMap<String, Value>, ParseError> {
+    let mut map = BTreeMap::new();
+    let mut section = String::new();
+    for (idx, raw_line) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        let line = strip_comment(raw_line).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or_else(|| ParseError {
+                line: line_no,
+                msg: format!("unterminated section header: {line}"),
+            })?;
+            let name = name.trim();
+            if name.is_empty() {
+                return Err(ParseError {
+                    line: line_no,
+                    msg: "empty section name".into(),
+                });
+            }
+            section = name.to_string();
+            continue;
+        }
+        let (key, value_text) = line.split_once('=').ok_or_else(|| ParseError {
+            line: line_no,
+            msg: format!("expected `key = value`, got: {line}"),
+        })?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(ParseError {
+                line: line_no,
+                msg: "empty key".into(),
+            });
+        }
+        let value = parse_value(value_text.trim()).map_err(|msg| ParseError {
+            line: line_no,
+            msg,
+        })?;
+        let full_key = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        map.insert(full_key, value);
+    }
+    Ok(map)
+}
+
+/// Parse a single `section.key=value` override (CLI `--set` flag).
+pub fn parse_override(text: &str) -> Result<(String, Value), String> {
+    let (key, value_text) = text
+        .split_once('=')
+        .ok_or_else(|| format!("expected key=value, got: {text}"))?;
+    let value = parse_value(value_text.trim())?;
+    Ok((key.trim().to_string(), value))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // No escapes inside our strings, so a '#' outside quotes ends the line.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> Result<Value, String> {
+    if text.is_empty() {
+        return Err("empty value".into());
+    }
+    if text == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if text == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(stripped) = text.strip_prefix('"') {
+        let inner = stripped
+            .strip_suffix('"')
+            .ok_or_else(|| format!("unterminated string: {text}"))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    // Underscore separators permitted in numbers, like real TOML.
+    let clean: String = text.chars().filter(|&c| c != '_').collect();
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value: {text}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let text = r#"
+            # cluster shape
+            [cluster]
+            tcdm_banks = 16
+            vlen_bits = 512
+
+            [energy]
+            pj_scalar_ifetch = 1.5
+            gated = true
+            corner = "tt"
+        "#;
+        let m = parse(text).unwrap();
+        assert_eq!(m["cluster.tcdm_banks"], Value::Int(16));
+        assert_eq!(m["energy.pj_scalar_ifetch"], Value::Float(1.5));
+        assert_eq!(m["energy.gated"], Value::Bool(true));
+        assert_eq!(m["energy.corner"], Value::Str("tt".into()));
+    }
+
+    #[test]
+    fn top_level_keys_have_no_prefix() {
+        let m = parse("seed = 7").unwrap();
+        assert_eq!(m["seed"], Value::Int(7));
+    }
+
+    #[test]
+    fn comments_and_inline_comments() {
+        let m = parse("a = 1 # trailing\n# full line\nb = 2").unwrap();
+        assert_eq!(m["a"], Value::Int(1));
+        assert_eq!(m["b"], Value::Int(2));
+    }
+
+    #[test]
+    fn hash_inside_string_is_kept() {
+        let m = parse(r##"tag = "a#b""##).unwrap();
+        assert_eq!(m["tag"], Value::Str("a#b".into()));
+    }
+
+    #[test]
+    fn underscores_in_numbers() {
+        let m = parse("big = 1_000_000").unwrap();
+        assert_eq!(m["big"], Value::Int(1_000_000));
+    }
+
+    #[test]
+    fn error_has_line_number() {
+        let err = parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn unterminated_section_rejected() {
+        assert!(parse("[cluster").is_err());
+    }
+
+    #[test]
+    fn unterminated_string_rejected() {
+        assert!(parse(r#"s = "oops"#).is_err());
+    }
+
+    #[test]
+    fn override_parsing() {
+        let (k, v) = parse_override("cluster.tcdm_banks=32").unwrap();
+        assert_eq!(k, "cluster.tcdm_banks");
+        assert_eq!(v, Value::Int(32));
+        assert!(parse_override("nonsense").is_err());
+    }
+
+    #[test]
+    fn value_accessors() {
+        assert_eq!(Value::Int(3).as_usize(), Some(3));
+        assert_eq!(Value::Int(-1).as_u64(), None);
+        assert_eq!(Value::Int(2).as_f64(), Some(2.0));
+        assert_eq!(Value::Float(0.5).as_f64(), Some(0.5));
+        assert_eq!(Value::Bool(true).as_bool(), Some(true));
+        assert_eq!(Value::Str("x".into()).as_str(), Some("x"));
+    }
+}

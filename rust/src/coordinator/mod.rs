@@ -1,0 +1,313 @@
+//! Workload coordinator: the framework-level entry point that maps jobs
+//! onto the simulated cluster.
+//!
+//! A [`Job`] describes *what* to run (a kernel, or a kernel mixed with a
+//! scalar task); the coordinator decides the operating mode (explicitly
+//! or via [`ModePolicy::Auto`]), builds the programs, stages the data,
+//! runs the cluster, prices the energy, and — when an [`XlaRuntime`] is
+//! attached — cross-checks the simulated RVV datapath's outputs against
+//! the AOT-compiled XLA artifact.
+
+use crate::cluster::Cluster;
+use crate::config::{ArchKind, SimConfig};
+use crate::kernels::{execute, Deployment, KernelId, KernelInstance};
+use crate::metrics::RunMetrics;
+use crate::ppa::price_run;
+use crate::runtime::XlaRuntime;
+use crate::util::stats::max_rel_err;
+use crate::workloads::coremark;
+
+/// Mode selection policy for jobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModePolicy {
+    /// Force split mode.
+    Split,
+    /// Force merge mode (Spatzformer only).
+    Merge,
+    /// Pick automatically: merge when a scalar co-task is present (frees
+    /// a core without halving vector throughput), split otherwise.
+    Auto,
+}
+
+/// A unit of work for the coordinator.
+#[derive(Debug, Clone)]
+pub enum Job {
+    /// Run one vector kernel on the whole cluster.
+    Kernel { kernel: KernelId, policy: ModePolicy },
+    /// Run a vector kernel alongside a CoreMark-workalike scalar task
+    /// (the paper's mixed scalar-vector workload).
+    Mixed {
+        kernel: KernelId,
+        policy: ModePolicy,
+        coremark_iterations: u32,
+    },
+}
+
+impl Job {
+    pub fn name(&self) -> String {
+        match self {
+            Job::Kernel { kernel, policy } => {
+                format!("kernel/{}/{:?}", kernel.name(), policy)
+            }
+            Job::Mixed { kernel, policy, .. } => {
+                format!("mixed/{}+coremark/{:?}", kernel.name(), policy)
+            }
+        }
+    }
+}
+
+/// Result of one job.
+#[derive(Debug, Clone)]
+pub struct JobReport {
+    pub job_name: String,
+    pub kernel: KernelId,
+    pub deploy: Deployment,
+    /// Whole-run metrics, energy priced.
+    pub metrics: RunMetrics,
+    /// Cycle at which the kernel's core finished (equals `metrics.cycles`
+    /// for pure kernel jobs; earlier/later than the co-runner in mixed
+    /// jobs).
+    pub kernel_cycles: u64,
+    /// Cycle at which the scalar co-task finished (mixed jobs).
+    pub scalar_cycles: Option<u64>,
+    /// Scalar co-task work proof (mixed jobs).
+    pub coremark_checksum: Option<u16>,
+    /// Max relative error vs the XLA artifact (when verification is on).
+    pub verified_max_rel_err: Option<f64>,
+}
+
+impl JobReport {
+    pub fn flop_per_cycle(&self) -> f64 {
+        self.metrics.flops as f64 / self.kernel_cycles.max(1) as f64
+    }
+}
+
+/// The coordinator.
+pub struct Coordinator {
+    cfg: SimConfig,
+    runtime: Option<XlaRuntime>,
+}
+
+impl Coordinator {
+    pub fn new(cfg: SimConfig) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        Ok(Self { cfg, runtime: None })
+    }
+
+    pub fn arch(&self) -> ArchKind {
+        self.cfg.cluster.arch
+    }
+
+    pub fn config(&self) -> &SimConfig {
+        &self.cfg
+    }
+
+    /// Attach the PJRT runtime: every kernel job's output will be
+    /// cross-checked against its AOT artifact.
+    pub fn attach_runtime(&mut self, dir: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
+        self.runtime = Some(XlaRuntime::open(dir)?);
+        Ok(())
+    }
+
+    pub fn has_runtime(&self) -> bool {
+        self.runtime.is_some()
+    }
+
+    fn resolve_deploy(&self, policy: ModePolicy, mixed: bool) -> anyhow::Result<Deployment> {
+        let arch = self.cfg.cluster.arch;
+        let deploy = match (policy, mixed) {
+            (ModePolicy::Split, false) => Deployment::SplitDual,
+            (ModePolicy::Split, true) => Deployment::SplitSingle,
+            (ModePolicy::Merge, _) => Deployment::Merge,
+            // Auto: merge pays off when a core must be freed; otherwise
+            // split-dual is the baseline-equivalent choice.
+            (ModePolicy::Auto, true) => {
+                if arch == ArchKind::Spatzformer {
+                    Deployment::Merge
+                } else {
+                    Deployment::SplitSingle
+                }
+            }
+            (ModePolicy::Auto, false) => Deployment::SplitDual,
+        };
+        if deploy == Deployment::Merge {
+            anyhow::ensure!(
+                arch == ArchKind::Spatzformer,
+                "merge mode requires the Spatzformer architecture"
+            );
+        }
+        Ok(deploy)
+    }
+
+    /// Run one job on a fresh cluster.
+    pub fn submit(&mut self, job: &Job) -> anyhow::Result<JobReport> {
+        match *job {
+            Job::Kernel { kernel, policy } => {
+                let deploy = self.resolve_deploy(policy, false)?;
+                let inst = kernel.build(&self.cfg.cluster, deploy, self.cfg.seed);
+                let mut cluster = Cluster::new(self.cfg.clone())?;
+                let (mut metrics, outputs) = execute(&mut cluster, &inst)?;
+                price_run(&mut metrics, &self.cfg, self.cfg.cluster.arch);
+                let kernel_cycles = cluster.core_halt_cycle(0).unwrap_or(metrics.cycles);
+                let verified = self.verify(&inst, &outputs)?;
+                Ok(JobReport {
+                    job_name: job.name(),
+                    kernel,
+                    deploy,
+                    kernel_cycles: kernel_cycles.max(
+                        cluster.core_halt_cycle(1).unwrap_or(0), // dual: slower core
+                    ),
+                    metrics,
+                    scalar_cycles: None,
+                    coremark_checksum: None,
+                    verified_max_rel_err: verified,
+                })
+            }
+            Job::Mixed { kernel, policy, coremark_iterations } => {
+                let deploy = self.resolve_deploy(policy, true)?;
+                anyhow::ensure!(
+                    deploy != Deployment::SplitDual,
+                    "mixed jobs need a free scalar core"
+                );
+                let mut inst = kernel.build(&self.cfg.cluster, deploy, self.cfg.seed);
+                let scalar =
+                    coremark(&self.cfg.cluster, coremark_iterations, self.cfg.seed ^ 0x5CA1A8);
+                // kernel occupies core 0; scalar task takes core 1
+                inst.programs[1] = scalar.program.clone();
+                let mut cluster = Cluster::new(self.cfg.clone())?;
+                let (mut metrics, outputs) = execute(&mut cluster, &inst)?;
+                price_run(&mut metrics, &self.cfg, self.cfg.cluster.arch);
+                let verified = self.verify(&inst, &outputs)?;
+                Ok(JobReport {
+                    job_name: job.name(),
+                    kernel,
+                    deploy,
+                    kernel_cycles: cluster.core_halt_cycle(0).unwrap_or(metrics.cycles),
+                    scalar_cycles: cluster.core_halt_cycle(1),
+                    metrics,
+                    coremark_checksum: Some(scalar.checksum),
+                    verified_max_rel_err: verified,
+                })
+            }
+        }
+    }
+
+    /// Run a queue of jobs in order.
+    pub fn run_queue(&mut self, jobs: &[Job]) -> anyhow::Result<Vec<JobReport>> {
+        jobs.iter().map(|j| self.submit(j)).collect()
+    }
+
+    fn verify(
+        &mut self,
+        inst: &KernelInstance,
+        outputs: &[Vec<f32>],
+    ) -> anyhow::Result<Option<f64>> {
+        let Some(rt) = self.runtime.as_mut() else {
+            return Ok(None);
+        };
+        let golden = rt.run(inst.id.artifact(), &inst.artifact_inputs)?;
+        anyhow::ensure!(
+            golden.len() == outputs.len(),
+            "{}: artifact returned {} outputs, simulator produced {}",
+            inst.id.name(),
+            golden.len(),
+            outputs.len()
+        );
+        let mut worst = 0.0f64;
+        for (sim, gold) in outputs.iter().zip(golden.iter()) {
+            worst = worst.max(max_rel_err(sim, gold));
+        }
+        anyhow::ensure!(
+            worst < 2e-2,
+            "{}: simulator/XLA mismatch (max rel err {worst:.3e})",
+            inst.id.name()
+        );
+        Ok(Some(worst))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_job_runs_and_prices_energy() {
+        let mut c = Coordinator::new(SimConfig::spatzformer()).unwrap();
+        let r = c
+            .submit(&Job::Kernel { kernel: KernelId::Faxpy, policy: ModePolicy::Split })
+            .unwrap();
+        assert!(r.metrics.cycles > 0);
+        assert!(r.metrics.energy_pj > 0.0);
+        assert_eq!(r.deploy, Deployment::SplitDual);
+        assert!(r.verified_max_rel_err.is_none()); // no runtime attached
+    }
+
+    #[test]
+    fn auto_policy_picks_merge_for_mixed_on_spatzformer() {
+        let mut c = Coordinator::new(SimConfig::spatzformer()).unwrap();
+        let r = c
+            .submit(&Job::Mixed {
+                kernel: KernelId::Faxpy,
+                policy: ModePolicy::Auto,
+                coremark_iterations: 1,
+            })
+            .unwrap();
+        assert_eq!(r.deploy, Deployment::Merge);
+        assert!(r.scalar_cycles.is_some());
+        assert!(r.coremark_checksum.is_some());
+    }
+
+    #[test]
+    fn auto_policy_on_baseline_keeps_split() {
+        let mut c = Coordinator::new(SimConfig::baseline()).unwrap();
+        let r = c
+            .submit(&Job::Mixed {
+                kernel: KernelId::Faxpy,
+                policy: ModePolicy::Auto,
+                coremark_iterations: 1,
+            })
+            .unwrap();
+        assert_eq!(r.deploy, Deployment::SplitSingle);
+    }
+
+    #[test]
+    fn merge_on_baseline_is_rejected() {
+        let mut c = Coordinator::new(SimConfig::baseline()).unwrap();
+        let err = c.submit(&Job::Kernel { kernel: KernelId::Fft, policy: ModePolicy::Merge });
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn mixed_merge_beats_mixed_split_on_kernel_cycles() {
+        // the paper's Fig. 2 right axis, in miniature
+        let mut c = Coordinator::new(SimConfig::spatzformer()).unwrap();
+        let sm = c
+            .submit(&Job::Mixed {
+                kernel: KernelId::Fmatmul,
+                policy: ModePolicy::Split,
+                coremark_iterations: 1,
+            })
+            .unwrap();
+        let mm = c
+            .submit(&Job::Mixed {
+                kernel: KernelId::Fmatmul,
+                policy: ModePolicy::Merge,
+                coremark_iterations: 1,
+            })
+            .unwrap();
+        let speedup = sm.kernel_cycles as f64 / mm.kernel_cycles as f64;
+        assert!(speedup > 1.4, "MM mixed speedup {speedup:.2}");
+    }
+
+    #[test]
+    fn queue_runs_all_jobs() {
+        let mut c = Coordinator::new(SimConfig::spatzformer()).unwrap();
+        let jobs = vec![
+            Job::Kernel { kernel: KernelId::Fdotp, policy: ModePolicy::Split },
+            Job::Kernel { kernel: KernelId::Fdotp, policy: ModePolicy::Merge },
+        ];
+        let reports = c.run_queue(&jobs).unwrap();
+        assert_eq!(reports.len(), 2);
+        assert!(reports.iter().all(|r| r.metrics.cycles > 0));
+    }
+}

@@ -1,0 +1,282 @@
+//! Experiment harnesses that regenerate the paper's evaluation artifacts
+//! (every table and figure). Shared by the CLI (`spatzformer bench ...`)
+//! and the `cargo bench` targets.
+//!
+//! | id | paper artifact | function |
+//! |----|----------------|----------|
+//! | E1 | Fig. 2 left axis, performance | [`fig2_rows`] + [`render_fig2_perf`] |
+//! | E2 | Fig. 2 left axis, energy efficiency | [`fig2_rows`] + [`render_fig2_energy`] |
+//! | E3 | Fig. 2 right axis, mixed-workload speedup | [`mixed_rows`] + [`render_fig2_mixed`] |
+//! | E4 | area table | [`render_area`] |
+//! | E5 | fmax corners | [`render_fmax`] |
+
+use crate::config::{ArchKind, Corner, SimConfig};
+use crate::coordinator::{Coordinator, Job, ModePolicy};
+use crate::kernels::KernelId;
+use crate::metrics::Table;
+use crate::ppa::{AreaModel, FreqModel};
+use crate::util::Summary;
+
+/// One kernel's numbers across the three cluster variants.
+#[derive(Debug, Clone)]
+pub struct Fig2Row {
+    pub kernel: KernelId,
+    /// (cycles, FLOP/cycle, GFLOPS/W) per variant.
+    pub baseline: (u64, f64, f64),
+    pub sm: (u64, f64, f64),
+    pub mm: (u64, f64, f64),
+}
+
+fn run_kernel(cfg: &SimConfig, kernel: KernelId, policy: ModePolicy) -> (u64, f64, f64) {
+    let mut c = Coordinator::new(cfg.clone()).expect("config");
+    let r = c
+        .submit(&Job::Kernel { kernel, policy })
+        .unwrap_or_else(|e| panic!("{} {policy:?}: {e}", kernel.name()));
+    (r.kernel_cycles, r.flop_per_cycle(), r.metrics.gflops_per_watt())
+}
+
+/// Run the six kernels on baseline (split), Spatzformer SM and
+/// Spatzformer MM — the left axis of Fig. 2.
+pub fn fig2_rows(seed: u64) -> Vec<Fig2Row> {
+    let mut base_cfg = SimConfig::baseline();
+    base_cfg.seed = seed;
+    let mut sf_cfg = SimConfig::spatzformer();
+    sf_cfg.seed = seed;
+    KernelId::all()
+        .into_iter()
+        .map(|kernel| Fig2Row {
+            kernel,
+            baseline: run_kernel(&base_cfg, kernel, ModePolicy::Split),
+            sm: run_kernel(&sf_cfg, kernel, ModePolicy::Split),
+            mm: run_kernel(&sf_cfg, kernel, ModePolicy::Merge),
+        })
+        .collect()
+}
+
+/// Fig. 2 left axis (performance): cycles and speedups vs baseline.
+pub fn render_fig2_perf(rows: &[Fig2Row]) -> String {
+    let mut t = Table::new(&[
+        "kernel",
+        "base cyc",
+        "SM cyc",
+        "MM cyc",
+        "SM/base",
+        "MM/base",
+        "MM/SM",
+    ]);
+    let mut sm_sp = Summary::new();
+    let mut mm_sp = Summary::new();
+    let mut mmsm = Summary::new();
+    for r in rows {
+        let sm_speed = r.baseline.0 as f64 / r.sm.0 as f64;
+        let mm_speed = r.baseline.0 as f64 / r.mm.0 as f64;
+        let ms = r.sm.0 as f64 / r.mm.0 as f64;
+        sm_sp.push(sm_speed);
+        mm_sp.push(mm_speed);
+        mmsm.push(ms);
+        t.row(&[
+            r.kernel.name().into(),
+            r.baseline.0.to_string(),
+            r.sm.0.to_string(),
+            r.mm.0.to_string(),
+            format!("{sm_speed:.3}x"),
+            format!("{mm_speed:.3}x"),
+            format!("{ms:.3}x"),
+        ]);
+    }
+    t.row(&[
+        "geomean".into(),
+        "".into(),
+        "".into(),
+        "".into(),
+        format!("{:.3}x", sm_sp.geomean()),
+        format!("{:.3}x", mm_sp.geomean()),
+        format!("{:.3}x", mmsm.geomean()),
+    ]);
+    t.render()
+}
+
+/// Fig. 2 left axis (energy efficiency): GFLOPS/W and ratios vs baseline.
+pub fn render_fig2_energy(rows: &[Fig2Row]) -> String {
+    let mut t = Table::new(&[
+        "kernel",
+        "base GF/W",
+        "SM GF/W",
+        "MM GF/W",
+        "SM/base",
+        "MM/base",
+    ]);
+    let mut sm_rel = Summary::new();
+    let mut mm_rel = Summary::new();
+    for r in rows {
+        let sm = r.sm.2 / r.baseline.2;
+        let mm = r.mm.2 / r.baseline.2;
+        sm_rel.push(sm);
+        mm_rel.push(mm);
+        t.row(&[
+            r.kernel.name().into(),
+            format!("{:.2}", r.baseline.2),
+            format!("{:.2}", r.sm.2),
+            format!("{:.2}", r.mm.2),
+            format!("{:+.1}%", (sm - 1.0) * 100.0),
+            format!("{:+.1}%", (mm - 1.0) * 100.0),
+        ]);
+    }
+    t.row(&[
+        "average".into(),
+        "".into(),
+        "".into(),
+        "".into(),
+        format!("{:+.1}%", (sm_rel.geomean() - 1.0) * 100.0),
+        format!("{:+.1}%", (mm_rel.geomean() - 1.0) * 100.0),
+    ]);
+    t.row(&[
+        "worst case".into(),
+        "".into(),
+        "".into(),
+        "".into(),
+        format!("{:+.1}%", (sm_rel.min() - 1.0) * 100.0),
+        format!("{:+.1}%", (mm_rel.min() - 1.0) * 100.0),
+    ]);
+    t.render()
+}
+
+/// One kernel's mixed-workload numbers (Fig. 2 right axis).
+#[derive(Debug, Clone)]
+pub struct MixedRow {
+    pub kernel: KernelId,
+    pub sm_kernel_cycles: u64,
+    pub mm_kernel_cycles: u64,
+    /// Kernel speedup MM over SM while CoreMark runs on the other core.
+    pub speedup: f64,
+    /// Scalar task completion (MM; the task shares the cluster).
+    pub mm_scalar_cycles: u64,
+}
+
+/// Run every kernel alongside the CoreMark-workalike in SM and MM.
+pub fn mixed_rows(seed: u64, coremark_iterations: u32) -> Vec<MixedRow> {
+    let mut cfg = SimConfig::spatzformer();
+    cfg.seed = seed;
+    KernelId::all()
+        .into_iter()
+        .map(|kernel| {
+            let mut c = Coordinator::new(cfg.clone()).expect("config");
+            let sm = c
+                .submit(&Job::Mixed {
+                    kernel,
+                    policy: ModePolicy::Split,
+                    coremark_iterations,
+                })
+                .expect("sm mixed");
+            let mm = c
+                .submit(&Job::Mixed {
+                    kernel,
+                    policy: ModePolicy::Merge,
+                    coremark_iterations,
+                })
+                .expect("mm mixed");
+            MixedRow {
+                kernel,
+                sm_kernel_cycles: sm.kernel_cycles,
+                mm_kernel_cycles: mm.kernel_cycles,
+                speedup: sm.kernel_cycles as f64 / mm.kernel_cycles as f64,
+                mm_scalar_cycles: mm.scalar_cycles.unwrap_or(0),
+            }
+        })
+        .collect()
+}
+
+/// Fig. 2 right axis: MM speedup of the mixed workload over SM.
+pub fn render_fig2_mixed(rows: &[MixedRow]) -> String {
+    let mut t = Table::new(&["kernel ∥ coremark", "SM cyc", "MM cyc", "MM speedup"]);
+    let mut sp = Summary::new();
+    for r in rows {
+        sp.push(r.speedup);
+        t.row(&[
+            r.kernel.name().into(),
+            r.sm_kernel_cycles.to_string(),
+            r.mm_kernel_cycles.to_string(),
+            format!("{:.2}x", r.speedup),
+        ]);
+    }
+    t.row(&[
+        "average".into(),
+        "".into(),
+        "".into(),
+        format!("{:.2}x", sp.geomean()),
+    ]);
+    t.row(&[
+        "best".into(),
+        "".into(),
+        "".into(),
+        format!("{:.2}x", sp.max()),
+    ]);
+    t.render()
+}
+
+/// E4: the area comparison.
+pub fn render_area() -> String {
+    let base = AreaModel::baseline();
+    let sf = AreaModel::spatzformer();
+    let alt = AreaModel::dedicated_core_alternative();
+    let mut out = String::new();
+    out.push_str(&sf.render());
+    out.push('\n');
+    let mut t = Table::new(&["variant", "total kGE", "overhead vs baseline"]);
+    t.row(&[base.arch_name.clone(), format!("{:.0}", base.total_kge()), "—".into()]);
+    t.row(&[
+        sf.arch_name.clone(),
+        format!("{:.0}", sf.total_kge()),
+        format!("+{:.1}% (+{:.0} kGE)", sf.overhead_vs(&base), sf.total_kge() - base.total_kge()),
+    ]);
+    t.row(&[
+        alt.arch_name.clone(),
+        format!("{:.0}", alt.total_kge()),
+        format!("+{:.1}% (+{:.0} kGE)", alt.overhead_vs(&base), alt.total_kge() - base.total_kge()),
+    ]);
+    out.push_str(&t.render());
+    out
+}
+
+/// E5: the fmax corner table.
+pub fn render_fmax() -> String {
+    let f = FreqModel::new();
+    let mut out = String::new();
+    for corner in [Corner::Tt, Corner::Ss] {
+        out.push_str(&format!("--- corner {} ---\n", corner.name()));
+        out.push_str(&f.render(corner));
+    }
+    let same = f.fmax_ghz(ArchKind::Baseline, Corner::Tt)
+        == f.fmax_ghz(ArchKind::Spatzformer, Corner::Tt);
+    out.push_str(&format!(
+        "\nreconfigurability degrades fmax: {}\n",
+        if same { "NO (matches paper)" } else { "YES (mismatch!)" }
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full fig2 sweeps are exercised by the bench targets and
+    // integration tests; here we keep one fast smoke per renderer.
+
+    #[test]
+    fn area_and_fmax_render() {
+        let a = render_area();
+        assert!(a.contains("+1.4%"));
+        let f = render_fmax();
+        assert!(f.contains("NO (matches paper)"));
+    }
+
+    #[test]
+    fn mixed_row_single_kernel() {
+        let rows: Vec<MixedRow> = mixed_rows(7, 1)
+            .into_iter()
+            .filter(|r| r.kernel == KernelId::Faxpy)
+            .collect();
+        assert_eq!(rows.len(), 1);
+        assert!(rows[0].speedup > 1.0, "speedup={}", rows[0].speedup);
+    }
+}

@@ -1,0 +1,402 @@
+//! Text assembly format for [`Program`]s: a printer and a parser.
+//!
+//! Used by the trace subsystem, the CLI (`spatzformer disasm`), and by
+//! tests (round-trip property). The mnemonics follow RVV where one
+//! exists; memory operands are concrete byte addresses.
+//!
+//! ```text
+//! # fmatmul (strip 0)
+//! vsetvli 128, e32, m8
+//! vle32.v v8, 4096, 1
+//! vfmacc.vf v16, v8, 0.5
+//! vse32.v v16, 8192, 1
+//! fence
+//! barrier
+//! halt
+//! ```
+//!
+//! Float immediates are printed with Rust's shortest-round-trip
+//! formatting, so parse(print(p)) == p exactly.
+
+use super::{ElemWidth, Instr, Lmul, Program, ScalarOp, VReg, VectorOp};
+use crate::config::Mode;
+
+/// Render one instruction as assembly text.
+pub fn print_instr(i: &Instr) -> String {
+    use Instr::*;
+    match i {
+        Scalar(op) => print_scalar(op),
+        Vector(op) => print_vector(op),
+        Fence => "fence".to_string(),
+        Barrier => "barrier".to_string(),
+        SetMode(Mode::Split) => "setmode split".to_string(),
+        SetMode(Mode::Merge) => "setmode merge".to_string(),
+        Halt => "halt".to_string(),
+    }
+}
+
+fn print_scalar(op: &ScalarOp) -> String {
+    use ScalarOp::*;
+    match op {
+        Alu => "alu".to_string(),
+        Mul => "mul".to_string(),
+        Div => "div".to_string(),
+        Load { addr } => format!("lw {addr}"),
+        Store { addr } => format!("sw {addr}"),
+        Branch { taken: true } => "bnez taken".to_string(),
+        Branch { taken: false } => "bnez not_taken".to_string(),
+        Csr => "csr".to_string(),
+        Nop => "nop".to_string(),
+    }
+}
+
+fn print_vector(op: &VectorOp) -> String {
+    use VectorOp::*;
+    match *op {
+        SetVl { avl, ew, lmul } => {
+            format!("vsetvli {avl}, e{}, m{}", ew.bits(), lmul.factor())
+        }
+        Load { vd, base, stride } => format!("vle32.v {vd}, {base}, {stride}"),
+        Store { vs, base, stride } => format!("vse32.v {vs}, {base}, {stride}"),
+        LoadIndexed { vd, base, vidx } => format!("vluxei32.v {vd}, {base}, {vidx}"),
+        StoreIndexed { vs, base, vidx } => format!("vsuxei32.v {vs}, {base}, {vidx}"),
+        AddVV { vd, vs1, vs2 } => format!("vfadd.vv {vd}, {vs1}, {vs2}"),
+        SubVV { vd, vs1, vs2 } => format!("vfsub.vv {vd}, {vs1}, {vs2}"),
+        MulVV { vd, vs1, vs2 } => format!("vfmul.vv {vd}, {vs1}, {vs2}"),
+        MacVV { vd, vs1, vs2 } => format!("vfmacc.vv {vd}, {vs1}, {vs2}"),
+        NmsacVV { vd, vs1, vs2 } => format!("vfnmsac.vv {vd}, {vs1}, {vs2}"),
+        AddVF { vd, vs, f } => format!("vfadd.vf {vd}, {vs}, {f:?}"),
+        MulVF { vd, vs, f } => format!("vfmul.vf {vd}, {vs}, {f:?}"),
+        MacVF { vd, vs, f } => format!("vfmacc.vf {vd}, {vs}, {f:?}"),
+        MovVF { vd, f } => format!("vfmv.v.f {vd}, {f:?}"),
+        MovVV { vd, vs } => format!("vmv.v.v {vd}, {vs}"),
+        RedSum { vd, vs } => format!("vfredusum.vs {vd}, {vs}"),
+    }
+}
+
+/// Render a whole program (with `#` name header).
+pub fn print_program(p: &Program) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("# {}\n", p.name));
+    for i in &p.instrs {
+        out.push_str(&print_instr(i));
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse error.
+#[derive(Debug, thiserror::Error)]
+#[error("asm parse error at line {line}: {msg}")]
+pub struct AsmError {
+    pub line: usize,
+    pub msg: String,
+}
+
+fn err(line: usize, msg: impl Into<String>) -> AsmError {
+    AsmError { line, msg: msg.into() }
+}
+
+fn parse_vreg(tok: &str, line: usize) -> Result<VReg, AsmError> {
+    let n = tok
+        .strip_prefix('v')
+        .and_then(|s| s.parse::<u8>().ok())
+        .ok_or_else(|| err(line, format!("bad vreg: {tok}")))?;
+    if n >= 32 {
+        return Err(err(line, format!("vreg out of range: {tok}")));
+    }
+    Ok(VReg(n))
+}
+
+fn parse_num<T: std::str::FromStr>(tok: &str, line: usize) -> Result<T, AsmError> {
+    tok.parse::<T>()
+        .map_err(|_| err(line, format!("bad number: {tok}")))
+}
+
+/// Parse assembly text into a [`Program`]. The first `# name` comment, if
+/// present, becomes the program name.
+pub fn parse_program(text: &str) -> Result<Program, AsmError> {
+    let mut prog = Program::new("asm");
+    let mut named = false;
+    for (idx, raw) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(comment) = line.strip_prefix('#') {
+            if !named {
+                prog.name = comment.trim().to_string();
+                named = true;
+            }
+            continue;
+        }
+        // strip trailing comment
+        let line = line.split('#').next().unwrap().trim();
+        let (mnemonic, rest) = match line.split_once(char::is_whitespace) {
+            Some((m, r)) => (m, r.trim()),
+            None => (line, ""),
+        };
+        let args: Vec<&str> = if rest.is_empty() {
+            vec![]
+        } else {
+            rest.split(',').map(|a| a.trim()).collect()
+        };
+        let need = |n: usize| -> Result<(), AsmError> {
+            if args.len() != n {
+                Err(err(line_no, format!("{mnemonic}: expected {n} operands, got {}", args.len())))
+            } else {
+                Ok(())
+            }
+        };
+        use Instr::*;
+        use VectorOp::*;
+        let instr = match mnemonic {
+            "alu" => Scalar(ScalarOp::Alu),
+            "mul" => Scalar(ScalarOp::Mul),
+            "div" => Scalar(ScalarOp::Div),
+            "csr" => Scalar(ScalarOp::Csr),
+            "nop" => Scalar(ScalarOp::Nop),
+            "lw" => {
+                need(1)?;
+                Scalar(ScalarOp::Load { addr: parse_num(args[0], line_no)? })
+            }
+            "sw" => {
+                need(1)?;
+                Scalar(ScalarOp::Store { addr: parse_num(args[0], line_no)? })
+            }
+            "bnez" => {
+                need(1)?;
+                match args[0] {
+                    "taken" => Scalar(ScalarOp::Branch { taken: true }),
+                    "not_taken" => Scalar(ScalarOp::Branch { taken: false }),
+                    other => return Err(err(line_no, format!("bnez: bad arg {other}"))),
+                }
+            }
+            "fence" => Fence,
+            "barrier" => Barrier,
+            "halt" => Halt,
+            "setmode" => {
+                need(1)?;
+                match args[0] {
+                    "split" => SetMode(Mode::Split),
+                    "merge" => SetMode(Mode::Merge),
+                    other => return Err(err(line_no, format!("setmode: bad mode {other}"))),
+                }
+            }
+            "vsetvli" => {
+                need(3)?;
+                let avl = parse_num(args[0], line_no)?;
+                let ew = match args[1] {
+                    "e32" => ElemWidth::E32,
+                    other => return Err(err(line_no, format!("bad SEW: {other}"))),
+                };
+                let mf: usize = args[2]
+                    .strip_prefix('m')
+                    .and_then(|s| s.parse().ok())
+                    .ok_or_else(|| err(line_no, format!("bad LMUL: {}", args[2])))?;
+                let lmul = Lmul::from_factor(mf)
+                    .ok_or_else(|| err(line_no, format!("bad LMUL: {}", args[2])))?;
+                Vector(SetVl { avl, ew, lmul })
+            }
+            "vle32.v" => {
+                need(3)?;
+                Vector(Load {
+                    vd: parse_vreg(args[0], line_no)?,
+                    base: parse_num(args[1], line_no)?,
+                    stride: parse_num(args[2], line_no)?,
+                })
+            }
+            "vse32.v" => {
+                need(3)?;
+                Vector(Store {
+                    vs: parse_vreg(args[0], line_no)?,
+                    base: parse_num(args[1], line_no)?,
+                    stride: parse_num(args[2], line_no)?,
+                })
+            }
+            "vluxei32.v" => {
+                need(3)?;
+                Vector(LoadIndexed {
+                    vd: parse_vreg(args[0], line_no)?,
+                    base: parse_num(args[1], line_no)?,
+                    vidx: parse_vreg(args[2], line_no)?,
+                })
+            }
+            "vsuxei32.v" => {
+                need(3)?;
+                Vector(StoreIndexed {
+                    vs: parse_vreg(args[0], line_no)?,
+                    base: parse_num(args[1], line_no)?,
+                    vidx: parse_vreg(args[2], line_no)?,
+                })
+            }
+            "vfadd.vv" | "vfsub.vv" | "vfmul.vv" | "vfmacc.vv" | "vfnmsac.vv" => {
+                need(3)?;
+                let vd = parse_vreg(args[0], line_no)?;
+                let vs1 = parse_vreg(args[1], line_no)?;
+                let vs2 = parse_vreg(args[2], line_no)?;
+                Vector(match mnemonic {
+                    "vfadd.vv" => AddVV { vd, vs1, vs2 },
+                    "vfsub.vv" => SubVV { vd, vs1, vs2 },
+                    "vfmul.vv" => MulVV { vd, vs1, vs2 },
+                    "vfmacc.vv" => MacVV { vd, vs1, vs2 },
+                    _ => NmsacVV { vd, vs1, vs2 },
+                })
+            }
+            "vfadd.vf" | "vfmul.vf" | "vfmacc.vf" => {
+                need(3)?;
+                let vd = parse_vreg(args[0], line_no)?;
+                let vs = parse_vreg(args[1], line_no)?;
+                let f: f32 = parse_num(args[2], line_no)?;
+                Vector(match mnemonic {
+                    "vfadd.vf" => AddVF { vd, vs, f },
+                    "vfmul.vf" => MulVF { vd, vs, f },
+                    _ => MacVF { vd, vs, f },
+                })
+            }
+            "vfmv.v.f" => {
+                need(2)?;
+                Vector(MovVF {
+                    vd: parse_vreg(args[0], line_no)?,
+                    f: parse_num(args[1], line_no)?,
+                })
+            }
+            "vmv.v.v" => {
+                need(2)?;
+                Vector(MovVV {
+                    vd: parse_vreg(args[0], line_no)?,
+                    vs: parse_vreg(args[1], line_no)?,
+                })
+            }
+            "vfredusum.vs" => {
+                need(2)?;
+                Vector(RedSum {
+                    vd: parse_vreg(args[0], line_no)?,
+                    vs: parse_vreg(args[1], line_no)?,
+                })
+            }
+            other => return Err(err(line_no, format!("unknown mnemonic: {other}"))),
+        };
+        prog.push(instr);
+    }
+    Ok(prog)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testutil::{check, Gen};
+
+    fn sample_program() -> Program {
+        let mut p = Program::new("sample");
+        p.vector(VectorOp::SetVl { avl: 128, ew: ElemWidth::E32, lmul: Lmul::M8 });
+        p.vector(VectorOp::Load { vd: VReg(8), base: 4096, stride: 1 });
+        p.vector(VectorOp::Load { vd: VReg(16), base: 8192, stride: 4 });
+        p.vector(VectorOp::MacVV { vd: VReg(24), vs1: VReg(8), vs2: VReg(16) });
+        p.vector(VectorOp::MacVF { vd: VReg(24), vs: VReg(8), f: 0.1 });
+        p.vector(VectorOp::Store { vs: VReg(24), base: 12288, stride: 1 });
+        p.scalar(ScalarOp::Alu);
+        p.scalar(ScalarOp::Load { addr: 64 });
+        p.scalar(ScalarOp::Branch { taken: true });
+        p.push(Instr::Fence);
+        p.push(Instr::Barrier);
+        p.push(Instr::Halt);
+        p
+    }
+
+    #[test]
+    fn roundtrip_sample() {
+        let p = sample_program();
+        let text = print_program(&p);
+        let q = parse_program(&text).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn parses_name_header() {
+        let q = parse_program("# my kernel\nhalt\n").unwrap();
+        assert_eq!(q.name, "my kernel");
+    }
+
+    #[test]
+    fn rejects_unknown_mnemonic() {
+        assert!(parse_program("frobnicate v0\n").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_operand_count() {
+        assert!(parse_program("vfadd.vv v0, v8\n").is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_vreg() {
+        assert!(parse_program("vmv.v.v v0, v32\n").is_err());
+    }
+
+    #[test]
+    fn error_carries_line_number() {
+        let e = parse_program("halt\nbogus\n").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn float_immediates_roundtrip_exactly() {
+        // shortest-round-trip formatting must survive parse for awkward
+        // values
+        for bits in [0x3f80_0001u32, 0x0000_0001, 0x7f7f_ffff, 0xbf99_999a] {
+            let f = f32::from_bits(bits);
+            let mut p = Program::new("f");
+            p.vector(VectorOp::MovVF { vd: VReg(0), f });
+            p.push(Instr::Halt);
+            let q = parse_program(&print_program(&p)).unwrap();
+            match q.instrs[0] {
+                Instr::Vector(VectorOp::MovVF { f: g, .. }) => {
+                    assert_eq!(f.to_bits(), g.to_bits())
+                }
+                _ => panic!("wrong instr"),
+            }
+        }
+    }
+
+    /// Property: print → parse is the identity on random programs.
+    #[test]
+    fn prop_roundtrip_random_programs() {
+        fn arb_vreg(g: &mut Gen, lmul: usize) -> VReg {
+            let groups = 32 / lmul;
+            VReg((g.int(0, groups - 1) * lmul) as u8)
+        }
+        check("asm roundtrip", 200, |g| {
+            let lmul = *g.choose(&[1usize, 2, 4, 8]);
+            let mut p = Program::new("prop");
+            p.vector(VectorOp::SetVl {
+                avl: g.int(1, 256) as u32,
+                ew: ElemWidth::E32,
+                lmul: Lmul::from_factor(lmul).unwrap(),
+            });
+            let n = g.int(1, 30);
+            for _ in 0..n {
+                let vd = arb_vreg(g, lmul);
+                let vs1 = arb_vreg(g, lmul);
+                let vs2 = arb_vreg(g, lmul);
+                let op = match g.int(0, 9) {
+                    0 => VectorOp::Load { vd, base: g.int(0, 1 << 16) as u32, stride: g.int(1, 8) as i32 },
+                    1 => VectorOp::Store { vs: vd, base: g.int(0, 1 << 16) as u32, stride: 1 },
+                    2 => VectorOp::AddVV { vd, vs1, vs2 },
+                    3 => VectorOp::SubVV { vd, vs1, vs2 },
+                    4 => VectorOp::MulVV { vd, vs1, vs2 },
+                    5 => VectorOp::MacVV { vd, vs1, vs2 },
+                    6 => VectorOp::MacVF { vd, vs: vs1, f: g.f32(100.0) },
+                    7 => VectorOp::MovVF { vd, f: g.f32(1.0) },
+                    8 => VectorOp::LoadIndexed { vd, base: g.int(0, 1 << 12) as u32, vidx: vs1 },
+                    _ => VectorOp::RedSum { vd, vs: vs1 },
+                };
+                p.vector(op);
+            }
+            p.push(Instr::Halt);
+            let text = print_program(&p);
+            let q = parse_program(&text).unwrap_or_else(|e| panic!("parse failed: {e}\n{text}"));
+            assert_eq!(p, q);
+        });
+    }
+}

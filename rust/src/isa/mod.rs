@@ -1,0 +1,452 @@
+//! The RVV-like instruction representation executed by the simulator.
+//!
+//! Kernels are emitted by generators ([`crate::kernels`]) directly in this
+//! IR — fully strip-mined and unrolled with concrete addresses and scalar
+//! operands, mirroring what the RVV compiler + scalar address computation
+//! would feed the accelerator interface at runtime. The scalar side of
+//! each loop (address bumps, branches) is represented by explicit
+//! [`ScalarOp`] instructions so the Snitch front-end cost is modeled.
+//!
+//! Element type support is fp32 plus u32 (byte-offset indices for
+//! gather/scatter) — the width the paper's kernels exercise on Spatz's
+//! 32-bit lanes. The enum is deliberately width-extensible (`ElemWidth`).
+//!
+//! A text assembly format with a parser and printer lives in [`asm`].
+
+pub mod asm;
+
+use crate::config::Mode;
+
+/// Element width selector (SEW).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ElemWidth {
+    E32,
+}
+
+impl ElemWidth {
+    pub fn bits(self) -> usize {
+        match self {
+            ElemWidth::E32 => 32,
+        }
+    }
+    pub fn bytes(self) -> usize {
+        self.bits() / 8
+    }
+}
+
+/// Register group multiplier (LMUL >= 1 only; Spatz kernels use large
+/// LMUL to amortize instruction dispatch).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Lmul {
+    M1,
+    M2,
+    M4,
+    M8,
+}
+
+impl Lmul {
+    pub fn factor(self) -> usize {
+        match self {
+            Lmul::M1 => 1,
+            Lmul::M2 => 2,
+            Lmul::M4 => 4,
+            Lmul::M8 => 8,
+        }
+    }
+    pub fn from_factor(f: usize) -> Option<Self> {
+        match f {
+            1 => Some(Lmul::M1),
+            2 => Some(Lmul::M2),
+            4 => Some(Lmul::M4),
+            8 => Some(Lmul::M8),
+            _ => None,
+        }
+    }
+}
+
+/// A vector register name (v0..v31). With LMUL > 1 the register must be
+/// aligned to the group size, as in RVV.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct VReg(pub u8);
+
+impl VReg {
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl std::fmt::Display for VReg {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "v{}", self.0)
+    }
+}
+
+/// Vector instructions. Memory operands carry concrete TCDM byte
+/// addresses; scalar (`.vf`) operands carry concrete f32 values — both
+/// are what the scalar core would hand the accelerator port at issue
+/// time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum VectorOp {
+    /// `vsetvli` — request `avl` elements; the unit grants
+    /// `vl = min(avl, VLMAX)`. Subsequent ops use the granted vl.
+    SetVl { avl: u32, ew: ElemWidth, lmul: Lmul },
+    /// Unit/strided load: `vd[i] = mem[base + i*stride*esize]`
+    /// (stride in elements; 1 = unit-stride).
+    Load { vd: VReg, base: u32, stride: i32 },
+    /// Unit/strided store.
+    Store { vs: VReg, base: u32, stride: i32 },
+    /// Indexed (gather) load: `vd[i] = mem[base + idx[i]]` where `idx`
+    /// holds u32 *byte* offsets (vluxei32 semantics).
+    LoadIndexed { vd: VReg, base: u32, vidx: VReg },
+    /// Indexed (scatter) store.
+    StoreIndexed { vs: VReg, base: u32, vidx: VReg },
+    /// fp32 vector-vector arithmetic.
+    AddVV { vd: VReg, vs1: VReg, vs2: VReg },
+    SubVV { vd: VReg, vs1: VReg, vs2: VReg },
+    MulVV { vd: VReg, vs1: VReg, vs2: VReg },
+    /// `vfmacc.vv`: vd[i] += vs1[i] * vs2[i]
+    MacVV { vd: VReg, vs1: VReg, vs2: VReg },
+    /// `vfnmsac.vv`: vd[i] -= vs1[i] * vs2[i]
+    NmsacVV { vd: VReg, vs1: VReg, vs2: VReg },
+    /// fp32 vector-scalar arithmetic (scalar from the issuing core).
+    AddVF { vd: VReg, vs: VReg, f: f32 },
+    MulVF { vd: VReg, vs: VReg, f: f32 },
+    /// `vfmacc.vf`: vd[i] += f * vs[i]
+    MacVF { vd: VReg, vs: VReg, f: f32 },
+    /// Broadcast scalar: vd[i] = f (`vfmv.v.f`).
+    MovVF { vd: VReg, f: f32 },
+    /// Register move (`vmv.v.v`).
+    MovVV { vd: VReg, vs: VReg },
+    /// Ordered sum reduction: vd[0] = sum(vs[0..vl]) (`vfredusum`,
+    /// with vs2 = zero). In merge mode this requires a cross-unit merge.
+    RedSum { vd: VReg, vs: VReg },
+}
+
+/// Fixed-capacity source-register list (at most 3 sources in RVV ops);
+/// avoids heap allocation on the hazard-check hot path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SrcList {
+    regs: [VReg; 3],
+    len: u8,
+}
+
+impl SrcList {
+    pub fn new(regs: &[VReg]) -> Self {
+        debug_assert!(regs.len() <= 3);
+        let mut buf = [VReg(0); 3];
+        buf[..regs.len()].copy_from_slice(regs);
+        Self { regs: buf, len: regs.len() as u8 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn contains(&self, r: &VReg) -> bool {
+        self.as_slice().contains(r)
+    }
+
+    pub fn as_slice(&self) -> &[VReg] {
+        &self.regs[..self.len as usize]
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = VReg> + '_ {
+        self.as_slice().iter().copied()
+    }
+}
+
+/// Coarse class of a vector op — drives timing occupancy and energy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum VecOpClass {
+    Config,
+    MemLoad,
+    MemStore,
+    Alu,
+    Mul,
+    Mac,
+    Move,
+    Reduction,
+}
+
+impl VectorOp {
+    pub fn class(&self) -> VecOpClass {
+        use VectorOp::*;
+        match self {
+            SetVl { .. } => VecOpClass::Config,
+            Load { .. } | LoadIndexed { .. } => VecOpClass::MemLoad,
+            Store { .. } | StoreIndexed { .. } => VecOpClass::MemStore,
+            AddVV { .. } | SubVV { .. } | AddVF { .. } => VecOpClass::Alu,
+            MulVV { .. } | MulVF { .. } => VecOpClass::Mul,
+            MacVV { .. } | NmsacVV { .. } | MacVF { .. } => VecOpClass::Mac,
+            MovVF { .. } | MovVV { .. } => VecOpClass::Move,
+            RedSum { .. } => VecOpClass::Reduction,
+        }
+    }
+
+    /// Destination register group, if any.
+    pub fn dest(&self) -> Option<VReg> {
+        use VectorOp::*;
+        match *self {
+            SetVl { .. } | Store { .. } | StoreIndexed { .. } => None,
+            Load { vd, .. }
+            | LoadIndexed { vd, .. }
+            | AddVV { vd, .. }
+            | SubVV { vd, .. }
+            | MulVV { vd, .. }
+            | MacVV { vd, .. }
+            | NmsacVV { vd, .. }
+            | AddVF { vd, .. }
+            | MulVF { vd, .. }
+            | MacVF { vd, .. }
+            | MovVF { vd, .. }
+            | MovVV { vd, .. }
+            | RedSum { vd, .. } => Some(vd),
+        }
+    }
+
+    /// Source register groups (including accumulator destinations that
+    /// are read-modify-write, e.g. vfmacc's vd). Allocation-free: this
+    /// sits on the simulator's per-cycle hazard-check path.
+    pub fn sources(&self) -> SrcList {
+        use VectorOp::*;
+        match *self {
+            SetVl { .. } | MovVF { .. } | Load { .. } => SrcList::new(&[]),
+            Store { vs, .. } => SrcList::new(&[vs]),
+            LoadIndexed { vidx, .. } => SrcList::new(&[vidx]),
+            StoreIndexed { vs, vidx, .. } => SrcList::new(&[vs, vidx]),
+            AddVV { vs1, vs2, .. } | SubVV { vs1, vs2, .. } | MulVV { vs1, vs2, .. } => {
+                SrcList::new(&[vs1, vs2])
+            }
+            MacVV { vd, vs1, vs2 } | NmsacVV { vd, vs1, vs2 } => SrcList::new(&[vd, vs1, vs2]),
+            AddVF { vs, .. } | MulVF { vs, .. } => SrcList::new(&[vs]),
+            MacVF { vd, vs, .. } => SrcList::new(&[vd, vs]),
+            MovVV { vs, .. } => SrcList::new(&[vs]),
+            RedSum { vs, .. } => SrcList::new(&[vs]),
+        }
+    }
+
+    /// True when the op accesses the TCDM.
+    pub fn is_mem(&self) -> bool {
+        matches!(self.class(), VecOpClass::MemLoad | VecOpClass::MemStore)
+    }
+}
+
+/// Scalar instruction classes executed by the Snitch core timing model.
+/// Memory ops carry concrete addresses so they contend on real TCDM banks.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ScalarOp {
+    /// Single-cycle integer ALU op (add/sub/shift/logic/addi...).
+    Alu,
+    /// Integer multiply.
+    Mul,
+    /// Integer divide.
+    Div,
+    /// Load word from TCDM.
+    Load { addr: u32 },
+    /// Store word to TCDM.
+    Store { addr: u32 },
+    /// Conditional branch; `taken` decides whether the penalty applies.
+    Branch { taken: bool },
+    /// CSR read/write.
+    Csr,
+    Nop,
+}
+
+/// One instruction of a core's program stream.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Instr {
+    Scalar(ScalarOp),
+    /// Offloaded to the vector unit through the accelerator queue.
+    Vector(VectorOp),
+    /// Wait until this core's vector unit(s) are fully drained.
+    Fence,
+    /// Cluster hardware barrier (all participating cores).
+    Barrier,
+    /// Runtime mode switch (Spatzformer only). Implies a fence on both
+    /// vector units before the switch takes effect.
+    SetMode(Mode),
+    /// End of stream.
+    Halt,
+}
+
+/// A core's program: a flat instruction stream.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Program {
+    pub name: String,
+    pub instrs: Vec<Instr>,
+}
+
+impl Program {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            instrs: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, i: Instr) {
+        self.instrs.push(i);
+    }
+
+    pub fn scalar(&mut self, op: ScalarOp) {
+        self.push(Instr::Scalar(op));
+    }
+
+    pub fn vector(&mut self, op: VectorOp) {
+        self.push(Instr::Vector(op));
+    }
+
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+
+    /// Number of vector instructions (dispatch count — the quantity MM
+    /// amortizes over a longer vl).
+    pub fn vector_count(&self) -> usize {
+        self.instrs
+            .iter()
+            .filter(|i| matches!(i, Instr::Vector(_)))
+            .count()
+    }
+
+    /// An empty halted program (idle core).
+    pub fn idle() -> Self {
+        let mut p = Self::new("idle");
+        p.push(Instr::Halt);
+        p
+    }
+
+    /// Static checks: LMUL alignment of register groups, in-bounds
+    /// registers, Halt-terminated.
+    pub fn validate(&self, vregs: usize) -> anyhow::Result<()> {
+        let mut lmul = Lmul::M1;
+        for (pc, instr) in self.instrs.iter().enumerate() {
+            if let Instr::Vector(op) = instr {
+                if let VectorOp::SetVl { lmul: l, .. } = op {
+                    lmul = *l;
+                }
+                let group = lmul.factor();
+                let mut regs: Vec<VReg> = op.sources().as_slice().to_vec();
+                if let Some(d) = op.dest() {
+                    regs.push(d);
+                }
+                for r in regs {
+                    anyhow::ensure!(
+                        r.index() < vregs,
+                        "{}: pc {pc}: register {r} out of range",
+                        self.name
+                    );
+                    anyhow::ensure!(
+                        r.index() % group == 0,
+                        "{}: pc {pc}: register {r} not aligned to LMUL={group}",
+                        self.name
+                    );
+                    anyhow::ensure!(
+                        r.index() + group <= vregs,
+                        "{}: pc {pc}: register group {r}..+{group} exceeds file",
+                        self.name
+                    );
+                }
+            }
+        }
+        anyhow::ensure!(
+            matches!(self.instrs.last(), Some(Instr::Halt)),
+            "{}: program must end with halt",
+            self.name
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classes_are_assigned() {
+        let v = VReg(8);
+        assert_eq!(
+            VectorOp::Load { vd: v, base: 0, stride: 1 }.class(),
+            VecOpClass::MemLoad
+        );
+        assert_eq!(
+            VectorOp::MacVV { vd: v, vs1: VReg(16), vs2: VReg(24) }.class(),
+            VecOpClass::Mac
+        );
+        assert_eq!(
+            VectorOp::SetVl { avl: 4, ew: ElemWidth::E32, lmul: Lmul::M1 }.class(),
+            VecOpClass::Config
+        );
+    }
+
+    #[test]
+    fn mac_reads_its_destination() {
+        let op = VectorOp::MacVV { vd: VReg(0), vs1: VReg(8), vs2: VReg(16) };
+        assert!(op.sources().contains(&VReg(0)));
+        assert_eq!(op.dest(), Some(VReg(0)));
+    }
+
+    #[test]
+    fn store_has_no_dest() {
+        let op = VectorOp::Store { vs: VReg(8), base: 64, stride: 1 };
+        assert_eq!(op.dest(), None);
+        assert!(op.is_mem());
+    }
+
+    #[test]
+    fn lmul_roundtrip() {
+        for f in [1, 2, 4, 8] {
+            assert_eq!(Lmul::from_factor(f).unwrap().factor(), f);
+        }
+        assert!(Lmul::from_factor(3).is_none());
+    }
+
+    #[test]
+    fn program_validation_checks_alignment() {
+        let mut p = Program::new("t");
+        p.vector(VectorOp::SetVl { avl: 64, ew: ElemWidth::E32, lmul: Lmul::M8 });
+        p.vector(VectorOp::AddVV { vd: VReg(8), vs1: VReg(16), vs2: VReg(24) });
+        p.push(Instr::Halt);
+        p.validate(32).unwrap();
+
+        let mut bad = Program::new("bad");
+        bad.vector(VectorOp::SetVl { avl: 64, ew: ElemWidth::E32, lmul: Lmul::M8 });
+        bad.vector(VectorOp::AddVV { vd: VReg(4), vs1: VReg(16), vs2: VReg(24) });
+        bad.push(Instr::Halt);
+        assert!(bad.validate(32).is_err());
+    }
+
+    #[test]
+    fn program_must_halt() {
+        let mut p = Program::new("nohalt");
+        p.scalar(ScalarOp::Alu);
+        assert!(p.validate(32).is_err());
+    }
+
+    #[test]
+    fn register_group_overflow_rejected() {
+        let mut p = Program::new("overflow");
+        p.vector(VectorOp::SetVl { avl: 64, ew: ElemWidth::E32, lmul: Lmul::M8 });
+        p.vector(VectorOp::MovVV { vd: VReg(24), vs: VReg(32) });
+        p.push(Instr::Halt);
+        assert!(p.validate(32).is_err());
+    }
+
+    #[test]
+    fn vector_count_counts_only_vector_instrs() {
+        let mut p = Program::new("t");
+        p.scalar(ScalarOp::Alu);
+        p.vector(VectorOp::MovVF { vd: VReg(0), f: 1.0 });
+        p.push(Instr::Fence);
+        p.push(Instr::Halt);
+        assert_eq!(p.vector_count(), 1);
+    }
+}

@@ -1,0 +1,141 @@
+//! conv2d: 3x3 valid cross-correlation over a 64x64 fp32 image
+//! (output 62x62) — the ML kernel of the suite.
+//!
+//! Each output row is a vector (vl = 62, LMUL=4); the nine taps are
+//! `vfmacc.vf` over shifted input-row loads. Output rows are split
+//! across cores in split-dual mode (disjoint outputs, no barriers).
+
+use super::{gen_input, loop_overhead, Alloc, Deployment, KernelId, KernelInstance};
+use crate::config::ClusterConfig;
+use crate::isa::{ElemWidth, Instr, Lmul, Program, ScalarOp, VReg, VectorOp};
+
+pub const IN: usize = 64;
+pub const KDIM: usize = 3;
+pub const OUT: usize = IN - KDIM + 1; // 62
+
+pub fn flops() -> u64 {
+    (OUT * OUT * KDIM * KDIM * 2) as u64
+}
+
+pub fn build(cfg: &ClusterConfig, deploy: Deployment, seed: u64) -> KernelInstance {
+    let img = gen_input(seed, 0x51, IN * IN, -1.0, 1.0);
+    let ker = gen_input(seed, 0x52, KDIM * KDIM, -0.5, 0.5);
+
+    let mut alloc = Alloc::new(cfg);
+    let img_base = alloc.words(IN * IN);
+    let out_base = alloc.words(OUT * OUT);
+
+    let ranges: [(usize, usize); 2] = match deploy {
+        Deployment::SplitDual => [(0, OUT / 2), (OUT / 2, OUT)],
+        _ => [(0, OUT), (0, 0)],
+    };
+
+    let mut programs: [Program; 2] = [
+        Program::new(&format!("conv2d-{}-c0", deploy.name())),
+        Program::new(&format!("conv2d-{}-c1", deploy.name())),
+    ];
+    for (core, &(lo, hi)) in ranges.iter().enumerate() {
+        let p = &mut programs[core];
+        if lo < hi {
+            p.scalar(ScalarOp::Alu);
+            p.scalar(ScalarOp::Alu);
+            p.vector(VectorOp::SetVl { avl: OUT as u32, ew: ElemWidth::E32, lmul: Lmul::M4 });
+            for i in lo..hi {
+                p.vector(VectorOp::MovVF { vd: VReg(8), f: 0.0 });
+                for ki in 0..KDIM {
+                    for kj in 0..KDIM {
+                        p.vector(VectorOp::Load {
+                            vd: VReg(4),
+                            base: img_base + (((i + ki) * IN + kj) * 4) as u32,
+                            stride: 1,
+                        });
+                        p.vector(VectorOp::MacVF {
+                            vd: VReg(8),
+                            vs: VReg(4),
+                            f: ker[ki * KDIM + kj],
+                        });
+                    }
+                    loop_overhead(p, ki + 1 < KDIM);
+                }
+                p.vector(VectorOp::Store {
+                    vs: VReg(8),
+                    base: out_base + (i * OUT * 4) as u32,
+                    stride: 1,
+                });
+                loop_overhead(p, i + 1 < hi);
+            }
+            p.push(Instr::Fence);
+        }
+        p.push(Instr::Halt);
+    }
+
+    KernelInstance {
+        id: KernelId::Conv2d,
+        deploy,
+        programs,
+        staging_f32: vec![(img_base, img.clone())],
+        staging_u32: vec![],
+        artifact_inputs: vec![img, ker],
+        outputs: vec![(out_base, OUT * OUT)],
+        flops: flops(),
+    }
+}
+
+/// Valid-mode cross-correlation oracle (same tap order as the kernel).
+pub fn reference(inputs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let img = &inputs[0];
+    let ker = &inputs[1];
+    let mut out = vec![0.0f32; OUT * OUT];
+    for i in 0..OUT {
+        for ki in 0..KDIM {
+            for kj in 0..KDIM {
+                let w = ker[ki * KDIM + kj];
+                for j in 0..OUT {
+                    out[i * OUT + j] += w * img[(i + ki) * IN + (kj + j)];
+                }
+            }
+        }
+    }
+    vec![out]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::config::SimConfig;
+    use crate::kernels::execute;
+    use crate::util::stats::assert_allclose;
+
+    fn run(deploy: Deployment) -> u64 {
+        let cfg = SimConfig::spatzformer();
+        let inst = build(&cfg.cluster, deploy, 5);
+        let mut cl = Cluster::new(cfg).unwrap();
+        let (m, out) = execute(&mut cl, &inst).unwrap();
+        let want = reference(&inst.artifact_inputs);
+        assert_allclose(&out[0], &want[0], 1e-4, 1e-5);
+        m.cycles
+    }
+
+    #[test]
+    fn split_dual_matches_reference() {
+        run(Deployment::SplitDual);
+    }
+
+    #[test]
+    fn split_single_matches_reference() {
+        run(Deployment::SplitSingle);
+    }
+
+    #[test]
+    fn merge_matches_reference() {
+        run(Deployment::Merge);
+    }
+
+    #[test]
+    fn dual_is_faster_than_single() {
+        let dual = run(Deployment::SplitDual);
+        let single = run(Deployment::SplitSingle);
+        assert!(single as f64 > 1.5 * dual as f64, "single={single} dual={dual}");
+    }
+}

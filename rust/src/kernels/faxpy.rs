@@ -1,0 +1,123 @@
+//! faxpy: y[i] += alpha * x[i], n = 8192, fp32.
+//!
+//! The memory-bound end of the suite (arithmetic intensity 2 FLOP /
+//! 3 words): each strip is two unit-stride loads, one `vfmacc.vf` and a
+//! store. Merge mode halves the strip count (vl doubles), which is
+//! exactly the instruction-fetch amortization the paper credits MM with.
+
+use super::{gen_input, loop_overhead, max_vl, Alloc, Deployment, KernelId, KernelInstance};
+use crate::config::ClusterConfig;
+use crate::isa::{ElemWidth, Instr, Lmul, Program, ScalarOp, VReg, VectorOp};
+
+pub const N: usize = 8192;
+pub const ALPHA: f32 = 0.75;
+
+pub fn flops() -> u64 {
+    (2 * N) as u64
+}
+
+pub fn build(cfg: &ClusterConfig, deploy: Deployment, seed: u64) -> KernelInstance {
+    let x = gen_input(seed, 0x31, N, -2.0, 2.0);
+    let y = gen_input(seed, 0x32, N, -2.0, 2.0);
+
+    let mut alloc = Alloc::new(cfg);
+    let x_base = alloc.words(N);
+    let y_base = alloc.words(N);
+
+    let vl = max_vl(cfg, deploy);
+    // Strips are assigned round-robin across the active cores
+    // (static,1 strip-mined scheduling): the two LSUs then stream one
+    // full strip apart and do not collide on banks.
+    let nstrips = N / vl as usize;
+    let strips: [Vec<usize>; 2] = match deploy {
+        Deployment::SplitDual => [
+            (0..nstrips).step_by(2).collect(),
+            (1..nstrips).step_by(2).collect(),
+        ],
+        _ => [(0..nstrips).collect(), Vec::new()],
+    };
+
+    let mut programs: [Program; 2] = [
+        Program::new(&format!("faxpy-{}-c0", deploy.name())),
+        Program::new(&format!("faxpy-{}-c1", deploy.name())),
+    ];
+    for (core, mine) in strips.iter().enumerate() {
+        let p = &mut programs[core];
+        if !mine.is_empty() {
+            p.scalar(ScalarOp::Alu);
+            p.vector(VectorOp::SetVl { avl: vl, ew: ElemWidth::E32, lmul: Lmul::M8 });
+            for (si, &strip) in mine.iter().enumerate() {
+                let off = strip * vl as usize;
+                p.vector(VectorOp::Load { vd: VReg(8), base: x_base + (off * 4) as u32, stride: 1 });
+                p.vector(VectorOp::Load { vd: VReg(16), base: y_base + (off * 4) as u32, stride: 1 });
+                p.vector(VectorOp::MacVF { vd: VReg(16), vs: VReg(8), f: ALPHA });
+                p.vector(VectorOp::Store { vs: VReg(16), base: y_base + (off * 4) as u32, stride: 1 });
+                loop_overhead(p, si + 1 < mine.len());
+            }
+            p.push(Instr::Fence);
+        }
+        p.push(Instr::Halt);
+    }
+
+    KernelInstance {
+        id: KernelId::Faxpy,
+        deploy,
+        programs,
+        staging_f32: vec![(x_base, x.clone()), (y_base, y.clone())],
+        staging_u32: vec![],
+        artifact_inputs: vec![vec![ALPHA], x, y],
+        outputs: vec![(y_base, N)],
+        flops: flops(),
+    }
+}
+
+pub fn reference(inputs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let alpha = inputs[0][0];
+    let x = &inputs[1];
+    let y = &inputs[2];
+    vec![x.iter().zip(y.iter()).map(|(&xi, &yi)| yi + alpha * xi).collect()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::config::SimConfig;
+    use crate::kernels::execute;
+    use crate::util::stats::assert_allclose;
+
+    fn run(deploy: Deployment) -> (u64, u64) {
+        let cfg = SimConfig::spatzformer();
+        let inst = build(&cfg.cluster, deploy, 3);
+        let mut cl = Cluster::new(cfg).unwrap();
+        let (m, out) = execute(&mut cl, &inst).unwrap();
+        let want = reference(&inst.artifact_inputs);
+        assert_allclose(&out[0], &want[0], 1e-6, 1e-6);
+        (m.cycles, m.counters.scalar_ifetch)
+    }
+
+    #[test]
+    fn all_deployments_match_reference() {
+        run(Deployment::SplitDual);
+        run(Deployment::SplitSingle);
+        run(Deployment::Merge);
+    }
+
+    #[test]
+    fn merge_fetches_fewer_instructions_than_split_dual() {
+        let (_, dual_fetch) = run(Deployment::SplitDual);
+        let (_, merge_fetch) = run(Deployment::Merge);
+        assert!(
+            (merge_fetch as f64) < 0.7 * dual_fetch as f64,
+            "merge={merge_fetch} dual={dual_fetch}"
+        );
+    }
+
+    #[test]
+    fn merge_performance_close_to_split_dual() {
+        let (dual, _) = run(Deployment::SplitDual);
+        let (merge, _) = run(Deployment::Merge);
+        let ratio = merge as f64 / dual as f64;
+        assert!((0.7..1.35).contains(&ratio), "merge/dual = {ratio}");
+    }
+}

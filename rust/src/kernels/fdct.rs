@@ -1,0 +1,261 @@
+//! fdct: blockwise 8x8 2-D DCT-II over a 64x64 fp32 image (JPEG-style) —
+//! the DSP/compression kernel of the suite.
+//!
+//! Computed as two 1-D passes with transposes:
+//!
+//! ```text
+//! T   = blockdiag(D) * X          (pass A: vl = 64 row vectors)
+//! T2  = T^t                       (strided-load transpose)
+//! T3  = blockdiag(D) * T2         (pass A again)
+//! out = T3^t                      (transpose back)
+//! ```
+//!
+//! which is `Y_b = D X_b D^t` per 8x8 block. The strided transpose loads
+//! exercise TCDM bank conflicts (stride 64 words aliases to one bank) —
+//! deliberate: the paper's kernel set spans "various degrees of data
+//! reuse", and fdct is the pathological-stride representative.
+//!
+//! split-dual: block-rows/columns split across cores with barriers
+//! between the four phases; merge: single stream, no barriers.
+
+use super::{gen_input, loop_overhead, Alloc, Deployment, KernelId, KernelInstance};
+use crate::config::ClusterConfig;
+use crate::isa::{ElemWidth, Instr, Lmul, Program, ScalarOp, VReg, VectorOp};
+
+pub const DIM: usize = 64;
+pub const B: usize = 8; // block edge
+
+pub fn flops() -> u64 {
+    // two passes x (8 block-rows x 8 u x 8 r) MACs over 64-wide rows
+    (2 * 8 * B * B * DIM * 2) as u64
+}
+
+/// The 8x8 DCT-II matrix.
+pub fn dct_matrix() -> [[f32; B]; B] {
+    let mut d = [[0.0f32; B]; B];
+    for (u, row) in d.iter_mut().enumerate() {
+        for (c, v) in row.iter_mut().enumerate() {
+            let scale = if u == 0 {
+                (1.0 / B as f64).sqrt()
+            } else {
+                (2.0 / B as f64).sqrt()
+            };
+            *v = (scale
+                * ((2.0 * c as f64 + 1.0) * u as f64 * std::f64::consts::PI / (2.0 * B as f64))
+                    .cos()) as f32;
+        }
+    }
+    d
+}
+
+/// Emit pass A: dst = blockdiag(D) * src, row-split [lo, hi) block-rows.
+fn emit_pass(p: &mut Program, d: &[[f32; B]; B], src: u32, dst: u32, lo: usize, hi: usize) {
+    p.vector(VectorOp::SetVl { avl: DIM as u32, ew: ElemWidth::E32, lmul: Lmul::M4 });
+    for br in lo..hi {
+        for u in 0..B {
+            p.vector(VectorOp::MovVF { vd: VReg(8), f: 0.0 });
+            for r in 0..B {
+                p.vector(VectorOp::Load {
+                    vd: VReg(4),
+                    base: src + ((br * B + r) * DIM * 4) as u32,
+                    stride: 1,
+                });
+                p.vector(VectorOp::MacVF { vd: VReg(8), vs: VReg(4), f: d[u][r] });
+            }
+            p.vector(VectorOp::Store {
+                vs: VReg(8),
+                base: dst + ((br * B + u) * DIM * 4) as u32,
+                stride: 1,
+            });
+            loop_overhead(p, u + 1 < B || br + 1 < hi);
+        }
+    }
+}
+
+/// Emit transpose: dst = src^t, column-split [lo, hi).
+fn emit_transpose(p: &mut Program, src: u32, dst: u32, lo: usize, hi: usize) {
+    p.vector(VectorOp::SetVl { avl: DIM as u32, ew: ElemWidth::E32, lmul: Lmul::M4 });
+    for j in lo..hi {
+        p.vector(VectorOp::Load {
+            vd: VReg(4),
+            base: src + (j * 4) as u32,
+            stride: DIM as i32,
+        });
+        p.vector(VectorOp::Store {
+            vs: VReg(4),
+            base: dst + (j * DIM * 4) as u32,
+            stride: 1,
+        });
+        loop_overhead(p, j + 1 < hi);
+    }
+}
+
+pub fn build(cfg: &ClusterConfig, deploy: Deployment, seed: u64) -> KernelInstance {
+    let img = gen_input(seed, 0x61, DIM * DIM, -1.0, 1.0);
+    let d = dct_matrix();
+
+    let mut alloc = Alloc::new(cfg);
+    let img_base = alloc.words(DIM * DIM);
+    let t_base = alloc.words(DIM * DIM);
+    let t2_base = alloc.words(DIM * DIM);
+    let out_base = alloc.words(DIM * DIM);
+
+    let dual = deploy == Deployment::SplitDual;
+    let br_ranges: [(usize, usize); 2] = if dual { [(0, 4), (4, 8)] } else { [(0, 8), (0, 0)] };
+    let col_ranges: [(usize, usize); 2] =
+        if dual { [(0, DIM / 2), (DIM / 2, DIM)] } else { [(0, DIM), (0, 0)] };
+
+    let mut programs: [Program; 2] = [
+        Program::new(&format!("fdct-{}-c0", deploy.name())),
+        Program::new(&format!("fdct-{}-c1", deploy.name())),
+    ];
+    for core in 0..2 {
+        let p = &mut programs[core];
+        let (blo, bhi) = br_ranges[core];
+        let (clo, chi) = col_ranges[core];
+        let active = blo < bhi;
+        p.scalar(ScalarOp::Alu);
+        // Phase boundaries: split-dual exchanges data between cores and
+        // must drain + barrier; a single hart's in-order LSUs (and the MM
+        // retire-merge stage) keep phase stores ahead of the next phase's
+        // loads without software synchronization.
+        // phase 1: T = blockdiag(D) * X
+        if active {
+            emit_pass(p, &d, img_base, t_base, blo, bhi);
+            if dual {
+                p.push(Instr::Fence);
+            }
+        }
+        if dual {
+            p.push(Instr::Barrier);
+        }
+        // phase 2: T2 = T^t
+        if active {
+            emit_transpose(p, t_base, t2_base, clo, chi);
+            if dual {
+                p.push(Instr::Fence);
+            }
+        }
+        if dual {
+            p.push(Instr::Barrier);
+        }
+        // phase 3: T = blockdiag(D) * T2 (reuse T)
+        if active {
+            emit_pass(p, &d, t2_base, t_base, blo, bhi);
+            if dual {
+                p.push(Instr::Fence);
+            }
+        }
+        if dual {
+            p.push(Instr::Barrier);
+        }
+        // phase 4: out = T^t
+        if active {
+            emit_transpose(p, t_base, out_base, clo, chi);
+            p.push(Instr::Fence);
+        }
+        p.push(Instr::Halt);
+    }
+
+    KernelInstance {
+        id: KernelId::Fdct,
+        deploy,
+        programs,
+        staging_f32: vec![(img_base, img.clone())],
+        staging_u32: vec![],
+        artifact_inputs: vec![img],
+        outputs: vec![(out_base, DIM * DIM)],
+        flops: flops(),
+    }
+}
+
+/// Oracle: identical two-pass structure in f32.
+pub fn reference(inputs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let img = &inputs[0];
+    let d = dct_matrix();
+    let pass = |src: &[f32]| -> Vec<f32> {
+        let mut dst = vec![0.0f32; DIM * DIM];
+        for br in 0..8 {
+            for u in 0..B {
+                for r in 0..B {
+                    let w = d[u][r];
+                    for j in 0..DIM {
+                        dst[(br * B + u) * DIM + j] += w * src[(br * B + r) * DIM + j];
+                    }
+                }
+            }
+        }
+        dst
+    };
+    let transpose = |src: &[f32]| -> Vec<f32> {
+        let mut dst = vec![0.0f32; DIM * DIM];
+        for i in 0..DIM {
+            for j in 0..DIM {
+                dst[j * DIM + i] = src[i * DIM + j];
+            }
+        }
+        dst
+    };
+    vec![transpose(&pass(&transpose(&pass(img))))]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::config::SimConfig;
+    use crate::kernels::execute;
+    use crate::util::stats::assert_allclose;
+
+    fn run(deploy: Deployment) -> u64 {
+        let cfg = SimConfig::spatzformer();
+        let inst = build(&cfg.cluster, deploy, 13);
+        let mut cl = Cluster::new(cfg).unwrap();
+        let (m, out) = execute(&mut cl, &inst).unwrap();
+        let want = reference(&inst.artifact_inputs);
+        assert_allclose(&out[0], &want[0], 1e-4, 1e-4);
+        m.cycles
+    }
+
+    #[test]
+    fn split_dual_matches_reference() {
+        run(Deployment::SplitDual);
+    }
+
+    #[test]
+    fn split_single_matches_reference() {
+        run(Deployment::SplitSingle);
+    }
+
+    #[test]
+    fn merge_matches_reference() {
+        run(Deployment::Merge);
+    }
+
+    #[test]
+    fn dct_matrix_is_orthonormal() {
+        let d = dct_matrix();
+        for i in 0..B {
+            for j in 0..B {
+                let dot: f32 = (0..B).map(|k| d[i][k] * d[j][k]).sum();
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-5, "({i},{j}) dot={dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn dc_block_transforms_to_corner_impulse() {
+        // constant 8x8 block -> all energy in the (0,0) coefficient
+        let mut img = vec![0.0f32; DIM * DIM];
+        for i in 0..B {
+            for j in 0..B {
+                img[i * DIM + j] = 1.0;
+            }
+        }
+        let out = &reference(&[img])[0];
+        assert!((out[0] - 8.0).abs() < 1e-4, "DC coeff {}", out[0]);
+        assert!(out[1].abs() < 1e-4);
+        assert!(out[DIM].abs() < 1e-4);
+    }
+}

@@ -1,0 +1,153 @@
+//! fdotp: out = sum(x[i] * y[i]), n = 8192, fp32.
+//!
+//! Strip-mined vector MACs into an accumulator register group, one
+//! `vfredusum` at the end. In split-dual mode each core reduces its half
+//! and the partials are combined by core 0 after a barrier — the
+//! cross-core reduction pattern merge mode eliminates (the MM reduction
+//! instead pays a small cross-unit merge inside the reconfig stage).
+
+use super::{gen_input, loop_overhead, max_vl, Alloc, Deployment, KernelId, KernelInstance};
+use crate::config::ClusterConfig;
+use crate::isa::{ElemWidth, Instr, Lmul, Program, ScalarOp, VReg, VectorOp};
+
+pub const N: usize = 8192;
+
+pub fn flops() -> u64 {
+    (2 * N) as u64
+}
+
+pub fn build(cfg: &ClusterConfig, deploy: Deployment, seed: u64) -> KernelInstance {
+    let x = gen_input(seed, 0x41, N, -1.0, 1.0);
+    let y = gen_input(seed, 0x42, N, -1.0, 1.0);
+
+    let mut alloc = Alloc::new(cfg);
+    let x_base = alloc.words(N);
+    let y_base = alloc.words(N);
+    let partial_base = alloc.words(2); // per-core partial sums
+    let out_base = alloc.words(1);
+
+    let vl = max_vl(cfg, deploy);
+    let dual = deploy == Deployment::SplitDual;
+    // round-robin strip assignment (see faxpy): keeps the two LSUs a
+    // full strip apart in bank phase
+    let nstrips = N / vl as usize;
+    let strips: [Vec<usize>; 2] = if dual {
+        [
+            (0..nstrips).step_by(2).collect(),
+            (1..nstrips).step_by(2).collect(),
+        ]
+    } else {
+        [(0..nstrips).collect(), Vec::new()]
+    };
+
+    let mut programs: [Program; 2] = [
+        Program::new(&format!("fdotp-{}-c0", deploy.name())),
+        Program::new(&format!("fdotp-{}-c1", deploy.name())),
+    ];
+    for (core, mine) in strips.iter().enumerate() {
+        let p = &mut programs[core];
+        if !mine.is_empty() {
+            p.scalar(ScalarOp::Alu);
+            p.vector(VectorOp::SetVl { avl: vl, ew: ElemWidth::E32, lmul: Lmul::M8 });
+            // accumulator v8 = 0
+            p.vector(VectorOp::MovVF { vd: VReg(8), f: 0.0 });
+            for (si, &strip) in mine.iter().enumerate() {
+                let off = strip * vl as usize;
+                p.vector(VectorOp::Load { vd: VReg(16), base: x_base + (off * 4) as u32, stride: 1 });
+                p.vector(VectorOp::Load { vd: VReg(24), base: y_base + (off * 4) as u32, stride: 1 });
+                p.vector(VectorOp::MacVV { vd: VReg(8), vs1: VReg(16), vs2: VReg(24) });
+                loop_overhead(p, si + 1 < mine.len());
+            }
+            // reduce accumulator, store partial
+            p.vector(VectorOp::RedSum { vd: VReg(0), vs: VReg(8) });
+            p.vector(VectorOp::SetVl { avl: 1, ew: ElemWidth::E32, lmul: Lmul::M1 });
+            p.vector(VectorOp::Store { vs: VReg(0), base: partial_base + (core * 4) as u32, stride: 1 });
+            p.push(Instr::Fence);
+        }
+        if dual {
+            p.push(Instr::Barrier);
+        }
+        if core == 0 {
+            // combine partials (core 1's partial is zero outside dual)
+            if dual {
+                p.vector(VectorOp::SetVl { avl: 2, ew: ElemWidth::E32, lmul: Lmul::M1 });
+                p.vector(VectorOp::Load { vd: VReg(1), base: partial_base, stride: 1 });
+                p.vector(VectorOp::RedSum { vd: VReg(2), vs: VReg(1) });
+                p.vector(VectorOp::SetVl { avl: 1, ew: ElemWidth::E32, lmul: Lmul::M1 });
+                p.vector(VectorOp::Store { vs: VReg(2), base: out_base, stride: 1 });
+            } else {
+                p.vector(VectorOp::SetVl { avl: 1, ew: ElemWidth::E32, lmul: Lmul::M1 });
+                p.vector(VectorOp::Load { vd: VReg(1), base: partial_base, stride: 1 });
+                p.vector(VectorOp::Store { vs: VReg(1), base: out_base, stride: 1 });
+            }
+            p.push(Instr::Fence);
+        }
+        p.push(Instr::Halt);
+    }
+
+    KernelInstance {
+        id: KernelId::Fdotp,
+        deploy,
+        programs,
+        staging_f32: vec![(x_base, x.clone()), (y_base, y.clone())],
+        staging_u32: vec![],
+        artifact_inputs: vec![x, y],
+        outputs: vec![(out_base, 1)],
+        flops: flops(),
+    }
+}
+
+/// Oracle in f64 (the vector unit's ordered f32 sum differs from any
+/// particular pairwise order; compare with a relative tolerance).
+pub fn reference(inputs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let s: f64 = inputs[0]
+        .iter()
+        .zip(inputs[1].iter())
+        .map(|(&a, &b)| a as f64 * b as f64)
+        .sum();
+    vec![vec![s as f32]]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::config::SimConfig;
+    use crate::kernels::execute;
+    use crate::util::stats::assert_allclose;
+
+    fn run(deploy: Deployment) -> u64 {
+        let cfg = SimConfig::spatzformer();
+        let inst = build(&cfg.cluster, deploy, 11);
+        let mut cl = Cluster::new(cfg).unwrap();
+        let (m, out) = execute(&mut cl, &inst).unwrap();
+        let want = reference(&inst.artifact_inputs);
+        assert_allclose(&out[0], &want[0], 2e-3, 1e-3);
+        m.cycles
+    }
+
+    #[test]
+    fn split_dual_matches_reference() {
+        run(Deployment::SplitDual);
+    }
+
+    #[test]
+    fn split_single_matches_reference() {
+        run(Deployment::SplitSingle);
+    }
+
+    #[test]
+    fn merge_matches_reference() {
+        run(Deployment::Merge);
+    }
+
+    #[test]
+    fn dual_uses_barrier_merge_does_not() {
+        let cfg = SimConfig::spatzformer();
+        let dual = build(&cfg.cluster, Deployment::SplitDual, 1);
+        let merge = build(&cfg.cluster, Deployment::Merge, 1);
+        let has_barrier = |p: &Program| p.instrs.iter().any(|i| matches!(i, Instr::Barrier));
+        assert!(has_barrier(&dual.programs[0]));
+        assert!(!has_barrier(&merge.programs[0]));
+    }
+}

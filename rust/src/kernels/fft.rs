@@ -1,0 +1,309 @@
+//! fft: 256-point radix-2 DIT FFT, split-complex fp32 (separate re/im
+//! arrays) — the kernel where merge mode shines in the paper (+20%).
+//!
+//! Implementation, mirroring the multi-core Spatz FFT:
+//! * bit-reversal permutation via indexed gathers into work arrays;
+//! * log2(N) = 8 butterfly stages; stage tables (a/b element offsets and
+//!   twiddle factors per butterfly) are precomputed and staged into the
+//!   TCDM, so each stage is gathers + vector arithmetic + scatters;
+//! * **split-dual**: each core processes half the butterflies of every
+//!   stage; because consecutive stages exchange data between the halves,
+//!   a `fence + barrier` separates stages — 9 cluster barriers total.
+//! * **merge**: a single instruction stream at doubled vl processes each
+//!   stage whole; no barriers at all. The removed synchronization is the
+//!   mechanism behind the paper's MM-fft speedup.
+
+use super::{loop_overhead, Alloc, Deployment, KernelId, KernelInstance};
+use crate::config::ClusterConfig;
+use crate::isa::{ElemWidth, Instr, Lmul, Program, ScalarOp, VReg, VectorOp};
+use crate::util::SplitMix64;
+
+pub const N: usize = 256;
+pub const STAGES: usize = 8; // log2(N)
+pub const NBF: usize = N / 2; // butterflies per stage
+
+/// 10 real ops per butterfly (4 mul + 2 mac-style + 4 add/sub) per the
+/// split-complex radix-2 update.
+pub fn flops() -> u64 {
+    (STAGES * NBF * 10) as u64
+}
+
+fn bitrev(i: usize, bits: u32) -> usize {
+    (i as u32).reverse_bits().wrapping_shr(32 - bits) as usize
+}
+
+/// Per-stage butterfly tables: (a offsets, b offsets, twiddle re, twiddle im).
+fn stage_tables(s: usize) -> (Vec<u32>, Vec<u32>, Vec<f32>, Vec<f32>) {
+    let h = 1usize << s; // half-size of this stage's butterfly groups
+    let mut a_off = Vec::with_capacity(NBF);
+    let mut b_off = Vec::with_capacity(NBF);
+    let mut w_re = Vec::with_capacity(NBF);
+    let mut w_im = Vec::with_capacity(NBF);
+    for g in (0..N).step_by(2 * h) {
+        for j in 0..h {
+            let a = g + j;
+            let b = a + h;
+            a_off.push((a * 4) as u32);
+            b_off.push((b * 4) as u32);
+            let ang = -(std::f64::consts::PI) * j as f64 / h as f64;
+            w_re.push(ang.cos() as f32);
+            w_im.push(ang.sin() as f32);
+        }
+    }
+    (a_off, b_off, w_re, w_im)
+}
+
+pub fn build(cfg: &ClusterConfig, deploy: Deployment, seed: u64) -> KernelInstance {
+    let mut rng = SplitMix64::new(seed ^ 0xFF7);
+    let re: Vec<f32> = rng.vec_f32(N, -1.0, 1.0);
+    let im: Vec<f32> = rng.vec_f32(N, -1.0, 1.0);
+
+    let mut alloc = Alloc::new(cfg);
+    let re_base = alloc.words(N);
+    let im_base = alloc.words(N);
+    let wr_base = alloc.words(N); // work arrays (bit-reversed order)
+    let wi_base = alloc.words(N);
+    let brv_base = alloc.words(N);
+    let mut stage_bases = Vec::with_capacity(STAGES);
+    for _ in 0..STAGES {
+        let a = alloc.words(NBF);
+        let b = alloc.words(NBF);
+        let wre = alloc.words(NBF);
+        let wim = alloc.words(NBF);
+        stage_bases.push((a, b, wre, wim));
+    }
+
+    let brv_tab: Vec<u32> = (0..N).map(|i| (bitrev(i, 8) * 4) as u32).collect();
+    let mut staging_u32 = vec![(brv_base, brv_tab)];
+    let mut staging_f32 = vec![(re_base, re.clone()), (im_base, im.clone())];
+    for (s, &(a, b, wre, wim)) in stage_bases.iter().enumerate() {
+        let (a_t, b_t, wre_t, wim_t) = stage_tables(s);
+        staging_u32.push((a, a_t));
+        staging_u32.push((b, b_t));
+        staging_f32.push((wre, wre_t));
+        staging_f32.push((wim, wim_t));
+    }
+
+    let dual = deploy == Deployment::SplitDual;
+    // butterfly range per core per stage, and bitrev element ranges
+    let bf_ranges: [(usize, usize); 2] = if dual {
+        [(0, NBF / 2), (NBF / 2, NBF)]
+    } else {
+        [(0, NBF), (0, 0)]
+    };
+    let el_ranges: [(usize, usize); 2] = if dual {
+        [(0, N / 2), (N / 2, N)]
+    } else {
+        [(0, N), (0, 0)]
+    };
+    // vl per strip: split-single must strip stages in two (64-cap at m4)
+    let m4_cap = match deploy {
+        Deployment::Merge => 2 * cfg.vlmax(32, 4),
+        _ => cfg.vlmax(32, 4),
+    } as u32;
+    let m8_cap = match deploy {
+        Deployment::Merge => 2 * cfg.vlmax(32, 8),
+        _ => cfg.vlmax(32, 8),
+    } as u32;
+
+    let mut programs: [Program; 2] = [
+        Program::new(&format!("fft-{}-c0", deploy.name())),
+        Program::new(&format!("fft-{}-c1", deploy.name())),
+    ];
+
+    for core in 0..2 {
+        let p = &mut programs[core];
+        let (elo, ehi) = el_ranges[core];
+        let (blo, bhi) = bf_ranges[core];
+
+        // ---- bit-reversal permutation: w <- x[brv] (LMUL=8 strips) ----
+        if elo < ehi {
+            p.scalar(ScalarOp::Alu);
+            let mut off = elo;
+            while off < ehi {
+                let step = m8_cap.min((ehi - off) as u32);
+                p.vector(VectorOp::SetVl { avl: step, ew: ElemWidth::E32, lmul: Lmul::M8 });
+                p.vector(VectorOp::Load { vd: VReg(0), base: brv_base + (off * 4) as u32, stride: 1 });
+                p.vector(VectorOp::LoadIndexed { vd: VReg(8), base: re_base, vidx: VReg(0) });
+                p.vector(VectorOp::Store { vs: VReg(8), base: wr_base + (off * 4) as u32, stride: 1 });
+                p.vector(VectorOp::LoadIndexed { vd: VReg(16), base: im_base, vidx: VReg(0) });
+                p.vector(VectorOp::Store { vs: VReg(16), base: wi_base + (off * 4) as u32, stride: 1 });
+                loop_overhead(p, off + (step as usize) < ehi);
+                off += step as usize;
+            }
+            if dual {
+                p.push(Instr::Fence);
+            }
+        }
+        if dual {
+            p.push(Instr::Barrier);
+        }
+
+        // ---- butterfly stages ----
+        for (s, &(a_base, b_base, wre_base, wim_base)) in stage_bases.iter().enumerate() {
+            if blo < bhi {
+                let mut off = blo;
+                while off < bhi {
+                    let step = m4_cap.min((bhi - off) as u32);
+                    let toff = (off * 4) as u32;
+                    p.vector(VectorOp::SetVl { avl: step, ew: ElemWidth::E32, lmul: Lmul::M4 });
+                    // indices
+                    p.vector(VectorOp::Load { vd: VReg(0), base: a_base + toff, stride: 1 });
+                    p.vector(VectorOp::Load { vd: VReg(4), base: b_base + toff, stride: 1 });
+                    // operands
+                    p.vector(VectorOp::LoadIndexed { vd: VReg(8), base: wr_base, vidx: VReg(0) });
+                    p.vector(VectorOp::LoadIndexed { vd: VReg(12), base: wi_base, vidx: VReg(0) });
+                    p.vector(VectorOp::LoadIndexed { vd: VReg(16), base: wr_base, vidx: VReg(4) });
+                    p.vector(VectorOp::LoadIndexed { vd: VReg(20), base: wi_base, vidx: VReg(4) });
+                    // twiddles
+                    p.vector(VectorOp::Load { vd: VReg(24), base: wre_base + toff, stride: 1 });
+                    p.vector(VectorOp::Load { vd: VReg(28), base: wim_base + toff, stride: 1 });
+                    // t_im (v0 freed: indices reloaded before the scatter)
+                    p.vector(VectorOp::MulVV { vd: VReg(0), vs1: VReg(24), vs2: VReg(20) });
+                    p.vector(VectorOp::MacVV { vd: VReg(0), vs1: VReg(28), vs2: VReg(16) });
+                    // t_re (overwrites b_re, then b_im is dead too)
+                    p.vector(VectorOp::MulVV { vd: VReg(16), vs1: VReg(24), vs2: VReg(16) });
+                    p.vector(VectorOp::NmsacVV { vd: VReg(16), vs1: VReg(28), vs2: VReg(20) });
+                    // outputs
+                    p.vector(VectorOp::AddVV { vd: VReg(20), vs1: VReg(8), vs2: VReg(16) }); // a_re'
+                    p.vector(VectorOp::SubVV { vd: VReg(16), vs1: VReg(8), vs2: VReg(16) }); // b_re'
+                    p.vector(VectorOp::AddVV { vd: VReg(24), vs1: VReg(12), vs2: VReg(0) }); // a_im'
+                    p.vector(VectorOp::SubVV { vd: VReg(28), vs1: VReg(12), vs2: VReg(0) }); // b_im'
+                    // scatter back (reload a indices)
+                    p.vector(VectorOp::Load { vd: VReg(0), base: a_base + toff, stride: 1 });
+                    p.vector(VectorOp::StoreIndexed { vs: VReg(20), base: wr_base, vidx: VReg(0) });
+                    p.vector(VectorOp::StoreIndexed { vs: VReg(24), base: wi_base, vidx: VReg(0) });
+                    p.vector(VectorOp::StoreIndexed { vs: VReg(16), base: wr_base, vidx: VReg(4) });
+                    p.vector(VectorOp::StoreIndexed { vs: VReg(28), base: wi_base, vidx: VReg(4) });
+                    loop_overhead(p, off + (step as usize) < bhi);
+                    off += step as usize;
+                }
+                // Cross-core data exchange needs a software drain +
+                // barrier per stage (split-dual only). Within one hart
+                // the in-order LSUs (and, in MM, the retire-merge stage)
+                // preserve memory order without draining the pipeline —
+                // this is precisely the synchronization overhead the
+                // paper's merge mode removes.
+                if dual {
+                    p.push(Instr::Fence);
+                }
+            }
+            if dual && s + 1 < STAGES {
+                p.push(Instr::Barrier);
+            }
+        }
+        if dual {
+            p.push(Instr::Barrier); // final stage completion
+        } else if blo < bhi {
+            p.push(Instr::Fence);
+        }
+        p.push(Instr::Halt);
+    }
+
+    KernelInstance {
+        id: KernelId::Fft,
+        deploy,
+        programs,
+        staging_f32,
+        staging_u32,
+        artifact_inputs: vec![re, im],
+        outputs: vec![(wr_base, N), (wi_base, N)],
+        flops: flops(),
+    }
+}
+
+/// Oracle: the same iterative radix-2 DIT algorithm in f32 (identical
+/// operation order to the vector kernel, so results match bit-for-bit).
+pub fn reference(inputs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let mut wr: Vec<f32> = (0..N).map(|i| inputs[0][bitrev(i, 8)]).collect();
+    let mut wi: Vec<f32> = (0..N).map(|i| inputs[1][bitrev(i, 8)]).collect();
+    for s in 0..STAGES {
+        let (a_off, b_off, w_re, w_im) = stage_tables(s);
+        let mut new_r = wr.clone();
+        let mut new_i = wi.clone();
+        for bf in 0..NBF {
+            let a = (a_off[bf] / 4) as usize;
+            let b = (b_off[bf] / 4) as usize;
+            let t_im = w_re[bf] * wi[b] + w_im[bf] * wr[b];
+            let t_re = w_re[bf] * wr[b] - w_im[bf] * wi[b];
+            new_r[a] = wr[a] + t_re;
+            new_i[a] = wi[a] + t_im;
+            new_r[b] = wr[a] - t_re;
+            new_i[b] = wi[a] - t_im;
+        }
+        wr = new_r;
+        wi = new_i;
+    }
+    vec![wr, wi]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::config::SimConfig;
+    use crate::kernels::execute;
+    use crate::util::stats::assert_allclose;
+
+    fn run(deploy: Deployment) -> (u64, u64) {
+        let cfg = SimConfig::spatzformer();
+        let inst = build(&cfg.cluster, deploy, 21);
+        let mut cl = Cluster::new(cfg).unwrap();
+        let (m, out) = execute(&mut cl, &inst).unwrap();
+        let want = reference(&inst.artifact_inputs);
+        assert_allclose(&out[0], &want[0], 1e-4, 1e-4);
+        assert_allclose(&out[1], &want[1], 1e-4, 1e-4);
+        (m.cycles, m.counters.barriers)
+    }
+
+    #[test]
+    fn split_dual_matches_reference() {
+        let (_, barriers) = run(Deployment::SplitDual);
+        // 9 barrier episodes x 2 cores arriving
+        assert_eq!(barriers, 18);
+    }
+
+    #[test]
+    fn split_single_matches_reference() {
+        let (_, barriers) = run(Deployment::SplitSingle);
+        assert_eq!(barriers, 0);
+    }
+
+    #[test]
+    fn merge_matches_reference_without_barriers() {
+        let (_, barriers) = run(Deployment::Merge);
+        assert_eq!(barriers, 0);
+    }
+
+    #[test]
+    fn merge_beats_split_dual_on_fft() {
+        // the paper's headline MM result: fft +20% via removed barriers
+        let (dual, _) = run(Deployment::SplitDual);
+        let (merge, _) = run(Deployment::Merge);
+        assert!(
+            (merge as f64) < dual as f64,
+            "merge ({merge}) should beat split-dual ({dual})"
+        );
+    }
+
+    #[test]
+    fn reference_agrees_with_dft() {
+        // check the oracle itself against a direct DFT (f64)
+        let cfg = SimConfig::spatzformer();
+        let inst = build(&cfg.cluster, Deployment::Merge, 9);
+        let re = &inst.artifact_inputs[0];
+        let im = &inst.artifact_inputs[1];
+        let got = reference(&inst.artifact_inputs);
+        for k in (0..N).step_by(37) {
+            let mut sr = 0.0f64;
+            let mut si = 0.0f64;
+            for n in 0..N {
+                let ang = -2.0 * std::f64::consts::PI * (k * n) as f64 / N as f64;
+                sr += re[n] as f64 * ang.cos() - im[n] as f64 * ang.sin();
+                si += re[n] as f64 * ang.sin() + im[n] as f64 * ang.cos();
+            }
+            assert!((got[0][k] as f64 - sr).abs() < 1e-2, "re[{k}]");
+            assert!((got[1][k] as f64 - si).abs() < 1e-2, "im[{k}]");
+        }
+    }
+}

@@ -1,0 +1,156 @@
+//! fmatmul: C[64x128] = A[64x64] * B[64x128], fp32.
+//!
+//! The Spatz-style blocked kernel: the C row is the vector (vl = 128 =
+//! VLMAX at LMUL=8), two C rows are accumulated simultaneously so each
+//! B-row load is amortized over two `vfmacc.vf`s (2 FLOP-ops per loaded
+//! element — FPU-bound on 4 lanes).
+//!
+//! * split-dual: cores take interleaved row-pair halves (no barriers —
+//!   disjoint outputs).
+//! * split-single: all rows on core 0.
+//! * merge: one stream, each vl=128 op splits 64/64 across the units.
+
+use super::{gen_input, loop_overhead, Alloc, Deployment, KernelId, KernelInstance};
+use crate::config::ClusterConfig;
+use crate::isa::{ElemWidth, Instr, Lmul, Program, ScalarOp, VReg, VectorOp};
+
+pub const M: usize = 64;
+pub const K: usize = 64;
+pub const N: usize = 128;
+
+pub fn flops() -> u64 {
+    (2 * M * N * K) as u64
+}
+
+pub fn build(cfg: &ClusterConfig, deploy: Deployment, seed: u64) -> KernelInstance {
+    let a = gen_input(seed, 0x11, M * K, -1.0, 1.0);
+    let b = gen_input(seed, 0x22, K * N, -1.0, 1.0);
+
+    let mut alloc = Alloc::new(cfg);
+    let a_base = alloc.words(M * K);
+    let b_base = alloc.words(K * N);
+    let c_base = alloc.words(M * N);
+
+    // row-pair ranges per core
+    let pairs = M / 2;
+    let ranges: [(usize, usize); 2] = match deploy {
+        Deployment::SplitDual => [(0, pairs / 2), (pairs / 2, pairs)],
+        _ => [(0, pairs), (0, 0)],
+    };
+
+    let mut programs: [Program; 2] = [
+        Program::new(&format!("fmatmul-{}-c0", deploy.name())),
+        Program::new(&format!("fmatmul-{}-c1", deploy.name())),
+    ];
+    for (core, &(lo, hi)) in ranges.iter().enumerate() {
+        let p = &mut programs[core];
+        if lo < hi {
+            // prologue: pointer setup
+            p.scalar(ScalarOp::Alu);
+            p.scalar(ScalarOp::Alu);
+            p.vector(VectorOp::SetVl { avl: N as u32, ew: ElemWidth::E32, lmul: Lmul::M8 });
+            // Cores start the k loop half-way apart: kernels written for
+            // multi-core Spatz stagger shared-operand streams so the two
+            // LSUs do not fetch the very same B row in lockstep.
+            let k0 = core * K / 2;
+            for pr in lo..hi {
+                let i = pr * 2;
+                p.vector(VectorOp::MovVF { vd: VReg(8), f: 0.0 });
+                p.vector(VectorOp::MovVF { vd: VReg(16), f: 0.0 });
+                for kk in 0..K {
+                    let k = (k0 + kk) % K;
+                    p.vector(VectorOp::Load {
+                        vd: VReg(24),
+                        base: b_base + (k * N * 4) as u32,
+                        stride: 1,
+                    });
+                    p.vector(VectorOp::MacVF { vd: VReg(8), vs: VReg(24), f: a[i * K + k] });
+                    p.vector(VectorOp::MacVF { vd: VReg(16), vs: VReg(24), f: a[(i + 1) * K + k] });
+                    loop_overhead(p, kk + 1 < K);
+                }
+                p.vector(VectorOp::Store { vs: VReg(8), base: c_base + (i * N * 4) as u32, stride: 1 });
+                p.vector(VectorOp::Store {
+                    vs: VReg(16),
+                    base: c_base + ((i + 1) * N * 4) as u32,
+                    stride: 1,
+                });
+                loop_overhead(p, pr + 1 < hi);
+            }
+            p.push(Instr::Fence);
+        }
+        p.push(Instr::Halt);
+    }
+
+    KernelInstance {
+        id: KernelId::Fmatmul,
+        deploy,
+        programs,
+        staging_f32: vec![(a_base, a.clone()), (b_base, b.clone())],
+        staging_u32: vec![],
+        artifact_inputs: vec![a, b],
+        outputs: vec![(c_base, M * N)],
+        flops: flops(),
+    }
+}
+
+/// Naive oracle with the same k-accumulation order as the kernel.
+pub fn reference(inputs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let (a, b) = (&inputs[0], &inputs[1]);
+    let mut c = vec![0.0f32; M * N];
+    for i in 0..M {
+        for k in 0..K {
+            let s = a[i * K + k];
+            for j in 0..N {
+                c[i * N + j] += s * b[k * N + j];
+            }
+        }
+    }
+    vec![c]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::config::SimConfig;
+    use crate::kernels::execute;
+    use crate::util::stats::assert_allclose;
+
+    fn run(deploy: Deployment) -> (u64, Vec<f32>) {
+        let cfg = SimConfig::spatzformer();
+        let inst = build(&cfg.cluster, deploy, 7);
+        let mut cl = Cluster::new(cfg).unwrap();
+        let (m, out) = execute(&mut cl, &inst).unwrap();
+        let want = reference(&inst.artifact_inputs);
+        assert_allclose(&out[0], &want[0], 1e-4, 1e-4);
+        (m.cycles, out.into_iter().next().unwrap())
+    }
+
+    #[test]
+    fn split_dual_matches_reference() {
+        run(Deployment::SplitDual);
+    }
+
+    #[test]
+    fn merge_matches_reference() {
+        run(Deployment::Merge);
+    }
+
+    #[test]
+    fn split_single_matches_reference_and_is_slower() {
+        let (dual, _) = run(Deployment::SplitDual);
+        let (single, _) = run(Deployment::SplitSingle);
+        assert!(
+            single as f64 > 1.6 * dual as f64,
+            "single={single} dual={dual}"
+        );
+    }
+
+    #[test]
+    fn merge_close_to_split_dual() {
+        let (dual, _) = run(Deployment::SplitDual);
+        let (merge, _) = run(Deployment::Merge);
+        let ratio = merge as f64 / dual as f64;
+        assert!((0.8..1.3).contains(&ratio), "merge/dual = {ratio}");
+    }
+}

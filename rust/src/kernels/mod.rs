@@ -1,0 +1,309 @@
+//! The paper's six-kernel evaluation suite (ML / DSP / Linear Algebra),
+//! emitted as vector programs for the simulated cluster.
+//!
+//! Each kernel module provides a `build(cfg, deploy, seed)` generator
+//! returning a [`KernelInstance`]: the per-core programs, the TCDM
+//! staging set, the inputs in artifact order (for PJRT cross-checking),
+//! the output locations, and the FLOP count. Generators emit fully
+//! strip-mined instruction streams with concrete addresses — what the
+//! compiled RVV binary's scalar loop would feed the accelerator port —
+//! including the scalar loop-overhead instructions.
+//!
+//! Deployments:
+//! * [`Deployment::SplitDual`] — split mode, problem divided across both
+//!   cores (cluster barriers where phases share data). This is also the
+//!   baseline cluster's only deployment.
+//! * [`Deployment::SplitSingle`] — split mode on core 0 only (the shape
+//!   used in mixed workloads, where core 1 runs the scalar task).
+//! * [`Deployment::Merge`] — merge mode: one instruction stream on
+//!   core 0 drives both units at doubled VLMAX, no barriers.
+
+pub mod conv2d;
+pub mod faxpy;
+pub mod fdct;
+pub mod fdotp;
+pub mod fft;
+pub mod fmatmul;
+
+use crate::config::ClusterConfig;
+use crate::isa::Program;
+use crate::util::SplitMix64;
+
+/// Kernel identifiers, in the paper's figure order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelId {
+    Fmatmul,
+    Conv2d,
+    Fft,
+    Fdotp,
+    Faxpy,
+    Fdct,
+}
+
+impl KernelId {
+    pub fn all() -> [KernelId; 6] {
+        [
+            KernelId::Fmatmul,
+            KernelId::Conv2d,
+            KernelId::Fft,
+            KernelId::Fdotp,
+            KernelId::Faxpy,
+            KernelId::Fdct,
+        ]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelId::Fmatmul => "fmatmul",
+            KernelId::Conv2d => "conv2d",
+            KernelId::Fft => "fft",
+            KernelId::Fdotp => "fdotp",
+            KernelId::Faxpy => "faxpy",
+            KernelId::Fdct => "fdct",
+        }
+    }
+
+    /// Artifact (HLO) name in `artifacts/manifest.txt`.
+    pub fn artifact(self) -> &'static str {
+        match self {
+            KernelId::Fmatmul => "matmul",
+            KernelId::Conv2d => "conv2d",
+            KernelId::Fft => "fft",
+            KernelId::Fdotp => "dotp",
+            KernelId::Faxpy => "axpy",
+            KernelId::Fdct => "dct",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        Self::all().into_iter().find(|k| k.name() == s)
+    }
+
+    pub fn build(
+        self,
+        cfg: &ClusterConfig,
+        deploy: Deployment,
+        seed: u64,
+    ) -> KernelInstance {
+        match self {
+            KernelId::Fmatmul => fmatmul::build(cfg, deploy, seed),
+            KernelId::Conv2d => conv2d::build(cfg, deploy, seed),
+            KernelId::Fft => fft::build(cfg, deploy, seed),
+            KernelId::Fdotp => fdotp::build(cfg, deploy, seed),
+            KernelId::Faxpy => faxpy::build(cfg, deploy, seed),
+            KernelId::Fdct => fdct::build(cfg, deploy, seed),
+        }
+    }
+
+    /// Pure-Rust oracle on artifact-ordered inputs.
+    pub fn reference(self, inputs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        match self {
+            KernelId::Fmatmul => fmatmul::reference(inputs),
+            KernelId::Conv2d => conv2d::reference(inputs),
+            KernelId::Fft => fft::reference(inputs),
+            KernelId::Fdotp => fdotp::reference(inputs),
+            KernelId::Faxpy => faxpy::reference(inputs),
+            KernelId::Fdct => fdct::reference(inputs),
+        }
+    }
+}
+
+/// How a kernel is mapped onto the cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Deployment {
+    SplitDual,
+    SplitSingle,
+    Merge,
+}
+
+impl Deployment {
+    pub fn name(self) -> &'static str {
+        match self {
+            Deployment::SplitDual => "split-dual",
+            Deployment::SplitSingle => "split-single",
+            Deployment::Merge => "merge",
+        }
+    }
+}
+
+/// A fully generated kernel: programs + data + expectations.
+#[derive(Debug, Clone)]
+pub struct KernelInstance {
+    pub id: KernelId,
+    pub deploy: Deployment,
+    pub programs: [Program; 2],
+    /// f32 arrays to stage into TCDM before the run.
+    pub staging_f32: Vec<(u32, Vec<f32>)>,
+    /// u32 arrays (index tables) to stage.
+    pub staging_u32: Vec<(u32, Vec<u32>)>,
+    /// Inputs in the artifact's argument order (flattened).
+    pub artifact_inputs: Vec<Vec<f32>>,
+    /// Output locations in TCDM, in the artifact's result order.
+    pub outputs: Vec<(u32, usize)>,
+    /// Useful FLOPs of the workload (MAC = 2).
+    pub flops: u64,
+}
+
+/// Simple bump allocator for laying out kernel data in the TCDM.
+pub(crate) struct Alloc {
+    next: u32,
+    limit: u32,
+}
+
+impl Alloc {
+    pub fn new(cfg: &ClusterConfig) -> Self {
+        Self { next: 0, limit: cfg.tcdm_bytes() as u32 }
+    }
+
+    /// Allocate `n` f32/u32 words, 64-byte aligned.
+    pub fn words(&mut self, n: usize) -> u32 {
+        let addr = self.next;
+        self.next += (n as u32) * 4;
+        self.next = (self.next + 63) & !63;
+        assert!(
+            self.next <= self.limit,
+            "kernel working set exceeds TCDM ({} > {})",
+            self.next,
+            self.limit
+        );
+        addr
+    }
+}
+
+/// Hart-level max vl for E32/LMUL=8 under a deployment.
+pub(crate) fn max_vl(cfg: &ClusterConfig, deploy: Deployment) -> u32 {
+    let base = cfg.vlmax(32, 8) as u32;
+    match deploy {
+        Deployment::Merge => base * 2,
+        _ => base,
+    }
+}
+
+/// Deterministic input generator shared by simulator and artifact paths.
+pub(crate) fn gen_input(seed: u64, salt: u64, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+    let mut rng = SplitMix64::new(seed ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    rng.vec_f32(n, lo, hi)
+}
+
+/// Scalar loop bookkeeping emitted once per strip-mine iteration
+/// (address bump + branch), matching what the compiled loop would do.
+pub(crate) fn loop_overhead(p: &mut Program, taken: bool) {
+    use crate::isa::ScalarOp;
+    p.scalar(ScalarOp::Alu);
+    p.scalar(ScalarOp::Alu);
+    p.scalar(ScalarOp::Branch { taken });
+}
+
+/// Stage, run and read back a kernel instance on a fresh-state cluster.
+/// Sets the cluster mode from the deployment. Returns the run metrics
+/// (energy not yet priced) and the outputs in artifact order.
+pub fn execute(
+    cluster: &mut crate::cluster::Cluster,
+    inst: &KernelInstance,
+) -> anyhow::Result<(crate::metrics::RunMetrics, Vec<Vec<f32>>)> {
+    use crate::config::Mode;
+    let mode = match inst.deploy {
+        Deployment::Merge => Mode::Merge,
+        _ => Mode::Split,
+    };
+    cluster.set_mode(mode)?;
+    for (addr, data) in &inst.staging_f32 {
+        cluster.stage_f32(*addr, data);
+    }
+    for (addr, data) in &inst.staging_u32 {
+        cluster.stage_u32(*addr, data);
+    }
+    let staging_cycles = cluster.dma_cycles;
+    cluster.reset_stats();
+    cluster.load_programs([inst.programs[0].clone(), inst.programs[1].clone()])?;
+    cluster.run()?;
+    let mut metrics = cluster.metrics(inst.flops);
+    metrics.dma_cycles = staging_cycles; // staging is reported separately
+    let outputs = inst
+        .outputs
+        .iter()
+        .map(|&(addr, len)| cluster.tcdm.read_f32_slice(addr, len))
+        .collect();
+    Ok((metrics, outputs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    #[test]
+    fn ids_roundtrip_names() {
+        for k in KernelId::all() {
+            assert_eq!(KernelId::from_name(k.name()), Some(k));
+        }
+        assert_eq!(KernelId::from_name("nope"), None);
+    }
+
+    #[test]
+    fn alloc_alignment_and_bounds() {
+        let cfg = ClusterConfig::default();
+        let mut a = Alloc::new(&cfg);
+        let x = a.words(3);
+        let y = a.words(100);
+        assert_eq!(x % 64, 0);
+        assert_eq!(y % 64, 0);
+        assert!(y >= x + 12);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds TCDM")]
+    fn alloc_overflow_panics() {
+        let cfg = ClusterConfig::default();
+        let mut a = Alloc::new(&cfg);
+        a.words(cfg.tcdm_bytes() / 4 + 1);
+    }
+
+    #[test]
+    fn max_vl_doubles_in_merge() {
+        let cfg = ClusterConfig::default();
+        assert_eq!(max_vl(&cfg, Deployment::SplitDual), 128);
+        assert_eq!(max_vl(&cfg, Deployment::Merge), 256);
+    }
+
+    #[test]
+    fn gen_input_is_deterministic_and_salted() {
+        let a = gen_input(1, 2, 16, -1.0, 1.0);
+        let b = gen_input(1, 2, 16, -1.0, 1.0);
+        let c = gen_input(1, 3, 16, -1.0, 1.0);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert!(a.iter().all(|&x| (-1.0..1.0).contains(&x)));
+    }
+
+    /// Every kernel × deployment builds, validates, and its program uses
+    /// barriers only where phases require them.
+    #[test]
+    fn all_kernels_build_and_validate() {
+        let cfg = ClusterConfig::default();
+        for k in KernelId::all() {
+            for d in [Deployment::SplitDual, Deployment::SplitSingle, Deployment::Merge] {
+                let inst = k.build(&cfg, d, 42);
+                inst.programs[0].validate(cfg.vregs).unwrap_or_else(|e| {
+                    panic!("{} {} core0: {e}", k.name(), d.name())
+                });
+                inst.programs[1].validate(cfg.vregs).unwrap_or_else(|e| {
+                    panic!("{} {} core1: {e}", k.name(), d.name())
+                });
+                assert!(inst.flops > 0, "{}", k.name());
+                assert!(!inst.outputs.is_empty(), "{}", k.name());
+                if d != Deployment::SplitDual {
+                    // only split-dual may use cluster barriers
+                    for prog in &inst.programs {
+                        assert!(
+                            !prog.instrs.iter().any(|i| matches!(i, crate::isa::Instr::Barrier)),
+                            "{} {} must not use barriers",
+                            k.name(),
+                            d.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

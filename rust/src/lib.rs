@@ -1,0 +1,44 @@
+//! # Spatzformer-Sim
+//!
+//! A production-quality reproduction of *Spatzformer: An Efficient
+//! Reconfigurable Dual-Core RISC-V V Cluster for Mixed Scalar-Vector
+//! Workloads* (Perotti et al., 2024).
+//!
+//! The crate provides:
+//!
+//! * a cycle-approximate, functionally exact simulator of the baseline
+//!   Spatz cluster and the reconfigurable Spatzformer cluster
+//!   ([`cluster`], [`snitch`], [`spatz`], [`reconfig`], [`mem`]);
+//! * the six-kernel vector workload suite and a CoreMark-workalike scalar
+//!   workload ([`kernels`], [`workloads`]);
+//! * an analytical PPA model (area/energy/frequency) calibrated to the
+//!   paper's 12-nm implementation numbers ([`ppa`]);
+//! * a workload coordinator with runtime split/merge mode switching
+//!   ([`coordinator`]);
+//! * a PJRT runtime that loads the JAX/Pallas AOT artifacts and
+//!   cross-checks the simulated RVV datapath against XLA numerics
+//!   ([`runtime`]).
+//!
+//! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
+//! the paper-vs-measured record.
+
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod isa;
+pub mod kernels;
+pub mod mem;
+pub mod metrics;
+pub mod ppa;
+pub mod reconfig;
+pub mod runtime;
+pub mod snitch;
+pub mod spatz;
+pub mod trace;
+pub mod util;
+pub mod workloads;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

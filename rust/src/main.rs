@@ -1,0 +1,7 @@
+//! `spatzformer` — CLI launcher for the Spatzformer cluster simulator,
+//! benchmark harness and PPA model. See `spatzformer --help`.
+
+fn main() {
+    let code = spatzformer::cli::main();
+    std::process::exit(code);
+}

@@ -1,0 +1,200 @@
+//! Shared instruction cache model.
+//!
+//! Set-associative (LRU) over (stream id, line index): each core executes
+//! its own program stream, and associativity lets the two streams coexist
+//! — a direct-mapped shared cache would thrash whenever both cores'
+//! working loops alias the same sets. Misses charge a refill penalty and
+//! an energy event. Merge mode's instruction-fetch energy saving falls
+//! out of this model: one scalar core fetching N/2 vector instructions
+//! beats two cores fetching N.
+
+use crate::config::ClusterConfig;
+
+/// Fetch statistics (feed the energy model + reports).
+#[derive(Debug, Clone, Default)]
+pub struct ICacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+struct Way {
+    stream: u32,
+    line: u32,
+    /// LRU timestamp (monotonic fetch counter).
+    used: u64,
+}
+
+/// The shared I-cache.
+pub struct ICache {
+    /// `sets x ways`, flattened.
+    ways: Vec<Option<Way>>,
+    nsets: usize,
+    assoc: usize,
+    line_instrs: usize,
+    miss_penalty: u64,
+    tick: u64,
+    pub stats: ICacheStats,
+}
+
+impl ICache {
+    pub fn new(cfg: &ClusterConfig) -> Self {
+        let assoc = cfg.icache_ways;
+        let nsets = cfg.icache_lines / assoc;
+        Self {
+            ways: vec![None; cfg.icache_lines],
+            nsets,
+            assoc,
+            line_instrs: cfg.icache_line_instrs,
+            miss_penalty: cfg.icache_miss_penalty,
+            tick: 0,
+            stats: ICacheStats::default(),
+        }
+    }
+
+    /// Fetch the instruction at `pc` of `stream`; returns the extra stall
+    /// cycles (0 on hit, refill penalty on miss).
+    pub fn fetch(&mut self, stream: u32, pc: usize) -> u64 {
+        self.tick += 1;
+        let line = (pc / self.line_instrs) as u32;
+        let set = (line as usize) % self.nsets;
+        let base = set * self.assoc;
+        let slots = &mut self.ways[base..base + self.assoc];
+        // hit?
+        for w in slots.iter_mut() {
+            if let Some(way) = w {
+                if way.stream == stream && way.line == line {
+                    way.used = self.tick;
+                    self.stats.hits += 1;
+                    return 0;
+                }
+            }
+        }
+        // miss: fill LRU (or an empty way)
+        let victim = slots
+            .iter_mut()
+            .min_by_key(|w| w.map(|x| x.used).unwrap_or(0))
+            .unwrap();
+        *victim = Some(Way { stream, line, used: self.tick });
+        self.stats.misses += 1;
+        self.miss_penalty
+    }
+
+    /// Invalidate everything (used at mode switches in strict mode and by
+    /// tests).
+    pub fn flush(&mut self) {
+        self.ways.fill(None);
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.stats.hits + self.stats.misses;
+        if total == 0 {
+            return 1.0;
+        }
+        self.stats.hits as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn icache() -> ICache {
+        ICache::new(&ClusterConfig::default())
+    }
+
+    #[test]
+    fn sequential_fetch_hits_within_line() {
+        let mut ic = icache();
+        assert!(ic.fetch(0, 0) > 0); // cold miss
+        for pc in 1..8 {
+            assert_eq!(ic.fetch(0, pc), 0, "pc={pc} should hit");
+        }
+        assert!(ic.fetch(0, 8) > 0); // next line
+    }
+
+    #[test]
+    fn small_loop_fits() {
+        let mut ic = icache();
+        // warm the loop body (2 lines)
+        ic.fetch(0, 0);
+        ic.fetch(0, 8);
+        for _ in 0..100 {
+            for pc in 0..16 {
+                assert_eq!(ic.fetch(0, pc), 0);
+            }
+        }
+        assert_eq!(ic.stats.misses, 2);
+    }
+
+    #[test]
+    fn two_streams_coexist_via_associativity() {
+        let mut ic = icache();
+        // both cores loop over the same line indices; with 4 ways the
+        // two streams must not evict each other
+        ic.fetch(0, 0);
+        ic.fetch(1, 0);
+        for _ in 0..50 {
+            assert_eq!(ic.fetch(0, 0), 0);
+            assert_eq!(ic.fetch(1, 0), 0);
+        }
+        assert_eq!(ic.stats.misses, 2);
+    }
+
+    #[test]
+    fn lru_evicts_the_coldest_way() {
+        let cfg = ClusterConfig::default();
+        let mut ic = ICache::new(&cfg);
+        let nsets = cfg.icache_lines / cfg.icache_ways;
+        let stride_pcs = nsets * cfg.icache_line_instrs; // same set, next line
+        // fill all 4 ways of set 0 for stream 0
+        for w in 0..cfg.icache_ways {
+            ic.fetch(0, w * stride_pcs);
+        }
+        // touch way 1..3 so way 0 is LRU, then insert a 5th line
+        for w in 1..cfg.icache_ways {
+            assert_eq!(ic.fetch(0, w * stride_pcs), 0);
+        }
+        ic.fetch(0, cfg.icache_ways * stride_pcs); // evicts way 0
+        assert!(ic.fetch(0, 0) > 0, "LRU way should have been evicted");
+        // the most-recently-used way must have survived both evictions
+        assert_eq!(ic.fetch(0, (cfg.icache_ways - 1) * stride_pcs), 0);
+    }
+
+    #[test]
+    fn giant_stream_thrashes() {
+        let mut ic = icache();
+        let cfg = ClusterConfig::default();
+        let capacity_instrs = cfg.icache_lines * cfg.icache_line_instrs;
+        let n = capacity_instrs * 2;
+        for pc in 0..n {
+            ic.fetch(0, pc);
+        }
+        let misses_first = ic.stats.misses;
+        for pc in 0..n {
+            ic.fetch(0, pc);
+        }
+        assert!(ic.stats.misses > misses_first, "no misses on re-stream");
+    }
+
+    #[test]
+    fn flush_invalidates() {
+        let mut ic = icache();
+        ic.fetch(0, 0);
+        assert_eq!(ic.fetch(0, 1), 0);
+        ic.flush();
+        assert!(ic.fetch(0, 1) > 0);
+    }
+
+    #[test]
+    fn hit_rate_computed() {
+        let mut ic = icache();
+        assert_eq!(ic.hit_rate(), 1.0); // vacuous
+        ic.fetch(0, 0);
+        ic.fetch(0, 1);
+        ic.fetch(0, 2);
+        ic.fetch(0, 3);
+        assert!((ic.hit_rate() - 0.75).abs() < 1e-12);
+    }
+}

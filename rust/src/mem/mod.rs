@@ -1,0 +1,16 @@
+//! Cluster memory system: banked L1 TCDM scratchpad, shared instruction
+//! cache, and a DMA engine for bulk data staging.
+//!
+//! The TCDM is the contention point the paper's mixed-workload numbers
+//! hinge on: scalar cores and both vector LSUs issue word requests each
+//! cycle; single-ported banks grant one request per cycle, conflicts
+//! replay. Arbitration fairness comes from the cluster rotating the order
+//! in which requesters try each cycle.
+
+pub mod dma;
+pub mod icache;
+pub mod tcdm;
+
+pub use dma::Dma;
+pub use icache::ICache;
+pub use tcdm::{Tcdm, TcdmStats};

@@ -1,0 +1,307 @@
+//! Event counting and run-level metrics.
+//!
+//! Every microarchitectural event the energy model charges for is counted
+//! here during simulation; [`RunMetrics`] bundles the counters with cycle
+//! counts and workload-level quantities (FLOPs, elements) for reporting
+//! and for `ppa::energy` to price.
+
+use crate::mem::icache::ICacheStats;
+use crate::mem::tcdm::TcdmStats;
+
+/// Flat event counters, incremented by the simulator.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Counters {
+    // ---- scalar cores ----
+    pub scalar_ifetch: u64,
+    pub scalar_alu: u64,
+    pub scalar_mul: u64,
+    pub scalar_div: u64,
+    pub scalar_mem: u64,
+    pub scalar_branch: u64,
+    pub scalar_csr: u64,
+    /// Cycles a scalar core spent stalled because the offload queue was
+    /// full (back-pressure from the vector unit).
+    pub offload_stall_cycles: u64,
+    // ---- offload path ----
+    /// Vector instructions dispatched into unit queues (per-unit count:
+    /// an MM broadcast counts twice — both units receive work).
+    pub vec_dispatch: u64,
+    /// Hart-level vector instructions accepted by the reconfig stage
+    /// (one broadcast-stage traversal each, mode-independent).
+    pub hart_vec_dispatch: u64,
+    /// Dispatches that crossed the Spatzformer broadcast stage (MM only).
+    pub broadcast_dispatch: u64,
+    // ---- vector datapath (element events) ----
+    pub vec_elem_alu: u64,
+    pub vec_elem_mul: u64,
+    pub vec_elem_mac: u64,
+    pub vec_elem_move: u64,
+    pub vec_elem_red: u64,
+    pub vec_elem_mem: u64,
+    pub vrf_read: u64,
+    pub vrf_write: u64,
+    // ---- synchronization ----
+    pub barriers: u64,
+    /// Cycles cores spent waiting at barriers (arrival skew + release).
+    pub barrier_wait_cycles: u64,
+    pub fence_wait_cycles: u64,
+    pub mode_switches: u64,
+    // ---- per-block busy cycles (leakage/clock-gating model) ----
+    pub cycles_core_busy: [u64; 2],
+    pub cycles_unit_busy: [u64; 2],
+}
+
+impl Counters {
+    pub fn add(&mut self, other: &Counters) {
+        self.scalar_ifetch += other.scalar_ifetch;
+        self.scalar_alu += other.scalar_alu;
+        self.scalar_mul += other.scalar_mul;
+        self.scalar_div += other.scalar_div;
+        self.scalar_mem += other.scalar_mem;
+        self.scalar_branch += other.scalar_branch;
+        self.scalar_csr += other.scalar_csr;
+        self.offload_stall_cycles += other.offload_stall_cycles;
+        self.vec_dispatch += other.vec_dispatch;
+        self.hart_vec_dispatch += other.hart_vec_dispatch;
+        self.broadcast_dispatch += other.broadcast_dispatch;
+        self.vec_elem_alu += other.vec_elem_alu;
+        self.vec_elem_mul += other.vec_elem_mul;
+        self.vec_elem_mac += other.vec_elem_mac;
+        self.vec_elem_move += other.vec_elem_move;
+        self.vec_elem_red += other.vec_elem_red;
+        self.vec_elem_mem += other.vec_elem_mem;
+        self.vrf_read += other.vrf_read;
+        self.vrf_write += other.vrf_write;
+        self.barriers += other.barriers;
+        self.barrier_wait_cycles += other.barrier_wait_cycles;
+        self.fence_wait_cycles += other.fence_wait_cycles;
+        self.mode_switches += other.mode_switches;
+        for i in 0..2 {
+            self.cycles_core_busy[i] += other.cycles_core_busy[i];
+            self.cycles_unit_busy[i] += other.cycles_unit_busy[i];
+        }
+    }
+
+    /// Total scalar instructions executed.
+    pub fn scalar_instrs(&self) -> u64 {
+        self.scalar_alu
+            + self.scalar_mul
+            + self.scalar_div
+            + self.scalar_mem
+            + self.scalar_branch
+            + self.scalar_csr
+    }
+
+    /// Total vector element operations (all classes).
+    pub fn vec_elems(&self) -> u64 {
+        self.vec_elem_alu
+            + self.vec_elem_mul
+            + self.vec_elem_mac
+            + self.vec_elem_move
+            + self.vec_elem_red
+            + self.vec_elem_mem
+    }
+}
+
+/// Metrics of one simulated run.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    /// Cluster cycles from start to all-cores-halted.
+    pub cycles: u64,
+    /// Useful floating-point operations of the workload (a MAC counts 2).
+    pub flops: u64,
+    pub counters: Counters,
+    pub tcdm: TcdmStats,
+    pub icache: ICacheStats,
+    /// DMA staging cycles (reported separately from kernel cycles).
+    pub dma_cycles: u64,
+    /// Total energy in pJ (filled in by `ppa::energy`).
+    pub energy_pj: f64,
+}
+
+impl RunMetrics {
+    /// FLOP per cycle — the paper's performance axis.
+    pub fn flop_per_cycle(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.flops as f64 / self.cycles as f64
+    }
+
+    /// pJ per FLOP (inverse energy efficiency).
+    pub fn pj_per_flop(&self) -> f64 {
+        if self.flops == 0 {
+            return f64::NAN;
+        }
+        self.energy_pj / self.flops as f64
+    }
+
+    /// GFLOPS/W at the given clock — the paper's energy-efficiency axis.
+    /// (GFLOPS/W == FLOP/nJ; independent of frequency given energy/op.)
+    pub fn gflops_per_watt(&self) -> f64 {
+        if self.energy_pj == 0.0 {
+            return f64::NAN;
+        }
+        // FLOP / (pJ * 1e-12 J) * 1e-9 => FLOP/nJ
+        self.flops as f64 / (self.energy_pj * 1e-3)
+    }
+
+    /// FPU utilization: element MACs+muls+adds issued vs lane-cycles
+    /// available on `units` units with `lanes` lanes each.
+    pub fn fpu_utilization(&self, units: usize, lanes: usize) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        let used = (self.counters.vec_elem_alu
+            + self.counters.vec_elem_mul
+            + self.counters.vec_elem_mac) as f64;
+        used / (self.cycles as f64 * (units * lanes) as f64)
+    }
+}
+
+/// Simple fixed-width table builder for report output.
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for i in 0..ncols {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                let pad = widths[i] - cells[i].len();
+                if i == 0 {
+                    // left-align first column
+                    line.push_str(&cells[i]);
+                    line.push_str(&" ".repeat(pad));
+                } else {
+                    line.push_str(&" ".repeat(pad));
+                    line.push_str(&cells[i]);
+                }
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncols - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Emit rows as CSV (for plotting outside).
+pub fn to_csv(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    out.push_str(&header.join(","));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&row.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_add() {
+        let mut a = Counters::default();
+        a.scalar_alu = 5;
+        a.vec_elem_mac = 10;
+        a.cycles_unit_busy[1] = 3;
+        let mut b = Counters::default();
+        b.scalar_alu = 2;
+        b.vec_elem_mac = 1;
+        b.cycles_unit_busy[1] = 4;
+        a.add(&b);
+        assert_eq!(a.scalar_alu, 7);
+        assert_eq!(a.vec_elem_mac, 11);
+        assert_eq!(a.cycles_unit_busy[1], 7);
+    }
+
+    #[test]
+    fn derived_metrics() {
+        let m = RunMetrics {
+            cycles: 1000,
+            flops: 8000,
+            energy_pj: 4000.0,
+            ..Default::default()
+        };
+        assert!((m.flop_per_cycle() - 8.0).abs() < 1e-12);
+        assert!((m.pj_per_flop() - 0.5).abs() < 1e-12);
+        assert!((m.gflops_per_watt() - 2000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn utilization() {
+        let mut m = RunMetrics {
+            cycles: 100,
+            ..Default::default()
+        };
+        m.counters.vec_elem_mac = 400;
+        assert!((m.fpu_utilization(2, 4) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_cycle_metrics_are_safe() {
+        let m = RunMetrics::default();
+        assert_eq!(m.flop_per_cycle(), 0.0);
+        assert!(m.pj_per_flop().is_nan());
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["kernel", "cycles", "flop/cyc"]);
+        t.row(&["fmatmul".into(), "12345".into(), "7.90".into()]);
+        t.row(&["fft".into(), "987".into(), "3.1".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("kernel"));
+        assert!(lines[2].starts_with("fmatmul"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into()]);
+    }
+
+    #[test]
+    fn csv_output() {
+        let csv = to_csv(&["a", "b"], &[vec!["1".into(), "2".into()]]);
+        assert_eq!(csv, "a,b\n1,2\n");
+    }
+}

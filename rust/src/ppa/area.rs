@@ -1,0 +1,161 @@
+//! Block-level area model (kGE, 12-nm).
+//!
+//! Block sizes follow the published Spatz cluster breakdown scaled to the
+//! dual-core configuration the paper uses; the Spatzformer delta is the
+//! three blocks §II adds. The "dedicated third core" alternative is what
+//! the paper compares against for mixed scalar-vector workloads: a third
+//! Snitch core plus the icache, interconnect and infrastructure growth it
+//! drags in.
+
+use crate::config::ArchKind;
+use crate::metrics::Table;
+
+/// One named block with its complexity in kilo-gate-equivalents.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Block {
+    pub name: &'static str,
+    pub kge: f64,
+    /// Instances of this block in the cluster.
+    pub count: usize,
+}
+
+impl Block {
+    pub fn total(&self) -> f64 {
+        self.kge * self.count as f64
+    }
+}
+
+/// Area inventory for one architecture variant.
+#[derive(Debug, Clone)]
+pub struct AreaModel {
+    pub arch_name: String,
+    pub blocks: Vec<Block>,
+}
+
+impl AreaModel {
+    /// The non-reconfigurable dual-core Spatz cluster.
+    pub fn baseline() -> Self {
+        Self {
+            arch_name: "spatz-cluster (baseline)".into(),
+            blocks: vec![
+                Block { name: "snitch scalar core", kge: 25.0, count: 2 },
+                Block { name: "spatz VRF (2 KiB)", kge: 210.0, count: 2 },
+                Block { name: "spatz FPU lanes (4x fp32)", kge: 330.0, count: 2 },
+                Block { name: "spatz LSU", kge: 95.0, count: 2 },
+                Block { name: "spatz sequencer/ctrl", kge: 70.0, count: 2 },
+                Block { name: "TCDM SRAM (128 KiB)", kge: 2048.0, count: 1 },
+                Block { name: "TCDM interconnect", kge: 140.0, count: 1 },
+                Block { name: "shared icache (4 KiB)", kge: 170.0, count: 1 },
+                Block { name: "cluster DMA", kge: 60.0, count: 1 },
+                Block { name: "peripherals/CSRs/barrier", kge: 51.0, count: 1 },
+            ],
+        }
+    }
+
+    /// Spatzformer: baseline + the reconfiguration stage (§II).
+    pub fn spatzformer() -> Self {
+        let mut m = Self::baseline();
+        m.arch_name = "spatzformer".into();
+        m.blocks.extend([
+            Block { name: "reconfig: instr broadcast stage", kge: 28.0, count: 1 },
+            Block { name: "reconfig: retire merge", kge: 14.0, count: 1 },
+            Block { name: "reconfig: mode CSR + drain ctrl", kge: 13.0, count: 1 },
+        ]);
+        m
+    }
+
+    /// The alternative the paper argues against: adding a dedicated
+    /// third scalar core for control tasks.
+    pub fn dedicated_core_alternative() -> Self {
+        let mut m = Self::baseline();
+        m.arch_name = "baseline + dedicated scalar core".into();
+        m.blocks.extend([
+            Block { name: "3rd snitch scalar core", kge: 25.0, count: 1 },
+            Block { name: "icache way/port growth", kge: 78.0, count: 1 },
+            Block { name: "TCDM interconnect port growth", kge: 92.0, count: 1 },
+            Block { name: "barrier/debug/peripheral growth", kge: 41.0, count: 1 },
+        ]);
+        m
+    }
+
+    pub fn for_arch(arch: ArchKind) -> Self {
+        match arch {
+            ArchKind::Baseline => Self::baseline(),
+            ArchKind::Spatzformer => Self::spatzformer(),
+        }
+    }
+
+    /// Total cluster area in kGE.
+    pub fn total_kge(&self) -> f64 {
+        self.blocks.iter().map(|b| b.total()).sum()
+    }
+
+    /// Percentage delta of this model over `other`.
+    pub fn overhead_vs(&self, other: &AreaModel) -> f64 {
+        (self.total_kge() - other.total_kge()) / other.total_kge() * 100.0
+    }
+
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&["block", "count", "kGE", "total kGE"]);
+        for b in &self.blocks {
+            t.row(&[
+                b.name.to_string(),
+                b.count.to_string(),
+                format!("{:.1}", b.kge),
+                format!("{:.1}", b.total()),
+            ]);
+        }
+        t.row(&[
+            format!("TOTAL ({})", self.arch_name),
+            "".into(),
+            "".into(),
+            format!("{:.1}", self.total_kge()),
+        ]);
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reconfig_overhead_matches_paper() {
+        let base = AreaModel::baseline();
+        let sf = AreaModel::spatzformer();
+        let delta_kge = sf.total_kge() - base.total_kge();
+        assert!((delta_kge - 55.0).abs() < 1e-9, "delta={delta_kge} kGE");
+        let pct = sf.overhead_vs(&base);
+        assert!((pct - 1.4).abs() < 0.1, "overhead={pct}%");
+    }
+
+    #[test]
+    fn dedicated_core_is_at_least_6_percent_and_4x_larger() {
+        let base = AreaModel::baseline();
+        let alt = AreaModel::dedicated_core_alternative();
+        let pct = alt.overhead_vs(&base);
+        assert!(pct >= 6.0, "alt overhead={pct}%");
+        let sf_delta = AreaModel::spatzformer().total_kge() - base.total_kge();
+        let alt_delta = alt.total_kge() - base.total_kge();
+        assert!(alt_delta / sf_delta > 4.0, "ratio={}", alt_delta / sf_delta);
+    }
+
+    #[test]
+    fn baseline_total_is_about_3_9_mge() {
+        let t = AreaModel::baseline().total_kge();
+        assert!((3800.0..4050.0).contains(&t), "total={t} kGE");
+    }
+
+    #[test]
+    fn render_contains_blocks_and_total() {
+        let s = AreaModel::spatzformer().render();
+        assert!(s.contains("broadcast stage"));
+        assert!(s.contains("TOTAL"));
+    }
+
+    #[test]
+    fn for_arch_dispatch() {
+        assert_eq!(AreaModel::for_arch(ArchKind::Baseline).blocks.len(), 10);
+        assert_eq!(AreaModel::for_arch(ArchKind::Spatzformer).blocks.len(), 13);
+    }
+}

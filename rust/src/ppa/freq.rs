@@ -1,0 +1,138 @@
+//! Frequency (fmax) model: critical-path table per corner.
+//!
+//! The paper reports that reconfigurability does not degrade fmax:
+//! 1.2 GHz at TT/0.8V/25C and 950 MHz at SS/0.72V/125C. In the model the
+//! broadcast stage is a *pipelined* path (its own register stage —
+//! that is exactly why MM dispatch pays `broadcast_latency`), so it adds
+//! a path that is shorter than the existing VRF→FPU critical path and
+//! fmax is unchanged.
+
+use crate::config::{ArchKind, Corner};
+use crate::metrics::Table;
+
+/// One timing path with its TT-corner delay in picoseconds.
+#[derive(Debug, Clone)]
+pub struct TimingPath {
+    pub name: &'static str,
+    pub tt_ps: f64,
+    /// Present only on the reconfigurable variant.
+    pub spatzformer_only: bool,
+}
+
+/// The critical-path table.
+#[derive(Debug, Clone)]
+pub struct FreqModel {
+    paths: Vec<TimingPath>,
+    /// SS-corner derating factor on all paths (slow silicon, low V, hot).
+    ss_derate: f64,
+}
+
+impl Default for FreqModel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FreqModel {
+    pub fn new() -> Self {
+        Self {
+            paths: vec![
+                TimingPath { name: "VRF read -> FPU mac -> VRF write", tt_ps: 833.0, spatzformer_only: false },
+                TimingPath { name: "LSU addrgen -> TCDM arbiter -> bank", tt_ps: 801.0, spatzformer_only: false },
+                TimingPath { name: "snitch decode -> accel port", tt_ps: 742.0, spatzformer_only: false },
+                TimingPath { name: "icache tag -> hit mux", tt_ps: 688.0, spatzformer_only: false },
+                // The added mux/fan-out stage is registered: its path is
+                // accel-port register -> broadcast mux -> unit queue reg.
+                TimingPath { name: "broadcast stage mux (pipelined)", tt_ps: 611.0, spatzformer_only: true },
+                TimingPath { name: "retire merge -> scoreboard", tt_ps: 574.0, spatzformer_only: true },
+            ],
+            // 833 ps TT -> 1.2 GHz; SS 950 MHz -> 1052.6 ps: derate 1.2636
+            ss_derate: 1.2636,
+        }
+    }
+
+    fn delay_ps(&self, p: &TimingPath, corner: Corner) -> f64 {
+        match corner {
+            Corner::Tt => p.tt_ps,
+            Corner::Ss => p.tt_ps * self.ss_derate,
+        }
+    }
+
+    /// Critical path delay for the architecture at the corner.
+    pub fn critical_path_ps(&self, arch: ArchKind, corner: Corner) -> f64 {
+        self.paths
+            .iter()
+            .filter(|p| !p.spatzformer_only || arch == ArchKind::Spatzformer)
+            .map(|p| self.delay_ps(p, corner))
+            .fold(0.0, f64::max)
+    }
+
+    /// Maximum frequency in GHz.
+    pub fn fmax_ghz(&self, arch: ArchKind, corner: Corner) -> f64 {
+        1000.0 / self.critical_path_ps(arch, corner)
+    }
+
+    pub fn render(&self, corner: Corner) -> String {
+        let mut t = Table::new(&["path", "delay (ps)", "arch"]);
+        for p in &self.paths {
+            t.row(&[
+                p.name.to_string(),
+                format!("{:.0}", self.delay_ps(p, corner)),
+                if p.spatzformer_only { "spatzformer".into() } else { "both".into() },
+            ]);
+        }
+        for arch in [ArchKind::Baseline, ArchKind::Spatzformer] {
+            t.row(&[
+                format!("fmax {}", arch.name()),
+                format!("{:.3} GHz", self.fmax_ghz(arch, corner)),
+                corner.name().to_string(),
+            ]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tt_fmax_is_1_2_ghz() {
+        let f = FreqModel::new();
+        let fmax = f.fmax_ghz(ArchKind::Spatzformer, Corner::Tt);
+        assert!((fmax - 1.2).abs() < 0.01, "fmax={fmax}");
+    }
+
+    #[test]
+    fn ss_fmax_is_950_mhz() {
+        let f = FreqModel::new();
+        let fmax = f.fmax_ghz(ArchKind::Spatzformer, Corner::Ss);
+        assert!((fmax - 0.95).abs() < 0.01, "fmax={fmax}");
+    }
+
+    #[test]
+    fn reconfigurability_does_not_degrade_fmax() {
+        let f = FreqModel::new();
+        for corner in [Corner::Tt, Corner::Ss] {
+            let base = f.fmax_ghz(ArchKind::Baseline, corner);
+            let sf = f.fmax_ghz(ArchKind::Spatzformer, corner);
+            assert_eq!(base, sf, "corner {corner:?}");
+        }
+    }
+
+    #[test]
+    fn added_paths_are_sub_critical() {
+        let f = FreqModel::new();
+        let crit = f.critical_path_ps(ArchKind::Baseline, Corner::Tt);
+        for p in f.paths.iter().filter(|p| p.spatzformer_only) {
+            assert!(p.tt_ps < crit, "{} would degrade fmax", p.name);
+        }
+    }
+
+    #[test]
+    fn render_lists_fmax_rows() {
+        let s = FreqModel::new().render(Corner::Tt);
+        assert!(s.contains("fmax baseline"));
+        assert!(s.contains("fmax spatzformer"));
+    }
+}

@@ -1,0 +1,19 @@
+//! PPA (power/performance/area) model, calibrated to the paper's 12-nm
+//! implementation results.
+//!
+//! The paper's PPA claims are *relative*: +1.4% area for reconfigurability
+//! vs ≥ +6% for a dedicated third core; no fmax degradation; −5%/−1%
+//! average energy efficiency in SM/MM. The models here are block-level
+//! and event-level, so those comparisons are reproduced structurally
+//! rather than copied: the area delta is the sum of the added blocks, the
+//! energy delta falls out of event counts and per-block leakage, and fmax
+//! falls out of a critical-path table that the (pipelined) broadcast
+//! stage does not enter.
+
+pub mod area;
+pub mod energy;
+pub mod freq;
+
+pub use area::AreaModel;
+pub use energy::price_run;
+pub use freq::FreqModel;

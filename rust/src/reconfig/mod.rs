@@ -1,0 +1,821 @@
+//! The Spatzformer reconfiguration stage — the paper's architectural
+//! contribution (§II).
+//!
+//! Sits between the scalar cores' accelerator ports and the two vector
+//! units:
+//!
+//! * **Split mode**: core *i*'s offloads route straight to unit *i*
+//!   (combinational bypass — zero added latency, matching the paper's
+//!   "no fmax degradation / baseline-identical SM timing").
+//! * **Merge mode**: core 0's offloads are *broadcast* to both units.
+//!   The hart-level vl is split `[0, vl0)` / `[vl0, vl)` between units
+//!   (vl0 = per-unit VLMAX), giving the single hart a doubled VLMAX.
+//!   Dispatches cross one pipeline stage (`broadcast_latency`) and
+//!   retires are *merged*: an instruction retires at the hart level when
+//!   both halves have completed. Reductions pay an extra cross-unit
+//!   merge (`mm_reduction_merge_latency`).
+//!
+//! This module also owns the hart-level vector CSR state (vl/LMUL set by
+//! `vsetvli`) and performs the *functional* execution of every vector
+//! instruction at dispatch time, in hart program order, against the
+//! units' VRFs and the TCDM — the timing model in [`crate::spatz`] is
+//! then free to overlap without affecting results.
+
+use crate::config::{ArchKind, ClusterConfig, Mode};
+use crate::isa::{ElemWidth, Lmul, VReg, VecOpClass, VectorOp};
+use crate::mem::Tcdm;
+use crate::metrics::Counters;
+use crate::spatz::{OffloadEntry, RetireMsg, SpatzUnit};
+
+/// Result of a dispatch attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchResult {
+    Accepted,
+    /// Target unit queue(s) full — the scalar core must retry.
+    Stall,
+}
+
+/// Per-hart vector CSR state (vtype/vl).
+#[derive(Debug, Clone, Copy)]
+struct VState {
+    vl: u32,
+    lmul: Lmul,
+    #[allow(dead_code)]
+    ew: ElemWidth,
+}
+
+impl Default for VState {
+    fn default() -> Self {
+        Self { vl: 0, lmul: Lmul::M1, ew: ElemWidth::E32 }
+    }
+}
+
+/// The reconfiguration stage state.
+pub struct ReconfigStage {
+    arch: ArchKind,
+    mode: Mode,
+    vstate: [VState; 2],
+    /// Outstanding (dispatched, not yet retired) instructions per hart —
+    /// drives fences and mode-switch drains.
+    outstanding: [u64; 2],
+    seq_counter: u64,
+    /// MM broadcasts awaiting both halves: (seq, halves remaining).
+    pending_merge: Vec<(u64, u8)>,
+    // cached config
+    vlmax_unit_e32: usize,
+    lanes: usize,
+    broadcast_latency: u64,
+    mm_red_merge: u64,
+    /// Scratch operand buffers for functional execution (avoid per-
+    /// dispatch zeroing; max vl = 2 units x VLMAX(m8)).
+    buf_a: Box<[u32; 256]>,
+    buf_b: Box<[u32; 256]>,
+    buf_d: Box<[u32; 256]>,
+}
+
+impl ReconfigStage {
+    pub fn new(cfg: &ClusterConfig) -> Self {
+        Self {
+            arch: cfg.arch,
+            mode: Mode::Split,
+            vstate: [VState::default(); 2],
+            outstanding: [0; 2],
+            seq_counter: 0,
+            pending_merge: Vec::new(),
+            vlmax_unit_e32: cfg.elems_per_vreg(32),
+            lanes: cfg.lanes,
+            broadcast_latency: cfg.broadcast_latency,
+            mm_red_merge: cfg.mm_reduction_merge_latency,
+            buf_a: Box::new([0; 256]),
+            buf_b: Box::new([0; 256]),
+            buf_d: Box::new([0; 256]),
+        }
+    }
+
+    pub fn mode(&self) -> Mode {
+        self.mode
+    }
+
+    pub fn arch(&self) -> ArchKind {
+        self.arch
+    }
+
+    /// Effective VLMAX for `hart` at E32 with the given LMUL under the
+    /// current mode (merge mode doubles it for hart 0).
+    pub fn vlmax(&self, hart: usize, lmul: Lmul) -> u32 {
+        let units = if self.mode == Mode::Merge && hart == 0 { 2 } else { 1 };
+        (self.vlmax_unit_e32 * lmul.factor() * units) as u32
+    }
+
+    /// Outstanding instruction count for `hart` (fence condition).
+    pub fn outstanding(&self, hart: usize) -> u64 {
+        self.outstanding[hart]
+    }
+
+    /// All harts drained (mode-switch condition).
+    pub fn all_drained(&self) -> bool {
+        self.outstanding.iter().all(|&o| o == 0)
+    }
+
+    /// Flip the operating mode. Caller (the cluster) must have drained
+    /// both harts and paid `mode_switch_latency`.
+    pub fn set_mode(&mut self, mode: Mode) {
+        debug_assert!(self.all_drained(), "mode switch on busy units");
+        debug_assert_eq!(
+            self.arch,
+            ArchKind::Spatzformer,
+            "baseline cluster cannot switch modes"
+        );
+        self.mode = mode;
+    }
+
+    /// Process retire messages from the units, merging MM halves.
+    pub fn on_retire(&mut self, msg: RetireMsg) {
+        if let Some(pos) = self.pending_merge.iter().position(|&(s, _)| s == msg.seq) {
+            let (_, ref mut remaining) = self.pending_merge[pos];
+            *remaining -= 1;
+            if *remaining == 0 {
+                self.pending_merge.swap_remove(pos);
+                self.outstanding[msg.hart] -= 1;
+            }
+        } else {
+            self.outstanding[msg.hart] -= 1;
+        }
+    }
+
+    /// Attempt to dispatch `op` from `hart`. On success the op is
+    /// functionally executed (VRFs/TCDM updated) and timing entries are
+    /// pushed to the unit queue(s).
+    pub fn try_dispatch(
+        &mut self,
+        hart: usize,
+        op: VectorOp,
+        units: &mut [SpatzUnit; 2],
+        tcdm: &mut Tcdm,
+        counters: &mut Counters,
+        now: u64,
+    ) -> DispatchResult {
+        let merged = self.mode == Mode::Merge;
+        if merged {
+            assert_eq!(
+                hart, 0,
+                "merge mode: only core 0 may issue vector instructions"
+            );
+        }
+
+        // vsetvli executes in the reconfig stage itself (single cycle,
+        // no unit occupancy).
+        if let VectorOp::SetVl { avl, ew, lmul } = op {
+            let vlmax = self.vlmax(hart, lmul);
+            self.vstate[hart] = VState { vl: avl.min(vlmax), lmul, ew };
+            counters.vec_dispatch += 1;
+            counters.hart_vec_dispatch += 1;
+            return DispatchResult::Accepted;
+        }
+
+        let vs = self.vstate[hart];
+        let vl = vs.vl;
+        if vl == 0 {
+            // nothing to do; architecturally a no-op
+            counters.vec_dispatch += 1;
+            counters.hart_vec_dispatch += 1;
+            return DispatchResult::Accepted;
+        }
+
+        // Work split across units. Merge mode stripes the hart-level vl
+        // across both units at lane-group granularity (element i goes to
+        // unit (i/lanes) mod 2): the wide engine's natural interleaving,
+        // which keeps the two LSUs on complementary banks for strided
+        // streams and engages both units even when vl <= per-unit VLMAX.
+        let (vl0, vl1) = if merged {
+            let v0 = self.split_count(vl, 0);
+            (v0, vl - v0)
+        } else {
+            (vl, 0)
+        };
+        let targets: &[(usize, u32)] = &if merged {
+            if vl1 > 0 {
+                vec![(0usize, vl0), (1usize, vl1)]
+            } else {
+                vec![(0, vl0)]
+            }
+        } else {
+            vec![(hart, vl)]
+        }[..];
+
+        // Back-pressure: every target unit must have queue space.
+        if targets.iter().any(|&(u, _)| !units[u].queue_has_space()) {
+            return DispatchResult::Stall;
+        }
+
+        // ---- functional execution (hart program order) ----
+        self.exec_functional(&op, hart, vl, units, tcdm, merged);
+
+        // ---- event counting ----
+        let nsrc = op.sources().len() as u64;
+        let ndst = if op.dest().is_some() { 1u64 } else { 0 };
+        counters.vrf_read += vl as u64 * nsrc;
+        counters.vrf_write += vl as u64 * ndst;
+        match op.class() {
+            VecOpClass::Alu => counters.vec_elem_alu += vl as u64,
+            VecOpClass::Mul => counters.vec_elem_mul += vl as u64,
+            VecOpClass::Mac => counters.vec_elem_mac += vl as u64,
+            VecOpClass::Move => counters.vec_elem_move += vl as u64,
+            VecOpClass::Reduction => counters.vec_elem_red += vl as u64,
+            VecOpClass::MemLoad | VecOpClass::MemStore => {
+                counters.vec_elem_mem += vl as u64
+            }
+            VecOpClass::Config => unreachable!(),
+        }
+
+        // ---- timing entries ----
+        let seq = self.seq_counter;
+        self.seq_counter += 1;
+        self.outstanding[hart] += 1;
+        counters.hart_vec_dispatch += 1;
+        if targets.len() == 2 {
+            self.pending_merge.push((seq, 2));
+        }
+        let is_reduction = op.class() == VecOpClass::Reduction;
+        for &(unit_id, uvl) in targets {
+            let addrs = self.element_addrs(&op, unit_id, vl, uvl, merged, &units[unit_id]);
+            let entry = OffloadEntry {
+                op,
+                vl: uvl,
+                lmul: vs.lmul.factor(),
+                seq,
+                hart,
+                ready_at: now + 1 + if merged { self.broadcast_latency } else { 0 },
+                extra_cycles: if is_reduction && merged { self.mm_red_merge } else { 0 },
+                addrs,
+            };
+            units[unit_id].enqueue(entry);
+            counters.vec_dispatch += 1;
+            if merged {
+                counters.broadcast_dispatch += 1;
+            }
+        }
+        DispatchResult::Accepted
+    }
+
+    /// Map a hart-level element index to (unit, local element) under the
+    /// current split (split mode: everything on `hart`'s unit; merge
+    /// mode: lane-group striping).
+    #[inline]
+    fn locate(&self, hart: usize, merged: bool, e: u32) -> (usize, usize) {
+        locate_elem(self.lanes as u32, hart, merged, e)
+    }
+
+    /// Number of the hart-level vl's elements owned by `unit` in MM.
+    fn split_count(&self, vl: u32, unit: usize) -> u32 {
+        let lanes = self.lanes as u32;
+        let full_groups = vl / lanes;
+        let rem = vl % lanes;
+        let mut count = (full_groups / 2) * lanes;
+        if full_groups % 2 == 1 && unit == 0 {
+            count += lanes; // the odd full group goes to unit 0
+        }
+        // the trailing partial group goes to unit (full_groups % 2)
+        if rem > 0 && (full_groups % 2) as usize == unit {
+            count += rem;
+        }
+        count
+    }
+
+    /// TCDM addresses touched by this unit's share of a memory op (used
+    /// for bank-conflict timing), in local element order.
+    fn element_addrs(
+        &self,
+        op: &VectorOp,
+        unit_id: usize,
+        vl: u32,
+        uvl: u32,
+        merged: bool,
+        unit: &SpatzUnit,
+    ) -> Vec<u32> {
+        let mut addrs = Vec::with_capacity(uvl as usize);
+        match *op {
+            VectorOp::Load { base, stride, .. } | VectorOp::Store { vs: _, base, stride } => {
+                for e in 0..vl {
+                    let (u, _) = self.locate(0, merged, e);
+                    if merged && u != unit_id {
+                        continue;
+                    }
+                    if !merged {
+                        // split mode: all elements belong to this unit
+                    }
+                    addrs.push((base as i64 + e as i64 * stride as i64 * 4) as u32);
+                }
+            }
+            VectorOp::LoadIndexed { base, vidx, .. }
+            | VectorOp::StoreIndexed { base, vidx, .. } => {
+                for le in 0..uvl {
+                    addrs.push(base + unit.vrf.read_u32(vidx, le as usize));
+                }
+            }
+            _ => {}
+        }
+        debug_assert!(addrs.is_empty() || addrs.len() == uvl as usize);
+        addrs
+    }
+
+    /// Functional execution against the VRFs and the TCDM; in split mode
+    /// all elements live on `units[hart]`, in merge mode they are striped
+    /// per [`Self::locate`]. Operands are staged through stack buffers so
+    /// the elementwise math runs over plain slices (hot path: this is
+    /// where the simulated cluster's real data flows).
+    fn exec_functional(
+        &mut self,
+        op: &VectorOp,
+        hart: usize,
+        vl: u32,
+        units: &mut [SpatzUnit; 2],
+        tcdm: &mut Tcdm,
+        merged: bool,
+    ) {
+        const VLCAP: usize = 256;
+        let n = vl as usize;
+        debug_assert!(n <= VLCAP, "vl {n} exceeds buffer capacity");
+        let lanes = self.lanes as u32;
+        let a = &mut *self.buf_a;
+        let b = &mut *self.buf_b;
+        let d = &mut *self.buf_d;
+        let g = |units: &[SpatzUnit; 2], reg, buf: &mut [u32; VLCAP]| {
+            gather_vals(lanes, units, hart, merged, reg, n, buf)
+        };
+        macro_rules! ew {
+            // elementwise fp32 compute into d (monomorphized per arm)
+            ($body:expr) => {{
+                for (e, slot) in d[..n].iter_mut().enumerate() {
+                    let v: f32 = $body(e);
+                    *slot = v.to_bits();
+                }
+            }};
+        }
+        match *op {
+            VectorOp::SetVl { .. } => unreachable!(),
+            VectorOp::Load { vd, base, stride } => {
+                for (e, slot) in d[..n].iter_mut().enumerate() {
+                    let addr = (base as i64 + e as i64 * stride as i64 * 4) as u32;
+                    *slot = tcdm.read_u32(addr);
+                }
+                scatter_vals(lanes, units, hart, merged, vd, n, &d[..]);
+            }
+            VectorOp::Store { vs, base, stride } => {
+                g(units, vs, &mut *a);
+                for (e, &w) in a[..n].iter().enumerate() {
+                    let addr = (base as i64 + e as i64 * stride as i64 * 4) as u32;
+                    tcdm.write_u32(addr, w);
+                }
+            }
+            VectorOp::LoadIndexed { vd, base, vidx } => {
+                g(units, vidx, &mut *a);
+                for e in 0..n {
+                    d[e] = tcdm.read_u32(base + a[e]);
+                }
+                scatter_vals(lanes, units, hart, merged, vd, n, &d[..]);
+            }
+            VectorOp::StoreIndexed { vs, base, vidx } => {
+                g(units, vidx, &mut *a);
+                g(units, vs, &mut *b);
+                for e in 0..n {
+                    tcdm.write_u32(base + a[e], b[e]);
+                }
+            }
+            VectorOp::AddVV { vd, vs1, vs2 } => {
+                g(units, vs1, &mut *a);
+                g(units, vs2, &mut *b);
+                ew!(|e| f32::from_bits(a[e]) + f32::from_bits(b[e]));
+                scatter_vals(lanes, units, hart, merged, vd, n, &d[..]);
+            }
+            VectorOp::SubVV { vd, vs1, vs2 } => {
+                g(units, vs1, &mut *a);
+                g(units, vs2, &mut *b);
+                ew!(|e| f32::from_bits(a[e]) - f32::from_bits(b[e]));
+                scatter_vals(lanes, units, hart, merged, vd, n, &d[..]);
+            }
+            VectorOp::MulVV { vd, vs1, vs2 } => {
+                g(units, vs1, &mut *a);
+                g(units, vs2, &mut *b);
+                ew!(|e| f32::from_bits(a[e]) * f32::from_bits(b[e]));
+                scatter_vals(lanes, units, hart, merged, vd, n, &d[..]);
+            }
+            VectorOp::MacVV { vd, vs1, vs2 } => {
+                g(units, vs1, &mut *a);
+                g(units, vs2, &mut *b);
+                g(units, vd, &mut *d);
+                for e in 0..n {
+                    let v = f32::from_bits(d[e])
+                        + f32::from_bits(a[e]) * f32::from_bits(b[e]);
+                    d[e] = v.to_bits();
+                }
+                scatter_vals(lanes, units, hart, merged, vd, n, &d[..]);
+            }
+            VectorOp::NmsacVV { vd, vs1, vs2 } => {
+                g(units, vs1, &mut *a);
+                g(units, vs2, &mut *b);
+                g(units, vd, &mut *d);
+                for e in 0..n {
+                    let v = f32::from_bits(d[e])
+                        - f32::from_bits(a[e]) * f32::from_bits(b[e]);
+                    d[e] = v.to_bits();
+                }
+                scatter_vals(lanes, units, hart, merged, vd, n, &d[..]);
+            }
+            VectorOp::AddVF { vd, vs, f } => {
+                g(units, vs, &mut *a);
+                ew!(|e| f32::from_bits(a[e]) + f);
+                scatter_vals(lanes, units, hart, merged, vd, n, &d[..]);
+            }
+            VectorOp::MulVF { vd, vs, f } => {
+                g(units, vs, &mut *a);
+                ew!(|e| f32::from_bits(a[e]) * f);
+                scatter_vals(lanes, units, hart, merged, vd, n, &d[..]);
+            }
+            VectorOp::MacVF { vd, vs, f } => {
+                g(units, vs, &mut *a);
+                g(units, vd, &mut *d);
+                for e in 0..n {
+                    let v = f32::from_bits(d[e]) + f * f32::from_bits(a[e]);
+                    d[e] = v.to_bits();
+                }
+                scatter_vals(lanes, units, hart, merged, vd, n, &d[..]);
+            }
+            VectorOp::MovVF { vd, f } => {
+                d[..n].fill(f.to_bits());
+                scatter_vals(lanes, units, hart, merged, vd, n, &d[..]);
+            }
+            VectorOp::MovVV { vd, vs } => {
+                g(units, vs, &mut *a);
+                scatter_vals(lanes, units, hart, merged, vd, n, &a[..]);
+            }
+            VectorOp::RedSum { vd, vs } => {
+                // ordered sum (vfredusum with scalar 0 seed)
+                g(units, vs, &mut *a);
+                let mut acc = 0.0f32;
+                for &w in &a[..n] {
+                    acc += f32::from_bits(w);
+                }
+                // result lands in element 0; in merge mode the merge
+                // network broadcasts it to both units' vd[0]
+                if merged {
+                    units[0].vrf.write_f32(vd, 0, acc);
+                    units[1].vrf.write_f32(vd, 0, acc);
+                } else {
+                    units[hart].vrf.write_f32(vd, 0, acc);
+                }
+            }
+        }
+    }
+}
+
+/// Element -> (unit, local element) mapping for merge-mode lane-group
+/// striping (free function: used on the functional hot path without
+/// borrowing the stage).
+#[inline]
+fn locate_elem(lanes: u32, hart: usize, merged: bool, e: u32) -> (usize, usize) {
+    if !merged {
+        return (hart, e as usize);
+    }
+    let group = e / lanes;
+    let unit = (group & 1) as usize;
+    let local = (group / 2) * lanes + e % lanes;
+    (unit, local as usize)
+}
+
+/// Gather a register group's first `vl` values into `out` (split mode:
+/// one contiguous slice copy; merge mode: lane-group striping).
+#[inline]
+fn gather_vals(
+    lanes: u32,
+    units: &[SpatzUnit; 2],
+    hart: usize,
+    merged: bool,
+    reg: VReg,
+    vl: usize,
+    out: &mut [u32],
+) {
+    if !merged {
+        out[..vl].copy_from_slice(units[hart].vrf.group_words(reg, vl));
+    } else {
+        for e in 0..vl {
+            let (u, le) = locate_elem(lanes, hart, true, e as u32);
+            out[e] = units[u].vrf.read_u32(reg, le);
+        }
+    }
+}
+
+/// Scatter `vl` values into a register group (inverse of [`gather_vals`]).
+#[inline]
+fn scatter_vals(
+    lanes: u32,
+    units: &mut [SpatzUnit; 2],
+    hart: usize,
+    merged: bool,
+    reg: VReg,
+    vl: usize,
+    src: &[u32],
+) {
+    if !merged {
+        units[hart]
+            .vrf
+            .group_words_mut(reg, vl)
+            .copy_from_slice(&src[..vl]);
+    } else {
+        for e in 0..vl {
+            let (u, le) = locate_elem(lanes, hart, true, e as u32);
+            units[u].vrf.write_u32(reg, le, src[e]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+
+    fn setup(arch: ArchKind) -> ([SpatzUnit; 2], Tcdm, ReconfigStage, Counters) {
+        let mut cfg = ClusterConfig::default();
+        cfg.arch = arch;
+        let units = [SpatzUnit::new(0, &cfg), SpatzUnit::new(1, &cfg)];
+        let tcdm = Tcdm::new(&cfg);
+        let stage = ReconfigStage::new(&cfg);
+        (units, tcdm, stage, Counters::default())
+    }
+
+    fn setvl(
+        stage: &mut ReconfigStage,
+        hart: usize,
+        avl: u32,
+        lmul: Lmul,
+        units: &mut [SpatzUnit; 2],
+        tcdm: &mut Tcdm,
+        c: &mut Counters,
+    ) {
+        let r = stage.try_dispatch(
+            hart,
+            VectorOp::SetVl { avl, ew: ElemWidth::E32, lmul },
+            units,
+            tcdm,
+            c,
+            0,
+        );
+        assert_eq!(r, DispatchResult::Accepted);
+    }
+
+    #[test]
+    fn split_mode_vlmax_is_single_unit() {
+        let (_, _, stage, _) = setup(ArchKind::Spatzformer);
+        assert_eq!(stage.vlmax(0, Lmul::M8), 128);
+        assert_eq!(stage.vlmax(1, Lmul::M8), 128);
+    }
+
+    #[test]
+    fn merge_mode_doubles_vlmax_for_hart0() {
+        let (mut units, mut tcdm, mut stage, mut c) = setup(ArchKind::Spatzformer);
+        stage.set_mode(Mode::Merge);
+        assert_eq!(stage.vlmax(0, Lmul::M8), 256);
+        // and vsetvli grants the doubled vl
+        setvl(&mut stage, 0, 1000, Lmul::M8, &mut units, &mut tcdm, &mut c);
+        // dispatch a broadcast op and verify both units got work
+        let r = stage.try_dispatch(
+            0,
+            VectorOp::MovVF { vd: VReg(0), f: 1.5 },
+            &mut units,
+            &mut tcdm,
+            &mut c,
+            0,
+        );
+        assert_eq!(r, DispatchResult::Accepted);
+        assert!(!units[0].is_idle());
+        assert!(!units[1].is_idle());
+        assert_eq!(units[0].vrf.read_f32(VReg(0), 0), 1.5);
+        assert_eq!(units[1].vrf.read_f32(VReg(0), 127), 1.5);
+        assert_eq!(c.broadcast_dispatch, 2);
+    }
+
+    #[test]
+    fn split_mode_routes_to_own_unit() {
+        let (mut units, mut tcdm, mut stage, mut c) = setup(ArchKind::Spatzformer);
+        setvl(&mut stage, 1, 16, Lmul::M1, &mut units, &mut tcdm, &mut c);
+        stage
+            .try_dispatch(1, VectorOp::MovVF { vd: VReg(2), f: 3.0 }, &mut units, &mut tcdm, &mut c, 0);
+        assert!(units[0].is_idle());
+        assert!(!units[1].is_idle());
+        assert_eq!(units[1].vrf.read_f32(VReg(2), 15), 3.0);
+        assert_eq!(c.broadcast_dispatch, 0);
+    }
+
+    #[test]
+    fn functional_load_store_roundtrip() {
+        let (mut units, mut tcdm, mut stage, mut c) = setup(ArchKind::Spatzformer);
+        let data: Vec<f32> = (0..64).map(|i| i as f32 * 0.25).collect();
+        tcdm.write_f32_slice(0x100, &data);
+        setvl(&mut stage, 0, 64, Lmul::M4, &mut units, &mut tcdm, &mut c);
+        stage.try_dispatch(
+            0,
+            VectorOp::Load { vd: VReg(8), base: 0x100, stride: 1 },
+            &mut units,
+            &mut tcdm,
+            &mut c,
+            0,
+        );
+        stage.try_dispatch(
+            0,
+            VectorOp::MulVF { vd: VReg(16), vs: VReg(8), f: 2.0 },
+            &mut units,
+            &mut tcdm,
+            &mut c,
+            0,
+        );
+        // queue is 4 deep; this third dispatch still fits
+        stage.try_dispatch(
+            0,
+            VectorOp::Store { vs: VReg(16), base: 0x400, stride: 1 },
+            &mut units,
+            &mut tcdm,
+            &mut c,
+            0,
+        );
+        let out = tcdm.read_f32_slice(0x400, 64);
+        for (i, (&o, &d)) in out.iter().zip(data.iter()).enumerate() {
+            assert_eq!(o, d * 2.0, "elem {i}");
+        }
+    }
+
+    #[test]
+    fn merge_mode_split_is_functionally_seamless() {
+        // store a 256-element vector in MM: elements must land contiguously
+        let (mut units, mut tcdm, mut stage, mut c) = setup(ArchKind::Spatzformer);
+        stage.set_mode(Mode::Merge);
+        let data: Vec<f32> = (0..256).map(|i| (i as f32).sin()).collect();
+        tcdm.write_f32_slice(0x1000, &data);
+        setvl(&mut stage, 0, 256, Lmul::M8, &mut units, &mut tcdm, &mut c);
+        stage.try_dispatch(
+            0,
+            VectorOp::Load { vd: VReg(8), base: 0x1000, stride: 1 },
+            &mut units,
+            &mut tcdm,
+            &mut c,
+            0,
+        );
+        stage.try_dispatch(
+            0,
+            VectorOp::AddVF { vd: VReg(16), vs: VReg(8), f: 1.0 },
+            &mut units,
+            &mut tcdm,
+            &mut c,
+            0,
+        );
+        stage.try_dispatch(
+            0,
+            VectorOp::Store { vs: VReg(16), base: 0x2000, stride: 1 },
+            &mut units,
+            &mut tcdm,
+            &mut c,
+            0,
+        );
+        let out = tcdm.read_f32_slice(0x2000, 256);
+        for (i, (&o, &d)) in out.iter().zip(data.iter()).enumerate() {
+            assert_eq!(o, d + 1.0, "elem {i}");
+        }
+    }
+
+    #[test]
+    fn stall_when_queue_full() {
+        let (mut units, mut tcdm, mut stage, mut c) = setup(ArchKind::Spatzformer);
+        setvl(&mut stage, 0, 16, Lmul::M1, &mut units, &mut tcdm, &mut c);
+        // queue depth is 4
+        for _ in 0..4 {
+            let r = stage.try_dispatch(
+                0,
+                VectorOp::AddVV { vd: VReg(0), vs1: VReg(1), vs2: VReg(2) },
+                &mut units,
+                &mut tcdm,
+                &mut c,
+                0,
+            );
+            assert_eq!(r, DispatchResult::Accepted);
+        }
+        let r = stage.try_dispatch(
+            0,
+            VectorOp::AddVV { vd: VReg(0), vs1: VReg(1), vs2: VReg(2) },
+            &mut units,
+            &mut tcdm,
+            &mut c,
+            0,
+        );
+        assert_eq!(r, DispatchResult::Stall);
+    }
+
+    #[test]
+    fn retire_merge_requires_both_halves() {
+        let (mut units, mut tcdm, mut stage, mut c) = setup(ArchKind::Spatzformer);
+        stage.set_mode(Mode::Merge);
+        setvl(&mut stage, 0, 256, Lmul::M8, &mut units, &mut tcdm, &mut c);
+        stage.try_dispatch(
+            0,
+            VectorOp::MovVF { vd: VReg(0), f: 1.0 },
+            &mut units,
+            &mut tcdm,
+            &mut c,
+            0,
+        );
+        assert_eq!(stage.outstanding(0), 1);
+        stage.on_retire(RetireMsg { hart: 0, seq: 0 });
+        assert_eq!(stage.outstanding(0), 1, "one half is not enough");
+        stage.on_retire(RetireMsg { hart: 0, seq: 0 });
+        assert_eq!(stage.outstanding(0), 0);
+    }
+
+    #[test]
+    fn reduction_sums_across_units_in_merge_mode() {
+        let (mut units, mut tcdm, mut stage, mut c) = setup(ArchKind::Spatzformer);
+        stage.set_mode(Mode::Merge);
+        let data: Vec<f32> = (1..=256).map(|i| i as f32).collect();
+        tcdm.write_f32_slice(0, &data);
+        setvl(&mut stage, 0, 256, Lmul::M8, &mut units, &mut tcdm, &mut c);
+        stage.try_dispatch(
+            0,
+            VectorOp::Load { vd: VReg(8), base: 0, stride: 1 },
+            &mut units,
+            &mut tcdm,
+            &mut c,
+            0,
+        );
+        stage.try_dispatch(
+            0,
+            VectorOp::RedSum { vd: VReg(0), vs: VReg(8) },
+            &mut units,
+            &mut tcdm,
+            &mut c,
+            0,
+        );
+        let expect: f32 = (1..=256).map(|i| i as f32).sum();
+        assert_eq!(units[0].vrf.read_f32(VReg(0), 0), expect);
+        assert_eq!(units[1].vrf.read_f32(VReg(0), 0), expect);
+    }
+
+    #[test]
+    fn setvl_clamps_to_vlmax() {
+        let (mut units, mut tcdm, mut stage, mut c) = setup(ArchKind::Spatzformer);
+        setvl(&mut stage, 0, 10_000, Lmul::M8, &mut units, &mut tcdm, &mut c);
+        // dispatch a mov and check only 128 elements were written
+        stage.try_dispatch(
+            0,
+            VectorOp::MovVF { vd: VReg(8), f: 9.0 },
+            &mut units,
+            &mut tcdm,
+            &mut c,
+            0,
+        );
+        assert_eq!(units[0].vrf.read_f32(VReg(8), 127), 9.0);
+        assert_eq!(c.vec_elem_move, 128);
+    }
+
+    #[test]
+    #[should_panic(expected = "only core 0")]
+    fn merge_mode_rejects_hart1_vector_ops() {
+        let (mut units, mut tcdm, mut stage, mut c) = setup(ArchKind::Spatzformer);
+        stage.set_mode(Mode::Merge);
+        stage.try_dispatch(
+            1,
+            VectorOp::MovVF { vd: VReg(0), f: 0.0 },
+            &mut units,
+            &mut tcdm,
+            &mut c,
+            0,
+        );
+    }
+
+    #[test]
+    fn gather_uses_index_register_offsets() {
+        let (mut units, mut tcdm, mut stage, mut c) = setup(ArchKind::Spatzformer);
+        // data[i] = 100+i at addr 0; index table reverses order, at 0x800
+        let data: Vec<f32> = (0..16).map(|i| 100.0 + i as f32).collect();
+        tcdm.write_f32_slice(0, &data);
+        let idx: Vec<u32> = (0..16u32).map(|i| (15 - i) * 4).collect();
+        tcdm.write_u32_slice(0x800, &idx);
+        setvl(&mut stage, 0, 16, Lmul::M1, &mut units, &mut tcdm, &mut c);
+        stage.try_dispatch(
+            0,
+            VectorOp::Load { vd: VReg(1), base: 0x800, stride: 1 },
+            &mut units,
+            &mut tcdm,
+            &mut c,
+            0,
+        );
+        stage.try_dispatch(
+            0,
+            VectorOp::LoadIndexed { vd: VReg(2), base: 0, vidx: VReg(1) },
+            &mut units,
+            &mut tcdm,
+            &mut c,
+            0,
+        );
+        for e in 0..16 {
+            assert_eq!(units[0].vrf.read_f32(VReg(2), e), 100.0 + (15 - e) as f32);
+        }
+    }
+}

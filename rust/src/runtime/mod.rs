@@ -1,0 +1,244 @@
+//! PJRT runtime: load and execute the JAX/Pallas AOT artifacts.
+//!
+//! The build path (`make artifacts`) lowers each kernel's JAX computation
+//! — with the hot spots implemented as Pallas kernels — to HLO *text*
+//! (see `python/compile/aot.py`; text rather than a serialized proto
+//! because jax >= 0.5 emits 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects). This module loads those artifacts with the `xla`
+//! crate's PJRT CPU client and executes them from Rust.
+//!
+//! In this reproduction the runtime plays the role of a *golden model*:
+//! integration tests and the `verify` CLI command run every kernel on
+//! both the simulated RVV datapath and the XLA executable and assert the
+//! numerics agree. Python never runs on this path.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Name and shapes of an artifact, parsed from the manifest emitted by
+/// `aot.py`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// Input shapes, in argument order (e.g. `[[64, 64], [64, 64]]`).
+    pub input_shapes: Vec<Vec<i64>>,
+    /// Output shapes, in result order.
+    pub output_shapes: Vec<Vec<i64>>,
+}
+
+impl ArtifactSpec {
+    pub fn input_lens(&self) -> Vec<usize> {
+        self.input_shapes.iter().map(|s| numel(s)).collect()
+    }
+    pub fn output_lens(&self) -> Vec<usize> {
+        self.output_shapes.iter().map(|s| numel(s)).collect()
+    }
+}
+
+fn numel(shape: &[i64]) -> usize {
+    shape.iter().product::<i64>() as usize
+}
+
+/// A compiled kernel executable.
+pub struct CompiledKernel {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl CompiledKernel {
+    /// Execute on flattened f32 inputs; returns flattened f32 outputs.
+    pub fn run(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(
+            inputs.len() == self.spec.input_shapes.len(),
+            "{}: expected {} inputs, got {}",
+            self.spec.name,
+            self.spec.input_shapes.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (input, shape)) in inputs.iter().zip(&self.spec.input_shapes).enumerate() {
+            anyhow::ensure!(
+                input.len() == numel(shape),
+                "{}: input {i} length {} != shape {:?}",
+                self.spec.name,
+                input.len(),
+                shape
+            );
+            literals.push(xla::Literal::vec1(input).reshape(shape)?);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.spec.name))?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unpack the tuple
+        let elements = result.to_tuple()?;
+        let want = self.spec.output_lens();
+        anyhow::ensure!(
+            elements.len() == want.len(),
+            "{}: expected {} outputs, got {}",
+            self.spec.name,
+            want.len(),
+            elements.len()
+        );
+        let mut outputs = Vec::with_capacity(elements.len());
+        for (i, lit) in elements.into_iter().enumerate() {
+            let flat: Vec<f32> = lit
+                .reshape(&[want[i] as i64])
+                .with_context(|| format!("{}: reshaping output {i}", self.spec.name))?
+                .to_vec()?;
+            outputs.push(flat);
+        }
+        Ok(outputs)
+    }
+}
+
+/// The artifact runtime: a PJRT CPU client plus the kernel registry.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    specs: HashMap<String, ArtifactSpec>,
+    compiled: HashMap<String, CompiledKernel>,
+}
+
+impl XlaRuntime {
+    /// Open the artifact directory (reads `manifest.txt`). Artifacts are
+    /// compiled lazily on first use and cached.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {}", manifest.display()))?;
+        let specs = parse_manifest(&text)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            dir,
+            specs,
+            compiled: HashMap::new(),
+        })
+    }
+
+    /// Default artifact location (repo-root `artifacts/`), honouring
+    /// `SPATZFORMER_ARTIFACTS` if set.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("SPATZFORMER_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn kernel_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.specs.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.specs.get(name)
+    }
+
+    /// Compile (or fetch the cached) kernel executable.
+    pub fn kernel(&mut self, name: &str) -> Result<&CompiledKernel> {
+        if !self.compiled.contains_key(name) {
+            let spec = self
+                .specs
+                .get(name)
+                .with_context(|| format!("unknown kernel artifact: {name}"))?
+                .clone();
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            self.compiled
+                .insert(name.to_string(), CompiledKernel { spec, exe });
+        }
+        Ok(&self.compiled[name])
+    }
+
+    /// Convenience: run a kernel by name.
+    pub fn run(&mut self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        self.kernel(name)?.run(inputs)
+    }
+}
+
+/// Manifest format (one line per kernel; shapes are `d0xd1x...`):
+/// `name: in=64x64,64x64 out=64x64`
+fn parse_manifest(text: &str) -> Result<HashMap<String, ArtifactSpec>> {
+    let mut specs = HashMap::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let parse_lens = |s: &str| -> Result<Vec<Vec<i64>>> {
+            s.split(',')
+                .map(|t| {
+                    t.trim()
+                        .split('x')
+                        .map(|d| {
+                            d.parse::<i64>().with_context(|| {
+                                format!("manifest line {}: bad dim {d}", idx + 1)
+                            })
+                        })
+                        .collect()
+                })
+                .collect()
+        };
+        let (name, rest) = line
+            .split_once(':')
+            .with_context(|| format!("manifest line {}: missing ':'", idx + 1))?;
+        let mut input_shapes = None;
+        let mut output_shapes = None;
+        for tok in rest.split_whitespace() {
+            if let Some(v) = tok.strip_prefix("in=") {
+                input_shapes = Some(parse_lens(v)?);
+            } else if let Some(v) = tok.strip_prefix("out=") {
+                output_shapes = Some(parse_lens(v)?);
+            }
+        }
+        let name = name.trim().to_string();
+        specs.insert(
+            name.clone(),
+            ArtifactSpec {
+                name,
+                input_shapes: input_shapes
+                    .with_context(|| format!("manifest line {}: missing in=", idx + 1))?,
+                output_shapes: output_shapes
+                    .with_context(|| format!("manifest line {}: missing out=", idx + 1))?,
+            },
+        );
+    }
+    Ok(specs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing() {
+        let text = "# comment\nmatmul: in=64x64,64x64 out=64x64\nfft: in=256,256 out=256,256\n";
+        let m = parse_manifest(text).unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m["matmul"].input_shapes, vec![vec![64, 64], vec![64, 64]]);
+        assert_eq!(m["matmul"].input_lens(), vec![4096, 4096]);
+        assert_eq!(m["fft"].output_lens(), vec![256, 256]);
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        assert!(parse_manifest("nocolon in=1 out=1").is_err());
+        assert!(parse_manifest("x: out=1").is_err());
+        assert!(parse_manifest("x: in=a out=1").is_err());
+    }
+
+    // Execution tests against real artifacts live in
+    // rust/tests/sim_vs_xla.rs (they need `make artifacts` to have run).
+}

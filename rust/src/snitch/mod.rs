@@ -1,0 +1,528 @@
+//! Snitch scalar core: a single-issue, in-order RV32 core timing model.
+//!
+//! Executes a [`Program`] stream one instruction per cycle in the best
+//! case, with stalls for: icache refills, multi-cycle mul/div, TCDM bank
+//! arbitration, a full accelerator offload queue, fences (vector-unit
+//! drain), cluster barriers, and Spatzformer mode switches (drain +
+//! reconfiguration latency).
+//!
+//! The core is a passive state machine; [`crate::cluster::Cluster`] steps
+//! it each cycle with mutable access to the shared resources.
+
+use crate::config::{ArchKind, ClusterConfig, Mode};
+use crate::isa::{Instr, Program, ScalarOp};
+use crate::mem::{ICache, Tcdm};
+use crate::metrics::Counters;
+use crate::reconfig::{DispatchResult, ReconfigStage};
+use crate::spatz::SpatzUnit;
+
+/// Externally visible core execution state.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CoreState {
+    Ready,
+    /// Busy for `n` more cycles, then advance past the current pc.
+    Stall(u64),
+    /// Icache refill in progress; afterwards the fetched instruction at
+    /// the current pc executes (pc does NOT advance).
+    FetchStall(u64),
+    /// Retrying a scalar TCDM access each cycle.
+    WaitMem { addr: u32, is_store: bool },
+    /// Retrying a vector offload (unit queue full).
+    WaitOffload,
+    /// Waiting for this hart's vector instructions to drain.
+    WaitFence,
+    /// Waiting at the cluster barrier.
+    WaitBarrier,
+    /// Mode switch in progress: drain phase, then latency countdown.
+    WaitModeSwitch { target: Mode, draining: bool, remaining: u64 },
+    Halted,
+}
+
+/// Cluster barrier handle the core interacts with (implemented in
+/// [`crate::cluster::barrier`]).
+pub trait BarrierPort {
+    fn arrive(&mut self, core: usize, now: u64);
+    /// Poll for release; returns true once, when the core may resume.
+    fn poll(&mut self, core: usize, now: u64) -> bool;
+}
+
+/// The scalar core.
+pub struct Snitch {
+    pub id: usize,
+    program: Program,
+    pc: usize,
+    state: CoreState,
+    /// icache stream tag (distinct per program load).
+    stream: u32,
+    fetch_done: bool,
+    pub retired: u64,
+    // cached latencies
+    lat_mul: u64,
+    lat_div: u64,
+    lat_tcdm: u64,
+    branch_penalty: u64,
+    mode_switch_latency: u64,
+    arch: ArchKind,
+}
+
+impl Snitch {
+    pub fn new(id: usize, cfg: &ClusterConfig) -> Self {
+        Self {
+            id,
+            program: Program::idle(),
+            pc: 0,
+            state: CoreState::Halted,
+            stream: id as u32,
+            fetch_done: false,
+            retired: 0,
+            lat_mul: cfg.lat_mul,
+            lat_div: cfg.lat_div,
+            lat_tcdm: cfg.tcdm_latency,
+            branch_penalty: cfg.branch_penalty,
+            mode_switch_latency: cfg.mode_switch_latency,
+            arch: cfg.arch,
+        }
+    }
+
+    /// Load a program and reset execution state. `stream` must be unique
+    /// per (core, program) pairing so icache tags don't falsely hit.
+    pub fn load(&mut self, program: Program, stream: u32) {
+        self.program = program;
+        self.pc = 0;
+        self.stream = stream;
+        self.fetch_done = false;
+        self.retired = 0;
+        self.state = if self.program.instrs.is_empty() {
+            CoreState::Halted
+        } else {
+            CoreState::Ready
+        };
+    }
+
+    pub fn state(&self) -> CoreState {
+        self.state
+    }
+
+    pub fn halted(&self) -> bool {
+        self.state == CoreState::Halted
+    }
+
+    pub fn pc(&self) -> usize {
+        self.pc
+    }
+
+    /// Busy for the leakage model: anything but halted or barrier-parked
+    /// (Snitch WFIs at barriers and is clock-gated).
+    pub fn busy(&self) -> bool {
+        !matches!(self.state, CoreState::Halted | CoreState::WaitBarrier)
+    }
+
+    fn advance(&mut self) {
+        self.pc += 1;
+        self.fetch_done = false;
+        self.retired += 1;
+        self.state = CoreState::Ready;
+    }
+
+    /// Advance one cycle.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step(
+        &mut self,
+        now: u64,
+        icache: &mut ICache,
+        tcdm: &mut Tcdm,
+        reconfig: &mut ReconfigStage,
+        units: &mut [SpatzUnit; 2],
+        barrier: &mut dyn BarrierPort,
+        counters: &mut Counters,
+    ) {
+        match self.state {
+            CoreState::Halted => {}
+            CoreState::Stall(n) => {
+                if n <= 1 {
+                    self.advance();
+                } else {
+                    self.state = CoreState::Stall(n - 1);
+                }
+            }
+            CoreState::FetchStall(n) => {
+                if n <= 1 {
+                    self.state = CoreState::Ready; // fetch_done stays true
+                } else {
+                    self.state = CoreState::FetchStall(n - 1);
+                }
+            }
+            CoreState::WaitMem { addr, is_store } => {
+                if tcdm.try_access(addr) {
+                    counters.scalar_mem += 1;
+                    if is_store || self.lat_tcdm == 0 {
+                        self.advance();
+                    } else {
+                        self.state = CoreState::Stall(self.lat_tcdm);
+                    }
+                }
+            }
+            CoreState::WaitOffload => {
+                let Instr::Vector(op) = self.program.instrs[self.pc] else {
+                    unreachable!("WaitOffload on non-vector instruction");
+                };
+                match reconfig.try_dispatch(self.id, op, units, tcdm, counters, now) {
+                    DispatchResult::Accepted => self.advance(),
+                    DispatchResult::Stall => counters.offload_stall_cycles += 1,
+                }
+            }
+            CoreState::WaitFence => {
+                if reconfig.outstanding(self.id) == 0 {
+                    self.advance();
+                } else {
+                    counters.fence_wait_cycles += 1;
+                }
+            }
+            CoreState::WaitBarrier => {
+                if barrier.poll(self.id, now) {
+                    self.advance();
+                } else {
+                    counters.barrier_wait_cycles += 1;
+                }
+            }
+            CoreState::WaitModeSwitch { target, draining, remaining } => {
+                if draining {
+                    if reconfig.all_drained() && units.iter().all(|u| u.is_idle()) {
+                        self.state = CoreState::WaitModeSwitch {
+                            target,
+                            draining: false,
+                            remaining: self.mode_switch_latency,
+                        };
+                    }
+                } else if remaining <= 1 {
+                    reconfig.set_mode(target);
+                    counters.mode_switches += 1;
+                    self.advance();
+                } else {
+                    self.state = CoreState::WaitModeSwitch {
+                        target,
+                        draining: false,
+                        remaining: remaining - 1,
+                    };
+                }
+            }
+            CoreState::Ready => {
+                // fetch
+                if !self.fetch_done {
+                    counters.scalar_ifetch += 1;
+                    let penalty = icache.fetch(self.stream, self.pc);
+                    self.fetch_done = true;
+                    if penalty > 0 {
+                        self.state = CoreState::FetchStall(penalty);
+                        return;
+                    }
+                }
+                self.execute(now, tcdm, reconfig, units, barrier, counters);
+            }
+        }
+    }
+
+    fn execute(
+        &mut self,
+        now: u64,
+        tcdm: &mut Tcdm,
+        reconfig: &mut ReconfigStage,
+        units: &mut [SpatzUnit; 2],
+        barrier: &mut dyn BarrierPort,
+        counters: &mut Counters,
+    ) {
+        let instr = self.program.instrs[self.pc];
+        match instr {
+            Instr::Scalar(op) => match op {
+                ScalarOp::Alu | ScalarOp::Nop => {
+                    counters.scalar_alu += 1;
+                    self.advance();
+                }
+                ScalarOp::Mul => {
+                    counters.scalar_mul += 1;
+                    self.state = CoreState::Stall(self.lat_mul);
+                }
+                ScalarOp::Div => {
+                    counters.scalar_div += 1;
+                    self.state = CoreState::Stall(self.lat_div);
+                }
+                ScalarOp::Csr => {
+                    counters.scalar_csr += 1;
+                    self.advance();
+                }
+                ScalarOp::Load { addr } => {
+                    if tcdm.try_access(addr) {
+                        counters.scalar_mem += 1;
+                        self.state = CoreState::Stall(self.lat_tcdm);
+                    } else {
+                        self.state = CoreState::WaitMem { addr, is_store: false };
+                    }
+                }
+                ScalarOp::Store { addr } => {
+                    if tcdm.try_access(addr) {
+                        counters.scalar_mem += 1;
+                        self.advance();
+                    } else {
+                        self.state = CoreState::WaitMem { addr, is_store: true };
+                    }
+                }
+                ScalarOp::Branch { taken } => {
+                    counters.scalar_branch += 1;
+                    if taken && self.branch_penalty > 0 {
+                        self.state = CoreState::Stall(self.branch_penalty);
+                    } else {
+                        self.advance();
+                    }
+                }
+            },
+            Instr::Vector(op) => {
+                match reconfig.try_dispatch(self.id, op, units, tcdm, counters, now) {
+                    DispatchResult::Accepted => self.advance(),
+                    DispatchResult::Stall => {
+                        counters.offload_stall_cycles += 1;
+                        self.state = CoreState::WaitOffload;
+                    }
+                }
+            }
+            Instr::Fence => {
+                if reconfig.outstanding(self.id) == 0 {
+                    self.advance();
+                } else {
+                    self.state = CoreState::WaitFence;
+                }
+            }
+            Instr::Barrier => {
+                counters.barriers += 1;
+                barrier.arrive(self.id, now);
+                self.state = CoreState::WaitBarrier;
+            }
+            Instr::SetMode(target) => {
+                assert_eq!(
+                    self.arch,
+                    ArchKind::Spatzformer,
+                    "SetMode on non-reconfigurable baseline cluster"
+                );
+                assert_eq!(self.id, 0, "only core 0 may reconfigure the cluster");
+                if reconfig.mode() == target {
+                    self.advance();
+                } else {
+                    self.state = CoreState::WaitModeSwitch {
+                        target,
+                        draining: true,
+                        remaining: 0,
+                    };
+                }
+            }
+            Instr::Halt => {
+                self.state = CoreState::Halted;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::isa::{ElemWidth, Lmul, VReg, VectorOp};
+    use crate::mem::{ICache, Tcdm};
+
+    /// Barrier stub: releases `after_polls` polls after arrival.
+    struct StubBarrier {
+        arrived: bool,
+        polls: u64,
+        release_after: u64,
+    }
+
+    impl StubBarrier {
+        fn new(release_after: u64) -> Self {
+            Self { arrived: false, polls: 0, release_after }
+        }
+    }
+
+    impl BarrierPort for StubBarrier {
+        fn arrive(&mut self, _core: usize, _now: u64) {
+            self.arrived = true;
+        }
+        fn poll(&mut self, _core: usize, _now: u64) -> bool {
+            self.polls += 1;
+            self.arrived && self.polls >= self.release_after
+        }
+    }
+
+    struct Rig {
+        core: Snitch,
+        icache: ICache,
+        tcdm: Tcdm,
+        reconfig: ReconfigStage,
+        units: [SpatzUnit; 2],
+        barrier: StubBarrier,
+        counters: Counters,
+        now: u64,
+    }
+
+    fn rig(program: Program) -> Rig {
+        let cfg = SimConfig::spatzformer();
+        let mut core = Snitch::new(0, &cfg.cluster);
+        core.load(program, 0);
+        Rig {
+            core,
+            icache: ICache::new(&cfg.cluster),
+            tcdm: Tcdm::new(&cfg.cluster),
+            reconfig: ReconfigStage::new(&cfg.cluster),
+            units: [SpatzUnit::new(0, &cfg.cluster), SpatzUnit::new(1, &cfg.cluster)],
+            barrier: StubBarrier::new(1),
+            counters: Counters::default(),
+            now: 0,
+        }
+    }
+
+    impl Rig {
+        /// Step the core (and units) until halt; returns cycles taken.
+        fn run(&mut self, max: u64) -> u64 {
+            let mut retires = Vec::new();
+            while !self.core.halted() {
+                assert!(self.now < max, "no halt after {max} cycles");
+                self.tcdm.begin_cycle();
+                self.core.step(
+                    self.now,
+                    &mut self.icache,
+                    &mut self.tcdm,
+                    &mut self.reconfig,
+                    &mut self.units,
+                    &mut self.barrier,
+                    &mut self.counters,
+                );
+                retires.clear();
+                for u in self.units.iter_mut() {
+                    u.step(self.now, &mut self.tcdm, &mut retires);
+                }
+                for r in &retires {
+                    self.reconfig.on_retire(*r);
+                }
+                self.now += 1;
+            }
+            self.now
+        }
+    }
+
+    #[test]
+    fn straight_line_alu_is_one_ipc_after_warmup() {
+        let mut p = Program::new("alu");
+        for _ in 0..64 {
+            p.scalar(ScalarOp::Alu);
+        }
+        p.push(Instr::Halt);
+        let mut r = rig(p);
+        let cycles = r.run(10_000);
+        // 65 instructions + 9 icache line refills (12 cycles each)
+        assert_eq!(r.counters.scalar_alu, 64);
+        assert!(cycles >= 65, "cycles={cycles}");
+        assert!(cycles <= 65 + 9 * 13 + 10, "cycles={cycles}");
+    }
+
+    #[test]
+    fn mul_and_div_stall() {
+        let mut p = Program::new("muldiv");
+        p.scalar(ScalarOp::Mul);
+        p.scalar(ScalarOp::Div);
+        p.push(Instr::Halt);
+        let mut r = rig(p);
+        let cycles = r.run(1000);
+        // 1 refill (12) + mul (3) + div (21) + halt (1) ~ 37
+        assert!(cycles >= 24, "cycles={cycles}");
+        assert_eq!(r.counters.scalar_mul, 1);
+        assert_eq!(r.counters.scalar_div, 1);
+    }
+
+    #[test]
+    fn fence_waits_for_vector_drain() {
+        let mut p = Program::new("fence");
+        p.vector(VectorOp::SetVl { avl: 128, ew: ElemWidth::E32, lmul: Lmul::M8 });
+        p.vector(VectorOp::MovVF { vd: VReg(8), f: 1.0 });
+        p.push(Instr::Fence);
+        p.push(Instr::Halt);
+        let mut r = rig(p);
+        r.run(10_000);
+        assert!(r.counters.fence_wait_cycles > 0, "fence should have waited");
+        assert_eq!(r.reconfig.outstanding(0), 0);
+    }
+
+    #[test]
+    fn offload_backpressure_stalls_core() {
+        let mut p = Program::new("backpressure");
+        p.vector(VectorOp::SetVl { avl: 128, ew: ElemWidth::E32, lmul: Lmul::M8 });
+        // long-running loads + more ops than the queue holds
+        for i in 0..12 {
+            p.vector(VectorOp::Load { vd: VReg(8), base: i * 512, stride: 1 });
+        }
+        p.push(Instr::Fence);
+        p.push(Instr::Halt);
+        let mut r = rig(p);
+        r.run(100_000);
+        assert!(
+            r.counters.offload_stall_cycles > 0,
+            "queue backpressure should stall the core"
+        );
+    }
+
+    #[test]
+    fn barrier_arrival_and_release() {
+        let mut p = Program::new("barrier");
+        p.push(Instr::Barrier);
+        p.push(Instr::Halt);
+        let mut r = rig(p);
+        r.barrier = StubBarrier::new(5);
+        r.run(1000);
+        assert_eq!(r.counters.barriers, 1);
+        assert!(r.counters.barrier_wait_cycles >= 4);
+    }
+
+    #[test]
+    fn mode_switch_drains_then_pays_latency() {
+        let mut p = Program::new("switch");
+        p.vector(VectorOp::SetVl { avl: 128, ew: ElemWidth::E32, lmul: Lmul::M8 });
+        p.vector(VectorOp::MovVF { vd: VReg(8), f: 1.0 });
+        p.push(Instr::SetMode(Mode::Merge));
+        p.vector(VectorOp::SetVl { avl: 256, ew: ElemWidth::E32, lmul: Lmul::M8 });
+        p.vector(VectorOp::MovVF { vd: VReg(16), f: 2.0 });
+        p.push(Instr::Fence);
+        p.push(Instr::Halt);
+        let mut r = rig(p);
+        r.run(10_000);
+        assert_eq!(r.reconfig.mode(), Mode::Merge);
+        assert_eq!(r.counters.mode_switches, 1);
+        // post-switch op ran at doubled vl across both units
+        assert_eq!(r.units[0].vrf.read_f32(VReg(16), 0), 2.0);
+        assert_eq!(r.units[1].vrf.read_f32(VReg(16), 127), 2.0);
+    }
+
+    #[test]
+    fn setmode_to_current_mode_is_noop() {
+        let mut p = Program::new("noop-switch");
+        p.push(Instr::SetMode(Mode::Split));
+        p.push(Instr::Halt);
+        let mut r = rig(p);
+        r.run(1000);
+        assert_eq!(r.counters.mode_switches, 0);
+    }
+
+    #[test]
+    fn scalar_memory_goes_through_bank_arbitration() {
+        let mut p = Program::new("mem");
+        p.scalar(ScalarOp::Load { addr: 64 });
+        p.scalar(ScalarOp::Store { addr: 128 });
+        p.push(Instr::Halt);
+        let mut r = rig(p);
+        r.run(1000);
+        assert_eq!(r.counters.scalar_mem, 2);
+        assert_eq!(r.tcdm.stats.accesses, 2);
+    }
+
+    #[test]
+    fn empty_program_halts_immediately() {
+        let mut r = rig(Program::idle());
+        let cycles = r.run(100);
+        assert!(cycles <= 20, "cycles={cycles}");
+    }
+}

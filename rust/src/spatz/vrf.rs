@@ -1,0 +1,147 @@
+//! Vector register file: 32 architectural registers of VLEN bits,
+//! stored as raw 32-bit words so both fp32 data and u32 index vectors
+//! live naturally in the same registers (RVV semantics).
+//!
+//! LMUL register groups address elements across consecutive registers:
+//! element `e` of group `vbase` lives in register `vbase + e / EPR` at
+//! offset `e % EPR`, where EPR = VLEN/32.
+
+use crate::isa::VReg;
+
+/// The register file of one Spatz unit.
+#[derive(Debug, Clone)]
+pub struct Vrf {
+    words: Vec<u32>,
+    elems_per_reg: usize,
+    vregs: usize,
+}
+
+impl Vrf {
+    pub fn new(vlen_bits: usize, vregs: usize) -> Self {
+        let elems_per_reg = vlen_bits / 32;
+        Self {
+            words: vec![0; elems_per_reg * vregs],
+            elems_per_reg,
+            vregs,
+        }
+    }
+
+    pub fn elems_per_reg(&self) -> usize {
+        self.elems_per_reg
+    }
+
+    /// Max elements a group of `lmul` registers holds.
+    pub fn group_capacity(&self, lmul: usize) -> usize {
+        self.elems_per_reg * lmul
+    }
+
+    #[inline]
+    fn index(&self, base: VReg, elem: usize) -> usize {
+        let reg = base.index() + elem / self.elems_per_reg;
+        debug_assert!(
+            reg < self.vregs,
+            "VRF access beyond register file: {base}+{elem}"
+        );
+        reg * self.elems_per_reg + elem % self.elems_per_reg
+    }
+
+    #[inline]
+    pub fn read_u32(&self, base: VReg, elem: usize) -> u32 {
+        self.words[self.index(base, elem)]
+    }
+
+    #[inline]
+    pub fn write_u32(&mut self, base: VReg, elem: usize, v: u32) {
+        let i = self.index(base, elem);
+        self.words[i] = v;
+    }
+
+    #[inline]
+    pub fn read_f32(&self, base: VReg, elem: usize) -> f32 {
+        f32::from_bits(self.read_u32(base, elem))
+    }
+
+    #[inline]
+    pub fn write_f32(&mut self, base: VReg, elem: usize, v: f32) {
+        self.write_u32(base, elem, v.to_bits());
+    }
+
+    /// Snapshot a group's first `n` elements as f32 (tests/debug).
+    pub fn read_group_f32(&self, base: VReg, n: usize) -> Vec<f32> {
+        (0..n).map(|e| self.read_f32(base, e)).collect()
+    }
+
+    /// Contiguous raw words of a register group: element `e` of group
+    /// `base` lives at word `base*EPR + e`, so a group's first `n`
+    /// elements are one slice (hot-path bulk access).
+    #[inline]
+    pub fn group_words(&self, base: VReg, n: usize) -> &[u32] {
+        let start = base.index() * self.elems_per_reg;
+        &self.words[start..start + n]
+    }
+
+    #[inline]
+    pub fn group_words_mut(&mut self, base: VReg, n: usize) -> &mut [u32] {
+        let start = base.index() * self.elems_per_reg;
+        &mut self.words[start..start + n]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testutil::check;
+
+    #[test]
+    fn elems_per_reg_from_vlen() {
+        let v = Vrf::new(512, 32);
+        assert_eq!(v.elems_per_reg(), 16);
+        assert_eq!(v.group_capacity(8), 128);
+    }
+
+    #[test]
+    fn rw_roundtrip_within_reg() {
+        let mut v = Vrf::new(512, 32);
+        v.write_f32(VReg(3), 5, 2.5);
+        assert_eq!(v.read_f32(VReg(3), 5), 2.5);
+    }
+
+    #[test]
+    fn group_spans_registers() {
+        let mut v = Vrf::new(512, 32);
+        // element 16 of group v8 (LMUL>=2) is element 0 of v9
+        v.write_f32(VReg(8), 16, 7.0);
+        assert_eq!(v.read_f32(VReg(9), 0), 7.0);
+    }
+
+    #[test]
+    fn u32_and_f32_share_storage() {
+        let mut v = Vrf::new(512, 32);
+        v.write_u32(VReg(0), 0, 0x40490FDB); // pi as f32 bits
+        assert!((v.read_f32(VReg(0), 0) - std::f32::consts::PI).abs() < 1e-6);
+    }
+
+    #[test]
+    fn prop_write_then_read_all_elements() {
+        check("vrf rw all elements", 64, |g| {
+            let mut v = Vrf::new(512, 32);
+            let lmul = *g.choose(&[1usize, 2, 4, 8]);
+            let base = VReg((g.int(0, 32 / lmul - 1) * lmul) as u8);
+            let n = v.group_capacity(lmul);
+            let vals: Vec<f32> = (0..n).map(|_| g.f32(1e6)).collect();
+            for (e, &x) in vals.iter().enumerate() {
+                v.write_f32(base, e, x);
+            }
+            for (e, &x) in vals.iter().enumerate() {
+                assert_eq!(v.read_f32(base, e).to_bits(), x.to_bits());
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn overflow_group_caught_in_debug() {
+        let mut v = Vrf::new(512, 32);
+        v.write_f32(VReg(31), 16, 1.0); // spills past v31
+    }
+}

@@ -1,0 +1,109 @@
+//! Lightweight execution tracing (debugging aid).
+//!
+//! Disabled by default; when enabled, records (cycle, event) pairs that
+//! can be dumped as text. The simulator only pays for tracing when it is
+//! on (`Trace::off()` makes `emit` a no-op without branching at call
+//! sites thanks to the early return).
+
+use crate::config::Mode;
+use crate::isa::{Instr, asm};
+
+/// A recorded event.
+#[derive(Debug, Clone)]
+pub enum Event {
+    /// Core `core` executed/committed an instruction.
+    Commit { core: usize, pc: usize, instr: Instr },
+    /// Vector instruction dispatched to `unit`.
+    Dispatch { unit: usize, text: String },
+    /// Barrier episode completed.
+    BarrierRelease,
+    /// Operating mode changed.
+    ModeSwitch { to: Mode },
+    /// Free-form annotation (workload phases etc.).
+    Note(String),
+}
+
+impl std::fmt::Display for Event {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Event::Commit { core, pc, instr } => {
+                write!(f, "core{core} pc={pc:<6} {}", asm::print_instr(instr))
+            }
+            Event::Dispatch { unit, text } => write!(f, "unit{unit} <- {text}"),
+            Event::BarrierRelease => write!(f, "barrier release"),
+            Event::ModeSwitch { to } => write!(f, "mode -> {}", to.name()),
+            Event::Note(s) => write!(f, "note: {s}"),
+        }
+    }
+}
+
+/// The trace recorder.
+#[derive(Debug, Default)]
+pub struct Trace {
+    enabled: bool,
+    events: Vec<(u64, Event)>,
+}
+
+impl Trace {
+    pub fn on() -> Self {
+        Self { enabled: true, events: Vec::new() }
+    }
+
+    pub fn off() -> Self {
+        Self::default()
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    #[inline]
+    pub fn emit(&mut self, cycle: u64, event: Event) {
+        if !self.enabled {
+            return;
+        }
+        self.events.push((cycle, event));
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Render the whole trace as text.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (cycle, ev) in &self.events {
+            out.push_str(&format!("[{cycle:>10}] {ev}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::ScalarOp;
+
+    #[test]
+    fn disabled_trace_records_nothing() {
+        let mut t = Trace::off();
+        t.emit(1, Event::Note("x".into()));
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn enabled_trace_records_and_renders() {
+        let mut t = Trace::on();
+        t.emit(5, Event::Commit { core: 0, pc: 3, instr: Instr::Scalar(ScalarOp::Alu) });
+        t.emit(9, Event::ModeSwitch { to: Mode::Merge });
+        let s = t.render();
+        assert!(s.contains("core0"));
+        assert!(s.contains("alu"));
+        assert!(s.contains("mode -> merge"));
+        assert_eq!(t.len(), 2);
+    }
+}

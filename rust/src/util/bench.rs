@@ -1,0 +1,141 @@
+//! Micro-benchmark harness for the `cargo bench` targets.
+//!
+//! `criterion` is unavailable in this offline environment, so the bench
+//! binaries (declared with `harness = false`) use this minimal harness:
+//! warmup, timed iterations, and a stats line. The *paper-metric* rows
+//! (cycles, pJ/FLOP, speedups) are printed by the bench bodies themselves;
+//! this harness measures host wall-clock so EXPERIMENTS.md §Perf can track
+//! simulator throughput.
+
+use super::stats::Summary;
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement: run `f` repeatedly, report wall-clock stats.
+pub struct Bencher {
+    name: String,
+    warmup_iters: usize,
+    measure_iters: usize,
+    max_total: Duration,
+}
+
+/// Result of a benchmark run.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    pub stddev: Duration,
+}
+
+impl Bencher {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            warmup_iters: 1,
+            measure_iters: 5,
+            max_total: Duration::from_secs(20),
+        }
+    }
+
+    pub fn warmup(mut self, iters: usize) -> Self {
+        self.warmup_iters = iters;
+        self
+    }
+
+    pub fn iters(mut self, iters: usize) -> Self {
+        self.measure_iters = iters;
+        self
+    }
+
+    pub fn max_total(mut self, d: Duration) -> Self {
+        self.max_total = d;
+        self
+    }
+
+    /// Run and report. `f` should return some scalar derived from its work
+    /// so the optimizer cannot elide it; the value is folded into a
+    /// black-box sink.
+    pub fn run<F: FnMut() -> u64>(self, mut f: F) -> BenchResult {
+        let mut sink = 0u64;
+        for _ in 0..self.warmup_iters {
+            sink = sink.wrapping_add(f());
+        }
+        let mut samples = Summary::new();
+        let t_start = Instant::now();
+        let mut iters = 0;
+        for _ in 0..self.measure_iters {
+            let t0 = Instant::now();
+            sink = sink.wrapping_add(f());
+            samples.push(t0.elapsed().as_secs_f64());
+            iters += 1;
+            if t_start.elapsed() > self.max_total {
+                break;
+            }
+        }
+        std::hint::black_box(sink);
+        let result = BenchResult {
+            name: self.name,
+            iters,
+            mean: Duration::from_secs_f64(samples.mean()),
+            median: Duration::from_secs_f64(samples.median()),
+            min: Duration::from_secs_f64(samples.min()),
+            stddev: Duration::from_secs_f64(samples.stddev()),
+        };
+        println!("{result}");
+        result
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "bench {:<40} iters={:<3} mean={:>10.3?} median={:>10.3?} min={:>10.3?} sd={:>9.3?}",
+            self.name, self.iters, self.mean, self.median, self.min, self.stddev
+        )
+    }
+}
+
+/// Print a section header in bench output (visual structure in
+/// bench_output.txt).
+pub fn section(title: &str) {
+    println!();
+    println!("=== {title} ===");
+}
+
+/// Format a ratio as the paper does (e.g. "1.82x").
+pub fn fmt_ratio(r: f64) -> String {
+    format!("{r:.2}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let r = Bencher::new("noop").warmup(1).iters(3).run(|| 7);
+        assert_eq!(r.iters, 3);
+        assert!(r.mean >= Duration::ZERO);
+    }
+
+    #[test]
+    fn bench_respects_time_budget() {
+        let r = Bencher::new("slow")
+            .warmup(0)
+            .iters(1000)
+            .max_total(Duration::from_millis(50))
+            .run(|| {
+                std::thread::sleep(Duration::from_millis(20));
+                1
+            });
+        assert!(r.iters < 1000);
+    }
+
+    #[test]
+    fn ratio_format() {
+        assert_eq!(fmt_ratio(1.8), "1.80x");
+    }
+}

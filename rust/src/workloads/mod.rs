@@ -1,0 +1,40 @@
+//! Scalar workloads that run *alongside* vector kernels in the paper's
+//! mixed scalar-vector experiments (Fig. 2 right axis).
+//!
+//! [`coremark`] is a CoreMark-workalike: it executes the benchmark's
+//! three algorithm phases (linked-list processing, matrix manipulation,
+//! state machine + CRC-16) natively to produce the work-proof checksum,
+//! and emits the corresponding instruction stream (with the documented
+//! class mix and real TCDM addresses) for the Snitch timing model.
+
+pub mod coremark;
+
+pub use coremark::{coremark, ScalarWorkload};
+
+use crate::isa::{Program, ScalarOp};
+
+/// A trivial control task: a polling/bookkeeping loop of `iters`
+/// iterations (used by examples and tests as a light co-runner).
+pub fn control_loop(iters: usize, data_base: u32) -> Program {
+    let mut p = Program::new("control-loop");
+    for i in 0..iters {
+        p.scalar(ScalarOp::Load { addr: data_base + ((i % 16) * 4) as u32 });
+        p.scalar(ScalarOp::Alu);
+        p.scalar(ScalarOp::Alu);
+        p.scalar(ScalarOp::Branch { taken: i + 1 < iters });
+    }
+    p.push(crate::isa::Instr::Halt);
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn control_loop_shape() {
+        let p = control_loop(10, 0x1000);
+        assert_eq!(p.len(), 41);
+        assert_eq!(p.vector_count(), 0);
+    }
+}

@@ -1,0 +1,123 @@
+//! Coordinator-level integration: job queues, policies, reports, and the
+//! paper's headline comparisons at the framework surface.
+
+use spatzformer::config::SimConfig;
+use spatzformer::coordinator::{Coordinator, Job, ModePolicy};
+use spatzformer::kernels::{Deployment, KernelId};
+
+#[test]
+fn full_queue_of_all_kernels_and_modes() {
+    let mut c = Coordinator::new(SimConfig::spatzformer()).unwrap();
+    let mut jobs = Vec::new();
+    for kernel in KernelId::all() {
+        jobs.push(Job::Kernel { kernel, policy: ModePolicy::Split });
+        jobs.push(Job::Kernel { kernel, policy: ModePolicy::Merge });
+    }
+    let reports = c.run_queue(&jobs).unwrap();
+    assert_eq!(reports.len(), 12);
+    for r in &reports {
+        assert!(r.metrics.cycles > 0, "{}", r.job_name);
+        assert!(r.metrics.energy_pj > 0.0, "{}", r.job_name);
+        assert!(r.flop_per_cycle() > 0.0, "{}", r.job_name);
+    }
+}
+
+#[test]
+fn merge_never_catastrophically_slower_and_fft_faster() {
+    let mut c = Coordinator::new(SimConfig::spatzformer()).unwrap();
+    for kernel in KernelId::all() {
+        let sm = c
+            .submit(&Job::Kernel { kernel, policy: ModePolicy::Split })
+            .unwrap();
+        let mm = c
+            .submit(&Job::Kernel { kernel, policy: ModePolicy::Merge })
+            .unwrap();
+        let ratio = sm.kernel_cycles as f64 / mm.kernel_cycles as f64;
+        assert!(ratio > 0.85, "{}: MM {ratio:.2}x of SM", kernel.name());
+        if kernel == KernelId::Fft {
+            // the paper's headline: MM fft beats SM by a clear margin
+            assert!(ratio > 1.10, "fft MM speedup only {ratio:.2}x");
+        }
+    }
+}
+
+#[test]
+fn mixed_workload_speedup_matches_paper_band() {
+    // Fig. 2 right axis: MM speedup of kernel ∥ CoreMark over SM,
+    // average ~1.8x, up to ~2x
+    let mut c = Coordinator::new(SimConfig::spatzformer()).unwrap();
+    let mut speedups = Vec::new();
+    for kernel in KernelId::all() {
+        let sm = c
+            .submit(&Job::Mixed { kernel, policy: ModePolicy::Split, coremark_iterations: 1 })
+            .unwrap();
+        let mm = c
+            .submit(&Job::Mixed { kernel, policy: ModePolicy::Merge, coremark_iterations: 1 })
+            .unwrap();
+        speedups.push(sm.kernel_cycles as f64 / mm.kernel_cycles as f64);
+    }
+    let geo = spatzformer::util::Summary::from_samples(&speedups).geomean();
+    assert!(
+        (1.5..2.1).contains(&geo),
+        "mixed-workload average speedup {geo:.2} outside the paper band"
+    );
+    let max = speedups.iter().cloned().fold(0.0, f64::max);
+    assert!(max <= 2.05, "speedup above the 2-unit bound: {max:.2}");
+}
+
+#[test]
+fn coremark_work_proof_is_mode_independent() {
+    let mut c = Coordinator::new(SimConfig::spatzformer()).unwrap();
+    let sm = c
+        .submit(&Job::Mixed {
+            kernel: KernelId::Fdotp,
+            policy: ModePolicy::Split,
+            coremark_iterations: 2,
+        })
+        .unwrap();
+    let mm = c
+        .submit(&Job::Mixed {
+            kernel: KernelId::Fdotp,
+            policy: ModePolicy::Merge,
+            coremark_iterations: 2,
+        })
+        .unwrap();
+    assert_eq!(sm.coremark_checksum, mm.coremark_checksum);
+}
+
+#[test]
+fn energy_efficiency_relations_match_paper_shape() {
+    // SM Spatzformer loses a little EE to the baseline (reconfig logic
+    // power); MM recovers most of it (fetch amortization)
+    let kernel = KernelId::Faxpy;
+    let run = |cfg: SimConfig, policy| {
+        let mut c = Coordinator::new(cfg).unwrap();
+        let r = c.submit(&Job::Kernel { kernel, policy }).unwrap();
+        r.metrics.gflops_per_watt()
+    };
+    let base = run(SimConfig::baseline(), ModePolicy::Split);
+    let sm = run(SimConfig::spatzformer(), ModePolicy::Split);
+    let mm = run(SimConfig::spatzformer(), ModePolicy::Merge);
+    assert!(sm < base, "SM must pay for reconfigurability (sm={sm}, base={base})");
+    assert!(mm > sm, "MM must recover efficiency via fetch amortization");
+    let sm_drop = (base - sm) / base;
+    assert!(sm_drop < 0.10, "SM drop {:.1}% too large", sm_drop * 100.0);
+}
+
+#[test]
+fn deployment_resolution_rules() {
+    let mut base = Coordinator::new(SimConfig::baseline()).unwrap();
+    // Auto on baseline mixed -> split-single
+    let r = base
+        .submit(&Job::Mixed {
+            kernel: KernelId::Faxpy,
+            policy: ModePolicy::Auto,
+            coremark_iterations: 1,
+        })
+        .unwrap();
+    assert_eq!(r.deploy, Deployment::SplitSingle);
+    // Merge on baseline -> error
+    assert!(base
+        .submit(&Job::Kernel { kernel: KernelId::Faxpy, policy: ModePolicy::Merge })
+        .is_err());
+}

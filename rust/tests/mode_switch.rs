@@ -1,0 +1,123 @@
+//! Runtime reconfiguration: the drain/switch protocol under many
+//! schedules, including pathological ones.
+
+use spatzformer::cluster::Cluster;
+use spatzformer::config::{Mode, SimConfig};
+use spatzformer::isa::{ElemWidth, Instr, Lmul, Program, ScalarOp, VReg, VectorOp};
+use spatzformer::util::testutil::check;
+
+fn fresh() -> Cluster {
+    Cluster::new(SimConfig::spatzformer()).unwrap()
+}
+
+#[test]
+fn switch_with_in_flight_work_drains_first() {
+    let mut cl = fresh();
+    let data: Vec<f32> = (0..256).map(|i| i as f32).collect();
+    cl.stage_f32(0, &data);
+    let mut p = Program::new("drain");
+    p.vector(VectorOp::SetVl { avl: 128, ew: ElemWidth::E32, lmul: Lmul::M8 });
+    // long-latency loads queued right before the switch
+    for i in 0..4 {
+        p.vector(VectorOp::Load { vd: VReg(8), base: i * 512, stride: 1 });
+    }
+    p.push(Instr::SetMode(Mode::Merge));
+    p.vector(VectorOp::SetVl { avl: 256, ew: ElemWidth::E32, lmul: Lmul::M8 });
+    p.vector(VectorOp::MovVF { vd: VReg(16), f: 7.0 });
+    p.vector(VectorOp::Store { vs: VReg(16), base: 0x4000, stride: 1 });
+    p.push(Instr::Fence);
+    p.push(Instr::Halt);
+    cl.load_programs([p, Program::idle()]).unwrap();
+    cl.run().unwrap();
+    assert_eq!(cl.mode(), Mode::Merge);
+    assert_eq!(cl.tcdm.read_f32_slice(0x4000, 256), vec![7.0; 256]);
+}
+
+#[test]
+fn back_to_back_switches() {
+    let mut cl = fresh();
+    let mut p = Program::new("flip-flop");
+    for _ in 0..8 {
+        p.push(Instr::SetMode(Mode::Merge));
+        p.push(Instr::SetMode(Mode::Split));
+    }
+    p.push(Instr::Halt);
+    cl.load_programs([p, Program::idle()]).unwrap();
+    cl.run().unwrap();
+    assert_eq!(cl.counters.mode_switches, 16);
+    assert_eq!(cl.mode(), Mode::Split);
+}
+
+#[test]
+fn core1_keeps_running_scalar_work_during_switch() {
+    let mut cl = fresh();
+    let mut p0 = Program::new("switcher");
+    p0.vector(VectorOp::SetVl { avl: 128, ew: ElemWidth::E32, lmul: Lmul::M8 });
+    p0.vector(VectorOp::MovVF { vd: VReg(0), f: 1.0 });
+    p0.push(Instr::SetMode(Mode::Merge));
+    p0.vector(VectorOp::SetVl { avl: 256, ew: ElemWidth::E32, lmul: Lmul::M8 });
+    p0.vector(VectorOp::MovVF { vd: VReg(8), f: 2.0 });
+    p0.push(Instr::Fence);
+    p0.push(Instr::Halt);
+    let mut p1 = Program::new("worker");
+    for _ in 0..500 {
+        p1.scalar(ScalarOp::Alu);
+    }
+    p1.push(Instr::Halt);
+    cl.load_programs([p0, p1]).unwrap();
+    cl.run().unwrap();
+    assert_eq!(cl.counters.scalar_alu, 500);
+    assert_eq!(cl.mode(), Mode::Merge);
+}
+
+#[test]
+fn prop_random_switch_schedules_preserve_elementwise_results() {
+    check("random switch schedules", 40, |g| {
+        let n: u32 = 512;
+        let data: Vec<f32> = (0..n).map(|i| (i as f32) * 0.25).collect();
+        let mut cl = fresh();
+        cl.stage_f32(0, &data);
+        let mut p = Program::new("prop");
+        let mut mode = Mode::Split;
+        let mut off = 0u32;
+        let factor = 2.0f32;
+        while off < n {
+            if g.bool() {
+                mode = if mode == Mode::Split { Mode::Merge } else { Mode::Split };
+                p.push(Instr::SetMode(mode));
+            }
+            let cap = if mode == Mode::Merge { 256 } else { 128 };
+            let vl = (g.int(1, cap) as u32).min(n - off);
+            p.vector(VectorOp::SetVl { avl: vl, ew: ElemWidth::E32, lmul: Lmul::M8 });
+            p.vector(VectorOp::Load { vd: VReg(8), base: off * 4, stride: 1 });
+            p.vector(VectorOp::MulVF { vd: VReg(16), vs: VReg(8), f: factor });
+            p.vector(VectorOp::Store { vs: VReg(16), base: 0x8000 + off * 4, stride: 1 });
+            off += vl;
+        }
+        p.push(Instr::Fence);
+        p.push(Instr::Halt);
+        cl.load_programs([p, Program::idle()]).unwrap();
+        cl.run().unwrap();
+        let out = cl.tcdm.read_f32_slice(0x8000, n as usize);
+        for (i, (&o, &d)) in out.iter().zip(data.iter()).enumerate() {
+            assert_eq!(o, d * factor, "elem {i}");
+        }
+    });
+}
+
+#[test]
+fn switch_latency_config_is_respected() {
+    let run_with_latency = |lat: u64| -> u64 {
+        let mut cfg = SimConfig::spatzformer();
+        cfg.cluster.mode_switch_latency = lat;
+        let mut cl = Cluster::new(cfg).unwrap();
+        let mut p = Program::new("lat");
+        p.push(Instr::SetMode(Mode::Merge));
+        p.push(Instr::Halt);
+        cl.load_programs([p, Program::idle()]).unwrap();
+        cl.run().unwrap()
+    };
+    let fast = run_with_latency(1);
+    let slow = run_with_latency(100);
+    assert!(slow >= fast + 95, "fast={fast} slow={slow}");
+}

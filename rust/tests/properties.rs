@@ -1,0 +1,205 @@
+//! Property-based tests over simulator invariants (hand-rolled harness;
+//! see `util::testutil`).
+
+use spatzformer::cluster::Cluster;
+use spatzformer::config::{Mode, SimConfig};
+use spatzformer::isa::{asm, ElemWidth, Instr, Lmul, Program, ScalarOp, VReg, VectorOp};
+use spatzformer::kernels::{execute, Deployment, KernelId};
+use spatzformer::util::testutil::{check, Gen};
+
+/// Generate a random but well-formed elementwise vector program over a
+/// scratch region, returning (program, model closure outputs).
+fn arb_elementwise(g: &mut Gen, n: u32, in_base: u32, out_base: u32, merged: bool) -> (Program, Vec<f32>, Vec<f32>) {
+    let data: Vec<f32> = (0..n).map(|_| g.f32(100.0)).collect();
+    let mut p = Program::new("prop-elementwise");
+    let mut expect = data.clone();
+    let cap = if merged { 256 } else { 128 };
+    let mut off = 0u32;
+    while off < n {
+        let vl = (g.int(1, cap) as u32).min(n - off);
+        p.vector(VectorOp::SetVl { avl: vl, ew: ElemWidth::E32, lmul: Lmul::M8 });
+        p.vector(VectorOp::Load { vd: VReg(8), base: in_base + off * 4, stride: 1 });
+        let f = g.f32(4.0);
+        match g.int(0, 2) {
+            0 => {
+                p.vector(VectorOp::MulVF { vd: VReg(16), vs: VReg(8), f });
+                for e in off..off + vl {
+                    expect[e as usize] = data[e as usize] * f;
+                }
+            }
+            1 => {
+                p.vector(VectorOp::AddVF { vd: VReg(16), vs: VReg(8), f });
+                for e in off..off + vl {
+                    expect[e as usize] = data[e as usize] + f;
+                }
+            }
+            _ => {
+                p.vector(VectorOp::MovVV { vd: VReg(16), vs: VReg(8) });
+                for e in off..off + vl {
+                    expect[e as usize] = data[e as usize];
+                }
+            }
+        }
+        p.vector(VectorOp::Store { vs: VReg(16), base: out_base + off * 4, stride: 1 });
+        if g.bool() {
+            p.scalar(ScalarOp::Alu);
+        }
+        off += vl;
+    }
+    p.push(Instr::Fence);
+    p.push(Instr::Halt);
+    (p, data, expect)
+}
+
+#[test]
+fn prop_split_and_merge_agree_bitwise_on_random_programs() {
+    check("split vs merge bitwise", 48, |g| {
+        let n = (g.int(1, 24) * 32) as u32;
+        let (p, data, expect) = arb_elementwise(g, n, 0, 0x8000, false);
+        // split run
+        let mut sp = Cluster::new(SimConfig::spatzformer()).unwrap();
+        sp.stage_f32(0, &data);
+        sp.load_programs([p.clone(), Program::idle()]).unwrap();
+        sp.run().unwrap();
+        let split_out = sp.tcdm.read_f32_slice(0x8000, n as usize);
+        // merge run of the same program (vl <= 128 still valid)
+        let mut mg = Cluster::new(SimConfig::spatzformer()).unwrap();
+        mg.set_mode(Mode::Merge).unwrap();
+        mg.stage_f32(0, &data);
+        mg.load_programs([p, Program::idle()]).unwrap();
+        mg.run().unwrap();
+        let merge_out = mg.tcdm.read_f32_slice(0x8000, n as usize);
+        for i in 0..n as usize {
+            assert_eq!(split_out[i].to_bits(), expect[i].to_bits(), "split elem {i}");
+            assert_eq!(merge_out[i].to_bits(), expect[i].to_bits(), "merge elem {i}");
+        }
+    });
+}
+
+#[test]
+fn prop_cycle_counts_are_deterministic() {
+    check("determinism", 16, |g| {
+        let n = (g.int(1, 8) * 64) as u32;
+        let (p, data, _) = arb_elementwise(g, n, 0, 0x8000, false);
+        let run = || {
+            let mut cl = Cluster::new(SimConfig::spatzformer()).unwrap();
+            cl.stage_f32(0, &data);
+            cl.load_programs([p.clone(), Program::idle()]).unwrap();
+            cl.run().unwrap()
+        };
+        assert_eq!(run(), run());
+    });
+}
+
+#[test]
+fn prop_energy_monotone_in_work() {
+    // doubling the element count must increase energy
+    use spatzformer::coordinator::{Coordinator, Job, ModePolicy};
+    let mut c = Coordinator::new(SimConfig::spatzformer()).unwrap();
+    let mut last = 0.0;
+    for kernel in [KernelId::Faxpy, KernelId::Fmatmul] {
+        let r = c
+            .submit(&Job::Kernel { kernel, policy: ModePolicy::Split })
+            .unwrap();
+        assert!(r.metrics.energy_pj > 0.0);
+        if kernel == KernelId::Fmatmul {
+            assert!(
+                r.metrics.energy_pj > last,
+                "matmul (512x the FLOPs) must cost more than axpy"
+            );
+        }
+        last = r.metrics.energy_pj;
+    }
+}
+
+#[test]
+fn prop_asm_roundtrip_on_generated_kernels() {
+    // every generated kernel program survives print -> parse unchanged
+    let cfg = SimConfig::spatzformer();
+    for kernel in KernelId::all() {
+        for deploy in [Deployment::SplitDual, Deployment::Merge] {
+            let inst = kernel.build(&cfg.cluster, deploy, 0x5A5A);
+            for p in &inst.programs {
+                let text = asm::print_program(p);
+                let q = asm::parse_program(&text)
+                    .unwrap_or_else(|e| panic!("{} {}: {e}", kernel.name(), deploy.name()));
+                assert_eq!(p, &q, "{} {}", kernel.name(), deploy.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_tcdm_grants_conserve_accesses() {
+    // across any kernel run: granted accesses == element mem ops issued
+    // by the vector units + scalar memory ops (no lost/phantom grants)
+    for kernel in KernelId::all() {
+        let cfg = SimConfig::spatzformer();
+        let inst = kernel.build(&cfg.cluster, Deployment::SplitDual, 0x31);
+        let mut cl = Cluster::new(cfg).unwrap();
+        let (m, _) = execute(&mut cl, &inst).unwrap();
+        let expected = m.counters.vec_elem_mem + m.counters.scalar_mem;
+        assert_eq!(
+            m.tcdm.accesses, expected,
+            "{}: accesses {} != issued {}",
+            kernel.name(),
+            m.tcdm.accesses,
+            expected
+        );
+    }
+}
+
+#[test]
+fn prop_fpu_utilization_bounded() {
+    for kernel in KernelId::all() {
+        for deploy in [Deployment::SplitDual, Deployment::Merge] {
+            let cfg = SimConfig::spatzformer();
+            let inst = kernel.build(&cfg.cluster, deploy, 0x31);
+            let mut cl = Cluster::new(cfg).unwrap();
+            let (m, _) = execute(&mut cl, &inst).unwrap();
+            let u = m.fpu_utilization(2, 4);
+            assert!(
+                (0.0..=1.0).contains(&u),
+                "{} {}: utilization {u}",
+                kernel.name(),
+                deploy.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_gather_scatter_random_permutations() {
+    check("gather/scatter permutation roundtrip", 32, |g| {
+        let n = (g.int(1, 4) * 64) as usize;
+        let mut cl = Cluster::new(SimConfig::spatzformer()).unwrap();
+        let data: Vec<f32> = (0..n).map(|_| g.f32(10.0)).collect();
+        // random permutation as byte offsets
+        let mut perm: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = g.int(0, i);
+            perm.swap(i, j);
+        }
+        let idx: Vec<u32> = perm.iter().map(|&p| (p * 4) as u32).collect();
+        cl.stage_f32(0, &data);
+        cl.stage_u32(0x4000, &idx);
+        let mut p = Program::new("perm");
+        let mut off = 0usize;
+        while off < n {
+            let vl = (n - off).min(128) as u32;
+            p.vector(VectorOp::SetVl { avl: vl, ew: ElemWidth::E32, lmul: Lmul::M8 });
+            p.vector(VectorOp::Load { vd: VReg(0), base: 0x4000 + (off * 4) as u32, stride: 1 });
+            p.vector(VectorOp::LoadIndexed { vd: VReg(8), base: 0, vidx: VReg(0) });
+            p.vector(VectorOp::Store { vs: VReg(8), base: 0x8000 + (off * 4) as u32, stride: 1 });
+            off += vl as usize;
+        }
+        p.push(Instr::Fence);
+        p.push(Instr::Halt);
+        cl.load_programs([p, Program::idle()]).unwrap();
+        cl.run().unwrap();
+        let out = cl.tcdm.read_f32_slice(0x8000, n);
+        for i in 0..n {
+            assert_eq!(out[i].to_bits(), data[perm[i]].to_bits(), "elem {i}");
+        }
+    });
+}

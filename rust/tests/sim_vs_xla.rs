@@ -1,0 +1,104 @@
+//! End-to-end integration: the simulated RVV datapath vs the AOT XLA
+//! artifacts, for every kernel in every deployment.
+//!
+//! Requires `make artifacts` to have run (skips with a message
+//! otherwise, so `cargo test` works before the Python build step).
+
+use spatzformer::cluster::Cluster;
+use spatzformer::config::SimConfig;
+use spatzformer::coordinator::{Coordinator, Job, ModePolicy};
+use spatzformer::kernels::{execute, Deployment, KernelId};
+use spatzformer::runtime::XlaRuntime;
+use spatzformer::util::stats::max_rel_err;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = XlaRuntime::default_dir();
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn every_kernel_every_deployment_matches_xla() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = XlaRuntime::open(&dir).unwrap();
+    for kernel in KernelId::all() {
+        for deploy in [Deployment::SplitDual, Deployment::SplitSingle, Deployment::Merge] {
+            let cfg = SimConfig::spatzformer();
+            let inst = kernel.build(&cfg.cluster, deploy, 0xAB12);
+            let mut cl = Cluster::new(cfg).unwrap();
+            let (_, outputs) = execute(&mut cl, &inst).unwrap();
+            let golden = rt.run(kernel.artifact(), &inst.artifact_inputs).unwrap();
+            assert_eq!(golden.len(), outputs.len(), "{}", kernel.name());
+            for (o, (sim, gold)) in outputs.iter().zip(golden.iter()).enumerate() {
+                let err = max_rel_err(sim, gold);
+                assert!(
+                    err < 2e-2,
+                    "{} {} output {o}: max rel err {err:.3e}",
+                    kernel.name(),
+                    deploy.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn baseline_cluster_matches_xla_too() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut c = Coordinator::new(SimConfig::baseline()).unwrap();
+    c.attach_runtime(&dir).unwrap();
+    for kernel in KernelId::all() {
+        let r = c
+            .submit(&Job::Kernel { kernel, policy: ModePolicy::Split })
+            .unwrap();
+        assert!(r.verified_max_rel_err.is_some(), "{}", kernel.name());
+    }
+}
+
+#[test]
+fn verification_catches_corruption() {
+    // sanity for the harness itself: corrupting an input must fail
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = XlaRuntime::open(&dir).unwrap();
+    let cfg = SimConfig::spatzformer();
+    let inst = KernelId::Faxpy.build(&cfg.cluster, Deployment::Merge, 0xAB12);
+    let mut cl = Cluster::new(cfg).unwrap();
+    let (_, outputs) = execute(&mut cl, &inst).unwrap();
+    let mut bad_inputs = inst.artifact_inputs.clone();
+    bad_inputs[1][0] += 100.0;
+    let golden = rt.run("axpy", &bad_inputs).unwrap();
+    let err = max_rel_err(&outputs[0], &golden[0]);
+    assert!(err > 1e-2, "corruption went unnoticed (err={err:.3e})");
+}
+
+#[test]
+fn runtime_rejects_wrong_arity_and_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = XlaRuntime::open(&dir).unwrap();
+    assert!(rt.run("axpy", &[vec![0.0; 8192]]).is_err(), "arity");
+    assert!(
+        rt.run("dotp", &[vec![0.0; 4], vec![0.0; 4]]).is_err(),
+        "shape"
+    );
+    assert!(rt.run("nonexistent", &[]).is_err(), "unknown kernel");
+}
+
+#[test]
+fn mixed_job_with_verification_end_to_end() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut c = Coordinator::new(SimConfig::spatzformer()).unwrap();
+    c.attach_runtime(&dir).unwrap();
+    let r = c
+        .submit(&Job::Mixed {
+            kernel: KernelId::Fft,
+            policy: ModePolicy::Auto,
+            coremark_iterations: 1,
+        })
+        .unwrap();
+    assert!(r.verified_max_rel_err.unwrap() < 2e-2);
+    assert!(r.scalar_cycles.is_some());
+}

@@ -24,9 +24,12 @@ use spatzformer::util::Summary;
 fn main() -> anyhow::Result<()> {
     let mut coord = Coordinator::new(SimConfig::spatzformer())?;
     let artifacts = XlaRuntime::default_dir();
-    let verified = artifacts.join("manifest.txt").exists();
-    if verified {
-        coord.attach_runtime(&artifacts)?;
+    if artifacts.join("manifest.txt").exists() {
+        // Degrade gracefully: attach fails on builds without the
+        // `xla-runtime` feature, and the sweep is still worth running.
+        if let Err(e) = coord.attach_runtime(&artifacts) {
+            eprintln!("warning: running unverified ({e})");
+        }
     } else {
         eprintln!("warning: artifacts missing; run `make artifacts` for XLA verification");
     }

@@ -1,0 +1,51 @@
+//! §Perf — fleet batch-simulation throughput: jobs/s and simulated
+//! cycles/s as the worker count scales, plus the result-cache effect.
+//! This is the headline number for the fleet subsystem (EXPERIMENTS.md
+//! §Perf): the acceptance bar is >1.5x wall-clock speedup at 4 workers
+//! over 1 worker on the same generated sweep.
+
+use spatzformer::config::SimConfig;
+use spatzformer::fleet::{scenario, Fleet, ScenarioKind};
+use spatzformer::util::bench::section;
+
+fn main() {
+    section("fleet throughput (batch simulation)");
+    let seed = 0xF1EE7;
+    let cfg = SimConfig::spatzformer();
+    let jobs = 120;
+    let storm = scenario::generate(ScenarioKind::Storm, cfg.cluster.arch, seed, jobs);
+    println!("  scenario: storm, {jobs} jobs, arch {}", cfg.cluster.arch.name());
+
+    // Scheduler scaling with the cache off (every job simulates).
+    let mut base_rate = 0.0;
+    for workers in [1usize, 2, 4, 8] {
+        let fleet = Fleet::new(cfg.clone())
+            .unwrap()
+            .with_workers(workers)
+            .with_cache(false);
+        let out = fleet.run(&storm.jobs).unwrap();
+        let rate = out.metrics.jobs_per_sec();
+        if workers == 1 {
+            base_rate = rate;
+        }
+        println!(
+            "  {workers} worker{}: {:>8.1} jobs/s  {:>8.2} Msim-cycles/s  speedup {:.2}x  util {:.0}%",
+            if workers == 1 { " " } else { "s" },
+            rate,
+            out.metrics.sim_cycles_per_sec() / 1e6,
+            rate / base_rate,
+            out.metrics.mean_utilization() * 100.0,
+        );
+    }
+
+    // Cache effect: the storm draws from a small seed pool, so repeats
+    // are served from memory.
+    let fleet = Fleet::new(cfg).unwrap().with_workers(4);
+    let out = fleet.run(&storm.jobs).unwrap();
+    println!(
+        "  4 workers + cache: {:>6.1} jobs/s  (hit rate {:.1}%, {} steals)",
+        out.metrics.jobs_per_sec(),
+        out.metrics.cache_hit_rate() * 100.0,
+        out.metrics.steals,
+    );
+}

@@ -3,7 +3,8 @@
 //! ```text
 //! spatzformer run   --kernel fft --mode merge [--arch spatzformer]
 //! spatzformer mixed --kernel fmatmul --mode auto [--iters 2]
-//! spatzformer bench fig2-perf|fig2-energy|fig2-mixed|area|fmax|all
+//! spatzformer fleet --workers 8 --jobs 256 --seed 7 [--scenario storm] [--no-cache]
+//! spatzformer bench fig2-perf|fig2-energy|fig2-mixed|fig2-fleet|area|fmax|all
 //! spatzformer ppa
 //! spatzformer verify [--artifacts DIR]
 //! spatzformer disasm --kernel fdotp --mode split
@@ -12,6 +13,7 @@
 use crate::config::SimConfig;
 use crate::coordinator::{Coordinator, Job, ModePolicy};
 use crate::experiments;
+use crate::fleet::{self, Fleet, ScenarioKind};
 use crate::isa::asm;
 use crate::kernels::{Deployment, KernelId};
 
@@ -24,7 +26,10 @@ USAGE:
 COMMANDS:
   run      run one vector kernel           --kernel <name> --mode <split|merge|auto>
   mixed    kernel ∥ CoreMark-workalike     --kernel <name> --mode <split|merge|auto> [--iters N]
-  bench    regenerate a paper artifact     <fig2-perf|fig2-energy|fig2-mixed|area|fmax|all>
+  fleet    batch-simulate a generated scenario across N simulated clusters
+           [--scenario <kernel-sweep|mixed-sweep|storm>] [--workers N]
+           [--jobs M] [--no-cache]
+  bench    regenerate a paper artifact     <fig2-perf|fig2-energy|fig2-mixed|fig2-fleet|area|fmax|all>
   ppa      print the area/frequency model
   verify   cross-check all kernels vs the XLA artifacts [--artifacts DIR]
   disasm   print a kernel's vector program --kernel <name> --mode <split|merge>
@@ -37,8 +42,17 @@ COMMON OPTIONS:
   --set <section.key=value>       override one config knob (repeatable)
   --artifacts <dir>               artifact directory (default: artifacts/)
 
+FLEET OPTIONS:
+  --scenario <name>               generator: kernel-sweep, mixed-sweep, storm (default storm)
+  --workers <N>                   worker threads / simulated clusters (default: fleet.workers, 0 = auto)
+  --jobs <M>                      batch size to generate (default 128)
+  --no-cache                      disable the content-addressed result cache
+
 KERNELS: fmatmul conv2d fft fdotp faxpy fdct
 ";
+
+/// Options that take no value (presence == true).
+const BOOL_FLAGS: &[&str] = &["no-cache"];
 
 struct Args {
     positional: Vec<String>,
@@ -53,6 +67,11 @@ impl Args {
         while i < argv.len() {
             let a = &argv[i];
             if let Some(name) = a.strip_prefix("--") {
+                if BOOL_FLAGS.contains(&name) {
+                    options.push((name.to_string(), "true".to_string()));
+                    i += 1;
+                    continue;
+                }
                 let value = argv
                     .get(i + 1)
                     .ok_or_else(|| format!("--{name} needs a value"))?
@@ -177,6 +196,43 @@ fn cmd_mixed(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
+    let cfg = build_config(args)?;
+    let kind_name = args.get("scenario").unwrap_or("storm");
+    let kind = ScenarioKind::from_name(kind_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown scenario: {kind_name} (see `spatzformer help`)"))?;
+    let count: usize = args
+        .get("jobs")
+        .unwrap_or("128")
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad --jobs: {}", args.get("jobs").unwrap_or("")))?;
+    let scenario = fleet::scenario::generate(kind, cfg.cluster.arch, cfg.seed, count);
+
+    let mut fl = Fleet::new(cfg)?;
+    if let Some(w) = args.get("workers") {
+        let w: usize = w
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad --workers: {w}"))?;
+        fl = fl.with_workers(w);
+    }
+    if args.get("no-cache").is_some() {
+        fl = fl.with_cache(false);
+    }
+
+    println!(
+        "scenario       : {} ({} jobs, arch {})",
+        scenario.name(),
+        scenario.jobs.len(),
+        fl.base_config().cluster.arch.name()
+    );
+    let outcome = fl.run(&scenario.jobs)?;
+    println!("{}", outcome.metrics.summary());
+    println!();
+    println!("{}", outcome.metrics.render_workers());
+    println!("{}", fleet::metrics::render_job_digest(&outcome.reports));
+    Ok(())
+}
+
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     let what = args
         .positional
@@ -198,6 +254,13 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         "fig2-mixed" => {
             let rows = experiments::mixed_rows(seed, 1);
             println!("{}", experiments::render_fig2_mixed(&rows));
+        }
+        "fig2-fleet" => {
+            // Same rows as fig2-perf/energy, computed on the fleet (one
+            // simulated cluster per worker) — identical numbers, less wall.
+            let rows = experiments::fig2_rows_fleet(seed, 0);
+            println!("{}", experiments::render_fig2_perf(&rows));
+            println!("{}", experiments::render_fig2_energy(&rows));
         }
         "area" => println!("{}", experiments::render_area()),
         "fmax" => println!("{}", experiments::render_fmax()),
@@ -287,6 +350,7 @@ pub fn main() -> i32 {
     let result = match cmd {
         "run" => cmd_run(&args),
         "mixed" => cmd_mixed(&args),
+        "fleet" => cmd_fleet(&args),
         "bench" => cmd_bench(&args),
         "ppa" => cmd_ppa(&args),
         "verify" => cmd_verify(&args),
@@ -336,6 +400,16 @@ mod tests {
     fn missing_value_is_an_error() {
         let v = vec!["run".to_string(), "--kernel".to_string()];
         assert!(Args::parse(&v).is_err());
+    }
+
+    #[test]
+    fn boolean_flags_take_no_value() {
+        let a = args(&["fleet", "--no-cache", "--workers", "4"]);
+        assert_eq!(a.get("no-cache"), Some("true"));
+        assert_eq!(a.get("workers"), Some("4"));
+        // trailing boolean flag parses too
+        let a = args(&["fleet", "--workers", "4", "--no-cache"]);
+        assert_eq!(a.get("no-cache"), Some("true"));
     }
 
     #[test]

@@ -244,11 +244,37 @@ impl Default for PpaConfig {
     }
 }
 
+/// Fleet (multi-cluster batch simulation) knobs — see [`crate::fleet`].
+///
+/// Deliberately *not* part of the result-cache key: worker count and
+/// caching policy must never change a simulation outcome (the fleet's
+/// determinism contract).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FleetConfig {
+    /// Worker threads, one simulated cluster each (0 = one per available
+    /// hardware thread).
+    pub workers: usize,
+    /// Serve repeated `(SimConfig, Job)` pairs from the result cache
+    /// instead of re-simulating.
+    pub cache: bool,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self {
+            workers: 0,
+            cache: true,
+        }
+    }
+}
+
 /// Top-level simulation config.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SimConfig {
     pub cluster: ClusterConfig,
     pub ppa: PpaConfig,
+    /// Batch-simulation fleet section.
+    pub fleet: FleetConfig,
     /// Seed for workload/data generation.
     pub seed: u64,
     /// Emit a per-event trace (slow; debugging only).
@@ -262,6 +288,7 @@ impl Default for SimConfig {
         Self {
             cluster: ClusterConfig::default(),
             ppa: PpaConfig::default(),
+            fleet: FleetConfig::default(),
             seed: 0xC0FFEE,
             trace: false,
             max_cycles: 500_000_000,
@@ -345,6 +372,8 @@ impl SimConfig {
             "ppa.pj_cycle_interconnect" => p.pj_cycle_interconnect = value.as_f64().ok_or_else(bad)?,
             "ppa.pj_cycle_reconfig" => p.pj_cycle_reconfig = value.as_f64().ok_or_else(bad)?,
             "ppa.idle_power_fraction" => p.idle_power_fraction = value.as_f64().ok_or_else(bad)?,
+            "fleet.workers" => self.fleet.workers = value.as_usize().ok_or_else(bad)?,
+            "fleet.cache" => self.fleet.cache = value.as_bool().ok_or_else(bad)?,
             _ => anyhow::bail!("unknown config key: {key}"),
         }
         Ok(())
@@ -407,6 +436,18 @@ mod tests {
         assert_eq!(cfg.seed, 99);
         cfg.apply("cluster.arch", &Value::Str("baseline".into())).unwrap();
         assert_eq!(cfg.cluster.arch, ArchKind::Baseline);
+    }
+
+    #[test]
+    fn apply_fleet_keys() {
+        let mut cfg = SimConfig::default();
+        assert_eq!(cfg.fleet.workers, 0); // auto
+        assert!(cfg.fleet.cache);
+        cfg.apply("fleet.workers", &Value::Int(8)).unwrap();
+        cfg.apply("fleet.cache", &Value::Bool(false)).unwrap();
+        assert_eq!(cfg.fleet.workers, 8);
+        assert!(!cfg.fleet.cache);
+        assert!(cfg.apply("fleet.cache", &Value::Int(1)).is_err());
     }
 
     #[test]

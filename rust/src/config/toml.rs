@@ -71,12 +71,20 @@ impl fmt::Display for Value {
 }
 
 /// Parse error with line information.
-#[derive(Debug, thiserror::Error)]
-#[error("config parse error at line {line}: {msg}")]
+/// (Manual `Display`/`Error` impls: `thiserror` is unavailable offline.)
+#[derive(Debug)]
 pub struct ParseError {
     pub line: usize,
     pub msg: String,
 }
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 /// Parse TOML-subset text into a flat `section.key -> Value` map.
 /// Keys before any `[section]` header are stored without a prefix.

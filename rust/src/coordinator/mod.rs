@@ -57,7 +57,11 @@ impl Job {
 }
 
 /// Result of one job.
-#[derive(Debug, Clone)]
+///
+/// `PartialEq` is exact (including priced energy): two reports compare
+/// equal iff the runs were byte-identical, which is what the fleet's
+/// parallel-vs-sequential determinism tests assert.
+#[derive(Debug, Clone, PartialEq)]
 pub struct JobReport {
     pub job_name: String,
     pub kernel: KernelId,

@@ -11,7 +11,8 @@
 //! | E5 | fmax corners | [`render_fmax`] |
 
 use crate::config::{ArchKind, Corner, SimConfig};
-use crate::coordinator::{Coordinator, Job, ModePolicy};
+use crate::coordinator::{Coordinator, Job, JobReport, ModePolicy};
+use crate::fleet::{Fleet, FleetJob};
 use crate::kernels::KernelId;
 use crate::metrics::Table;
 use crate::ppa::{AreaModel, FreqModel};
@@ -49,6 +50,54 @@ pub fn fig2_rows(seed: u64) -> Vec<Fig2Row> {
             baseline: run_kernel(&base_cfg, kernel, ModePolicy::Split),
             sm: run_kernel(&sf_cfg, kernel, ModePolicy::Split),
             mm: run_kernel(&sf_cfg, kernel, ModePolicy::Merge),
+        })
+        .collect()
+}
+
+/// [`fig2_rows`] computed on the fleet: the same kernel × variant grid
+/// dispatched as one batch across `workers` simulated clusters
+/// (`workers == 0` = one per hardware thread). By the fleet's
+/// determinism contract the rows are identical to the sequential
+/// sweep's — only the wall-clock differs.
+pub fn fig2_rows_fleet(seed: u64, workers: usize) -> Vec<Fig2Row> {
+    fig2_rows_fleet_for(&KernelId::all(), seed, workers)
+}
+
+/// [`fig2_rows_fleet`] restricted to a kernel subset (tests use a single
+/// cheap kernel; the CLI sweeps all six).
+pub fn fig2_rows_fleet_for(kernels: &[KernelId], seed: u64, workers: usize) -> Vec<Fig2Row> {
+    let mut base_cfg = SimConfig::baseline();
+    base_cfg.seed = seed;
+    let mut sf_cfg = SimConfig::spatzformer();
+    sf_cfg.seed = seed;
+    let batch = |cfg: &SimConfig, policies: &[ModePolicy]| -> Vec<JobReport> {
+        let jobs: Vec<FleetJob> = kernels
+            .iter()
+            .flat_map(|&kernel| {
+                policies
+                    .iter()
+                    .map(move |&policy| FleetJob::new(Job::Kernel { kernel, policy }))
+            })
+            .collect();
+        Fleet::new(cfg.clone())
+            .expect("config")
+            .with_workers(workers)
+            .run(&jobs)
+            .expect("fleet sweep")
+            .reports
+    };
+    let base = batch(&base_cfg, &[ModePolicy::Split]);
+    let sf = batch(&sf_cfg, &[ModePolicy::Split, ModePolicy::Merge]);
+    let triplet =
+        |r: &JobReport| (r.kernel_cycles, r.flop_per_cycle(), r.metrics.gflops_per_watt());
+    kernels
+        .iter()
+        .enumerate()
+        .map(|(i, &kernel)| Fig2Row {
+            kernel,
+            baseline: triplet(&base[i]),
+            sm: triplet(&sf[2 * i]),
+            mm: triplet(&sf[2 * i + 1]),
         })
         .collect()
 }
@@ -268,6 +317,20 @@ mod tests {
         assert!(a.contains("+1.4%"));
         let f = render_fmax();
         assert!(f.contains("NO (matches paper)"));
+    }
+
+    #[test]
+    fn fleet_fig2_matches_sequential_for_one_kernel() {
+        let kernels = [KernelId::Faxpy];
+        let rows = fig2_rows_fleet_for(&kernels, 7, 3);
+        assert_eq!(rows.len(), 1);
+        let mut base_cfg = SimConfig::baseline();
+        base_cfg.seed = 7;
+        let mut sf_cfg = SimConfig::spatzformer();
+        sf_cfg.seed = 7;
+        assert_eq!(rows[0].baseline, run_kernel(&base_cfg, KernelId::Faxpy, ModePolicy::Split));
+        assert_eq!(rows[0].sm, run_kernel(&sf_cfg, KernelId::Faxpy, ModePolicy::Split));
+        assert_eq!(rows[0].mm, run_kernel(&sf_cfg, KernelId::Faxpy, ModePolicy::Merge));
     }
 
     #[test]

@@ -1,0 +1,199 @@
+//! Content-addressed result cache: repeated `(SimConfig, Job)` pairs in
+//! a sweep are served from memory instead of being re-simulated.
+//!
+//! The key is a stable 64-bit FNV-1a digest over a canonical encoding of
+//! everything that can change a simulation outcome: the cluster shape,
+//! the PPA model, the workload seed, the cycle limit, and the job
+//! itself. The [`crate::config::FleetConfig`] section is deliberately
+//! excluded — worker count and caching policy must never affect results,
+//! so they must not split the key space either.
+//!
+//! Because simulation is fully deterministic in `(SimConfig, Job)`, a
+//! cache hit is byte-identical to a re-simulation; the fleet determinism
+//! tests run with the cache both on and off to prove it.
+
+use crate::config::SimConfig;
+use crate::coordinator::{Job, JobReport};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// 64-bit FNV-1a. Tiny, dependency-free, and stable across platforms —
+/// we need a *reproducible* digest, not a cryptographic one (a collision
+/// would only ever serve a stale report for a colliding config, and the
+/// 64-bit space over at most millions of jobs makes that negligible).
+struct Fnv1a {
+    state: u64,
+}
+
+impl Fnv1a {
+    const OFFSET_BASIS: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+    fn new() -> Self {
+        Self {
+            state: Self::OFFSET_BASIS,
+        }
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state ^= b as u64;
+            self.state = self.state.wrapping_mul(Self::PRIME);
+        }
+    }
+
+    fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+/// Digest of everything that determines a job's simulation outcome.
+///
+/// The cluster/PPA sections and the job are folded in via their `Debug`
+/// encodings: those are exhaustive over the struct fields (derived) and
+/// Rust's float formatting is shortest-round-trip, so two configs digest
+/// equal iff they compare equal.
+pub fn job_key(cfg: &SimConfig, job: &Job) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write(format!("{:?}", cfg.cluster).as_bytes());
+    h.write(format!("{:?}", cfg.ppa).as_bytes());
+    h.write(&cfg.seed.to_le_bytes());
+    h.write(&cfg.max_cycles.to_le_bytes());
+    h.write(&[cfg.trace as u8]);
+    h.write(format!("{job:?}").as_bytes());
+    h.finish()
+}
+
+/// Shared, thread-safe result cache with hit/miss counters.
+///
+/// One mutex around the map is plenty: entries are whole `JobReport`s,
+/// lookups are rare relative to the milliseconds a simulation takes, and
+/// the counters are atomics so metrics reads never contend.
+pub struct ResultCache {
+    map: Mutex<HashMap<u64, JobReport>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ResultCache {
+    pub fn new() -> Self {
+        Self {
+            map: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Look up a key, counting the hit or miss.
+    pub fn get(&self, key: u64) -> Option<JobReport> {
+        let hit = self.map.lock().expect("result cache poisoned").get(&key).cloned();
+        match hit {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        hit
+    }
+
+    /// Insert a freshly simulated report. Two workers racing on the same
+    /// key insert identical values (determinism), so last-write-wins is
+    /// correct.
+    pub fn insert(&self, key: u64, report: JobReport) {
+        self.map.lock().expect("result cache poisoned").insert(key, report);
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().expect("result cache poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for ResultCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ModePolicy;
+    use crate::kernels::KernelId;
+
+    fn job() -> Job {
+        Job::Kernel {
+            kernel: KernelId::Faxpy,
+            policy: ModePolicy::Split,
+        }
+    }
+
+    #[test]
+    fn key_is_deterministic_and_seed_sensitive() {
+        let cfg = SimConfig::spatzformer();
+        let j = job();
+        assert_eq!(job_key(&cfg, &j), job_key(&cfg, &j));
+        let mut other = cfg.clone();
+        other.seed ^= 1;
+        assert_ne!(job_key(&cfg, &j), job_key(&other, &j));
+    }
+
+    #[test]
+    fn key_sensitive_to_cluster_and_job_but_not_fleet_section() {
+        let cfg = SimConfig::spatzformer();
+        let j = job();
+        let mut lanes8 = cfg.clone();
+        lanes8.cluster.lanes = 8;
+        assert_ne!(job_key(&cfg, &j), job_key(&lanes8, &j));
+
+        let merge = Job::Kernel {
+            kernel: KernelId::Faxpy,
+            policy: ModePolicy::Merge,
+        };
+        assert_ne!(job_key(&cfg, &j), job_key(&cfg, &merge));
+
+        let mut refleet = cfg.clone();
+        refleet.fleet.workers = 16;
+        refleet.fleet.cache = false;
+        assert_eq!(job_key(&cfg, &j), job_key(&refleet, &j));
+    }
+
+    #[test]
+    fn cache_counts_hits_and_misses() {
+        let cache = ResultCache::new();
+        assert!(cache.get(42).is_none());
+        assert_eq!((cache.hits(), cache.misses()), (0, 1));
+        let report = JobReport {
+            job_name: "t".into(),
+            kernel: KernelId::Faxpy,
+            deploy: crate::kernels::Deployment::SplitDual,
+            metrics: Default::default(),
+            kernel_cycles: 1,
+            scalar_cycles: None,
+            coremark_checksum: None,
+            verified_max_rel_err: None,
+        };
+        cache.insert(42, report.clone());
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.get(42).as_ref(), Some(&report));
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+    }
+
+    #[test]
+    fn fnv_vector() {
+        // FNV-1a("a") reference value.
+        let mut h = Fnv1a::new();
+        h.write(b"a");
+        assert_eq!(h.finish(), 0xaf63_dc4c_8601_ec8c);
+    }
+}

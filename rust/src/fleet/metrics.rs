@@ -1,0 +1,239 @@
+//! Aggregate fleet metrics: batch throughput, cache effectiveness, and
+//! per-worker utilization — the numbers the `spatzformer fleet` CLI and
+//! the `fleet_throughput` bench report.
+
+use crate::coordinator::JobReport;
+use crate::metrics::Table;
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// What one worker did during a fleet run.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerStats {
+    /// Jobs this worker completed (simulated or served from cache).
+    pub jobs: u64,
+    /// Jobs this worker actually simulated (cache misses + cache off).
+    pub executed: u64,
+    /// Jobs popped from another worker's queue.
+    pub stolen: u64,
+    /// Simulated cluster cycles this worker produced (executed jobs only).
+    pub sim_cycles: u64,
+    /// Wall-clock time spent inside job execution (vs idle/stealing).
+    pub busy: Duration,
+}
+
+/// Aggregate metrics of one [`crate::fleet::Fleet::run`] call.
+#[derive(Debug, Clone, Default)]
+pub struct FleetMetrics {
+    pub workers: usize,
+    /// Jobs completed (all of them — a run either finishes or errors).
+    pub jobs: u64,
+    /// Wall-clock duration of the whole batch.
+    pub wall: Duration,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Work-stealing events across all workers.
+    pub steals: u64,
+    /// Simulated cycles summed over every report (cached ones included).
+    pub sim_cycles_total: u64,
+    /// Simulated cycles actually executed this run (cache hits excluded).
+    pub sim_cycles_executed: u64,
+    pub per_worker: Vec<WorkerStats>,
+}
+
+impl FleetMetrics {
+    /// Batch throughput in jobs per wall-clock second.
+    pub fn jobs_per_sec(&self) -> f64 {
+        let secs = self.wall.as_secs_f64();
+        if secs == 0.0 {
+            return 0.0;
+        }
+        self.jobs as f64 / secs
+    }
+
+    /// Host-side simulation rate: simulated cluster cycles produced per
+    /// wall-clock second (executed work only — cache hits produce no new
+    /// cycles).
+    pub fn sim_cycles_per_sec(&self) -> f64 {
+        let secs = self.wall.as_secs_f64();
+        if secs == 0.0 {
+            return 0.0;
+        }
+        self.sim_cycles_executed as f64 / secs
+    }
+
+    /// Cache hit rate in [0, 1]; 0 when the cache was never consulted.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.cache_hits as f64 / total as f64
+    }
+
+    /// Fraction of the batch's wall-clock each worker spent executing
+    /// jobs, in [0, 1] per worker.
+    pub fn worker_utilization(&self) -> Vec<f64> {
+        let wall = self.wall.as_secs_f64();
+        self.per_worker
+            .iter()
+            .map(|w| {
+                if wall == 0.0 {
+                    0.0
+                } else {
+                    (w.busy.as_secs_f64() / wall).min(1.0)
+                }
+            })
+            .collect()
+    }
+
+    pub fn mean_utilization(&self) -> f64 {
+        let u = self.worker_utilization();
+        if u.is_empty() {
+            return 0.0;
+        }
+        u.iter().sum::<f64>() / u.len() as f64
+    }
+
+    /// Headline summary block (the acceptance numbers).
+    pub fn summary(&self) -> String {
+        format!(
+            "workers        : {}\n\
+             jobs           : {}\n\
+             wall           : {:.1} ms\n\
+             jobs/sec       : {:.1}\n\
+             Msim-cycles/s  : {:.2}\n\
+             cache          : {} hits / {} misses ({:.1}% hit rate)\n\
+             steals         : {}\n\
+             utilization    : {:.1}% mean",
+            self.workers,
+            self.jobs,
+            self.wall.as_secs_f64() * 1e3,
+            self.jobs_per_sec(),
+            self.sim_cycles_per_sec() / 1e6,
+            self.cache_hits,
+            self.cache_misses,
+            self.cache_hit_rate() * 100.0,
+            self.steals,
+            self.mean_utilization() * 100.0,
+        )
+    }
+
+    /// Per-worker breakdown table.
+    pub fn render_workers(&self) -> String {
+        let mut t = Table::new(&["worker", "jobs", "executed", "stolen", "busy ms", "util"]);
+        for (i, (w, util)) in self
+            .per_worker
+            .iter()
+            .zip(self.worker_utilization())
+            .enumerate()
+        {
+            t.row(&[
+                format!("w{i}"),
+                w.jobs.to_string(),
+                w.executed.to_string(),
+                w.stolen.to_string(),
+                format!("{:.1}", w.busy.as_secs_f64() * 1e3),
+                format!("{:.0}%", util * 100.0),
+            ]);
+        }
+        t.render()
+    }
+}
+
+/// Compact digest of a batch's reports, grouped by job name: how many of
+/// each ran and their mean cycle/throughput numbers.
+pub fn render_job_digest(reports: &[JobReport]) -> String {
+    struct Acc {
+        count: u64,
+        cycles: u64,
+        flop_per_cycle: f64,
+    }
+    let mut groups: BTreeMap<String, Acc> = BTreeMap::new();
+    for r in reports {
+        let acc = groups.entry(r.job_name.clone()).or_insert(Acc {
+            count: 0,
+            cycles: 0,
+            flop_per_cycle: 0.0,
+        });
+        acc.count += 1;
+        acc.cycles += r.kernel_cycles;
+        acc.flop_per_cycle += r.flop_per_cycle();
+    }
+    let mut t = Table::new(&["job", "count", "mean cycles", "mean FLOP/cyc"]);
+    for (name, acc) in &groups {
+        t.row(&[
+            name.clone(),
+            acc.count.to_string(),
+            (acc.cycles / acc.count).to_string(),
+            format!("{:.3}", acc.flop_per_cycle / acc.count as f64),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metrics() -> FleetMetrics {
+        FleetMetrics {
+            workers: 2,
+            jobs: 10,
+            wall: Duration::from_millis(500),
+            cache_hits: 6,
+            cache_misses: 4,
+            steals: 1,
+            sim_cycles_total: 1_000_000,
+            sim_cycles_executed: 400_000,
+            per_worker: vec![
+                WorkerStats {
+                    jobs: 6,
+                    executed: 3,
+                    stolen: 1,
+                    sim_cycles: 300_000,
+                    busy: Duration::from_millis(400),
+                },
+                WorkerStats {
+                    jobs: 4,
+                    executed: 1,
+                    stolen: 0,
+                    sim_cycles: 100_000,
+                    busy: Duration::from_millis(300),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn rates() {
+        let m = metrics();
+        assert!((m.jobs_per_sec() - 20.0).abs() < 1e-9);
+        assert!((m.sim_cycles_per_sec() - 800_000.0).abs() < 1e-6);
+        assert!((m.cache_hit_rate() - 0.6).abs() < 1e-12);
+        let u = m.worker_utilization();
+        assert!((u[0] - 0.8).abs() < 1e-12);
+        assert!((u[1] - 0.6).abs() < 1e-12);
+        assert!((m.mean_utilization() - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_wall_is_safe() {
+        let m = FleetMetrics::default();
+        assert_eq!(m.jobs_per_sec(), 0.0);
+        assert_eq!(m.sim_cycles_per_sec(), 0.0);
+        assert_eq!(m.cache_hit_rate(), 0.0);
+        assert_eq!(m.mean_utilization(), 0.0);
+    }
+
+    #[test]
+    fn summary_and_table_render() {
+        let m = metrics();
+        let s = m.summary();
+        assert!(s.contains("jobs/sec"));
+        assert!(s.contains("hit rate"));
+        let t = m.render_workers();
+        assert!(t.contains("w0"));
+        assert!(t.contains("w1"));
+    }
+}

@@ -1,0 +1,344 @@
+//! Fleet: multi-cluster batch simulation with a work-stealing scheduler.
+//!
+//! The coordinator ([`crate::coordinator`]) evaluates one [`Job`] at a
+//! time on one simulated cluster; sweeping a scenario space that way is
+//! serial and slow. The fleet owns N independent simulated clusters —
+//! one per worker thread — and drains a batch of jobs across them:
+//!
+//! * **scheduler** (this module): jobs are dealt round-robin into
+//!   per-worker queues; a worker pops its own queue front-first and,
+//!   when empty, steals from the *back* of a sibling's queue, so tail
+//!   latency is bounded by the slowest single job rather than the
+//!   slowest queue;
+//! * **[`scenario`]**: procedural generators that turn a seed into
+//!   diverse job batches (grid sweeps and random mixed-workload storms);
+//! * **[`cache`]**: a content-addressed result cache keyed by a digest
+//!   of `(SimConfig, Job)`, serving repeated jobs without re-simulation;
+//! * **[`metrics`]**: aggregate throughput, cache and per-worker
+//!   utilization numbers.
+//!
+//! **Determinism contract.** Simulation is a pure function of
+//! `(SimConfig, Job)`, every job runs on a fresh cluster, and results
+//! are returned in submission order — so a fleet run with any worker
+//! count, cache on or off, produces byte-identical [`JobReport`]s to
+//! sequential [`Coordinator::submit`] calls. The integration tests
+//! assert this exactly.
+
+pub mod cache;
+pub mod metrics;
+pub mod scenario;
+
+pub use cache::ResultCache;
+pub use metrics::{FleetMetrics, WorkerStats};
+pub use scenario::{Scenario, ScenarioKind};
+
+use crate::config::SimConfig;
+use crate::coordinator::{Coordinator, Job, JobReport};
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// One queued unit of fleet work: a coordinator job plus an optional
+/// workload-seed override on the base [`SimConfig`] (scenario sweeps
+/// vary the seed axis without cloning whole configs per job).
+#[derive(Debug, Clone)]
+pub struct FleetJob {
+    pub job: Job,
+    /// `Some(s)` replaces `SimConfig::seed` for this job.
+    pub seed: Option<u64>,
+}
+
+impl FleetJob {
+    /// A job at the base config's seed.
+    pub fn new(job: Job) -> Self {
+        Self { job, seed: None }
+    }
+
+    /// The config this job actually simulates under.
+    fn config(&self, base: &SimConfig) -> SimConfig {
+        let mut cfg = base.clone();
+        if let Some(seed) = self.seed {
+            cfg.seed = seed;
+        }
+        cfg
+    }
+}
+
+/// Result of a fleet batch: per-job reports in submission order plus
+/// aggregate metrics.
+#[derive(Debug)]
+pub struct FleetOutcome {
+    pub reports: Vec<JobReport>,
+    pub metrics: FleetMetrics,
+}
+
+/// One worker thread per simulated cluster.
+fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+/// The fleet: a base config plus scheduling knobs.
+pub struct Fleet {
+    base: SimConfig,
+    workers: usize,
+    use_cache: bool,
+}
+
+impl Fleet {
+    /// Build a fleet over a validated base config, taking worker count
+    /// and cache policy from its `[fleet]` section.
+    pub fn new(base: SimConfig) -> anyhow::Result<Self> {
+        base.validate()?;
+        let workers = if base.fleet.workers == 0 {
+            default_workers()
+        } else {
+            base.fleet.workers
+        };
+        Ok(Self {
+            workers,
+            use_cache: base.fleet.cache,
+            base,
+        })
+    }
+
+    /// Override the worker count (0 = one per available hardware thread).
+    pub fn with_workers(mut self, n: usize) -> Self {
+        self.workers = if n == 0 { default_workers() } else { n };
+        self
+    }
+
+    /// Enable/disable the result cache.
+    pub fn with_cache(mut self, on: bool) -> Self {
+        self.use_cache = on;
+        self
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn base_config(&self) -> &SimConfig {
+        &self.base
+    }
+
+    /// Run a batch to completion. Reports come back in submission order;
+    /// if any job fails, the whole run errors (scenario generators only
+    /// emit jobs valid for the target architecture, so a failure here is
+    /// a caller bug worth surfacing loudly).
+    pub fn run(&self, jobs: &[FleetJob]) -> anyhow::Result<FleetOutcome> {
+        let workers = self.workers.min(jobs.len()).max(1);
+        // Deal jobs round-robin into per-worker queues.
+        let queues: Vec<Mutex<VecDeque<(usize, FleetJob)>>> =
+            (0..workers).map(|_| Mutex::new(VecDeque::new())).collect();
+        for (i, job) in jobs.iter().enumerate() {
+            queues[i % workers]
+                .lock()
+                .expect("fleet queue poisoned")
+                .push_back((i, job.clone()));
+        }
+        let shared_cache = ResultCache::new();
+        let wall_start = Instant::now();
+
+        let mut per_worker: Vec<WorkerStats> = Vec::with_capacity(workers);
+        let mut completed: Vec<(usize, Result<JobReport, String>)> = Vec::with_capacity(jobs.len());
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..workers)
+                .map(|w| {
+                    let queues = &queues;
+                    let cache = &shared_cache;
+                    let base = &self.base;
+                    let use_cache = self.use_cache;
+                    s.spawn(move || worker_loop(w, base, use_cache, queues, cache))
+                })
+                .collect();
+            for h in handles {
+                let (stats, results) = h.join().expect("fleet worker panicked");
+                per_worker.push(stats);
+                completed.extend(results);
+            }
+        });
+        let wall = wall_start.elapsed();
+
+        // Reassemble in submission order and surface the first failure.
+        let mut slots: Vec<Option<JobReport>> = vec![None; jobs.len()];
+        let mut failures: Vec<(usize, String)> = Vec::new();
+        for (idx, result) in completed {
+            match result {
+                Ok(report) => slots[idx] = Some(report),
+                Err(msg) => failures.push((idx, msg)),
+            }
+        }
+        failures.sort_by_key(|(idx, _)| *idx);
+        if let Some((idx, msg)) = failures.into_iter().next() {
+            anyhow::bail!("fleet job {idx} ({}) failed: {msg}", jobs[idx].job.name());
+        }
+        let reports: Vec<JobReport> = slots
+            .into_iter()
+            .map(|r| r.expect("worker exited without completing an assigned job"))
+            .collect();
+
+        let metrics = FleetMetrics {
+            workers,
+            jobs: jobs.len() as u64,
+            wall,
+            cache_hits: shared_cache.hits(),
+            cache_misses: shared_cache.misses(),
+            steals: per_worker.iter().map(|w| w.stolen).sum(),
+            sim_cycles_total: reports.iter().map(|r| r.metrics.cycles).sum(),
+            sim_cycles_executed: per_worker.iter().map(|w| w.sim_cycles).sum(),
+            per_worker,
+        };
+        Ok(FleetOutcome { reports, metrics })
+    }
+}
+
+/// Pop the next job for worker `w`: own queue front first, then steal
+/// from the back of the first non-empty sibling queue. Returns the job's
+/// submission index and whether it was stolen.
+fn next_job(
+    w: usize,
+    queues: &[Mutex<VecDeque<(usize, FleetJob)>>],
+) -> Option<(usize, FleetJob, bool)> {
+    if let Some((idx, job)) = queues[w].lock().expect("fleet queue poisoned").pop_front() {
+        return Some((idx, job, false));
+    }
+    for d in 1..queues.len() {
+        let victim = (w + d) % queues.len();
+        if let Some((idx, job)) = queues[victim]
+            .lock()
+            .expect("fleet queue poisoned")
+            .pop_back()
+        {
+            return Some((idx, job, true));
+        }
+    }
+    None
+}
+
+/// Simulate (or cache-serve) one job on a fresh cluster.
+fn run_job(
+    base: &SimConfig,
+    use_cache: bool,
+    cache: &ResultCache,
+    fj: &FleetJob,
+    stats: &mut WorkerStats,
+) -> anyhow::Result<JobReport> {
+    let cfg = fj.config(base);
+    let key = if use_cache {
+        let key = cache::job_key(&cfg, &fj.job);
+        if let Some(hit) = cache.get(key) {
+            return Ok(hit);
+        }
+        Some(key)
+    } else {
+        None
+    };
+    let mut coord = Coordinator::new(cfg)?;
+    let report = coord.submit(&fj.job)?;
+    stats.executed += 1;
+    stats.sim_cycles += report.metrics.cycles;
+    if let Some(key) = key {
+        cache.insert(key, report.clone());
+    }
+    Ok(report)
+}
+
+/// A worker drains queues until the whole batch is empty. Job errors are
+/// captured (as rendered strings — they cross a thread boundary) rather
+/// than panicking, so one bad job cannot wedge the batch.
+fn worker_loop(
+    w: usize,
+    base: &SimConfig,
+    use_cache: bool,
+    queues: &[Mutex<VecDeque<(usize, FleetJob)>>],
+    cache: &ResultCache,
+) -> (WorkerStats, Vec<(usize, Result<JobReport, String>)>) {
+    let mut stats = WorkerStats::default();
+    let mut out = Vec::new();
+    while let Some((idx, fj, stolen)) = next_job(w, queues) {
+        if stolen {
+            stats.stolen += 1;
+        }
+        let t0 = Instant::now();
+        let result = run_job(base, use_cache, cache, &fj, &mut stats);
+        stats.busy += t0.elapsed();
+        stats.jobs += 1;
+        out.push((idx, result.map_err(|e| format!("{e:#}"))));
+    }
+    (stats, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ModePolicy;
+    use crate::kernels::KernelId;
+
+    fn axpy_job(seed: u64) -> FleetJob {
+        FleetJob {
+            job: Job::Kernel {
+                kernel: KernelId::Faxpy,
+                policy: ModePolicy::Split,
+            },
+            seed: Some(seed),
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let fleet = Fleet::new(SimConfig::spatzformer()).unwrap().with_workers(4);
+        let out = fleet.run(&[]).unwrap();
+        assert!(out.reports.is_empty());
+        assert_eq!(out.metrics.jobs, 0);
+    }
+
+    #[test]
+    fn worker_count_resolution() {
+        let mut cfg = SimConfig::spatzformer();
+        cfg.fleet.workers = 3;
+        let fleet = Fleet::new(cfg).unwrap();
+        assert_eq!(fleet.workers(), 3);
+        let fleet = fleet.with_workers(7);
+        assert_eq!(fleet.workers(), 7);
+        let fleet = fleet.with_workers(0); // auto
+        assert!(fleet.workers() >= 1);
+    }
+
+    #[test]
+    fn small_batch_completes_in_order() {
+        let fleet = Fleet::new(SimConfig::spatzformer()).unwrap().with_workers(2);
+        let jobs: Vec<FleetJob> = (0..5).map(|i| axpy_job(100 + i)).collect();
+        let out = fleet.run(&jobs).unwrap();
+        assert_eq!(out.reports.len(), 5);
+        assert_eq!(
+            out.metrics.per_worker.iter().map(|w| w.jobs).sum::<u64>(),
+            5
+        );
+        // distinct seeds -> all simulated, no cache hits
+        assert_eq!(out.metrics.cache_hits, 0);
+        assert_eq!(out.metrics.cache_misses, 5);
+        assert!(out.reports.iter().all(|r| r.metrics.cycles > 0));
+        assert!(out.metrics.sim_cycles_total > 0);
+        assert_eq!(
+            out.metrics.sim_cycles_total,
+            out.metrics.sim_cycles_executed
+        );
+    }
+
+    #[test]
+    fn invalid_job_fails_the_run_with_its_index() {
+        let fleet = Fleet::new(SimConfig::baseline()).unwrap().with_workers(2);
+        let jobs = vec![
+            axpy_job(1),
+            FleetJob::new(Job::Kernel {
+                kernel: KernelId::Fft,
+                policy: ModePolicy::Merge, // invalid on baseline
+            }),
+        ];
+        let err = fleet.run(&jobs).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("fleet job 1"), "{msg}");
+    }
+}

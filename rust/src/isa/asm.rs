@@ -86,12 +86,20 @@ pub fn print_program(p: &Program) -> String {
 }
 
 /// Parse error.
-#[derive(Debug, thiserror::Error)]
-#[error("asm parse error at line {line}: {msg}")]
+/// (Manual `Display`/`Error` impls: `thiserror` is unavailable offline.)
+#[derive(Debug)]
 pub struct AsmError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for AsmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "asm parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for AsmError {}
 
 fn err(line: usize, msg: impl Into<String>) -> AsmError {
     AsmError { line, msg: msg.into() }

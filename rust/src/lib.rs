@@ -15,9 +15,12 @@
 //!   paper's 12-nm implementation numbers ([`ppa`]);
 //! * a workload coordinator with runtime split/merge mode switching
 //!   ([`coordinator`]);
+//! * a multi-cluster batch-simulation fleet: N simulated clusters behind
+//!   a work-stealing scheduler, a procedural scenario generator, and a
+//!   content-addressed result cache ([`fleet`]);
 //! * a PJRT runtime that loads the JAX/Pallas AOT artifacts and
 //!   cross-checks the simulated RVV datapath against XLA numerics
-//!   ([`runtime`]).
+//!   ([`runtime`]; needs the `xla-runtime` cargo feature).
 //!
 //! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
 //! the paper-vs-measured record.
@@ -27,6 +30,7 @@ pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod experiments;
+pub mod fleet;
 pub mod isa;
 pub mod kernels;
 pub mod mem;

@@ -11,7 +11,7 @@
 use crate::config::ClusterConfig;
 
 /// Fetch statistics (feed the energy model + reports).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct ICacheStats {
     pub hits: u64,
     pub misses: u64,

@@ -9,7 +9,7 @@
 use crate::config::ClusterConfig;
 
 /// Access statistics (feed the energy model + reports).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct TcdmStats {
     /// Granted accesses (each costs one bank cycle of energy).
     pub accesses: u64,

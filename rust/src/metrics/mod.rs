@@ -104,7 +104,11 @@ impl Counters {
 }
 
 /// Metrics of one simulated run.
-#[derive(Debug, Clone, Default)]
+///
+/// `PartialEq` compares every counter and the priced energy exactly —
+/// the fleet determinism tests rely on byte-identical reports between
+/// parallel and sequential execution.
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct RunMetrics {
     /// Cluster cycles from start to all-cores-halted.
     pub cycles: u64,

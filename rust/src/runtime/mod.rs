@@ -11,6 +11,13 @@
 //! integration tests and the `verify` CLI command run every kernel on
 //! both the simulated RVV datapath and the XLA executable and assert the
 //! numerics agree. Python never runs on this path.
+//!
+//! The PJRT client requires the `xla` crate, which is unavailable in the
+//! offline build environment, so everything touching it is gated behind
+//! the off-by-default `xla-runtime` cargo feature. Without the feature a
+//! stub [`XlaRuntime`] with the same API reports artifacts as
+//! unavailable; manifest parsing and [`ArtifactSpec`] stay available so
+//! tooling and tests that only need artifact *metadata* keep working.
 
 use anyhow::{Context, Result};
 use std::collections::HashMap;
@@ -40,12 +47,22 @@ fn numel(shape: &[i64]) -> usize {
     shape.iter().product::<i64>() as usize
 }
 
+/// Default artifact location (repo-root `artifacts/`), honouring
+/// `SPATZFORMER_ARTIFACTS` if set. Shared by the real and stub runtimes.
+fn env_default_dir() -> PathBuf {
+    std::env::var("SPATZFORMER_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
 /// A compiled kernel executable.
+#[cfg(feature = "xla-runtime")]
 pub struct CompiledKernel {
     pub spec: ArtifactSpec,
     exe: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "xla-runtime")]
 impl CompiledKernel {
     /// Execute on flattened f32 inputs; returns flattened f32 outputs.
     pub fn run(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
@@ -95,6 +112,7 @@ impl CompiledKernel {
 }
 
 /// The artifact runtime: a PJRT CPU client plus the kernel registry.
+#[cfg(feature = "xla-runtime")]
 pub struct XlaRuntime {
     client: xla::PjRtClient,
     dir: PathBuf,
@@ -102,6 +120,7 @@ pub struct XlaRuntime {
     compiled: HashMap<String, CompiledKernel>,
 }
 
+#[cfg(feature = "xla-runtime")]
 impl XlaRuntime {
     /// Open the artifact directory (reads `manifest.txt`). Artifacts are
     /// compiled lazily on first use and cached.
@@ -123,9 +142,7 @@ impl XlaRuntime {
     /// Default artifact location (repo-root `artifacts/`), honouring
     /// `SPATZFORMER_ARTIFACTS` if set.
     pub fn default_dir() -> PathBuf {
-        std::env::var("SPATZFORMER_ARTIFACTS")
-            .map(PathBuf::from)
-            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+        env_default_dir()
     }
 
     pub fn kernel_names(&self) -> Vec<String> {
@@ -165,6 +182,49 @@ impl XlaRuntime {
     /// Convenience: run a kernel by name.
     pub fn run(&mut self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         self.kernel(name)?.run(inputs)
+    }
+}
+
+/// Stub runtime used when the crate is built without the `xla-runtime`
+/// feature (the default in the offline environment). Same API as the
+/// real runtime, but [`XlaRuntime::open`] always fails with an
+/// explanatory error; callers that want to degrade to unverified runs
+/// (the CLI, the examples) must treat `attach_runtime`/`open` errors as
+/// non-fatal rather than propagating them.
+#[cfg(not(feature = "xla-runtime"))]
+pub struct XlaRuntime {
+    #[allow(dead_code)] // no instance can exist; the field blocks literal construction
+    unconstructable: std::convert::Infallible,
+}
+
+#[cfg(not(feature = "xla-runtime"))]
+impl XlaRuntime {
+    /// Always fails: the PJRT client is not compiled in.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        anyhow::bail!(
+            "cannot load XLA artifacts from {}: spatzformer was built without the \
+             `xla-runtime` feature (rebuild with `--features xla-runtime` after \
+             providing the `xla` PJRT crate)",
+            dir.as_ref().display()
+        )
+    }
+
+    /// Default artifact location (repo-root `artifacts/`), honouring
+    /// `SPATZFORMER_ARTIFACTS` if set.
+    pub fn default_dir() -> PathBuf {
+        env_default_dir()
+    }
+
+    pub fn kernel_names(&self) -> Vec<String> {
+        Vec::new()
+    }
+
+    pub fn spec(&self, _name: &str) -> Option<&ArtifactSpec> {
+        None
+    }
+
+    pub fn run(&mut self, name: &str, _inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        anyhow::bail!("xla-runtime feature disabled; cannot execute artifact `{name}`")
     }
 }
 

@@ -1,0 +1,180 @@
+//! Fleet integration: the determinism contract (parallel == sequential,
+//! byte for byte), cache transparency and accounting, and scenario
+//! generator validity — end to end through `Fleet::run`.
+
+use spatzformer::config::SimConfig;
+use spatzformer::coordinator::{Coordinator, Job, JobReport, ModePolicy};
+use spatzformer::fleet::{scenario, Fleet, FleetJob, ScenarioKind};
+use spatzformer::kernels::KernelId;
+use spatzformer::util::testutil::check;
+
+/// Reference: run the same batch through sequential `Coordinator::submit`
+/// calls, applying per-job seed overrides exactly as the fleet does.
+fn sequential(base: &SimConfig, jobs: &[FleetJob]) -> Vec<JobReport> {
+    jobs.iter()
+        .map(|fj| {
+            let mut cfg = base.clone();
+            if let Some(seed) = fj.seed {
+                cfg.seed = seed;
+            }
+            let mut coord = Coordinator::new(cfg).unwrap();
+            coord.submit(&fj.job).unwrap()
+        })
+        .collect()
+}
+
+#[test]
+fn fleet_matches_sequential_bytewise() {
+    let base = SimConfig::spatzformer();
+    let storm = scenario::generate(ScenarioKind::Storm, base.cluster.arch, 0xD1CE, 16);
+    let expected = sequential(&base, &storm.jobs);
+
+    // 4 workers with the cache on, then with it off: both must be
+    // byte-identical to the sequential run (cache transparency).
+    for use_cache in [true, false] {
+        let fleet = Fleet::new(base.clone())
+            .unwrap()
+            .with_workers(4)
+            .with_cache(use_cache);
+        let out = fleet.run(&storm.jobs).unwrap();
+        assert_eq!(out.reports.len(), expected.len());
+        for (i, (got, want)) in out.reports.iter().zip(&expected).enumerate() {
+            assert_eq!(got, want, "job {i} (cache={use_cache}): {}", want.job_name);
+        }
+    }
+}
+
+#[test]
+fn prop_fleet_determinism_across_worker_counts() {
+    // Small seeded batches, every worker count from 1 to 4: identical
+    // reports regardless of parallelism.
+    check("fleet == sequential for any worker count", 4, |g| {
+        let base = SimConfig::spatzformer();
+        let seed = g.rng.next_u64();
+        let storm = scenario::generate(ScenarioKind::Storm, base.cluster.arch, seed, 6);
+        let expected = sequential(&base, &storm.jobs);
+        let workers = g.int(1, 4);
+        let out = Fleet::new(base.clone())
+            .unwrap()
+            .with_workers(workers)
+            .run(&storm.jobs)
+            .unwrap();
+        assert_eq!(out.reports, expected, "seed={seed:#x} workers={workers}");
+    });
+}
+
+#[test]
+fn cache_serves_repeats_single_worker_exactly() {
+    let base = SimConfig::spatzformer();
+    let job = FleetJob {
+        job: Job::Kernel {
+            kernel: KernelId::Faxpy,
+            policy: ModePolicy::Split,
+        },
+        seed: Some(0xCAFE),
+    };
+    let jobs = vec![job; 8];
+    let fleet = Fleet::new(base).unwrap().with_workers(1);
+    let out = fleet.run(&jobs).unwrap();
+    // one simulation, seven cache hits, all reports identical
+    assert_eq!(out.metrics.cache_misses, 1);
+    assert_eq!(out.metrics.cache_hits, 7);
+    assert_eq!(out.metrics.per_worker[0].executed, 1);
+    assert!(out.reports.windows(2).all(|w| w[0] == w[1]));
+}
+
+#[test]
+fn cache_misses_bounded_by_concurrency() {
+    // With W workers, at most W copies of the same job can be in flight
+    // before the first insert lands; every later lookup must hit.
+    let base = SimConfig::spatzformer();
+    let job = FleetJob {
+        job: Job::Kernel {
+            kernel: KernelId::Fdotp,
+            policy: ModePolicy::Merge,
+        },
+        seed: Some(0xBEEF),
+    };
+    let jobs = vec![job; 12];
+    let workers = 3;
+    let out = Fleet::new(base)
+        .unwrap()
+        .with_workers(workers)
+        .run(&jobs)
+        .unwrap();
+    assert!(
+        out.metrics.cache_misses <= workers as u64,
+        "misses {} > workers {workers}",
+        out.metrics.cache_misses
+    );
+    assert!(out.metrics.cache_hits >= (jobs.len() - workers) as u64);
+    assert!(out.reports.windows(2).all(|w| w[0] == w[1]));
+}
+
+#[test]
+fn disabled_cache_simulates_everything() {
+    let base = SimConfig::spatzformer();
+    let job = FleetJob {
+        job: Job::Kernel {
+            kernel: KernelId::Faxpy,
+            policy: ModePolicy::Split,
+        },
+        seed: Some(1),
+    };
+    let jobs = vec![job; 6];
+    let out = Fleet::new(base)
+        .unwrap()
+        .with_workers(2)
+        .with_cache(false)
+        .run(&jobs)
+        .unwrap();
+    assert_eq!(out.metrics.cache_hits, 0);
+    assert_eq!(out.metrics.cache_misses, 0);
+    let executed: u64 = out.metrics.per_worker.iter().map(|w| w.executed).sum();
+    assert_eq!(executed, 6);
+}
+
+#[test]
+fn oversubscribed_fleet_drains_every_queue() {
+    // More workers requested than jobs: the scheduler clamps the pool,
+    // every job completes exactly once, and order is preserved.
+    let base = SimConfig::spatzformer();
+    let jobs: Vec<FleetJob> = (0..3)
+        .map(|i| FleetJob {
+            job: Job::Kernel {
+                kernel: KernelId::Faxpy,
+                policy: ModePolicy::Split,
+            },
+            seed: Some(1000 + i),
+        })
+        .collect();
+    let out = Fleet::new(base.clone()).unwrap().with_workers(8).run(&jobs).unwrap();
+    assert_eq!(out.reports.len(), 3);
+    // the scheduler clamps workers to the job count
+    assert_eq!(out.metrics.workers, 3);
+    let total: u64 = out.metrics.per_worker.iter().map(|w| w.jobs).sum();
+    assert_eq!(total, 3);
+    assert_eq!(out.reports, sequential(&base, &jobs));
+}
+
+#[test]
+fn mixed_jobs_flow_through_the_fleet() {
+    let base = SimConfig::spatzformer();
+    let sweep = scenario::generate(ScenarioKind::MixedSweep, base.cluster.arch, 0xAB, 10);
+    let out = Fleet::new(base.clone()).unwrap().with_workers(4).run(&sweep.jobs).unwrap();
+    assert_eq!(out.reports.len(), 10);
+    for (fj, r) in sweep.jobs.iter().zip(&out.reports) {
+        assert!(matches!(fj.job, Job::Mixed { .. }));
+        assert!(r.scalar_cycles.is_some(), "{}", r.job_name);
+        assert!(r.coremark_checksum.is_some(), "{}", r.job_name);
+    }
+    assert_eq!(out.reports, sequential(&base, &sweep.jobs));
+}
+
+#[test]
+fn baseline_arch_sweeps_run_unmodified() {
+    let base = SimConfig::baseline();
+    let sweep = scenario::generate(ScenarioKind::KernelSweep, base.cluster.arch, 0x77, 14);
+    let out = Fleet::new(base.clone()).unwrap().with_workers(3).run(&sweep.jobs).unwrap();
+    assert_eq!(out.reports, sequential(&base, &sweep.jobs));
+}

@@ -2,7 +2,11 @@
 //! artifacts, for every kernel in every deployment.
 //!
 //! Requires `make artifacts` to have run (skips with a message
-//! otherwise, so `cargo test` works before the Python build step).
+//! otherwise, so `cargo test` works before the Python build step) and
+//! the `xla-runtime` cargo feature (the whole file is compiled out
+//! without it — there is no golden model to compare against).
+
+#![cfg(feature = "xla-runtime")]
 
 use spatzformer::cluster::Cluster;
 use spatzformer::config::SimConfig;

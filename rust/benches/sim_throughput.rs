@@ -1,55 +1,126 @@
 //! §Perf — host-side simulator throughput (Msim-cycles/s) per workload
-//! class. This is the L3 hot-path number tracked in EXPERIMENTS.md §Perf.
+//! class, and the fast-forward engine's speedup over the naive per-cycle
+//! oracle on the kernel-sweep scenario (the L3 hot-path number tracked in
+//! EXPERIMENTS.md §Perf; acceptance bar: >= 2x at 1 worker).
+//!
+//! Pass `--smoke` for a cheap iteration count: CI runs it on every push
+//! so an engine perf regression (or an engine/oracle cycle divergence,
+//! which this bench also asserts) fails loudly.
 
 use spatzformer::cluster::Cluster;
-use spatzformer::config::SimConfig;
+use spatzformer::config::{ArchKind, EngineKind, SimConfig};
 use spatzformer::coordinator::{Coordinator, Job, ModePolicy};
+use spatzformer::fleet::scenario::{self, ScenarioKind};
+use spatzformer::fleet::FleetJob;
 use spatzformer::kernels::{execute, Deployment, KernelId};
-use spatzformer::util::bench::{section, Bencher};
+use spatzformer::util::bench::{fmt_ratio, section, Bencher};
+
+/// Run a job list sequentially under `base`, returning total sim cycles.
+fn run_jobs(base: &SimConfig, jobs: &[FleetJob]) -> u64 {
+    let mut total = 0;
+    for fj in jobs {
+        let mut coord = Coordinator::new(fj.config(base)).unwrap();
+        total += coord.submit(&fj.job).unwrap().metrics.cycles;
+    }
+    total
+}
 
 fn main() {
-    section("simulator throughput");
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (warmup, iters) = if smoke { (0, 1) } else { (2, 10) };
+
+    section("single-kernel simulator throughput (per engine)");
     for (name, kernel, deploy) in [
         ("fmatmul (fpu-bound)", KernelId::Fmatmul, Deployment::SplitDual),
         ("faxpy (lsu-bound)", KernelId::Faxpy, Deployment::SplitDual),
         ("fft (gather/sync)", KernelId::Fft, Deployment::SplitDual),
     ] {
-        let cfg = SimConfig::spatzformer();
-        let inst = kernel.build(&cfg.cluster, deploy, 1);
-        // measure sim cycles once
-        let mut cl = Cluster::new(cfg.clone()).unwrap();
-        let (m, _) = execute(&mut cl, &inst).unwrap();
-        let sim_cycles = m.cycles;
-        let r = Bencher::new(name).warmup(2).iters(10).run(|| {
+        let mut cycles_per_engine = Vec::new();
+        for engine in [EngineKind::Naive, EngineKind::Fast] {
+            let mut cfg = SimConfig::spatzformer();
+            cfg.engine = engine;
+            let inst = kernel.build(&cfg.cluster, deploy, 1);
+            // measure sim cycles once
             let mut cl = Cluster::new(cfg.clone()).unwrap();
             let (m, _) = execute(&mut cl, &inst).unwrap();
-            m.cycles
-        });
-        println!(
-            "  -> {:.1} Msim-cycles/s ({} sim cycles per run)",
-            sim_cycles as f64 / r.median.as_secs_f64() / 1e6,
-            sim_cycles
+            let sim_cycles = m.cycles;
+            cycles_per_engine.push(sim_cycles);
+            let r = Bencher::new(&format!("{name} [{}]", engine.name()))
+                .warmup(warmup)
+                .iters(iters)
+                .run(|| {
+                    let mut cl = Cluster::new(cfg.clone()).unwrap();
+                    let (m, _) = execute(&mut cl, &inst).unwrap();
+                    m.cycles
+                });
+            println!(
+                "  -> {:.1} Msim-cycles/s ({} sim cycles per run)",
+                sim_cycles as f64 / r.median.as_secs_f64() / 1e6,
+                sim_cycles
+            );
+        }
+        assert_eq!(
+            cycles_per_engine[0], cycles_per_engine[1],
+            "{name}: engines disagree on simulated cycles"
         );
     }
 
+    section("kernel-sweep scenario: fast vs naive (§Perf headline, 1 worker)");
+    let jobs = scenario::generate(
+        ScenarioKind::KernelSweep,
+        ArchKind::Spatzformer,
+        0xC0FFEE,
+        if smoke { 6 } else { 36 },
+    )
+    .jobs;
+    let mut medians = Vec::new();
+    let mut totals = Vec::new();
+    for engine in [EngineKind::Naive, EngineKind::Fast] {
+        let mut base = SimConfig::spatzformer();
+        base.engine = engine;
+        let total = run_jobs(&base, &jobs);
+        totals.push(total);
+        let r = Bencher::new(&format!("kernel-sweep x{} [{}]", jobs.len(), engine.name()))
+            .warmup(warmup)
+            .iters(iters.min(5))
+            .run(|| run_jobs(&base, &jobs));
+        println!(
+            "  -> {:.1} Msim-cycles/s over {} jobs",
+            total as f64 / r.median.as_secs_f64() / 1e6,
+            jobs.len()
+        );
+        medians.push(r.median.as_secs_f64());
+    }
+    assert_eq!(
+        totals[0], totals[1],
+        "kernel-sweep: engines disagree on simulated cycles"
+    );
+    println!(
+        "\n  fast-forward speedup on kernel-sweep: {} (bar: >= 2.00x; record in EXPERIMENTS.md §Perf)",
+        fmt_ratio(medians[0] / medians[1])
+    );
+
     section("coordinator end-to-end (mixed workload)");
-    let r = Bencher::new("mixed fmatmul SM+MM").warmup(1).iters(5).run(|| {
-        let mut c = Coordinator::new(SimConfig::spatzformer()).unwrap();
-        let sm = c
-            .submit(&Job::Mixed {
-                kernel: KernelId::Fmatmul,
-                policy: ModePolicy::Split,
-                coremark_iterations: 1,
-            })
-            .unwrap();
-        let mm = c
-            .submit(&Job::Mixed {
-                kernel: KernelId::Fmatmul,
-                policy: ModePolicy::Merge,
-                coremark_iterations: 1,
-            })
-            .unwrap();
-        sm.kernel_cycles + mm.kernel_cycles
-    });
+    let r = Bencher::new("mixed fmatmul SM+MM")
+        .warmup(if smoke { 0 } else { 1 })
+        .iters(if smoke { 1 } else { 5 })
+        .run(|| {
+            let mut c = Coordinator::new(SimConfig::spatzformer()).unwrap();
+            let sm = c
+                .submit(&Job::Mixed {
+                    kernel: KernelId::Fmatmul,
+                    policy: ModePolicy::Split,
+                    coremark_iterations: 1,
+                })
+                .unwrap();
+            let mm = c
+                .submit(&Job::Mixed {
+                    kernel: KernelId::Fmatmul,
+                    policy: ModePolicy::Merge,
+                    coremark_iterations: 1,
+                })
+                .unwrap();
+            sm.kernel_cycles + mm.kernel_cycles
+        });
     let _ = r;
 }

@@ -46,6 +46,14 @@ impl BarrierUnit {
     pub fn participants(&self) -> u8 {
         self.participants
     }
+
+    /// Event horizon for the fast-forward engine: the release cycle when
+    /// an episode is counting down, else `None` (arrivals are core
+    /// events; a parked core's polls before the release are side-effect
+    /// free apart from the wait counter, which is bulk-accounted).
+    pub fn next_event(&self) -> Option<u64> {
+        self.releasing.then_some(self.release_at)
+    }
 }
 
 impl BarrierPort for BarrierUnit {
@@ -118,6 +126,19 @@ mod tests {
         b.arrive(0, 0);
         assert!(!b.poll(0, 1));
         assert!(b.poll(0, 2));
+    }
+
+    #[test]
+    fn horizon_is_the_release_cycle() {
+        let mut b = BarrierUnit::new(8);
+        assert_eq!(b.next_event(), None);
+        b.arrive(0, 10);
+        assert_eq!(b.next_event(), None); // still waiting for core 1
+        b.arrive(1, 20);
+        assert_eq!(b.next_event(), Some(28));
+        assert!(b.poll(0, 28));
+        assert!(b.poll(1, 28));
+        assert_eq!(b.next_event(), None); // episode complete
     }
 
     #[test]

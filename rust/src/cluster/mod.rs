@@ -11,12 +11,12 @@ pub mod barrier;
 
 pub use barrier::BarrierUnit;
 
-use crate::config::{ArchKind, Mode, SimConfig};
+use crate::config::{ArchKind, EngineKind, Mode, SimConfig};
 use crate::isa::{Instr, Program};
 use crate::mem::{Dma, ICache, Tcdm};
 use crate::metrics::{Counters, RunMetrics};
 use crate::reconfig::ReconfigStage;
-use crate::snitch::Snitch;
+use crate::snitch::{CoreState, Snitch};
 use crate::spatz::{RetireMsg, SpatzUnit};
 
 /// The simulated cluster.
@@ -219,15 +219,92 @@ impl Cluster {
         self.now += 1;
     }
 
+    /// Cheap pre-check for the hot loop: an executing/memory-retrying
+    /// core or an active LSU op pins the horizon to `now`, so computing
+    /// the full horizon would be wasted work.
+    fn must_step_now(&self) -> bool {
+        self.cores
+            .iter()
+            .any(|c| matches!(c.state(), CoreState::Ready | CoreState::WaitMem { .. }))
+            || self.units.iter().any(|u| u.lsu_active())
+    }
+
+    /// Earliest cycle `>= now` at which stepping the cluster could do
+    /// anything beyond the bulk effects [`Self::fast_forward`] replays:
+    /// the minimum of every component's event horizon (see each
+    /// component's `next_event`). `None` means no component will ever act
+    /// again on its own — either everything is drained or the cluster is
+    /// deadlocked (e.g. a barrier that can never release).
+    fn next_horizon(&self) -> Option<u64> {
+        [
+            self.cores[0].next_event(self.now, &self.reconfig, &self.units),
+            self.cores[1].next_event(self.now, &self.reconfig, &self.units),
+            self.units[0].next_event(self.now),
+            self.units[1].next_event(self.now),
+            self.barrier.next_event(),
+            // purely reactive today (always None), but consulted so that a
+            // mem component growing timed state cannot be silently skipped
+            self.tcdm.next_event(),
+            self.icache.next_event(),
+            self.dma.next_event(),
+        ]
+        .into_iter()
+        .flatten()
+        .min()
+    }
+
+    /// Jump `now` directly to `to`, bulk-accounting every skipped cycle
+    /// exactly as the naive loop would have: countdowns decrement, wait
+    /// counters (offload/fence/barrier) and per-block busy cycles grow by
+    /// the skip width. Callers must not cross [`Self::next_horizon`].
+    fn fast_forward(&mut self, to: u64) {
+        debug_assert!(to > self.now, "fast_forward must move time forward");
+        let now = self.now;
+        let w = to - now;
+        for core in self.cores.iter_mut() {
+            core.skip(w, &mut self.counters);
+        }
+        for unit in self.units.iter_mut() {
+            // mirror the naive loop's idle-unit shortcut: idle units are
+            // never stepped and never count busy cycles
+            if !unit.is_idle() {
+                unit.skip(now, w, &mut self.counters);
+            }
+        }
+        self.now = to;
+    }
+
     /// Run until completion; returns the cycle count of this run segment.
+    ///
+    /// With [`EngineKind::Fast`] (the default) the loop advances `now`
+    /// straight to the next event horizon whenever every component is
+    /// quiescent; with [`EngineKind::Naive`] it ticks every cycle. Both
+    /// produce byte-identical metrics and fire the `max_cycles` watchdog
+    /// at the identical cycle — `rust/tests/engine_differential.rs` holds
+    /// the engines to that contract.
     pub fn run(&mut self) -> anyhow::Result<u64> {
         let start = self.now;
+        let fast = self.cfg.engine == EngineKind::Fast;
+        // The watchdog trips when `now - start` reaches `max_cycles`, so a
+        // deadlocked fast run may jump straight to the trip cycle.
+        let cap = if self.cfg.max_cycles == 0 {
+            u64::MAX
+        } else {
+            start.saturating_add(self.cfg.max_cycles)
+        };
         while !self.finished() {
             anyhow::ensure!(
                 self.cfg.max_cycles == 0 || self.now - start < self.cfg.max_cycles,
                 "simulation exceeded max_cycles={} (deadlock?)",
                 self.cfg.max_cycles
             );
+            if fast && !self.must_step_now() {
+                let target = self.next_horizon().unwrap_or(cap).min(cap);
+                if target > self.now && target < u64::MAX {
+                    self.fast_forward(target);
+                    continue;
+                }
+            }
             self.step();
         }
         Ok(self.now - start)
@@ -467,6 +544,54 @@ mod tests {
         cl.barrier_mut().set_participants(0b11);
         let r = cl.run();
         assert!(r.is_err(), "expected deadlock detection");
+    }
+
+    #[test]
+    fn fast_engine_is_byte_identical_to_naive() {
+        let build = |engine| {
+            let mut cfg = SimConfig::spatzformer();
+            cfg.engine = engine;
+            let mut cl = Cluster::new(cfg).unwrap();
+            let x: Vec<f32> = (0..512).map(|i| i as f32).collect();
+            cl.stage_f32(0, &x);
+            cl.load_programs([
+                vec_program("h0", 0, 256, 3.0),
+                vec_program("h1", 1024, 256, 3.0),
+            ])
+            .unwrap();
+            cl
+        };
+        let mut fast = build(EngineKind::Fast);
+        let mut naive = build(EngineKind::Naive);
+        assert_eq!(fast.run().unwrap(), naive.run().unwrap());
+        assert_eq!(fast.counters, naive.counters);
+        assert_eq!(fast.tcdm.stats, naive.tcdm.stats);
+        assert_eq!(fast.icache.stats, naive.icache.stats);
+        assert_eq!(
+            fast.tcdm.read_f32_slice(0x4000, 256),
+            naive.tcdm.read_f32_slice(0x4000, 256)
+        );
+    }
+
+    #[test]
+    fn fast_engine_watchdog_fires_at_the_identical_cycle() {
+        let run_deadlock = |engine| {
+            let mut cfg = SimConfig::spatzformer();
+            cfg.max_cycles = 1000;
+            cfg.engine = engine;
+            let mut cl = Cluster::new(cfg).unwrap();
+            let mut p0 = Program::new("hang");
+            p0.push(Instr::Barrier);
+            p0.push(Instr::Halt);
+            cl.load_programs([p0, Program::idle()]).unwrap();
+            cl.barrier_mut().set_participants(0b11);
+            let err = cl.run().unwrap_err();
+            (format!("{err:#}"), cl.now(), cl.counters.clone())
+        };
+        let fast = run_deadlock(EngineKind::Fast);
+        let naive = run_deadlock(EngineKind::Naive);
+        assert_eq!(fast, naive);
+        assert_eq!(fast.1, 1000, "watchdog must trip at start + max_cycles");
     }
 
     #[test]

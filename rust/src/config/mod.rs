@@ -244,6 +244,40 @@ impl Default for PpaConfig {
     }
 }
 
+/// Which cycle-loop implementation drives a cluster run.
+///
+/// Both engines produce **byte-identical** results ([`crate::metrics::RunMetrics`]
+/// exact `PartialEq`); the knob exists so the naive loop can serve as the
+/// oracle in differential tests and as a fallback while debugging the
+/// event-driven path. Like the `[fleet]` section, the engine choice is
+/// deliberately excluded from the result-cache key: an execution-strategy
+/// knob must never change a simulation outcome.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Tick every cycle (the original loop; the determinism oracle).
+    Naive,
+    /// Event-driven fast-forward: skip runs of cycles in which every
+    /// component is quiescent, bulk-accounting the skipped idle cycles.
+    Fast,
+}
+
+impl EngineKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineKind::Naive => "naive",
+            EngineKind::Fast => "fast",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "naive" => Some(EngineKind::Naive),
+            "fast" => Some(EngineKind::Fast),
+            _ => None,
+        }
+    }
+}
+
 /// Fleet (multi-cluster batch simulation) knobs — see [`crate::fleet`].
 ///
 /// Deliberately *not* part of the result-cache key: worker count and
@@ -275,6 +309,9 @@ pub struct SimConfig {
     pub ppa: PpaConfig,
     /// Batch-simulation fleet section.
     pub fleet: FleetConfig,
+    /// Cycle-loop engine (`[sim] engine = "fast" | "naive"`). Results are
+    /// engine-independent by contract; see `rust/tests/engine_differential.rs`.
+    pub engine: EngineKind,
     /// Seed for workload/data generation.
     pub seed: u64,
     /// Emit a per-event trace (slow; debugging only).
@@ -289,6 +326,7 @@ impl Default for SimConfig {
             cluster: ClusterConfig::default(),
             ppa: PpaConfig::default(),
             fleet: FleetConfig::default(),
+            engine: EngineKind::Fast,
             seed: 0xC0FFEE,
             trace: false,
             max_cycles: 500_000_000,
@@ -316,9 +354,14 @@ impl SimConfig {
         let c = &mut self.cluster;
         let p = &mut self.ppa;
         match key {
-            "seed" => self.seed = value.as_u64().ok_or_else(bad)?,
-            "trace" => self.trace = value.as_bool().ok_or_else(bad)?,
-            "max_cycles" => self.max_cycles = value.as_u64().ok_or_else(bad)?,
+            // run-level knobs predate the [sim] section and stay valid as
+            // bare keys; the section form works too so every run-level
+            // knob can live under one [sim] header alongside `engine`
+            "seed" | "sim.seed" => self.seed = value.as_u64().ok_or_else(bad)?,
+            "trace" | "sim.trace" => self.trace = value.as_bool().ok_or_else(bad)?,
+            "max_cycles" | "sim.max_cycles" => {
+                self.max_cycles = value.as_u64().ok_or_else(bad)?
+            }
             "cluster.arch" => {
                 c.arch = match value.as_str() {
                     Some("baseline") => ArchKind::Baseline,
@@ -374,6 +417,12 @@ impl SimConfig {
             "ppa.idle_power_fraction" => p.idle_power_fraction = value.as_f64().ok_or_else(bad)?,
             "fleet.workers" => self.fleet.workers = value.as_usize().ok_or_else(bad)?,
             "fleet.cache" => self.fleet.cache = value.as_bool().ok_or_else(bad)?,
+            "sim.engine" => {
+                self.engine = value
+                    .as_str()
+                    .and_then(EngineKind::from_name)
+                    .ok_or_else(bad)?
+            }
             _ => anyhow::bail!("unknown config key: {key}"),
         }
         Ok(())
@@ -448,6 +497,37 @@ mod tests {
         assert_eq!(cfg.fleet.workers, 8);
         assert!(!cfg.fleet.cache);
         assert!(cfg.apply("fleet.cache", &Value::Int(1)).is_err());
+    }
+
+    #[test]
+    fn apply_sim_engine_key() {
+        let mut cfg = SimConfig::default();
+        assert_eq!(cfg.engine, EngineKind::Fast); // fast is the default
+        cfg.apply("sim.engine", &Value::Str("naive".into())).unwrap();
+        assert_eq!(cfg.engine, EngineKind::Naive);
+        cfg.apply("sim.engine", &Value::Str("fast".into())).unwrap();
+        assert_eq!(cfg.engine, EngineKind::Fast);
+        assert!(cfg.apply("sim.engine", &Value::Str("warp".into())).is_err());
+        assert!(cfg.apply("sim.engine", &Value::Int(1)).is_err());
+    }
+
+    #[test]
+    fn run_level_knobs_accept_both_bare_and_sim_section_keys() {
+        let mut cfg = SimConfig::default();
+        cfg.apply("sim.seed", &Value::Int(77)).unwrap();
+        cfg.apply("sim.max_cycles", &Value::Int(123)).unwrap();
+        cfg.apply("sim.trace", &Value::Bool(true)).unwrap();
+        assert_eq!((cfg.seed, cfg.max_cycles, cfg.trace), (77, 123, true));
+        cfg.apply("seed", &Value::Int(78)).unwrap();
+        assert_eq!(cfg.seed, 78);
+    }
+
+    #[test]
+    fn engine_names_roundtrip() {
+        for e in [EngineKind::Naive, EngineKind::Fast] {
+            assert_eq!(EngineKind::from_name(e.name()), Some(e));
+        }
+        assert_eq!(EngineKind::from_name("bogus"), None);
     }
 
     #[test]

@@ -4,9 +4,11 @@
 //! The key is a stable 64-bit FNV-1a digest over a canonical encoding of
 //! everything that can change a simulation outcome: the cluster shape,
 //! the PPA model, the workload seed, the cycle limit, and the job
-//! itself. The [`crate::config::FleetConfig`] section is deliberately
-//! excluded — worker count and caching policy must never affect results,
-//! so they must not split the key space either.
+//! itself. The [`crate::config::FleetConfig`] section and the
+//! [`crate::config::EngineKind`] cycle-loop choice are deliberately
+//! excluded — worker count, caching policy and execution strategy must
+//! never affect results, so they must not split the key space either
+//! (`rust/tests/cache_properties.rs` holds the digest to this).
 //!
 //! Because simulation is fully deterministic in `(SimConfig, Job)`, a
 //! cache hit is byte-identical to a re-simulation; the fleet determinism

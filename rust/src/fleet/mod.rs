@@ -54,8 +54,10 @@ impl FleetJob {
         Self { job, seed: None }
     }
 
-    /// The config this job actually simulates under.
-    fn config(&self, base: &SimConfig) -> SimConfig {
+    /// The config this job actually simulates under. Public so benches
+    /// and the engine-differential harness derive per-job configs the
+    /// same way the fleet workers do.
+    pub fn config(&self, base: &SimConfig) -> SimConfig {
         let mut cfg = base.clone();
         if let Some(seed) = self.seed {
             cfg.seed = seed;

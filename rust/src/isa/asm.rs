@@ -348,23 +348,44 @@ mod tests {
         assert_eq!(e.line, 2);
     }
 
+    /// Seeded fuzz replacing the old hand-picked bit patterns: shortest-
+    /// round-trip formatting must survive parse *bit-exactly* for any
+    /// non-NaN f32 — subnormals, signed zero and infinities included.
+    /// The first cases pin the historically awkward values; the rest are
+    /// random bit patterns.
     #[test]
-    fn float_immediates_roundtrip_exactly() {
-        // shortest-round-trip formatting must survive parse for awkward
-        // values
-        for bits in [0x3f80_0001u32, 0x0000_0001, 0x7f7f_ffff, 0xbf99_999a] {
+    fn prop_float_immediates_roundtrip_bitexact() {
+        check("float immediate roundtrip", 512, |g| {
+            let bits = match g.case_index {
+                0 => 0x3f80_0001u32, // 1.0 + 1 ulp
+                1 => 0x0000_0001,    // smallest subnormal
+                2 => 0x7f7f_ffff,    // f32::MAX
+                3 => 0xbf99_999a,    // -1.2 (inexact decimal)
+                4 => 0x8000_0000,    // -0.0
+                5 => 0x7f80_0000,    // +inf
+                6 => 0xff80_0000,    // -inf
+                _ => g.rng.next_u64() as u32,
+            };
             let f = f32::from_bits(bits);
+            if f.is_nan() {
+                return; // NaN != NaN would defeat the equality check
+            }
             let mut p = Program::new("f");
             p.vector(VectorOp::MovVF { vd: VReg(0), f });
+            p.vector(VectorOp::MacVF { vd: VReg(8), vs: VReg(16), f });
             p.push(Instr::Halt);
             let q = parse_program(&print_program(&p)).unwrap();
-            match q.instrs[0] {
-                Instr::Vector(VectorOp::MovVF { f: g, .. }) => {
-                    assert_eq!(f.to_bits(), g.to_bits())
+            match (&q.instrs[0], &q.instrs[1]) {
+                (
+                    Instr::Vector(VectorOp::MovVF { f: a, .. }),
+                    Instr::Vector(VectorOp::MacVF { f: b, .. }),
+                ) => {
+                    assert_eq!(f.to_bits(), a.to_bits(), "{f:?} (bits {bits:#010x})");
+                    assert_eq!(f.to_bits(), b.to_bits(), "{f:?} (bits {bits:#010x})");
                 }
-                _ => panic!("wrong instr"),
+                other => panic!("wrong instrs: {other:?}"),
             }
-        }
+        });
     }
 
     /// Property: print → parse is the identity on random programs.

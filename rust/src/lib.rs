@@ -8,7 +8,9 @@
 //!
 //! * a cycle-approximate, functionally exact simulator of the baseline
 //!   Spatz cluster and the reconfigurable Spatzformer cluster
-//!   ([`cluster`], [`snitch`], [`spatz`], [`reconfig`], [`mem`]);
+//!   ([`cluster`], [`snitch`], [`spatz`], [`reconfig`], [`mem`]), with
+//!   an event-driven fast-forward cycle-loop engine that is byte-
+//!   identical to the naive per-cycle oracle (`[sim] engine` knob);
 //! * the six-kernel vector workload suite and a CoreMark-workalike scalar
 //!   workload ([`kernels`], [`workloads`]);
 //! * an analytical PPA model (area/energy/frequency) calibrated to the

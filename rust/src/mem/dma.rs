@@ -59,6 +59,14 @@ impl Dma {
         cycles
     }
 
+    /// Event horizon for the fast-forward engine: always `None`. DMA
+    /// staging runs before the measured region (its cycles are accounted
+    /// separately as `dma_cycles`), so the engine never has to wait on it
+    /// inside the cluster cycle loop.
+    pub fn next_event(&self) -> Option<u64> {
+        None
+    }
+
     /// Read an f32 array out of TCDM; returns (data, transfer cycles).
     pub fn copy_out_f32(&mut self, tcdm: &Tcdm, addr: u32, n: usize) -> (Vec<f32>, u64) {
         let data = tcdm.read_f32_slice(addr, n);

@@ -86,6 +86,14 @@ impl ICache {
         self.ways.fill(None);
     }
 
+    /// Event horizon for the fast-forward engine: always `None`. The
+    /// cache is purely reactive — a miss's refill latency is carried by
+    /// the fetching core's `FetchStall` countdown, which exposes its own
+    /// exact horizon.
+    pub fn next_event(&self) -> Option<u64> {
+        None
+    }
+
     pub fn hit_rate(&self) -> f64 {
         let total = self.stats.hits + self.stats.misses;
         if total == 0 {

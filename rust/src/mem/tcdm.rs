@@ -57,6 +57,16 @@ impl Tcdm {
         self.taken.fill(false);
     }
 
+    /// Event horizon for the fast-forward engine: always `None`. Bank
+    /// reservations live for one cycle and arbitration is requester-
+    /// driven — a pending access (scalar `WaitMem` retry or an active
+    /// vector LSU op) pins *that requester's* horizon to `now`, so the
+    /// cluster never skips a cycle in which a bank could be touched and
+    /// the conflict-replay stats stay exact.
+    pub fn next_event(&self) -> Option<u64> {
+        None
+    }
+
     /// Try to win the addressed bank for this cycle. Returns `true` when
     /// granted. Call order between requesters is the arbitration priority
     /// (the cluster rotates it for fairness).

@@ -143,6 +143,34 @@ impl ReconfigStage {
         }
     }
 
+    /// Side-effect-free mirror of [`Self::try_dispatch`]'s back-pressure
+    /// check: would dispatching `op` from `hart` stall right now? Used by
+    /// the fast-forward engine to decide whether a [`CoreState::WaitOffload`]
+    /// retry is an event (it would be accepted) or pure waiting (queue
+    /// space can only appear at a unit issue, which has its own horizon).
+    ///
+    /// [`CoreState::WaitOffload`]: crate::snitch::CoreState::WaitOffload
+    pub fn dispatch_would_stall(
+        &self,
+        hart: usize,
+        op: VectorOp,
+        units: &[SpatzUnit; 2],
+    ) -> bool {
+        if matches!(op, VectorOp::SetVl { .. }) {
+            return false; // executes in the stage itself
+        }
+        let vl = self.vstate[hart].vl;
+        if vl == 0 {
+            return false; // architectural no-op
+        }
+        if self.mode == Mode::Merge {
+            let vl1 = vl - self.split_count(vl, 0);
+            !units[0].queue_has_space() || (vl1 > 0 && !units[1].queue_has_space())
+        } else {
+            !units[hart].queue_has_space()
+        }
+    }
+
     /// Attempt to dispatch `op` from `hart`. On success the op is
     /// functionally executed (VRFs/TCDM updated) and timing entries are
     /// pushed to the unit queue(s).
@@ -772,6 +800,59 @@ mod tests {
         );
         assert_eq!(units[0].vrf.read_f32(VReg(8), 127), 9.0);
         assert_eq!(c.vec_elem_move, 128);
+    }
+
+    #[test]
+    fn would_stall_mirrors_try_dispatch_backpressure() {
+        let (mut units, mut tcdm, mut stage, mut c) = setup(ArchKind::Spatzformer);
+        setvl(&mut stage, 0, 16, Lmul::M1, &mut units, &mut tcdm, &mut c);
+        let op = VectorOp::AddVV { vd: VReg(0), vs1: VReg(1), vs2: VReg(2) };
+        for _ in 0..4 {
+            assert!(!stage.dispatch_would_stall(0, op, &units));
+            assert_eq!(
+                stage.try_dispatch(0, op, &mut units, &mut tcdm, &mut c, 0),
+                DispatchResult::Accepted
+            );
+        }
+        assert!(stage.dispatch_would_stall(0, op, &units));
+        assert_eq!(
+            stage.try_dispatch(0, op, &mut units, &mut tcdm, &mut c, 0),
+            DispatchResult::Stall
+        );
+        // vsetvli always goes through the stage itself
+        let setvl_op = VectorOp::SetVl { avl: 8, ew: ElemWidth::E32, lmul: Lmul::M1 };
+        assert!(!stage.dispatch_would_stall(0, setvl_op, &units));
+    }
+
+    #[test]
+    fn would_stall_in_merge_needs_space_on_used_units_only() {
+        let (mut units, mut tcdm, mut stage, mut c) = setup(ArchKind::Spatzformer);
+        stage.set_mode(Mode::Merge);
+        let op = VectorOp::MovVF { vd: VReg(0), f: 1.0 };
+        // vl = 4 = one lane group: the whole op lands on unit 0, so a
+        // full unit-1 queue must not report back-pressure
+        setvl(&mut stage, 0, 4, Lmul::M1, &mut units, &mut tcdm, &mut c);
+        for seq in 0..4 {
+            units[1].enqueue(OffloadEntry {
+                op,
+                vl: 4,
+                lmul: 1,
+                seq: 100 + seq,
+                hart: 0,
+                ready_at: 0,
+                extra_cycles: 0,
+                addrs: vec![],
+            });
+        }
+        assert!(!units[1].queue_has_space());
+        assert!(!stage.dispatch_would_stall(0, op, &units));
+        // a 256-element op stripes across both units: now it must stall
+        setvl(&mut stage, 0, 256, Lmul::M8, &mut units, &mut tcdm, &mut c);
+        assert!(stage.dispatch_would_stall(0, op, &units));
+        assert_eq!(
+            stage.try_dispatch(0, op, &mut units, &mut tcdm, &mut c, 0),
+            DispatchResult::Stall
+        );
     }
 
     #[test]

@@ -124,6 +124,100 @@ impl Snitch {
         self.state = CoreState::Ready;
     }
 
+    /// Event horizon for the fast-forward engine: the earliest cycle `>=
+    /// now` at which stepping this core does anything beyond the bulk
+    /// effects applied by [`Self::skip`]. `None` means the core is parked
+    /// on an external condition (a retire, a barrier release, queue
+    /// space) whose timing is exposed by another component's horizon.
+    ///
+    /// The promise: stepping the core at every cycle in `[now, horizon)`
+    /// would only decrement countdowns and bump per-cycle wait counters —
+    /// exactly what [`Self::skip`] replays in bulk — so the cluster may
+    /// jump straight to the horizon.
+    pub fn next_event(
+        &self,
+        now: u64,
+        reconfig: &ReconfigStage,
+        units: &[SpatzUnit; 2],
+    ) -> Option<u64> {
+        match self.state {
+            CoreState::Halted => None,
+            // Executing and memory-retry states touch shared resources
+            // (icache, TCDM, dispatch) every cycle: never skip past them.
+            CoreState::Ready | CoreState::WaitMem { .. } => Some(now),
+            CoreState::Stall(n) | CoreState::FetchStall(n) => {
+                Some(now + n.saturating_sub(1))
+            }
+            CoreState::WaitOffload => {
+                let Instr::Vector(op) = self.program.instrs[self.pc] else {
+                    unreachable!("WaitOffload on non-vector instruction");
+                };
+                if reconfig.dispatch_would_stall(self.id, op, units) {
+                    // Queue space only appears when a unit issues — a unit
+                    // event; until then each retry just counts a stall.
+                    None
+                } else {
+                    Some(now)
+                }
+            }
+            CoreState::WaitFence => {
+                if reconfig.outstanding(self.id) == 0 {
+                    Some(now)
+                } else {
+                    None // unblocked by a retire (a unit event)
+                }
+            }
+            // Release timing is the barrier unit's horizon.
+            CoreState::WaitBarrier => None,
+            CoreState::WaitModeSwitch { draining: true, .. } => {
+                if reconfig.all_drained() && units.iter().all(|u| u.is_idle()) {
+                    Some(now)
+                } else {
+                    None // unblocked by a retire (a unit event)
+                }
+            }
+            CoreState::WaitModeSwitch { draining: false, remaining, .. } => {
+                Some(now + remaining.saturating_sub(1))
+            }
+        }
+    }
+
+    /// Bulk-apply `w` skipped cycles: decrement countdowns and replay the
+    /// per-cycle wait/busy counters the naive loop would have produced.
+    /// The caller guarantees `w` does not cross this core's
+    /// [`Self::next_event`] horizon.
+    pub fn skip(&mut self, w: u64, counters: &mut Counters) {
+        match self.state {
+            CoreState::Halted => {}
+            CoreState::Stall(n) => {
+                debug_assert!(w < n);
+                self.state = CoreState::Stall(n - w);
+            }
+            CoreState::FetchStall(n) => {
+                debug_assert!(w < n);
+                self.state = CoreState::FetchStall(n - w);
+            }
+            CoreState::WaitOffload => counters.offload_stall_cycles += w,
+            CoreState::WaitFence => counters.fence_wait_cycles += w,
+            CoreState::WaitBarrier => counters.barrier_wait_cycles += w,
+            CoreState::WaitModeSwitch { draining: true, .. } => {}
+            CoreState::WaitModeSwitch { target, draining: false, remaining } => {
+                debug_assert!(w < remaining);
+                self.state = CoreState::WaitModeSwitch {
+                    target,
+                    draining: false,
+                    remaining: remaining - w,
+                };
+            }
+            CoreState::Ready | CoreState::WaitMem { .. } => {
+                unreachable!("skip across an active core state (horizon bug)")
+            }
+        }
+        if self.busy() {
+            counters.cycles_core_busy[self.id] += w;
+        }
+    }
+
     /// Advance one cycle.
     #[allow(clippy::too_many_arguments)]
     pub fn step(
@@ -524,5 +618,39 @@ mod tests {
         let mut r = rig(Program::idle());
         let cycles = r.run(100);
         assert!(cycles <= 20, "cycles={cycles}");
+    }
+
+    #[test]
+    fn horizons_for_countdown_and_parked_states() {
+        let mut r = rig(Program::idle());
+        r.core.state = CoreState::Stall(5);
+        assert_eq!(r.core.next_event(10, &r.reconfig, &r.units), Some(14));
+        r.core.state = CoreState::FetchStall(1);
+        assert_eq!(r.core.next_event(10, &r.reconfig, &r.units), Some(10));
+        r.core.state = CoreState::WaitBarrier;
+        assert_eq!(r.core.next_event(10, &r.reconfig, &r.units), None);
+        r.core.state = CoreState::WaitFence; // nothing outstanding => event now
+        assert_eq!(r.core.next_event(10, &r.reconfig, &r.units), Some(10));
+        r.core.state = CoreState::Halted;
+        assert_eq!(r.core.next_event(10, &r.reconfig, &r.units), None);
+    }
+
+    #[test]
+    fn skip_replays_countdowns_and_wait_counters() {
+        let mut r = rig(Program::idle());
+        let mut c = Counters::default();
+        r.core.state = CoreState::Stall(5);
+        r.core.skip(3, &mut c);
+        assert_eq!(r.core.state(), CoreState::Stall(2));
+        assert_eq!(c.cycles_core_busy[0], 3);
+        r.core.state = CoreState::WaitBarrier;
+        r.core.skip(7, &mut c);
+        assert_eq!(c.barrier_wait_cycles, 7);
+        // barrier park is clock-gated: not busy
+        assert_eq!(c.cycles_core_busy[0], 3);
+        r.core.state = CoreState::WaitFence;
+        r.core.skip(2, &mut c);
+        assert_eq!(c.fence_wait_cycles, 2);
+        assert_eq!(c.cycles_core_busy[0], 5);
     }
 }

@@ -19,6 +19,7 @@ pub use vrf::Vrf;
 use crate::config::ClusterConfig;
 use crate::isa::{VecOpClass, VectorOp};
 use crate::mem::Tcdm;
+use crate::metrics::Counters;
 use std::collections::VecDeque;
 
 /// An instruction dispatched into a unit's queue (timing view).
@@ -119,6 +120,12 @@ impl SpatzUnit {
         self.queue.is_empty() && self.lsu.is_none() && self.pending_retires.is_empty()
     }
 
+    /// True while a memory op is streaming through the LSU (the unit
+    /// then arbitrates TCDM banks every cycle and cannot be skipped).
+    pub fn lsu_active(&self) -> bool {
+        self.lsu.is_some()
+    }
+
     fn group_regs(base: crate::isa::VReg, lmul: usize) -> impl Iterator<Item = usize> {
         base.index()..base.index() + lmul
     }
@@ -160,6 +167,75 @@ impl SpatzUnit {
                 self.scoreboard[reg] = RegTiming { chain_ok_at, done_at };
             }
         }
+    }
+
+    /// Cycle at which the queue head can issue, mirroring exactly the
+    /// readiness predicate in [`Self::step`]: `ready_at`, engine
+    /// availability, chaining gates on sources and the WAW gate on a pure
+    /// overwrite destination. All gates are absolute cycles fixed at the
+    /// producer's issue, so the value is exact, not an estimate. `None`
+    /// when an active LSU op blocks a memory head (the LSU keeps the
+    /// unit's horizon at `now` anyway).
+    fn head_issue_at(&self) -> Option<u64> {
+        let head = self.queue.front()?;
+        let is_mem = head.op.is_mem();
+        if is_mem && self.lsu.is_some() {
+            return None;
+        }
+        let mut at = head.ready_at;
+        if !is_mem {
+            at = at.max(self.fpu_busy_until);
+        }
+        let sources = head.op.sources();
+        for r in sources.iter() {
+            for reg in Self::group_regs(r, head.lmul) {
+                at = at.max(self.scoreboard[reg].chain_ok_at);
+            }
+        }
+        if let Some(d) = head.op.dest() {
+            if !sources.contains(&d) {
+                for reg in Self::group_regs(d, head.lmul) {
+                    at = at.max(self.scoreboard[reg].done_at);
+                }
+            }
+        }
+        Some(at)
+    }
+
+    /// Event horizon for the fast-forward engine: the earliest cycle `>=
+    /// now` at which stepping this unit does anything beyond setting
+    /// `busy_this_cycle` (which [`Self::skip`] accounts in bulk). Events
+    /// are retire deliveries and queue-head issues; an active LSU op pins
+    /// the horizon to `now` because it arbitrates for TCDM banks (and
+    /// replays conflicts) every single cycle.
+    pub fn next_event(&self, now: u64) -> Option<u64> {
+        if self.is_idle() {
+            return None;
+        }
+        if self.lsu.is_some() {
+            return Some(now);
+        }
+        let retire = self.pending_retires.iter().map(|&(_, _, at)| at).min();
+        let issue = self.head_issue_at();
+        let h = match (retire, issue) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        h.map(|c| c.max(now))
+    }
+
+    /// Bulk-apply `w` skipped cycles starting at `now`: replay the
+    /// per-cycle busy accounting the naive loop would have produced. The
+    /// caller guarantees no LSU op is active and that `w` does not cross
+    /// this unit's [`Self::next_event`] horizon, so nothing else changes.
+    pub fn skip(&mut self, now: u64, w: u64, counters: &mut Counters) {
+        debug_assert!(self.lsu.is_none(), "skip across an active LSU op");
+        let busy = if self.queue.is_empty() {
+            w.min(self.fpu_busy_until.saturating_sub(now))
+        } else {
+            w
+        };
+        counters.cycles_unit_busy[self.id] += busy;
     }
 
     /// Advance one cycle. TCDM bank reservations must have been reset by
@@ -472,6 +548,68 @@ mod tests {
         // first done at 35; second issues at 36? (dest_ready needs
         // done_at <= now, so at 35), done 35+4+32-1 = 70
         assert!(cycle >= 70, "cycle={cycle}");
+    }
+
+    #[test]
+    fn next_event_predicts_issue_and_retire_cycles_exactly() {
+        let mut u = unit();
+        let mut t = tcdm();
+        assert_eq!(u.next_event(0), None); // idle
+        u.enqueue(fpu_entry(
+            VectorOp::MulVV { vd: VReg(8), vs1: VReg(16), vs2: VReg(24) },
+            128,
+            1,
+        ));
+        u.enqueue(fpu_entry(
+            VectorOp::AddVV { vd: VReg(0), vs1: VReg(8), vs2: VReg(16) },
+            128,
+            2,
+        ));
+        assert_eq!(u.next_event(0), Some(0)); // head can issue now
+        let mut retires = Vec::new();
+        t.begin_cycle();
+        u.step(0, &mut t, &mut retires);
+        // producer issued at 0 (retire at 35); consumer chains at 4 but the
+        // FPU is occupied 32 group-cycles -> exact issue horizon 32
+        assert_eq!(u.next_event(1), Some(32));
+        // stepping through the skipped window must be a no-op until then
+        for now in 1..32 {
+            t.begin_cycle();
+            u.step(now, &mut t, &mut retires);
+            assert!(retires.is_empty());
+            assert_eq!(u.queue.len(), 1, "head issued early at {now}");
+        }
+    }
+
+    #[test]
+    fn skip_accounts_busy_cycles_in_bulk() {
+        let mut u = unit();
+        let mut t = tcdm();
+        u.enqueue(fpu_entry(
+            VectorOp::AddVV { vd: VReg(8), vs1: VReg(16), vs2: VReg(24) },
+            128,
+            1,
+        ));
+        let mut retires = Vec::new();
+        t.begin_cycle();
+        u.step(0, &mut t, &mut retires); // issue: fpu busy until 32, retire at 35
+        assert_eq!(u.next_event(1), Some(35));
+        let mut bulk = Counters::default();
+        u.skip(1, 34, &mut bulk);
+        // the naive loop would count busy_this_cycle for cycles 1..=31
+        assert_eq!(bulk.cycles_unit_busy[0], 31);
+    }
+
+    #[test]
+    fn lsu_pins_the_horizon_to_now() {
+        let mut u = unit();
+        let mut t = tcdm();
+        u.enqueue(load_entry(VReg(8), 0, 16, 1));
+        let mut retires = Vec::new();
+        t.begin_cycle();
+        u.step(0, &mut t, &mut retires); // LSU op becomes active
+        assert_eq!(u.next_event(1), Some(1));
+        assert_eq!(u.next_event(7), Some(7));
     }
 
     #[test]

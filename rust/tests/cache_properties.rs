@@ -1,0 +1,119 @@
+//! Property tests for the fleet result-cache digest (`fleet::cache::job_key`).
+//!
+//! The digest guards DESIGN.md's invariant that *scheduling must never
+//! change results*: execution-strategy knobs (the `[fleet]` section and
+//! the `[sim] engine` choice) are excluded from the key, while everything
+//! that determines a simulation outcome — cluster shape, PPA model,
+//! workload seed, cycle limit, trace flag, the job itself — must split
+//! the key space.
+
+use spatzformer::config::{ArchKind, Corner, EngineKind, SimConfig};
+use spatzformer::coordinator::{Job, ModePolicy};
+use spatzformer::fleet::cache::job_key;
+use spatzformer::kernels::KernelId;
+use spatzformer::util::testutil::{check, Gen};
+
+fn arb_job(g: &mut Gen) -> Job {
+    let kernel = *g.choose(&KernelId::all());
+    let policy = *g.choose(&[ModePolicy::Split, ModePolicy::Merge, ModePolicy::Auto]);
+    if g.bool() {
+        Job::Kernel { kernel, policy }
+    } else {
+        Job::Mixed {
+            kernel,
+            policy,
+            coremark_iterations: g.int(1, 8) as u32,
+        }
+    }
+}
+
+fn arb_base(g: &mut Gen) -> SimConfig {
+    let mut cfg = if g.bool() {
+        SimConfig::spatzformer()
+    } else {
+        SimConfig::baseline()
+    };
+    cfg.seed = g.rng.next_u64();
+    cfg
+}
+
+#[test]
+fn prop_scheduling_knobs_never_change_the_key() {
+    check("fleet/engine knobs leave the key unchanged", 128, |g| {
+        let cfg = arb_base(g);
+        let job = arb_job(g);
+        let key = job_key(&cfg, &job);
+        let mut mutated = cfg.clone();
+        // mutate every scheduling knob at once with random values
+        mutated.fleet.workers = g.int(0, 64);
+        mutated.fleet.cache = g.bool();
+        mutated.engine = if g.bool() {
+            EngineKind::Naive
+        } else {
+            EngineKind::Fast
+        };
+        assert_eq!(
+            job_key(&mutated, &job),
+            key,
+            "scheduling knobs must not split the key space: {:?}/{:?}/{:?}",
+            mutated.fleet.workers,
+            mutated.fleet.cache,
+            mutated.engine
+        );
+    });
+}
+
+#[test]
+fn prop_result_determining_knobs_change_the_key() {
+    check("cluster/ppa/seed/limit knobs change the key", 256, |g| {
+        let cfg = arb_base(g);
+        let job = arb_job(g);
+        let key = job_key(&cfg, &job);
+        let mut mutated = cfg.clone();
+        let which = g.int(0, 9);
+        match which {
+            0 => mutated.seed ^= 1 + g.rng.next_u64() % 0xFFFF,
+            1 => mutated.max_cycles += 1 + g.int(1, 1000) as u64,
+            2 => mutated.trace = !mutated.trace,
+            3 => mutated.cluster.lanes *= 2,
+            4 => mutated.cluster.vlen_bits *= 2,
+            5 => mutated.cluster.tcdm_banks *= 2,
+            6 => {
+                mutated.cluster.arch = match mutated.cluster.arch {
+                    ArchKind::Baseline => ArchKind::Spatzformer,
+                    ArchKind::Spatzformer => ArchKind::Baseline,
+                }
+            }
+            7 => mutated.ppa.pj_barrier += 0.25 + g.rng.next_f64(),
+            8 => {
+                mutated.ppa.corner = match mutated.ppa.corner {
+                    Corner::Tt => Corner::Ss,
+                    Corner::Ss => Corner::Tt,
+                }
+            }
+            _ => mutated.cluster.mode_switch_latency += 1 + g.int(1, 32) as u64,
+        }
+        assert_ne!(
+            job_key(&mutated, &job),
+            key,
+            "mutation {which} must change the key"
+        );
+    });
+}
+
+#[test]
+fn prop_job_identity_decides_key_equality() {
+    check("same job same key, different job different key", 256, |g| {
+        let cfg = arb_base(g);
+        let a = arb_job(g);
+        let b = arb_job(g);
+        assert_eq!(job_key(&cfg, &a), job_key(&cfg, &a), "digest must be stable");
+        // Jobs carry no PartialEq (by design); their Debug encoding is
+        // exhaustive, which is exactly what the digest folds in.
+        if format!("{a:?}") == format!("{b:?}") {
+            assert_eq!(job_key(&cfg, &a), job_key(&cfg, &b));
+        } else {
+            assert_ne!(job_key(&cfg, &a), job_key(&cfg, &b));
+        }
+    });
+}

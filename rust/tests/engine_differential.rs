@@ -1,0 +1,247 @@
+//! Differential harness for the cluster cycle-loop engines.
+//!
+//! The event-driven fast-forward engine ([`EngineKind::Fast`]) must be
+//! **byte-identical** to the naive per-cycle oracle ([`EngineKind::Naive`]):
+//! exact [`JobReport`] `PartialEq` (every counter, every stat, the priced
+//! energy) across the full kernel × deployment grid, mixed and storm
+//! scenarios, seeded random programs, and — crucially — the `max_cycles`
+//! watchdog, which must fire at the identical cycle with identical
+//! accumulated state even when the trip point lands mid-skip.
+
+use spatzformer::cluster::Cluster;
+use spatzformer::config::{ArchKind, EngineKind, Mode, SimConfig};
+use spatzformer::coordinator::{Coordinator, Job, JobReport, ModePolicy};
+use spatzformer::fleet::scenario::{self, ScenarioKind};
+use spatzformer::fleet::FleetJob;
+use spatzformer::isa::{ElemWidth, Instr, Lmul, Program, ScalarOp, VReg, VectorOp};
+use spatzformer::kernels::KernelId;
+use spatzformer::util::testutil::{check, Gen};
+
+/// Run one fleet job sequentially under the given engine.
+fn run_with(engine: EngineKind, base: &SimConfig, fj: &FleetJob) -> JobReport {
+    let mut cfg = fj.config(base);
+    cfg.engine = engine;
+    let mut coord = Coordinator::new(cfg).expect("config must validate");
+    coord.submit(&fj.job).expect("job must simulate")
+}
+
+fn assert_engines_agree(base: &SimConfig, jobs: &[FleetJob]) {
+    for (i, fj) in jobs.iter().enumerate() {
+        let fast = run_with(EngineKind::Fast, base, fj);
+        let naive = run_with(EngineKind::Naive, base, fj);
+        assert_eq!(
+            fast,
+            naive,
+            "job {i} ({}) diverged between engines",
+            fj.job.name()
+        );
+    }
+}
+
+#[test]
+fn kernel_deployment_grid_is_engine_invariant() {
+    let spatz = SimConfig::spatzformer();
+    let mut jobs = Vec::new();
+    for kernel in KernelId::all() {
+        for policy in [ModePolicy::Split, ModePolicy::Merge, ModePolicy::Auto] {
+            jobs.push(FleetJob::new(Job::Kernel { kernel, policy }));
+        }
+    }
+    assert_engines_agree(&spatz, &jobs);
+
+    let baseline = SimConfig::baseline();
+    let mut jobs = Vec::new();
+    for kernel in KernelId::all() {
+        for policy in [ModePolicy::Split, ModePolicy::Auto] {
+            jobs.push(FleetJob::new(Job::Kernel { kernel, policy }));
+        }
+    }
+    assert_engines_agree(&baseline, &jobs);
+}
+
+#[test]
+fn mixed_jobs_are_engine_invariant() {
+    let spatz = SimConfig::spatzformer();
+    let mut jobs = Vec::new();
+    for kernel in KernelId::all() {
+        for policy in [ModePolicy::Split, ModePolicy::Merge, ModePolicy::Auto] {
+            jobs.push(FleetJob::new(Job::Mixed {
+                kernel,
+                policy,
+                coremark_iterations: 1,
+            }));
+        }
+    }
+    assert_engines_agree(&spatz, &jobs);
+}
+
+#[test]
+fn mixed_sweep_and_storm_scenarios_are_engine_invariant() {
+    let spatz = SimConfig::spatzformer();
+    let mixed = scenario::generate(ScenarioKind::MixedSweep, ArchKind::Spatzformer, 0xD1FF, 16);
+    assert_engines_agree(&spatz, &mixed.jobs);
+    let storm = scenario::generate(ScenarioKind::Storm, ArchKind::Spatzformer, 0xD1FF, 20);
+    assert_engines_agree(&spatz, &storm.jobs);
+
+    let baseline = SimConfig::baseline();
+    let storm_b = scenario::generate(ScenarioKind::Storm, ArchKind::Baseline, 0x5707, 12);
+    assert_engines_agree(&baseline, &storm_b.jobs);
+}
+
+/// Full post-run cluster fingerprint for cluster-level comparisons.
+fn fingerprint(cl: &Cluster, out_base: u32, out_len: usize) -> (u64, String, Vec<u32>) {
+    let m = cl.metrics(0);
+    let mem: Vec<u32> = cl
+        .tcdm
+        .read_f32_slice(out_base, out_len)
+        .into_iter()
+        .map(f32::to_bits)
+        .collect();
+    (cl.now(), format!("{:?}|{:?}|{:?}", m.counters, m.tcdm, m.icache), mem)
+}
+
+/// Random but valid dual-core workload: elementwise strips with matched
+/// barrier counts, optional runtime mode switches (scalar-only co-runner
+/// in that variant), scalar bookkeeping and fences — the state space the
+/// fast-forward engine has to get right.
+fn arb_dual_core(g: &mut Gen) -> (SimConfig, [Program; 2], Vec<f32>) {
+    let n = (g.int(1, 8) * 32) as u32;
+    let data: Vec<f32> = (0..n * 2).map(|_| g.f32(50.0)).collect();
+    let switchy = g.bool();
+    let barriers = g.int(0, 2);
+    let mut p0 = Program::new("diff-p0");
+    let mut p1 = Program::new("diff-p1");
+    let strip = |p: &mut Program, g: &mut Gen, in_base: u32, out_base: u32, n: u32, cap: u32| {
+        let mut off = 0u32;
+        while off < n {
+            let vl = (g.int(1, cap as usize) as u32).min(n - off);
+            p.vector(VectorOp::SetVl { avl: vl, ew: ElemWidth::E32, lmul: Lmul::M8 });
+            p.vector(VectorOp::Load { vd: VReg(8), base: in_base + off * 4, stride: 1 });
+            match g.int(0, 2) {
+                0 => p.vector(VectorOp::MulVF { vd: VReg(16), vs: VReg(8), f: g.f32(4.0) }),
+                1 => p.vector(VectorOp::MacVF { vd: VReg(16), vs: VReg(8), f: g.f32(2.0) }),
+                _ => p.vector(VectorOp::AddVF { vd: VReg(16), vs: VReg(8), f: g.f32(4.0) }),
+            }
+            p.vector(VectorOp::Store { vs: VReg(16), base: out_base + off * 4, stride: 1 });
+            if g.bool() {
+                p.scalar(ScalarOp::Alu);
+            }
+            if g.bool() {
+                p.scalar(ScalarOp::Branch { taken: g.bool() });
+            }
+            off += vl;
+        }
+    };
+    if switchy {
+        // core 0 toggles modes between strips; core 1 stays scalar-only
+        // (merge mode forbids vector work on core 1)
+        strip(&mut p0, g, 0, 0x10000, n, 128);
+        for _ in 0..barriers {
+            p0.push(Instr::Fence);
+            p0.push(Instr::Barrier);
+            p1.push(Instr::Barrier);
+        }
+        p0.push(Instr::Fence);
+        p0.push(Instr::SetMode(Mode::Merge));
+        strip(&mut p0, g, 0, 0x14000, n, 256);
+        p0.push(Instr::Fence);
+        p0.push(Instr::SetMode(Mode::Split));
+        for _ in 0..g.int(0, 40) {
+            match g.int(0, 3) {
+                0 => p1.scalar(ScalarOp::Alu),
+                1 => p1.scalar(ScalarOp::Mul),
+                2 => p1.scalar(ScalarOp::Load { addr: (g.int(0, 1024) * 4) as u32 }),
+                _ => p1.scalar(ScalarOp::Div),
+            }
+        }
+    } else {
+        // split mode: both cores work disjoint halves with matched barriers
+        strip(&mut p0, g, 0, 0x10000, n, 128);
+        strip(&mut p1, g, n * 4, 0x14000, n, 128);
+        for _ in 0..barriers {
+            p0.push(Instr::Fence);
+            p1.push(Instr::Fence);
+            p0.push(Instr::Barrier);
+            p1.push(Instr::Barrier);
+        }
+    }
+    p0.push(Instr::Fence);
+    p0.push(Instr::Halt);
+    p1.push(Instr::Fence);
+    p1.push(Instr::Halt);
+    (SimConfig::spatzformer(), [p0, p1], data)
+}
+
+#[test]
+fn prop_random_programs_are_engine_invariant() {
+    check("fast vs naive on random dual-core programs", 24, |g| {
+        let (cfg, programs, data) = arb_dual_core(g);
+        let run = |engine: EngineKind| {
+            let mut cfg = cfg.clone();
+            cfg.engine = engine;
+            let mut cl = Cluster::new(cfg).unwrap();
+            cl.stage_f32(0, &data);
+            cl.load_programs([programs[0].clone(), programs[1].clone()]).unwrap();
+            cl.run().unwrap();
+            // cover both output regions (0x10000.. and 0x14000..)
+            fingerprint(&cl, 0x10000, 4352)
+        };
+        assert_eq!(run(EngineKind::Fast), run(EngineKind::Naive));
+    });
+}
+
+#[test]
+fn watchdog_trips_identically_even_mid_skip() {
+    // a real workload cut off mid-run: the trip point lands inside a
+    // fast-forward window, exercising the horizon clamp
+    for max_cycles in [60u64, 120, 250] {
+        let run = |engine: EngineKind| {
+            let mut cfg = SimConfig::spatzformer();
+            cfg.max_cycles = max_cycles;
+            cfg.engine = engine;
+            let inst = KernelId::Fmatmul.build(
+                &cfg.cluster,
+                spatzformer::kernels::Deployment::SplitDual,
+                7,
+            );
+            let mut cl = Cluster::new(cfg).unwrap();
+            for (addr, d) in &inst.staging_f32 {
+                cl.stage_f32(*addr, d);
+            }
+            for (addr, d) in &inst.staging_u32 {
+                cl.stage_u32(*addr, d);
+            }
+            cl.load_programs([inst.programs[0].clone(), inst.programs[1].clone()])
+                .unwrap();
+            let err = cl.run().expect_err("budget is far too tight for fmatmul");
+            (format!("{err:#}"), fingerprint(&cl, 0, 256))
+        };
+        assert_eq!(run(EngineKind::Fast), run(EngineKind::Naive), "max_cycles={max_cycles}");
+    }
+}
+
+#[test]
+fn watchdog_trips_identically_on_a_true_deadlock() {
+    // barrier deadlock: every component's horizon is `None`, so the fast
+    // engine jumps straight to the trip cycle in one skip
+    let run = |engine: EngineKind| {
+        let mut cfg = SimConfig::spatzformer();
+        cfg.max_cycles = 5000;
+        cfg.engine = engine;
+        let mut cl = Cluster::new(cfg).unwrap();
+        let mut p0 = Program::new("hang");
+        for _ in 0..10 {
+            p0.scalar(ScalarOp::Alu);
+        }
+        p0.push(Instr::Barrier);
+        p0.push(Instr::Halt);
+        cl.load_programs([p0, Program::idle()]).unwrap();
+        cl.barrier_mut().set_participants(0b11);
+        let err = cl.run().expect_err("deadlock must trip the watchdog");
+        (format!("{err:#}"), fingerprint(&cl, 0, 16))
+    };
+    let fast = run(EngineKind::Fast);
+    let naive = run(EngineKind::Naive);
+    assert_eq!(fast, naive);
+    assert_eq!(fast.1 .0, 5000, "trip cycle must be start + max_cycles");
+}

@@ -112,6 +112,85 @@ fn prop_energy_monotone_in_work() {
     }
 }
 
+/// Any non-NaN f32 bit pattern (NaN is excluded because `Program`'s
+/// derived `PartialEq` would reject NaN == NaN, not because the printer
+/// mishandles it). Covers subnormals, signed zero and infinities.
+fn arb_f32_bits(g: &mut Gen) -> f32 {
+    loop {
+        let f = f32::from_bits(g.rng.next_u64() as u32);
+        if !f.is_nan() {
+            return f;
+        }
+    }
+}
+
+/// Seeded round-trip fuzz over the *entire* instruction surface —
+/// replaces the previous hand-picked print→parse cases: every scalar op,
+/// every vector op (including indexed stores and vv/vf variants with
+/// random bit-pattern float immediates), fences, barriers, mode switches
+/// and mid-stream halts.
+#[test]
+fn prop_asm_roundtrip_full_isa_random_programs() {
+    check("asm full-ISA roundtrip", 256, |g| {
+        let vreg = |g: &mut Gen| VReg(g.int(0, 31) as u8);
+        let mut p = Program::new("fuzz");
+        let n = g.int(1, 40);
+        for _ in 0..n {
+            let vd = vreg(g);
+            let vs1 = vreg(g);
+            let vs2 = vreg(g);
+            let base = g.int(0, 1 << 16) as u32;
+            let stride = g.int(0, 16) as i32 - 8;
+            let instr = match g.int(0, 23) {
+                0 => Instr::Scalar(ScalarOp::Alu),
+                1 => Instr::Scalar(ScalarOp::Mul),
+                2 => Instr::Scalar(ScalarOp::Div),
+                3 => Instr::Scalar(ScalarOp::Csr),
+                4 => Instr::Scalar(ScalarOp::Nop),
+                5 => Instr::Scalar(ScalarOp::Load { addr: base }),
+                6 => Instr::Scalar(ScalarOp::Store { addr: base }),
+                7 => Instr::Scalar(ScalarOp::Branch { taken: g.bool() }),
+                8 => Instr::Fence,
+                9 => Instr::Barrier,
+                10 => Instr::SetMode(if g.bool() { Mode::Merge } else { Mode::Split }),
+                11 => Instr::Halt, // mid-stream halt must survive the printer
+                12 => Instr::Vector(VectorOp::SetVl {
+                    avl: g.int(0, 1 << 12) as u32,
+                    ew: ElemWidth::E32,
+                    lmul: Lmul::from_factor(*g.choose(&[1usize, 2, 4, 8])).unwrap(),
+                }),
+                13 => Instr::Vector(VectorOp::Load { vd, base, stride }),
+                14 => Instr::Vector(VectorOp::Store { vs: vd, base, stride }),
+                15 => Instr::Vector(VectorOp::LoadIndexed { vd, base, vidx: vs1 }),
+                16 => Instr::Vector(VectorOp::StoreIndexed { vs: vd, base, vidx: vs1 }),
+                17 => Instr::Vector(VectorOp::AddVV { vd, vs1, vs2 }),
+                18 => Instr::Vector(VectorOp::SubVV { vd, vs1, vs2 }),
+                19 => Instr::Vector(VectorOp::MulVV { vd, vs1, vs2 }),
+                20 => Instr::Vector(match g.int(0, 1) {
+                    0 => VectorOp::MacVV { vd, vs1, vs2 },
+                    _ => VectorOp::NmsacVV { vd, vs1, vs2 },
+                }),
+                21 => Instr::Vector(match g.int(0, 2) {
+                    0 => VectorOp::AddVF { vd, vs: vs1, f: arb_f32_bits(g) },
+                    1 => VectorOp::MulVF { vd, vs: vs1, f: arb_f32_bits(g) },
+                    _ => VectorOp::MacVF { vd, vs: vs1, f: arb_f32_bits(g) },
+                }),
+                22 => Instr::Vector(VectorOp::MovVF { vd, f: arb_f32_bits(g) }),
+                _ => Instr::Vector(match g.int(0, 1) {
+                    0 => VectorOp::MovVV { vd, vs: vs1 },
+                    _ => VectorOp::RedSum { vd, vs: vs1 },
+                }),
+            };
+            p.push(instr);
+        }
+        p.push(Instr::Halt);
+        let text = asm::print_program(&p);
+        let q = asm::parse_program(&text)
+            .unwrap_or_else(|e| panic!("parse failed: {e}\n{text}"));
+        assert_eq!(p, q, "round-trip mismatch:\n{text}");
+    });
+}
+
 #[test]
 fn prop_asm_roundtrip_on_generated_kernels() {
     // every generated kernel program survives print -> parse unchanged

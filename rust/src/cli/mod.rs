@@ -28,7 +28,7 @@ COMMANDS:
   mixed    kernel ∥ CoreMark-workalike     --kernel <name> --mode <split|merge|auto> [--iters N]
   fleet    batch-simulate a generated scenario across N simulated clusters
            [--scenario <kernel-sweep|mixed-sweep|storm>] [--workers N]
-           [--jobs M] [--no-cache]
+           [--jobs M] [--no-cache] [--no-compile-cache]
   bench    regenerate a paper artifact     <fig2-perf|fig2-energy|fig2-mixed|fig2-fleet|area|fmax|all>
   ppa      print the area/frequency model
   verify   cross-check all kernels vs the XLA artifacts [--artifacts DIR]
@@ -47,12 +47,13 @@ FLEET OPTIONS:
   --workers <N>                   worker threads / simulated clusters (default: fleet.workers, 0 = auto)
   --jobs <M>                      batch size to generate (default 128)
   --no-cache                      disable the content-addressed result cache
+  --no-compile-cache              disable the shared compile (artifact) cache
 
 KERNELS: fmatmul conv2d fft fdotp faxpy fdct
 ";
 
 /// Options that take no value (presence == true).
-const BOOL_FLAGS: &[&str] = &["no-cache"];
+const BOOL_FLAGS: &[&str] = &["no-cache", "no-compile-cache"];
 
 struct Args {
     positional: Vec<String>,
@@ -217,6 +218,9 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     }
     if args.get("no-cache").is_some() {
         fl = fl.with_cache(false);
+    }
+    if args.get("no-compile-cache").is_some() {
+        fl = fl.with_compile_cache(false);
     }
 
     println!(
@@ -410,6 +414,8 @@ mod tests {
         // trailing boolean flag parses too
         let a = args(&["fleet", "--workers", "4", "--no-cache"]);
         assert_eq!(a.get("no-cache"), Some("true"));
+        let a = args(&["fleet", "--no-compile-cache"]);
+        assert_eq!(a.get("no-compile-cache"), Some("true"));
     }
 
     #[test]

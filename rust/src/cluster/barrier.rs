@@ -47,6 +47,18 @@ impl BarrierUnit {
         self.participants
     }
 
+    /// Restore the pristine post-construction state (both cores
+    /// participating, no episode in flight, episode counter zeroed).
+    /// [`crate::cluster::Cluster::reset`] calls this between jobs.
+    pub fn reset(&mut self) {
+        self.participants = 0b11;
+        self.arrived = 0;
+        self.releasing = false;
+        self.release_at = 0;
+        self.consumed = 0;
+        self.episodes = 0;
+    }
+
     /// Event horizon for the fast-forward engine: the release cycle when
     /// an episode is counting down, else `None` (arrivals are core
     /// events; a parked core's polls before the release are side-effect

@@ -11,13 +11,14 @@ pub mod barrier;
 
 pub use barrier::BarrierUnit;
 
-use crate::config::{ArchKind, EngineKind, Mode, SimConfig};
+use crate::config::{ArchKind, ClusterConfig, EngineKind, Mode, SimConfig};
 use crate::isa::{Instr, Program};
 use crate::mem::{Dma, ICache, Tcdm};
 use crate::metrics::{Counters, RunMetrics};
 use crate::reconfig::ReconfigStage;
 use crate::snitch::{CoreState, Snitch};
 use crate::spatz::{RetireMsg, SpatzUnit};
+use std::sync::Arc;
 
 /// The simulated cluster.
 pub struct Cluster {
@@ -118,39 +119,35 @@ impl Cluster {
     /// architecture (the baseline cluster rejects `setmode`) and the
     /// current mode (merge mode forbids vector work on core 1). The
     /// barrier participant set is every core with a non-trivial program
-    /// containing a barrier.
-    pub fn load_programs(&mut self, programs: [Program; 2]) -> anyhow::Result<()> {
-        let mut barrier_mask = 0u8;
-        for (i, p) in programs.iter().enumerate() {
-            p.validate(self.cfg.cluster.vregs)?;
-            let uses_barrier = p.instrs.iter().any(|x| matches!(x, Instr::Barrier));
-            let uses_setmode = p.instrs.iter().any(|x| matches!(x, Instr::SetMode(_)));
-            let uses_vector = p.vector_count() > 0;
-            if uses_barrier {
-                barrier_mask |= 1 << i;
-            }
-            if self.cfg.cluster.arch == ArchKind::Baseline {
-                anyhow::ensure!(
-                    !uses_setmode,
-                    "program '{}' uses setmode on the baseline cluster",
-                    p.name
-                );
-            }
-            if uses_setmode {
-                anyhow::ensure!(
-                    i == 0,
-                    "program '{}': only core 0 may reconfigure",
-                    p.name
-                );
-            }
-            if self.reconfig.mode() == Mode::Merge && i == 1 {
-                anyhow::ensure!(
-                    !uses_vector,
-                    "program '{}': core 1 cannot issue vector work in merge mode",
-                    p.name
-                );
-            }
-        }
+    /// containing a barrier. Accepts owned [`Program`]s or `Arc`-shared
+    /// ones (compile-stage artifacts are loaded without copying).
+    pub fn load_programs<P: Into<Arc<Program>>>(
+        &mut self,
+        programs: [P; 2],
+    ) -> anyhow::Result<()> {
+        let [p0, p1] = programs;
+        let programs: [Arc<Program>; 2] = [p0.into(), p1.into()];
+        let barrier_mask = validate_programs(
+            &self.cfg.cluster,
+            self.reconfig.mode() == Mode::Merge,
+            &programs,
+        )?;
+        self.load_programs_prevalidated(programs, barrier_mask);
+        Ok(())
+    }
+
+    /// Load programs that were already validated against this cluster's
+    /// configuration and current mode — the compile stage runs
+    /// [`validate_programs`] once per artifact ([`crate::compile`]), so
+    /// cached artifacts load in O(1) instead of re-scanning both
+    /// instruction streams every run. `barrier_mask` is the participant
+    /// set computed at validation time (0 = leave the cluster default).
+    /// Crate-private: the public surface always validates.
+    pub(crate) fn load_programs_prevalidated(
+        &mut self,
+        programs: [Arc<Program>; 2],
+        barrier_mask: u8,
+    ) {
         if barrier_mask != 0 {
             self.barrier.set_participants(barrier_mask);
         }
@@ -160,7 +157,6 @@ impl Cluster {
         self.cores[1].load(p1, s0 + 1);
         self.next_stream += 2;
         self.halt_cycle = [None; 2];
-        Ok(())
     }
 
     /// True when both cores halted and the vector pipeline is empty.
@@ -332,6 +328,80 @@ impl Cluster {
         self.icache.stats = Default::default();
         self.dma_cycles = 0;
     }
+
+    /// Restore the whole cluster to its pristine post-construction state
+    /// *in place*: zeroed TCDM and VRFs, flushed icache, halted cores,
+    /// empty unit pipelines, split mode, default barrier participants,
+    /// time/counters/stream-ids rewound to zero.
+    ///
+    /// The execute stage calls this between jobs instead of allocating a
+    /// new `Cluster` from a cloned config — the dominant per-job fixed
+    /// cost once compile artifacts are cached. The contract is exact
+    /// equality: a reset cluster must be behaviorally indistinguishable
+    /// from a fresh [`Cluster::new`] with the same config
+    /// (`rust/tests/reset_reuse.rs` holds runs on both to byte-identical
+    /// [`crate::coordinator::JobReport`]s, on both engines).
+    pub fn reset(&mut self) {
+        self.tcdm.reset();
+        self.icache.reset();
+        self.dma.reset();
+        for core in self.cores.iter_mut() {
+            core.reset();
+        }
+        for unit in self.units.iter_mut() {
+            unit.reset();
+        }
+        self.reconfig.reset();
+        self.barrier.reset();
+        self.counters = Counters::default();
+        self.now = 0;
+        self.next_stream = 0;
+        self.retire_buf.clear();
+        self.dma_cycles = 0;
+        self.halt_cycle = [None; 2];
+    }
+}
+
+/// Validate a program pair against a cluster configuration and operating
+/// mode: static program validity, `setmode` legality, and the merge-mode
+/// core-1 vector restriction. Returns the barrier participant mask (bit
+/// per core whose program contains a barrier).
+///
+/// The single source of truth for load-time program rules: the
+/// validating [`Cluster::load_programs`] path calls it per load, and the
+/// compile stage ([`crate::compile`]) calls it once per cached artifact
+/// so executes can skip it.
+pub(crate) fn validate_programs(
+    cfg: &ClusterConfig,
+    merge: bool,
+    programs: &[Arc<Program>; 2],
+) -> anyhow::Result<u8> {
+    let mut barrier_mask = 0u8;
+    for (i, p) in programs.iter().enumerate() {
+        p.validate(cfg.vregs)?;
+        let uses_setmode = p.instrs.iter().any(|x| matches!(x, Instr::SetMode(_)));
+        if p.instrs.iter().any(|x| matches!(x, Instr::Barrier)) {
+            barrier_mask |= 1 << i;
+        }
+        if cfg.arch == ArchKind::Baseline {
+            anyhow::ensure!(
+                !uses_setmode,
+                "program '{}' uses setmode on the baseline cluster",
+                p.name
+            );
+        }
+        if uses_setmode {
+            anyhow::ensure!(i == 0, "program '{}': only core 0 may reconfigure", p.name);
+        }
+        if merge && i == 1 {
+            anyhow::ensure!(
+                p.vector_count() == 0,
+                "program '{}': core 1 cannot issue vector work in merge mode",
+                p.name
+            );
+        }
+    }
+    Ok(barrier_mask)
 }
 
 #[cfg(test)]
@@ -592,6 +662,57 @@ mod tests {
         let naive = run_deadlock(EngineKind::Naive);
         assert_eq!(fast, naive);
         assert_eq!(fast.1, 1000, "watchdog must trip at start + max_cycles");
+    }
+
+    #[test]
+    fn reset_in_place_equals_fresh_construction() {
+        // Run a dual-core workload (exercising TCDM, VRFs, icache,
+        // barrier-free split traffic), reset in place, run a *different*
+        // merge-mode workload, and compare against the same second run
+        // on a brand-new cluster: byte-identical metrics and memory.
+        let stage = |cl: &mut Cluster| {
+            let x: Vec<f32> = (0..512).map(|i| (i as f32).cos()).collect();
+            cl.stage_f32(0, &x);
+        };
+        let run_merge = |cl: &mut Cluster| {
+            cl.set_mode(Mode::Merge).unwrap();
+            stage(cl);
+            let mut p = Program::new("mm");
+            p.vector(VectorOp::SetVl { avl: 256, ew: ElemWidth::E32, lmul: Lmul::M8 });
+            p.vector(VectorOp::Load { vd: VReg(8), base: 0, stride: 1 });
+            p.vector(VectorOp::AddVF { vd: VReg(16), vs: VReg(8), f: 1.0 });
+            p.vector(VectorOp::Store { vs: VReg(16), base: 0x4000, stride: 1 });
+            p.push(Instr::Fence);
+            p.push(Instr::Halt);
+            cl.load_programs([p, Program::idle()]).unwrap();
+            cl.run().unwrap()
+        };
+
+        let mut reused = Cluster::new(SimConfig::spatzformer()).unwrap();
+        stage(&mut reused);
+        reused
+            .load_programs([vec_program("h0", 0, 256, 3.0), vec_program("h1", 1024, 256, 3.0)])
+            .unwrap();
+        reused.run().unwrap();
+        reused.reset();
+        assert_eq!(reused.now(), 0);
+        assert_eq!(reused.mode(), Mode::Split);
+        assert_eq!(reused.tcdm.read_f32_slice(0x4000, 4), vec![0.0; 4], "TCDM must be zeroed");
+        let cycles_reused = run_merge(&mut reused);
+
+        let mut fresh = Cluster::new(SimConfig::spatzformer()).unwrap();
+        let cycles_fresh = run_merge(&mut fresh);
+
+        assert_eq!(cycles_reused, cycles_fresh);
+        assert_eq!(reused.counters, fresh.counters);
+        assert_eq!(reused.tcdm.stats, fresh.tcdm.stats);
+        assert_eq!(reused.icache.stats, fresh.icache.stats);
+        assert_eq!(
+            reused.tcdm.read_f32_slice(0x4000, 256),
+            fresh.tcdm.read_f32_slice(0x4000, 256)
+        );
+        assert_eq!(reused.core_halt_cycle(0), fresh.core_halt_cycle(0));
+        assert_eq!(reused.core_halt_cycle(1), fresh.core_halt_cycle(1));
     }
 
     #[test]

@@ -1,0 +1,447 @@
+//! The compile stage of the job pipeline: `Job -> CompiledJob`.
+//!
+//! Running a job used to be one monolithic step — `Coordinator::submit`
+//! generated the strip-mined kernel program, staged inputs, built the
+//! CoreMark co-task, allocated a brand-new cluster and ran it. Since the
+//! fleet and the fast-forward engine made *running* cheap, that per-job
+//! setup became a dominant fixed cost in sweeps that repeat the same
+//! `(kernel, deployment, seed)` combination across a whole grid.
+//!
+//! This module splits the pipeline in two:
+//!
+//! * **compile** ([`compile()`]): a *pure* function of
+//!   `(ClusterConfig, kernel, deployment, seed, coremark_iterations)`
+//!   producing an immutable, `Arc`-shareable [`CompiledJob`] — the
+//!   per-core programs, the TCDM staging set, and the expected-output
+//!   metadata. Nothing in it depends on the PPA model, the engine, or
+//!   any scheduling knob.
+//! * **execute** (`Coordinator::execute`): runs a [`CompiledJob`] on a
+//!   cluster that is reset *in place* ([`crate::cluster::Cluster::reset`])
+//!   instead of re-allocated, prices the energy and assembles the
+//!   [`crate::coordinator::JobReport`].
+//!
+//! [`CompileCache`] memoizes the compile stage behind a content-addressed
+//! key ([`compile_key`]) so a `kernel-sweep`/`storm` grid compiles each
+//! distinct combination exactly once; fleet workers share one cache
+//! behind an `Arc`. Because compilation is pure, a cache hit is
+//! byte-identical to a fresh compile — the determinism tests run with
+//! the cache both on and off to prove it.
+
+use crate::config::{ArchKind, ClusterConfig, SimConfig};
+use crate::coordinator::{Job, ModePolicy};
+use crate::isa::Program;
+use crate::kernels::{Deployment, KernelId, KernelInstance};
+use crate::util::{CountingCache, Fnv1a};
+use crate::workloads::coremark;
+use std::sync::Arc;
+
+/// An immutable, shareable compiled job: everything the execute stage
+/// needs, and nothing it may mutate.
+#[derive(Debug, Clone)]
+pub struct CompiledJob {
+    /// Display name ([`Job::name`] at compile time).
+    pub job_name: String,
+    pub kernel: KernelId,
+    /// Deployment the mode policy resolved to.
+    pub deploy: Deployment,
+    /// Final per-core instruction streams. For mixed jobs core 1 carries
+    /// the CoreMark-workalike program instead of the kernel's.
+    pub programs: [Arc<Program>; 2],
+    /// Kernel staging set, artifact-ordered inputs, output locations and
+    /// FLOP count (shared — the execute stage never mutates it).
+    pub inst: Arc<KernelInstance>,
+    /// Scalar co-task work proof (mixed jobs).
+    pub coremark_checksum: Option<u16>,
+    /// Whether core 1 runs a scalar co-task (mixed job shape).
+    pub mixed: bool,
+    /// Barrier participant mask (bit per core whose program contains a
+    /// barrier; 0 = leave the cluster default). Precomputed here — with
+    /// full program validation — so the execute stage loads a cached
+    /// artifact in O(1) instead of re-validating and re-scanning both
+    /// instruction streams on every run.
+    pub barrier_mask: u8,
+    /// Digest of the `(ClusterConfig, seed)` the artifact was built for;
+    /// the execute stage refuses artifacts compiled for a different
+    /// configuration.
+    pub cfg_key: u64,
+}
+
+/// Compile-time program validation: exactly what the load-time path
+/// checks ([`crate::cluster::Cluster::load_programs`] — both call the
+/// one shared validator in `cluster`), hoisted so cached artifacts skip
+/// it on every execute. The execute stage sets the cluster mode from the
+/// deployment before loading, so `deploy == Merge` iff the load-time
+/// mode is merge. Returns the barrier participant mask.
+fn validate_programs(
+    cluster: &ClusterConfig,
+    deploy: Deployment,
+    programs: &[Arc<Program>; 2],
+) -> anyhow::Result<u8> {
+    crate::cluster::validate_programs(cluster, deploy == Deployment::Merge, programs)
+}
+
+/// Resolve the deployment a mode policy maps to on `arch`.
+///
+/// * `Split`, pure kernel → [`Deployment::SplitDual`] (the problem is
+///   divided across both cores);
+/// * `Split`, mixed → [`Deployment::SplitSingle`] (core 1 must stay free
+///   for the scalar task);
+/// * `Merge` → [`Deployment::Merge`], rejected on the baseline cluster;
+/// * `Auto`, mixed → merge on Spatzformer (frees a core without halving
+///   vector throughput), single-core split on the baseline;
+/// * `Auto`, pure kernel → split-dual (the baseline-equivalent choice).
+pub fn resolve_deploy(
+    arch: ArchKind,
+    policy: ModePolicy,
+    mixed: bool,
+) -> anyhow::Result<Deployment> {
+    let deploy = match (policy, mixed) {
+        (ModePolicy::Split, false) => Deployment::SplitDual,
+        (ModePolicy::Split, true) => Deployment::SplitSingle,
+        (ModePolicy::Merge, _) => Deployment::Merge,
+        (ModePolicy::Auto, true) => {
+            if arch == ArchKind::Spatzformer {
+                Deployment::Merge
+            } else {
+                Deployment::SplitSingle
+            }
+        }
+        (ModePolicy::Auto, false) => Deployment::SplitDual,
+    };
+    if deploy == Deployment::Merge {
+        anyhow::ensure!(
+            arch == ArchKind::Spatzformer,
+            "merge mode requires the Spatzformer architecture"
+        );
+    }
+    Ok(deploy)
+}
+
+/// Digest of the configuration half of a compile key: everything in the
+/// config that determines a compiled artifact — the cluster shape (the
+/// generators read VLEN, lanes, TCDM geometry, ...) and the workload
+/// seed. The PPA model, the cycle limit, the trace flag and every
+/// scheduling section (`[fleet]`, `[sim] engine`, `[compile]`) are
+/// deliberately excluded: they do not change what gets compiled.
+fn cfg_key(cluster: &ClusterConfig, seed: u64) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write(format!("{cluster:?}").as_bytes());
+    h.write(&seed.to_le_bytes());
+    h.finish()
+}
+
+/// The configuration digest of a full config — the execute stage
+/// compares this against [`CompiledJob::cfg_key`] to refuse artifacts
+/// compiled for a different cluster shape or seed.
+pub fn compile_key_cfg(cfg: &SimConfig) -> u64 {
+    cfg_key(&cfg.cluster, cfg.seed)
+}
+
+/// Fold a job's exhaustive `Debug` encoding into a configuration digest
+/// (callers that digest many jobs under one config — the coordinator,
+/// the cache — compute the config half once and reuse it here).
+fn fold_job(cfg_key: u64, job: &Job) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write(&cfg_key.to_le_bytes());
+    h.write(format!("{job:?}").as_bytes());
+    h.finish()
+}
+
+/// Content-address of a compiled artifact: the configuration digest
+/// (over the cluster shape and workload seed, see [`compile_key_cfg`])
+/// folded with the job's exhaustive `Debug` encoding (kernel, policy,
+/// CoreMark iterations). Two jobs digest equal iff [`compile()`] would
+/// produce identical artifacts for them.
+pub fn compile_key(cluster: &ClusterConfig, seed: u64, job: &Job) -> u64 {
+    fold_job(cfg_key(cluster, seed), job)
+}
+
+/// Compile a job: resolve the deployment, generate the strip-mined
+/// kernel programs and staging set, and (for mixed jobs) build the
+/// CoreMark co-task for core 1. Pure in `(cfg.cluster, cfg.seed, job)`.
+pub fn compile(cfg: &SimConfig, job: &Job) -> anyhow::Result<CompiledJob> {
+    compile_with_cfg_key(cfg, compile_key_cfg(cfg), job)
+}
+
+/// [`compile()`] with the configuration digest precomputed. Private:
+/// passing a digest that does not match `cfg` would poison
+/// [`CompiledJob::cfg_key`].
+fn compile_with_cfg_key(cfg: &SimConfig, key: u64, job: &Job) -> anyhow::Result<CompiledJob> {
+    let arch = cfg.cluster.arch;
+    match *job {
+        Job::Kernel { kernel, policy } => {
+            let deploy = resolve_deploy(arch, policy, false)?;
+            let inst = kernel.build(&cfg.cluster, deploy, cfg.seed);
+            let programs = [inst.programs[0].clone(), inst.programs[1].clone()];
+            let barrier_mask = validate_programs(&cfg.cluster, deploy, &programs)?;
+            Ok(CompiledJob {
+                job_name: job.name(),
+                kernel,
+                deploy,
+                programs,
+                inst: Arc::new(inst),
+                coremark_checksum: None,
+                mixed: false,
+                barrier_mask,
+                cfg_key: key,
+            })
+        }
+        Job::Mixed { kernel, policy, coremark_iterations } => {
+            let deploy = resolve_deploy(arch, policy, true)?;
+            anyhow::ensure!(
+                deploy != Deployment::SplitDual,
+                "mixed jobs need a free scalar core"
+            );
+            let inst = kernel.build(&cfg.cluster, deploy, cfg.seed);
+            let scalar = coremark(&cfg.cluster, coremark_iterations, cfg.seed ^ 0x5CA1A8);
+            // kernel occupies core 0; the scalar task takes core 1
+            let programs = [inst.programs[0].clone(), Arc::new(scalar.program)];
+            let barrier_mask = validate_programs(&cfg.cluster, deploy, &programs)?;
+            Ok(CompiledJob {
+                job_name: job.name(),
+                kernel,
+                deploy,
+                programs,
+                inst: Arc::new(inst),
+                coremark_checksum: Some(scalar.checksum),
+                mixed: true,
+                barrier_mask,
+                cfg_key: key,
+            })
+        }
+    }
+}
+
+/// Shared, thread-safe compile cache: a [`CountingCache`] keyed by
+/// [`compile_key`] holding `Arc<CompiledJob>`s, so a hit hands every
+/// worker the *same* immutable artifact — programs and staging data are
+/// shared, not copied. Concurrency and race semantics live in
+/// [`crate::util::cache`]: two workers racing on one key may both
+/// compile, and since compilation is pure, last-write-wins is correct.
+pub struct CompileCache {
+    inner: CountingCache<Arc<CompiledJob>>,
+}
+
+impl CompileCache {
+    pub fn new() -> Self {
+        Self {
+            inner: CountingCache::new(),
+        }
+    }
+
+    /// Fetch the compiled artifact for `(cfg, job)`, compiling on a miss.
+    /// Compile *errors* are not cached: scenario generators only emit
+    /// arch-valid jobs, so an error here is a caller bug worth re-raising
+    /// on every attempt.
+    pub fn get_or_compile(
+        &self,
+        cfg: &SimConfig,
+        job: &Job,
+    ) -> anyhow::Result<Arc<CompiledJob>> {
+        self.get_or_compile_keyed(cfg, compile_key_cfg(cfg), job)
+    }
+
+    /// [`CompileCache::get_or_compile`] with the configuration digest
+    /// precomputed: the coordinator caches it per seed, so per-job
+    /// lookups skip re-formatting the whole cluster config. `cfg_key`
+    /// must equal [`compile_key_cfg`]`(cfg)`.
+    pub fn get_or_compile_keyed(
+        &self,
+        cfg: &SimConfig,
+        cfg_key: u64,
+        job: &Job,
+    ) -> anyhow::Result<Arc<CompiledJob>> {
+        debug_assert_eq!(cfg_key, compile_key_cfg(cfg), "stale configuration digest");
+        let key = fold_job(cfg_key, job);
+        if let Some(hit) = self.inner.get(key) {
+            return Ok(hit);
+        }
+        // the miss was counted by the lookup above; compile errors
+        // re-raise (and re-count) on every attempt by design
+        let built = Arc::new(compile_with_cfg_key(cfg, cfg_key, job)?);
+        self.inner.insert(key, built.clone());
+        Ok(built)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.is_empty()
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.inner.hits()
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.inner.misses()
+    }
+}
+
+impl Default for CompileCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kernel_job() -> Job {
+        Job::Kernel {
+            kernel: KernelId::Faxpy,
+            policy: ModePolicy::Split,
+        }
+    }
+
+    fn mixed_job(iters: u32) -> Job {
+        Job::Mixed {
+            kernel: KernelId::Faxpy,
+            policy: ModePolicy::Auto,
+            coremark_iterations: iters,
+        }
+    }
+
+    #[test]
+    fn resolve_deploy_table() {
+        use ArchKind::*;
+        use ModePolicy::*;
+        let cases = [
+            (Spatzformer, Split, false, Deployment::SplitDual),
+            (Spatzformer, Split, true, Deployment::SplitSingle),
+            (Spatzformer, Merge, false, Deployment::Merge),
+            (Spatzformer, Merge, true, Deployment::Merge),
+            (Spatzformer, Auto, false, Deployment::SplitDual),
+            (Spatzformer, Auto, true, Deployment::Merge),
+            (Baseline, Split, false, Deployment::SplitDual),
+            (Baseline, Split, true, Deployment::SplitSingle),
+            (Baseline, Auto, false, Deployment::SplitDual),
+            (Baseline, Auto, true, Deployment::SplitSingle),
+        ];
+        for (arch, policy, mixed, want) in cases {
+            assert_eq!(
+                resolve_deploy(arch, policy, mixed).unwrap(),
+                want,
+                "{arch:?}/{policy:?}/mixed={mixed}"
+            );
+        }
+        for mixed in [false, true] {
+            let err = resolve_deploy(ArchKind::Baseline, Merge, mixed).unwrap_err();
+            assert!(format!("{err:#}").contains("merge mode requires"));
+        }
+    }
+
+    #[test]
+    fn compile_is_deterministic_and_config_pure() {
+        let cfg = SimConfig::spatzformer();
+        let a = compile(&cfg, &kernel_job()).unwrap();
+        let b = compile(&cfg, &kernel_job()).unwrap();
+        assert_eq!(a.programs[0], b.programs[0]);
+        assert_eq!(a.inst.staging_f32, b.inst.staging_f32);
+        assert_eq!(a.cfg_key, b.cfg_key);
+        // scheduling/pricing knobs change neither the artifact nor its key
+        let mut sched = cfg.clone();
+        sched.fleet.workers = 16;
+        sched.compile.cache = false;
+        sched.max_cycles += 7;
+        sched.trace = !sched.trace;
+        sched.ppa.pj_barrier += 1.0;
+        let c = compile(&sched, &kernel_job()).unwrap();
+        assert_eq!(a.programs[0], c.programs[0]);
+        assert_eq!(a.cfg_key, c.cfg_key);
+    }
+
+    #[test]
+    fn compile_key_sensitivity() {
+        let cfg = SimConfig::spatzformer();
+        let j = kernel_job();
+        let key = compile_key(&cfg.cluster, cfg.seed, &j);
+        assert_eq!(key, compile_key(&cfg.cluster, cfg.seed, &j));
+        // seed and cluster shape split the key space
+        assert_ne!(key, compile_key(&cfg.cluster, cfg.seed ^ 1, &j));
+        let mut lanes8 = cfg.cluster.clone();
+        lanes8.lanes = 8;
+        assert_ne!(key, compile_key(&lanes8, cfg.seed, &j));
+        // job identity splits it too — including the CoreMark iteration axis
+        assert_ne!(key, compile_key(&cfg.cluster, cfg.seed, &mixed_job(1)));
+        assert_ne!(
+            compile_key(&cfg.cluster, cfg.seed, &mixed_job(1)),
+            compile_key(&cfg.cluster, cfg.seed, &mixed_job(2))
+        );
+    }
+
+    #[test]
+    fn mixed_compile_places_coremark_on_core1() {
+        let cfg = SimConfig::spatzformer();
+        let cj = compile(&cfg, &mixed_job(2)).unwrap();
+        assert!(cj.mixed);
+        assert_eq!(cj.deploy, Deployment::Merge);
+        assert!(cj.coremark_checksum.is_some());
+        assert_eq!(cj.programs[1].vector_count(), 0, "co-task must be scalar");
+        assert!(cj.programs[1].len() > 1000, "co-task carries real work");
+        // core 0 still runs the kernel program from the instance
+        assert_eq!(cj.programs[0], cj.inst.programs[0]);
+    }
+
+    #[test]
+    fn mixed_split_dual_is_rejected() {
+        // Split resolves to SplitSingle for mixed jobs, so the guard can
+        // only trip via an inconsistent future edit — prove it holds for
+        // the policies that exist today by exhausting them.
+        let cfg = SimConfig::spatzformer();
+        for policy in [ModePolicy::Split, ModePolicy::Merge, ModePolicy::Auto] {
+            let job = Job::Mixed { kernel: KernelId::Fft, policy, coremark_iterations: 1 };
+            let cj = compile(&cfg, &job).unwrap();
+            assert_ne!(cj.deploy, Deployment::SplitDual);
+        }
+    }
+
+    #[test]
+    fn compile_precomputes_validation_and_barrier_mask() {
+        let cfg = SimConfig::spatzformer();
+        // split-dual fdotp synchronizes its cores with cluster barriers
+        let dual = compile(
+            &cfg,
+            &Job::Kernel { kernel: KernelId::Fdotp, policy: ModePolicy::Split },
+        )
+        .unwrap();
+        assert_ne!(dual.barrier_mask, 0, "split-dual fdotp uses barriers");
+        // merge mode runs barrier-free on core 0 only
+        let merge = compile(
+            &cfg,
+            &Job::Kernel { kernel: KernelId::Fdotp, policy: ModePolicy::Merge },
+        )
+        .unwrap();
+        assert_eq!(merge.barrier_mask, 0);
+        // mixed jobs: kernel on core 0, scalar co-task on core 1, no barriers
+        let mixed = compile(&cfg, &mixed_job(1)).unwrap();
+        assert_eq!(mixed.barrier_mask, 0);
+    }
+
+    #[test]
+    fn cache_shares_artifacts_and_counts() {
+        let cfg = SimConfig::spatzformer();
+        let cache = CompileCache::new();
+        assert!(cache.is_empty());
+        let a = cache.get_or_compile(&cfg, &kernel_job()).unwrap();
+        let b = cache.get_or_compile(&cfg, &kernel_job()).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "hit must share, not copy");
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        assert_eq!(cache.len(), 1);
+        // a different seed is a different artifact
+        let mut other = cfg.clone();
+        other.seed ^= 0xF00;
+        let c = cache.get_or_compile(&other, &kernel_job()).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!((cache.hits(), cache.misses()), (1, 2));
+        // compile errors surface and are not cached
+        let baseline = SimConfig::baseline();
+        let bad = Job::Kernel { kernel: KernelId::Fft, policy: ModePolicy::Merge };
+        assert!(cache.get_or_compile(&baseline, &bad).is_err());
+        assert!(cache.get_or_compile(&baseline, &bad).is_err());
+        assert_eq!(cache.len(), 2);
+    }
+}

@@ -302,6 +302,25 @@ impl Default for FleetConfig {
     }
 }
 
+/// Compile-stage knobs — see [`crate::compile`].
+///
+/// Like `[fleet]` and `[sim] engine`, this section is deliberately *not*
+/// part of the result-cache key: compilation is pure, so whether a
+/// compiled artifact is served from the cache or rebuilt must never
+/// change a simulation outcome.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CompileConfig {
+    /// Memoize `Job -> CompiledJob` behind a content-addressed cache
+    /// (shared across fleet workers) instead of recompiling per job.
+    pub cache: bool,
+}
+
+impl Default for CompileConfig {
+    fn default() -> Self {
+        Self { cache: true }
+    }
+}
+
 /// Top-level simulation config.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SimConfig {
@@ -309,6 +328,8 @@ pub struct SimConfig {
     pub ppa: PpaConfig,
     /// Batch-simulation fleet section.
     pub fleet: FleetConfig,
+    /// Compile-stage section.
+    pub compile: CompileConfig,
     /// Cycle-loop engine (`[sim] engine = "fast" | "naive"`). Results are
     /// engine-independent by contract; see `rust/tests/engine_differential.rs`.
     pub engine: EngineKind,
@@ -326,6 +347,7 @@ impl Default for SimConfig {
             cluster: ClusterConfig::default(),
             ppa: PpaConfig::default(),
             fleet: FleetConfig::default(),
+            compile: CompileConfig::default(),
             engine: EngineKind::Fast,
             seed: 0xC0FFEE,
             trace: false,
@@ -417,6 +439,7 @@ impl SimConfig {
             "ppa.idle_power_fraction" => p.idle_power_fraction = value.as_f64().ok_or_else(bad)?,
             "fleet.workers" => self.fleet.workers = value.as_usize().ok_or_else(bad)?,
             "fleet.cache" => self.fleet.cache = value.as_bool().ok_or_else(bad)?,
+            "compile.cache" => self.compile.cache = value.as_bool().ok_or_else(bad)?,
             "sim.engine" => {
                 self.engine = value
                     .as_str()
@@ -497,6 +520,18 @@ mod tests {
         assert_eq!(cfg.fleet.workers, 8);
         assert!(!cfg.fleet.cache);
         assert!(cfg.apply("fleet.cache", &Value::Int(1)).is_err());
+    }
+
+    #[test]
+    fn apply_compile_keys() {
+        let mut cfg = SimConfig::default();
+        assert!(cfg.compile.cache); // on by default
+        cfg.apply("compile.cache", &Value::Bool(false)).unwrap();
+        assert!(!cfg.compile.cache);
+        cfg.apply("compile.cache", &Value::Bool(true)).unwrap();
+        assert!(cfg.compile.cache);
+        assert!(cfg.apply("compile.cache", &Value::Int(1)).is_err());
+        assert!(cfg.apply("compile.bogus", &Value::Bool(true)).is_err());
     }
 
     #[test]

@@ -2,20 +2,33 @@
 //! onto the simulated cluster.
 //!
 //! A [`Job`] describes *what* to run (a kernel, or a kernel mixed with a
-//! scalar task); the coordinator decides the operating mode (explicitly
-//! or via [`ModePolicy::Auto`]), builds the programs, stages the data,
-//! runs the cluster, prices the energy, and — when an [`XlaRuntime`] is
-//! attached — cross-checks the simulated RVV datapath's outputs against
-//! the AOT-compiled XLA artifact.
+//! scalar task). The pipeline has two explicit stages
+//! (see [`crate::compile`]):
+//!
+//! 1. **compile** — [`Coordinator::compile`] resolves the operating mode
+//!    (explicitly or via [`ModePolicy::Auto`]), generates the programs
+//!    and staging set, and returns an immutable `Arc`-shared
+//!    [`CompiledJob`], memoized in a content-addressed cache when the
+//!    `[compile] cache` knob is on;
+//! 2. **execute** — [`Coordinator::execute`] resets the coordinator's
+//!    cluster *in place* ([`crate::cluster::Cluster::reset`]), runs the
+//!    artifact, prices the energy, and — when an [`XlaRuntime`] is
+//!    attached — cross-checks the simulated RVV datapath's outputs
+//!    against the AOT-compiled XLA artifact.
+//!
+//! [`Coordinator::submit`] chains the two. Both stages are deterministic:
+//! reports are byte-identical whether artifacts come from the cache or a
+//! fresh compile, and whether the cluster is reused or newly built.
 
 use crate::cluster::Cluster;
+use crate::compile::{self, CompileCache, CompiledJob};
 use crate::config::{ArchKind, SimConfig};
-use crate::kernels::{execute, Deployment, KernelId, KernelInstance};
+use crate::kernels::{self, Deployment, KernelId, KernelInstance};
 use crate::metrics::RunMetrics;
 use crate::ppa::price_run;
 use crate::runtime::XlaRuntime;
 use crate::util::stats::max_rel_err;
-use crate::workloads::coremark;
+use std::sync::Arc;
 
 /// Mode selection policy for jobs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -44,13 +57,22 @@ pub enum Job {
 }
 
 impl Job {
+    /// Human-readable identity. Covers every axis that distinguishes two
+    /// jobs — including the CoreMark iteration count, so fleet failure
+    /// reports and job-digest tables never conflate two mixed jobs that
+    /// differ only in scalar work.
     pub fn name(&self) -> String {
         match self {
             Job::Kernel { kernel, policy } => {
                 format!("kernel/{}/{:?}", kernel.name(), policy)
             }
-            Job::Mixed { kernel, policy, .. } => {
-                format!("mixed/{}+coremark/{:?}", kernel.name(), policy)
+            Job::Mixed { kernel, policy, coremark_iterations } => {
+                format!(
+                    "mixed/{}+coremark-x{}/{:?}",
+                    kernel.name(),
+                    coremark_iterations,
+                    policy
+                )
             }
         }
     }
@@ -60,7 +82,7 @@ impl Job {
 ///
 /// `PartialEq` is exact (including priced energy): two reports compare
 /// equal iff the runs were byte-identical, which is what the fleet's
-/// parallel-vs-sequential determinism tests assert.
+/// parallel-vs-sequential and the reset-reuse determinism tests assert.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JobReport {
     pub job_name: String,
@@ -86,16 +108,40 @@ impl JobReport {
     }
 }
 
-/// The coordinator.
+/// The coordinator: one simulated cluster, reused in place across jobs,
+/// plus the compile-stage cache.
 pub struct Coordinator {
     cfg: SimConfig,
     runtime: Option<XlaRuntime>,
+    /// The cluster every job executes on — reset, never re-allocated.
+    cluster: Cluster,
+    /// Compile-stage memoization; `None` compiles every job from scratch
+    /// (`[compile] cache = false`). Fleet workers swap in one shared
+    /// cache so a sweep compiles each distinct combo once fleet-wide.
+    compile_cache: Option<Arc<CompileCache>>,
+    /// Cached [`compile::compile_key_cfg`] of `cfg` — the config half of
+    /// every compile key. Recomputed only when the seed changes, so the
+    /// per-job hot path never re-formats the cluster config.
+    cfg_digest: u64,
 }
 
 impl Coordinator {
     pub fn new(cfg: SimConfig) -> anyhow::Result<Self> {
         cfg.validate()?;
-        Ok(Self { cfg, runtime: None })
+        let cluster = Cluster::new(cfg.clone())?;
+        let compile_cache = if cfg.compile.cache {
+            Some(Arc::new(CompileCache::new()))
+        } else {
+            None
+        };
+        let cfg_digest = compile::compile_key_cfg(&cfg);
+        Ok(Self {
+            cfg,
+            runtime: None,
+            cluster,
+            compile_cache,
+            cfg_digest,
+        })
     }
 
     pub fn arch(&self) -> ArchKind {
@@ -104,6 +150,35 @@ impl Coordinator {
 
     pub fn config(&self) -> &SimConfig {
         &self.cfg
+    }
+
+    /// Change the workload seed for subsequent jobs. Seeds drive only
+    /// the compile stage (input data and co-task generation), so the
+    /// cluster — whose shape is seed-independent — keeps being reused.
+    pub fn set_seed(&mut self, seed: u64) {
+        if seed != self.cfg.seed {
+            self.cfg.seed = seed;
+            self.cluster.cfg.seed = seed;
+            self.cfg_digest = compile::compile_key_cfg(&self.cfg);
+        }
+    }
+
+    /// Share a compile cache (the fleet hands every worker the same one).
+    pub fn attach_compile_cache(&mut self, cache: Arc<CompileCache>) {
+        self.compile_cache = Some(cache);
+    }
+
+    /// Drop compile memoization: every [`Coordinator::compile`] call
+    /// rebuilds the artifact (benchmarks use this to measure the
+    /// amortization the cache buys).
+    pub fn detach_compile_cache(&mut self) {
+        self.compile_cache = None;
+    }
+
+    /// The compile cache in use, if any (metrics/benches read the
+    /// hit/miss counters).
+    pub fn compile_cache(&self) -> Option<&Arc<CompileCache>> {
+        self.compile_cache.as_ref()
     }
 
     /// Attach the PJRT runtime: every kernel job's output will be
@@ -117,83 +192,68 @@ impl Coordinator {
         self.runtime.is_some()
     }
 
-    fn resolve_deploy(&self, policy: ModePolicy, mixed: bool) -> anyhow::Result<Deployment> {
-        let arch = self.cfg.cluster.arch;
-        let deploy = match (policy, mixed) {
-            (ModePolicy::Split, false) => Deployment::SplitDual,
-            (ModePolicy::Split, true) => Deployment::SplitSingle,
-            (ModePolicy::Merge, _) => Deployment::Merge,
-            // Auto: merge pays off when a core must be freed; otherwise
-            // split-dual is the baseline-equivalent choice.
-            (ModePolicy::Auto, true) => {
-                if arch == ArchKind::Spatzformer {
-                    Deployment::Merge
-                } else {
-                    Deployment::SplitSingle
-                }
-            }
-            (ModePolicy::Auto, false) => Deployment::SplitDual,
-        };
-        if deploy == Deployment::Merge {
-            anyhow::ensure!(
-                arch == ArchKind::Spatzformer,
-                "merge mode requires the Spatzformer architecture"
-            );
-        }
-        Ok(deploy)
+    /// Resolve the deployment a mode policy maps to on this coordinator's
+    /// architecture (see [`compile::resolve_deploy`] for the table).
+    pub fn resolve_deploy(
+        &self,
+        policy: ModePolicy,
+        mixed: bool,
+    ) -> anyhow::Result<Deployment> {
+        compile::resolve_deploy(self.cfg.cluster.arch, policy, mixed)
     }
 
-    /// Run one job on a fresh cluster.
-    pub fn submit(&mut self, job: &Job) -> anyhow::Result<JobReport> {
-        match *job {
-            Job::Kernel { kernel, policy } => {
-                let deploy = self.resolve_deploy(policy, false)?;
-                let inst = kernel.build(&self.cfg.cluster, deploy, self.cfg.seed);
-                let mut cluster = Cluster::new(self.cfg.clone())?;
-                let (mut metrics, outputs) = execute(&mut cluster, &inst)?;
-                price_run(&mut metrics, &self.cfg, self.cfg.cluster.arch);
-                let kernel_cycles = cluster.core_halt_cycle(0).unwrap_or(metrics.cycles);
-                let verified = self.verify(&inst, &outputs)?;
-                Ok(JobReport {
-                    job_name: job.name(),
-                    kernel,
-                    deploy,
-                    kernel_cycles: kernel_cycles.max(
-                        cluster.core_halt_cycle(1).unwrap_or(0), // dual: slower core
-                    ),
-                    metrics,
-                    scalar_cycles: None,
-                    coremark_checksum: None,
-                    verified_max_rel_err: verified,
-                })
-            }
-            Job::Mixed { kernel, policy, coremark_iterations } => {
-                let deploy = self.resolve_deploy(policy, true)?;
-                anyhow::ensure!(
-                    deploy != Deployment::SplitDual,
-                    "mixed jobs need a free scalar core"
-                );
-                let mut inst = kernel.build(&self.cfg.cluster, deploy, self.cfg.seed);
-                let scalar =
-                    coremark(&self.cfg.cluster, coremark_iterations, self.cfg.seed ^ 0x5CA1A8);
-                // kernel occupies core 0; scalar task takes core 1
-                inst.programs[1] = scalar.program.clone();
-                let mut cluster = Cluster::new(self.cfg.clone())?;
-                let (mut metrics, outputs) = execute(&mut cluster, &inst)?;
-                price_run(&mut metrics, &self.cfg, self.cfg.cluster.arch);
-                let verified = self.verify(&inst, &outputs)?;
-                Ok(JobReport {
-                    job_name: job.name(),
-                    kernel,
-                    deploy,
-                    kernel_cycles: cluster.core_halt_cycle(0).unwrap_or(metrics.cycles),
-                    scalar_cycles: cluster.core_halt_cycle(1),
-                    metrics,
-                    coremark_checksum: Some(scalar.checksum),
-                    verified_max_rel_err: verified,
-                })
-            }
+    /// Compile stage: `Job -> Arc<CompiledJob>`, served from the compile
+    /// cache when one is attached. Pure in `(cfg.cluster, cfg.seed, job)`.
+    pub fn compile(&self, job: &Job) -> anyhow::Result<Arc<CompiledJob>> {
+        match &self.compile_cache {
+            Some(cache) => cache.get_or_compile_keyed(&self.cfg, self.cfg_digest, job),
+            None => compile::compile(&self.cfg, job).map(Arc::new),
         }
+    }
+
+    /// Execute stage: run a compiled artifact on the in-place-reset
+    /// cluster, price the energy, and assemble the report. The artifact
+    /// must have been compiled for this coordinator's cluster shape and
+    /// seed (guaranteed when it came from [`Coordinator::compile`]).
+    pub fn execute(&mut self, compiled: &CompiledJob) -> anyhow::Result<JobReport> {
+        anyhow::ensure!(
+            compiled.cfg_key == self.cfg_digest,
+            "{}: compiled for a different cluster configuration or seed",
+            compiled.job_name
+        );
+        self.cluster.reset();
+        let (mut metrics, outputs) = kernels::execute_prevalidated(
+            &mut self.cluster,
+            &compiled.inst,
+            compiled.programs.clone(),
+            compiled.barrier_mask,
+        )?;
+        price_run(&mut metrics, &self.cfg, self.cfg.cluster.arch);
+        let verified = self.verify(&compiled.inst, &outputs)?;
+        let halt0 = self.cluster.core_halt_cycle(0).unwrap_or(metrics.cycles);
+        let (kernel_cycles, scalar_cycles) = if compiled.mixed {
+            (halt0, self.cluster.core_halt_cycle(1))
+        } else {
+            // pure kernel: dual deployments finish at the slower core
+            (halt0.max(self.cluster.core_halt_cycle(1).unwrap_or(0)), None)
+        };
+        Ok(JobReport {
+            job_name: compiled.job_name.clone(),
+            kernel: compiled.kernel,
+            deploy: compiled.deploy,
+            metrics,
+            kernel_cycles,
+            scalar_cycles,
+            coremark_checksum: compiled.coremark_checksum,
+            verified_max_rel_err: verified,
+        })
+    }
+
+    /// Run one job end to end: compile (or fetch the cached artifact),
+    /// then execute on the reused cluster.
+    pub fn submit(&mut self, job: &Job) -> anyhow::Result<JobReport> {
+        let compiled = self.compile(job)?;
+        self.execute(&compiled)
     }
 
     /// Run a queue of jobs in order.
@@ -279,6 +339,144 @@ mod tests {
         let mut c = Coordinator::new(SimConfig::baseline()).unwrap();
         let err = c.submit(&Job::Kernel { kernel: KernelId::Fft, policy: ModePolicy::Merge });
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn resolve_deploy_auto_for_mixed_depends_on_arch() {
+        let sf = Coordinator::new(SimConfig::spatzformer()).unwrap();
+        assert_eq!(
+            sf.resolve_deploy(ModePolicy::Auto, true).unwrap(),
+            Deployment::Merge
+        );
+        let base = Coordinator::new(SimConfig::baseline()).unwrap();
+        assert_eq!(
+            base.resolve_deploy(ModePolicy::Auto, true).unwrap(),
+            Deployment::SplitSingle
+        );
+    }
+
+    #[test]
+    fn resolve_deploy_split_and_merge_forcing() {
+        let sf = Coordinator::new(SimConfig::spatzformer()).unwrap();
+        assert_eq!(
+            sf.resolve_deploy(ModePolicy::Split, false).unwrap(),
+            Deployment::SplitDual
+        );
+        assert_eq!(
+            sf.resolve_deploy(ModePolicy::Split, true).unwrap(),
+            Deployment::SplitSingle
+        );
+        assert_eq!(
+            sf.resolve_deploy(ModePolicy::Merge, false).unwrap(),
+            Deployment::Merge
+        );
+    }
+
+    #[test]
+    fn resolve_deploy_rejects_merge_on_baseline_with_clear_error() {
+        let base = Coordinator::new(SimConfig::baseline()).unwrap();
+        for mixed in [false, true] {
+            let err = base.resolve_deploy(ModePolicy::Merge, mixed).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("merge mode requires the Spatzformer architecture"),
+                "unhelpful error: {msg}"
+            );
+        }
+    }
+
+    #[test]
+    fn mixed_job_names_distinguish_iteration_counts() {
+        let one = Job::Mixed {
+            kernel: KernelId::Fft,
+            policy: ModePolicy::Auto,
+            coremark_iterations: 1,
+        };
+        let two = Job::Mixed {
+            kernel: KernelId::Fft,
+            policy: ModePolicy::Auto,
+            coremark_iterations: 2,
+        };
+        assert_ne!(one.name(), two.name());
+        assert!(one.name().contains("coremark-x1"), "{}", one.name());
+        assert!(two.name().contains("coremark-x2"), "{}", two.name());
+    }
+
+    #[test]
+    fn compile_then_execute_equals_submit() {
+        let mut c = Coordinator::new(SimConfig::spatzformer()).unwrap();
+        let job = Job::Mixed {
+            kernel: KernelId::Fdotp,
+            policy: ModePolicy::Merge,
+            coremark_iterations: 1,
+        };
+        let compiled = c.compile(&job).unwrap();
+        let staged = c.execute(&compiled).unwrap();
+        let direct = c.submit(&job).unwrap();
+        assert_eq!(staged, direct);
+    }
+
+    #[test]
+    fn execute_rejects_foreign_artifacts() {
+        let mut a = Coordinator::new(SimConfig::spatzformer()).unwrap();
+        let mut other = SimConfig::spatzformer();
+        other.seed ^= 0xDEAD;
+        let b = Coordinator::new(other).unwrap();
+        let compiled = b
+            .compile(&Job::Kernel { kernel: KernelId::Faxpy, policy: ModePolicy::Split })
+            .unwrap();
+        let err = a.execute(&compiled).unwrap_err();
+        assert!(format!("{err:#}").contains("different cluster configuration"));
+    }
+
+    #[test]
+    fn repeated_submits_reuse_cluster_and_cache_deterministically() {
+        // Three submits of the same job on one coordinator: the second
+        // and third hit the compile cache and run on a reused cluster,
+        // yet all reports are byte-identical.
+        let mut c = Coordinator::new(SimConfig::spatzformer()).unwrap();
+        let job = Job::Kernel { kernel: KernelId::Fdct, policy: ModePolicy::Merge };
+        let r1 = c.submit(&job).unwrap();
+        let r2 = c.submit(&job).unwrap();
+        let r3 = c.submit(&job).unwrap();
+        assert_eq!(r1, r2);
+        assert_eq!(r1, r3);
+        let cache = c.compile_cache().expect("cache on by default");
+        assert_eq!((cache.hits(), cache.misses()), (2, 1));
+    }
+
+    #[test]
+    fn compile_cache_off_is_transparent() {
+        let mut cfg = SimConfig::spatzformer();
+        cfg.compile.cache = false;
+        let mut cold = Coordinator::new(cfg).unwrap();
+        assert!(cold.compile_cache().is_none());
+        let mut warm = Coordinator::new(SimConfig::spatzformer()).unwrap();
+        let job = Job::Mixed {
+            kernel: KernelId::Conv2d,
+            policy: ModePolicy::Auto,
+            coremark_iterations: 2,
+        };
+        for _ in 0..2 {
+            assert_eq!(cold.submit(&job).unwrap(), warm.submit(&job).unwrap());
+        }
+    }
+
+    #[test]
+    fn set_seed_changes_compiled_inputs() {
+        let mut c = Coordinator::new(SimConfig::spatzformer()).unwrap();
+        let job = Job::Mixed {
+            kernel: KernelId::Faxpy,
+            policy: ModePolicy::Auto,
+            coremark_iterations: 1,
+        };
+        let a = c.submit(&job).unwrap();
+        c.set_seed(0x1234_5678);
+        let b = c.submit(&job).unwrap();
+        assert_ne!(a, b, "different seeds must produce different runs");
+        c.set_seed(SimConfig::spatzformer().seed);
+        let a2 = c.submit(&job).unwrap();
+        assert_eq!(a, a2, "returning to the original seed restores the run");
     }
 
     #[test]

@@ -1,12 +1,13 @@
 //! Content-addressed result cache: repeated `(SimConfig, Job)` pairs in
 //! a sweep are served from memory instead of being re-simulated.
 //!
-//! The key is a stable 64-bit FNV-1a digest over a canonical encoding of
-//! everything that can change a simulation outcome: the cluster shape,
-//! the PPA model, the workload seed, the cycle limit, and the job
-//! itself. The [`crate::config::FleetConfig`] section and the
+//! The key is a stable 64-bit FNV-1a digest ([`crate::util::Fnv1a`])
+//! over a canonical encoding of everything that can change a simulation
+//! outcome: the cluster shape, the PPA model, the workload seed, the
+//! cycle limit, and the job itself. The [`crate::config::FleetConfig`]
+//! and [`crate::config::CompileConfig`] sections and the
 //! [`crate::config::EngineKind`] cycle-loop choice are deliberately
-//! excluded — worker count, caching policy and execution strategy must
+//! excluded — worker count, caching policies and execution strategy must
 //! never affect results, so they must not split the key space either
 //! (`rust/tests/cache_properties.rs` holds the digest to this).
 //!
@@ -16,39 +17,7 @@
 
 use crate::config::SimConfig;
 use crate::coordinator::{Job, JobReport};
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
-
-/// 64-bit FNV-1a. Tiny, dependency-free, and stable across platforms —
-/// we need a *reproducible* digest, not a cryptographic one (a collision
-/// would only ever serve a stale report for a colliding config, and the
-/// 64-bit space over at most millions of jobs makes that negligible).
-struct Fnv1a {
-    state: u64,
-}
-
-impl Fnv1a {
-    const OFFSET_BASIS: u64 = 0xcbf2_9ce4_8422_2325;
-    const PRIME: u64 = 0x0000_0100_0000_01b3;
-
-    fn new() -> Self {
-        Self {
-            state: Self::OFFSET_BASIS,
-        }
-    }
-
-    fn write(&mut self, bytes: &[u8]) {
-        for &b in bytes {
-            self.state ^= b as u64;
-            self.state = self.state.wrapping_mul(Self::PRIME);
-        }
-    }
-
-    fn finish(&self) -> u64 {
-        self.state
-    }
-}
+use crate::util::{CountingCache, Fnv1a};
 
 /// Digest of everything that determines a job's simulation outcome.
 ///
@@ -67,57 +36,45 @@ pub fn job_key(cfg: &SimConfig, job: &Job) -> u64 {
     h.finish()
 }
 
-/// Shared, thread-safe result cache with hit/miss counters.
-///
-/// One mutex around the map is plenty: entries are whole `JobReport`s,
-/// lookups are rare relative to the milliseconds a simulation takes, and
-/// the counters are atomics so metrics reads never contend.
+/// Shared, thread-safe result cache: a [`CountingCache`] of whole
+/// `JobReport`s. Concurrency and race semantics live in
+/// [`crate::util::cache`] (two workers racing on one key insert
+/// identical reports — determinism — so last-write-wins is correct).
 pub struct ResultCache {
-    map: Mutex<HashMap<u64, JobReport>>,
-    hits: AtomicU64,
-    misses: AtomicU64,
+    inner: CountingCache<JobReport>,
 }
 
 impl ResultCache {
     pub fn new() -> Self {
         Self {
-            map: Mutex::new(HashMap::new()),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
+            inner: CountingCache::new(),
         }
     }
 
     /// Look up a key, counting the hit or miss.
     pub fn get(&self, key: u64) -> Option<JobReport> {
-        let hit = self.map.lock().expect("result cache poisoned").get(&key).cloned();
-        match hit {
-            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
-            None => self.misses.fetch_add(1, Ordering::Relaxed),
-        };
-        hit
+        self.inner.get(key)
     }
 
-    /// Insert a freshly simulated report. Two workers racing on the same
-    /// key insert identical values (determinism), so last-write-wins is
-    /// correct.
+    /// Insert a freshly simulated report.
     pub fn insert(&self, key: u64, report: JobReport) {
-        self.map.lock().expect("result cache poisoned").insert(key, report);
+        self.inner.insert(key, report);
     }
 
     pub fn len(&self) -> usize {
-        self.map.lock().expect("result cache poisoned").len()
+        self.inner.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        self.inner.is_empty()
     }
 
     pub fn hits(&self) -> u64 {
-        self.hits.load(Ordering::Relaxed)
+        self.inner.hits()
     }
 
     pub fn misses(&self) -> u64 {
-        self.misses.load(Ordering::Relaxed)
+        self.inner.misses()
     }
 }
 
@@ -192,10 +149,11 @@ mod tests {
     }
 
     #[test]
-    fn fnv_vector() {
-        // FNV-1a("a") reference value.
-        let mut h = Fnv1a::new();
-        h.write(b"a");
-        assert_eq!(h.finish(), 0xaf63_dc4c_8601_ec8c);
+    fn key_insensitive_to_compile_section() {
+        let cfg = SimConfig::spatzformer();
+        let j = job();
+        let mut recompile = cfg.clone();
+        recompile.compile.cache = !recompile.compile.cache;
+        assert_eq!(job_key(&cfg, &j), job_key(&recompile, &j));
     }
 }

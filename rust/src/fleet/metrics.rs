@@ -32,6 +32,10 @@ pub struct FleetMetrics {
     pub wall: Duration,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// Compile-stage cache traffic (shared across all workers); zero
+    /// when the compile cache is disabled.
+    pub compile_hits: u64,
+    pub compile_misses: u64,
     /// Work-stealing events across all workers.
     pub steals: u64,
     /// Simulated cycles summed over every report (cached ones included).
@@ -71,6 +75,15 @@ impl FleetMetrics {
         self.cache_hits as f64 / total as f64
     }
 
+    /// Compile-cache hit rate in [0, 1]; 0 when it was never consulted.
+    pub fn compile_hit_rate(&self) -> f64 {
+        let total = self.compile_hits + self.compile_misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.compile_hits as f64 / total as f64
+    }
+
     /// Fraction of the batch's wall-clock each worker spent executing
     /// jobs, in [0, 1] per worker.
     pub fn worker_utilization(&self) -> Vec<f64> {
@@ -104,6 +117,7 @@ impl FleetMetrics {
              jobs/sec       : {:.1}\n\
              Msim-cycles/s  : {:.2}\n\
              cache          : {} hits / {} misses ({:.1}% hit rate)\n\
+             compile cache  : {} hits / {} misses ({:.1}% hit rate)\n\
              steals         : {}\n\
              utilization    : {:.1}% mean",
             self.workers,
@@ -114,6 +128,9 @@ impl FleetMetrics {
             self.cache_hits,
             self.cache_misses,
             self.cache_hit_rate() * 100.0,
+            self.compile_hits,
+            self.compile_misses,
+            self.compile_hit_rate() * 100.0,
             self.steals,
             self.mean_utilization() * 100.0,
         )
@@ -183,6 +200,8 @@ mod tests {
             wall: Duration::from_millis(500),
             cache_hits: 6,
             cache_misses: 4,
+            compile_hits: 3,
+            compile_misses: 1,
             steals: 1,
             sim_cycles_total: 1_000_000,
             sim_cycles_executed: 400_000,
@@ -211,6 +230,7 @@ mod tests {
         assert!((m.jobs_per_sec() - 20.0).abs() < 1e-9);
         assert!((m.sim_cycles_per_sec() - 800_000.0).abs() < 1e-6);
         assert!((m.cache_hit_rate() - 0.6).abs() < 1e-12);
+        assert!((m.compile_hit_rate() - 0.75).abs() < 1e-12);
         let u = m.worker_utilization();
         assert!((u[0] - 0.8).abs() < 1e-12);
         assert!((u[1] - 0.6).abs() < 1e-12);
@@ -223,6 +243,7 @@ mod tests {
         assert_eq!(m.jobs_per_sec(), 0.0);
         assert_eq!(m.sim_cycles_per_sec(), 0.0);
         assert_eq!(m.cache_hit_rate(), 0.0);
+        assert_eq!(m.compile_hit_rate(), 0.0);
         assert_eq!(m.mean_utilization(), 0.0);
     }
 
@@ -232,6 +253,7 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("jobs/sec"));
         assert!(s.contains("hit rate"));
+        assert!(s.contains("compile cache"));
         let t = m.render_workers();
         assert!(t.contains("w0"));
         assert!(t.contains("w1"));

@@ -9,20 +9,27 @@
 //!   per-worker queues; a worker pops its own queue front-first and,
 //!   when empty, steals from the *back* of a sibling's queue, so tail
 //!   latency is bounded by the slowest single job rather than the
-//!   slowest queue;
+//!   slowest queue. Each worker owns one [`Coordinator`] — and with it
+//!   one simulated cluster, reset in place between jobs rather than
+//!   re-allocated ([`crate::cluster::Cluster::reset`]);
 //! * **[`scenario`]**: procedural generators that turn a seed into
 //!   diverse job batches (grid sweeps and random mixed-workload storms);
 //! * **[`cache`]**: a content-addressed result cache keyed by a digest
 //!   of `(SimConfig, Job)`, serving repeated jobs without re-simulation;
+//! * a shared **compile cache** ([`crate::compile::CompileCache`]): all
+//!   workers memoize the compile stage (`Job -> CompiledJob`) through
+//!   one `Arc`-shared cache, so a sweep compiles each distinct
+//!   `(cluster, seed, job)` combination once fleet-wide;
 //! * **[`metrics`]**: aggregate throughput, cache and per-worker
-//!   utilization numbers.
+//!   utilization numbers, including compile-cache hit counters.
 //!
 //! **Determinism contract.** Simulation is a pure function of
-//! `(SimConfig, Job)`, every job runs on a fresh cluster, and results
-//! are returned in submission order — so a fleet run with any worker
-//! count, cache on or off, produces byte-identical [`JobReport`]s to
-//! sequential [`Coordinator::submit`] calls. The integration tests
-//! assert this exactly.
+//! `(SimConfig, Job)`, every job runs on a pristine cluster (freshly
+//! reset — proven equal to freshly built by `rust/tests/reset_reuse.rs`),
+//! and results are returned in submission order — so a fleet run with
+//! any worker count, result/compile caches on or off, produces
+//! byte-identical [`JobReport`]s to sequential [`Coordinator::submit`]
+//! calls. The integration tests assert this exactly.
 
 pub mod cache;
 pub mod metrics;
@@ -32,10 +39,11 @@ pub use cache::ResultCache;
 pub use metrics::{FleetMetrics, WorkerStats};
 pub use scenario::{Scenario, ScenarioKind};
 
+use crate::compile::CompileCache;
 use crate::config::SimConfig;
 use crate::coordinator::{Coordinator, Job, JobReport};
 use std::collections::VecDeque;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// One queued unit of fleet work: a coordinator job plus an optional
@@ -86,11 +94,13 @@ pub struct Fleet {
     base: SimConfig,
     workers: usize,
     use_cache: bool,
+    use_compile_cache: bool,
 }
 
 impl Fleet {
     /// Build a fleet over a validated base config, taking worker count
-    /// and cache policy from its `[fleet]` section.
+    /// and result-cache policy from its `[fleet]` section and the
+    /// compile-cache policy from `[compile]`.
     pub fn new(base: SimConfig) -> anyhow::Result<Self> {
         base.validate()?;
         let workers = if base.fleet.workers == 0 {
@@ -101,6 +111,7 @@ impl Fleet {
         Ok(Self {
             workers,
             use_cache: base.fleet.cache,
+            use_compile_cache: base.compile.cache,
             base,
         })
     }
@@ -114,6 +125,12 @@ impl Fleet {
     /// Enable/disable the result cache.
     pub fn with_cache(mut self, on: bool) -> Self {
         self.use_cache = on;
+        self
+    }
+
+    /// Enable/disable the shared compile cache.
+    pub fn with_compile_cache(mut self, on: bool) -> Self {
+        self.use_compile_cache = on;
         self
     }
 
@@ -141,6 +158,13 @@ impl Fleet {
                 .push_back((i, job.clone()));
         }
         let shared_cache = ResultCache::new();
+        // One compile cache for the whole fleet: workers share artifacts
+        // behind the Arc, so each distinct combo compiles exactly once.
+        let compile_cache: Option<Arc<CompileCache>> = if self.use_compile_cache {
+            Some(Arc::new(CompileCache::new()))
+        } else {
+            None
+        };
         let wall_start = Instant::now();
 
         let mut per_worker: Vec<WorkerStats> = Vec::with_capacity(workers);
@@ -152,7 +176,8 @@ impl Fleet {
                     let cache = &shared_cache;
                     let base = &self.base;
                     let use_cache = self.use_cache;
-                    s.spawn(move || worker_loop(w, base, use_cache, queues, cache))
+                    let ccache = compile_cache.clone();
+                    s.spawn(move || worker_loop(w, base, use_cache, queues, cache, ccache))
                 })
                 .collect();
             for h in handles {
@@ -187,6 +212,8 @@ impl Fleet {
             wall,
             cache_hits: shared_cache.hits(),
             cache_misses: shared_cache.misses(),
+            compile_hits: compile_cache.as_ref().map_or(0, |c| c.hits()),
+            compile_misses: compile_cache.as_ref().map_or(0, |c| c.misses()),
             steals: per_worker.iter().map(|w| w.stolen).sum(),
             sim_cycles_total: reports.iter().map(|r| r.metrics.cycles).sum(),
             sim_cycles_executed: per_worker.iter().map(|w| w.sim_cycles).sum(),
@@ -219,11 +246,16 @@ fn next_job(
     None
 }
 
-/// Simulate (or cache-serve) one job on a fresh cluster.
+/// Simulate (or cache-serve) one job on the worker's reused cluster.
+/// The worker's [`Coordinator`] is created lazily on its first simulated
+/// job and then re-seeded per job — the cluster inside it is reset in
+/// place, never re-allocated.
 fn run_job(
     base: &SimConfig,
     use_cache: bool,
     cache: &ResultCache,
+    compile_cache: Option<&Arc<CompileCache>>,
+    coord: &mut Option<Coordinator>,
     fj: &FleetJob,
     stats: &mut WorkerStats,
 ) -> anyhow::Result<JobReport> {
@@ -237,8 +269,21 @@ fn run_job(
     } else {
         None
     };
-    let mut coord = Coordinator::new(cfg)?;
-    let report = coord.submit(&fj.job)?;
+    let seed = cfg.seed;
+    if coord.is_none() {
+        let mut c = Coordinator::new(cfg)?;
+        // The fleet's compile-cache policy overrides the per-coordinator
+        // default: either every worker shares the one fleet-wide cache,
+        // or memoization is off entirely.
+        match compile_cache {
+            Some(shared) => c.attach_compile_cache(shared.clone()),
+            None => c.detach_compile_cache(),
+        }
+        *coord = Some(c);
+    }
+    let coordinator = coord.as_mut().expect("worker coordinator initialized above");
+    coordinator.set_seed(seed);
+    let report = coordinator.submit(&fj.job)?;
     stats.executed += 1;
     stats.sim_cycles += report.metrics.cycles;
     if let Some(key) = key {
@@ -256,15 +301,25 @@ fn worker_loop(
     use_cache: bool,
     queues: &[Mutex<VecDeque<(usize, FleetJob)>>],
     cache: &ResultCache,
+    compile_cache: Option<Arc<CompileCache>>,
 ) -> (WorkerStats, Vec<(usize, Result<JobReport, String>)>) {
     let mut stats = WorkerStats::default();
     let mut out = Vec::new();
+    let mut coord: Option<Coordinator> = None;
     while let Some((idx, fj, stolen)) = next_job(w, queues) {
         if stolen {
             stats.stolen += 1;
         }
         let t0 = Instant::now();
-        let result = run_job(base, use_cache, cache, &fj, &mut stats);
+        let result = run_job(
+            base,
+            use_cache,
+            cache,
+            compile_cache.as_ref(),
+            &mut coord,
+            &fj,
+            &mut stats,
+        );
         stats.busy += t0.elapsed();
         stats.jobs += 1;
         out.push((idx, result.map_err(|e| format!("{e:#}"))));
@@ -327,6 +382,30 @@ mod tests {
             out.metrics.sim_cycles_total,
             out.metrics.sim_cycles_executed
         );
+    }
+
+    #[test]
+    fn compile_cache_counters_count_distinct_artifacts() {
+        // 8 identical jobs, 1 worker, result cache off so every job
+        // executes: one compile miss, seven shared-artifact hits.
+        let jobs = vec![axpy_job(7); 8];
+        let fleet = Fleet::new(SimConfig::spatzformer())
+            .unwrap()
+            .with_workers(1)
+            .with_cache(false);
+        let out = fleet.run(&jobs).unwrap();
+        assert_eq!(out.metrics.compile_misses, 1);
+        assert_eq!(out.metrics.compile_hits, 7);
+        // compile cache off: nothing counted, reports byte-identical
+        let out2 = Fleet::new(SimConfig::spatzformer())
+            .unwrap()
+            .with_workers(1)
+            .with_cache(false)
+            .with_compile_cache(false)
+            .run(&jobs)
+            .unwrap();
+        assert_eq!((out2.metrics.compile_hits, out2.metrics.compile_misses), (0, 0));
+        assert_eq!(out.reports, out2.reports);
     }
 
     #[test]

@@ -72,7 +72,7 @@ pub fn build(cfg: &ClusterConfig, deploy: Deployment, seed: u64) -> KernelInstan
     KernelInstance {
         id: KernelId::Conv2d,
         deploy,
-        programs,
+        programs: programs.map(std::sync::Arc::new),
         staging_f32: vec![(img_base, img.clone())],
         staging_u32: vec![],
         artifact_inputs: vec![img, ker],

@@ -88,7 +88,7 @@ pub fn build(cfg: &ClusterConfig, deploy: Deployment, seed: u64) -> KernelInstan
     KernelInstance {
         id: KernelId::Fdotp,
         deploy,
-        programs,
+        programs: programs.map(std::sync::Arc::new),
         staging_f32: vec![(x_base, x.clone()), (y_base, y.clone())],
         staging_u32: vec![],
         artifact_inputs: vec![x, y],

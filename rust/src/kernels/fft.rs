@@ -203,7 +203,7 @@ pub fn build(cfg: &ClusterConfig, deploy: Deployment, seed: u64) -> KernelInstan
     KernelInstance {
         id: KernelId::Fft,
         deploy,
-        programs,
+        programs: programs.map(std::sync::Arc::new),
         staging_f32,
         staging_u32,
         artifact_inputs: vec![re, im],

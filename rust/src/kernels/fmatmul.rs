@@ -84,7 +84,7 @@ pub fn build(cfg: &ClusterConfig, deploy: Deployment, seed: u64) -> KernelInstan
     KernelInstance {
         id: KernelId::Fmatmul,
         deploy,
-        programs,
+        programs: programs.map(std::sync::Arc::new),
         staging_f32: vec![(a_base, a.clone()), (b_base, b.clone())],
         staging_u32: vec![],
         artifact_inputs: vec![a, b],

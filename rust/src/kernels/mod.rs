@@ -28,6 +28,7 @@ pub mod fmatmul;
 use crate::config::ClusterConfig;
 use crate::isa::Program;
 use crate::util::SplitMix64;
+use std::sync::Arc;
 
 /// Kernel identifiers, in the paper's figure order.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -127,11 +128,15 @@ impl Deployment {
 }
 
 /// A fully generated kernel: programs + data + expectations.
+///
+/// Programs are `Arc`-shared: an instance is an immutable compile-stage
+/// artifact ([`crate::compile`]) that many executions — and many fleet
+/// workers — reference without copying instruction streams.
 #[derive(Debug, Clone)]
 pub struct KernelInstance {
     pub id: KernelId,
     pub deploy: Deployment,
-    pub programs: [Program; 2],
+    pub programs: [Arc<Program>; 2],
     /// f32 arrays to stage into TCDM before the run.
     pub staging_f32: Vec<(u32, Vec<f32>)>,
     /// u32 arrays (index tables) to stage.
@@ -194,12 +199,52 @@ pub(crate) fn loop_overhead(p: &mut Program, taken: bool) {
     p.scalar(ScalarOp::Branch { taken });
 }
 
-/// Stage, run and read back a kernel instance on a fresh-state cluster.
-/// Sets the cluster mode from the deployment. Returns the run metrics
-/// (energy not yet priced) and the outputs in artifact order.
+/// Stage, run and read back a kernel instance on a fresh-state cluster
+/// (fresh-built or [`crate::cluster::Cluster::reset`] in place), running
+/// the instance's own programs. See [`execute_with_programs`] when core
+/// programs are overridden (mixed jobs swap a scalar co-task onto
+/// core 1).
 pub fn execute(
     cluster: &mut crate::cluster::Cluster,
     inst: &KernelInstance,
+) -> anyhow::Result<(crate::metrics::RunMetrics, Vec<Vec<f32>>)> {
+    execute_with_programs(cluster, inst, inst.programs.clone())
+}
+
+/// Stage `inst`'s data, run `programs` and read back the outputs. Sets
+/// the cluster mode from the deployment and validates the programs at
+/// load time. Returns the run metrics (energy not yet priced) and the
+/// outputs in artifact order.
+pub fn execute_with_programs(
+    cluster: &mut crate::cluster::Cluster,
+    inst: &KernelInstance,
+    programs: [Arc<Program>; 2],
+) -> anyhow::Result<(crate::metrics::RunMetrics, Vec<Vec<f32>>)> {
+    stage_and_run(cluster, inst, |cl| cl.load_programs(programs))
+}
+
+/// [`execute_with_programs`] for compile-stage artifacts: the programs
+/// were validated (and the barrier participant mask computed) once at
+/// compile time, so the per-run load is O(1). Crate-private like the
+/// trusted load path it wraps — external callers execute compiled jobs
+/// through `Coordinator::execute`, which guards the artifact digest.
+pub(crate) fn execute_prevalidated(
+    cluster: &mut crate::cluster::Cluster,
+    inst: &KernelInstance,
+    programs: [Arc<Program>; 2],
+    barrier_mask: u8,
+) -> anyhow::Result<(crate::metrics::RunMetrics, Vec<Vec<f32>>)> {
+    stage_and_run(cluster, inst, |cl| {
+        cl.load_programs_prevalidated(programs, barrier_mask);
+        Ok(())
+    })
+}
+
+/// Shared staging/run/readback path of the two execute entry points.
+fn stage_and_run(
+    cluster: &mut crate::cluster::Cluster,
+    inst: &KernelInstance,
+    load: impl FnOnce(&mut crate::cluster::Cluster) -> anyhow::Result<()>,
 ) -> anyhow::Result<(crate::metrics::RunMetrics, Vec<Vec<f32>>)> {
     use crate::config::Mode;
     let mode = match inst.deploy {
@@ -215,7 +260,7 @@ pub fn execute(
     }
     let staging_cycles = cluster.dma_cycles;
     cluster.reset_stats();
-    cluster.load_programs([inst.programs[0].clone(), inst.programs[1].clone()])?;
+    load(cluster)?;
     cluster.run()?;
     let mut metrics = cluster.metrics(inst.flops);
     metrics.dma_cycles = staging_cycles; // staging is reported separately

@@ -13,6 +13,10 @@
 //!   identical to the naive per-cycle oracle (`[sim] engine` knob);
 //! * the six-kernel vector workload suite and a CoreMark-workalike scalar
 //!   workload ([`kernels`], [`workloads`]);
+//! * a two-stage job pipeline: a pure compile stage producing immutable,
+//!   `Arc`-shared artifacts behind a content-addressed cache
+//!   ([`compile`]), and an execute stage that reuses one cluster in
+//!   place (`Cluster::reset`) instead of allocating per job;
 //! * an analytical PPA model (area/energy/frequency) calibrated to the
 //!   paper's 12-nm implementation numbers ([`ppa`]);
 //! * a workload coordinator with runtime split/merge mode switching
@@ -29,6 +33,7 @@
 
 pub mod cli;
 pub mod cluster;
+pub mod compile;
 pub mod config;
 pub mod coordinator;
 pub mod experiments;

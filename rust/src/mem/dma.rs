@@ -39,6 +39,12 @@ impl Dma {
         }
     }
 
+    /// Restore the pristine post-construction state (zeroed transfer
+    /// stats; the beat width is configuration, not state).
+    pub fn reset(&mut self) {
+        self.stats = DmaStats::default();
+    }
+
     /// Stage an f32 array into TCDM; returns the transfer cycles.
     pub fn copy_in_f32(&mut self, tcdm: &mut Tcdm, addr: u32, data: &[f32]) -> u64 {
         tcdm.write_f32_slice(addr, data);

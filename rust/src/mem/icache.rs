@@ -86,6 +86,16 @@ impl ICache {
         self.ways.fill(None);
     }
 
+    /// Restore the pristine post-construction state: all ways empty, the
+    /// LRU clock and stats rewound. With the cache empty, re-used stream
+    /// ids cannot falsely hit ([`crate::cluster::Cluster::reset`] also
+    /// restarts its stream-id allocator).
+    pub fn reset(&mut self) {
+        self.flush();
+        self.tick = 0;
+        self.stats = ICacheStats::default();
+    }
+
     /// Event horizon for the fast-forward engine: always `None`. The
     /// cache is purely reactive — a miss's refill latency is carried by
     /// the fetching core's `FetchStall` countdown, which exposes its own

@@ -57,6 +57,16 @@ impl Tcdm {
         self.taken.fill(false);
     }
 
+    /// Restore the pristine post-construction state: zeroed memory, no
+    /// reservations, fresh stats. One `memset` of the (128 KiB default)
+    /// array — far cheaper than re-allocating the model per job, and
+    /// required for exactness: a fresh TCDM reads zero everywhere.
+    pub fn reset(&mut self) {
+        self.mem.fill(0);
+        self.taken.fill(false);
+        self.stats = TcdmStats::default();
+    }
+
     /// Event horizon for the fast-forward engine: always `None`. Bank
     /// reservations live for one cycle and arbitration is requester-
     /// driven — a pending access (scalar `WaitMem` retry or an active

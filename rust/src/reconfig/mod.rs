@@ -100,6 +100,20 @@ impl ReconfigStage {
         self.arch
     }
 
+    /// Restore the pristine post-construction state: split mode, default
+    /// CSR state, nothing outstanding, sequence numbers restarted.
+    /// [`crate::cluster::Cluster::reset`] calls this between jobs. Sets
+    /// the mode directly (no drain precondition, no arch check): the
+    /// caller has already discarded all in-flight state, and returning a
+    /// baseline cluster *to* split mode is always legal.
+    pub fn reset(&mut self) {
+        self.mode = Mode::Split;
+        self.vstate = [VState::default(); 2];
+        self.outstanding = [0; 2];
+        self.seq_counter = 0;
+        self.pending_merge.clear();
+    }
+
     /// Effective VLMAX for `hart` at E32 with the given LMUL under the
     /// current mode (merge mode doubles it for hart 0).
     pub fn vlmax(&self, hart: usize, lmul: Lmul) -> u32 {

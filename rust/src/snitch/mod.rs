@@ -15,6 +15,7 @@ use crate::mem::{ICache, Tcdm};
 use crate::metrics::Counters;
 use crate::reconfig::{DispatchResult, ReconfigStage};
 use crate::spatz::SpatzUnit;
+use std::sync::Arc;
 
 /// Externally visible core execution state.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -49,7 +50,9 @@ pub trait BarrierPort {
 /// The scalar core.
 pub struct Snitch {
     pub id: usize,
-    program: Program,
+    /// Shared, immutable instruction stream (the compile stage hands the
+    /// same `Arc` to every run of the same compiled job).
+    program: Arc<Program>,
     pc: usize,
     state: CoreState,
     /// icache stream tag (distinct per program load).
@@ -69,7 +72,7 @@ impl Snitch {
     pub fn new(id: usize, cfg: &ClusterConfig) -> Self {
         Self {
             id,
-            program: Program::idle(),
+            program: Arc::new(Program::idle()),
             pc: 0,
             state: CoreState::Halted,
             stream: id as u32,
@@ -86,8 +89,9 @@ impl Snitch {
 
     /// Load a program and reset execution state. `stream` must be unique
     /// per (core, program) pairing so icache tags don't falsely hit.
-    pub fn load(&mut self, program: Program, stream: u32) {
-        self.program = program;
+    /// Accepts an owned [`Program`] or a shared `Arc<Program>`.
+    pub fn load(&mut self, program: impl Into<Arc<Program>>, stream: u32) {
+        self.program = program.into();
         self.pc = 0;
         self.stream = stream;
         self.fetch_done = false;
@@ -97,6 +101,19 @@ impl Snitch {
         } else {
             CoreState::Ready
         };
+    }
+
+    /// Restore the pristine post-construction state (halted on the idle
+    /// program, nothing fetched or retired). [`crate::cluster::Cluster::reset`]
+    /// calls this between jobs so a reused core is indistinguishable from
+    /// a fresh [`Snitch::new`].
+    pub fn reset(&mut self) {
+        self.program = Arc::new(Program::idle());
+        self.pc = 0;
+        self.stream = self.id as u32;
+        self.fetch_done = false;
+        self.retired = 0;
+        self.state = CoreState::Halted;
     }
 
     pub fn state(&self) -> CoreState {

@@ -102,6 +102,20 @@ impl SpatzUnit {
         }
     }
 
+    /// Restore the pristine post-construction state: zeroed VRF, empty
+    /// queue, clear scoreboard, no in-flight LSU op or pending retires.
+    /// [`crate::cluster::Cluster::reset`] calls this between jobs so a
+    /// reused unit is indistinguishable from a fresh [`SpatzUnit::new`].
+    pub fn reset(&mut self) {
+        self.vrf.reset();
+        self.queue.clear();
+        self.scoreboard = [RegTiming::default(); 32];
+        self.fpu_busy_until = 0;
+        self.lsu = None;
+        self.pending_retires.clear();
+        self.busy_this_cycle = false;
+    }
+
     pub fn queue_has_space(&self) -> bool {
         self.queue.len() < self.queue_cap
     }

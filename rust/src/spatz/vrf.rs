@@ -26,6 +26,13 @@ impl Vrf {
         }
     }
 
+    /// Zero every register — the state a fresh [`Vrf::new`] starts in
+    /// (cluster reuse must not leak one job's register contents into the
+    /// next job's reads of never-written registers).
+    pub fn reset(&mut self) {
+        self.words.fill(0);
+    }
+
     pub fn elems_per_reg(&self) -> usize {
         self.elems_per_reg
     }

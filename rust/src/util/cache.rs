@@ -1,0 +1,90 @@
+//! Generic concurrent counting cache: the shared skeleton behind the
+//! fleet's result cache ([`crate::fleet::cache::ResultCache`]) and the
+//! compile-stage artifact cache ([`crate::compile::CompileCache`]).
+//!
+//! One mutex around the map is plenty for both users: entries are looked
+//! up far less often than the work they memoize takes to redo, and the
+//! hit/miss counters are atomics so metrics reads never contend. Both
+//! users key by a 64-bit content digest ([`crate::util::Fnv1a`]) and
+//! memoize *deterministic* work, so two threads racing on the same key
+//! insert identical values and last-write-wins is correct — a race costs
+//! one redundant recomputation, never correctness.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// A `u64 -> V` map with hit/miss accounting.
+pub struct CountingCache<V> {
+    map: Mutex<HashMap<u64, V>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl<V: Clone> CountingCache<V> {
+    pub fn new() -> Self {
+        Self {
+            map: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Look up a key, counting the hit or miss.
+    pub fn get(&self, key: u64) -> Option<V> {
+        let hit = self.map.lock().expect("cache poisoned").get(&key).cloned();
+        match hit {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        hit
+    }
+
+    /// Insert a freshly computed value (last-write-wins, see module doc).
+    pub fn insert(&self, key: u64, value: V) {
+        self.map.lock().expect("cache poisoned").insert(key, value);
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().expect("cache poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+impl<V: Clone> Default for CountingCache<V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_and_serves() {
+        let cache: CountingCache<String> = CountingCache::new();
+        assert!(cache.is_empty());
+        assert!(cache.get(1).is_none());
+        assert_eq!((cache.hits(), cache.misses()), (0, 1));
+        cache.insert(1, "one".into());
+        assert_eq!(cache.get(1).as_deref(), Some("one"));
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        assert_eq!(cache.len(), 1);
+        // last write wins
+        cache.insert(1, "uno".into());
+        assert_eq!(cache.get(1).as_deref(), Some("uno"));
+        assert_eq!(cache.len(), 1);
+    }
+}

@@ -1,0 +1,67 @@
+//! 64-bit FNV-1a: the crate's stable content-digest primitive.
+//!
+//! Tiny, dependency-free, and identical across platforms — the caches
+//! ([`crate::fleet::cache`] for whole-job results, [`crate::compile`]
+//! for compiled artifacts) need a *reproducible* digest, not a
+//! cryptographic one: a collision would only ever serve a stale entry
+//! for a colliding key, and the 64-bit space over at most millions of
+//! jobs makes that negligible.
+
+/// Incremental 64-bit FNV-1a hasher.
+pub struct Fnv1a {
+    state: u64,
+}
+
+impl Fnv1a {
+    const OFFSET_BASIS: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+    pub fn new() -> Self {
+        Self {
+            state: Self::OFFSET_BASIS,
+        }
+    }
+
+    /// Fold a byte slice into the digest.
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state ^= b as u64;
+            self.state = self.state.wrapping_mul(Self::PRIME);
+        }
+    }
+
+    /// The digest of everything written so far.
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_vector() {
+        // FNV-1a("a") reference value.
+        let mut h = Fnv1a::new();
+        h.write(b"a");
+        assert_eq!(h.finish(), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn incremental_equals_one_shot() {
+        let mut a = Fnv1a::new();
+        a.write(b"hello ");
+        a.write(b"world");
+        let mut b = Fnv1a::new();
+        b.write(b"hello world");
+        assert_eq!(a.finish(), b.finish());
+        assert_ne!(a.finish(), Fnv1a::new().finish());
+    }
+}

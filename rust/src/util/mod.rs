@@ -6,9 +6,13 @@
 //! stand-ins.
 
 pub mod bench;
+pub mod cache;
+pub mod fnv;
 pub mod prng;
 pub mod stats;
 pub mod testutil;
 
+pub use cache::CountingCache;
+pub use fnv::Fnv1a;
 pub use prng::SplitMix64;
 pub use stats::Summary;

@@ -13,6 +13,12 @@
 //!    the compiled C would execute, with real TCDM addresses placed in a
 //!    dedicated region so the scalar task contends with the vector
 //!    kernel on actual banks.
+//!
+//! Generation runs in the *compile stage* of the job pipeline
+//! ([`crate::compile`]): a `ScalarWorkload` is a pure function of
+//! `(ClusterConfig, iterations, seed)`, so mixed-job sweeps build each
+//! distinct co-task once and share the resulting program via the compile
+//! cache instead of re-emitting thousands of instructions per job.
 
 use crate::config::ClusterConfig;
 use crate::isa::{Instr, Program, ScalarOp};

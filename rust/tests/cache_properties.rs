@@ -1,11 +1,11 @@
 //! Property tests for the fleet result-cache digest (`fleet::cache::job_key`).
 //!
 //! The digest guards DESIGN.md's invariant that *scheduling must never
-//! change results*: execution-strategy knobs (the `[fleet]` section and
-//! the `[sim] engine` choice) are excluded from the key, while everything
-//! that determines a simulation outcome — cluster shape, PPA model,
-//! workload seed, cycle limit, trace flag, the job itself — must split
-//! the key space.
+//! change results*: execution-strategy knobs (the `[fleet]` and
+//! `[compile]` sections and the `[sim] engine` choice) are excluded from
+//! the key, while everything that determines a simulation outcome —
+//! cluster shape, PPA model, workload seed, cycle limit, trace flag, the
+//! job itself — must split the key space.
 
 use spatzformer::config::{ArchKind, Corner, EngineKind, SimConfig};
 use spatzformer::coordinator::{Job, ModePolicy};
@@ -39,7 +39,7 @@ fn arb_base(g: &mut Gen) -> SimConfig {
 
 #[test]
 fn prop_scheduling_knobs_never_change_the_key() {
-    check("fleet/engine knobs leave the key unchanged", 128, |g| {
+    check("fleet/compile/engine knobs leave the key unchanged", 128, |g| {
         let cfg = arb_base(g);
         let job = arb_job(g);
         let key = job_key(&cfg, &job);
@@ -47,6 +47,7 @@ fn prop_scheduling_knobs_never_change_the_key() {
         // mutate every scheduling knob at once with random values
         mutated.fleet.workers = g.int(0, 64);
         mutated.fleet.cache = g.bool();
+        mutated.compile.cache = g.bool();
         mutated.engine = if g.bool() {
             EngineKind::Naive
         } else {
@@ -55,11 +56,39 @@ fn prop_scheduling_knobs_never_change_the_key() {
         assert_eq!(
             job_key(&mutated, &job),
             key,
-            "scheduling knobs must not split the key space: {:?}/{:?}/{:?}",
+            "scheduling knobs must not split the key space: {:?}/{:?}/{:?}/{:?}",
             mutated.fleet.workers,
             mutated.fleet.cache,
+            mutated.compile.cache,
             mutated.engine
         );
+    });
+}
+
+#[test]
+fn prop_compile_key_tracks_artifact_identity() {
+    // The compile-stage key must ignore everything the result key tracks
+    // beyond the artifact inputs (PPA, cycle limit, trace, engine,
+    // scheduling sections) yet split on cluster shape, seed and job.
+    use spatzformer::compile::compile_key;
+    check("compile key = f(cluster, seed, job) only", 128, |g| {
+        let cfg = arb_base(g);
+        let job = arb_job(g);
+        let key = compile_key(&cfg.cluster, cfg.seed, &job);
+        // stability
+        assert_eq!(key, compile_key(&cfg.cluster, cfg.seed, &job));
+        // seed and shape sensitivity
+        assert_ne!(key, compile_key(&cfg.cluster, cfg.seed ^ (1 + g.rng.next_u64() % 0xFF), &job));
+        let mut wider = cfg.cluster.clone();
+        wider.vlen_bits *= 2;
+        assert_ne!(key, compile_key(&wider, cfg.seed, &job));
+        // job sensitivity via the Debug-encoding identity rule
+        let other = arb_job(g);
+        if format!("{job:?}") == format!("{other:?}") {
+            assert_eq!(key, compile_key(&cfg.cluster, cfg.seed, &other));
+        } else {
+            assert_ne!(key, compile_key(&cfg.cluster, cfg.seed, &other));
+        }
     });
 }
 

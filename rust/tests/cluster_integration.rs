@@ -69,7 +69,7 @@ fn scalar_traffic_contends_with_vector_traffic() {
         let mut inst = KernelId::Faxpy.build(&cfg.cluster, Deployment::SplitSingle, 5);
         if with_scalar {
             let w = coremark(&cfg.cluster, 2, 5);
-            inst.programs[1] = w.program;
+            inst.programs[1] = std::sync::Arc::new(w.program);
         }
         let mut cl = Cluster::new(cfg).unwrap();
         execute(&mut cl, &inst).unwrap();

@@ -29,19 +29,70 @@ fn fleet_matches_sequential_bytewise() {
     let storm = scenario::generate(ScenarioKind::Storm, base.cluster.arch, 0xD1CE, 16);
     let expected = sequential(&base, &storm.jobs);
 
-    // 4 workers with the cache on, then with it off: both must be
-    // byte-identical to the sequential run (cache transparency).
+    // 4 workers across every cache policy combination (result cache ×
+    // compile cache): all four must be byte-identical to the sequential
+    // run (cache transparency in both pipeline stages).
     for use_cache in [true, false] {
-        let fleet = Fleet::new(base.clone())
-            .unwrap()
-            .with_workers(4)
-            .with_cache(use_cache);
-        let out = fleet.run(&storm.jobs).unwrap();
-        assert_eq!(out.reports.len(), expected.len());
-        for (i, (got, want)) in out.reports.iter().zip(&expected).enumerate() {
-            assert_eq!(got, want, "job {i} (cache={use_cache}): {}", want.job_name);
+        for use_ccache in [true, false] {
+            let fleet = Fleet::new(base.clone())
+                .unwrap()
+                .with_workers(4)
+                .with_cache(use_cache)
+                .with_compile_cache(use_ccache);
+            let out = fleet.run(&storm.jobs).unwrap();
+            assert_eq!(out.reports.len(), expected.len());
+            for (i, (got, want)) in out.reports.iter().zip(&expected).enumerate() {
+                assert_eq!(
+                    got, want,
+                    "job {i} (cache={use_cache} compile-cache={use_ccache}): {}",
+                    want.job_name
+                );
+            }
         }
     }
+}
+
+#[test]
+fn shared_compile_cache_amortizes_across_workers() {
+    // A kernel-sweep repeats its grid: with the result cache off every
+    // job executes, but the fleet-wide compile cache must build each
+    // distinct (job, seed) combo at most once per concurrent race —
+    // bounded by worker count, as with the result cache.
+    let base = SimConfig::spatzformer();
+    let workers = 3;
+    let sweep = scenario::generate(ScenarioKind::KernelSweep, base.cluster.arch, 0xA11, 90);
+    let distinct = {
+        let mut keys: Vec<String> = sweep
+            .jobs
+            .iter()
+            .map(|fj| format!("{:?}/{:?}", fj.job, fj.seed))
+            .collect();
+        keys.sort();
+        keys.dedup();
+        keys.len() as u64
+    };
+    let out = Fleet::new(base)
+        .unwrap()
+        .with_workers(workers)
+        .with_cache(false)
+        .run(&sweep.jobs)
+        .unwrap();
+    assert_eq!(
+        out.metrics.compile_hits + out.metrics.compile_misses,
+        sweep.jobs.len() as u64,
+        "every executed job consults the compile cache"
+    );
+    assert!(
+        out.metrics.compile_misses >= distinct,
+        "misses {} < distinct combos {distinct}",
+        out.metrics.compile_misses
+    );
+    assert!(
+        out.metrics.compile_misses <= distinct * workers as u64,
+        "misses {} exceed the race bound ({distinct} x {workers})",
+        out.metrics.compile_misses
+    );
+    assert!(out.metrics.compile_hit_rate() > 0.0);
 }
 
 #[test]

@@ -202,7 +202,7 @@ fn prop_asm_roundtrip_on_generated_kernels() {
                 let text = asm::print_program(p);
                 let q = asm::parse_program(&text)
                     .unwrap_or_else(|e| panic!("{} {}: {e}", kernel.name(), deploy.name()));
-                assert_eq!(p, &q, "{} {}", kernel.name(), deploy.name());
+                assert_eq!(p.as_ref(), &q, "{} {}", kernel.name(), deploy.name());
             }
         }
     }

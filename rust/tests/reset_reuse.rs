@@ -1,0 +1,165 @@
+//! The in-place cluster-reuse contract: a job executed on a cluster that
+//! already ran arbitrary other work and was `Cluster::reset` must be
+//! **byte-identical** (exact `JobReport` equality, priced energy
+//! included) to the same job on a freshly constructed cluster — on both
+//! cycle-loop engines, across the kernel × deployment grid and mixed
+//! jobs, and for seeded random job sequences.
+//!
+//! A fresh `Coordinator` per job is the oracle: its cluster has never
+//! run anything, so its first submit is exactly the old
+//! allocate-per-job pipeline. The reused side pushes every job through
+//! one coordinator, so by the time the last job runs its cluster has
+//! been polluted by — and reset after — every preceding job.
+
+use spatzformer::config::{EngineKind, SimConfig};
+use spatzformer::coordinator::{Coordinator, Job, JobReport, ModePolicy};
+use spatzformer::fleet::scenario::{self, ScenarioKind};
+use spatzformer::kernels::KernelId;
+use spatzformer::util::testutil::check;
+
+fn cfg_with(engine: EngineKind, baseline: bool) -> SimConfig {
+    let mut cfg = if baseline {
+        SimConfig::baseline()
+    } else {
+        SimConfig::spatzformer()
+    };
+    cfg.engine = engine;
+    cfg
+}
+
+/// Oracle: every job on a brand-new coordinator (fresh cluster).
+fn fresh_reports(cfg: &SimConfig, jobs: &[Job]) -> Vec<JobReport> {
+    jobs.iter()
+        .map(|job| {
+            Coordinator::new(cfg.clone())
+                .unwrap()
+                .submit(job)
+                .unwrap_or_else(|e| panic!("{}: {e:#}", job.name()))
+        })
+        .collect()
+}
+
+/// Subject: all jobs through one coordinator (one reset-reused cluster).
+fn reused_reports(cfg: &SimConfig, jobs: &[Job]) -> Vec<JobReport> {
+    let mut coord = Coordinator::new(cfg.clone()).unwrap();
+    jobs.iter()
+        .map(|job| {
+            coord
+                .submit(job)
+                .unwrap_or_else(|e| panic!("{}: {e:#}", job.name()))
+        })
+        .collect()
+}
+
+fn assert_identical(cfg: &SimConfig, jobs: &[Job], label: &str) {
+    let fresh = fresh_reports(cfg, jobs);
+    let reused = reused_reports(cfg, jobs);
+    for (i, (f, r)) in fresh.iter().zip(&reused).enumerate() {
+        assert_eq!(
+            f, r,
+            "{label} [{}]: job {i} ({}) diverges between fresh and reused clusters",
+            cfg.engine.name(),
+            f.job_name
+        );
+    }
+}
+
+#[test]
+fn grid_reuse_is_byte_identical_on_spatzformer() {
+    // Every kernel through both forced deployments, then mixed with a
+    // scalar co-task — consecutive jobs deliberately alternate split and
+    // merge shapes so each reset has a differently-polluted cluster to
+    // scrub (mode, VRFs, TCDM contents, icache, barrier episodes).
+    let mut jobs = Vec::new();
+    for kernel in KernelId::all() {
+        for policy in [ModePolicy::Split, ModePolicy::Merge] {
+            jobs.push(Job::Kernel { kernel, policy });
+        }
+        jobs.push(Job::Mixed {
+            kernel,
+            policy: ModePolicy::Auto,
+            coremark_iterations: 1,
+        });
+    }
+    for engine in [EngineKind::Fast, EngineKind::Naive] {
+        assert_identical(&cfg_with(engine, false), &jobs, "spatzformer grid");
+    }
+}
+
+#[test]
+fn grid_reuse_is_byte_identical_on_baseline() {
+    let mut jobs = Vec::new();
+    for kernel in KernelId::all() {
+        jobs.push(Job::Kernel { kernel, policy: ModePolicy::Split });
+        jobs.push(Job::Mixed {
+            kernel,
+            policy: ModePolicy::Auto,
+            coremark_iterations: 1,
+        });
+    }
+    for engine in [EngineKind::Fast, EngineKind::Naive] {
+        assert_identical(&cfg_with(engine, true), &jobs, "baseline grid");
+    }
+}
+
+#[test]
+fn prop_random_job_sequences_reuse_identical() {
+    // Seeded random storms (mixed shapes, policies, iteration counts and
+    // per-job workload seeds drawn from a pool): one coordinator with
+    // per-job set_seed vs a fresh coordinator per job, random engine.
+    check("reused cluster == fresh cluster over random sequences", 3, |g| {
+        let engine = if g.bool() { EngineKind::Fast } else { EngineKind::Naive };
+        let cfg = cfg_with(engine, false);
+        let seed = g.rng.next_u64();
+        let storm = scenario::generate(ScenarioKind::Storm, cfg.cluster.arch, seed, 8);
+
+        let expected: Vec<JobReport> = storm
+            .jobs
+            .iter()
+            .map(|fj| {
+                let mut job_cfg = cfg.clone();
+                if let Some(s) = fj.seed {
+                    job_cfg.seed = s;
+                }
+                Coordinator::new(job_cfg).unwrap().submit(&fj.job).unwrap()
+            })
+            .collect();
+
+        let mut coord = Coordinator::new(cfg.clone()).unwrap();
+        for (i, fj) in storm.jobs.iter().enumerate() {
+            coord.set_seed(fj.seed.unwrap_or(cfg.seed));
+            let got = coord.submit(&fj.job).unwrap();
+            assert_eq!(
+                got, expected[i],
+                "storm seed={seed:#x} engine={} job {i}",
+                engine.name()
+            );
+        }
+    });
+}
+
+#[test]
+fn compile_cache_state_does_not_leak_across_seeds() {
+    // One coordinator, alternating seeds: artifacts for both seeds stay
+    // cached simultaneously and keep producing byte-identical reports.
+    let job = Job::Mixed {
+        kernel: KernelId::Fft,
+        policy: ModePolicy::Merge,
+        coremark_iterations: 2,
+    };
+    let mut coord = Coordinator::new(SimConfig::spatzformer()).unwrap();
+    let mut per_seed: Vec<(u64, JobReport)> = Vec::new();
+    for &seed in &[1u64, 2, 1, 2, 1] {
+        coord.set_seed(seed);
+        let r = coord.submit(&job).unwrap();
+        let prev = per_seed.iter().position(|(s, _)| *s == seed);
+        match prev {
+            Some(i) => assert_eq!(per_seed[i].1, r, "seed {seed} must replay exactly"),
+            None => per_seed.push((seed, r)),
+        }
+    }
+    assert_eq!(per_seed.len(), 2, "two seeds, two cached artifacts");
+    let cache = coord.compile_cache().unwrap();
+    assert_eq!(cache.misses(), 2, "each seed compiles once");
+    assert_eq!(cache.hits(), 3);
+}

@@ -4,6 +4,8 @@
 //! spatzformer run   --kernel fft --mode merge [--arch spatzformer]
 //! spatzformer mixed --kernel fmatmul --mode auto [--iters 2]
 //! spatzformer fleet --workers 8 --jobs 256 --seed 7 [--scenario storm] [--no-cache]
+//! spatzformer serve --addr 127.0.0.1:9738 --workers 4 --queue-depth 256
+//! spatzformer loadgen --addr 127.0.0.1:9738 --clients 4 --requests 32 [--shutdown]
 //! spatzformer bench fig2-perf|fig2-energy|fig2-mixed|fig2-fleet|area|fmax|all
 //! spatzformer ppa
 //! spatzformer verify [--artifacts DIR]
@@ -16,6 +18,7 @@ use crate::experiments;
 use crate::fleet::{self, Fleet, ScenarioKind};
 use crate::isa::asm;
 use crate::kernels::{Deployment, KernelId};
+use crate::server::{self, loadgen};
 
 const USAGE: &str = "\
 spatzformer — reconfigurable dual-core RVV cluster simulator (paper reproduction)
@@ -29,6 +32,11 @@ COMMANDS:
   fleet    batch-simulate a generated scenario across N simulated clusters
            [--scenario <kernel-sweep|mixed-sweep|storm>] [--workers N]
            [--jobs M] [--no-cache] [--no-compile-cache]
+  serve    run spatzd, the resident simulation service (newline-delimited
+           JSON over TCP) [--addr HOST:PORT] [--workers N] [--queue-depth D]
+  loadgen  replay a deterministic request mix against a running spatzd
+           [--addr HOST:PORT] [--clients C] [--requests R] [--scenario S]
+           [--smoke] [--shutdown]
   bench    regenerate a paper artifact     <fig2-perf|fig2-energy|fig2-mixed|fig2-fleet|area|fmax|all>
   ppa      print the area/frequency model
   verify   cross-check all kernels vs the XLA artifacts [--artifacts DIR]
@@ -49,11 +57,24 @@ FLEET OPTIONS:
   --no-cache                      disable the content-addressed result cache
   --no-compile-cache              disable the shared compile (artifact) cache
 
+SERVE OPTIONS:
+  --addr <host:port>              listen address (default: server.addr; port 0 = ephemeral)
+  --workers <N>                   worker threads / simulated clusters (default: server.workers, 0 = auto)
+  --queue-depth <D>               bounded submission-queue depth (full => explicit 429 reject)
+
+LOADGEN OPTIONS:
+  --addr <host:port>              target daemon (default: server.addr)
+  --clients <C>                   concurrent connections (default 4)
+  --requests <R>                  requests per client (default 32)
+  --scenario <name>               request mix generator (default storm)
+  --smoke                         tiny deterministic run (2 clients x 6 requests)
+  --shutdown                      send {\"op\":\"shutdown\"} after the run
+
 KERNELS: fmatmul conv2d fft fdotp faxpy fdct
 ";
 
 /// Options that take no value (presence == true).
-const BOOL_FLAGS: &[&str] = &["no-cache", "no-compile-cache"];
+const BOOL_FLAGS: &[&str] = &["no-cache", "no-compile-cache", "smoke", "shutdown"];
 
 struct Args {
     positional: Vec<String>,
@@ -237,6 +258,81 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = build_config(args)?;
+    if let Some(addr) = args.get("addr") {
+        cfg.server.addr = addr.to_string();
+    }
+    if let Some(w) = args.get("workers") {
+        cfg.server.workers = w
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad --workers: {w}"))?;
+    }
+    if let Some(d) = args.get("queue-depth") {
+        cfg.server.queue_depth = d
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad --queue-depth: {d}"))?;
+    }
+    let queue_depth = cfg.server.queue_depth;
+    let running = server::serve(cfg)?;
+    // The "listening on" line is the daemon's contract with scripts (CI
+    // smoke parses the ephemeral port out of it) — keep it stable.
+    println!("spatzd listening on {}", running.addr());
+    println!(
+        "workers        : {} (queue depth {})",
+        running.workers(),
+        queue_depth
+    );
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+    let snapshot = running.wait()?;
+    println!("spatzd stopped");
+    println!("{}", snapshot.render());
+    Ok(())
+}
+
+fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
+    let cfg = build_config(args)?;
+    let smoke = args.get("smoke").is_some();
+    let mut opts = loadgen::LoadgenOptions {
+        addr: args
+            .get("addr")
+            .unwrap_or(cfg.server.addr.as_str())
+            .to_string(),
+        seed: cfg.seed,
+        arch: cfg.cluster.arch,
+        send_shutdown: args.get("shutdown").is_some(),
+        ..Default::default()
+    };
+    if smoke {
+        opts.clients = 2;
+        opts.requests = 6;
+    }
+    if let Some(c) = args.get("clients") {
+        opts.clients = c
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad --clients: {c}"))?;
+    }
+    if let Some(r) = args.get("requests") {
+        opts.requests = r
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad --requests: {r}"))?;
+    }
+    if let Some(name) = args.get("scenario") {
+        opts.scenario = ScenarioKind::from_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown scenario: {name} (see `spatzformer help`)"))?;
+    }
+    let report = loadgen::run(&opts)?;
+    println!("{}", report.render());
+    anyhow::ensure!(
+        report.ok > 0,
+        "no request succeeded ({} rejected, {} errors)",
+        report.rejected,
+        report.errors
+    );
+    Ok(())
+}
+
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     let what = args
         .positional
@@ -355,6 +451,8 @@ pub fn main() -> i32 {
         "run" => cmd_run(&args),
         "mixed" => cmd_mixed(&args),
         "fleet" => cmd_fleet(&args),
+        "serve" => cmd_serve(&args),
+        "loadgen" => cmd_loadgen(&args),
         "bench" => cmd_bench(&args),
         "ppa" => cmd_ppa(&args),
         "verify" => cmd_verify(&args),
@@ -416,6 +514,11 @@ mod tests {
         assert_eq!(a.get("no-cache"), Some("true"));
         let a = args(&["fleet", "--no-compile-cache"]);
         assert_eq!(a.get("no-compile-cache"), Some("true"));
+        // loadgen's value-less flags parse alongside valued options
+        let a = args(&["loadgen", "--smoke", "--shutdown", "--addr", "127.0.0.1:0"]);
+        assert_eq!(a.get("smoke"), Some("true"));
+        assert_eq!(a.get("shutdown"), Some("true"));
+        assert_eq!(a.get("addr"), Some("127.0.0.1:0"));
     }
 
     #[test]

@@ -114,6 +114,12 @@ impl Cluster {
     pub fn stage_u32(&mut self, addr: u32, data: &[u32]) {
         self.dma_cycles += self.dma.copy_in_u32(&mut self.tcdm, addr, data);
     }
+    /// Stage one pre-serialized range of a compile-stage staging image
+    /// ([`crate::kernels::StagingImage`]): a bounded memcpy with the
+    /// same DMA-cycle accounting as the per-array staging calls above.
+    pub fn stage_bytes(&mut self, addr: u32, data: &[u8]) {
+        self.dma_cycles += self.dma.copy_in_bytes(&mut self.tcdm, addr, data);
+    }
 
     /// Load programs onto the cores. Validates them against the
     /// architecture (the baseline cluster rejects `setmode`) and the

@@ -30,7 +30,7 @@
 use crate::config::{ArchKind, ClusterConfig, SimConfig};
 use crate::coordinator::{Job, ModePolicy};
 use crate::isa::Program;
-use crate::kernels::{Deployment, KernelId, KernelInstance};
+use crate::kernels::{Deployment, KernelId, KernelInstance, StagingImage};
 use crate::util::{CountingCache, Fnv1a};
 use crate::workloads::coremark;
 use std::sync::Arc;
@@ -50,6 +50,12 @@ pub struct CompiledJob {
     /// Kernel staging set, artifact-ordered inputs, output locations and
     /// FLOP count (shared — the execute stage never mutates it).
     pub inst: Arc<KernelInstance>,
+    /// Pre-serialized TCDM input image: the staging set flattened to
+    /// little-endian bytes once at compile time, so every execute —
+    /// in particular every compile-cache hit — replays staging as a
+    /// bounded memcpy per array instead of a per-word DMA loop, with
+    /// identical cycle accounting (see [`StagingImage`]).
+    pub staging: StagingImage,
     /// Scalar co-task work proof (mixed jobs).
     pub coremark_checksum: Option<u16>,
     /// Whether core 1 runs a scalar co-task (mixed job shape).
@@ -174,12 +180,14 @@ fn compile_with_cfg_key(cfg: &SimConfig, key: u64, job: &Job) -> anyhow::Result<
             let inst = kernel.build(&cfg.cluster, deploy, cfg.seed);
             let programs = [inst.programs[0].clone(), inst.programs[1].clone()];
             let barrier_mask = validate_programs(&cfg.cluster, deploy, &programs)?;
+            let staging = StagingImage::from_instance(&inst);
             Ok(CompiledJob {
                 job_name: job.name(),
                 kernel,
                 deploy,
                 programs,
                 inst: Arc::new(inst),
+                staging,
                 coremark_checksum: None,
                 mixed: false,
                 barrier_mask,
@@ -197,12 +205,14 @@ fn compile_with_cfg_key(cfg: &SimConfig, key: u64, job: &Job) -> anyhow::Result<
             // kernel occupies core 0; the scalar task takes core 1
             let programs = [inst.programs[0].clone(), Arc::new(scalar.program)];
             let barrier_mask = validate_programs(&cfg.cluster, deploy, &programs)?;
+            let staging = StagingImage::from_instance(&inst);
             Ok(CompiledJob {
                 job_name: job.name(),
                 kernel,
                 deploy,
                 programs,
                 inst: Arc::new(inst),
+                staging,
                 coremark_checksum: Some(scalar.checksum),
                 mixed: true,
                 barrier_mask,
@@ -419,6 +429,21 @@ mod tests {
         // mixed jobs: kernel on core 0, scalar co-task on core 1, no barriers
         let mixed = compile(&cfg, &mixed_job(1)).unwrap();
         assert_eq!(mixed.barrier_mask, 0);
+    }
+
+    #[test]
+    fn compiled_jobs_carry_a_complete_staging_image() {
+        let cfg = SimConfig::spatzformer();
+        for job in [kernel_job(), mixed_job(2)] {
+            let cj = compile(&cfg, &job).unwrap();
+            assert_eq!(
+                cj.staging.ranges.len(),
+                cj.inst.staging_f32.len() + cj.inst.staging_u32.len()
+            );
+            let want: usize = cj.inst.staging_f32.iter().map(|(_, d)| d.len() * 4).sum::<usize>()
+                + cj.inst.staging_u32.iter().map(|(_, d)| d.len() * 4).sum::<usize>();
+            assert_eq!(cj.staging.bytes(), want);
+        }
     }
 
     #[test]

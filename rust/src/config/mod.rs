@@ -321,6 +321,35 @@ impl Default for CompileConfig {
     }
 }
 
+/// `spatzd` simulation-service knobs — see [`crate::server`].
+///
+/// Like `[fleet]`, `[compile]` and `[sim] engine`, this section is
+/// deliberately *not* part of any cache digest: where a cluster is
+/// served from, how many requests may wait, and how many workers drain
+/// them must never change a simulation outcome
+/// (`rust/tests/cache_properties.rs` holds the digests to this).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServerConfig {
+    /// Listen address, `HOST:PORT` (port 0 = ephemeral, for tests/CI).
+    pub addr: String,
+    /// Bounded submission-queue depth; a request that does not fit is
+    /// refused with an explicit `429`-style response (admission control).
+    pub queue_depth: usize,
+    /// Worker threads, one long-lived simulated cluster each (0 = one
+    /// per available hardware thread).
+    pub workers: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:9738".to_string(),
+            queue_depth: 256,
+            workers: 0,
+        }
+    }
+}
+
 /// Top-level simulation config.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SimConfig {
@@ -330,6 +359,8 @@ pub struct SimConfig {
     pub fleet: FleetConfig,
     /// Compile-stage section.
     pub compile: CompileConfig,
+    /// Simulation-service section.
+    pub server: ServerConfig,
     /// Cycle-loop engine (`[sim] engine = "fast" | "naive"`). Results are
     /// engine-independent by contract; see `rust/tests/engine_differential.rs`.
     pub engine: EngineKind,
@@ -348,6 +379,7 @@ impl Default for SimConfig {
             ppa: PpaConfig::default(),
             fleet: FleetConfig::default(),
             compile: CompileConfig::default(),
+            server: ServerConfig::default(),
             engine: EngineKind::Fast,
             seed: 0xC0FFEE,
             trace: false,
@@ -440,6 +472,13 @@ impl SimConfig {
             "fleet.workers" => self.fleet.workers = value.as_usize().ok_or_else(bad)?,
             "fleet.cache" => self.fleet.cache = value.as_bool().ok_or_else(bad)?,
             "compile.cache" => self.compile.cache = value.as_bool().ok_or_else(bad)?,
+            "server.addr" => {
+                self.server.addr = value.as_str().ok_or_else(bad)?.to_string()
+            }
+            "server.queue_depth" => {
+                self.server.queue_depth = value.as_usize().ok_or_else(bad)?
+            }
+            "server.workers" => self.server.workers = value.as_usize().ok_or_else(bad)?,
             "sim.engine" => {
                 self.engine = value
                     .as_str()
@@ -467,6 +506,14 @@ impl SimConfig {
         anyhow::ensure!(
             (0.0..=1.0).contains(&self.ppa.idle_power_fraction),
             "idle_power_fraction must be in [0,1]"
+        );
+        anyhow::ensure!(
+            self.server.queue_depth >= 1,
+            "server.queue_depth must be >= 1"
+        );
+        anyhow::ensure!(
+            !self.server.addr.is_empty(),
+            "server.addr must not be empty"
         );
         Ok(())
     }
@@ -532,6 +579,23 @@ mod tests {
         assert!(cfg.compile.cache);
         assert!(cfg.apply("compile.cache", &Value::Int(1)).is_err());
         assert!(cfg.apply("compile.bogus", &Value::Bool(true)).is_err());
+    }
+
+    #[test]
+    fn apply_server_keys() {
+        let mut cfg = SimConfig::default();
+        assert_eq!(cfg.server.workers, 0); // auto
+        assert!(cfg.server.queue_depth >= 1);
+        cfg.apply("server.addr", &Value::Str("0.0.0.0:7000".into())).unwrap();
+        cfg.apply("server.queue_depth", &Value::Int(32)).unwrap();
+        cfg.apply("server.workers", &Value::Int(4)).unwrap();
+        assert_eq!(cfg.server.addr, "0.0.0.0:7000");
+        assert_eq!(cfg.server.queue_depth, 32);
+        assert_eq!(cfg.server.workers, 4);
+        assert!(cfg.apply("server.addr", &Value::Int(1)).is_err());
+        assert!(cfg.apply("server.bogus", &Value::Int(1)).is_err());
+        cfg.server.queue_depth = 0;
+        assert!(cfg.validate().is_err(), "zero-depth queue rejected");
     }
 
     #[test]

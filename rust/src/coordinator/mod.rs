@@ -43,7 +43,7 @@ pub enum ModePolicy {
 }
 
 /// A unit of work for the coordinator.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Job {
     /// Run one vector kernel on the whole cluster.
     Kernel { kernel: KernelId, policy: ModePolicy },
@@ -227,6 +227,7 @@ impl Coordinator {
             &compiled.inst,
             compiled.programs.clone(),
             compiled.barrier_mask,
+            &compiled.staging,
         )?;
         price_run(&mut metrics, &self.cfg, self.cfg.cluster.arch);
         let verified = self.verify(&compiled.inst, &outputs)?;

@@ -7,6 +7,62 @@ use crate::metrics::Table;
 use std::collections::BTreeMap;
 use std::time::Duration;
 
+/// The p50/p95/p99 latency triple — one shape shared by fleet batch
+/// summaries, the `spatzd` server's `metrics` response, and the
+/// `loadgen` client report, so every layer of the stack quotes tail
+/// latency the same way.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyPercentiles {
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+}
+
+impl LatencyPercentiles {
+    /// Percentiles over millisecond samples (`None` when empty). One
+    /// sort serves all three ranks — `util::stats::Summary::percentile`
+    /// re-sorts per call, which triples the work on every metrics
+    /// snapshot; the linear-interpolation semantics here are identical.
+    pub fn from_samples_ms(samples_ms: &[f64]) -> Option<Self> {
+        if samples_ms.is_empty() {
+            return None;
+        }
+        let mut sorted = samples_ms.to_vec();
+        sorted.sort_by(|a, b| {
+            a.partial_cmp(b).expect("latency samples are finite")
+        });
+        let pct = |p: f64| {
+            let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+            let lo = rank.floor() as usize;
+            let hi = rank.ceil() as usize;
+            if lo == hi {
+                sorted[lo]
+            } else {
+                let frac = rank - lo as f64;
+                sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+            }
+        };
+        Some(Self {
+            p50_ms: pct(50.0),
+            p95_ms: pct(95.0),
+            p99_ms: pct(99.0),
+        })
+    }
+
+    pub fn from_durations(samples: &[Duration]) -> Option<Self> {
+        let ms: Vec<f64> = samples.iter().map(|d| d.as_secs_f64() * 1e3).collect();
+        Self::from_samples_ms(&ms)
+    }
+
+    /// `p50/p95/p99 = 0.8/2.3/4.1 ms` — the shared rendering.
+    pub fn render(&self) -> String {
+        format!(
+            "p50/p95/p99 = {:.2}/{:.2}/{:.2} ms",
+            self.p50_ms, self.p95_ms, self.p99_ms
+        )
+    }
+}
+
 /// What one worker did during a fleet run.
 #[derive(Debug, Clone, Default)]
 pub struct WorkerStats {
@@ -20,6 +76,10 @@ pub struct WorkerStats {
     pub sim_cycles: u64,
     /// Wall-clock time spent inside job execution (vs idle/stealing).
     pub busy: Duration,
+    /// Per-job wall-clock latency samples (cache hits included — a
+    /// served job still has a latency), pooled across workers for the
+    /// batch-level percentiles.
+    pub latencies: Vec<Duration>,
 }
 
 /// Aggregate metrics of one [`crate::fleet::Fleet::run`] call.
@@ -108,6 +168,18 @@ impl FleetMetrics {
         u.iter().sum::<f64>() / u.len() as f64
     }
 
+    /// Per-job latency percentiles pooled over every worker's samples
+    /// (`None` for an empty batch) — the same p50/p95/p99 shape the
+    /// `spatzd` server reports per request.
+    pub fn latency(&self) -> Option<LatencyPercentiles> {
+        let all: Vec<Duration> = self
+            .per_worker
+            .iter()
+            .flat_map(|w| w.latencies.iter().copied())
+            .collect();
+        LatencyPercentiles::from_durations(&all)
+    }
+
     /// Headline summary block (the acceptance numbers).
     pub fn summary(&self) -> String {
         format!(
@@ -118,6 +190,7 @@ impl FleetMetrics {
              Msim-cycles/s  : {:.2}\n\
              cache          : {} hits / {} misses ({:.1}% hit rate)\n\
              compile cache  : {} hits / {} misses ({:.1}% hit rate)\n\
+             latency        : {}\n\
              steals         : {}\n\
              utilization    : {:.1}% mean",
             self.workers,
@@ -131,6 +204,8 @@ impl FleetMetrics {
             self.compile_hits,
             self.compile_misses,
             self.compile_hit_rate() * 100.0,
+            self.latency()
+                .map_or_else(|| "n/a".to_string(), |l| l.render()),
             self.steals,
             self.mean_utilization() * 100.0,
         )
@@ -212,6 +287,7 @@ mod tests {
                     stolen: 1,
                     sim_cycles: 300_000,
                     busy: Duration::from_millis(400),
+                    latencies: (1..=6).map(Duration::from_millis).collect(),
                 },
                 WorkerStats {
                     jobs: 4,
@@ -219,6 +295,7 @@ mod tests {
                     stolen: 0,
                     sim_cycles: 100_000,
                     busy: Duration::from_millis(300),
+                    latencies: (7..=10).map(Duration::from_millis).collect(),
                 },
             ],
         }
@@ -254,8 +331,25 @@ mod tests {
         assert!(s.contains("jobs/sec"));
         assert!(s.contains("hit rate"));
         assert!(s.contains("compile cache"));
+        assert!(s.contains("p50/p95/p99"), "{s}");
         let t = m.render_workers();
         assert!(t.contains("w0"));
         assert!(t.contains("w1"));
+    }
+
+    #[test]
+    fn latency_percentiles_pool_across_workers() {
+        let m = metrics();
+        // samples are 1..=10 ms pooled over both workers
+        let l = m.latency().unwrap();
+        assert!((l.p50_ms - 5.5).abs() < 1e-9, "{l:?}");
+        assert!(l.p95_ms > l.p50_ms && l.p99_ms >= l.p95_ms, "{l:?}");
+        assert!((l.p99_ms - 9.91).abs() < 0.1, "{l:?}");
+        assert!(l.render().contains("p50/p95/p99"));
+        // empty batch has no latency line
+        assert!(FleetMetrics::default().latency().is_none());
+        assert!(LatencyPercentiles::from_samples_ms(&[]).is_none());
+        let one = LatencyPercentiles::from_samples_ms(&[2.0]).unwrap();
+        assert_eq!((one.p50_ms, one.p95_ms, one.p99_ms), (2.0, 2.0, 2.0));
     }
 }

@@ -33,10 +33,12 @@
 
 pub mod cache;
 pub mod metrics;
+pub mod queue;
 pub mod scenario;
 
 pub use cache::ResultCache;
-pub use metrics::{FleetMetrics, WorkerStats};
+pub use metrics::{FleetMetrics, LatencyPercentiles, WorkerStats};
+pub use queue::{JobQueue, SubmitError, WorkerPool};
 pub use scenario::{Scenario, ScenarioKind};
 
 use crate::compile::CompileCache;
@@ -249,8 +251,9 @@ fn next_job(
 /// Simulate (or cache-serve) one job on the worker's reused cluster.
 /// The worker's [`Coordinator`] is created lazily on its first simulated
 /// job and then re-seeded per job — the cluster inside it is reset in
-/// place, never re-allocated.
-fn run_job(
+/// place, never re-allocated. Shared by the batch scheduler below and
+/// the long-lived [`queue::WorkerPool`] the `spatzd` server drains.
+pub(crate) fn run_job(
     base: &SimConfig,
     use_cache: bool,
     cache: &ResultCache,
@@ -320,7 +323,9 @@ fn worker_loop(
             &fj,
             &mut stats,
         );
-        stats.busy += t0.elapsed();
+        let elapsed = t0.elapsed();
+        stats.busy += elapsed;
+        stats.latencies.push(elapsed);
         stats.jobs += 1;
         out.push((idx, result.map_err(|e| format!("{e:#}"))));
     }
@@ -376,6 +381,16 @@ mod tests {
         // distinct seeds -> all simulated, no cache hits
         assert_eq!(out.metrics.cache_hits, 0);
         assert_eq!(out.metrics.cache_misses, 5);
+        // every job contributed a latency sample
+        assert_eq!(
+            out.metrics
+                .per_worker
+                .iter()
+                .map(|w| w.latencies.len())
+                .sum::<usize>(),
+            5
+        );
+        assert!(out.metrics.latency().is_some());
         assert!(out.reports.iter().all(|r| r.metrics.cycles > 0));
         assert!(out.metrics.sim_cycles_total > 0);
         assert_eq!(

@@ -1,0 +1,441 @@
+//! Queue-draining fleet entry point, decoupled from fixed batches.
+//!
+//! [`super::Fleet::run`] is batch-shaped: it deals a known job list into
+//! per-worker deques, runs it to completion and tears the workers down.
+//! A resident service ([`crate::server`]) has no batch — requests arrive
+//! over time and must be admitted, executed and answered individually —
+//! so this module provides the long-lived form of the same machinery:
+//!
+//! * [`JobQueue`] — a **bounded** MPMC submission queue with
+//!   all-or-nothing admission: [`JobQueue::try_submit_batch`] either
+//!   enqueues every job of a request or rejects the whole request
+//!   immediately (the server turns that into an explicit `429`-style
+//!   response; nothing ever blocks or silently drops);
+//! * [`WorkerPool`] — N persistent worker threads, each owning one
+//!   lazily-built, re-seeded [`Coordinator`] (one simulated cluster,
+//!   reset in place per job), all sharing one result cache and one
+//!   `Arc`'d compile cache — exactly the hot state the batch fleet
+//!   keeps, but kept warm *across requests* instead of within a batch;
+//! * [`JobReceipt`] — a per-job completion handle the submitter waits
+//!   on ([`JobReceipt::wait`]).
+//!
+//! **Determinism.** Workers run jobs through the same (crate-private)
+//! `run_job` path as the batch scheduler, so a pooled job's
+//! [`JobReport`] is byte-identical to a direct [`Coordinator::submit`]
+//! of the same `(SimConfig, Job)` — the server's loopback integration
+//! test (`rust/tests/server_integration.rs`) asserts this end to end.
+//!
+//! **Shutdown.** [`WorkerPool::shutdown`] closes the queue and joins
+//! the workers; jobs already admitted still complete and answer their
+//! receipts (drain semantics), while later submissions are refused with
+//! [`SubmitError::ShuttingDown`].
+
+use crate::compile::CompileCache;
+use crate::config::SimConfig;
+use crate::coordinator::{Coordinator, JobReport};
+use crate::fleet::{cache::ResultCache, metrics::WorkerStats, FleetJob};
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Why a submission was refused. Both variants are immediate — the
+/// queue never blocks a submitter.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Admitting the request would overflow the bounded queue.
+    QueueFull { depth: usize, queued: usize, requested: usize },
+    /// The pool is shutting down; no new work is admitted.
+    ShuttingDown,
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::QueueFull { depth, queued, requested } => write!(
+                f,
+                "queue full: {queued}/{depth} queued, cannot admit {requested} more"
+            ),
+            SubmitError::ShuttingDown => write!(f, "shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// One admitted job awaiting a worker.
+struct Ticket {
+    fj: FleetJob,
+    tx: mpsc::Sender<Result<JobReport, String>>,
+}
+
+struct QueueState {
+    tickets: VecDeque<Ticket>,
+    open: bool,
+}
+
+/// Completion handle for one admitted job.
+#[derive(Debug)]
+pub struct JobReceipt {
+    rx: mpsc::Receiver<Result<JobReport, String>>,
+}
+
+impl JobReceipt {
+    /// Block until the job completes. Job failures (already rendered to
+    /// strings to cross the worker thread) and a dead worker both
+    /// surface as errors.
+    pub fn wait(self) -> anyhow::Result<JobReport> {
+        match self.rx.recv() {
+            Ok(Ok(report)) => Ok(report),
+            Ok(Err(msg)) => Err(anyhow::anyhow!("{msg}")),
+            Err(_) => Err(anyhow::anyhow!("worker exited before completing the job")),
+        }
+    }
+}
+
+/// The bounded submission queue. Usable standalone (tests) but normally
+/// owned by a [`WorkerPool`] behind an `Arc`.
+pub struct JobQueue {
+    state: Mutex<QueueState>,
+    ready: Condvar,
+    depth: usize,
+    in_flight: AtomicUsize,
+    completed: AtomicU64,
+}
+
+impl JobQueue {
+    /// A queue admitting at most `depth` waiting jobs (at least 1).
+    pub fn new(depth: usize) -> Self {
+        Self {
+            state: Mutex::new(QueueState {
+                tickets: VecDeque::new(),
+                open: true,
+            }),
+            ready: Condvar::new(),
+            depth: depth.max(1),
+            in_flight: AtomicUsize::new(0),
+            completed: AtomicU64::new(0),
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Jobs admitted but not yet claimed by a worker.
+    pub fn queued(&self) -> usize {
+        self.state.lock().expect("job queue poisoned").tickets.len()
+    }
+
+    /// Jobs currently executing on a worker.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::Relaxed)
+    }
+
+    /// Jobs answered since the queue was created.
+    ///
+    /// Refusal counting deliberately lives with the caller (the server's
+    /// `ServerMetrics`), not here: the server also rejects oversized
+    /// batches *before* they reach the queue, and two near-identical
+    /// counters for one statistic invite wiring the wrong one somewhere.
+    pub fn completed(&self) -> u64 {
+        self.completed.load(Ordering::Relaxed)
+    }
+
+    pub fn is_open(&self) -> bool {
+        self.state.lock().expect("job queue poisoned").open
+    }
+
+    /// Admit one job.
+    pub fn try_submit(&self, fj: FleetJob) -> Result<JobReceipt, SubmitError> {
+        self.try_submit_batch(vec![fj]).map(|mut v| {
+            v.pop().expect("one job admitted yields one receipt")
+        })
+    }
+
+    /// Admit a whole request atomically: every job is enqueued, or none
+    /// is and the submitter gets an immediate, explicit refusal —
+    /// admission control never blocks and never drops.
+    pub fn try_submit_batch(
+        &self,
+        jobs: Vec<FleetJob>,
+    ) -> Result<Vec<JobReceipt>, SubmitError> {
+        let mut st = self.state.lock().expect("job queue poisoned");
+        if !st.open {
+            return Err(SubmitError::ShuttingDown);
+        }
+        if st.tickets.len() + jobs.len() > self.depth {
+            return Err(SubmitError::QueueFull {
+                depth: self.depth,
+                queued: st.tickets.len(),
+                requested: jobs.len(),
+            });
+        }
+        let receipts: Vec<JobReceipt> = jobs
+            .into_iter()
+            .map(|fj| {
+                let (tx, rx) = mpsc::channel();
+                st.tickets.push_back(Ticket { fj, tx });
+                JobReceipt { rx }
+            })
+            .collect();
+        drop(st);
+        self.ready.notify_all();
+        Ok(receipts)
+    }
+
+    /// Worker side: block for the next job. `None` means the queue is
+    /// closed *and* drained — time to exit.
+    fn pop(&self) -> Option<Ticket> {
+        let mut st = self.state.lock().expect("job queue poisoned");
+        loop {
+            if let Some(t) = st.tickets.pop_front() {
+                self.in_flight.fetch_add(1, Ordering::Relaxed);
+                return Some(t);
+            }
+            if !st.open {
+                return None;
+            }
+            st = self.ready.wait(st).expect("job queue poisoned");
+        }
+    }
+
+    /// Stop admitting; wake every worker so the drain can finish.
+    pub fn close(&self) {
+        self.state.lock().expect("job queue poisoned").open = false;
+        self.ready.notify_all();
+    }
+}
+
+/// Persistent workers draining a [`JobQueue`] with long-lived, hot
+/// per-worker coordinators and shared caches.
+pub struct WorkerPool {
+    queue: Arc<JobQueue>,
+    /// Taken (and joined) by the first [`WorkerPool::shutdown`] call;
+    /// behind a mutex so a pool shared via `Arc` (the server) can shut
+    /// down through `&self`.
+    handles: Mutex<Vec<JoinHandle<WorkerStats>>>,
+    result_cache: Arc<ResultCache>,
+    compile_cache: Option<Arc<CompileCache>>,
+    workers: usize,
+}
+
+impl WorkerPool {
+    /// Start `workers` threads (0 = one per available hardware thread)
+    /// over a fresh queue of `queue_depth` slots. Cache policies come
+    /// from the base config's `[fleet]` / `[compile]` sections, exactly
+    /// like the batch fleet.
+    pub fn start(base: SimConfig, workers: usize, queue_depth: usize) -> anyhow::Result<Self> {
+        base.validate()?;
+        let workers = if workers == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        } else {
+            workers
+        };
+        let queue = Arc::new(JobQueue::new(queue_depth));
+        let result_cache = Arc::new(ResultCache::new());
+        let compile_cache = base
+            .compile
+            .cache
+            .then(|| Arc::new(CompileCache::new()));
+        let use_result_cache = base.fleet.cache;
+        let handles = (0..workers)
+            .map(|_| {
+                let queue = queue.clone();
+                let base = base.clone();
+                let rcache = result_cache.clone();
+                let ccache = compile_cache.clone();
+                std::thread::spawn(move || {
+                    drain(&queue, &base, use_result_cache, &rcache, ccache)
+                })
+            })
+            .collect();
+        Ok(Self {
+            queue,
+            handles: Mutex::new(handles),
+            result_cache,
+            compile_cache,
+            workers,
+        })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// The shared queue (status endpoints read its counters; tests poke
+    /// it directly).
+    pub fn queue(&self) -> &Arc<JobQueue> {
+        &self.queue
+    }
+
+    pub fn result_cache(&self) -> &Arc<ResultCache> {
+        &self.result_cache
+    }
+
+    pub fn compile_cache(&self) -> Option<&Arc<CompileCache>> {
+        self.compile_cache.as_ref()
+    }
+
+    /// Admit one job (explicit refusal when full / shutting down).
+    pub fn submit(&self, fj: FleetJob) -> Result<JobReceipt, SubmitError> {
+        self.queue.try_submit(fj)
+    }
+
+    /// Admit a whole request atomically (see [`JobQueue::try_submit_batch`]).
+    pub fn submit_batch(&self, jobs: Vec<FleetJob>) -> Result<Vec<JobReceipt>, SubmitError> {
+        self.queue.try_submit_batch(jobs)
+    }
+
+    /// Close the queue, drain admitted jobs, join the workers and return
+    /// their lifetime stats. Idempotent: a second call (or a call racing
+    /// another) returns empty stats.
+    pub fn shutdown(&self) -> Vec<WorkerStats> {
+        self.queue.close();
+        let handles = std::mem::take(&mut *self.handles.lock().expect("pool poisoned"));
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("pool worker panicked"))
+            .collect()
+    }
+}
+
+/// One worker's life: pop until the queue closes and drains, running
+/// each job on the worker's reused coordinator (same
+/// [`super::run_job`] path as the batch fleet).
+fn drain(
+    queue: &JobQueue,
+    base: &SimConfig,
+    use_result_cache: bool,
+    rcache: &Arc<ResultCache>,
+    ccache: Option<Arc<CompileCache>>,
+) -> WorkerStats {
+    let mut stats = WorkerStats::default();
+    let mut coord: Option<Coordinator> = None;
+    while let Some(ticket) = queue.pop() {
+        let t0 = Instant::now();
+        let result = super::run_job(
+            base,
+            use_result_cache,
+            rcache,
+            ccache.as_ref(),
+            &mut coord,
+            &ticket.fj,
+            &mut stats,
+        );
+        // Deliberately no per-job latency sample here: a pool runs
+        // indefinitely and `WorkerStats::latencies` is unbounded (sized
+        // for finite batches); the server tracks request latency in its
+        // own bounded window (`server::metrics`).
+        stats.busy += t0.elapsed();
+        stats.jobs += 1;
+        queue.in_flight.fetch_sub(1, Ordering::Relaxed);
+        queue.completed.fetch_add(1, Ordering::Relaxed);
+        // a submitter that gave up (dropped its receipt) is fine
+        let _ = ticket.tx.send(result.map_err(|e| format!("{e:#}")));
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Job, ModePolicy};
+    use crate::kernels::KernelId;
+
+    fn axpy(seed: u64) -> FleetJob {
+        FleetJob {
+            job: Job::Kernel {
+                kernel: KernelId::Faxpy,
+                policy: ModePolicy::Split,
+            },
+            seed: Some(seed),
+        }
+    }
+
+    #[test]
+    fn pooled_jobs_match_direct_coordinator_runs() {
+        let base = SimConfig::spatzformer();
+        let pool = WorkerPool::start(base.clone(), 2, 16).unwrap();
+        let receipts: Vec<JobReceipt> =
+            (0..6).map(|i| pool.submit(axpy(50 + i)).unwrap()).collect();
+        let got: Vec<JobReport> = receipts.into_iter().map(|r| r.wait().unwrap()).collect();
+        for (i, report) in got.iter().enumerate() {
+            let mut cfg = base.clone();
+            cfg.seed = 50 + i as u64;
+            let direct = Coordinator::new(cfg).unwrap().submit(&axpy(0).job).unwrap();
+            assert_eq!(report, &direct, "job {i}");
+        }
+        assert_eq!(pool.queue().completed(), 6);
+        let stats = pool.shutdown();
+        assert_eq!(stats.iter().map(|w| w.jobs).sum::<u64>(), 6);
+    }
+
+    #[test]
+    fn oversized_request_is_refused_atomically() {
+        let q = JobQueue::new(2);
+        let err = q
+            .try_submit_batch((0..5).map(axpy).collect())
+            .unwrap_err();
+        assert!(matches!(err, SubmitError::QueueFull { depth: 2, queued: 0, requested: 5 }));
+        assert_eq!(q.queued(), 0, "all-or-nothing: nothing admitted");
+        // a fitting request still goes through afterwards
+        let ok = q.try_submit_batch((0..2).map(axpy).collect()).unwrap();
+        assert_eq!(ok.len(), 2);
+        assert_eq!(q.queued(), 2);
+        // ... and now the queue is exactly full
+        assert!(matches!(
+            q.try_submit(axpy(9)).unwrap_err(),
+            SubmitError::QueueFull { queued: 2, requested: 1, .. }
+        ));
+    }
+
+    #[test]
+    fn shutdown_drains_admitted_jobs_then_refuses() {
+        let pool = WorkerPool::start(SimConfig::spatzformer(), 1, 8).unwrap();
+        let receipts = pool
+            .submit_batch((0..4).map(axpy).collect())
+            .unwrap();
+        let queue = pool.queue().clone();
+        let stats = pool.shutdown();
+        assert_eq!(stats.iter().map(|w| w.jobs).sum::<u64>(), 4, "drained");
+        for r in receipts {
+            r.wait().unwrap();
+        }
+        assert!(!queue.is_open());
+        assert_eq!(
+            queue.try_submit(axpy(1)).unwrap_err(),
+            SubmitError::ShuttingDown
+        );
+    }
+
+    #[test]
+    fn pool_shares_compile_cache_across_jobs() {
+        // One worker: with several, two could race the first lookup and
+        // both miss (allowed — see util::cache), making counts flaky.
+        let mut cfg = SimConfig::spatzformer();
+        cfg.fleet.cache = false; // force execution so compiles happen
+        let pool = WorkerPool::start(cfg, 1, 32).unwrap();
+        let receipts = pool
+            .submit_batch(vec![axpy(7); 8])
+            .unwrap();
+        for r in receipts {
+            r.wait().unwrap();
+        }
+        let ccache = pool.compile_cache().expect("on by default").clone();
+        assert_eq!(ccache.misses(), 1, "one distinct artifact");
+        assert_eq!(ccache.hits(), 7);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn queue_full_error_renders_usefully() {
+        let e = SubmitError::QueueFull { depth: 4, queued: 3, requested: 2 };
+        let s = e.to_string();
+        assert!(s.contains("queue full") && s.contains("3/4"), "{s}");
+    }
+}

@@ -125,6 +125,16 @@ impl Deployment {
             Deployment::Merge => "merge",
         }
     }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        [
+            Deployment::SplitDual,
+            Deployment::SplitSingle,
+            Deployment::Merge,
+        ]
+        .into_iter()
+        .find(|d| d.name() == s)
+    }
 }
 
 /// A fully generated kernel: programs + data + expectations.
@@ -147,6 +157,53 @@ pub struct KernelInstance {
     pub outputs: Vec<(u32, usize)>,
     /// Useful FLOPs of the workload (MAC = 2).
     pub flops: u64,
+}
+
+/// A pre-serialized TCDM input image: every staged array of a
+/// [`KernelInstance`], flattened to little-endian bytes at compile time.
+///
+/// The per-array staging path ([`crate::cluster::Cluster::stage_f32`] /
+/// `stage_u32`) re-serializes every word through the DMA model on every
+/// execute — a dominant fixed cost once the compile cache makes repeat
+/// jobs free of program generation. An image replays the same staging as
+/// one bounded memcpy per array ([`crate::cluster::Cluster::stage_bytes`])
+/// with identical DMA-cycle accounting, so a compile-cache hit skips the
+/// word-loop entirely while `rust/tests/reset_reuse.rs` exact equality
+/// still holds. Ranges keep the original staging order (f32 arrays, then
+/// u32 tables) — the replay is write-for-write equivalent.
+#[derive(Debug, Clone, Default)]
+pub struct StagingImage {
+    /// `(tcdm_addr, little-endian bytes)` per staged array.
+    pub ranges: Vec<(u32, Vec<u8>)>,
+}
+
+impl StagingImage {
+    /// Serialize an instance's staging set (pure; called once per
+    /// compile, shared via the compiled artifact thereafter).
+    pub fn from_instance(inst: &KernelInstance) -> Self {
+        let mut ranges =
+            Vec::with_capacity(inst.staging_f32.len() + inst.staging_u32.len());
+        for (addr, data) in &inst.staging_f32 {
+            let mut bytes = Vec::with_capacity(data.len() * 4);
+            for v in data {
+                bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+            }
+            ranges.push((*addr, bytes));
+        }
+        for (addr, data) in &inst.staging_u32 {
+            let mut bytes = Vec::with_capacity(data.len() * 4);
+            for v in data {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+            ranges.push((*addr, bytes));
+        }
+        Self { ranges }
+    }
+
+    /// Total staged bytes.
+    pub fn bytes(&self) -> usize {
+        self.ranges.iter().map(|(_, b)| b.len()).sum()
+    }
 }
 
 /// Simple bump allocator for laying out kernel data in the TCDM.
@@ -220,30 +277,54 @@ pub fn execute_with_programs(
     inst: &KernelInstance,
     programs: [Arc<Program>; 2],
 ) -> anyhow::Result<(crate::metrics::RunMetrics, Vec<Vec<f32>>)> {
-    stage_and_run(cluster, inst, |cl| cl.load_programs(programs))
+    stage_and_run(cluster, inst, stage_arrays, |cl| cl.load_programs(programs))
 }
 
 /// [`execute_with_programs`] for compile-stage artifacts: the programs
 /// were validated (and the barrier participant mask computed) once at
-/// compile time, so the per-run load is O(1). Crate-private like the
-/// trusted load path it wraps — external callers execute compiled jobs
-/// through `Coordinator::execute`, which guards the artifact digest.
+/// compile time, so the per-run load is O(1), and inputs replay from the
+/// artifact's pre-serialized [`StagingImage`] as bounded memcpys instead
+/// of per-array DMA word loops. Crate-private like the trusted load path
+/// it wraps — external callers execute compiled jobs through
+/// `Coordinator::execute`, which guards the artifact digest.
 pub(crate) fn execute_prevalidated(
     cluster: &mut crate::cluster::Cluster,
     inst: &KernelInstance,
     programs: [Arc<Program>; 2],
     barrier_mask: u8,
+    staging: &StagingImage,
 ) -> anyhow::Result<(crate::metrics::RunMetrics, Vec<Vec<f32>>)> {
-    stage_and_run(cluster, inst, |cl| {
-        cl.load_programs_prevalidated(programs, barrier_mask);
-        Ok(())
-    })
+    stage_and_run(
+        cluster,
+        inst,
+        |cl, _inst| {
+            for (addr, bytes) in &staging.ranges {
+                cl.stage_bytes(*addr, bytes);
+            }
+        },
+        |cl| {
+            cl.load_programs_prevalidated(programs, barrier_mask);
+            Ok(())
+        },
+    )
+}
+
+/// The original per-array staging path (serializes through the DMA word
+/// loop); the compiled-artifact path replays a [`StagingImage`] instead.
+fn stage_arrays(cluster: &mut crate::cluster::Cluster, inst: &KernelInstance) {
+    for (addr, data) in &inst.staging_f32 {
+        cluster.stage_f32(*addr, data);
+    }
+    for (addr, data) in &inst.staging_u32 {
+        cluster.stage_u32(*addr, data);
+    }
 }
 
 /// Shared staging/run/readback path of the two execute entry points.
 fn stage_and_run(
     cluster: &mut crate::cluster::Cluster,
     inst: &KernelInstance,
+    stage: impl FnOnce(&mut crate::cluster::Cluster, &KernelInstance),
     load: impl FnOnce(&mut crate::cluster::Cluster) -> anyhow::Result<()>,
 ) -> anyhow::Result<(crate::metrics::RunMetrics, Vec<Vec<f32>>)> {
     use crate::config::Mode;
@@ -252,12 +333,7 @@ fn stage_and_run(
         _ => Mode::Split,
     };
     cluster.set_mode(mode)?;
-    for (addr, data) in &inst.staging_f32 {
-        cluster.stage_f32(*addr, data);
-    }
-    for (addr, data) in &inst.staging_u32 {
-        cluster.stage_u32(*addr, data);
-    }
+    stage(cluster, inst);
     let staging_cycles = cluster.dma_cycles;
     cluster.reset_stats();
     load(cluster)?;
@@ -319,6 +395,62 @@ mod tests {
         assert_eq!(a, b);
         assert_ne!(a, c);
         assert!(a.iter().all(|&x| (-1.0..1.0).contains(&x)));
+    }
+
+    /// The staging-image replay must be write-for-write equivalent to
+    /// per-array DMA staging: identical TCDM contents, identical DMA
+    /// cycle/byte accounting — this is what keeps compile-cache hits
+    /// byte-identical to cold compiles (`rust/tests/reset_reuse.rs`).
+    #[test]
+    fn staging_image_matches_per_array_staging() {
+        use crate::config::SimConfig;
+        let cfg = SimConfig::spatzformer();
+        for k in KernelId::all() {
+            for d in [Deployment::SplitDual, Deployment::SplitSingle, Deployment::Merge] {
+                let inst = k.build(&cfg.cluster, d, 0xABCD);
+                let image = StagingImage::from_instance(&inst);
+                assert_eq!(
+                    image.ranges.len(),
+                    inst.staging_f32.len() + inst.staging_u32.len()
+                );
+                assert!(image.bytes() > 0, "{} stages no data", k.name());
+
+                let mut by_array = crate::cluster::Cluster::new(cfg.clone()).unwrap();
+                stage_arrays(&mut by_array, &inst);
+                let mut by_image = crate::cluster::Cluster::new(cfg.clone()).unwrap();
+                for (addr, bytes) in &image.ranges {
+                    by_image.stage_bytes(*addr, bytes);
+                }
+
+                let label = format!("{} {}", k.name(), d.name());
+                assert_eq!(by_array.dma_cycles, by_image.dma_cycles, "{label}");
+                assert_eq!(
+                    by_array.dma.stats.bytes_in, by_image.dma.stats.bytes_in,
+                    "{label}"
+                );
+                assert_eq!(
+                    by_array.dma.stats.busy_cycles, by_image.dma.stats.busy_cycles,
+                    "{label}"
+                );
+                for (addr, data) in &inst.staging_f32 {
+                    assert_eq!(
+                        by_image.tcdm.read_f32_slice(*addr, data.len()),
+                        by_array.tcdm.read_f32_slice(*addr, data.len()),
+                        "{label} f32 @ {addr:#x}"
+                    );
+                }
+                for (addr, data) in &inst.staging_u32 {
+                    for (i, _) in data.iter().enumerate() {
+                        let a = *addr + (i * 4) as u32;
+                        assert_eq!(
+                            by_image.tcdm.read_u32(a),
+                            by_array.tcdm.read_u32(a),
+                            "{label} u32 @ {a:#x}"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     /// Every kernel × deployment builds, validates, and its program uses

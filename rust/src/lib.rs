@@ -24,6 +24,11 @@
 //! * a multi-cluster batch-simulation fleet: N simulated clusters behind
 //!   a work-stealing scheduler, a procedural scenario generator, and a
 //!   content-addressed result cache ([`fleet`]);
+//! * `spatzd`, a resident simulation service: a std-only TCP daemon
+//!   speaking newline-delimited JSON (hand-rolled codec in
+//!   [`util::json`]), draining a bounded, admission-controlled queue
+//!   with long-lived hot coordinators, plus a deterministic
+//!   load-generator client ([`server`]);
 //! * a PJRT runtime that loads the JAX/Pallas AOT artifacts and
 //!   cross-checks the simulated RVV datapath against XLA numerics
 //!   ([`runtime`]; needs the `xla-runtime` cargo feature).
@@ -45,6 +50,7 @@ pub mod metrics;
 pub mod ppa;
 pub mod reconfig;
 pub mod runtime;
+pub mod server;
 pub mod snitch;
 pub mod spatz;
 pub mod trace;

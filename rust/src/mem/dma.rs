@@ -65,6 +65,21 @@ impl Dma {
         cycles
     }
 
+    /// Stage a pre-serialized byte range into TCDM (one bulk copy).
+    /// Accounting is identical to the per-array [`Dma::copy_in_f32`] /
+    /// [`Dma::copy_in_u32`] path — same byte count, same `div_ceil`
+    /// beat rounding — so a compile-cached staging image replays with
+    /// byte-identical `dma_cycles`, provided each range mirrors one
+    /// original staged array (the rounding is per transfer).
+    pub fn copy_in_bytes(&mut self, tcdm: &mut Tcdm, addr: u32, data: &[u8]) -> u64 {
+        tcdm.write_bytes(addr, data);
+        let bytes = data.len() as u64;
+        self.stats.bytes_in += bytes;
+        let cycles = bytes.div_ceil(self.beat_bytes);
+        self.stats.busy_cycles += cycles;
+        cycles
+    }
+
     /// Event horizon for the fast-forward engine: always `None`. DMA
     /// staging runs before the measured region (its cycles are accounted
     /// separately as `dma_cycles`), so the engine never has to wait on it

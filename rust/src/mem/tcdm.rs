@@ -142,6 +142,17 @@ impl Tcdm {
         }
     }
 
+    /// Bulk copy-in of a pre-serialized little-endian byte image: one
+    /// `copy_from_slice` instead of a per-word write loop. Byte-for-byte
+    /// identical to staging the source arrays through
+    /// [`Tcdm::write_f32_slice`]/[`Tcdm::write_u32_slice`] (both store
+    /// little-endian words), which is what lets compile-stage artifacts
+    /// carry a staging image the execute stage replays as a memcpy.
+    pub fn write_bytes(&mut self, addr: u32, data: &[u8]) {
+        self.check(addr, data.len());
+        self.mem[addr as usize..addr as usize + data.len()].copy_from_slice(data);
+    }
+
     /// Bulk copy-out.
     pub fn read_f32_slice(&self, addr: u32, n: usize) -> Vec<f32> {
         self.check(addr, n * 4);

@@ -1,0 +1,286 @@
+//! Deterministic load generator for a running `spatzd` daemon.
+//!
+//! `spatzformer loadgen --addr HOST:PORT --clients C --requests R
+//! --seed S` opens `C` concurrent connections, each replaying a
+//! deterministic stream of `R` `submit` requests drawn from a scenario
+//! generator ([`request_lines`] — same seed ⇒ byte-identical request
+//! stream, the property `rust/tests/server_integration.rs` pins), and
+//! reports achieved jobs/s plus p50/p95/p99 request latency in the
+//! shared [`LatencyPercentiles`] shape. Admission-control refusals
+//! (`429`) are counted separately — a load test that overruns the queue
+//! should *see* the explicit rejects, not mistake them for successes.
+
+use crate::config::ArchKind;
+use crate::fleet::{scenario, LatencyPercentiles, ScenarioKind};
+use crate::server::proto::{self, Request};
+use crate::util::Json;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// Knobs of one loadgen run.
+#[derive(Debug, Clone)]
+pub struct LoadgenOptions {
+    pub addr: String,
+    pub clients: usize,
+    /// Requests per client.
+    pub requests: usize,
+    pub seed: u64,
+    pub scenario: ScenarioKind,
+    /// Architecture the target daemon simulates (bounds which jobs the
+    /// generator may emit — merge-mode jobs never target a baseline).
+    pub arch: ArchKind,
+    /// Send `{"op":"shutdown"}` after the measurement (CI smoke uses
+    /// this to stop the daemon it started).
+    pub send_shutdown: bool,
+}
+
+impl Default for LoadgenOptions {
+    fn default() -> Self {
+        Self {
+            addr: crate::config::ServerConfig::default().addr,
+            clients: 4,
+            requests: 32,
+            seed: 0xC0FFEE,
+            scenario: ScenarioKind::Storm,
+            arch: ArchKind::Spatzformer,
+            send_shutdown: false,
+        }
+    }
+}
+
+/// What one run achieved.
+#[derive(Debug, Clone)]
+pub struct LoadgenReport {
+    pub clients: usize,
+    pub sent: u64,
+    pub ok: u64,
+    /// Explicit admission-control rejects (`429`/`503`).
+    pub rejected: u64,
+    pub errors: u64,
+    pub wall: Duration,
+    pub latency: Option<LatencyPercentiles>,
+}
+
+impl LoadgenReport {
+    /// Successfully served jobs per wall-clock second.
+    pub fn jobs_per_sec(&self) -> f64 {
+        let secs = self.wall.as_secs_f64();
+        if secs == 0.0 {
+            return 0.0;
+        }
+        self.ok as f64 / secs
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "clients        : {}\n\
+             requests       : {} sent, {} ok, {} rejected, {} errors\n\
+             wall           : {:.1} ms\n\
+             jobs/s         : {:.1}\n\
+             latency        : {}",
+            self.clients,
+            self.sent,
+            self.ok,
+            self.rejected,
+            self.errors,
+            self.wall.as_secs_f64() * 1e3,
+            self.jobs_per_sec(),
+            self.latency
+                .map_or_else(|| "n/a".to_string(), |l| l.render()),
+        )
+    }
+}
+
+/// The deterministic request stream of client `client`: `requests`
+/// submit lines drawn from `scenario` under a per-client seed derived
+/// from `seed`. Pure — the replay *is* this function's output, which is
+/// what makes load tests reproducible.
+pub fn request_lines(
+    arch: ArchKind,
+    kind: ScenarioKind,
+    seed: u64,
+    client: usize,
+    requests: usize,
+) -> Vec<String> {
+    let client_seed =
+        seed ^ (client as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let s = scenario::generate(kind, arch, client_seed, requests);
+    s.jobs
+        .iter()
+        .map(|fj| {
+            proto::encode_request(&Request::Submit {
+                job: fj.job.clone(),
+                seed: fj.seed,
+            })
+        })
+        .collect()
+}
+
+/// One client's tallies.
+#[derive(Debug, Default)]
+struct ClientOutcome {
+    ok: u64,
+    rejected: u64,
+    errors: u64,
+    latencies_ms: Vec<f64>,
+}
+
+/// Replay one client's stream over one connection.
+fn run_client(addr: &str, lines: &[String]) -> ClientOutcome {
+    let mut out = ClientOutcome::default();
+    let stream = match TcpStream::connect(addr) {
+        Ok(s) => s,
+        Err(_) => {
+            out.errors = lines.len() as u64;
+            return out;
+        }
+    };
+    let Ok(read_half) = stream.try_clone() else {
+        out.errors = lines.len() as u64;
+        return out;
+    };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = BufWriter::new(stream);
+    for (i, line) in lines.iter().enumerate() {
+        let t0 = Instant::now();
+        let mut response = String::new();
+        let io_ok = writeln!(writer, "{line}").is_ok()
+            && writer.flush().is_ok()
+            && matches!(reader.read_line(&mut response), Ok(n) if n > 0);
+        if !io_ok {
+            // connection died: everything unanswered is an error
+            out.errors += (lines.len() - i) as u64;
+            return out;
+        }
+        match Json::parse(response.trim()) {
+            Ok(j) if j.get("ok").and_then(Json::as_bool) == Some(true) => {
+                out.ok += 1;
+                out.latencies_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            }
+            Ok(j)
+                if matches!(
+                    j.get("code").and_then(Json::as_u64),
+                    Some(429) | Some(503)
+                ) =>
+            {
+                out.rejected += 1;
+            }
+            _ => out.errors += 1,
+        }
+    }
+    out
+}
+
+/// Run the full load test; optionally stop the daemon afterwards.
+pub fn run(opts: &LoadgenOptions) -> anyhow::Result<LoadgenReport> {
+    anyhow::ensure!(opts.clients >= 1, "loadgen needs at least one client");
+    let streams: Vec<Vec<String>> = (0..opts.clients)
+        .map(|c| {
+            request_lines(opts.arch, opts.scenario, opts.seed, c, opts.requests)
+        })
+        .collect();
+    let t0 = Instant::now();
+    let mut outcomes: Vec<ClientOutcome> = Vec::with_capacity(opts.clients);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = streams
+            .iter()
+            .map(|lines| {
+                let addr = opts.addr.as_str();
+                s.spawn(move || run_client(addr, lines))
+            })
+            .collect();
+        for h in handles {
+            outcomes.push(h.join().expect("loadgen client panicked"));
+        }
+    });
+    let wall = t0.elapsed();
+    if opts.send_shutdown {
+        shutdown_daemon(&opts.addr)?;
+    }
+    let mut latencies: Vec<f64> = Vec::new();
+    for o in &outcomes {
+        latencies.extend_from_slice(&o.latencies_ms);
+    }
+    Ok(LoadgenReport {
+        clients: opts.clients,
+        sent: (opts.clients * opts.requests) as u64,
+        ok: outcomes.iter().map(|o| o.ok).sum(),
+        rejected: outcomes.iter().map(|o| o.rejected).sum(),
+        errors: outcomes.iter().map(|o| o.errors).sum(),
+        wall,
+        latency: LatencyPercentiles::from_samples_ms(&latencies),
+    })
+}
+
+/// Send `{"op":"shutdown"}` on a fresh connection and wait for the ack.
+pub fn shutdown_daemon(addr: &str) -> anyhow::Result<()> {
+    let stream = TcpStream::connect(addr)
+        .map_err(|e| anyhow::anyhow!("cannot connect to {addr} for shutdown: {e}"))?;
+    let read_half = stream.try_clone()?;
+    let mut reader = BufReader::new(read_half);
+    let mut writer = BufWriter::new(stream);
+    writeln!(writer, "{}", proto::encode_request(&Request::Shutdown))?;
+    writer.flush()?;
+    let mut ack = String::new();
+    reader.read_line(&mut ack)?;
+    let j = Json::parse(ack.trim()).map_err(|e| anyhow::anyhow!("bad shutdown ack: {e}"))?;
+    anyhow::ensure!(
+        j.get("ok").and_then(Json::as_bool) == Some(true),
+        "daemon refused shutdown: {ack}"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_streams_are_deterministic_per_seed_and_client() {
+        let a = request_lines(ArchKind::Spatzformer, ScenarioKind::Storm, 7, 0, 16);
+        let b = request_lines(ArchKind::Spatzformer, ScenarioKind::Storm, 7, 0, 16);
+        assert_eq!(a, b, "same seed + client ⇒ identical stream");
+        assert_eq!(a.len(), 16);
+        let other_client =
+            request_lines(ArchKind::Spatzformer, ScenarioKind::Storm, 7, 1, 16);
+        assert_ne!(a, other_client, "clients draw distinct streams");
+        let other_seed =
+            request_lines(ArchKind::Spatzformer, ScenarioKind::Storm, 8, 0, 16);
+        assert_ne!(a, other_seed, "seed changes the stream");
+        // every line is a parseable submit request
+        for line in &a {
+            assert!(matches!(
+                proto::parse_request(line).unwrap(),
+                Request::Submit { .. }
+            ));
+        }
+    }
+
+    #[test]
+    fn baseline_streams_never_request_merge() {
+        for c in 0..4 {
+            for line in request_lines(ArchKind::Baseline, ScenarioKind::Storm, 3, c, 32) {
+                assert!(!line.contains("\"merge\""), "{line}");
+            }
+        }
+    }
+
+    #[test]
+    fn report_renders_the_headline_numbers() {
+        let r = LoadgenReport {
+            clients: 2,
+            sent: 10,
+            ok: 8,
+            rejected: 1,
+            errors: 1,
+            wall: Duration::from_millis(400),
+            latency: LatencyPercentiles::from_samples_ms(&[1.0, 2.0, 3.0]),
+        };
+        assert!((r.jobs_per_sec() - 20.0).abs() < 1e-9);
+        let s = r.render();
+        assert!(s.contains("jobs/s"), "{s}");
+        assert!(s.contains("p50/p95/p99"), "{s}");
+        assert!(s.contains("8 ok, 1 rejected"), "{s}");
+    }
+}

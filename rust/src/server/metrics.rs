@@ -1,0 +1,236 @@
+//! Service-level metrics for `spatzd`: request counters and per-request
+//! latency percentiles, reusing the fleet's [`LatencyPercentiles`] shape
+//! so the daemon, the batch fleet and the `loadgen` client all quote
+//! p50/p95/p99 the same way.
+
+use crate::fleet::LatencyPercentiles;
+use crate::util::Json;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Latency-sample window: percentiles are computed over the most recent
+/// `LATENCY_WINDOW` request latencies. Bounded on purpose — a resident
+/// daemon runs indefinitely, so an unbounded sample Vec would grow (and
+/// the percentile sort would slow) forever.
+const LATENCY_WINDOW: usize = 4096;
+
+#[derive(Debug, Default)]
+struct Inner {
+    requests: u64,
+    submits: u64,
+    batches: u64,
+    /// Individual jobs answered (a batch of N counts N).
+    jobs_completed: u64,
+    /// Requests refused by admission control (`429`).
+    rejected: u64,
+    /// Requests that failed (`400`/`500`).
+    errors: u64,
+    /// Per-request wall-clock latency, milliseconds (submit/batch only —
+    /// status and metrics probes would skew the percentiles). A ring of
+    /// the last [`LATENCY_WINDOW`] samples.
+    latencies_ms: Vec<f64>,
+    /// Next ring slot to overwrite once the window is full.
+    latency_next: usize,
+}
+
+/// Shared request accounting. One mutex is plenty: requests touch it
+/// twice (count + latency), microseconds next to a simulation.
+pub struct ServerMetrics {
+    start: Instant,
+    inner: Mutex<Inner>,
+}
+
+/// Point-in-time copy of the counters (what the `metrics` op serializes).
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub uptime: Duration,
+    pub requests: u64,
+    pub submits: u64,
+    pub batches: u64,
+    pub jobs_completed: u64,
+    pub rejected: u64,
+    pub errors: u64,
+    /// Percentiles over the most recent `LATENCY_WINDOW` requests.
+    pub latency: Option<LatencyPercentiles>,
+}
+
+impl MetricsSnapshot {
+    /// Served throughput over the daemon's lifetime.
+    pub fn jobs_per_sec(&self) -> f64 {
+        let secs = self.uptime.as_secs_f64();
+        if secs == 0.0 {
+            return 0.0;
+        }
+        self.jobs_completed as f64 / secs
+    }
+
+    /// The `metrics` response payload fields.
+    pub fn to_json_fields(&self) -> Vec<(String, Json)> {
+        let latency = match &self.latency {
+            Some(l) => Json::Obj(vec![
+                ("p50_ms".into(), Json::num(l.p50_ms)),
+                ("p95_ms".into(), Json::num(l.p95_ms)),
+                ("p99_ms".into(), Json::num(l.p99_ms)),
+            ]),
+            None => Json::Null,
+        };
+        vec![
+            ("uptime_ms".into(), Json::num(self.uptime.as_secs_f64() * 1e3)),
+            ("requests".into(), Json::u64_lossless(self.requests)),
+            ("submits".into(), Json::u64_lossless(self.submits)),
+            ("batches".into(), Json::u64_lossless(self.batches)),
+            ("jobs_completed".into(), Json::u64_lossless(self.jobs_completed)),
+            ("rejected".into(), Json::u64_lossless(self.rejected)),
+            ("errors".into(), Json::u64_lossless(self.errors)),
+            ("jobs_per_sec".into(), Json::num(self.jobs_per_sec())),
+            ("latency_ms".into(), latency),
+        ]
+    }
+
+    /// Human-readable block (printed by `spatzformer serve` on exit).
+    pub fn render(&self) -> String {
+        format!(
+            "uptime         : {:.1} s\n\
+             requests       : {} ({} submit, {} batch, {} rejected, {} errors)\n\
+             jobs completed : {}\n\
+             jobs/s         : {:.1}\n\
+             latency        : {}",
+            self.uptime.as_secs_f64(),
+            self.requests,
+            self.submits,
+            self.batches,
+            self.rejected,
+            self.errors,
+            self.jobs_completed,
+            self.jobs_per_sec(),
+            self.latency
+                .map_or_else(|| "n/a".to_string(), |l| l.render()),
+        )
+    }
+}
+
+impl ServerMetrics {
+    pub fn new() -> Self {
+        Self {
+            start: Instant::now(),
+            inner: Mutex::new(Inner::default()),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().expect("server metrics poisoned")
+    }
+
+    /// Count an arriving request by op.
+    pub fn request(&self, op: &str) {
+        let mut m = self.lock();
+        m.requests += 1;
+        match op {
+            "submit" => m.submits += 1,
+            "batch" => m.batches += 1,
+            _ => {}
+        }
+    }
+
+    /// A job-running request finished: record jobs answered + latency
+    /// (into the bounded sliding window).
+    pub fn completed(&self, jobs: u64, latency: Duration) {
+        let mut m = self.lock();
+        m.jobs_completed += jobs;
+        let sample = latency.as_secs_f64() * 1e3;
+        if m.latencies_ms.len() < LATENCY_WINDOW {
+            m.latencies_ms.push(sample);
+        } else {
+            let slot = m.latency_next;
+            m.latencies_ms[slot] = sample;
+        }
+        m.latency_next = (m.latency_next + 1) % LATENCY_WINDOW;
+    }
+
+    pub fn rejected(&self) {
+        self.lock().rejected += 1;
+    }
+
+    /// Total refused requests so far (cheap — no percentile pass), for
+    /// the `status` endpoint. Covers both queue-level refusals and the
+    /// pre-queue oversized-batch reject.
+    pub fn rejected_total(&self) -> u64 {
+        self.lock().rejected
+    }
+
+    pub fn error(&self) {
+        self.lock().errors += 1;
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let m = self.lock();
+        MetricsSnapshot {
+            uptime: self.start.elapsed(),
+            requests: m.requests,
+            submits: m.submits,
+            batches: m.batches,
+            jobs_completed: m.jobs_completed,
+            rejected: m.rejected,
+            errors: m.errors,
+            latency: LatencyPercentiles::from_samples_ms(&m.latencies_ms),
+        }
+    }
+}
+
+impl Default for ServerMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = ServerMetrics::new();
+        m.request("submit");
+        m.request("batch");
+        m.request("status");
+        m.completed(1, Duration::from_millis(2));
+        m.completed(64, Duration::from_millis(40));
+        m.rejected();
+        m.error();
+        let s = m.snapshot();
+        assert_eq!(s.requests, 3);
+        assert_eq!((s.submits, s.batches), (1, 1));
+        assert_eq!(s.jobs_completed, 65);
+        assert_eq!((s.rejected, s.errors), (1, 1));
+        let l = s.latency.unwrap();
+        assert!(l.p50_ms >= 2.0 && l.p99_ms <= 40.0, "{l:?}");
+        assert!(s.jobs_per_sec() > 0.0);
+        assert!(s.render().contains("jobs/s"));
+    }
+
+    #[test]
+    fn latency_window_is_bounded_and_slides() {
+        let m = ServerMetrics::new();
+        // overfill the window: early 1000 ms samples must be evicted
+        for _ in 0..LATENCY_WINDOW {
+            m.completed(1, Duration::from_millis(1000));
+        }
+        for _ in 0..LATENCY_WINDOW {
+            m.completed(1, Duration::from_millis(1));
+        }
+        let s = m.snapshot();
+        assert_eq!(s.jobs_completed, 2 * LATENCY_WINDOW as u64);
+        let l = s.latency.unwrap();
+        assert!(l.p99_ms < 1000.0, "old samples must slide out: {l:?}");
+        assert_eq!(m.lock().latencies_ms.len(), LATENCY_WINDOW, "bounded");
+    }
+
+    #[test]
+    fn empty_snapshot_is_safe() {
+        let s = ServerMetrics::new().snapshot();
+        assert!(s.latency.is_none());
+        assert!(s.render().contains("n/a"));
+        let fields = s.to_json_fields();
+        assert!(fields.iter().any(|(k, v)| k == "latency_ms" && v.is_null()));
+    }
+}

@@ -1,0 +1,407 @@
+//! `spatzd` — the resident simulation service.
+//!
+//! Every CLI invocation pays process startup, config parsing and cluster
+//! construction per run; the compile cache and `Cluster::reset` only
+//! amortize *within* one process. `spatzformer serve` keeps that state
+//! alive across requests: a TCP daemon (std-only — `std::net` plus
+//! threads, like the fleet) whose worker pool
+//! ([`crate::fleet::WorkerPool`]) owns long-lived re-seeded
+//! [`crate::coordinator::Coordinator`]s, one shared `Arc`'d compile
+//! cache and one result cache — so request N+1 lands on a hot cluster
+//! with hot artifacts, the way the paper's deployment model hands mixed
+//! scalar-vector jobs to an already-configured accelerator at runtime.
+//!
+//! * **Protocol** ([`proto`]): newline-delimited JSON request/response
+//!   over TCP (grammar in `DESIGN.md` §The server), hand-rolled codec in
+//!   [`crate::util::json`].
+//! * **Admission control**: requests feed the pool's *bounded* queue;
+//!   a request that does not fit — one `submit` slot, or all `N` slots
+//!   of a `batch`, atomically — is refused immediately with an explicit
+//!   `429`-style response. Nothing blocks, nothing is dropped silently.
+//! * **Metrics** ([`metrics`]): request counters plus per-request
+//!   latency percentiles in the fleet's p50/p95/p99 shape.
+//! * **Determinism**: a served report is byte-identical to a direct
+//!   coordinator run of the same `(SimConfig, Job)` —
+//!   `rust/tests/server_integration.rs` proves it over loopback.
+//! * **Load generation** ([`loadgen`]): a deterministic multi-client
+//!   replay tool (`spatzformer loadgen`) measuring achieved jobs/s and
+//!   latency percentiles against a running daemon.
+//!
+//! Shutdown is graceful: `{"op":"shutdown"}` (or
+//! [`RunningServer::shutdown`]) stops accepting, already-admitted jobs
+//! drain and answer, connection handlers wind down — idle ones within
+//! one 500 ms read-poll tick, a connection stuck on a half-sent request
+//! line within two (bounded grace, so a stalled client cannot wedge the
+//! join) — and [`RunningServer::wait`] returns the final metrics
+//! snapshot.
+
+pub mod loadgen;
+pub mod metrics;
+pub mod proto;
+
+pub use metrics::{MetricsSnapshot, ServerMetrics};
+
+use crate::config::SimConfig;
+use crate::fleet::{scenario, FleetJob, SubmitError, WorkerPool};
+use crate::util::Json;
+use proto::Request;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// How often an idle connection handler re-checks the stop flag.
+const READ_POLL: Duration = Duration::from_millis(500);
+
+/// Longest accepted request line. Requests are a few hundred bytes; the
+/// cap exists because the line buffer grows with whatever a client
+/// streams before its newline — without a bound, one newline-less
+/// connection could exhaust daemon memory.
+const MAX_LINE: usize = 1 << 20;
+
+/// Most concurrent connections (thread-per-connection); excess accepts
+/// are dropped immediately (client sees EOF) instead of spawning
+/// unboundedly many OS threads.
+const MAX_CONNS: usize = 1024;
+
+/// Shared daemon state.
+struct Ctl {
+    cfg: SimConfig,
+    pool: WorkerPool,
+    metrics: ServerMetrics,
+    stopping: AtomicBool,
+    addr: SocketAddr,
+}
+
+/// A live daemon: the CLI blocks on [`RunningServer::wait`]; tests drive
+/// it in-process over loopback.
+pub struct RunningServer {
+    ctl: Arc<Ctl>,
+    accept_thread: std::thread::JoinHandle<()>,
+}
+
+/// Bind `cfg.server.addr`, start the worker pool and the accept loop.
+/// Returns immediately; the daemon runs until a `shutdown` request (or
+/// [`RunningServer::shutdown`]) arrives.
+pub fn serve(cfg: SimConfig) -> anyhow::Result<RunningServer> {
+    cfg.validate()?;
+    let listener = TcpListener::bind(cfg.server.addr.as_str())
+        .map_err(|e| anyhow::anyhow!("cannot bind {}: {e}", cfg.server.addr))?;
+    let addr = listener.local_addr()?;
+    let pool = WorkerPool::start(cfg.clone(), cfg.server.workers, cfg.server.queue_depth)?;
+    let ctl = Arc::new(Ctl {
+        cfg,
+        pool,
+        metrics: ServerMetrics::new(),
+        stopping: AtomicBool::new(false),
+        addr,
+    });
+    let accept_ctl = ctl.clone();
+    let accept_thread = std::thread::spawn(move || accept_loop(listener, accept_ctl));
+    Ok(RunningServer { ctl, accept_thread })
+}
+
+impl RunningServer {
+    /// The actual bound address (resolves port 0 to the ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.ctl.addr
+    }
+
+    pub fn workers(&self) -> usize {
+        self.ctl.pool.workers()
+    }
+
+    /// Trigger a graceful stop without a client (tests, signal handlers).
+    pub fn shutdown(&self) {
+        trigger_stop(&self.ctl);
+    }
+
+    /// Block until the daemon has fully stopped: accept loop and every
+    /// connection handler joined, queue drained, workers joined. Returns
+    /// the final metrics snapshot.
+    pub fn wait(self) -> anyhow::Result<MetricsSnapshot> {
+        self.accept_thread
+            .join()
+            .map_err(|_| anyhow::anyhow!("accept loop panicked"))?;
+        self.ctl.pool.shutdown();
+        Ok(self.ctl.metrics.snapshot())
+    }
+}
+
+/// Flip the stop flag (once) and poke the blocking `accept` awake with a
+/// throwaway loopback connection.
+fn trigger_stop(ctl: &Ctl) {
+    if ctl.stopping.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    let _ = TcpStream::connect(ctl.addr);
+}
+
+fn accept_loop(listener: TcpListener, ctl: Arc<Ctl>) {
+    let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    for stream in listener.incoming() {
+        if ctl.stopping.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        // Sweep finished handlers each accept so a long-resident daemon
+        // does not accumulate join handles without bound (dropping a
+        // finished handle reclaims the thread's resources).
+        handlers.retain(|h| !h.is_finished());
+        if handlers.len() >= MAX_CONNS {
+            drop(stream); // over the connection cap: refuse with EOF
+            continue;
+        }
+        let conn_ctl = ctl.clone();
+        handlers.push(std::thread::spawn(move || handle_conn(stream, conn_ctl)));
+    }
+    // Connection handlers poll the stop flag between lines, so every
+    // thread exits within one READ_POLL tick of the stop trigger (or as
+    // soon as its client hangs up).
+    for h in handlers {
+        let _ = h.join();
+    }
+}
+
+/// Serve one client connection: read request lines, answer each in
+/// order, until EOF / error / daemon stop.
+///
+/// Lines are assembled as raw bytes via `read_until`, not `read_line`:
+/// on a read-timeout tick, `read_until` guarantees already-consumed
+/// bytes stay appended to the buffer, whereas `read_line`'s UTF-8 guard
+/// silently discards them when the partial line happens to end inside a
+/// multi-byte character — which would desync the request stream. UTF-8
+/// is validated once per complete line instead (invalid ⇒ `400`).
+fn handle_conn(stream: TcpStream, ctl: Arc<Ctl>) {
+    if stream.set_read_timeout(Some(READ_POLL)).is_err() {
+        return;
+    }
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = BufWriter::new(stream);
+    let mut line: Vec<u8> = Vec::new();
+    // Poll ticks seen since the stop flag while a line is half-read: a
+    // client that never finishes its line must not wedge the shutdown
+    // join, so it gets one bounded grace tick and then the connection
+    // is abandoned.
+    let mut stop_ticks = 0u32;
+    loop {
+        if ctl.stopping.load(Ordering::SeqCst) && line.is_empty() {
+            return;
+        }
+        // a newline-less byte stream must not grow the buffer forever —
+        // past the cap the stream cannot be re-synced, so answer 400
+        // and drop the connection
+        if line.len() > MAX_LINE {
+            let _ = writeln!(
+                writer,
+                "{}",
+                proto::error_response(400, "request line exceeds maximum length")
+            );
+            let _ = writer.flush();
+            ctl.metrics.error();
+            return;
+        }
+        match reader.read_until(b'\n', &mut line) {
+            Ok(0) => return, // EOF: client closed
+            Ok(_) => {
+                if line.len() > MAX_LINE {
+                    continue; // handled by the cap check above
+                }
+                let raw = std::mem::take(&mut line);
+                let (response, stop_after) = match std::str::from_utf8(&raw) {
+                    Ok(text) => {
+                        let text = text.trim();
+                        if text.is_empty() {
+                            continue;
+                        }
+                        handle_line(&ctl, text)
+                    }
+                    Err(_) => {
+                        ctl.metrics.error();
+                        (
+                            proto::error_response(400, "request line is not valid UTF-8"),
+                            false,
+                        )
+                    }
+                };
+                if writeln!(writer, "{response}").is_err() || writer.flush().is_err() {
+                    return;
+                }
+                if stop_after {
+                    trigger_stop(&ctl);
+                    return;
+                }
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if ctl.stopping.load(Ordering::SeqCst) {
+                    stop_ticks += 1;
+                    if stop_ticks >= 2 {
+                        return; // half-read line at shutdown: give up
+                    }
+                }
+                continue; // poll tick: re-check the stop flag
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+/// Dispatch one request line; returns `(response_line, stop_after)`.
+fn handle_line(ctl: &Ctl, line: &str) -> (String, bool) {
+    let request = match proto::parse_request(line) {
+        Ok(r) => r,
+        Err(e) => {
+            ctl.metrics.error();
+            return (proto::error_response(400, &format!("{e:#}")), false);
+        }
+    };
+    match request {
+        Request::Submit { job, seed } => {
+            ctl.metrics.request("submit");
+            let t0 = Instant::now();
+            match ctl.pool.submit(FleetJob { job, seed }) {
+                Err(e) => (refusal(ctl, e), false),
+                Ok(receipt) => match receipt.wait() {
+                    Ok(report) => {
+                        ctl.metrics.completed(1, t0.elapsed());
+                        (
+                            proto::ok_response(vec![(
+                                "report".into(),
+                                proto::report_to_json(&report),
+                            )]),
+                            false,
+                        )
+                    }
+                    Err(e) => {
+                        ctl.metrics.error();
+                        (proto::error_response(500, &format!("{e:#}")), false)
+                    }
+                },
+            }
+        }
+        Request::Batch { kind, jobs, seed } => {
+            ctl.metrics.request("batch");
+            // Admission check BEFORE generation: `jobs` is
+            // client-controlled, and a batch larger than the queue can
+            // never be admitted — rejecting here keeps a hostile
+            // `"jobs":10^12` from allocating a scenario at all.
+            let depth = ctl.pool.queue().depth();
+            if jobs > depth {
+                ctl.metrics.rejected();
+                return (
+                    proto::error_response(
+                        429,
+                        &format!("queue full: a batch of {jobs} can never fit depth {depth}"),
+                    ),
+                    false,
+                );
+            }
+            let t0 = Instant::now();
+            let scenario_seed = seed.unwrap_or(ctl.cfg.seed);
+            let scenario =
+                scenario::generate(kind, ctl.cfg.cluster.arch, scenario_seed, jobs);
+            match ctl.pool.submit_batch(scenario.jobs) {
+                Err(e) => (refusal(ctl, e), false),
+                Ok(receipts) => {
+                    let mut reports = Vec::with_capacity(receipts.len());
+                    for r in receipts {
+                        match r.wait() {
+                            Ok(report) => reports.push(report),
+                            Err(e) => {
+                                ctl.metrics.error();
+                                return (
+                                    proto::error_response(500, &format!("{e:#}")),
+                                    false,
+                                );
+                            }
+                        }
+                    }
+                    let wall = t0.elapsed();
+                    ctl.metrics.completed(reports.len() as u64, wall);
+                    let digest = proto::reports_digest(reports.iter());
+                    let sim_cycles: u64 =
+                        reports.iter().map(|r| r.metrics.cycles).sum();
+                    (
+                        proto::ok_response(vec![
+                            ("scenario".into(), Json::str(kind.name())),
+                            ("jobs".into(), Json::u64_lossless(reports.len() as u64)),
+                            ("seed".into(), Json::u64_lossless(scenario_seed)),
+                            ("digest".into(), Json::str(format!("{digest:#018x}"))),
+                            ("sim_cycles_total".into(), Json::u64_lossless(sim_cycles)),
+                            (
+                                "wall_ms".into(),
+                                Json::num(wall.as_secs_f64() * 1e3),
+                            ),
+                        ]),
+                        false,
+                    )
+                }
+            }
+        }
+        Request::Status => {
+            ctl.metrics.request("status");
+            let q = ctl.pool.queue();
+            (
+                proto::ok_response(vec![
+                    (
+                        "accepting".into(),
+                        Json::Bool(!ctl.stopping.load(Ordering::SeqCst)),
+                    ),
+                    ("workers".into(), Json::u64_lossless(ctl.pool.workers() as u64)),
+                    ("queue_depth".into(), Json::u64_lossless(q.depth() as u64)),
+                    ("queued".into(), Json::u64_lossless(q.queued() as u64)),
+                    ("in_flight".into(), Json::u64_lossless(q.in_flight() as u64)),
+                    ("completed".into(), Json::u64_lossless(q.completed())),
+                    (
+                        "rejected".into(),
+                        Json::u64_lossless(ctl.metrics.rejected_total()),
+                    ),
+                ]),
+                false,
+            )
+        }
+        Request::Metrics => {
+            ctl.metrics.request("metrics");
+            let mut fields = ctl.metrics.snapshot().to_json_fields();
+            let rc = ctl.pool.result_cache();
+            fields.push(("result_cache_hits".into(), Json::u64_lossless(rc.hits())));
+            fields.push((
+                "result_cache_misses".into(),
+                Json::u64_lossless(rc.misses()),
+            ));
+            if let Some(cc) = ctl.pool.compile_cache() {
+                fields.push(("compile_cache_hits".into(), Json::u64_lossless(cc.hits())));
+                fields.push((
+                    "compile_cache_misses".into(),
+                    Json::u64_lossless(cc.misses()),
+                ));
+            }
+            (proto::ok_response(fields), false)
+        }
+        Request::Shutdown => {
+            ctl.metrics.request("shutdown");
+            (
+                proto::ok_response(vec![("shutting_down".into(), Json::Bool(true))]),
+                true,
+            )
+        }
+    }
+}
+
+/// Map a queue refusal to its wire response (`429` full, `503` closing).
+fn refusal(ctl: &Ctl, e: SubmitError) -> String {
+    ctl.metrics.rejected();
+    match e {
+        SubmitError::QueueFull { .. } => proto::error_response(429, &e.to_string()),
+        SubmitError::ShuttingDown => proto::error_response(503, &e.to_string()),
+    }
+}

@@ -1,0 +1,561 @@
+//! The `spatzd` wire protocol: newline-delimited JSON over TCP.
+//!
+//! One request object per line, one response object per line, in order.
+//! The full grammar is documented in `DESIGN.md` §The server; the shapes:
+//!
+//! ```text
+//! {"op":"submit","job":{"type":"kernel","kernel":"fft","mode":"merge"},"seed":7}
+//! {"op":"submit","job":{"type":"mixed","kernel":"fmatmul","mode":"auto","iters":2}}
+//! {"op":"batch","scenario":"storm","jobs":64,"seed":7}
+//! {"op":"status"} | {"op":"metrics"} | {"op":"shutdown"}
+//! ```
+//!
+//! Responses always carry `"ok"`: `{"ok":true,...}` on success,
+//! `{"ok":false,"code":C,"error":"..."}` on refusal — `400` malformed,
+//! `429` admission-control reject (bounded queue full), `503` shutting
+//! down, `500` execution failure.
+//!
+//! **Byte-identity.** [`report_to_json`]/[`report_from_json`] cover
+//! *every* field of [`JobReport`] (all counters, priced energy, cache
+//! stats), and the codec round-trips every finite f64 exactly — so a
+//! served report decodes `PartialEq`-equal to the direct
+//! [`crate::coordinator::Coordinator`] run that produced it, and two
+//! byte-identical runs encode to byte-identical response lines. Workload
+//! seeds are full u64s and travel via [`Json::u64_lossless`].
+
+use crate::coordinator::{Job, JobReport, ModePolicy};
+use crate::fleet::ScenarioKind;
+use crate::kernels::{Deployment, KernelId};
+use crate::metrics::{Counters, RunMetrics};
+use crate::util::{Fnv1a, Json};
+
+/// A parsed client request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Run one job (optionally under a workload-seed override) and
+    /// return its full report.
+    Submit { job: Job, seed: Option<u64> },
+    /// Generate a scenario server-side and run the whole batch through
+    /// the admission-controlled queue; the response carries aggregate
+    /// numbers plus a content digest of the reports.
+    Batch {
+        kind: ScenarioKind,
+        jobs: usize,
+        seed: Option<u64>,
+    },
+    /// Queue/worker occupancy snapshot.
+    Status,
+    /// Request counters and latency percentiles.
+    Metrics,
+    /// Stop accepting, drain, exit.
+    Shutdown,
+}
+
+// ---- field helpers ----
+
+fn need<'a>(obj: &'a Json, key: &str) -> anyhow::Result<&'a Json> {
+    obj.get(key)
+        .ok_or_else(|| anyhow::anyhow!("missing field `{key}`"))
+}
+
+fn need_u64(obj: &Json, key: &str) -> anyhow::Result<u64> {
+    need(obj, key)?
+        .as_u64()
+        .ok_or_else(|| anyhow::anyhow!("field `{key}` must be a non-negative integer"))
+}
+
+fn need_f64(obj: &Json, key: &str) -> anyhow::Result<f64> {
+    need(obj, key)?
+        .as_f64()
+        .ok_or_else(|| anyhow::anyhow!("field `{key}` must be a number"))
+}
+
+fn need_str<'a>(obj: &'a Json, key: &str) -> anyhow::Result<&'a str> {
+    need(obj, key)?
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("field `{key}` must be a string"))
+}
+
+fn opt_u64(obj: &Json, key: &str) -> anyhow::Result<Option<u64>> {
+    match obj.get(key) {
+        None => Ok(None),
+        Some(v) if v.is_null() => Ok(None),
+        Some(v) => v
+            .as_u64()
+            .map(Some)
+            .ok_or_else(|| anyhow::anyhow!("field `{key}` must be a non-negative integer")),
+    }
+}
+
+fn u(v: u64) -> Json {
+    Json::u64_lossless(v)
+}
+
+// ---- job ----
+
+fn policy_name(p: ModePolicy) -> &'static str {
+    match p {
+        ModePolicy::Split => "split",
+        ModePolicy::Merge => "merge",
+        ModePolicy::Auto => "auto",
+    }
+}
+
+fn policy_from_name(s: &str) -> Option<ModePolicy> {
+    match s {
+        "split" => Some(ModePolicy::Split),
+        "merge" => Some(ModePolicy::Merge),
+        "auto" => Some(ModePolicy::Auto),
+        _ => None,
+    }
+}
+
+pub fn job_to_json(job: &Job) -> Json {
+    match job {
+        Job::Kernel { kernel, policy } => Json::Obj(vec![
+            ("type".into(), Json::str("kernel")),
+            ("kernel".into(), Json::str(kernel.name())),
+            ("mode".into(), Json::str(policy_name(*policy))),
+        ]),
+        Job::Mixed {
+            kernel,
+            policy,
+            coremark_iterations,
+        } => Json::Obj(vec![
+            ("type".into(), Json::str("mixed")),
+            ("kernel".into(), Json::str(kernel.name())),
+            ("mode".into(), Json::str(policy_name(*policy))),
+            ("iters".into(), u(*coremark_iterations as u64)),
+        ]),
+    }
+}
+
+pub fn job_from_json(j: &Json) -> anyhow::Result<Job> {
+    let kernel_name = need_str(j, "kernel")?;
+    let kernel = KernelId::from_name(kernel_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown kernel `{kernel_name}`"))?;
+    let mode = need_str(j, "mode")?;
+    let policy = policy_from_name(mode)
+        .ok_or_else(|| anyhow::anyhow!("unknown mode `{mode}` (split|merge|auto)"))?;
+    match need_str(j, "type")? {
+        "kernel" => Ok(Job::Kernel { kernel, policy }),
+        "mixed" => {
+            let iters = need_u64(j, "iters")?;
+            anyhow::ensure!(
+                (1..=u32::MAX as u64).contains(&iters),
+                "`iters` must be in 1..=2^32-1"
+            );
+            Ok(Job::Mixed {
+                kernel,
+                policy,
+                coremark_iterations: iters as u32,
+            })
+        }
+        other => anyhow::bail!("unknown job type `{other}` (kernel|mixed)"),
+    }
+}
+
+// ---- report ----
+
+fn counters_to_json(c: &Counters) -> Json {
+    Json::Obj(vec![
+        ("scalar_ifetch".into(), u(c.scalar_ifetch)),
+        ("scalar_alu".into(), u(c.scalar_alu)),
+        ("scalar_mul".into(), u(c.scalar_mul)),
+        ("scalar_div".into(), u(c.scalar_div)),
+        ("scalar_mem".into(), u(c.scalar_mem)),
+        ("scalar_branch".into(), u(c.scalar_branch)),
+        ("scalar_csr".into(), u(c.scalar_csr)),
+        ("offload_stall_cycles".into(), u(c.offload_stall_cycles)),
+        ("vec_dispatch".into(), u(c.vec_dispatch)),
+        ("hart_vec_dispatch".into(), u(c.hart_vec_dispatch)),
+        ("broadcast_dispatch".into(), u(c.broadcast_dispatch)),
+        ("vec_elem_alu".into(), u(c.vec_elem_alu)),
+        ("vec_elem_mul".into(), u(c.vec_elem_mul)),
+        ("vec_elem_mac".into(), u(c.vec_elem_mac)),
+        ("vec_elem_move".into(), u(c.vec_elem_move)),
+        ("vec_elem_red".into(), u(c.vec_elem_red)),
+        ("vec_elem_mem".into(), u(c.vec_elem_mem)),
+        ("vrf_read".into(), u(c.vrf_read)),
+        ("vrf_write".into(), u(c.vrf_write)),
+        ("barriers".into(), u(c.barriers)),
+        ("barrier_wait_cycles".into(), u(c.barrier_wait_cycles)),
+        ("fence_wait_cycles".into(), u(c.fence_wait_cycles)),
+        ("mode_switches".into(), u(c.mode_switches)),
+        (
+            "cycles_core_busy".into(),
+            Json::Arr(c.cycles_core_busy.iter().map(|&v| u(v)).collect()),
+        ),
+        (
+            "cycles_unit_busy".into(),
+            Json::Arr(c.cycles_unit_busy.iter().map(|&v| u(v)).collect()),
+        ),
+    ])
+}
+
+fn pair_u64(j: &Json, key: &str) -> anyhow::Result<[u64; 2]> {
+    let arr = need(j, key)?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("field `{key}` must be an array"))?;
+    anyhow::ensure!(arr.len() == 2, "field `{key}` must have 2 entries");
+    let a = arr[0]
+        .as_u64()
+        .ok_or_else(|| anyhow::anyhow!("field `{key}`[0] must be an integer"))?;
+    let b = arr[1]
+        .as_u64()
+        .ok_or_else(|| anyhow::anyhow!("field `{key}`[1] must be an integer"))?;
+    Ok([a, b])
+}
+
+fn counters_from_json(j: &Json) -> anyhow::Result<Counters> {
+    Ok(Counters {
+        scalar_ifetch: need_u64(j, "scalar_ifetch")?,
+        scalar_alu: need_u64(j, "scalar_alu")?,
+        scalar_mul: need_u64(j, "scalar_mul")?,
+        scalar_div: need_u64(j, "scalar_div")?,
+        scalar_mem: need_u64(j, "scalar_mem")?,
+        scalar_branch: need_u64(j, "scalar_branch")?,
+        scalar_csr: need_u64(j, "scalar_csr")?,
+        offload_stall_cycles: need_u64(j, "offload_stall_cycles")?,
+        vec_dispatch: need_u64(j, "vec_dispatch")?,
+        hart_vec_dispatch: need_u64(j, "hart_vec_dispatch")?,
+        broadcast_dispatch: need_u64(j, "broadcast_dispatch")?,
+        vec_elem_alu: need_u64(j, "vec_elem_alu")?,
+        vec_elem_mul: need_u64(j, "vec_elem_mul")?,
+        vec_elem_mac: need_u64(j, "vec_elem_mac")?,
+        vec_elem_move: need_u64(j, "vec_elem_move")?,
+        vec_elem_red: need_u64(j, "vec_elem_red")?,
+        vec_elem_mem: need_u64(j, "vec_elem_mem")?,
+        vrf_read: need_u64(j, "vrf_read")?,
+        vrf_write: need_u64(j, "vrf_write")?,
+        barriers: need_u64(j, "barriers")?,
+        barrier_wait_cycles: need_u64(j, "barrier_wait_cycles")?,
+        fence_wait_cycles: need_u64(j, "fence_wait_cycles")?,
+        mode_switches: need_u64(j, "mode_switches")?,
+        cycles_core_busy: pair_u64(j, "cycles_core_busy")?,
+        cycles_unit_busy: pair_u64(j, "cycles_unit_busy")?,
+    })
+}
+
+fn metrics_to_json(m: &RunMetrics) -> Json {
+    Json::Obj(vec![
+        ("cycles".into(), u(m.cycles)),
+        ("flops".into(), u(m.flops)),
+        ("counters".into(), counters_to_json(&m.counters)),
+        (
+            "tcdm".into(),
+            Json::Obj(vec![
+                ("accesses".into(), u(m.tcdm.accesses)),
+                ("conflicts".into(), u(m.tcdm.conflicts)),
+            ]),
+        ),
+        (
+            "icache".into(),
+            Json::Obj(vec![
+                ("hits".into(), u(m.icache.hits)),
+                ("misses".into(), u(m.icache.misses)),
+            ]),
+        ),
+        ("dma_cycles".into(), u(m.dma_cycles)),
+        ("energy_pj".into(), Json::num(m.energy_pj)),
+    ])
+}
+
+fn metrics_from_json(j: &Json) -> anyhow::Result<RunMetrics> {
+    let tcdm = need(j, "tcdm")?;
+    let icache = need(j, "icache")?;
+    Ok(RunMetrics {
+        cycles: need_u64(j, "cycles")?,
+        flops: need_u64(j, "flops")?,
+        counters: counters_from_json(need(j, "counters")?)?,
+        tcdm: crate::mem::tcdm::TcdmStats {
+            accesses: need_u64(tcdm, "accesses")?,
+            conflicts: need_u64(tcdm, "conflicts")?,
+        },
+        icache: crate::mem::icache::ICacheStats {
+            hits: need_u64(icache, "hits")?,
+            misses: need_u64(icache, "misses")?,
+        },
+        dma_cycles: need_u64(j, "dma_cycles")?,
+        energy_pj: need_f64(j, "energy_pj")?,
+    })
+}
+
+/// Every field of a [`JobReport`], canonically ordered.
+pub fn report_to_json(r: &JobReport) -> Json {
+    Json::Obj(vec![
+        ("job_name".into(), Json::str(r.job_name.clone())),
+        ("kernel".into(), Json::str(r.kernel.name())),
+        ("deploy".into(), Json::str(r.deploy.name())),
+        ("metrics".into(), metrics_to_json(&r.metrics)),
+        ("kernel_cycles".into(), u(r.kernel_cycles)),
+        ("scalar_cycles".into(), Json::opt(r.scalar_cycles, u)),
+        (
+            "coremark_checksum".into(),
+            Json::opt(r.coremark_checksum, |c| u(c as u64)),
+        ),
+        (
+            "verified_max_rel_err".into(),
+            Json::opt(r.verified_max_rel_err, Json::num),
+        ),
+    ])
+}
+
+pub fn report_from_json(j: &Json) -> anyhow::Result<JobReport> {
+    let kernel_name = need_str(j, "kernel")?;
+    let deploy_name = need_str(j, "deploy")?;
+    let checksum = opt_u64(j, "coremark_checksum")?;
+    let verified = match j.get("verified_max_rel_err") {
+        None | Some(Json::Null) => None,
+        Some(v) => Some(
+            v.as_f64()
+                .ok_or_else(|| anyhow::anyhow!("`verified_max_rel_err` must be a number"))?,
+        ),
+    };
+    Ok(JobReport {
+        job_name: need_str(j, "job_name")?.to_string(),
+        kernel: KernelId::from_name(kernel_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown kernel `{kernel_name}`"))?,
+        deploy: Deployment::from_name(deploy_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown deployment `{deploy_name}`"))?,
+        metrics: metrics_from_json(need(j, "metrics")?)?,
+        kernel_cycles: need_u64(j, "kernel_cycles")?,
+        scalar_cycles: opt_u64(j, "scalar_cycles")?,
+        coremark_checksum: match checksum {
+            None => None,
+            Some(v) => {
+                anyhow::ensure!(v <= u16::MAX as u64, "`coremark_checksum` out of u16 range");
+                Some(v as u16)
+            }
+        },
+        verified_max_rel_err: verified,
+    })
+}
+
+/// Content digest over a report sequence (FNV-1a of the canonical
+/// encodings): the `batch` response's determinism proof — equal iff
+/// every report is byte-identical, cheap to compare across runs and
+/// against a locally computed reference.
+pub fn reports_digest<'a>(reports: impl IntoIterator<Item = &'a JobReport>) -> u64 {
+    let mut h = Fnv1a::new();
+    for r in reports {
+        h.write(report_to_json(r).encode().as_bytes());
+        h.write(b"\n");
+    }
+    h.finish()
+}
+
+// ---- requests ----
+
+/// Parse one request line.
+pub fn parse_request(line: &str) -> anyhow::Result<Request> {
+    let j = Json::parse(line).map_err(|e| anyhow::anyhow!("{e}"))?;
+    anyhow::ensure!(
+        matches!(j, Json::Obj(_)),
+        "request must be a JSON object"
+    );
+    let seed = opt_u64(&j, "seed")?;
+    match need_str(&j, "op")? {
+        "submit" => Ok(Request::Submit {
+            job: job_from_json(need(&j, "job")?)?,
+            seed,
+        }),
+        "batch" => {
+            let name = need_str(&j, "scenario")?;
+            let kind = ScenarioKind::from_name(name).ok_or_else(|| {
+                anyhow::anyhow!("unknown scenario `{name}` (kernel-sweep|mixed-sweep|storm)")
+            })?;
+            let jobs = need_u64(&j, "jobs")? as usize;
+            anyhow::ensure!(jobs >= 1, "`jobs` must be >= 1");
+            Ok(Request::Batch { kind, jobs, seed })
+        }
+        "status" => Ok(Request::Status),
+        "metrics" => Ok(Request::Metrics),
+        "shutdown" => Ok(Request::Shutdown),
+        other => anyhow::bail!("unknown op `{other}` (submit|batch|status|metrics|shutdown)"),
+    }
+}
+
+/// Canonical request lines (what `loadgen` sends; the parser inverts
+/// them exactly — tested).
+pub fn encode_request(req: &Request) -> String {
+    let j = match req {
+        Request::Submit { job, seed } => {
+            let mut fields = vec![
+                ("op".to_string(), Json::str("submit")),
+                ("job".to_string(), job_to_json(job)),
+            ];
+            if let Some(s) = seed {
+                fields.push(("seed".to_string(), u(*s)));
+            }
+            Json::Obj(fields)
+        }
+        Request::Batch { kind, jobs, seed } => {
+            let mut fields = vec![
+                ("op".to_string(), Json::str("batch")),
+                ("scenario".to_string(), Json::str(kind.name())),
+                ("jobs".to_string(), u(*jobs as u64)),
+            ];
+            if let Some(s) = seed {
+                fields.push(("seed".to_string(), u(*s)));
+            }
+            Json::Obj(fields)
+        }
+        Request::Status => Json::Obj(vec![("op".into(), Json::str("status"))]),
+        Request::Metrics => Json::Obj(vec![("op".into(), Json::str("metrics"))]),
+        Request::Shutdown => Json::Obj(vec![("op".into(), Json::str("shutdown"))]),
+    };
+    j.encode()
+}
+
+// ---- responses (server side builders, shared with loadgen's decoder) ----
+
+/// `{"ok":false,"code":C,"error":...}`.
+pub fn error_response(code: u16, msg: &str) -> String {
+    Json::Obj(vec![
+        ("ok".into(), Json::Bool(false)),
+        ("code".into(), u(code as u64)),
+        ("error".into(), Json::str(msg)),
+    ])
+    .encode()
+}
+
+/// Wrap success fields as `{"ok":true,<fields...>}`.
+pub fn ok_response(fields: Vec<(String, Json)>) -> String {
+    let mut all = vec![("ok".to_string(), Json::Bool(true))];
+    all.extend(fields);
+    Json::Obj(all).encode()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::coordinator::Coordinator;
+
+    #[test]
+    fn job_json_roundtrip() {
+        let jobs = [
+            Job::Kernel { kernel: KernelId::Fft, policy: ModePolicy::Merge },
+            Job::Kernel { kernel: KernelId::Faxpy, policy: ModePolicy::Split },
+            Job::Mixed {
+                kernel: KernelId::Fmatmul,
+                policy: ModePolicy::Auto,
+                coremark_iterations: 3,
+            },
+        ];
+        for job in &jobs {
+            let encoded = job_to_json(job).encode();
+            let back = job_from_json(&Json::parse(&encoded).unwrap()).unwrap();
+            assert_eq!(&back, job, "{encoded}");
+        }
+    }
+
+    #[test]
+    fn job_json_rejects_nonsense() {
+        for bad in [
+            r#"{"type":"kernel","kernel":"nope","mode":"auto"}"#,
+            r#"{"type":"kernel","kernel":"fft","mode":"warp"}"#,
+            r#"{"type":"mixed","kernel":"fft","mode":"auto"}"#, // missing iters
+            r#"{"type":"mixed","kernel":"fft","mode":"auto","iters":0}"#,
+            r#"{"type":"scalar","kernel":"fft","mode":"auto"}"#,
+            r#"{"kernel":"fft","mode":"auto"}"#, // missing type
+        ] {
+            assert!(
+                job_from_json(&Json::parse(bad).unwrap()).is_err(),
+                "should reject: {bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn report_json_roundtrips_real_simulated_reports() {
+        let mut c = Coordinator::new(SimConfig::spatzformer()).unwrap();
+        for job in [
+            Job::Kernel { kernel: KernelId::Fdotp, policy: ModePolicy::Merge },
+            Job::Mixed {
+                kernel: KernelId::Faxpy,
+                policy: ModePolicy::Auto,
+                coremark_iterations: 2,
+            },
+        ] {
+            let direct = c.submit(&job).unwrap();
+            let line = report_to_json(&direct).encode();
+            let back = report_from_json(&Json::parse(&line).unwrap()).unwrap();
+            assert_eq!(back, direct, "decoded report must be byte-identical");
+            // re-encoding the decoded report reproduces the exact line
+            assert_eq!(report_to_json(&back).encode(), line);
+        }
+    }
+
+    #[test]
+    fn digest_distinguishes_reports() {
+        let mut c = Coordinator::new(SimConfig::spatzformer()).unwrap();
+        let a = c
+            .submit(&Job::Kernel { kernel: KernelId::Faxpy, policy: ModePolicy::Split })
+            .unwrap();
+        let b = c
+            .submit(&Job::Kernel { kernel: KernelId::Faxpy, policy: ModePolicy::Merge })
+            .unwrap();
+        assert_eq!(reports_digest([&a, &b]), reports_digest([&a, &b]));
+        assert_ne!(reports_digest([&a, &b]), reports_digest([&b, &a]));
+        assert_ne!(reports_digest([&a]), reports_digest([&b]));
+    }
+
+    #[test]
+    fn request_lines_roundtrip() {
+        let reqs = [
+            Request::Submit {
+                job: Job::Kernel { kernel: KernelId::Fdct, policy: ModePolicy::Auto },
+                seed: Some(u64::MAX), // full-width seeds survive the wire
+            },
+            Request::Submit {
+                job: Job::Mixed {
+                    kernel: KernelId::Conv2d,
+                    policy: ModePolicy::Split,
+                    coremark_iterations: 1,
+                },
+                seed: None,
+            },
+            Request::Batch { kind: ScenarioKind::Storm, jobs: 64, seed: Some(7) },
+            Request::Status,
+            Request::Metrics,
+            Request::Shutdown,
+        ];
+        for req in &reqs {
+            let line = encode_request(req);
+            let back = parse_request(&line).unwrap();
+            assert_eq!(&back, req, "{line}");
+        }
+    }
+
+    #[test]
+    fn malformed_requests_are_rejected() {
+        for bad in [
+            "",
+            "not json",
+            "[1,2]",
+            r#"{"op":"fly"}"#,
+            r#"{"job":{}}"#,
+            r#"{"op":"submit"}"#,
+            r#"{"op":"batch","scenario":"nope","jobs":4}"#,
+            r#"{"op":"batch","scenario":"storm","jobs":0}"#,
+            r#"{"op":"batch","scenario":"storm"}"#,
+            r#"{"op":"submit","job":{"type":"kernel","kernel":"fft","mode":"auto"},"seed":-1}"#,
+        ] {
+            assert!(parse_request(bad).is_err(), "should reject: {bad:?}");
+        }
+    }
+
+    #[test]
+    fn response_builders() {
+        let e = error_response(429, "queue full");
+        let j = Json::parse(&e).unwrap();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(j.get("code").unwrap().as_u64(), Some(429));
+        let o = ok_response(vec![("x".into(), Json::num(1.0))]);
+        let j = Json::parse(&o).unwrap();
+        assert_eq!(j.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("x").unwrap().as_u64(), Some(1));
+    }
+}

@@ -1,0 +1,644 @@
+//! Minimal JSON encoder/decoder (`serde` is unavailable offline).
+//!
+//! This is the wire format of the `spatzd` simulation service
+//! ([`crate::server`]): newline-delimited JSON objects over TCP. The
+//! implementation is deliberately small but *strict* — the parser
+//! accepts exactly the JSON grammar (RFC 8259) and rejects everything
+//! else loudly, because a network-facing daemon must never guess at
+//! malformed input:
+//!
+//! * numbers follow the JSON grammar (`-?(0|[1-9][0-9]*)(\.[0-9]+)?`
+//!   with optional exponent) — `01`, `1.`, `.5`, `+1`, `NaN` are errors;
+//! * strings reject raw control characters and lone UTF-16 surrogates,
+//!   and handle the full escape set including `\uXXXX` surrogate pairs;
+//! * nesting depth is bounded ([`MAX_DEPTH`]) so hostile input cannot
+//!   overflow the stack;
+//! * trailing garbage after the top-level value is an error.
+//!
+//! **Round-trip contract.** Encoding is canonical and deterministic:
+//! object keys keep insertion order, floats use Rust's shortest
+//! round-trip formatting, and integral values in the f64-exact range
+//! print as integers. For every finite-number document,
+//! `parse(encode(v))` reproduces `v` exactly (numbers compare equal as
+//! f64) — the seeded fuzz in `rust/tests/properties.rs` holds the
+//! implementation to this, in the style of the asm print→parse fuzz.
+//! Non-finite numbers cannot be produced by [`Json::num`] (it panics),
+//! mirroring JSON's own inability to represent them.
+
+use std::fmt;
+
+/// Nesting bound for arrays/objects (stack-overflow guard).
+pub const MAX_DEPTH: usize = 128;
+
+/// Largest integer magnitude exactly representable in an f64 (2^53).
+const F64_EXACT: f64 = 9_007_199_254_740_992.0;
+
+/// A JSON value. Objects preserve insertion order (a `Vec`, not a map):
+/// encoding is deterministic, which the server's byte-identity contract
+/// relies on.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    /// All JSON numbers are f64 (like JavaScript). 64-bit identities
+    /// that may exceed 2^53 (workload seeds) travel as decimal strings
+    /// — see [`Json::u64_lossless`].
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+/// Parse error with a byte offset into the input.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JsonError {
+    pub msg: String,
+    pub at: usize,
+}
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json: {} at byte {}", self.msg, self.at)
+    }
+}
+
+impl std::error::Error for JsonError {}
+
+impl Json {
+    // ---- builders ----
+
+    /// A finite number. Panics on NaN/infinity — JSON cannot represent
+    /// them, and silently encoding `null` would corrupt report fields.
+    pub fn num(x: f64) -> Json {
+        assert!(x.is_finite(), "JSON numbers must be finite (got {x})");
+        Json::Num(x)
+    }
+
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    /// A u64 that survives the f64 wire type: values above 2^53 are
+    /// encoded as decimal strings ([`Json::as_u64`] accepts both forms).
+    pub fn u64_lossless(v: u64) -> Json {
+        if (v as f64) < F64_EXACT {
+            Json::Num(v as f64)
+        } else {
+            Json::Str(v.to_string())
+        }
+    }
+
+    /// `Some(x) -> f(x)`, `None -> null`.
+    pub fn opt<T>(v: Option<T>, f: impl FnOnce(T) -> Json) -> Json {
+        v.map_or(Json::Null, f)
+    }
+
+    // ---- accessors ----
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// Non-negative integral number — or its decimal-string form (the
+    /// [`Json::u64_lossless`] encoding for values above 2^53).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(x) if (0.0..F64_EXACT).contains(x) && x.fract() == 0.0 => Some(*x as u64),
+            Json::Str(s) if !s.is_empty() && s.bytes().all(|b| b.is_ascii_digit()) => {
+                s.parse().ok()
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, Json::Null)
+    }
+
+    /// Object field lookup (first match; canonical encoders never emit
+    /// duplicate keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    // ---- encoding ----
+
+    /// Canonical single-line encoding (no insignificant whitespace).
+    pub fn encode(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::Num(x) => write_num(*x, out),
+            Json::Str(s) => write_str(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_str(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    // ---- decoding ----
+
+    /// Parse one complete JSON document; trailing non-whitespace errors.
+    pub fn parse(input: &str) -> Result<Json, JsonError> {
+        let mut p = Parser {
+            bytes: input.as_bytes(),
+            pos: 0,
+        };
+        p.skip_ws();
+        let v = p.value(0)?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            return Err(p.err("trailing characters after value"));
+        }
+        Ok(v)
+    }
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.encode())
+    }
+}
+
+/// Number encoding: exact-range integral values print as integers
+/// (`-0.0` excepted — it keeps its sign via the float form); everything
+/// else uses Rust's shortest-round-trip float formatting, which the
+/// JSON number grammar accepts and `f64::from_str` inverts exactly.
+fn write_num(x: f64, out: &mut String) {
+    debug_assert!(x.is_finite(), "non-finite number reached the encoder");
+    if x.fract() == 0.0 && x.abs() < F64_EXACT && !(x == 0.0 && x.is_sign_negative()) {
+        out.push_str(&format!("{}", x as i64));
+    } else {
+        out.push_str(&format!("{x:?}"));
+    }
+}
+
+fn write_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            '\u{08}' => out.push_str("\\b"),
+            '\u{0C}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: impl Into<String>) -> JsonError {
+        JsonError {
+            msg: msg.into(),
+            at: self.pos,
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), JsonError> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(format!("expected '{}'", b as char)))
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json, JsonError> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(self.err(format!("invalid literal (expected `{word}`)")))
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json, JsonError> {
+        if depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        match self.peek() {
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'"') => self.string().map(Json::Str),
+            Some(b'[') => self.array(depth),
+            Some(b'{') => self.object(depth),
+            Some(b'-' | b'0'..=b'9') => self.number(),
+            Some(_) => Err(self.err("unexpected character")),
+            None => Err(self.err("unexpected end of input")),
+        }
+    }
+
+    fn array(&mut self, depth: usize) -> Result<Json, JsonError> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value(depth + 1)?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(self.err("expected ',' or ']' in array")),
+            }
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<Json, JsonError> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            if self.peek() != Some(b'"') {
+                return Err(self.err("expected string key in object"));
+            }
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let val = self.value(depth + 1)?;
+            fields.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => return Err(self.err("expected ',' or '}' in object")),
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u16, JsonError> {
+        let mut v: u16 = 0;
+        for _ in 0..4 {
+            let d = match self.peek() {
+                Some(b @ b'0'..=b'9') => b - b'0',
+                Some(b @ b'a'..=b'f') => b - b'a' + 10,
+                Some(b @ b'A'..=b'F') => b - b'A' + 10,
+                _ => return Err(self.err("invalid \\u escape (need 4 hex digits)")),
+            };
+            v = (v << 4) | d as u16;
+            self.pos += 1;
+        }
+        Ok(v)
+    }
+
+    fn string(&mut self) -> Result<String, JsonError> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let start = self.pos;
+            // fast-forward over the plain (unescaped, non-control) run
+            while let Some(b) = self.peek() {
+                if b == b'"' || b == b'\\' || b < 0x20 {
+                    break;
+                }
+                self.pos += 1;
+            }
+            // the input is &str, so any byte run between structural
+            // characters is valid UTF-8
+            out.push_str(std::str::from_utf8(&self.bytes[start..self.pos]).unwrap());
+            match self.peek() {
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'b') => out.push('\u{08}'),
+                        Some(b'f') => out.push('\u{0C}'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'u') => {
+                            self.pos += 1;
+                            let hi = self.hex4()?;
+                            let c = match hi {
+                                0xD800..=0xDBFF => {
+                                    // high surrogate: a \uDC00..\uDFFF pair half must follow
+                                    if self.peek() == Some(b'\\') {
+                                        self.pos += 1;
+                                    } else {
+                                        return Err(self.err("lone high surrogate"));
+                                    }
+                                    if self.peek() == Some(b'u') {
+                                        self.pos += 1;
+                                    } else {
+                                        return Err(self.err("lone high surrogate"));
+                                    }
+                                    let lo = self.hex4()?;
+                                    if !(0xDC00..=0xDFFF).contains(&lo) {
+                                        return Err(self.err("invalid low surrogate"));
+                                    }
+                                    let cp = 0x10000
+                                        + ((hi as u32 - 0xD800) << 10)
+                                        + (lo as u32 - 0xDC00);
+                                    char::from_u32(cp)
+                                        .ok_or_else(|| self.err("invalid surrogate pair"))?
+                                }
+                                0xDC00..=0xDFFF => return Err(self.err("lone low surrogate")),
+                                v => char::from_u32(v as u32)
+                                    .ok_or_else(|| self.err("invalid \\u escape"))?,
+                            };
+                            out.push(c);
+                            continue; // hex4 already advanced past the digits
+                        }
+                        _ => return Err(self.err("invalid escape")),
+                    }
+                    self.pos += 1;
+                }
+                Some(_) => return Err(self.err("raw control character in string")),
+                None => return Err(self.err("unterminated string")),
+            }
+        }
+    }
+
+    fn digits(&mut self) -> usize {
+        let start = self.pos;
+        while matches!(self.peek(), Some(b'0'..=b'9')) {
+            self.pos += 1;
+        }
+        self.pos - start
+    }
+
+    fn number(&mut self) -> Result<Json, JsonError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        // int part: 0 | [1-9][0-9]*
+        match self.peek() {
+            Some(b'0') => {
+                self.pos += 1;
+                if matches!(self.peek(), Some(b'0'..=b'9')) {
+                    return Err(self.err("leading zero in number"));
+                }
+            }
+            Some(b'1'..=b'9') => {
+                self.digits();
+            }
+            _ => return Err(self.err("invalid number")),
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            if self.digits() == 0 {
+                return Err(self.err("digits required after decimal point"));
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            if self.digits() == 0 {
+                return Err(self.err("digits required in exponent"));
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        let x: f64 = text
+            .parse()
+            .map_err(|_| self.err(format!("unparseable number `{text}`")))?;
+        if !x.is_finite() {
+            return Err(self.err(format!("number out of f64 range `{text}`")));
+        }
+        Ok(Json::Num(x))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(v: &Json) -> Json {
+        Json::parse(&v.encode()).unwrap()
+    }
+
+    #[test]
+    fn scalars_roundtrip() {
+        for v in [
+            Json::Null,
+            Json::Bool(true),
+            Json::Bool(false),
+            Json::num(0.0),
+            Json::num(-0.0),
+            Json::num(42.0),
+            Json::num(-17.5),
+            Json::num(1e300),
+            Json::num(5e-324), // smallest subnormal
+            Json::str(""),
+            Json::str("hello"),
+            Json::str("esc \" \\ \n \t \u{8} \u{c} \r / ünïcödé 🚀"),
+            Json::str("\u{1}\u{1f}"), // control chars force \u escapes
+        ] {
+            assert_eq!(roundtrip(&v), v, "{}", v.encode());
+        }
+        // -0.0 keeps its sign bit through the wire
+        let z = roundtrip(&Json::num(-0.0));
+        assert!(z.as_f64().unwrap().is_sign_negative());
+    }
+
+    #[test]
+    fn nested_structures_roundtrip() {
+        let v = Json::Obj(vec![
+            ("a".into(), Json::Arr(vec![Json::num(1.0), Json::Null])),
+            (
+                "b".into(),
+                Json::Obj(vec![("k y".into(), Json::str("v"))]),
+            ),
+            ("empty_arr".into(), Json::Arr(vec![])),
+            ("empty_obj".into(), Json::Obj(vec![])),
+        ]);
+        assert_eq!(roundtrip(&v), v);
+        assert_eq!(
+            v.encode(),
+            r#"{"a":[1,null],"b":{"k y":"v"},"empty_arr":[],"empty_obj":{}}"#
+        );
+    }
+
+    #[test]
+    fn canonical_encoding_is_stable() {
+        let v = Json::Obj(vec![
+            ("x".into(), Json::num(1.5)),
+            ("y".into(), Json::Arr(vec![Json::Bool(true)])),
+        ]);
+        assert_eq!(v.encode(), r#"{"x":1.5,"y":[true]}"#);
+        assert_eq!(Json::num(3.0).encode(), "3");
+        assert_eq!(Json::num(-0.0).encode(), "-0.0");
+    }
+
+    #[test]
+    fn parses_whitespace_and_escapes() {
+        let v = Json::parse(" { \"a\" :\t[ 1 ,\n 2 ] , \"s\" : \"\\u0041\\u00e9\\ud83d\\ude80\" } ").unwrap();
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(v.get("s").unwrap().as_str(), Some("Aé🚀"));
+    }
+
+    #[test]
+    fn u64_lossless_roundtrip() {
+        for v in [0u64, 1, 1 << 52, (1 << 53) - 1, 1 << 53, u64::MAX] {
+            let j = roundtrip(&Json::u64_lossless(v));
+            assert_eq!(j.as_u64(), Some(v), "{v}");
+        }
+        // above 2^53 travels as a string
+        assert!(matches!(Json::u64_lossless(u64::MAX), Json::Str(_)));
+        assert!(matches!(Json::u64_lossless(12), Json::Num(_)));
+    }
+
+    #[test]
+    fn accessors() {
+        let v = Json::parse(r#"{"n":3,"f":2.5,"s":"x","b":false,"z":null,"a":[1]}"#).unwrap();
+        assert_eq!(v.get("n").unwrap().as_u64(), Some(3));
+        assert_eq!(v.get("f").unwrap().as_f64(), Some(2.5));
+        assert_eq!(v.get("f").unwrap().as_u64(), None, "fractional is not u64");
+        assert_eq!(v.get("s").unwrap().as_str(), Some("x"));
+        assert_eq!(v.get("b").unwrap().as_bool(), Some(false));
+        assert!(v.get("z").unwrap().is_null());
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap().len(), 1);
+        assert!(v.get("missing").is_none());
+        assert_eq!(Json::num(-1.0).as_u64(), None, "negative is not u64");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for bad in [
+            "",
+            "  ",
+            "{",
+            "}",
+            "[1,",
+            "[1 2]",
+            "{\"a\" 1}",
+            "{\"a\":}",
+            "{a:1}",
+            "nul",
+            "truee",
+            "01",
+            "1.",
+            ".5",
+            "+1",
+            "-",
+            "1e",
+            "1e+",
+            "NaN",
+            "Infinity",
+            "1e999",                    // overflows f64
+            "\"unterminated",
+            "\"bad \\q escape\"",
+            "\"lone hi \\ud800\"",
+            "\"lone lo \\udc00\"",
+            "\"\\ud800\\u0041\"",       // hi surrogate + non-surrogate
+            "\"ctrl \u{1} raw\"",
+            "[1] trailing",
+            "{\"a\":1} {\"b\":2}",
+        ] {
+            assert!(Json::parse(bad).is_err(), "should reject: {bad:?}");
+        }
+    }
+
+    #[test]
+    fn rejects_hostile_nesting() {
+        let deep = "[".repeat(MAX_DEPTH + 8) + &"]".repeat(MAX_DEPTH + 8);
+        assert!(Json::parse(&deep).is_err());
+        // ... but a reasonable depth is fine
+        let ok = "[".repeat(32) + "1" + &"]".repeat(32);
+        assert!(Json::parse(&ok).is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn non_finite_numbers_are_unrepresentable() {
+        Json::num(f64::NAN);
+    }
+}

@@ -1,18 +1,21 @@
 //! Small self-contained utilities: deterministic PRNG, statistics,
-//! a micro-benchmark harness, and a property-testing harness.
+//! a micro-benchmark harness, a property-testing harness, and a strict
+//! minimal JSON codec.
 //!
-//! The build environment is fully offline, so `rand`, `criterion` and
-//! `proptest` are unavailable; these modules are their tested, minimal
-//! stand-ins.
+//! The build environment is fully offline, so `rand`, `criterion`,
+//! `proptest` and `serde` are unavailable; these modules are their
+//! tested, minimal stand-ins.
 
 pub mod bench;
 pub mod cache;
 pub mod fnv;
+pub mod json;
 pub mod prng;
 pub mod stats;
 pub mod testutil;
 
 pub use cache::CountingCache;
 pub use fnv::Fnv1a;
+pub use json::Json;
 pub use prng::SplitMix64;
 pub use stats::Summary;

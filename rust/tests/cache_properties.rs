@@ -53,14 +53,26 @@ fn prop_scheduling_knobs_never_change_the_key() {
         } else {
             EngineKind::Fast
         };
+        // ... including the whole [server] section: where a cluster is
+        // served from must never change what it computes
+        mutated.server.addr = format!("10.0.0.{}:{}", g.int(1, 254), g.int(1024, 65535));
+        mutated.server.queue_depth = g.int(1, 4096);
+        mutated.server.workers = g.int(0, 64);
         assert_eq!(
             job_key(&mutated, &job),
             key,
-            "scheduling knobs must not split the key space: {:?}/{:?}/{:?}/{:?}",
+            "scheduling knobs must not split the key space: {:?}/{:?}/{:?}/{:?}/{:?}",
             mutated.fleet.workers,
             mutated.fleet.cache,
             mutated.compile.cache,
-            mutated.engine
+            mutated.engine,
+            mutated.server
+        );
+        // the compile key ignores them too
+        use spatzformer::compile::compile_key;
+        assert_eq!(
+            compile_key(&mutated.cluster, mutated.seed, &job),
+            compile_key(&cfg.cluster, cfg.seed, &job)
         );
     });
 }

@@ -282,3 +282,112 @@ fn prop_gather_scatter_random_permutations() {
         }
     });
 }
+
+// ---- util::json: seeded encode→parse round-trip fuzz (the wire codec
+// behind spatzd), in the same style as the asm print→parse fuzz ----
+
+/// Random finite f64: integers, uniform ranges, tiny/huge magnitudes,
+/// pool edge cases, and raw random bit patterns (filtered to finite).
+fn arb_f64(g: &mut Gen) -> f64 {
+    match g.int(0, 5) {
+        0 => (g.rng.next_u64() >> 12) as f64, // exact integers < 2^52
+        1 => -((g.rng.next_u64() >> 40) as f64),
+        2 => *g.choose(&[
+            0.0,
+            -0.0,
+            1.5,
+            -1.0,
+            1e300,
+            -1e300,
+            5e-324, // smallest subnormal
+            f64::MIN_POSITIVE,
+            9007199254740992.0,  // 2^53: integral but outside the exact range
+            -9007199254740994.0, // -(2^53+2): ditto, negative
+            f64::MAX,
+        ]),
+        3 => g.rng.next_f64() * 1e6 - 5e5,
+        4 => g.rng.next_f64() * 1e-300,
+        _ => {
+            let bits = f64::from_bits(g.rng.next_u64());
+            if bits.is_finite() {
+                bits
+            } else {
+                g.rng.next_f64()
+            }
+        }
+    }
+}
+
+/// Random string over a pool that covers every escape class: quotes,
+/// backslashes, the short escapes, raw control chars, multi-byte UTF-8.
+fn arb_json_string(g: &mut Gen) -> String {
+    let pool = [
+        'a', 'Z', '0', ' ', '"', '\\', '/', '\n', '\r', '\t', '\u{8}', '\u{c}', '\u{1}',
+        '\u{1f}', 'é', 'ü', '中', '🚀', '\u{fffd}',
+    ];
+    g.vec(0, 24, |g| *g.choose(&pool)).into_iter().collect()
+}
+
+fn arb_json(g: &mut Gen, depth: usize) -> spatzformer::util::Json {
+    use spatzformer::util::Json;
+    if depth >= 4 || g.int(0, 2) == 0 {
+        match g.int(0, 3) {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool()),
+            2 => Json::Num(arb_f64(g)),
+            _ => Json::Str(arb_json_string(g)),
+        }
+    } else if g.bool() {
+        Json::Arr(g.vec(0, 5, |g| arb_json(g, depth + 1)))
+    } else {
+        Json::Obj(g.vec(0, 5, |g| (arb_json_string(g), arb_json(g, depth + 1))))
+    }
+}
+
+#[test]
+fn prop_json_encode_parse_roundtrip() {
+    use spatzformer::util::Json;
+    check("json encode→parse roundtrip", 512, |g| {
+        let v = arb_json(g, 0);
+        let encoded = v.encode();
+        let back = Json::parse(&encoded)
+            .unwrap_or_else(|e| panic!("own encoding must parse: {e}\n{encoded}"));
+        assert_eq!(back, v, "roundtrip diverged: {encoded}");
+        // canonical: encoding a decoded value is a fixed point
+        assert_eq!(back.encode(), encoded);
+    });
+}
+
+#[test]
+fn prop_json_numbers_roundtrip_bit_exactly() {
+    use spatzformer::util::Json;
+    check("json f64 bit-exact roundtrip", 512, |g| {
+        let x = arb_f64(g);
+        let encoded = Json::Num(x).encode();
+        let back = Json::parse(&encoded).unwrap().as_f64().unwrap();
+        assert_eq!(
+            back.to_bits(),
+            x.to_bits(),
+            "{x:?} -> {encoded} -> {back:?}"
+        );
+    });
+}
+
+#[test]
+fn prop_json_rejects_trailing_garbage_and_survives_truncation() {
+    use spatzformer::util::Json;
+    check("json malformed-input handling", 256, |g| {
+        let v = arb_json(g, 0);
+        let encoded = v.encode();
+        // a complete document followed by another token must be rejected
+        for suffix in ["x", "[1]", "\"s\"", "1"] {
+            let doc = format!("{encoded} {suffix}");
+            assert!(Json::parse(&doc).is_err(), "accepted trailing garbage: {doc}");
+        }
+        // truncating anywhere must error or parse cleanly — never panic
+        let cut = g.int(0, encoded.len());
+        if encoded.is_char_boundary(cut) {
+            let _ = Json::parse(&encoded[..cut]);
+        }
+    });
+}

@@ -1,0 +1,330 @@
+//! The `spatzd` service contract, proven over loopback:
+//!
+//! (a) **byte-identity** — a served `JobReport` is byte-identical to a
+//!     direct `Coordinator` run of the same job, for a kernel ×
+//!     deployment grid on both architectures (decoded reports compare
+//!     `PartialEq`-equal *and* the response's report node re-encodes to
+//!     the exact bytes the direct report encodes to);
+//! (b) **admission control** — a request that does not fit the bounded
+//!     queue gets an explicit `429`-style reject response, never a hang
+//!     or a silent drop, and the daemon keeps serving afterwards;
+//! (c) **replayability** — `loadgen` with the same seed reproduces the
+//!     same request stream, and a live loadgen run against the daemon
+//!     answers every request.
+//!
+//! Plus: batch digests are deterministic and match locally computed
+//! reports, and shutdown drains cleanly.
+
+use spatzformer::config::SimConfig;
+use spatzformer::coordinator::{Coordinator, Job, JobReport, ModePolicy};
+use spatzformer::fleet::scenario::{self, ScenarioKind};
+use spatzformer::kernels::KernelId;
+use spatzformer::server::{self, loadgen, proto, RunningServer};
+use spatzformer::util::Json;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpStream};
+
+/// Start an in-process daemon on an ephemeral loopback port.
+fn start(mut cfg: SimConfig) -> RunningServer {
+    cfg.server.addr = "127.0.0.1:0".to_string();
+    server::serve(cfg).expect("daemon failed to start")
+}
+
+/// One client connection speaking the line protocol.
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect to spatzd");
+        let read_half = stream.try_clone().unwrap();
+        Client {
+            reader: BufReader::new(read_half),
+            writer: BufWriter::new(stream),
+        }
+    }
+
+    /// Send one request line, return the decoded response.
+    fn roundtrip(&mut self, line: &str) -> Json {
+        writeln!(self.writer, "{line}").unwrap();
+        self.writer.flush().unwrap();
+        let mut response = String::new();
+        let n = self.reader.read_line(&mut response).unwrap();
+        assert!(n > 0, "daemon closed the connection mid-request");
+        Json::parse(response.trim()).unwrap_or_else(|e| {
+            panic!("unparseable response: {e}\n{response}")
+        })
+    }
+
+    fn submit(&mut self, job: &Job) -> Json {
+        self.roundtrip(&proto::encode_request(&proto::Request::Submit {
+            job: job.clone(),
+            seed: None,
+        }))
+    }
+}
+
+fn assert_ok(resp: &Json) {
+    assert_eq!(
+        resp.get("ok").and_then(Json::as_bool),
+        Some(true),
+        "expected success: {resp}"
+    );
+}
+
+/// (a) The determinism contract, kernel × policy grid on both arches.
+#[test]
+fn served_reports_are_byte_identical_to_direct_coordinator_runs() {
+    for baseline in [false, true] {
+        let cfg = if baseline {
+            SimConfig::baseline()
+        } else {
+            SimConfig::spatzformer()
+        };
+        let mut jobs: Vec<Job> = Vec::new();
+        let policies: &[ModePolicy] = if baseline {
+            &[ModePolicy::Split, ModePolicy::Auto]
+        } else {
+            &[ModePolicy::Split, ModePolicy::Merge, ModePolicy::Auto]
+        };
+        for kernel in KernelId::all() {
+            for &policy in policies {
+                jobs.push(Job::Kernel { kernel, policy });
+            }
+        }
+        jobs.push(Job::Mixed {
+            kernel: KernelId::Fft,
+            policy: ModePolicy::Auto,
+            coremark_iterations: 2,
+        });
+        jobs.push(Job::Mixed {
+            kernel: KernelId::Faxpy,
+            policy: ModePolicy::Split,
+            coremark_iterations: 1,
+        });
+
+        let daemon = start(cfg.clone());
+        let mut client = Client::connect(daemon.addr());
+        let mut direct_coord = Coordinator::new(cfg.clone()).unwrap();
+        for job in &jobs {
+            let resp = client.submit(job);
+            assert_ok(&resp);
+            let node = resp.get("report").expect("submit response carries a report");
+            let served = proto::report_from_json(node)
+                .unwrap_or_else(|e| panic!("{}: {e:#}", job.name()));
+            let direct = direct_coord.submit(job).unwrap();
+            assert_eq!(
+                served, direct,
+                "served report diverges from direct run ({}, baseline={baseline})",
+                job.name()
+            );
+            // byte-level: the wire node re-encodes to exactly what the
+            // direct report encodes to
+            assert_eq!(
+                node.encode(),
+                proto::report_to_json(&direct).encode(),
+                "wire bytes diverge ({})",
+                job.name()
+            );
+        }
+        drop(client);
+        daemon.shutdown();
+        daemon.wait().unwrap();
+    }
+}
+
+/// (b) Admission control: an oversized request is refused explicitly
+/// and immediately; the daemon stays healthy.
+#[test]
+fn full_queue_yields_explicit_reject_not_a_hang() {
+    let mut cfg = SimConfig::spatzformer();
+    cfg.server.queue_depth = 2;
+    cfg.server.workers = 1;
+    let daemon = start(cfg);
+    let mut client = Client::connect(daemon.addr());
+
+    // 64 jobs can never fit a 2-slot queue: explicit 429, all-or-nothing
+    let resp = client.roundtrip(&proto::encode_request(&proto::Request::Batch {
+        kind: ScenarioKind::Storm,
+        jobs: 64,
+        seed: Some(7),
+    }));
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(resp.get("code").and_then(Json::as_u64), Some(429));
+    assert!(
+        resp.get("error").and_then(Json::as_str).unwrap().contains("queue full"),
+        "{resp}"
+    );
+
+    // the reject is visible in status, and the daemon still serves
+    let status = client.roundtrip(&proto::encode_request(&proto::Request::Status));
+    assert_ok(&status);
+    assert_eq!(status.get("accepting").and_then(Json::as_bool), Some(true));
+    assert!(status.get("rejected").and_then(Json::as_u64).unwrap() >= 1);
+
+    let resp = client.roundtrip(&proto::encode_request(&proto::Request::Batch {
+        kind: ScenarioKind::Storm,
+        jobs: 2,
+        seed: Some(7),
+    }));
+    assert_ok(&resp);
+    assert_eq!(resp.get("jobs").and_then(Json::as_u64), Some(2));
+    assert!(resp.get("digest").and_then(Json::as_str).unwrap().starts_with("0x"));
+
+    // a malformed line is a 400, not a dropped connection
+    let resp = client.roundtrip("{\"op\":\"fly\"}");
+    assert_eq!(resp.get("code").and_then(Json::as_u64), Some(400));
+
+    drop(client);
+    daemon.shutdown();
+    daemon.wait().unwrap();
+}
+
+/// Batch responses are deterministic and their digest matches reports
+/// computed directly, without the daemon.
+#[test]
+fn batch_digest_matches_locally_computed_reports() {
+    let cfg = SimConfig::spatzformer();
+    let daemon = start(cfg.clone());
+    let mut client = Client::connect(daemon.addr());
+    let req = proto::encode_request(&proto::Request::Batch {
+        kind: ScenarioKind::KernelSweep,
+        jobs: 10,
+        seed: Some(0xFEED),
+    });
+    let first = client.roundtrip(&req);
+    let second = client.roundtrip(&req);
+    assert_ok(&first);
+    let digest = first.get("digest").and_then(Json::as_str).unwrap();
+    assert_eq!(
+        Some(digest),
+        second.get("digest").and_then(Json::as_str),
+        "same batch twice must digest identically"
+    );
+
+    // local oracle: same scenario through one coordinator
+    let batch = scenario::generate(ScenarioKind::KernelSweep, cfg.cluster.arch, 0xFEED, 10);
+    let mut coord = Coordinator::new(cfg.clone()).unwrap();
+    let reports: Vec<JobReport> = batch
+        .jobs
+        .iter()
+        .map(|fj| {
+            coord.set_seed(fj.seed.unwrap_or(cfg.seed));
+            coord.submit(&fj.job).unwrap()
+        })
+        .collect();
+    let local = format!("{:#018x}", proto::reports_digest(reports.iter()));
+    assert_eq!(digest, local, "served digest must match the local oracle");
+    assert_eq!(
+        first.get("sim_cycles_total").and_then(Json::as_u64).unwrap(),
+        reports.iter().map(|r| r.metrics.cycles).sum::<u64>()
+    );
+
+    drop(client);
+    daemon.shutdown();
+    daemon.wait().unwrap();
+}
+
+/// (c) loadgen determinism + a live run that answers every request.
+#[test]
+fn loadgen_replays_deterministically_and_round_trips() {
+    let cfg = SimConfig::spatzformer();
+    // same seed ⇒ byte-identical request stream, per client
+    for client in 0..3 {
+        let a = loadgen::request_lines(
+            cfg.cluster.arch,
+            ScenarioKind::Storm,
+            42,
+            client,
+            12,
+        );
+        let b = loadgen::request_lines(
+            cfg.cluster.arch,
+            ScenarioKind::Storm,
+            42,
+            client,
+            12,
+        );
+        assert_eq!(a, b, "client {client} stream must replay exactly");
+    }
+
+    let daemon = start(cfg);
+    let opts = loadgen::LoadgenOptions {
+        addr: daemon.addr().to_string(),
+        clients: 2,
+        requests: 4,
+        seed: 42,
+        scenario: ScenarioKind::Storm,
+        send_shutdown: false,
+        ..Default::default()
+    };
+    let report = loadgen::run(&opts).unwrap();
+    assert_eq!(report.sent, 8);
+    assert_eq!(report.ok, 8, "{report:?}");
+    assert_eq!((report.rejected, report.errors), (0, 0), "{report:?}");
+    assert!(report.jobs_per_sec() > 0.0);
+    assert!(report.latency.is_some());
+    assert!(report.render().contains("jobs/s"));
+
+    // metrics endpoint saw exactly those 8 submits
+    let mut client = Client::connect(daemon.addr());
+    let metrics = client.roundtrip(&proto::encode_request(&proto::Request::Metrics));
+    assert_ok(&metrics);
+    assert_eq!(metrics.get("submits").and_then(Json::as_u64), Some(8));
+    assert_eq!(metrics.get("jobs_completed").and_then(Json::as_u64), Some(8));
+    assert!(metrics.get("latency_ms").unwrap().get("p99_ms").is_some());
+    assert!(metrics.get("result_cache_hits").is_some());
+    assert!(metrics.get("compile_cache_misses").is_some());
+
+    drop(client);
+    daemon.shutdown();
+    daemon.wait().unwrap();
+}
+
+/// The wire shutdown op drains the daemon; afterwards the port is dead.
+#[test]
+fn wire_shutdown_stops_the_daemon_cleanly() {
+    let daemon = start(SimConfig::spatzformer());
+    let addr = daemon.addr();
+    let mut client = Client::connect(addr);
+    // do some work first so the final snapshot is non-trivial
+    let resp = client.submit(&Job::Kernel {
+        kernel: KernelId::Faxpy,
+        policy: ModePolicy::Split,
+    });
+    assert_ok(&resp);
+    let ack = client.roundtrip(&proto::encode_request(&proto::Request::Shutdown));
+    assert_ok(&ack);
+    assert_eq!(ack.get("shutting_down").and_then(Json::as_bool), Some(true));
+    drop(client);
+
+    let snapshot = daemon.wait().unwrap();
+    assert_eq!(snapshot.submits, 1);
+    assert_eq!(snapshot.jobs_completed, 1);
+    assert!(snapshot.render().contains("jobs/s"));
+    // the listener is gone: fresh connections are refused
+    assert!(
+        TcpStream::connect(addr).is_err(),
+        "daemon must stop listening after shutdown"
+    );
+}
+
+/// `loadgen --shutdown` (the CI smoke path) works end to end.
+#[test]
+fn loadgen_can_stop_the_daemon_it_tested() {
+    let daemon = start(SimConfig::spatzformer());
+    let opts = loadgen::LoadgenOptions {
+        addr: daemon.addr().to_string(),
+        clients: 1,
+        requests: 2,
+        seed: 9,
+        send_shutdown: true,
+        ..Default::default()
+    };
+    let report = loadgen::run(&opts).unwrap();
+    assert_eq!(report.ok, 2);
+    let snapshot = daemon.wait().unwrap();
+    assert_eq!(snapshot.jobs_completed, 2);
+}

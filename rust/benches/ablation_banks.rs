@@ -10,7 +10,13 @@ use spatzformer::util::bench::section;
 
 fn main() {
     section("A2: TCDM bank count sweep (faxpy ∥ coremark)");
-    let mut t = Table::new(&["banks", "SM kernel cyc", "MM kernel cyc", "MM speedup", "conflicts (MM)"]);
+    let mut t = Table::new(&[
+        "banks",
+        "SM kernel cyc",
+        "MM kernel cyc",
+        "MM speedup",
+        "conflicts (MM)",
+    ]);
     for banks in [8usize, 16, 32] {
         let mut cfg = SimConfig::spatzformer();
         cfg.cluster.tcdm_banks = banks;

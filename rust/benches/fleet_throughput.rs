@@ -11,13 +11,18 @@
 //!
 //! Pass `--smoke` for a cheap single pass: CI runs it on every push so
 //! the compile-cache hit rate and amortization ratio land in the log.
+//! Pass `--json PATH` to emit the tracked numbers (1/2/4/8-worker
+//! jobs/s, hit rates, amortization ratio) for CI's `bench-report` job,
+//! which merges them into the `BENCH_REPORT.json` artifact.
 
 use spatzformer::config::SimConfig;
 use spatzformer::fleet::{scenario, Fleet, ScenarioKind};
-use spatzformer::util::bench::{fmt_ratio, section};
+use spatzformer::util::bench::{flag_value, fmt_ratio, section};
+use spatzformer::util::Json;
 
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
+    let json_path = flag_value("--json");
     let seed = 0xF1EE7;
     let cfg = SimConfig::spatzformer();
     let jobs = if smoke { 24 } else { 120 };
@@ -28,6 +33,7 @@ fn main() {
 
     // Scheduler scaling with the result cache off (every job simulates).
     let mut base_rate = 0.0;
+    let mut worker_rows: Vec<(String, Json)> = Vec::new();
     for workers in [1usize, 2, 4, 8] {
         let fleet = Fleet::new(cfg.clone())
             .unwrap()
@@ -46,16 +52,18 @@ fn main() {
             rate / base_rate,
             out.metrics.mean_utilization() * 100.0,
         );
+        worker_rows.push((workers.to_string(), Json::num(rate)));
     }
 
     // Result-cache effect: the storm draws from a small seed pool, so
     // repeats are served from memory.
     let fleet = Fleet::new(cfg.clone()).unwrap().with_workers(4);
     let out = fleet.run(&storm.jobs).unwrap();
+    let storm_hit_rate = out.metrics.cache_hit_rate();
     println!(
         "  4 workers + cache: {:>6.1} jobs/s  (hit rate {:.1}%, {} steals)",
         out.metrics.jobs_per_sec(),
-        out.metrics.cache_hit_rate() * 100.0,
+        storm_hit_rate * 100.0,
         out.metrics.steals,
     );
 
@@ -75,6 +83,7 @@ fn main() {
         sweep.jobs.len().min(72)
     );
     let mut rates = Vec::new();
+    let mut compile_hit_rate = 0.0;
     for (label, ccache) in [
         ("cold compile (cache off)", false),
         ("amortized   (cache on) ", true),
@@ -86,6 +95,9 @@ fn main() {
             .with_compile_cache(ccache);
         let out = fleet.run(&sweep.jobs).unwrap();
         rates.push(out.metrics.jobs_per_sec());
+        if ccache {
+            compile_hit_rate = out.metrics.compile_hit_rate();
+        }
         println!(
             "  {label}: {:>8.1} jobs/s  {:>8.2} Msim-cycles/s  compile {} hits / {} misses ({:.1}% hit rate)",
             out.metrics.jobs_per_sec(),
@@ -95,8 +107,27 @@ fn main() {
             out.metrics.compile_hit_rate() * 100.0,
         );
     }
+    let amortization = rates[1] / rates[0].max(1e-9);
     println!(
         "\n  compile amortization on kernel-sweep: {} jobs/s gain (record in EXPERIMENTS.md §Perf)",
-        fmt_ratio(rates[1] / rates[0])
+        fmt_ratio(amortization)
     );
+
+    if let Some(path) = json_path {
+        let doc = Json::Obj(vec![(
+            "fleet_throughput".to_string(),
+            Json::Obj(vec![
+                ("smoke".to_string(), Json::Bool(smoke)),
+                ("storm_jobs".to_string(), Json::u64_lossless(jobs as u64)),
+                ("workers_jobs_per_sec".to_string(), Json::Obj(worker_rows)),
+                ("storm_cache_hit_rate".to_string(), Json::num(storm_hit_rate)),
+                ("kernel_sweep_jobs_per_sec_cache_off".to_string(), Json::num(rates[0])),
+                ("kernel_sweep_jobs_per_sec_cache_on".to_string(), Json::num(rates[1])),
+                ("compile_amortization_ratio".to_string(), Json::num(amortization)),
+                ("compile_cache_hit_rate".to_string(), Json::num(compile_hit_rate)),
+            ]),
+        )]);
+        std::fs::write(&path, doc.encode() + "\n").expect("write --json output");
+        println!("\nwrote tracked numbers to {path}");
+    }
 }

@@ -1,11 +1,16 @@
 //! §Perf — host-side simulator throughput (Msim-cycles/s) per workload
 //! class, and the fast-forward engine's speedup over the naive per-cycle
-//! oracle on the kernel-sweep scenario (the L3 hot-path number tracked in
-//! EXPERIMENTS.md §Perf; acceptance bar: >= 2x at 1 worker).
+//! oracle — per kernel (the faxpy row is the LSU closed-form
+//! fast-forward headline) and on the kernel-sweep scenario (the L3
+//! hot-path number tracked in EXPERIMENTS.md §Perf; acceptance bar:
+//! >= 2x at 1 worker).
 //!
 //! Pass `--smoke` for a cheap iteration count: CI runs it on every push
 //! so an engine perf regression (or an engine/oracle cycle divergence,
-//! which this bench also asserts) fails loudly.
+//! which this bench also asserts) fails loudly. Pass `--json PATH` to
+//! emit the tracked numbers as a JSON document — CI's `bench-report`
+//! job merges it into the `BENCH_REPORT.json` artifact that fills the
+//! EXPERIMENTS.md §Perf measured table.
 
 use spatzformer::cluster::Cluster;
 use spatzformer::config::{ArchKind, EngineKind, SimConfig};
@@ -13,7 +18,8 @@ use spatzformer::coordinator::{Coordinator, Job, ModePolicy};
 use spatzformer::fleet::scenario::{self, ScenarioKind};
 use spatzformer::fleet::FleetJob;
 use spatzformer::kernels::{execute, Deployment, KernelId};
-use spatzformer::util::bench::{fmt_ratio, section, Bencher};
+use spatzformer::util::bench::{flag_value, fmt_ratio, section, Bencher};
+use spatzformer::util::Json;
 
 /// Run a job list sequentially under `base`, returning total sim cycles.
 fn run_jobs(base: &SimConfig, jobs: &[FleetJob]) -> u64 {
@@ -27,15 +33,19 @@ fn run_jobs(base: &SimConfig, jobs: &[FleetJob]) -> u64 {
 
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
+    let json_path = flag_value("--json");
     let (warmup, iters) = if smoke { (0, 1) } else { (2, 10) };
+    let mut kernel_rows: Vec<(String, Json)> = Vec::new();
 
     section("single-kernel simulator throughput (per engine)");
-    for (name, kernel, deploy) in [
-        ("fmatmul (fpu-bound)", KernelId::Fmatmul, Deployment::SplitDual),
-        ("faxpy (lsu-bound)", KernelId::Faxpy, Deployment::SplitDual),
-        ("fft (gather/sync)", KernelId::Fft, Deployment::SplitDual),
+    for (key, name, kernel, deploy) in [
+        ("fmatmul", "fmatmul (fpu-bound)", KernelId::Fmatmul, Deployment::SplitDual),
+        ("faxpy", "faxpy (lsu-bound)", KernelId::Faxpy, Deployment::SplitDual),
+        ("fft", "fft (gather/sync)", KernelId::Fft, Deployment::SplitDual),
     ] {
         let mut cycles_per_engine = Vec::new();
+        let mut medians = Vec::new();
+        let mut rates = Vec::new();
         for engine in [EngineKind::Naive, EngineKind::Fast] {
             let mut cfg = SimConfig::spatzformer();
             cfg.engine = engine;
@@ -53,16 +63,36 @@ fn main() {
                     let (m, _) = execute(&mut cl, &inst).unwrap();
                     m.cycles
                 });
+            let rate = sim_cycles as f64 / r.median.as_secs_f64().max(1e-9) / 1e6;
             println!(
                 "  -> {:.1} Msim-cycles/s ({} sim cycles per run)",
-                sim_cycles as f64 / r.median.as_secs_f64() / 1e6,
-                sim_cycles
+                rate, sim_cycles
             );
+            medians.push(r.median.as_secs_f64());
+            rates.push(rate);
         }
         assert_eq!(
             cycles_per_engine[0], cycles_per_engine[1],
             "{name}: engines disagree on simulated cycles"
         );
+        // per-kernel engine speedup; the faxpy (lsu-bound) row is the
+        // closed-form LSU fast-forward headline — before it, any job
+        // with an active LSU op ran at naive speed (bar: > 1)
+        let speedup = medians[0] / medians[1].max(1e-9);
+        println!(
+            "  engine speedup on {name}: {} (fast vs naive{})",
+            fmt_ratio(speedup),
+            if key == "faxpy" { "; LSU fast-forward headline, bar: > 1" } else { "" }
+        );
+        kernel_rows.push((
+            key.to_string(),
+            Json::Obj(vec![
+                ("speedup_fast_vs_naive".to_string(), Json::num(speedup)),
+                ("naive_msim_cycles_per_sec".to_string(), Json::num(rates[0])),
+                ("fast_msim_cycles_per_sec".to_string(), Json::num(rates[1])),
+                ("sim_cycles".to_string(), Json::u64_lossless(cycles_per_engine[0])),
+            ]),
+        ));
     }
 
     section("kernel-sweep scenario: fast vs naive (§Perf headline, 1 worker)");
@@ -95,9 +125,10 @@ fn main() {
         totals[0], totals[1],
         "kernel-sweep: engines disagree on simulated cycles"
     );
+    let engine_ratio = medians[0] / medians[1].max(1e-9);
     println!(
         "\n  fast-forward speedup on kernel-sweep: {} (bar: >= 2.00x; record in EXPERIMENTS.md §Perf)",
-        fmt_ratio(medians[0] / medians[1])
+        fmt_ratio(engine_ratio)
     );
 
     section("coordinator end-to-end (mixed workload)");
@@ -123,4 +154,17 @@ fn main() {
             sm.kernel_cycles + mm.kernel_cycles
         });
     let _ = r;
+
+    if let Some(path) = json_path {
+        let doc = Json::Obj(vec![(
+            "sim_throughput".to_string(),
+            Json::Obj(vec![
+                ("smoke".to_string(), Json::Bool(smoke)),
+                ("engine_ratio_kernel_sweep".to_string(), Json::num(engine_ratio)),
+                ("kernels".to_string(), Json::Obj(kernel_rows)),
+            ]),
+        )]);
+        std::fs::write(&path, doc.encode() + "\n").expect("write --json output");
+        println!("\nwrote tracked numbers to {path}");
+    }
 }

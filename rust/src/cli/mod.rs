@@ -69,6 +69,9 @@ LOADGEN OPTIONS:
   --scenario <name>               request mix generator (default storm)
   --smoke                         tiny deterministic run (2 clients x 6 requests)
   --shutdown                      send {\"op\":\"shutdown\"} after the run
+  --json <path>                   also write the report (jobs/s, p50/p95/p99, reject
+                                  counts) as JSON, keyed \"serve.c<clients>\" — CI's
+                                  bench-report job merges these into BENCH_REPORT.json
 
 KERNELS: fmatmul conv2d fft fdotp faxpy fdct
 ";
@@ -324,6 +327,18 @@ fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
     }
     let report = loadgen::run(&opts)?;
     println!("{}", report.render());
+    if let Some(path) = args.get("json") {
+        let doc = crate::util::Json::Obj(vec![(
+            "serve".to_string(),
+            crate::util::Json::Obj(vec![(
+                format!("c{}", report.clients),
+                report.to_json(),
+            )]),
+        )]);
+        std::fs::write(path, doc.encode() + "\n")
+            .map_err(|e| anyhow::anyhow!("cannot write --json {path}: {e}"))?;
+        println!("wrote tracked numbers to {path}");
+    }
     anyhow::ensure!(
         report.ok > 0,
         "no request succeeded ({} rejected, {} errors)",
@@ -523,7 +538,15 @@ mod tests {
 
     #[test]
     fn build_config_applies_overrides() {
-        let a = args(&["run", "--arch", "baseline", "--set", "cluster.tcdm_banks=32", "--seed", "5"]);
+        let a = args(&[
+            "run",
+            "--arch",
+            "baseline",
+            "--set",
+            "cluster.tcdm_banks=32",
+            "--seed",
+            "5",
+        ]);
         let cfg = build_config(&a).unwrap();
         assert_eq!(cfg.cluster.tcdm_banks, 32);
         assert_eq!(cfg.seed, 5);

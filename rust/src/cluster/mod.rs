@@ -13,7 +13,7 @@ pub use barrier::BarrierUnit;
 
 use crate::config::{ArchKind, ClusterConfig, EngineKind, Mode, SimConfig};
 use crate::isa::{Instr, Program};
-use crate::mem::{Dma, ICache, Tcdm};
+use crate::mem::{ConflictSchedule, Dma, ICache, Tcdm};
 use crate::metrics::{Counters, RunMetrics};
 use crate::reconfig::ReconfigStage;
 use crate::snitch::{CoreState, Snitch};
@@ -41,6 +41,10 @@ pub struct Cluster {
     /// Cycle at which each core halted (mixed workloads measure the
     /// kernel core's completion independently of the co-runner).
     halt_cycle: [Option<u64>; 2],
+    /// Cycles actually stepped (vs fast-forwarded). Engine-strategy
+    /// telemetry only — deliberately *not* part of [`Counters`] or
+    /// [`RunMetrics`], which must stay engine-independent.
+    steps_executed: u64,
 }
 
 impl Cluster {
@@ -61,6 +65,7 @@ impl Cluster {
             cfg,
             dma_cycles: 0,
             halt_cycle: [None; 2],
+            steps_executed: 0,
         })
     }
 
@@ -104,6 +109,12 @@ impl Cluster {
     /// Cycle at which core `i` halted in the current run (if it has).
     pub fn core_halt_cycle(&self, i: usize) -> Option<u64> {
         self.halt_cycle[i]
+    }
+    /// Cycles this cluster actually stepped (the naive loop steps every
+    /// cycle; the fast engine steps only event cycles). Engine telemetry
+    /// for tests/benches — never part of a simulation result.
+    pub fn steps_executed(&self) -> u64 {
+        self.steps_executed
     }
 
     /// Stage data into TCDM via the DMA engine (tracked separately from
@@ -174,6 +185,7 @@ impl Cluster {
 
     /// Advance one cycle.
     pub fn step(&mut self) {
+        self.steps_executed += 1;
         self.tcdm.begin_cycle();
         let flip = (self.now & 1) == 1;
 
@@ -221,28 +233,29 @@ impl Cluster {
         self.now += 1;
     }
 
-    /// Cheap pre-check for the hot loop: an executing/memory-retrying
-    /// core or an active LSU op pins the horizon to `now`, so computing
-    /// the full horizon would be wasted work.
-    fn must_step_now(&self) -> bool {
+    /// Cheap pre-check for the hot loop: an executing or memory-retrying
+    /// core touches shared state (icache, TCDM, dispatch) every cycle,
+    /// so the horizon is `now` and computing the full horizon would be
+    /// wasted work. Active LSU ops are *not* checked here — they are
+    /// handled by [`Self::try_lsu_fast_forward`].
+    fn core_pins_now(&self) -> bool {
         self.cores
             .iter()
             .any(|c| matches!(c.state(), CoreState::Ready | CoreState::WaitMem { .. }))
-            || self.units.iter().any(|u| u.lsu_active())
     }
 
-    /// Earliest cycle `>= now` at which stepping the cluster could do
-    /// anything beyond the bulk effects [`Self::fast_forward`] replays:
-    /// the minimum of every component's event horizon (see each
-    /// component's `next_event`). `None` means no component will ever act
-    /// again on its own — either everything is drained or the cluster is
-    /// deadlocked (e.g. a barrier that can never release).
-    fn next_horizon(&self) -> Option<u64> {
+    /// The one component list both horizons are derived from — every
+    /// timed component appears exactly once, with the units' entry
+    /// supplied by the caller (`next_event` for the plain horizon,
+    /// `next_event_beyond_lsu` for LSU windows), so a future component
+    /// growing a real `next_event` cannot end up in one horizon but not
+    /// the other.
+    fn horizon_over(&self, unit_horizon: impl Fn(&SpatzUnit) -> Option<u64>) -> Option<u64> {
         [
             self.cores[0].next_event(self.now, &self.reconfig, &self.units),
             self.cores[1].next_event(self.now, &self.reconfig, &self.units),
-            self.units[0].next_event(self.now),
-            self.units[1].next_event(self.now),
+            unit_horizon(&self.units[0]),
+            unit_horizon(&self.units[1]),
             self.barrier.next_event(),
             // purely reactive today (always None), but consulted so that a
             // mem component growing timed state cannot be silently skipped
@@ -255,10 +268,108 @@ impl Cluster {
         .min()
     }
 
+    /// Earliest cycle `>= now` at which stepping the cluster could do
+    /// anything beyond the bulk effects [`Self::fast_forward`] replays:
+    /// the minimum of every component's event horizon (see each
+    /// component's `next_event`). `None` means no component will ever act
+    /// again on its own — either everything is drained or the cluster is
+    /// deadlocked (e.g. a barrier that can never release).
+    fn next_horizon(&self) -> Option<u64> {
+        self.horizon_over(|u| u.next_event(self.now))
+    }
+
+    /// Horizon for a window in which one or both LSUs stream while every
+    /// other component is quiescent: the minimum over the cores, the
+    /// units' non-LSU events (retires, non-memory head issues) and the
+    /// reactive components. The LSUs' own per-cycle arbitration is
+    /// excluded — [`Self::try_lsu_fast_forward`] bulk-applies it via the
+    /// TCDM's conflict-schedule oracle.
+    fn lsu_window_horizon(&self) -> Option<u64> {
+        self.horizon_over(|u| u.next_event_beyond_lsu(self.now))
+    }
+
+    /// Closed-form fast-forward across active LSU bank arbitration.
+    ///
+    /// Preconditions (checked by the caller): fast engine, at least one
+    /// LSU op in flight, no core in `Ready`/`WaitMem`. Within such a
+    /// window the *only* TCDM requesters are the active LSUs, so each
+    /// stream's grants, conflict rotations and retire timing are a pure
+    /// function of its addresses, the bank hash and the lane budget
+    /// ([`Tcdm::conflict_schedule`]) — except when both LSUs are live on
+    /// overlapping bank sets, the genuinely coupled case, where each
+    /// unit's rotations depend on the other's same-cycle reservations
+    /// and the rotating priority; then this returns `false` and the
+    /// loop replays per cycle exactly as before.
+    ///
+    /// The skip width is clamped to the earliest of: any other
+    /// component's event, each schedule's own stop (one cycle before
+    /// that stream's drain — completing an op has non-bulk effects), and
+    /// the watchdog cap. Applying a schedule bulk-adds the exact TCDM
+    /// grant/conflict counts and replaces the pending stream with the
+    /// state the replayed loop would have reached, so metrics stay
+    /// byte-identical (`rust/tests/engine_differential.rs`).
+    fn try_lsu_fast_forward(&mut self, cap: u64) -> bool {
+        if self.units[0].lsu_active() && self.units[1].lsu_active() {
+            // per-op cached bank masks: O(1) per cycle after the first
+            // fold, so a long coupled window (which replays per cycle
+            // below) does not pay an O(stream) scan every cycle
+            let m0 = self.units[0].lsu_bank_mask(&self.tcdm);
+            let m1 = self.units[1].lsu_bank_mask(&self.tcdm);
+            match (m0, m1) {
+                (Some(a), Some(b)) if a & b == 0 => {} // disjoint: schedulable
+                _ => return false,                     // coupled: replay per cycle
+            }
+        }
+        let horizon = self.lsu_window_horizon().unwrap_or(cap).min(cap);
+        if horizon <= self.now {
+            return false;
+        }
+        let budget = horizon - self.now;
+        let mut scheds: [Option<ConflictSchedule>; 2] = [None, None];
+        let mut span = budget;
+        for i in 0..2 {
+            if self.units[i].lsu_active() {
+                let s = self.tcdm.conflict_schedule(
+                    self.units[i].lsu_pending().unwrap(),
+                    self.units[i].lanes(),
+                    span,
+                );
+                span = span.min(s.cycles);
+                scheds[i] = Some(s);
+            }
+        }
+        if span == 0 {
+            return false;
+        }
+        for i in 0..2 {
+            if let Some(s) = scheds[i].take() {
+                // a later stream's earlier stop truncates this one: the
+                // oracle is deterministic, so a smaller budget is a pure
+                // prefix recompute
+                let s = if s.cycles > span {
+                    self.tcdm.conflict_schedule(
+                        self.units[i].lsu_pending().unwrap(),
+                        self.units[i].lanes(),
+                        span,
+                    )
+                } else {
+                    s
+                };
+                debug_assert_eq!(s.cycles, span);
+                self.tcdm.apply_schedule(&s);
+                self.units[i].lsu_apply_schedule(s.remaining);
+            }
+        }
+        self.fast_forward(self.now + span);
+        true
+    }
+
     /// Jump `now` directly to `to`, bulk-accounting every skipped cycle
     /// exactly as the naive loop would have: countdowns decrement, wait
     /// counters (offload/fence/barrier) and per-block busy cycles grow by
-    /// the skip width. Callers must not cross [`Self::next_horizon`].
+    /// the skip width. Callers must not cross [`Self::next_horizon`]
+    /// (for LSU-active windows: [`Self::lsu_window_horizon`], with the
+    /// arbitration window bulk-applied first).
     fn fast_forward(&mut self, to: u64) {
         debug_assert!(to > self.now, "fast_forward must move time forward");
         let now = self.now;
@@ -280,10 +391,14 @@ impl Cluster {
     ///
     /// With [`EngineKind::Fast`] (the default) the loop advances `now`
     /// straight to the next event horizon whenever every component is
-    /// quiescent; with [`EngineKind::Naive`] it ticks every cycle. Both
-    /// produce byte-identical metrics and fire the `max_cycles` watchdog
-    /// at the identical cycle — `rust/tests/engine_differential.rs` holds
-    /// the engines to that contract.
+    /// quiescent — including across active vector-LSU bank arbitration,
+    /// whose grants and conflict replays are bulk-applied in closed form
+    /// via [`Tcdm::conflict_schedule`] unless both LSUs contend on
+    /// overlapping bank sets. With [`EngineKind::Naive`] it ticks every
+    /// cycle. Both produce byte-identical metrics and fire the
+    /// `max_cycles` watchdog at the identical cycle —
+    /// `rust/tests/engine_differential.rs` holds the engines to that
+    /// contract.
     pub fn run(&mut self) -> anyhow::Result<u64> {
         let start = self.now;
         let fast = self.cfg.engine == EngineKind::Fast;
@@ -300,11 +415,17 @@ impl Cluster {
                 "simulation exceeded max_cycles={} (deadlock?)",
                 self.cfg.max_cycles
             );
-            if fast && !self.must_step_now() {
-                let target = self.next_horizon().unwrap_or(cap).min(cap);
-                if target > self.now && target < u64::MAX {
-                    self.fast_forward(target);
-                    continue;
+            if fast && !self.core_pins_now() {
+                if self.units.iter().any(|u| u.lsu_active()) {
+                    if self.try_lsu_fast_forward(cap) {
+                        continue;
+                    }
+                } else {
+                    let target = self.next_horizon().unwrap_or(cap).min(cap);
+                    if target > self.now && target < u64::MAX {
+                        self.fast_forward(target);
+                        continue;
+                    }
                 }
             }
             self.step();
@@ -333,6 +454,7 @@ impl Cluster {
         self.tcdm.stats = Default::default();
         self.icache.stats = Default::default();
         self.dma_cycles = 0;
+        self.steps_executed = 0;
     }
 
     /// Restore the whole cluster to its pristine post-construction state
@@ -365,6 +487,7 @@ impl Cluster {
         self.retire_buf.clear();
         self.dma_cycles = 0;
         self.halt_cycle = [None; 2];
+        self.steps_executed = 0;
     }
 }
 
@@ -646,6 +769,88 @@ mod tests {
         assert_eq!(
             fast.tcdm.read_f32_slice(0x4000, 256),
             naive.tcdm.read_f32_slice(0x4000, 256)
+        );
+    }
+
+    #[test]
+    fn lsu_fast_forward_skips_streaming_windows_and_stays_identical() {
+        // memory-bound dual-core job: unit-stride loads/stores dominate,
+        // so most cycles are pure LSU streaming. The fast engine must
+        // now skip those windows (far fewer stepped cycles) while every
+        // metric — including TCDM grant/conflict counts — stays
+        // byte-identical to the naive replay.
+        let build = |engine| {
+            let mut cfg = SimConfig::spatzformer();
+            cfg.engine = engine;
+            let mut cl = Cluster::new(cfg).unwrap();
+            let x: Vec<f32> = (0..1024).map(|i| i as f32 * 0.25).collect();
+            cl.stage_f32(0, &x);
+            cl.load_programs([
+                vec_program("mem0", 0, 512, 2.0),
+                vec_program("mem1", 2048, 512, 2.0),
+            ])
+            .unwrap();
+            cl
+        };
+        let mut fast = build(EngineKind::Fast);
+        let mut naive = build(EngineKind::Naive);
+        let cycles = fast.run().unwrap();
+        assert_eq!(cycles, naive.run().unwrap());
+        assert_eq!(fast.counters, naive.counters);
+        assert_eq!(fast.tcdm.stats, naive.tcdm.stats);
+        assert_eq!(
+            fast.tcdm.read_f32_slice(0x4000, 512),
+            naive.tcdm.read_f32_slice(0x4000, 512)
+        );
+        assert_eq!(naive.steps_executed(), cycles, "naive steps every cycle");
+        assert!(
+            fast.steps_executed() * 2 < naive.steps_executed(),
+            "LSU streaming no longer pins the horizon: stepped {} of {} cycles",
+            fast.steps_executed(),
+            naive.steps_executed()
+        );
+    }
+
+    #[test]
+    fn coupled_dual_lsu_streams_fall_back_and_stay_identical() {
+        // both cores stream loads from the SAME region concurrently, so
+        // the two LSUs are live on overlapping bank sets — the genuinely
+        // coupled case that must fall back to per-cycle replay and still
+        // match the naive loop exactly
+        let mk_program = |name: &str, out: u32| {
+            let mut p = Program::new(name);
+            for strip in 0..2u32 {
+                p.vector(VectorOp::SetVl { avl: 128, ew: ElemWidth::E32, lmul: Lmul::M8 });
+                p.vector(VectorOp::Load { vd: VReg(8), base: strip * 512, stride: 1 });
+                p.vector(VectorOp::MulVF { vd: VReg(16), vs: VReg(8), f: 1.5 });
+                p.vector(VectorOp::Store { vs: VReg(16), base: out + strip * 512, stride: 1 });
+            }
+            p.push(Instr::Fence);
+            p.push(Instr::Halt);
+            p
+        };
+        let build = |engine| {
+            let mut cfg = SimConfig::spatzformer();
+            cfg.engine = engine;
+            let mut cl = Cluster::new(cfg).unwrap();
+            let x: Vec<f32> = (0..256).map(|i| (i as f32).sin()).collect();
+            cl.stage_f32(0, &x);
+            cl.load_programs([mk_program("same0", 0x8000), mk_program("same1", 0xA000)])
+                .unwrap();
+            cl
+        };
+        let mut fast = build(EngineKind::Fast);
+        let mut naive = build(EngineKind::Naive);
+        assert_eq!(fast.run().unwrap(), naive.run().unwrap());
+        assert_eq!(fast.counters, naive.counters);
+        assert_eq!(fast.tcdm.stats, naive.tcdm.stats);
+        assert_eq!(
+            fast.tcdm.read_f32_slice(0x8000, 256),
+            naive.tcdm.read_f32_slice(0x8000, 256)
+        );
+        assert_eq!(
+            fast.tcdm.read_f32_slice(0xA000, 256),
+            naive.tcdm.read_f32_slice(0xA000, 256)
         );
     }
 

@@ -118,14 +118,26 @@ impl ClusterConfig {
 
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(self.cores == 2, "this cluster model is dual-core (got {})", self.cores);
-        anyhow::ensure!(self.vlen_bits % 32 == 0 && self.vlen_bits >= 128, "vlen_bits must be a multiple of 32 >= 128");
-        anyhow::ensure!(self.lanes.is_power_of_two() && self.lanes >= 1, "lanes must be a power of two");
+        anyhow::ensure!(
+            self.vlen_bits % 32 == 0 && self.vlen_bits >= 128,
+            "vlen_bits must be a multiple of 32 >= 128"
+        );
+        anyhow::ensure!(
+            self.lanes.is_power_of_two() && self.lanes >= 1,
+            "lanes must be a power of two"
+        );
         anyhow::ensure!(self.vregs == 32, "RVV requires 32 architectural vregs");
         anyhow::ensure!(self.tcdm_banks.is_power_of_two(), "tcdm_banks must be a power of two");
         anyhow::ensure!(self.tcdm_kib >= 16, "tcdm too small");
         anyhow::ensure!(self.offload_queue_depth >= 1, "offload queue must hold >= 1 entry");
-        anyhow::ensure!(self.icache_line_instrs.is_power_of_two(), "icache_line_instrs must be a power of two");
-        anyhow::ensure!(self.icache_ways >= 1 && self.icache_lines % self.icache_ways == 0, "icache_ways must divide icache_lines");
+        anyhow::ensure!(
+            self.icache_line_instrs.is_power_of_two(),
+            "icache_line_instrs must be a power of two"
+        );
+        anyhow::ensure!(
+            self.icache_ways >= 1 && self.icache_lines % self.icache_ways == 0,
+            "icache_ways must divide icache_lines"
+        );
         Ok(())
     }
 }
@@ -431,18 +443,28 @@ impl SimConfig {
             "cluster.tcdm_banks" => c.tcdm_banks = value.as_usize().ok_or_else(bad)?,
             "cluster.tcdm_latency" => c.tcdm_latency = value.as_u64().ok_or_else(bad)?,
             "cluster.icache_lines" => c.icache_lines = value.as_usize().ok_or_else(bad)?,
-            "cluster.icache_line_instrs" => c.icache_line_instrs = value.as_usize().ok_or_else(bad)?,
-            "cluster.icache_miss_penalty" => c.icache_miss_penalty = value.as_u64().ok_or_else(bad)?,
+            "cluster.icache_line_instrs" => {
+                c.icache_line_instrs = value.as_usize().ok_or_else(bad)?
+            }
+            "cluster.icache_miss_penalty" => {
+                c.icache_miss_penalty = value.as_u64().ok_or_else(bad)?
+            }
             "cluster.icache_ways" => c.icache_ways = value.as_usize().ok_or_else(bad)?,
-            "cluster.offload_queue_depth" => c.offload_queue_depth = value.as_usize().ok_or_else(bad)?,
+            "cluster.offload_queue_depth" => {
+                c.offload_queue_depth = value.as_usize().ok_or_else(bad)?
+            }
             "cluster.lat_mul" => c.lat_mul = value.as_u64().ok_or_else(bad)?,
             "cluster.lat_div" => c.lat_div = value.as_u64().ok_or_else(bad)?,
             "cluster.branch_penalty" => c.branch_penalty = value.as_u64().ok_or_else(bad)?,
             "cluster.fpu_pipe_depth" => c.fpu_pipe_depth = value.as_u64().ok_or_else(bad)?,
             "cluster.barrier_latency" => c.barrier_latency = value.as_u64().ok_or_else(bad)?,
             "cluster.broadcast_latency" => c.broadcast_latency = value.as_u64().ok_or_else(bad)?,
-            "cluster.mode_switch_latency" => c.mode_switch_latency = value.as_u64().ok_or_else(bad)?,
-            "cluster.mm_reduction_merge_latency" => c.mm_reduction_merge_latency = value.as_u64().ok_or_else(bad)?,
+            "cluster.mode_switch_latency" => {
+                c.mode_switch_latency = value.as_u64().ok_or_else(bad)?
+            }
+            "cluster.mm_reduction_merge_latency" => {
+                c.mm_reduction_merge_latency = value.as_u64().ok_or_else(bad)?
+            }
             "ppa.corner" => {
                 p.corner = match value.as_str() {
                     Some("tt") => Corner::Tt,
@@ -451,22 +473,30 @@ impl SimConfig {
                 }
             }
             "ppa.pj_scalar_ifetch" => p.pj_scalar_ifetch = value.as_f64().ok_or_else(bad)?,
-            "ppa.pj_icache_refill_per_instr" => p.pj_icache_refill_per_instr = value.as_f64().ok_or_else(bad)?,
+            "ppa.pj_icache_refill_per_instr" => {
+                p.pj_icache_refill_per_instr = value.as_f64().ok_or_else(bad)?
+            }
             "ppa.pj_scalar_exec" => p.pj_scalar_exec = value.as_f64().ok_or_else(bad)?,
             "ppa.pj_scalar_mem" => p.pj_scalar_mem = value.as_f64().ok_or_else(bad)?,
             "ppa.pj_vec_dispatch" => p.pj_vec_dispatch = value.as_f64().ok_or_else(bad)?,
             "ppa.pj_vec_elem_alu" => p.pj_vec_elem_alu = value.as_f64().ok_or_else(bad)?,
             "ppa.pj_vec_elem_mul" => p.pj_vec_elem_mul = value.as_f64().ok_or_else(bad)?,
             "ppa.pj_vec_elem_mac" => p.pj_vec_elem_mac = value.as_f64().ok_or_else(bad)?,
-            "ppa.pj_vrf_access_per_elem" => p.pj_vrf_access_per_elem = value.as_f64().ok_or_else(bad)?,
+            "ppa.pj_vrf_access_per_elem" => {
+                p.pj_vrf_access_per_elem = value.as_f64().ok_or_else(bad)?
+            }
             "ppa.pj_tcdm_access" => p.pj_tcdm_access = value.as_f64().ok_or_else(bad)?,
             "ppa.pj_barrier" => p.pj_barrier = value.as_f64().ok_or_else(bad)?,
-            "ppa.pj_broadcast_dispatch" => p.pj_broadcast_dispatch = value.as_f64().ok_or_else(bad)?,
+            "ppa.pj_broadcast_dispatch" => {
+                p.pj_broadcast_dispatch = value.as_f64().ok_or_else(bad)?
+            }
             "ppa.pj_cycle_scalar_core" => p.pj_cycle_scalar_core = value.as_f64().ok_or_else(bad)?,
             "ppa.pj_cycle_vec_unit" => p.pj_cycle_vec_unit = value.as_f64().ok_or_else(bad)?,
             "ppa.pj_cycle_tcdm" => p.pj_cycle_tcdm = value.as_f64().ok_or_else(bad)?,
             "ppa.pj_cycle_icache" => p.pj_cycle_icache = value.as_f64().ok_or_else(bad)?,
-            "ppa.pj_cycle_interconnect" => p.pj_cycle_interconnect = value.as_f64().ok_or_else(bad)?,
+            "ppa.pj_cycle_interconnect" => {
+                p.pj_cycle_interconnect = value.as_f64().ok_or_else(bad)?
+            }
             "ppa.pj_cycle_reconfig" => p.pj_cycle_reconfig = value.as_f64().ok_or_else(bad)?,
             "ppa.idle_power_fraction" => p.idle_power_fraction = value.as_f64().ok_or_else(bad)?,
             "fleet.workers" => self.fleet.workers = value.as_usize().ok_or_else(bad)?,

@@ -409,7 +409,11 @@ mod tests {
                 let vs1 = arb_vreg(g, lmul);
                 let vs2 = arb_vreg(g, lmul);
                 let op = match g.int(0, 9) {
-                    0 => VectorOp::Load { vd, base: g.int(0, 1 << 16) as u32, stride: g.int(1, 8) as i32 },
+                    0 => VectorOp::Load {
+                        vd,
+                        base: g.int(0, 1 << 16) as u32,
+                        stride: g.int(1, 8) as i32,
+                    },
                     1 => VectorOp::Store { vs: vd, base: g.int(0, 1 << 16) as u32, stride: 1 },
                     2 => VectorOp::AddVV { vd, vs1, vs2 },
                     3 => VectorOp::SubVV { vd, vs1, vs2 },

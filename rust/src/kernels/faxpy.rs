@@ -48,10 +48,22 @@ pub fn build(cfg: &ClusterConfig, deploy: Deployment, seed: u64) -> KernelInstan
             p.vector(VectorOp::SetVl { avl: vl, ew: ElemWidth::E32, lmul: Lmul::M8 });
             for (si, &strip) in mine.iter().enumerate() {
                 let off = strip * vl as usize;
-                p.vector(VectorOp::Load { vd: VReg(8), base: x_base + (off * 4) as u32, stride: 1 });
-                p.vector(VectorOp::Load { vd: VReg(16), base: y_base + (off * 4) as u32, stride: 1 });
+                p.vector(VectorOp::Load {
+                    vd: VReg(8),
+                    base: x_base + (off * 4) as u32,
+                    stride: 1,
+                });
+                p.vector(VectorOp::Load {
+                    vd: VReg(16),
+                    base: y_base + (off * 4) as u32,
+                    stride: 1,
+                });
                 p.vector(VectorOp::MacVF { vd: VReg(16), vs: VReg(8), f: ALPHA });
-                p.vector(VectorOp::Store { vs: VReg(16), base: y_base + (off * 4) as u32, stride: 1 });
+                p.vector(VectorOp::Store {
+                    vs: VReg(16),
+                    base: y_base + (off * 4) as u32,
+                    stride: 1,
+                });
                 loop_overhead(p, si + 1 < mine.len());
             }
             p.push(Instr::Fence);

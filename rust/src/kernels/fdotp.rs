@@ -53,15 +53,27 @@ pub fn build(cfg: &ClusterConfig, deploy: Deployment, seed: u64) -> KernelInstan
             p.vector(VectorOp::MovVF { vd: VReg(8), f: 0.0 });
             for (si, &strip) in mine.iter().enumerate() {
                 let off = strip * vl as usize;
-                p.vector(VectorOp::Load { vd: VReg(16), base: x_base + (off * 4) as u32, stride: 1 });
-                p.vector(VectorOp::Load { vd: VReg(24), base: y_base + (off * 4) as u32, stride: 1 });
+                p.vector(VectorOp::Load {
+                    vd: VReg(16),
+                    base: x_base + (off * 4) as u32,
+                    stride: 1,
+                });
+                p.vector(VectorOp::Load {
+                    vd: VReg(24),
+                    base: y_base + (off * 4) as u32,
+                    stride: 1,
+                });
                 p.vector(VectorOp::MacVV { vd: VReg(8), vs1: VReg(16), vs2: VReg(24) });
                 loop_overhead(p, si + 1 < mine.len());
             }
             // reduce accumulator, store partial
             p.vector(VectorOp::RedSum { vd: VReg(0), vs: VReg(8) });
             p.vector(VectorOp::SetVl { avl: 1, ew: ElemWidth::E32, lmul: Lmul::M1 });
-            p.vector(VectorOp::Store { vs: VReg(0), base: partial_base + (core * 4) as u32, stride: 1 });
+            p.vector(VectorOp::Store {
+                vs: VReg(0),
+                base: partial_base + (core * 4) as u32,
+                stride: 1,
+            });
             p.push(Instr::Fence);
         }
         if dual {

@@ -123,11 +123,23 @@ pub fn build(cfg: &ClusterConfig, deploy: Deployment, seed: u64) -> KernelInstan
             while off < ehi {
                 let step = m8_cap.min((ehi - off) as u32);
                 p.vector(VectorOp::SetVl { avl: step, ew: ElemWidth::E32, lmul: Lmul::M8 });
-                p.vector(VectorOp::Load { vd: VReg(0), base: brv_base + (off * 4) as u32, stride: 1 });
+                p.vector(VectorOp::Load {
+                    vd: VReg(0),
+                    base: brv_base + (off * 4) as u32,
+                    stride: 1,
+                });
                 p.vector(VectorOp::LoadIndexed { vd: VReg(8), base: re_base, vidx: VReg(0) });
-                p.vector(VectorOp::Store { vs: VReg(8), base: wr_base + (off * 4) as u32, stride: 1 });
+                p.vector(VectorOp::Store {
+                    vs: VReg(8),
+                    base: wr_base + (off * 4) as u32,
+                    stride: 1,
+                });
                 p.vector(VectorOp::LoadIndexed { vd: VReg(16), base: im_base, vidx: VReg(0) });
-                p.vector(VectorOp::Store { vs: VReg(16), base: wi_base + (off * 4) as u32, stride: 1 });
+                p.vector(VectorOp::Store {
+                    vs: VReg(16),
+                    base: wi_base + (off * 4) as u32,
+                    stride: 1,
+                });
                 loop_overhead(p, off + (step as usize) < ehi);
                 off += step as usize;
             }

@@ -68,7 +68,11 @@ pub fn build(cfg: &ClusterConfig, deploy: Deployment, seed: u64) -> KernelInstan
                     p.vector(VectorOp::MacVF { vd: VReg(16), vs: VReg(24), f: a[(i + 1) * K + k] });
                     loop_overhead(p, kk + 1 < K);
                 }
-                p.vector(VectorOp::Store { vs: VReg(8), base: c_base + (i * N * 4) as u32, stride: 1 });
+                p.vector(VectorOp::Store {
+                    vs: VReg(8),
+                    base: c_base + (i * N * 4) as u32,
+                    stride: 1,
+                });
                 p.vector(VectorOp::Store {
                     vs: VReg(16),
                     base: c_base + ((i + 1) * N * 4) as u32,

@@ -9,7 +9,7 @@
 use crate::mem::Tcdm;
 
 /// DMA transfer statistics.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct DmaStats {
     pub bytes_in: u64,
     pub bytes_out: u64,
@@ -83,7 +83,13 @@ impl Dma {
     /// Event horizon for the fast-forward engine: always `None`. DMA
     /// staging runs before the measured region (its cycles are accounted
     /// separately as `dma_cycles`), so the engine never has to wait on it
-    /// inside the cluster cycle loop.
+    /// inside the cluster cycle loop. For the same reason DMA bursts
+    /// never join TCDM bank arbitration and therefore can never *couple*
+    /// with an LSU conflict schedule ([`crate::mem::Tcdm::conflict_schedule`]):
+    /// a job with DMA staging fast-forwards exactly like one without,
+    /// with byte-identical `bytes_in`/`busy_cycles` accounting
+    /// (`rust/tests/engine_differential.rs` stages DMA in its
+    /// contention cases to pin this down).
     pub fn next_event(&self) -> Option<u64> {
         None
     }

@@ -11,6 +11,6 @@ pub mod dma;
 pub mod icache;
 pub mod tcdm;
 
-pub use dma::Dma;
+pub use dma::{Dma, DmaStats};
 pub use icache::ICache;
-pub use tcdm::{Tcdm, TcdmStats};
+pub use tcdm::{ConflictSchedule, Tcdm, TcdmStats};

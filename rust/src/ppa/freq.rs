@@ -37,14 +37,34 @@ impl FreqModel {
     pub fn new() -> Self {
         Self {
             paths: vec![
-                TimingPath { name: "VRF read -> FPU mac -> VRF write", tt_ps: 833.0, spatzformer_only: false },
-                TimingPath { name: "LSU addrgen -> TCDM arbiter -> bank", tt_ps: 801.0, spatzformer_only: false },
-                TimingPath { name: "snitch decode -> accel port", tt_ps: 742.0, spatzformer_only: false },
+                TimingPath {
+                    name: "VRF read -> FPU mac -> VRF write",
+                    tt_ps: 833.0,
+                    spatzformer_only: false,
+                },
+                TimingPath {
+                    name: "LSU addrgen -> TCDM arbiter -> bank",
+                    tt_ps: 801.0,
+                    spatzformer_only: false,
+                },
+                TimingPath {
+                    name: "snitch decode -> accel port",
+                    tt_ps: 742.0,
+                    spatzformer_only: false,
+                },
                 TimingPath { name: "icache tag -> hit mux", tt_ps: 688.0, spatzformer_only: false },
                 // The added mux/fan-out stage is registered: its path is
                 // accel-port register -> broadcast mux -> unit queue reg.
-                TimingPath { name: "broadcast stage mux (pipelined)", tt_ps: 611.0, spatzformer_only: true },
-                TimingPath { name: "retire merge -> scoreboard", tt_ps: 574.0, spatzformer_only: true },
+                TimingPath {
+                    name: "broadcast stage mux (pipelined)",
+                    tt_ps: 611.0,
+                    spatzformer_only: true,
+                },
+                TimingPath {
+                    name: "retire merge -> scoreboard",
+                    tt_ps: 574.0,
+                    spatzformer_only: true,
+                },
             ],
             // 833 ps TT -> 1.2 GHz; SS 950 MHz -> 1052.6 ps: derate 1.2636
             ss_derate: 1.2636,

@@ -641,8 +641,14 @@ mod tests {
     fn split_mode_routes_to_own_unit() {
         let (mut units, mut tcdm, mut stage, mut c) = setup(ArchKind::Spatzformer);
         setvl(&mut stage, 1, 16, Lmul::M1, &mut units, &mut tcdm, &mut c);
-        stage
-            .try_dispatch(1, VectorOp::MovVF { vd: VReg(2), f: 3.0 }, &mut units, &mut tcdm, &mut c, 0);
+        stage.try_dispatch(
+            1,
+            VectorOp::MovVF { vd: VReg(2), f: 3.0 },
+            &mut units,
+            &mut tcdm,
+            &mut c,
+            0,
+        );
         assert!(units[0].is_idle());
         assert!(!units[1].is_idle());
         assert_eq!(units[1].vrf.read_f32(VReg(2), 15), 3.0);

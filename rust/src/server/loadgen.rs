@@ -72,6 +72,29 @@ impl LoadgenReport {
         self.ok as f64 / secs
     }
 
+    /// The tracked §Perf numbers as a JSON object (achieved jobs/s plus
+    /// the latency percentiles; rejects/errors so overload is visible).
+    /// `spatzformer loadgen --json PATH` wraps this under
+    /// `serve.c<clients>`, which is how CI's `bench-report` job merges
+    /// the C=1/4/16 sweep into one `BENCH_REPORT.json` artifact.
+    pub fn to_json(&self) -> Json {
+        let latency = |f: fn(&LatencyPercentiles) -> f64| {
+            Json::opt(self.latency.as_ref(), |l| Json::num(f(l)))
+        };
+        Json::Obj(vec![
+            ("clients".to_string(), Json::u64_lossless(self.clients as u64)),
+            ("sent".to_string(), Json::u64_lossless(self.sent)),
+            ("ok".to_string(), Json::u64_lossless(self.ok)),
+            ("rejected".to_string(), Json::u64_lossless(self.rejected)),
+            ("errors".to_string(), Json::u64_lossless(self.errors)),
+            ("wall_ms".to_string(), Json::num(self.wall.as_secs_f64() * 1e3)),
+            ("jobs_per_sec".to_string(), Json::num(self.jobs_per_sec())),
+            ("p50_ms".to_string(), latency(|l| l.p50_ms)),
+            ("p95_ms".to_string(), latency(|l| l.p95_ms)),
+            ("p99_ms".to_string(), latency(|l| l.p99_ms)),
+        ])
+    }
+
     pub fn render(&self) -> String {
         format!(
             "clients        : {}\n\
@@ -282,5 +305,29 @@ mod tests {
         assert!(s.contains("jobs/s"), "{s}");
         assert!(s.contains("p50/p95/p99"), "{s}");
         assert!(s.contains("8 ok, 1 rejected"), "{s}");
+    }
+
+    #[test]
+    fn report_json_carries_the_tracked_numbers() {
+        let r = LoadgenReport {
+            clients: 4,
+            sent: 12,
+            ok: 10,
+            rejected: 2,
+            errors: 0,
+            wall: Duration::from_millis(500),
+            latency: LatencyPercentiles::from_samples_ms(&[1.0, 2.0, 3.0]),
+        };
+        let j = r.to_json();
+        assert_eq!(j.get("clients").and_then(Json::as_u64), Some(4));
+        assert_eq!(j.get("jobs_per_sec").and_then(Json::as_f64), Some(20.0));
+        let p99 = j.get("p99_ms").and_then(Json::as_f64).unwrap();
+        assert!((p99 - 2.98).abs() < 1e-9, "p99={p99}");
+        // round-trips through the strict codec
+        let wire = j.encode();
+        assert_eq!(Json::parse(&wire).unwrap(), j);
+        // no latency samples -> explicit nulls, not fake zeros
+        let empty = LoadgenReport { latency: None, ..r };
+        assert_eq!(empty.to_json().get("p99_ms"), Some(&Json::Null));
     }
 }

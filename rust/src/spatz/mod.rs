@@ -64,6 +64,14 @@ struct RegTiming {
 struct LsuActive {
     entry: OffloadEntry,
     pending: VecDeque<u32>,
+    /// Bank-set bitmask of the op's addresses, folded lazily on first
+    /// use by [`SpatzUnit::lsu_bank_mask`] and cached for the op's
+    /// lifetime — `pending` only shrinks, so the mask stays a
+    /// conservative superset. The cluster's coupled-LSU check reads it
+    /// every non-skippable cycle; folding the deque each time would
+    /// cost O(stream) per cycle on exactly the windows that cannot be
+    /// skipped.
+    bank_mask: Option<u128>,
 }
 
 /// One Spatz vector unit (timing state).
@@ -135,9 +143,61 @@ impl SpatzUnit {
     }
 
     /// True while a memory op is streaming through the LSU (the unit
-    /// then arbitrates TCDM banks every cycle and cannot be skipped).
+    /// then arbitrates TCDM banks every cycle; the cluster either
+    /// bulk-applies a [`crate::mem::ConflictSchedule`] for the window or
+    /// replays it per cycle in the coupled cases).
     pub fn lsu_active(&self) -> bool {
         self.lsu.is_some()
+    }
+
+    /// Per-cycle TCDM request budget of the LSU (= FPU lane count).
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// The active LSU op's outstanding element addresses, in arbitration
+    /// order (front is tried first; conflicts rotate to the back).
+    /// `None` when no memory op is streaming. Input to
+    /// [`crate::mem::Tcdm::conflict_schedule`].
+    pub fn lsu_pending(&self) -> Option<&VecDeque<u32>> {
+        self.lsu.as_ref().map(|a| &a.pending)
+    }
+
+    /// Bank-set bitmask of the active LSU op's addresses: bit `b` set
+    /// iff some outstanding element maps to bank `b`. Folded once per
+    /// op and cached (conservative — the pending stream only shrinks).
+    /// `None` when no op is active or the bank count exceeds the mask
+    /// width (treat as potentially-overlapping). The cluster uses two
+    /// of these to decide the coupled-LSU fallback in O(1) per cycle.
+    pub fn lsu_bank_mask(&mut self, tcdm: &Tcdm) -> Option<u128> {
+        let active = self.lsu.as_mut()?;
+        if active.bank_mask.is_none() {
+            // None also when the bank count exceeds the mask width — the
+            // caller then treats the op as potentially-overlapping
+            active.bank_mask = tcdm.bank_set_mask(active.pending.iter().copied());
+        }
+        active.bank_mask
+    }
+
+    /// Bulk-apply a conflict schedule computed for this unit's active
+    /// LSU op: replace the pending stream with the schedule's
+    /// `remaining`. The caller (the cluster's LSU fast-forward) has
+    /// already applied the grant/conflict counts to the TCDM stats and
+    /// advances `now` by the schedule's cycle count; the schedule stops
+    /// before the drain cycle, so the op stays in flight and the normal
+    /// [`Self::step`] path completes it exactly as the replayed loop
+    /// would have.
+    pub fn lsu_apply_schedule(&mut self, remaining: VecDeque<u32>) {
+        let active = self
+            .lsu
+            .as_mut()
+            .expect("lsu_apply_schedule without an active LSU op");
+        debug_assert!(
+            !remaining.is_empty(),
+            "a conflict schedule must stop before the drain cycle"
+        );
+        debug_assert!(remaining.len() <= active.pending.len());
+        active.pending = remaining;
     }
 
     fn group_regs(base: crate::isa::VReg, lmul: usize) -> impl Iterator<Item = usize> {
@@ -219,15 +279,28 @@ impl SpatzUnit {
     /// Event horizon for the fast-forward engine: the earliest cycle `>=
     /// now` at which stepping this unit does anything beyond setting
     /// `busy_this_cycle` (which [`Self::skip`] accounts in bulk). Events
-    /// are retire deliveries and queue-head issues; an active LSU op pins
-    /// the horizon to `now` because it arbitrates for TCDM banks (and
-    /// replays conflicts) every single cycle.
+    /// are retire deliveries and queue-head issues; an active LSU op
+    /// still pins *this* horizon to `now` — it arbitrates for TCDM banks
+    /// every single cycle — but the cluster no longer has to step it:
+    /// the LSU fast-forward path bulk-applies the arbitration window
+    /// through [`Self::lsu_apply_schedule`] and consults
+    /// [`Self::next_event_beyond_lsu`] for the unit's other events.
     pub fn next_event(&self, now: u64) -> Option<u64> {
-        if self.is_idle() {
-            return None;
-        }
         if self.lsu.is_some() {
             return Some(now);
+        }
+        self.next_event_beyond_lsu(now)
+    }
+
+    /// The unit's event horizon *excluding* the active LSU op's
+    /// per-cycle arbitration: retire deliveries and the exact issue
+    /// cycle of a non-memory queue head (a memory head cannot issue
+    /// while the LSU is busy, and the drain cycle that frees it is never
+    /// skipped, so it contributes no event here). This is the horizon
+    /// the cluster's LSU fast-forward clamps its window to.
+    pub fn next_event_beyond_lsu(&self, now: u64) -> Option<u64> {
+        if self.is_idle() {
+            return None;
         }
         let retire = self.pending_retires.iter().map(|&(_, _, at)| at).min();
         let issue = self.head_issue_at();
@@ -240,14 +313,16 @@ impl SpatzUnit {
 
     /// Bulk-apply `w` skipped cycles starting at `now`: replay the
     /// per-cycle busy accounting the naive loop would have produced. The
-    /// caller guarantees no LSU op is active and that `w` does not cross
-    /// this unit's [`Self::next_event`] horizon, so nothing else changes.
+    /// caller guarantees `w` does not cross this unit's
+    /// [`Self::next_event_beyond_lsu`] horizon and, when an LSU op is in
+    /// flight, that the same window's bank arbitration was bulk-applied
+    /// via [`Self::lsu_apply_schedule`] — a streaming LSU makes the unit
+    /// busy every cycle.
     pub fn skip(&mut self, now: u64, w: u64, counters: &mut Counters) {
-        debug_assert!(self.lsu.is_none(), "skip across an active LSU op");
-        let busy = if self.queue.is_empty() {
-            w.min(self.fpu_busy_until.saturating_sub(now))
-        } else {
+        let busy = if self.lsu.is_some() || !self.queue.is_empty() {
             w
+        } else {
+            w.min(self.fpu_busy_until.saturating_sub(now))
         };
         counters.cycles_unit_busy[self.id] += busy;
     }
@@ -335,6 +410,7 @@ impl SpatzUnit {
                         self.lsu = Some(LsuActive {
                             pending: entry.addrs.iter().copied().collect(),
                             entry,
+                            bank_mask: None,
                         });
                         // requests start flowing next cycle (this cycle
                         // decoded/issued)
@@ -615,15 +691,103 @@ mod tests {
     }
 
     #[test]
-    fn lsu_pins_the_horizon_to_now() {
+    fn lsu_pins_the_plain_horizon_but_exposes_events_beyond_it() {
         let mut u = unit();
         let mut t = tcdm();
         u.enqueue(load_entry(VReg(8), 0, 16, 1));
         let mut retires = Vec::new();
         t.begin_cycle();
         u.step(0, &mut t, &mut retires); // LSU op becomes active
+        // the plain horizon still pins (the LSU arbitrates every cycle)…
         assert_eq!(u.next_event(1), Some(1));
         assert_eq!(u.next_event(7), Some(7));
+        // …but beyond the LSU there is nothing scheduled: no pending
+        // retire, and no queue head at all
+        assert_eq!(u.next_event_beyond_lsu(1), None);
+        // a non-memory head's exact issue cycle is visible through the
+        // LSU (it can issue mid-stream once its operands are ready)
+        let mut e = fpu_entry(
+            VectorOp::AddVV { vd: VReg(0), vs1: VReg(16), vs2: VReg(24) },
+            16,
+            2,
+        );
+        e.ready_at = 9;
+        u.enqueue(e);
+        assert_eq!(u.next_event_beyond_lsu(1), Some(9));
+        // a blocked memory head contributes no event (it waits for the
+        // drain cycle, which is never skipped)
+        let mut u2 = unit();
+        let mut t2 = tcdm();
+        u2.enqueue(load_entry(VReg(8), 0, 16, 1));
+        u2.enqueue(load_entry(VReg(0), 256, 16, 2));
+        t2.begin_cycle();
+        u2.step(0, &mut t2, &mut retires);
+        assert!(u2.lsu_active());
+        assert_eq!(u2.next_event_beyond_lsu(1), None);
+    }
+
+    #[test]
+    fn lsu_schedule_roundtrip_matches_stepped_arbitration() {
+        // drive one unit per cycle, the other via schedule bulk-apply;
+        // both must retire at the same cycle with identical TCDM stats
+        let mut stepped = unit();
+        let mut t_stepped = tcdm();
+        stepped.enqueue(load_entry(VReg(8), 0, 16, 1));
+        let (cycle_stepped, _) = run_until_retires(&mut stepped, &mut t_stepped, 1, 100);
+
+        let mut fast = unit();
+        let mut t_fast = tcdm();
+        fast.enqueue(load_entry(VReg(8), 0, 16, 1));
+        let mut retires = Vec::new();
+        t_fast.begin_cycle();
+        fast.step(0, &mut t_fast, &mut retires); // issue: LSU active
+        let sched = t_fast.conflict_schedule(fast.lsu_pending().unwrap(), fast.lanes(), u64::MAX);
+        assert!(sched.cycles > 0);
+        t_fast.apply_schedule(&sched);
+        fast.lsu_apply_schedule(sched.remaining);
+        // replay only the cycles the schedule did not cover
+        let mut now = 1 + sched.cycles;
+        loop {
+            t_fast.begin_cycle();
+            fast.step(now, &mut t_fast, &mut retires);
+            if !retires.is_empty() {
+                break;
+            }
+            assert!(now < 100, "no retire");
+            now += 1;
+        }
+        assert_eq!(now, cycle_stepped);
+        assert_eq!(t_fast.stats, t_stepped.stats);
+    }
+
+    #[test]
+    fn lsu_bank_mask_is_cached_and_conservative() {
+        let mut u = unit();
+        let mut t = tcdm();
+        assert_eq!(u.lsu_bank_mask(&t), None, "no active op, no mask");
+        u.enqueue(load_entry(VReg(8), 0, 16, 1));
+        let mut retires = Vec::new();
+        t.begin_cycle();
+        u.step(0, &mut t, &mut retires);
+        let expect = (0..16u32).fold(0u128, |m, i| m | (1u128 << t.bank_of(i * 4)));
+        assert_eq!(u.lsu_bank_mask(&t), Some(expect));
+        // stays a (conservative) superset as the stream drains
+        t.begin_cycle();
+        u.step(1, &mut t, &mut retires);
+        assert_eq!(u.lsu_bank_mask(&t), Some(expect));
+    }
+
+    #[test]
+    fn skip_counts_an_active_lsu_as_busy_every_cycle() {
+        let mut u = unit();
+        let mut t = tcdm();
+        u.enqueue(load_entry(VReg(8), 0, 16, 1));
+        let mut retires = Vec::new();
+        t.begin_cycle();
+        u.step(0, &mut t, &mut retires); // LSU op becomes active
+        let mut bulk = Counters::default();
+        u.skip(1, 3, &mut bulk);
+        assert_eq!(bulk.cycles_unit_busy[0], 3);
     }
 
     #[test]

@@ -110,6 +110,14 @@ pub fn fmt_ratio(r: f64) -> String {
     format!("{r:.2}x")
 }
 
+/// Value of a `--flag PATH` style process argument. The bench binaries
+/// are `harness = false` and bypass the CLI parser, so this is their
+/// shared argument reader (e.g. the `--json PATH` report flag).
+pub fn flag_value(name: &str) -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

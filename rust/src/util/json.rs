@@ -560,7 +560,8 @@ mod tests {
 
     #[test]
     fn parses_whitespace_and_escapes() {
-        let v = Json::parse(" { \"a\" :\t[ 1 ,\n 2 ] , \"s\" : \"\\u0041\\u00e9\\ud83d\\ude80\" } ").unwrap();
+        let v = Json::parse(" { \"a\" :\t[ 1 ,\n 2 ] , \"s\" : \"\\u0041\\u00e9\\ud83d\\ude80\" } ")
+            .unwrap();
         assert_eq!(v.get("a").unwrap().as_arr().unwrap().len(), 2);
         assert_eq!(v.get("s").unwrap().as_str(), Some("Aé🚀"));
     }

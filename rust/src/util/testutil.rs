@@ -30,7 +30,12 @@ pub struct Gen {
 
 impl Gen {
     /// A vector with length in `[min_len, min_len + size_scaled]`.
-    pub fn vec<T>(&mut self, min_len: usize, max_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+    pub fn vec<T>(
+        &mut self,
+        min_len: usize,
+        max_len: usize,
+        mut f: impl FnMut(&mut Gen) -> T,
+    ) -> Vec<T> {
         let hi = max_len.min(min_len + self.size.max(1));
         let len = if hi <= min_len {
             min_len

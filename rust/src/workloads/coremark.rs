@@ -134,7 +134,9 @@ pub fn coremark(cfg: &ClusterConfig, iterations: u32, seed: u64) -> ScalarWorklo
                 // once per (i,j) with a compact 4-op inner pattern x K)
                 let mut cell: i32 = 0;
                 for k in 0..MAT_DIM {
-                    cell = cell.wrapping_add(mat_a[i * MAT_DIM + k].wrapping_mul(mat_b[k * MAT_DIM + j]));
+                    cell = cell.wrapping_add(
+                        mat_a[i * MAT_DIM + k].wrapping_mul(mat_b[k * MAT_DIM + j]),
+                    );
                     e.load(mat_base + ((i * MAT_DIM + k) * 4) as u32);
                     e.load(mat_base + ((MAT_DIM * MAT_DIM + k * MAT_DIM + j) * 4) as u32);
                     e.mul();

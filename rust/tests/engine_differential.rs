@@ -116,7 +116,10 @@ fn arb_dual_core(g: &mut Gen) -> (SimConfig, [Program; 2], Vec<f32>) {
         while off < n {
             let vl = (g.int(1, cap as usize) as u32).min(n - off);
             p.vector(VectorOp::SetVl { avl: vl, ew: ElemWidth::E32, lmul: Lmul::M8 });
-            p.vector(VectorOp::Load { vd: VReg(8), base: in_base + off * 4, stride: 1 });
+            // mixed strides: 1 hits the closed-form conflict-free path,
+            // 2/3 exercise the general conflict-schedule replay
+            let stride = g.int(1, 3) as i32;
+            p.vector(VectorOp::Load { vd: VReg(8), base: in_base + off * 4, stride });
             match g.int(0, 2) {
                 0 => p.vector(VectorOp::MulVF { vd: VReg(16), vs: VReg(8), f: g.f32(4.0) }),
                 1 => p.vector(VectorOp::MacVF { vd: VReg(16), vs: VReg(8), f: g.f32(2.0) }),
@@ -188,6 +191,156 @@ fn prop_random_programs_are_engine_invariant() {
         };
         assert_eq!(run(EngineKind::Fast), run(EngineKind::Naive));
     });
+}
+
+/// Build, stage and run one program pair under `engine`; returns the
+/// fingerprint plus the TCDM and DMA tallies the conflict fast-forward
+/// must reproduce exactly.
+#[allow(clippy::type_complexity)]
+fn run_programs(
+    base: &SimConfig,
+    engine: EngineKind,
+    programs: &[Program; 2],
+    stage_f32: &[(u32, Vec<f32>)],
+    stage_u32: &[(u32, Vec<u32>)],
+    out: (u32, usize),
+) -> ((u64, String, Vec<u32>), spatzformer::mem::TcdmStats, u64, spatzformer::mem::DmaStats) {
+    let mut cfg = base.clone();
+    cfg.engine = engine;
+    let mut cl = Cluster::new(cfg).unwrap();
+    for (addr, d) in stage_f32 {
+        cl.stage_f32(*addr, d);
+    }
+    for (addr, d) in stage_u32 {
+        cl.stage_u32(*addr, d);
+    }
+    cl.load_programs([programs[0].clone(), programs[1].clone()]).unwrap();
+    cl.run().unwrap();
+    let fp = fingerprint(&cl, out.0, out.1);
+    let tcdm = cl.tcdm.stats.clone();
+    let dma = cl.dma.stats.clone();
+    (fp, tcdm, cl.dma_cycles, dma)
+}
+
+/// Same-bank broadcast gather: every element of a `LoadIndexed` hits the
+/// identical address, so each arbitration cycle grants once and replays
+/// `lanes - 1` conflicts — the worst case for the conflict-schedule
+/// oracle's general path. Both arches, reports and conflict counts
+/// byte-identical, and the conflicts must actually be there.
+#[test]
+fn same_bank_broadcast_gathers_are_engine_invariant() {
+    for base in [SimConfig::spatzformer(), SimConfig::baseline()] {
+        let mut p0 = Program::new("gather-bcast");
+        p0.vector(VectorOp::SetVl { avl: 64, ew: ElemWidth::E32, lmul: Lmul::M8 });
+        // v8 <- index table (all entries the same byte offset)
+        p0.vector(VectorOp::Load { vd: VReg(8), base: 0x2000, stride: 1 });
+        // v16[i] = mem[0 + idx[i]] — a 64-wide broadcast of one word
+        p0.vector(VectorOp::LoadIndexed { vd: VReg(16), base: 0, vidx: VReg(8) });
+        p0.vector(VectorOp::Store { vs: VReg(16), base: 0x6000, stride: 1 });
+        p0.push(Instr::Fence);
+        p0.push(Instr::Halt);
+        let programs = [p0, Program::idle()];
+        let stage_f32 = vec![(0u32, vec![0.0f32; 256]), (1024, vec![42.5f32])];
+        let stage_u32 = vec![(0x2000u32, vec![1024u32; 64])];
+        let run = |engine| {
+            run_programs(&base, engine, &programs, &stage_f32, &stage_u32, (0x6000, 64))
+        };
+        let fast = run(EngineKind::Fast);
+        let naive = run(EngineKind::Naive);
+        assert_eq!(fast, naive, "arch {}", base.cluster.arch.name());
+        assert!(
+            fast.1.conflicts >= 64,
+            "a 64-wide same-bank gather must replay conflicts (got {})",
+            fast.1.conflicts
+        );
+        // functional sanity: every output element is the broadcast word
+        assert!(fast.0 .2.iter().all(|&b| f32::from_bits(b) == 42.5));
+    }
+}
+
+/// Strided faxpy sweeps: `y[i] += a * x[i*stride]` strips across a
+/// stride grid, dual-core, on both arches. Unit and power-of-two
+/// strides exercise the closed-form conflict-free path; odd and wide
+/// strides exercise the general replay path.
+#[test]
+fn strided_faxpy_sweeps_are_engine_invariant() {
+    for base in [SimConfig::spatzformer(), SimConfig::baseline()] {
+        for stride in [1i32, 2, 3, 4, 8, 16] {
+            let faxpy = |name: &str, x_base: u32, y_base: u32| {
+                let mut p = Program::new(name);
+                for strip in 0..2u32 {
+                    p.vector(VectorOp::SetVl { avl: 64, ew: ElemWidth::E32, lmul: Lmul::M8 });
+                    p.vector(VectorOp::Load {
+                        vd: VReg(8),
+                        base: x_base + strip * 64 * 4,
+                        stride,
+                    });
+                    p.vector(VectorOp::Load {
+                        vd: VReg(16),
+                        base: y_base + strip * 256,
+                        stride: 1,
+                    });
+                    p.vector(VectorOp::MacVF { vd: VReg(16), vs: VReg(8), f: 3.0 });
+                    p.vector(VectorOp::Store {
+                        vs: VReg(16),
+                        base: y_base + strip * 256,
+                        stride: 1,
+                    });
+                }
+                p.push(Instr::Fence);
+                p.push(Instr::Halt);
+                p
+            };
+            let programs = [faxpy("faxpy0", 0, 0x8000), faxpy("faxpy1", 0x1000, 0xA000)];
+            let x: Vec<f32> = (0..2048).map(|i| (i as f32 * 0.37).cos()).collect();
+            let y: Vec<f32> = (0..128).map(|i| i as f32).collect();
+            let stage_f32 = vec![(0u32, x), (0x8000u32, y.clone()), (0xA000u32, y)];
+            let run = |engine| {
+                run_programs(&base, engine, &programs, &stage_f32, &[], (0x8000, 128))
+            };
+            assert_eq!(
+                run(EngineKind::Fast),
+                run(EngineKind::Naive),
+                "arch {} stride {stride}",
+                base.cluster.arch.name()
+            );
+        }
+    }
+}
+
+/// Dual-core contention with DMA-staged inputs: both cores stream loads
+/// from the same region (overlapping bank sets — the coupled fallback)
+/// with barriers in between, after staging f32 *and* u32 arrays through
+/// the DMA engine. Reports, TCDM conflict counts and DMA accounting must
+/// all be byte-identical across engines.
+#[test]
+fn dual_core_and_dma_contention_is_engine_invariant() {
+    let mk = |name: &str, stride: i32, out: u32| {
+        let mut p = Program::new(name);
+        for strip in 0..2u32 {
+            p.vector(VectorOp::SetVl { avl: 96, ew: ElemWidth::E32, lmul: Lmul::M8 });
+            p.vector(VectorOp::Load { vd: VReg(8), base: strip * 256, stride });
+            p.vector(VectorOp::MulVF { vd: VReg(16), vs: VReg(8), f: 0.5 });
+            p.vector(VectorOp::Store { vs: VReg(16), base: out + strip * 384, stride: 1 });
+            p.push(Instr::Fence);
+            p.push(Instr::Barrier);
+        }
+        p.push(Instr::Halt);
+        p
+    };
+    let base = SimConfig::spatzformer();
+    let programs = [mk("contend0", 1, 0x8000), mk("contend1", 2, 0xA000)];
+    let x: Vec<f32> = (0..1024).map(|i| (i as f32).sin()).collect();
+    let idx: Vec<u32> = (0..64u32).map(|i| i * 8).collect();
+    let stage_f32 = vec![(0u32, x)];
+    let stage_u32 = vec![(0x3000u32, idx)];
+    let run = |engine| {
+        run_programs(&base, engine, &programs, &stage_f32, &stage_u32, (0x8000, 192))
+    };
+    let fast = run(EngineKind::Fast);
+    let naive = run(EngineKind::Naive);
+    assert_eq!(fast, naive);
+    assert!(fast.2 > 0, "DMA staging cycles must be accounted");
 }
 
 #[test]

@@ -9,7 +9,13 @@ use spatzformer::util::testutil::{check, Gen};
 
 /// Generate a random but well-formed elementwise vector program over a
 /// scratch region, returning (program, model closure outputs).
-fn arb_elementwise(g: &mut Gen, n: u32, in_base: u32, out_base: u32, merged: bool) -> (Program, Vec<f32>, Vec<f32>) {
+fn arb_elementwise(
+    g: &mut Gen,
+    n: u32,
+    in_base: u32,
+    out_base: u32,
+    merged: bool,
+) -> (Program, Vec<f32>, Vec<f32>) {
     let data: Vec<f32> = (0..n).map(|_| g.f32(100.0)).collect();
     let mut p = Program::new("prop-elementwise");
     let mut expect = data.clone();

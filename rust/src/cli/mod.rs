@@ -1,8 +1,9 @@
 //! Command-line interface (hand-rolled; `clap` is unavailable offline).
 //!
 //! ```text
-//! spatzformer run   --kernel fft --mode merge [--arch spatzformer]
-//! spatzformer mixed --kernel fmatmul --mode auto [--iters 2]
+//! spatzformer run   --kernel fft --mode merge [--arch spatzformer] [--trace-out t.sptz]
+//! spatzformer mixed --kernel fmatmul --mode auto [--iters 2] [--trace-out t.sptz]
+//! spatzformer trace query t.sptz [--subsystem tcdm] [--from 0 --to 5000] [--json]
 //! spatzformer fleet --workers 8 --jobs 256 --seed 7 [--scenario storm] [--no-cache]
 //! spatzformer serve --addr 127.0.0.1:9738 --workers 4 --queue-depth 256
 //! spatzformer loadgen --addr 127.0.0.1:9738 --clients 4 --requests 32 [--shutdown]
@@ -18,7 +19,9 @@ use crate::experiments;
 use crate::fleet::{self, Fleet, ScenarioKind};
 use crate::isa::asm;
 use crate::kernels::{Deployment, KernelId};
+use crate::metrics::Table;
 use crate::server::{self, loadgen};
+use crate::trace::perf;
 
 const USAGE: &str = "\
 spatzformer — reconfigurable dual-core RVV cluster simulator (paper reproduction)
@@ -29,6 +32,8 @@ USAGE:
 COMMANDS:
   run      run one vector kernel           --kernel <name> --mode <split|merge|auto>
   mixed    kernel ∥ CoreMark-workalike     --kernel <name> --mode <split|merge|auto> [--iters N]
+  trace    query a binary perf trace       query <file> [--from N] [--to N]
+           [--subsystem S] [--who K] [--top N] [--window W] [--json]
   fleet    batch-simulate a generated scenario across N simulated clusters
            [--scenario <kernel-sweep|mixed-sweep|storm>] [--workers N]
            [--jobs M] [--no-cache] [--no-compile-cache]
@@ -49,6 +54,17 @@ COMMON OPTIONS:
   --config <file.toml>            load config file
   --set <section.key=value>       override one config knob (repeatable)
   --artifacts <dir>               artifact directory (default: artifacts/)
+  --trace-out <file>              (run/mixed) turn on the perf trace and stream
+                                  every record to <file> for `trace query`
+
+TRACE OPTIONS (trace query):
+  --from <N> / --to <M>           keep records in cycle range [N, M)
+  --subsystem <name>              scalar, vector, tcdm, dma, icache, barrier,
+                                  reconfig, engine, other
+  --who <K>                       core/unit id (255 = cluster-wide records)
+  --top <N>                       hottest windows to rank (default 5)
+  --window <W>                    hot-window width in cycles (default 1024)
+  --json                          machine-readable output (canonical JSON)
 
 FLEET OPTIONS:
   --scenario <name>               generator: kernel-sweep, mixed-sweep, storm (default storm)
@@ -79,20 +95,25 @@ KERNELS: fmatmul conv2d fft fdotp faxpy fdct
 /// Options that take no value (presence == true).
 const BOOL_FLAGS: &[&str] = &["no-cache", "no-compile-cache", "smoke", "shutdown"];
 
+/// Bool flags for `trace` subcommands. Separate from [`BOOL_FLAGS`]
+/// because `--json` is valueless here but takes a path under `loadgen` —
+/// per-command lists keep both meanings parseable.
+const TRACE_BOOL_FLAGS: &[&str] = &["json"];
+
 struct Args {
     positional: Vec<String>,
     options: Vec<(String, String)>,
 }
 
 impl Args {
-    fn parse(argv: &[String]) -> Result<Self, String> {
+    fn parse_with(argv: &[String], bool_flags: &[&str]) -> Result<Self, String> {
         let mut positional = Vec::new();
         let mut options = Vec::new();
         let mut i = 0;
         while i < argv.len() {
             let a = &argv[i];
             if let Some(name) = a.strip_prefix("--") {
-                if BOOL_FLAGS.contains(&name) {
+                if bool_flags.contains(&name) {
                     options.push((name.to_string(), "true".to_string()));
                     i += 1;
                     continue;
@@ -181,12 +202,39 @@ fn attach_runtime_if_available(c: &mut Coordinator, args: &Args) {
     }
 }
 
+/// `--trace-out PATH` implies `[trace]` on: flip the knob before the
+/// coordinator is built so the cluster's recorder exists from cycle 0.
+fn apply_trace_out(cfg: &mut SimConfig, args: &Args) {
+    if args.get("trace-out").is_some() {
+        cfg.trace = true;
+    }
+}
+
+/// Attach the streaming sink when `--trace-out` was given.
+fn attach_trace_out(c: &mut Coordinator, args: &Args) -> anyhow::Result<()> {
+    if let Some(path) = args.get("trace-out") {
+        c.attach_trace_sink(path)?;
+    }
+    Ok(())
+}
+
+/// Flush the sink and report the trace volume after a traced run.
+fn finish_trace_out(c: &mut Coordinator, args: &Args, records: u64) -> anyhow::Result<()> {
+    if let Some(path) = args.get("trace-out") {
+        c.flush_trace()?;
+        println!("trace     : {records} records -> {path} (spatzformer trace query {path})");
+    }
+    Ok(())
+}
+
 fn cmd_run(args: &Args) -> anyhow::Result<()> {
-    let cfg = build_config(args)?;
+    let mut cfg = build_config(args)?;
+    apply_trace_out(&mut cfg, args);
     let kernel = parse_kernel(args)?;
     let policy = parse_policy(args)?;
     let mut c = Coordinator::new(cfg)?;
     attach_runtime_if_available(&mut c, args);
+    attach_trace_out(&mut c, args)?;
     let r = c.submit(&Job::Kernel { kernel, policy })?;
     println!("job       : {}", r.job_name);
     println!("deploy    : {}", r.deploy.name());
@@ -198,16 +246,19 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     if let Some(err) = r.verified_max_rel_err {
         println!("verified  : OK (max rel err {err:.2e} vs XLA artifact)");
     }
+    finish_trace_out(&mut c, args, r.metrics.telemetry.trace_records)?;
     Ok(())
 }
 
 fn cmd_mixed(args: &Args) -> anyhow::Result<()> {
-    let cfg = build_config(args)?;
+    let mut cfg = build_config(args)?;
+    apply_trace_out(&mut cfg, args);
     let kernel = parse_kernel(args)?;
     let policy = parse_policy(args)?;
     let iters: u32 = args.get("iters").unwrap_or("1").parse()?;
     let mut c = Coordinator::new(cfg)?;
     attach_runtime_if_available(&mut c, args);
+    attach_trace_out(&mut c, args)?;
     let r = c.submit(&Job::Mixed { kernel, policy, coremark_iterations: iters })?;
     println!("job            : {}", r.job_name);
     println!("deploy         : {}", r.deploy.name());
@@ -218,7 +269,125 @@ fn cmd_mixed(args: &Args) -> anyhow::Result<()> {
     if let Some(err) = r.verified_max_rel_err {
         println!("verified       : OK (max rel err {err:.2e})");
     }
+    finish_trace_out(&mut c, args, r.metrics.telemetry.trace_records)?;
     Ok(())
+}
+
+const TRACE_USAGE: &str = "usage: spatzformer trace query <file> \
+[--from N] [--to M] [--subsystem S] [--who K] [--top N] [--window W] [--json]";
+
+fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    match args.positional.get(1).map(|s| s.as_str()) {
+        Some("query") => {}
+        Some(other) => anyhow::bail!("unknown trace subcommand `{other}`\n{TRACE_USAGE}"),
+        None => anyhow::bail!("{TRACE_USAGE}"),
+    }
+    let file = args
+        .positional
+        .get(2)
+        .ok_or_else(|| anyhow::anyhow!("trace query needs a trace file (see `run --trace-out`)"))?;
+    let records = perf::read_trace_file(std::path::Path::new(file))?;
+
+    let mut filter = perf::Filter::default();
+    if let Some(v) = args.get("from") {
+        filter.from = Some(v.parse().map_err(|_| anyhow::anyhow!("bad --from: {v}"))?);
+    }
+    if let Some(v) = args.get("to") {
+        filter.to = Some(v.parse().map_err(|_| anyhow::anyhow!("bad --to: {v}"))?);
+    }
+    if let Some(v) = args.get("subsystem") {
+        let s = perf::Subsystem::from_name(v).ok_or_else(|| {
+            let names: Vec<&str> = perf::Subsystem::all().iter().map(|s| s.name()).collect();
+            anyhow::anyhow!("unknown subsystem `{v}` ({})", names.join("|"))
+        })?;
+        filter.subsystem = Some(s);
+    }
+    if let Some(v) = args.get("who") {
+        filter.who = Some(v.parse().map_err(|_| anyhow::anyhow!("bad --who: {v}"))?);
+    }
+    let top: usize = args
+        .get("top")
+        .unwrap_or("5")
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad --top: {}", args.get("top").unwrap_or("")))?;
+    let window: u64 = match args.get("window") {
+        None => perf::DEFAULT_WINDOW,
+        Some(v) => {
+            let w = v.parse().map_err(|_| anyhow::anyhow!("bad --window: {v}"))?;
+            anyhow::ensure!(w > 0, "--window must be >= 1");
+            w
+        }
+    };
+
+    let report = perf::query(&records, &filter, top, window);
+    if args.get("json").is_some() {
+        println!("{}", report.to_json().encode());
+    } else {
+        print!("{}", render_trace_report(&report));
+    }
+    Ok(())
+}
+
+/// Human-readable form of a [`perf::QueryReport`] (the `--json` twin is
+/// [`perf::QueryReport::to_json`]).
+fn render_trace_report(r: &perf::QueryReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "records   : {} matched of {} (cycles {}..={})\n",
+        r.matched,
+        r.total_records,
+        r.first_cycle,
+        r.last_cycle
+    ));
+    if r.engine_skip_cycles > 0 {
+        out.push_str(&format!(
+            "engine    : {} cycles fast-forwarded (skip spans)\n",
+            r.engine_skip_cycles
+        ));
+    }
+    if !r.attribution.is_empty() {
+        let mut t = Table::new(&["subsystem", "records", "cycles"]);
+        for s in &r.attribution {
+            t.row(&[s.subsystem.name().to_string(), s.records.to_string(), s.cycles.to_string()]);
+        }
+        out.push('\n');
+        out.push_str(&t.render());
+    }
+    if !r.stalls.is_empty() {
+        let mut t = Table::new(&["stall reason", "count", "cycles", "max width"]);
+        for s in &r.stalls {
+            t.row(&[
+                perf::reason::name(s.reason).to_string(),
+                s.count.to_string(),
+                s.cycles.to_string(),
+                s.max_width.to_string(),
+            ]);
+        }
+        out.push('\n');
+        out.push_str(&t.render());
+        if !r.stall_width_buckets.is_empty() {
+            let buckets: Vec<String> = r
+                .stall_width_buckets
+                .iter()
+                .enumerate()
+                .map(|(i, n)| format!("2^{i}:{n}"))
+                .collect();
+            out.push_str(&format!("stall widths: {}\n", buckets.join(" ")));
+        }
+    }
+    if !r.hottest.is_empty() {
+        let mut t = Table::new(&["hot window", "records", "cycles"]);
+        for w in &r.hottest {
+            t.row(&[
+                format!("[{}, {})", w.start, w.end),
+                w.records.to_string(),
+                w.cycles.to_string(),
+            ]);
+        }
+        out.push('\n');
+        out.push_str(&t.render());
+    }
+    out
 }
 
 fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
@@ -454,7 +623,12 @@ fn cmd_disasm(args: &Args) -> anyhow::Result<()> {
 /// CLI entry point; returns the process exit code.
 pub fn main() -> i32 {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = match Args::parse(&argv) {
+    // the bool-flag vocabulary is per-command (see TRACE_BOOL_FLAGS)
+    let bool_flags = match argv.first().map(|s| s.as_str()) {
+        Some("trace") => TRACE_BOOL_FLAGS,
+        _ => BOOL_FLAGS,
+    };
+    let args = match Args::parse_with(&argv, bool_flags) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}\n\n{USAGE}");
@@ -465,6 +639,7 @@ pub fn main() -> i32 {
     let result = match cmd {
         "run" => cmd_run(&args),
         "mixed" => cmd_mixed(&args),
+        "trace" => cmd_trace(&args),
         "fleet" => cmd_fleet(&args),
         "serve" => cmd_serve(&args),
         "loadgen" => cmd_loadgen(&args),
@@ -495,7 +670,8 @@ mod tests {
     use super::*;
 
     fn args(v: &[&str]) -> Args {
-        Args::parse(&v.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+        let v: Vec<String> = v.iter().map(|s| s.to_string()).collect();
+        Args::parse_with(&v, BOOL_FLAGS).unwrap()
     }
 
     #[test]
@@ -534,6 +710,22 @@ mod tests {
         assert_eq!(a.get("smoke"), Some("true"));
         assert_eq!(a.get("shutdown"), Some("true"));
         assert_eq!(a.get("addr"), Some("127.0.0.1:0"));
+    }
+
+    #[test]
+    fn trace_flag_vocabulary_makes_json_valueless() {
+        // under `trace`, --json is presence-only; under loadgen it still
+        // takes a path — the per-command bool lists keep both working
+        let v: Vec<String> = ["trace", "query", "t.sptz", "--subsystem", "tcdm", "--json"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let a = Args::parse_with(&v, TRACE_BOOL_FLAGS).unwrap();
+        assert_eq!(a.positional, vec!["trace", "query", "t.sptz"]);
+        assert_eq!(a.get("json"), Some("true"));
+        assert_eq!(a.get("subsystem"), Some("tcdm"));
+        let a = args(&["loadgen", "--json", "out.json"]);
+        assert_eq!(a.get("json"), Some("out.json"));
     }
 
     #[test]

@@ -14,10 +14,11 @@ pub use barrier::BarrierUnit;
 use crate::config::{ArchKind, ClusterConfig, EngineKind, Mode, SimConfig};
 use crate::isa::{Instr, Program};
 use crate::mem::{ConflictSchedule, Dma, ICache, Tcdm};
-use crate::metrics::{Counters, RunMetrics};
+use crate::metrics::{Counters, RunMetrics, Telemetry};
 use crate::reconfig::ReconfigStage;
 use crate::snitch::{CoreState, Snitch};
 use crate::spatz::{RetireMsg, SpatzUnit};
+use crate::trace::perf::{skip, Kind, PerfTrace, Record, WHO_CLUSTER};
 use std::sync::Arc;
 
 /// The simulated cluster.
@@ -42,9 +43,13 @@ pub struct Cluster {
     /// kernel core's completion independently of the co-runner).
     halt_cycle: [Option<u64>; 2],
     /// Cycles actually stepped (vs fast-forwarded). Engine-strategy
-    /// telemetry only — deliberately *not* part of [`Counters`] or
-    /// [`RunMetrics`], which must stay engine-independent.
+    /// telemetry: surfaced through [`crate::metrics::Telemetry`], which
+    /// is deliberately transparent to [`RunMetrics`] equality so
+    /// simulation *results* stay engine-independent.
     steps_executed: u64,
+    /// The structured perf-trace log ([`crate::trace::perf`]). Disabled
+    /// unless `cfg.trace` is set; bounded by `cfg.trace_capacity`.
+    trace: PerfTrace,
 }
 
 impl Cluster {
@@ -62,6 +67,7 @@ impl Cluster {
             now: 0,
             next_stream: 0,
             retire_buf: Vec::with_capacity(8),
+            trace: PerfTrace::new(cfg.trace, cfg.trace_capacity),
             cfg,
             dma_cycles: 0,
             halt_cycle: [None; 2],
@@ -112,24 +118,52 @@ impl Cluster {
     }
     /// Cycles this cluster actually stepped (the naive loop steps every
     /// cycle; the fast engine steps only event cycles). Engine telemetry
-    /// for tests/benches — never part of a simulation result.
+    /// for tests/benches and [`crate::metrics::Telemetry`] — never part
+    /// of a simulation *result*.
     pub fn steps_executed(&self) -> u64 {
         self.steps_executed
+    }
+    /// The structured perf-trace log ([`crate::trace::perf`]).
+    pub fn trace(&self) -> &PerfTrace {
+        &self.trace
+    }
+    /// Mutable access to the perf-trace log (sink attachment, flushing).
+    pub fn trace_mut(&mut self) -> &mut PerfTrace {
+        &mut self.trace
     }
 
     /// Stage data into TCDM via the DMA engine (tracked separately from
     /// kernel cycles, like the paper's setup phase).
     pub fn stage_f32(&mut self, addr: u32, data: &[f32]) {
-        self.dma_cycles += self.dma.copy_in_f32(&mut self.tcdm, addr, data);
+        let cycles = self.dma.copy_in_f32(&mut self.tcdm, addr, data);
+        self.note_dma_burst(data.len() as u64 * 4, cycles);
     }
     pub fn stage_u32(&mut self, addr: u32, data: &[u32]) {
-        self.dma_cycles += self.dma.copy_in_u32(&mut self.tcdm, addr, data);
+        let cycles = self.dma.copy_in_u32(&mut self.tcdm, addr, data);
+        self.note_dma_burst(data.len() as u64 * 4, cycles);
     }
     /// Stage one pre-serialized range of a compile-stage staging image
     /// ([`crate::kernels::StagingImage`]): a bounded memcpy with the
     /// same DMA-cycle accounting as the per-array staging calls above.
     pub fn stage_bytes(&mut self, addr: u32, data: &[u8]) {
-        self.dma_cycles += self.dma.copy_in_bytes(&mut self.tcdm, addr, data);
+        let cycles = self.dma.copy_in_bytes(&mut self.tcdm, addr, data);
+        self.note_dma_burst(data.len() as u64, cycles);
+    }
+
+    /// Account one DMA staging burst: cycle cost plus a trace record.
+    fn note_dma_burst(&mut self, bytes: u64, cycles: u64) {
+        self.dma_cycles += cycles;
+        if self.trace.is_enabled() {
+            self.trace.emit(Record {
+                cycle: self.now,
+                kind: Kind::DmaBurst,
+                who: WHO_CLUSTER,
+                a: 0,
+                b: bytes as u32,
+                c: cycles,
+                d: 0,
+            });
+        }
     }
 
     /// Load programs onto the cores. Validates them against the
@@ -188,11 +222,12 @@ impl Cluster {
         self.steps_executed += 1;
         self.tcdm.begin_cycle();
         let flip = (self.now & 1) == 1;
+        let pre_tcdm = if self.trace.is_enabled() { Some(self.tcdm.stats.clone()) } else { None };
 
         // scalar cores (rotating priority)
         let order = if flip { [1usize, 0] } else { [0usize, 1] };
         for &i in &order {
-            self.cores[i].step(
+            self.cores[i].step_traced(
                 self.now,
                 &mut self.icache,
                 &mut self.tcdm,
@@ -200,6 +235,7 @@ impl Cluster {
                 &mut self.units,
                 &mut self.barrier,
                 &mut self.counters,
+                &mut self.trace,
             );
         }
 
@@ -210,11 +246,35 @@ impl Cluster {
             if self.units[i].is_idle() {
                 self.units[i].busy_this_cycle = false;
             } else {
-                self.units[i].step(self.now, &mut self.tcdm, &mut self.retire_buf);
+                self.units[i].step_traced(
+                    self.now,
+                    &mut self.tcdm,
+                    &mut self.retire_buf,
+                    &mut self.trace,
+                );
             }
         }
         for msg in self.retire_buf.drain(..) {
             self.reconfig.on_retire(msg);
+        }
+
+        // one TCDM record per stepped cycle that saw bank conflicts (the
+        // conflict-free common case stays record-free; bulk windows are
+        // covered by `TcdmSpan` records from the fast-forward paths)
+        if let Some(pre) = pre_tcdm {
+            let grants = self.tcdm.stats.accesses - pre.accesses;
+            let conflicts = self.tcdm.stats.conflicts - pre.conflicts;
+            if conflicts > 0 {
+                self.trace.emit(Record {
+                    cycle: self.now,
+                    kind: Kind::TcdmCycle,
+                    who: WHO_CLUSTER,
+                    a: 0,
+                    b: grants as u32,
+                    c: conflicts,
+                    d: 0,
+                });
+            }
         }
 
         // busy accounting for the leakage model + halt timestamps
@@ -357,8 +417,32 @@ impl Cluster {
                 };
                 debug_assert_eq!(s.cycles, span);
                 self.tcdm.apply_schedule(&s);
+                if self.trace.is_enabled() {
+                    // one span record stands in for the per-cycle TCDM
+                    // records the replayed loop would have produced
+                    self.trace.emit(Record {
+                        cycle: self.now,
+                        kind: Kind::TcdmSpan,
+                        who: i as u8,
+                        a: 0,
+                        b: s.grants as u32,
+                        c: s.conflicts,
+                        d: s.cycles,
+                    });
+                }
                 self.units[i].lsu_apply_schedule(s.remaining);
             }
+        }
+        if self.trace.is_enabled() {
+            self.trace.emit(Record {
+                cycle: self.now,
+                kind: Kind::SkipSpan,
+                who: WHO_CLUSTER,
+                a: skip::LSU,
+                b: 0,
+                c: span,
+                d: 0,
+            });
         }
         self.fast_forward(self.now + span);
         true
@@ -423,6 +507,17 @@ impl Cluster {
                 } else {
                     let target = self.next_horizon().unwrap_or(cap).min(cap);
                     if target > self.now && target < u64::MAX {
+                        if self.trace.is_enabled() {
+                            self.trace.emit(Record {
+                                cycle: self.now,
+                                kind: Kind::SkipSpan,
+                                who: WHO_CLUSTER,
+                                a: skip::IDLE,
+                                b: 0,
+                                c: target - self.now,
+                                d: 0,
+                            });
+                        }
                         self.fast_forward(target);
                         continue;
                     }
@@ -443,6 +538,11 @@ impl Cluster {
             icache: self.icache.stats.clone(),
             dma_cycles: self.dma_cycles,
             energy_pj: 0.0,
+            telemetry: Telemetry {
+                steps_executed: self.steps_executed,
+                trace_records: self.trace.records_total(),
+                trace_dropped: self.trace.records_dropped(),
+            },
         }
     }
 
@@ -488,6 +588,10 @@ impl Cluster {
         self.dma_cycles = 0;
         self.halt_cycle = [None; 2];
         self.steps_executed = 0;
+        // The trace resets with the cluster but deliberately survives
+        // `reset_stats`: workloads that stage data and then rewind the
+        // clock for the measured region keep their `DmaBurst` records.
+        self.trace.reset();
     }
 }
 

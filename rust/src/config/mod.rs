@@ -378,8 +378,12 @@ pub struct SimConfig {
     pub engine: EngineKind,
     /// Seed for workload/data generation.
     pub seed: u64,
-    /// Emit a per-event trace (slow; debugging only).
+    /// Emit the structured perf trace ([`crate::trace::perf`]).
     pub trace: bool,
+    /// In-memory perf-trace ring capacity, in records (`[trace]
+    /// capacity`). The ring keeps the newest records; a streaming file
+    /// sink (`--trace-out`) retains everything.
+    pub trace_capacity: usize,
     /// Safety valve: abort a run after this many cycles (0 = unlimited).
     pub max_cycles: u64,
 }
@@ -395,6 +399,7 @@ impl Default for SimConfig {
             engine: EngineKind::Fast,
             seed: 0xC0FFEE,
             trace: false,
+            trace_capacity: crate::trace::perf::DEFAULT_CAPACITY,
             max_cycles: 500_000_000,
         }
     }
@@ -425,6 +430,9 @@ impl SimConfig {
             // knob can live under one [sim] header alongside `engine`
             "seed" | "sim.seed" => self.seed = value.as_u64().ok_or_else(bad)?,
             "trace" | "sim.trace" => self.trace = value.as_bool().ok_or_else(bad)?,
+            "trace.capacity" | "sim.trace_capacity" => {
+                self.trace_capacity = value.as_usize().ok_or_else(bad)?
+            }
             "max_cycles" | "sim.max_cycles" => {
                 self.max_cycles = value.as_u64().ok_or_else(bad)?
             }
@@ -545,6 +553,10 @@ impl SimConfig {
             !self.server.addr.is_empty(),
             "server.addr must not be empty"
         );
+        anyhow::ensure!(
+            self.trace_capacity >= 1,
+            "trace_capacity must hold at least one record"
+        );
         Ok(())
     }
 }
@@ -649,6 +661,19 @@ mod tests {
         assert_eq!((cfg.seed, cfg.max_cycles, cfg.trace), (77, 123, true));
         cfg.apply("seed", &Value::Int(78)).unwrap();
         assert_eq!(cfg.seed, 78);
+    }
+
+    #[test]
+    fn apply_trace_capacity_key() {
+        let mut cfg = SimConfig::default();
+        assert_eq!(cfg.trace_capacity, crate::trace::perf::DEFAULT_CAPACITY);
+        cfg.apply("trace.capacity", &Value::Int(512)).unwrap();
+        assert_eq!(cfg.trace_capacity, 512);
+        cfg.apply("sim.trace_capacity", &Value::Int(2048)).unwrap();
+        assert_eq!(cfg.trace_capacity, 2048);
+        assert!(cfg.apply("trace.capacity", &Value::Str("big".into())).is_err());
+        cfg.trace_capacity = 0;
+        assert!(cfg.validate().is_err(), "zero-capacity ring rejected");
     }
 
     #[test]

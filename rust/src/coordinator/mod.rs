@@ -192,6 +192,33 @@ impl Coordinator {
         self.runtime.is_some()
     }
 
+    /// The cluster's perf-trace log (query after a run; empty and
+    /// disabled unless the `[trace]` knob is on).
+    pub fn trace(&self) -> &crate::trace::perf::PerfTrace {
+        self.cluster.trace()
+    }
+
+    /// Attach a streaming file sink to the perf-trace log: every record
+    /// is written through as it is emitted, so the on-disk trace stays
+    /// complete even when the bounded in-memory ring wraps. The sink
+    /// survives the in-place cluster reset between jobs (each job's
+    /// records keep appending to the same file).
+    pub fn attach_trace_sink(&mut self, path: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
+        let path = path.as_ref();
+        self.cluster
+            .trace_mut()
+            .attach_sink(path)
+            .map_err(|e| anyhow::anyhow!("cannot open trace sink {}: {e}", path.display()))
+    }
+
+    /// Flush buffered trace-sink bytes to disk (call after the last job).
+    pub fn flush_trace(&mut self) -> anyhow::Result<()> {
+        self.cluster
+            .trace_mut()
+            .flush()
+            .map_err(|e| anyhow::anyhow!("cannot flush trace sink: {e}"))
+    }
+
     /// Resolve the deployment a mode policy maps to on this coordinator's
     /// architecture (see [`compile::resolve_deploy`] for the table).
     pub fn resolve_deploy(

@@ -31,7 +31,12 @@ pub fn job_key(cfg: &SimConfig, job: &Job) -> u64 {
     h.write(format!("{:?}", cfg.ppa).as_bytes());
     h.write(&cfg.seed.to_le_bytes());
     h.write(&cfg.max_cycles.to_le_bytes());
+    // The trace knobs never change a report's *result* bytes (held by
+    // rust/tests/trace_invariance.rs), but they do change its
+    // equality-transparent telemetry (record/drop counts) — keeping them
+    // in the key keeps served telemetry honest for traced runs.
     h.write(&[cfg.trace as u8]);
+    h.write(&cfg.trace_capacity.to_le_bytes());
     h.write(format!("{job:?}").as_bytes());
     h.finish()
 }

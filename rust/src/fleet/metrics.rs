@@ -74,6 +74,9 @@ pub struct WorkerStats {
     pub stolen: u64,
     /// Simulated cluster cycles this worker produced (executed jobs only).
     pub sim_cycles: u64,
+    /// Engine cycles this worker actually stepped producing those
+    /// simulated cycles (the fast engine fast-forwards the rest).
+    pub sim_steps: u64,
     /// Wall-clock time spent inside job execution (vs idle/stealing).
     pub busy: Duration,
     /// Per-job wall-clock latency samples (cache hits included — a
@@ -102,6 +105,10 @@ pub struct FleetMetrics {
     pub sim_cycles_total: u64,
     /// Simulated cycles actually executed this run (cache hits excluded).
     pub sim_cycles_executed: u64,
+    /// Engine cycles actually stepped producing `sim_cycles_executed` —
+    /// the fleet-wide stepped-vs-skipped telemetry of the fast engine
+    /// (equals `sim_cycles_executed` under the naive engine).
+    pub sim_steps_executed: u64,
     pub per_worker: Vec<WorkerStats>,
 }
 
@@ -180,6 +187,16 @@ impl FleetMetrics {
         LatencyPercentiles::from_durations(&all)
     }
 
+    /// Fraction of executed simulated cycles the engines actually
+    /// stepped (1.0 under the naive engine; well below under the fast
+    /// engine on quiescent workloads). 0 when nothing executed.
+    pub fn stepped_fraction(&self) -> f64 {
+        if self.sim_cycles_executed == 0 {
+            return 0.0;
+        }
+        self.sim_steps_executed as f64 / self.sim_cycles_executed as f64
+    }
+
     /// Headline summary block (the acceptance numbers).
     pub fn summary(&self) -> String {
         format!(
@@ -188,6 +205,7 @@ impl FleetMetrics {
              wall           : {:.1} ms\n\
              jobs/sec       : {:.1}\n\
              Msim-cycles/s  : {:.2}\n\
+             engine steps   : {} of {} executed cycles ({:.1}% stepped)\n\
              cache          : {} hits / {} misses ({:.1}% hit rate)\n\
              compile cache  : {} hits / {} misses ({:.1}% hit rate)\n\
              latency        : {}\n\
@@ -198,6 +216,9 @@ impl FleetMetrics {
             self.wall.as_secs_f64() * 1e3,
             self.jobs_per_sec(),
             self.sim_cycles_per_sec() / 1e6,
+            self.sim_steps_executed,
+            self.sim_cycles_executed,
+            self.stepped_fraction() * 100.0,
             self.cache_hits,
             self.cache_misses,
             self.cache_hit_rate() * 100.0,
@@ -280,12 +301,14 @@ mod tests {
             steals: 1,
             sim_cycles_total: 1_000_000,
             sim_cycles_executed: 400_000,
+            sim_steps_executed: 100_000,
             per_worker: vec![
                 WorkerStats {
                     jobs: 6,
                     executed: 3,
                     stolen: 1,
                     sim_cycles: 300_000,
+                    sim_steps: 75_000,
                     busy: Duration::from_millis(400),
                     latencies: (1..=6).map(Duration::from_millis).collect(),
                 },
@@ -294,6 +317,7 @@ mod tests {
                     executed: 1,
                     stolen: 0,
                     sim_cycles: 100_000,
+                    sim_steps: 25_000,
                     busy: Duration::from_millis(300),
                     latencies: (7..=10).map(Duration::from_millis).collect(),
                 },
@@ -308,6 +332,7 @@ mod tests {
         assert!((m.sim_cycles_per_sec() - 800_000.0).abs() < 1e-6);
         assert!((m.cache_hit_rate() - 0.6).abs() < 1e-12);
         assert!((m.compile_hit_rate() - 0.75).abs() < 1e-12);
+        assert!((m.stepped_fraction() - 0.25).abs() < 1e-12);
         let u = m.worker_utilization();
         assert!((u[0] - 0.8).abs() < 1e-12);
         assert!((u[1] - 0.6).abs() < 1e-12);
@@ -322,6 +347,7 @@ mod tests {
         assert_eq!(m.cache_hit_rate(), 0.0);
         assert_eq!(m.compile_hit_rate(), 0.0);
         assert_eq!(m.mean_utilization(), 0.0);
+        assert_eq!(m.stepped_fraction(), 0.0);
     }
 
     #[test]
@@ -331,6 +357,8 @@ mod tests {
         assert!(s.contains("jobs/sec"));
         assert!(s.contains("hit rate"));
         assert!(s.contains("compile cache"));
+        assert!(s.contains("engine steps"), "{s}");
+        assert!(s.contains("25.0% stepped"), "{s}");
         assert!(s.contains("p50/p95/p99"), "{s}");
         let t = m.render_workers();
         assert!(t.contains("w0"));

@@ -219,6 +219,7 @@ impl Fleet {
             steals: per_worker.iter().map(|w| w.stolen).sum(),
             sim_cycles_total: reports.iter().map(|r| r.metrics.cycles).sum(),
             sim_cycles_executed: per_worker.iter().map(|w| w.sim_cycles).sum(),
+            sim_steps_executed: per_worker.iter().map(|w| w.sim_steps).sum(),
             per_worker,
         };
         Ok(FleetOutcome { reports, metrics })
@@ -289,6 +290,7 @@ pub(crate) fn run_job(
     let report = coordinator.submit(&fj.job)?;
     stats.executed += 1;
     stats.sim_cycles += report.metrics.cycles;
+    stats.sim_steps += report.metrics.telemetry.steps_executed;
     if let Some(key) = key {
         cache.insert(key, report.clone());
     }
@@ -397,6 +399,11 @@ mod tests {
             out.metrics.sim_cycles_total,
             out.metrics.sim_cycles_executed
         );
+        // stepped-vs-skipped engine telemetry flows into the aggregate:
+        // the fast engine steps a nonzero strict subset of the cycles
+        assert!(out.metrics.sim_steps_executed > 0);
+        assert!(out.metrics.sim_steps_executed <= out.metrics.sim_cycles_executed);
+        assert!(out.metrics.summary().contains("engine steps"));
     }
 
     #[test]

@@ -103,11 +103,41 @@ impl Counters {
     }
 }
 
+/// Execution telemetry: how a result was *obtained*, not what it is.
+///
+/// These numbers are engine- and tracing-dependent by construction —
+/// the fast engine steps fewer times than the naive one, and a traced
+/// run emits records where an untraced one emits none — so they are
+/// deliberately **equality-transparent**: `PartialEq` always returns
+/// `true`, keeping [`RunMetrics`]'s exact-equality contract (and with
+/// it the engine-differential and fleet-determinism tests) intact
+/// while still surfacing the data per job. The `spatzd` wire codec
+/// omits the struct entirely for the same reason.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Telemetry {
+    /// Cycles the engine actually stepped (simulated cycles minus
+    /// fast-forwarded windows; equals `cycles` on the naive engine).
+    pub steps_executed: u64,
+    /// Perf-trace records emitted during the run (0 when tracing off).
+    pub trace_records: u64,
+    /// Records the bounded ring had to drop (kept by the file sink).
+    pub trace_dropped: u64,
+}
+
+impl PartialEq for Telemetry {
+    /// Always equal: telemetry describes execution strategy, which must
+    /// never split result equality.
+    fn eq(&self, _other: &Telemetry) -> bool {
+        true
+    }
+}
+
 /// Metrics of one simulated run.
 ///
 /// `PartialEq` compares every counter and the priced energy exactly —
 /// the fleet determinism tests rely on byte-identical reports between
-/// parallel and sequential execution.
+/// parallel and sequential execution. ([`Telemetry`] is the deliberate
+/// exception: always equal.)
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct RunMetrics {
     /// Cluster cycles from start to all-cores-halted.
@@ -121,6 +151,8 @@ pub struct RunMetrics {
     pub dma_cycles: u64,
     /// Total energy in pJ (filled in by `ppa::energy`).
     pub energy_pj: f64,
+    /// Equality-transparent execution telemetry.
+    pub telemetry: Telemetry,
 }
 
 impl RunMetrics {
@@ -275,6 +307,24 @@ mod tests {
         };
         m.counters.vec_elem_mac = 400;
         assert!((m.fpu_utilization(2, 4) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn telemetry_never_splits_metrics_equality() {
+        let mut a = RunMetrics {
+            cycles: 10,
+            ..Default::default()
+        };
+        let mut b = a.clone();
+        a.telemetry = Telemetry {
+            steps_executed: 3,
+            trace_records: 100,
+            trace_dropped: 7,
+        };
+        b.telemetry = Telemetry::default();
+        assert_eq!(a, b, "telemetry is equality-transparent");
+        b.cycles = 11;
+        assert_ne!(a, b, "real result fields still split equality");
     }
 
     #[test]

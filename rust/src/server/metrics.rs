@@ -4,6 +4,7 @@
 //! p50/p95/p99 the same way.
 
 use crate::fleet::LatencyPercentiles;
+use crate::metrics::Telemetry;
 use crate::util::Json;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
@@ -31,6 +32,14 @@ struct Inner {
     latencies_ms: Vec<f64>,
     /// Next ring slot to overwrite once the window is full.
     latency_next: usize,
+    /// Engine cycles actually stepped across all answered jobs (the
+    /// fast engine's stepped-vs-simulated ratio, fleet-wide).
+    sim_steps: u64,
+    /// Perf-trace records emitted across all answered jobs (0 unless the
+    /// daemon runs with `[trace]` on).
+    trace_records: u64,
+    /// Trace records the bounded in-memory ring dropped.
+    trace_dropped: u64,
 }
 
 /// Shared request accounting. One mutex is plenty: requests touch it
@@ -52,6 +61,12 @@ pub struct MetricsSnapshot {
     pub errors: u64,
     /// Percentiles over the most recent `LATENCY_WINDOW` requests.
     pub latency: Option<LatencyPercentiles>,
+    /// Engine cycles actually stepped across all answered jobs.
+    pub sim_steps: u64,
+    /// Perf-trace records emitted across all answered jobs.
+    pub trace_records: u64,
+    /// Trace records dropped by the bounded in-memory ring.
+    pub trace_dropped: u64,
 }
 
 impl MetricsSnapshot {
@@ -84,6 +99,9 @@ impl MetricsSnapshot {
             ("errors".into(), Json::u64_lossless(self.errors)),
             ("jobs_per_sec".into(), Json::num(self.jobs_per_sec())),
             ("latency_ms".into(), latency),
+            ("sim_steps".into(), Json::u64_lossless(self.sim_steps)),
+            ("trace_records".into(), Json::u64_lossless(self.trace_records)),
+            ("trace_dropped".into(), Json::u64_lossless(self.trace_dropped)),
         ]
     }
 
@@ -94,7 +112,9 @@ impl MetricsSnapshot {
              requests       : {} ({} submit, {} batch, {} rejected, {} errors)\n\
              jobs completed : {}\n\
              jobs/s         : {:.1}\n\
-             latency        : {}",
+             latency        : {}\n\
+             sim steps      : {}\n\
+             trace records  : {} ({} dropped from the ring)",
             self.uptime.as_secs_f64(),
             self.requests,
             self.submits,
@@ -105,6 +125,9 @@ impl MetricsSnapshot {
             self.jobs_per_sec(),
             self.latency
                 .map_or_else(|| "n/a".to_string(), |l| l.render()),
+            self.sim_steps,
+            self.trace_records,
+            self.trace_dropped,
         )
     }
 }
@@ -162,6 +185,15 @@ impl ServerMetrics {
         self.lock().errors += 1;
     }
 
+    /// Fold one answered job's execution telemetry into the service
+    /// totals (stepped cycles, trace volume).
+    pub fn observed_job(&self, t: &Telemetry) {
+        let mut m = self.lock();
+        m.sim_steps += t.steps_executed;
+        m.trace_records += t.trace_records;
+        m.trace_dropped += t.trace_dropped;
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.lock();
         MetricsSnapshot {
@@ -173,6 +205,9 @@ impl ServerMetrics {
             rejected: m.rejected,
             errors: m.errors,
             latency: LatencyPercentiles::from_samples_ms(&m.latencies_ms),
+            sim_steps: m.sim_steps,
+            trace_records: m.trace_records,
+            trace_dropped: m.trace_dropped,
         }
     }
 }
@@ -223,6 +258,35 @@ mod tests {
         let l = s.latency.unwrap();
         assert!(l.p99_ms < 1000.0, "old samples must slide out: {l:?}");
         assert_eq!(m.lock().latencies_ms.len(), LATENCY_WINDOW, "bounded");
+    }
+
+    #[test]
+    fn job_telemetry_accumulates() {
+        let m = ServerMetrics::new();
+        m.observed_job(&Telemetry {
+            steps_executed: 100,
+            trace_records: 40,
+            trace_dropped: 3,
+        });
+        m.observed_job(&Telemetry {
+            steps_executed: 50,
+            trace_records: 0,
+            trace_dropped: 0,
+        });
+        let s = m.snapshot();
+        assert_eq!(s.sim_steps, 150);
+        assert_eq!((s.trace_records, s.trace_dropped), (40, 3));
+        assert!(s.render().contains("trace records"));
+        let fields = s.to_json_fields();
+        let get = |k: &str| {
+            fields
+                .iter()
+                .find(|(key, _)| key == k)
+                .and_then(|(_, v)| v.as_u64())
+        };
+        assert_eq!(get("sim_steps"), Some(150));
+        assert_eq!(get("trace_records"), Some(40));
+        assert_eq!(get("trace_dropped"), Some(3));
     }
 
     #[test]

@@ -273,6 +273,7 @@ fn handle_line(ctl: &Ctl, line: &str) -> (String, bool) {
                 Ok(receipt) => match receipt.wait() {
                     Ok(report) => {
                         ctl.metrics.completed(1, t0.elapsed());
+                        ctl.metrics.observed_job(&report.metrics.telemetry);
                         (
                             proto::ok_response(vec![(
                                 "report".into(),
@@ -327,6 +328,9 @@ fn handle_line(ctl: &Ctl, line: &str) -> (String, bool) {
                     }
                     let wall = t0.elapsed();
                     ctl.metrics.completed(reports.len() as u64, wall);
+                    for r in &reports {
+                        ctl.metrics.observed_job(&r.metrics.telemetry);
+                    }
                     let digest = proto::reports_digest(reports.iter());
                     let sim_cycles: u64 =
                         reports.iter().map(|r| r.metrics.cycles).sum();

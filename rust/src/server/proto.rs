@@ -16,12 +16,16 @@
 //! down, `500` execution failure.
 //!
 //! **Byte-identity.** [`report_to_json`]/[`report_from_json`] cover
-//! *every* field of [`JobReport`] (all counters, priced energy, cache
-//! stats), and the codec round-trips every finite f64 exactly — so a
-//! served report decodes `PartialEq`-equal to the direct
+//! every *result* field of [`JobReport`] (all counters, priced energy,
+//! cache stats), and the codec round-trips every finite f64 exactly — so
+//! a served report decodes `PartialEq`-equal to the direct
 //! [`crate::coordinator::Coordinator`] run that produced it, and two
 //! byte-identical runs encode to byte-identical response lines. Workload
-//! seeds are full u64s and travel via [`Json::u64_lossless`].
+//! seeds are full u64s and travel via [`Json::u64_lossless`]. The one
+//! deliberate omission is [`crate::metrics::Telemetry`]: it describes
+//! execution strategy (engine stepping, trace volume), is
+//! equality-transparent by construction, and decodes to its default —
+//! the aggregate numbers travel in the `metrics` response instead.
 
 use crate::coordinator::{Job, JobReport, ModePolicy};
 use crate::fleet::ScenarioKind;
@@ -278,6 +282,8 @@ fn metrics_from_json(j: &Json) -> anyhow::Result<RunMetrics> {
         },
         dma_cycles: need_u64(j, "dma_cycles")?,
         energy_pj: need_f64(j, "energy_pj")?,
+        // telemetry is deliberately not on the wire (see module docs)
+        telemetry: Default::default(),
     })
 }
 

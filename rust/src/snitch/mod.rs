@@ -15,6 +15,7 @@ use crate::mem::{ICache, Tcdm};
 use crate::metrics::Counters;
 use crate::reconfig::{DispatchResult, ReconfigStage};
 use crate::spatz::SpatzUnit;
+use crate::trace::perf::{self, reason, Kind, PerfTrace, Record};
 use std::sync::Arc;
 
 /// Externally visible core execution state.
@@ -333,6 +334,129 @@ impl Snitch {
         }
     }
 
+    /// [`Self::step`] plus perf-trace emission: snapshot the observable
+    /// pre-step state, delegate to the untraced step, then lower the
+    /// observed transitions into [`crate::trace::perf`] records.
+    /// Tracing reads core state but never writes it, so a traced step
+    /// is indistinguishable from an untraced one to the simulation —
+    /// and with tracing disabled this forwards straight to
+    /// [`Self::step`] (the zero-cost-when-off contract).
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_traced(
+        &mut self,
+        now: u64,
+        icache: &mut ICache,
+        tcdm: &mut Tcdm,
+        reconfig: &mut ReconfigStage,
+        units: &mut [SpatzUnit; 2],
+        barrier: &mut dyn BarrierPort,
+        counters: &mut Counters,
+        trace: &mut PerfTrace,
+    ) {
+        if !trace.is_enabled() {
+            self.step(now, icache, tcdm, reconfig, units, barrier, counters);
+            return;
+        }
+        let pre_pc = self.pc;
+        let pre_state = self.state;
+        let pre_retired = self.retired;
+        self.step(now, icache, tcdm, reconfig, units, barrier, counters);
+        let who = self.id as u8;
+        // Commit: `retired` bumped; the committed instruction still sits
+        // at the pre-step pc (pc only moves in `advance`).
+        if self.retired > pre_retired {
+            let instr = self.program.instrs[pre_pc];
+            let rec = match instr {
+                Instr::Vector(_) => Record {
+                    cycle: now,
+                    kind: Kind::VecDispatch,
+                    who,
+                    a: 0,
+                    b: pre_pc as u32,
+                    c: 0,
+                    d: 0,
+                },
+                other => Record {
+                    cycle: now,
+                    kind: Kind::ScalarCommit,
+                    who,
+                    a: perf::instr_class(&other),
+                    b: pre_pc as u32,
+                    c: 0,
+                    d: 0,
+                },
+            };
+            trace.emit(rec);
+        }
+        // Icache refill begins (FetchStall is only entered from Ready, so
+        // the refill penalty is the freshly set countdown). The record
+        // carries the whole penalty — no stall span is opened for it.
+        if !matches!(pre_state, CoreState::FetchStall(_)) {
+            if let CoreState::FetchStall(penalty) = self.state {
+                trace.emit(Record {
+                    cycle: now,
+                    kind: Kind::IcacheMiss,
+                    who,
+                    a: 0,
+                    b: pre_pc as u32,
+                    c: penalty,
+                    d: 0,
+                });
+            }
+        }
+        // Wait episodes: open on entry, emit one self-contained span
+        // record on exit. Fast-forward never crosses a state transition
+        // (the event-horizon contract), so spans are engine-invariant.
+        let pre_wait = wait_reason(&pre_state);
+        let post_wait = wait_reason(&self.state);
+        if pre_wait != post_wait {
+            if pre_wait.is_some() {
+                if let Some((code, begin)) = trace.close_wait(self.id) {
+                    let width = now - begin;
+                    if code == reason::RECONFIG {
+                        let target = match pre_state {
+                            CoreState::WaitModeSwitch { target, .. } => perf::mode_code(target),
+                            _ => 0,
+                        };
+                        trace.emit(Record {
+                            cycle: begin,
+                            kind: Kind::ModeSwitch,
+                            who,
+                            a: target,
+                            b: 0,
+                            c: width,
+                            d: 0,
+                        });
+                    } else {
+                        trace.emit(Record {
+                            cycle: begin,
+                            kind: Kind::StallSpan,
+                            who,
+                            a: code,
+                            b: 0,
+                            c: width,
+                            d: 0,
+                        });
+                    }
+                }
+            }
+            if let Some(code) = post_wait {
+                trace.open_wait(self.id, code, now);
+                if code == reason::BARRIER {
+                    trace.emit(Record {
+                        cycle: now,
+                        kind: Kind::BarrierArrive,
+                        who,
+                        a: 0,
+                        b: 0,
+                        c: 0,
+                        d: 0,
+                    });
+                }
+            }
+        }
+    }
+
     fn execute(
         &mut self,
         now: u64,
@@ -429,6 +553,19 @@ impl Snitch {
             }
         }
     }
+}
+
+/// Stall-span reason code for a wait state
+/// ([`crate::trace::perf::reason`]); `None` for non-wait states.
+fn wait_reason(state: &CoreState) -> Option<u16> {
+    Some(match state {
+        CoreState::WaitOffload => reason::OFFLOAD,
+        CoreState::WaitFence => reason::FENCE,
+        CoreState::WaitBarrier => reason::BARRIER,
+        CoreState::WaitMem { .. } => reason::MEM,
+        CoreState::WaitModeSwitch { .. } => reason::RECONFIG,
+        _ => return None,
+    })
 }
 
 #[cfg(test)]

@@ -20,6 +20,7 @@ use crate::config::ClusterConfig;
 use crate::isa::{VecOpClass, VectorOp};
 use crate::mem::Tcdm;
 use crate::metrics::Counters;
+use crate::trace::perf::{Kind, PerfTrace, Record};
 use std::collections::VecDeque;
 
 /// An instruction dispatched into a unit's queue (timing view).
@@ -439,6 +440,49 @@ impl SpatzUnit {
 
         self.busy_this_cycle =
             self.lsu.is_some() || self.fpu_busy_until > now || !self.queue.is_empty();
+    }
+
+    /// [`Self::step`] plus perf-trace emission: issues and retires are
+    /// recovered from the observable queue/retire deltas, so tracing
+    /// never touches unit state. Forwards straight to [`Self::step`]
+    /// when tracing is off.
+    pub fn step_traced(
+        &mut self,
+        now: u64,
+        tcdm: &mut Tcdm,
+        retires: &mut Vec<RetireMsg>,
+        trace: &mut PerfTrace,
+    ) {
+        if !trace.is_enabled() {
+            self.step(now, tcdm, retires);
+            return;
+        }
+        let pre_retires = retires.len();
+        let pre_queue = self.queue.len();
+        self.step(now, tcdm, retires);
+        let who = self.id as u8;
+        for msg in &retires[pre_retires..] {
+            trace.emit(Record {
+                cycle: now,
+                kind: Kind::VecRetire,
+                who,
+                a: msg.hart as u16,
+                b: 0,
+                c: msg.seq,
+                d: 0,
+            });
+        }
+        if self.queue.len() < pre_queue {
+            trace.emit(Record {
+                cycle: now,
+                kind: Kind::VecIssue,
+                who,
+                a: 0,
+                b: (pre_queue - self.queue.len()) as u32,
+                c: 0,
+                d: 0,
+            });
+        }
     }
 }
 

@@ -1,14 +1,25 @@
-//! Lightweight execution tracing (debugging aid).
+//! Execution tracing.
 //!
-//! Disabled by default; when enabled, records (cycle, event) pairs that
-//! can be dumped as text. The simulator only pays for tracing when it is
-//! on (`Trace::off()` makes `emit` a no-op without branching at call
-//! sites thanks to the early return).
+//! The real subsystem lives in [`perf`]: a bounded binary perf-trace
+//! log with fixed-width records, span-aware fast-engine coverage, and
+//! the aggregation layer behind `spatzformer trace query`. This module
+//! keeps the legacy debug-oriented [`Trace`] API as a thin *view* over
+//! that log: [`Trace::emit`] lowers each text [`Event`] to a
+//! [`perf::Record`] in a bounded ring (no more unbounded
+//! `Vec<(u64, Event)>` growth — a long traced run cannot OOM the
+//! recorder), and [`Trace::render`] decodes the ring back into the
+//! familiar one-line-per-event text form. The lowering is lossy where
+//! the record format has no room for text (dispatch disassembly,
+//! [`Event::Note`] strings); callers who need the full picture should
+//! query the perf log directly.
+
+pub mod perf;
 
 use crate::config::Mode;
-use crate::isa::{Instr, asm};
+use crate::isa::Instr;
+use perf::{Kind, PerfTrace, Record};
 
-/// A recorded event.
+/// A recorded event (legacy text API; lowered to [`perf::Record`]s).
 #[derive(Debug, Clone)]
 pub enum Event {
     /// Core `core` executed/committed an instruction.
@@ -19,67 +30,158 @@ pub enum Event {
     BarrierRelease,
     /// Operating mode changed.
     ModeSwitch { to: Mode },
-    /// Free-form annotation (workload phases etc.).
+    /// Free-form annotation (workload phases etc.). Only the marker
+    /// survives the lowering; the text does not.
     Note(String),
 }
 
-impl std::fmt::Display for Event {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            Event::Commit { core, pc, instr } => {
-                write!(f, "core{core} pc={pc:<6} {}", asm::print_instr(instr))
-            }
-            Event::Dispatch { unit, text } => write!(f, "unit{unit} <- {text}"),
-            Event::BarrierRelease => write!(f, "barrier release"),
-            Event::ModeSwitch { to } => write!(f, "mode -> {}", to.name()),
-            Event::Note(s) => write!(f, "note: {s}"),
-        }
-    }
-}
-
-/// The trace recorder.
-#[derive(Debug, Default)]
+/// The legacy trace recorder: a view over a bounded [`PerfTrace`].
+#[derive(Debug)]
 pub struct Trace {
-    enabled: bool,
-    events: Vec<(u64, Event)>,
+    log: PerfTrace,
 }
 
 impl Trace {
     pub fn on() -> Self {
-        Self { enabled: true, events: Vec::new() }
+        Self::with_capacity(true, perf::DEFAULT_CAPACITY)
     }
 
     pub fn off() -> Self {
-        Self::default()
+        Self {
+            log: PerfTrace::disabled(),
+        }
+    }
+
+    /// An explicit-capacity recorder (the `[trace] capacity` knob).
+    pub fn with_capacity(enabled: bool, capacity: usize) -> Self {
+        Self {
+            log: PerfTrace::new(enabled, capacity),
+        }
     }
 
     pub fn is_enabled(&self) -> bool {
-        self.enabled
+        self.log.is_enabled()
     }
 
     #[inline]
     pub fn emit(&mut self, cycle: u64, event: Event) {
-        if !self.enabled {
+        if !self.log.is_enabled() {
             return;
         }
-        self.events.push((cycle, event));
+        let rec = match event {
+            Event::Commit { core, pc, instr } => match instr {
+                Instr::Vector(_) => Record {
+                    cycle,
+                    kind: Kind::VecDispatch,
+                    who: core as u8,
+                    a: 0,
+                    b: pc as u32,
+                    c: 0,
+                    d: 0,
+                },
+                other => Record {
+                    cycle,
+                    kind: Kind::ScalarCommit,
+                    who: core as u8,
+                    a: perf::instr_class(&other),
+                    b: pc as u32,
+                    c: 0,
+                    d: 0,
+                },
+            },
+            Event::Dispatch { unit, .. } => Record {
+                cycle,
+                kind: Kind::VecIssue,
+                who: unit as u8,
+                a: 0,
+                b: 1,
+                c: 0,
+                d: 0,
+            },
+            Event::BarrierRelease => Record {
+                cycle,
+                kind: Kind::BarrierArrive,
+                who: perf::WHO_CLUSTER,
+                a: 0,
+                b: 0,
+                c: 0,
+                d: 0,
+            },
+            Event::ModeSwitch { to } => Record {
+                cycle,
+                kind: Kind::ModeSwitch,
+                who: perf::WHO_CLUSTER,
+                a: perf::mode_code(to),
+                b: 0,
+                c: 0,
+                d: 0,
+            },
+            Event::Note(_) => Record {
+                cycle,
+                kind: Kind::Marker,
+                who: perf::WHO_CLUSTER,
+                a: 0,
+                b: 0,
+                c: 0,
+                d: 0,
+            },
+        };
+        self.log.emit(rec);
     }
 
+    /// Records currently held (bounded by the ring capacity).
     pub fn len(&self) -> usize {
-        self.events.len()
+        self.log.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.events.is_empty()
+        self.log.is_empty()
     }
 
-    /// Render the whole trace as text.
+    /// The perf log backing this view.
+    pub fn perf(&self) -> &PerfTrace {
+        &self.log
+    }
+
+    /// Render the retained records as text, one line per record.
     pub fn render(&self) -> String {
         let mut out = String::new();
-        for (cycle, ev) in &self.events {
-            out.push_str(&format!("[{cycle:>10}] {ev}\n"));
+        for rec in self.log.records() {
+            out.push_str(&format!("[{:>10}] {}\n", rec.cycle, render_record(rec)));
         }
         out
+    }
+}
+
+/// Decode one record back into a legacy-style text line.
+fn render_record(rec: &Record) -> String {
+    match rec.kind {
+        Kind::ScalarCommit => {
+            format!("core{} pc={:<6} {}", rec.who, rec.b, perf::class::name(rec.a))
+        }
+        Kind::VecDispatch => format!("core{} pc={:<6} vector", rec.who, rec.b),
+        Kind::VecIssue => format!("unit{} <- issue x{}", rec.who, rec.b),
+        Kind::VecRetire => format!("unit{} retire hart{} seq={}", rec.who, rec.a, rec.c),
+        Kind::TcdmCycle => format!("tcdm grants={} conflicts={}", rec.b, rec.c),
+        Kind::TcdmSpan => format!(
+            "unit{} tcdm span grants={} conflicts={} width={}",
+            rec.who,
+            rec.b,
+            rec.c,
+            rec.d
+        ),
+        Kind::DmaBurst => format!("dma burst bytes={} cycles={}", rec.b, rec.c),
+        Kind::IcacheMiss => format!("core{} icache miss pc={} penalty={}", rec.who, rec.b, rec.c),
+        Kind::BarrierArrive => "barrier".to_string(),
+        Kind::StallSpan => format!(
+            "core{} stall {} width={}",
+            rec.who,
+            perf::reason::name(rec.a),
+            rec.c
+        ),
+        Kind::ModeSwitch => format!("mode -> {}", perf::mode_name(rec.a)),
+        Kind::SkipSpan => format!("engine skip {} width={}", perf::skip::name(rec.a), rec.c),
+        Kind::Marker => "note".to_string(),
     }
 }
 
@@ -105,5 +207,23 @@ mod tests {
         assert!(s.contains("alu"));
         assert!(s.contains("mode -> merge"));
         assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn long_runs_stay_within_the_ring_capacity() {
+        // The legacy path is a view over the bounded perf log: ten
+        // million events retain only `capacity` records, so a long
+        // traced run cannot OOM the recorder.
+        let mut t = Trace::with_capacity(true, 1024);
+        for cycle in 0..10_000_000u64 {
+            let (core, pc) = ((cycle & 1) as usize, cycle as usize & 0xffff);
+            let instr = Instr::Scalar(ScalarOp::Alu);
+            t.emit(cycle, Event::Commit { core, pc, instr });
+        }
+        assert_eq!(t.len(), 1024);
+        assert_eq!(t.perf().records_total(), 10_000_000);
+        assert_eq!(t.perf().records_dropped(), 10_000_000 - 1024);
+        // the view renders only what it retained
+        assert_eq!(t.render().lines().count(), 1024);
     }
 }

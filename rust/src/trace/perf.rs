@@ -1,0 +1,976 @@
+//! Structured perf-trace subsystem: a bounded binary event log plus the
+//! query/aggregation layer behind `spatzformer trace query`.
+//!
+//! Every timed subsystem emits fixed-width 32-byte little-endian
+//! [`Record`]s into a [`PerfTrace`] recorder: scalar commits, vector
+//! dispatch/issue/retire, TCDM grants and conflicts, DMA bursts, icache
+//! misses, barrier arrivals, stall episodes, mode switches — and, so the
+//! fast engine's traces stay *complete* rather than full of holes,
+//! bulk-skipped windows recorded as spans ([`Kind::SkipSpan`],
+//! [`Kind::TcdmSpan`]). Span records carry their begin cycle in
+//! `Record::cycle` and their width in `Record::c`, so a trace taken
+//! under fast-forward attributes the same cycles to the same subsystems
+//! as a naively stepped one.
+//!
+//! **Zero cost when off.** [`PerfTrace::emit`] early-returns on the
+//! `enabled` flag, and every call site that must observe simulation
+//! state to build a record guards on [`PerfTrace::is_enabled`] first.
+//! Tracing never mutates simulated state, so trace-on and trace-off runs
+//! produce byte-identical [`crate::coordinator::JobReport`]s
+//! (`rust/tests/trace_invariance.rs` proves it on both engines).
+//!
+//! **Bounded by construction.** The in-memory ring holds at most
+//! `[trace] capacity` records (oldest dropped first, counted in
+//! [`PerfTrace::records_dropped`]); an optional streaming file sink
+//! ([`PerfTrace::attach_sink`], CLI `--trace-out PATH`) keeps the full
+//! record stream for offline queries. The file starts with the
+//! [`MAGIC`] tag followed by raw records.
+
+use crate::util::Json;
+use std::collections::{BTreeMap, VecDeque};
+use std::fs::File;
+use std::io::{BufWriter, Read as IoRead, Write as IoWrite};
+use std::path::Path;
+
+/// File-sink header: 8 magic bytes, then raw 32-byte records.
+pub const MAGIC: &[u8; 8] = b"SPTZTRC1";
+
+/// Fixed on-wire record width in bytes.
+pub const RECORD_BYTES: usize = 32;
+
+/// Default in-memory ring capacity (records) when `[trace] capacity` is
+/// not set.
+pub const DEFAULT_CAPACITY: usize = 65536;
+
+/// `Record::who` value for cluster-wide records (TCDM cycle deltas, DMA
+/// bursts, engine skip spans) that belong to no single core or unit.
+pub const WHO_CLUSTER: u8 = 0xff;
+
+/// Event kinds. Discriminants are the on-wire `kind` byte; 0 is
+/// reserved as invalid so an all-zero buffer never decodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Kind {
+    /// A scalar-class instruction committed. `who`=core, `a`=class code
+    /// ([`class`]), `b`=pc.
+    ScalarCommit = 1,
+    /// A vector instruction was accepted by the offload interface
+    /// (commit on the scalar side). `who`=core, `b`=pc.
+    VecDispatch = 2,
+    /// A vector unit issued work from its offload queue. `who`=unit,
+    /// `b`=entries issued.
+    VecIssue = 3,
+    /// A vector instruction retired. `who`=unit, `a`=hart, `c`=seq.
+    VecRetire = 4,
+    /// Per-cycle TCDM arbitration outcome (stepped engine path).
+    /// `who`=[`WHO_CLUSTER`], `b`=granted accesses, `c`=conflict replays.
+    TcdmCycle = 5,
+    /// Closed-form TCDM window applied under LSU fast-forward (span).
+    /// `who`=unit, `b`=grants, `c`=conflicts, `d`=width in cycles.
+    TcdmSpan = 6,
+    /// One DMA staging burst. `who`=[`WHO_CLUSTER`], `b`=bytes,
+    /// `c`=cycles.
+    DmaBurst = 7,
+    /// Instruction fetch missed the icache. `who`=core, `b`=pc,
+    /// `c`=penalty cycles.
+    IcacheMiss = 8,
+    /// A core arrived at a barrier. `who`=core.
+    BarrierArrive = 9,
+    /// A completed wait episode (span). `who`=core, `a`=reason code
+    /// ([`reason`]), `c`=width in cycles; `cycle` is the begin cycle.
+    StallSpan = 10,
+    /// A completed mode-switch episode (span). `who`=core, `a`=target
+    /// mode code, `c`=width in cycles; `cycle` is the begin cycle.
+    ModeSwitch = 11,
+    /// The fast engine bulk-skipped a window (span).
+    /// `who`=[`WHO_CLUSTER`], `a`=skip reason ([`skip`]), `c`=width.
+    SkipSpan = 12,
+    /// Free-form annotation marker (legacy [`crate::trace::Event::Note`]
+    /// path; the text itself is not recorded).
+    Marker = 13,
+}
+
+impl Kind {
+    pub fn from_u8(v: u8) -> Option<Kind> {
+        Some(match v {
+            1 => Kind::ScalarCommit,
+            2 => Kind::VecDispatch,
+            3 => Kind::VecIssue,
+            4 => Kind::VecRetire,
+            5 => Kind::TcdmCycle,
+            6 => Kind::TcdmSpan,
+            7 => Kind::DmaBurst,
+            8 => Kind::IcacheMiss,
+            9 => Kind::BarrierArrive,
+            10 => Kind::StallSpan,
+            11 => Kind::ModeSwitch,
+            12 => Kind::SkipSpan,
+            13 => Kind::Marker,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Kind::ScalarCommit => "scalar_commit",
+            Kind::VecDispatch => "vec_dispatch",
+            Kind::VecIssue => "vec_issue",
+            Kind::VecRetire => "vec_retire",
+            Kind::TcdmCycle => "tcdm_cycle",
+            Kind::TcdmSpan => "tcdm_span",
+            Kind::DmaBurst => "dma_burst",
+            Kind::IcacheMiss => "icache_miss",
+            Kind::BarrierArrive => "barrier_arrive",
+            Kind::StallSpan => "stall_span",
+            Kind::ModeSwitch => "mode_switch",
+            Kind::SkipSpan => "skip_span",
+            Kind::Marker => "marker",
+        }
+    }
+}
+
+/// Stall-span reason codes (`Record::a` of [`Kind::StallSpan`]).
+pub mod reason {
+    /// Offload queue full / unit busy (vector backpressure).
+    pub const OFFLOAD: u16 = 1;
+    /// Fence waiting for outstanding vector work to drain.
+    pub const FENCE: u16 = 2;
+    /// Waiting at a barrier.
+    pub const BARRIER: u16 = 3;
+    /// Scalar memory access replaying a TCDM bank conflict.
+    pub const MEM: u16 = 4;
+    /// Mode-switch drain + latency (emitted as [`super::Kind::ModeSwitch`],
+    /// never as a plain stall span).
+    pub const RECONFIG: u16 = 5;
+
+    pub fn name(code: u16) -> &'static str {
+        match code {
+            OFFLOAD => "offload",
+            FENCE => "fence",
+            BARRIER => "barrier",
+            MEM => "mem",
+            RECONFIG => "reconfig",
+            _ => "unknown",
+        }
+    }
+}
+
+/// Skip-span reason codes (`Record::a` of [`Kind::SkipSpan`]).
+pub mod skip {
+    /// Event-horizon idle skip (no core pinning `now`).
+    pub const IDLE: u16 = 1;
+    /// Closed-form LSU conflict-schedule window.
+    pub const LSU: u16 = 2;
+
+    pub fn name(code: u16) -> &'static str {
+        match code {
+            IDLE => "idle",
+            LSU => "lsu",
+            _ => "unknown",
+        }
+    }
+}
+
+/// Scalar instruction class codes (`Record::a` of
+/// [`Kind::ScalarCommit`]).
+pub mod class {
+    pub const ALU: u16 = 1;
+    pub const NOP: u16 = 2;
+    pub const MUL: u16 = 3;
+    pub const DIV: u16 = 4;
+    pub const CSR: u16 = 5;
+    pub const LOAD: u16 = 6;
+    pub const STORE: u16 = 7;
+    pub const BRANCH: u16 = 8;
+    pub const FENCE: u16 = 9;
+    pub const BARRIER: u16 = 10;
+    pub const SET_MODE: u16 = 11;
+    pub const HALT: u16 = 12;
+
+    pub fn name(code: u16) -> &'static str {
+        match code {
+            ALU => "alu",
+            NOP => "nop",
+            MUL => "mul",
+            DIV => "div",
+            CSR => "csr",
+            LOAD => "load",
+            STORE => "store",
+            BRANCH => "branch",
+            FENCE => "fence",
+            BARRIER => "barrier",
+            SET_MODE => "setmode",
+            HALT => "halt",
+            _ => "unknown",
+        }
+    }
+}
+
+/// Class code of a committed instruction ([`Kind::ScalarCommit`]'s
+/// `a`). Vector instructions return 0 — their commits are recorded as
+/// [`Kind::VecDispatch`], not as scalar commits.
+pub fn instr_class(instr: &crate::isa::Instr) -> u16 {
+    use crate::isa::{Instr, ScalarOp};
+    match instr {
+        Instr::Scalar(op) => match op {
+            ScalarOp::Alu => class::ALU,
+            ScalarOp::Nop => class::NOP,
+            ScalarOp::Mul => class::MUL,
+            ScalarOp::Div => class::DIV,
+            ScalarOp::Csr => class::CSR,
+            ScalarOp::Load { .. } => class::LOAD,
+            ScalarOp::Store { .. } => class::STORE,
+            ScalarOp::Branch { .. } => class::BRANCH,
+        },
+        Instr::Vector(_) => 0,
+        Instr::Fence => class::FENCE,
+        Instr::Barrier => class::BARRIER,
+        Instr::SetMode(_) => class::SET_MODE,
+        Instr::Halt => class::HALT,
+    }
+}
+
+/// Mode code for [`Kind::ModeSwitch`] records (`Record::a`; 0 reserved).
+pub fn mode_code(m: crate::config::Mode) -> u16 {
+    match m {
+        crate::config::Mode::Split => 1,
+        crate::config::Mode::Merge => 2,
+    }
+}
+
+/// Inverse of [`mode_code`] for rendering.
+pub fn mode_name(code: u16) -> &'static str {
+    match code {
+        1 => "split",
+        2 => "merge",
+        _ => "unknown",
+    }
+}
+
+/// One fixed-width trace record. Field meaning depends on [`Kind`] (see
+/// the variant docs); unused fields are zero. Layout (little-endian):
+/// `cycle:u64 | kind:u8 | who:u8 | a:u16 | b:u32 | c:u64 | d:u64`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Record {
+    pub cycle: u64,
+    pub kind: Kind,
+    pub who: u8,
+    pub a: u16,
+    pub b: u32,
+    pub c: u64,
+    pub d: u64,
+}
+
+impl Record {
+    pub fn encode(&self) -> [u8; RECORD_BYTES] {
+        let mut buf = [0u8; RECORD_BYTES];
+        buf[0..8].copy_from_slice(&self.cycle.to_le_bytes());
+        buf[8] = self.kind as u8;
+        buf[9] = self.who;
+        buf[10..12].copy_from_slice(&self.a.to_le_bytes());
+        buf[12..16].copy_from_slice(&self.b.to_le_bytes());
+        buf[16..24].copy_from_slice(&self.c.to_le_bytes());
+        buf[24..32].copy_from_slice(&self.d.to_le_bytes());
+        buf
+    }
+
+    /// Decode one record; `None` on an invalid kind byte.
+    pub fn decode(buf: &[u8; RECORD_BYTES]) -> Option<Record> {
+        let kind = Kind::from_u8(buf[8])?;
+        Some(Record {
+            cycle: u64::from_le_bytes(buf[0..8].try_into().unwrap()),
+            kind,
+            who: buf[9],
+            a: u16::from_le_bytes(buf[10..12].try_into().unwrap()),
+            b: u32::from_le_bytes(buf[12..16].try_into().unwrap()),
+            c: u64::from_le_bytes(buf[16..24].try_into().unwrap()),
+            d: u64::from_le_bytes(buf[24..32].try_into().unwrap()),
+        })
+    }
+}
+
+/// The bounded recorder: an in-memory ring of the newest `capacity`
+/// records plus an optional streaming file sink that keeps everything.
+#[derive(Debug)]
+pub struct PerfTrace {
+    enabled: bool,
+    capacity: usize,
+    ring: VecDeque<Record>,
+    records_total: u64,
+    records_dropped: u64,
+    sink: Option<BufWriter<File>>,
+    /// Per-core open wait episode: `(reason code, begin cycle)`.
+    open_wait: [Option<(u16, u64)>; 2],
+}
+
+impl PerfTrace {
+    /// A recorder holding at most `capacity` records in memory
+    /// (`capacity` is clamped to at least 1).
+    pub fn new(enabled: bool, capacity: usize) -> Self {
+        Self {
+            enabled,
+            capacity: capacity.max(1),
+            ring: VecDeque::new(),
+            records_total: 0,
+            records_dropped: 0,
+            sink: None,
+            open_wait: [None, None],
+        }
+    }
+
+    /// A disabled recorder (every emit is a no-op).
+    pub fn disabled() -> Self {
+        Self::new(false, 1)
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Records currently held in the ring.
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// Total records emitted since the last [`PerfTrace::reset`]
+    /// (including those the ring has since dropped).
+    pub fn records_total(&self) -> u64 {
+        self.records_total
+    }
+
+    /// Records evicted from the ring to stay within capacity. The file
+    /// sink, when attached, still has them.
+    pub fn records_dropped(&self) -> u64 {
+        self.records_dropped
+    }
+
+    /// Iterate the ring, oldest first.
+    pub fn records(&self) -> impl Iterator<Item = &Record> + '_ {
+        self.ring.iter()
+    }
+
+    /// Snapshot the ring contents, oldest first.
+    pub fn snapshot(&self) -> Vec<Record> {
+        self.ring.iter().copied().collect()
+    }
+
+    /// Append one record (no-op when disabled). The ring drops its
+    /// oldest record when full; the sink, if attached, sees everything.
+    #[inline]
+    pub fn emit(&mut self, rec: Record) {
+        if !self.enabled {
+            return;
+        }
+        self.records_total += 1;
+        if let Some(w) = self.sink.as_mut() {
+            // A sink write error abandons the sink rather than poisoning
+            // the simulation: tracing must never change results.
+            if w.write_all(&rec.encode()).is_err() {
+                self.sink = None;
+            }
+        }
+        if self.ring.len() == self.capacity {
+            self.ring.pop_front();
+            self.records_dropped += 1;
+        }
+        self.ring.push_back(rec);
+    }
+
+    /// Open a wait episode for `core` at `now` (no-op when disabled or
+    /// when an episode is already open).
+    pub fn open_wait(&mut self, core: usize, reason_code: u16, now: u64) {
+        if !self.enabled {
+            return;
+        }
+        if self.open_wait[core].is_none() {
+            self.open_wait[core] = Some((reason_code, now));
+        }
+    }
+
+    /// Close `core`'s open wait episode, returning `(reason, begin)` for
+    /// the caller to turn into a span record.
+    pub fn close_wait(&mut self, core: usize) -> Option<(u16, u64)> {
+        if !self.enabled {
+            return None;
+        }
+        self.open_wait[core].take()
+    }
+
+    /// Stream every future record to `path` (the in-memory ring keeps
+    /// working as the bounded query view). Writes the [`MAGIC`] header.
+    pub fn attach_sink(&mut self, path: &Path) -> std::io::Result<()> {
+        let mut w = BufWriter::new(File::create(path)?);
+        w.write_all(MAGIC)?;
+        self.sink = Some(w);
+        Ok(())
+    }
+
+    /// Flush the file sink (call before reading the file back).
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        match self.sink.as_mut() {
+            Some(w) => w.flush(),
+            None => Ok(()),
+        }
+    }
+
+    /// Clear the per-job state: ring, counters and open episodes. The
+    /// file sink persists — a sink spans a whole coordinator session.
+    pub fn reset(&mut self) {
+        self.ring.clear();
+        self.records_total = 0;
+        self.records_dropped = 0;
+        self.open_wait = [None, None];
+    }
+}
+
+/// Read a `--trace-out` file back into records. Validates the [`MAGIC`]
+/// header and rejects truncated or unknown-kind records loudly.
+pub fn read_trace_file(path: &Path) -> anyhow::Result<Vec<Record>> {
+    let mut bytes = Vec::new();
+    File::open(path)?.read_to_end(&mut bytes)?;
+    if bytes.len() < MAGIC.len() || &bytes[..MAGIC.len()] != MAGIC {
+        anyhow::bail!("{}: not a spatzformer trace (bad magic)", path.display());
+    }
+    let body = &bytes[MAGIC.len()..];
+    if body.len() % RECORD_BYTES != 0 {
+        anyhow::bail!(
+            "{}: truncated trace ({} trailing bytes)",
+            path.display(),
+            body.len() % RECORD_BYTES
+        );
+    }
+    let mut out = Vec::with_capacity(body.len() / RECORD_BYTES);
+    for (i, chunk) in body.chunks_exact(RECORD_BYTES).enumerate() {
+        let buf: &[u8; RECORD_BYTES] = chunk.try_into().unwrap();
+        let rec = Record::decode(buf)
+            .ok_or_else(|| anyhow::anyhow!("{}: bad record kind at index {i}", path.display()))?;
+        out.push(rec);
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// Query layer
+// ---------------------------------------------------------------------
+
+/// Subsystems cycles get attributed to. `Engine` (skip spans) overlaps
+/// the others by construction — a skipped window *contains* TCDM/DMA
+/// activity — so it is reported separately and never ranked.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Subsystem {
+    Scalar,
+    Vector,
+    Tcdm,
+    Dma,
+    Icache,
+    Barrier,
+    Reconfig,
+    Engine,
+    Other,
+}
+
+impl Subsystem {
+    pub fn name(self) -> &'static str {
+        match self {
+            Subsystem::Scalar => "scalar",
+            Subsystem::Vector => "vector",
+            Subsystem::Tcdm => "tcdm",
+            Subsystem::Dma => "dma",
+            Subsystem::Icache => "icache",
+            Subsystem::Barrier => "barrier",
+            Subsystem::Reconfig => "reconfig",
+            Subsystem::Engine => "engine",
+            Subsystem::Other => "other",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Subsystem> {
+        Some(match s {
+            "scalar" => Subsystem::Scalar,
+            "vector" => Subsystem::Vector,
+            "tcdm" => Subsystem::Tcdm,
+            "dma" => Subsystem::Dma,
+            "icache" => Subsystem::Icache,
+            "barrier" => Subsystem::Barrier,
+            "reconfig" => Subsystem::Reconfig,
+            "engine" => Subsystem::Engine,
+            "other" => Subsystem::Other,
+            _ => return None,
+        })
+    }
+
+    pub fn all() -> [Subsystem; 9] {
+        [
+            Subsystem::Scalar,
+            Subsystem::Vector,
+            Subsystem::Tcdm,
+            Subsystem::Dma,
+            Subsystem::Icache,
+            Subsystem::Barrier,
+            Subsystem::Reconfig,
+            Subsystem::Engine,
+            Subsystem::Other,
+        ]
+    }
+}
+
+/// Which subsystem a record's cost belongs to. Stall spans split by
+/// reason: vector backpressure and fences charge the vector unit,
+/// scalar bank-conflict replays charge the TCDM, barrier waits the
+/// barrier, mode-switch drains the reconfiguration controller.
+pub fn subsystem_of(rec: &Record) -> Subsystem {
+    match rec.kind {
+        Kind::ScalarCommit => Subsystem::Scalar,
+        Kind::VecDispatch | Kind::VecIssue | Kind::VecRetire => Subsystem::Vector,
+        Kind::TcdmCycle | Kind::TcdmSpan => Subsystem::Tcdm,
+        Kind::DmaBurst => Subsystem::Dma,
+        Kind::IcacheMiss => Subsystem::Icache,
+        Kind::BarrierArrive => Subsystem::Barrier,
+        Kind::ModeSwitch => Subsystem::Reconfig,
+        Kind::SkipSpan => Subsystem::Engine,
+        Kind::Marker => Subsystem::Other,
+        Kind::StallSpan => match rec.a {
+            reason::OFFLOAD | reason::FENCE => Subsystem::Vector,
+            reason::MEM => Subsystem::Tcdm,
+            reason::BARRIER => Subsystem::Barrier,
+            reason::RECONFIG => Subsystem::Reconfig,
+            _ => Subsystem::Other,
+        },
+    }
+}
+
+/// Cycles a record attributes to its subsystem. Pure events (issue,
+/// retire, arrival, markers) carry zero cost; commits cost their commit
+/// cycle; spans and penalties cost their width. TCDM records cost their
+/// *conflict* cycles — grants are useful work, replays are the loss —
+/// which is also what makes the per-cycle and closed-form span
+/// representations agree across engines.
+pub fn cost(rec: &Record) -> u64 {
+    match rec.kind {
+        Kind::ScalarCommit | Kind::VecDispatch => 1,
+        Kind::VecIssue | Kind::VecRetire | Kind::BarrierArrive | Kind::Marker => 0,
+        Kind::TcdmCycle | Kind::TcdmSpan => rec.c,
+        Kind::DmaBurst | Kind::IcacheMiss => rec.c,
+        Kind::StallSpan | Kind::ModeSwitch | Kind::SkipSpan => rec.c,
+    }
+}
+
+/// Record filter: cycle range (half-open `[from, to)`, spans match on
+/// their begin cycle), subsystem, and `who` (core/unit id, or
+/// [`WHO_CLUSTER`]).
+#[derive(Debug, Clone, Default)]
+pub struct Filter {
+    pub from: Option<u64>,
+    pub to: Option<u64>,
+    pub subsystem: Option<Subsystem>,
+    pub who: Option<u8>,
+}
+
+impl Filter {
+    pub fn matches(&self, rec: &Record) -> bool {
+        if let Some(from) = self.from {
+            if rec.cycle < from {
+                return false;
+            }
+        }
+        if let Some(to) = self.to {
+            if rec.cycle >= to {
+                return false;
+            }
+        }
+        if let Some(s) = self.subsystem {
+            if subsystem_of(rec) != s {
+                return false;
+            }
+        }
+        if let Some(w) = self.who {
+            if rec.who != w {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// Per-subsystem attribution line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SubsystemSummary {
+    pub subsystem: Subsystem,
+    pub records: u64,
+    pub cycles: u64,
+}
+
+/// Per-reason stall statistics.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StallStat {
+    pub reason: u16,
+    pub count: u64,
+    pub cycles: u64,
+    pub max_width: u64,
+}
+
+/// One hot window in the top-N ranking.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HotWindow {
+    pub start: u64,
+    pub end: u64,
+    pub records: u64,
+    pub cycles: u64,
+}
+
+/// Aggregated query output: everything `trace query` prints.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueryReport {
+    /// Records seen before filtering.
+    pub total_records: u64,
+    /// Records passing the filter.
+    pub matched: u64,
+    /// Cycle range `[first, last]` of matched records (0/0 when empty).
+    pub first_cycle: u64,
+    pub last_cycle: u64,
+    /// Cycle attribution, sorted by cycles descending (ties by name);
+    /// `Engine` and `Other` excluded — see [`QueryReport::engine_skip_cycles`].
+    pub attribution: Vec<SubsystemSummary>,
+    /// Cycles covered by fast-engine skip spans (informational: these
+    /// windows overlap the subsystem attributions above).
+    pub engine_skip_cycles: u64,
+    /// Stall statistics per reason, sorted by cycles descending.
+    pub stalls: Vec<StallStat>,
+    /// Power-of-two stall-width histogram: `buckets[i]` counts spans
+    /// with width in `[2^i, 2^(i+1))`.
+    pub stall_width_buckets: Vec<u64>,
+    /// Hottest fixed-size windows by attributed cycles.
+    pub window_cycles: u64,
+    pub hottest: Vec<HotWindow>,
+}
+
+/// Default hot-window width in cycles.
+pub const DEFAULT_WINDOW: u64 = 1024;
+
+/// Run the filter + every aggregation over a record stream.
+pub fn query(records: &[Record], filter: &Filter, top: usize, window: u64) -> QueryReport {
+    let window = window.max(1);
+    let mut matched = 0u64;
+    let mut first_cycle = u64::MAX;
+    let mut last_cycle = 0u64;
+    let mut by_subsystem: BTreeMap<Subsystem, (u64, u64)> = BTreeMap::new();
+    let mut engine_skip_cycles = 0u64;
+    let mut stalls: BTreeMap<u16, StallStat> = BTreeMap::new();
+    let mut stall_width_buckets = vec![0u64; 64];
+    let mut windows: BTreeMap<u64, (u64, u64)> = BTreeMap::new();
+    for rec in records {
+        if !filter.matches(rec) {
+            continue;
+        }
+        matched += 1;
+        first_cycle = first_cycle.min(rec.cycle);
+        last_cycle = last_cycle.max(rec.cycle);
+        let sub = subsystem_of(rec);
+        let w = cost(rec);
+        if sub == Subsystem::Engine {
+            engine_skip_cycles += w;
+        } else {
+            let entry = by_subsystem.entry(sub).or_insert((0, 0));
+            entry.0 += 1;
+            entry.1 += w;
+            let win = windows.entry(rec.cycle / window).or_insert((0, 0));
+            win.0 += 1;
+            win.1 += w;
+        }
+        if matches!(rec.kind, Kind::StallSpan | Kind::ModeSwitch) {
+            let code = if rec.kind == Kind::ModeSwitch {
+                reason::RECONFIG
+            } else {
+                rec.a
+            };
+            let s = stalls.entry(code).or_insert(StallStat {
+                reason: code,
+                count: 0,
+                cycles: 0,
+                max_width: 0,
+            });
+            s.count += 1;
+            s.cycles += rec.c;
+            s.max_width = s.max_width.max(rec.c);
+            let bucket = 63 - rec.c.max(1).leading_zeros() as usize;
+            stall_width_buckets[bucket] += 1;
+        }
+    }
+    if matched == 0 {
+        first_cycle = 0;
+    }
+    let mut attribution: Vec<SubsystemSummary> = by_subsystem
+        .into_iter()
+        .filter(|(s, _)| *s != Subsystem::Other)
+        .map(|(subsystem, (records, cycles))| SubsystemSummary { subsystem, records, cycles })
+        .collect();
+    attribution.sort_by(|x, y| {
+        y.cycles.cmp(&x.cycles).then_with(|| x.subsystem.name().cmp(y.subsystem.name()))
+    });
+    let mut stalls: Vec<StallStat> = stalls.into_values().collect();
+    stalls.sort_by(|x, y| y.cycles.cmp(&x.cycles).then_with(|| x.reason.cmp(&y.reason)));
+    let mut hottest: Vec<HotWindow> = windows
+        .into_iter()
+        .map(|(idx, (records, cycles))| HotWindow {
+            start: idx * window,
+            end: (idx + 1) * window,
+            records,
+            cycles,
+        })
+        .collect();
+    hottest.sort_by(|x, y| y.cycles.cmp(&x.cycles).then_with(|| x.start.cmp(&y.start)));
+    hottest.truncate(top);
+    QueryReport {
+        total_records: records.len() as u64,
+        matched,
+        first_cycle,
+        last_cycle,
+        attribution,
+        engine_skip_cycles,
+        stalls,
+        stall_width_buckets,
+        window_cycles: window,
+        hottest,
+    }
+}
+
+impl QueryReport {
+    /// Canonical JSON form (the `--json` CLI output and the CI smoke
+    /// contract: `attribution` must be non-empty on a real traced run).
+    pub fn to_json(&self) -> Json {
+        let attribution = Json::Arr(
+            self.attribution
+                .iter()
+                .map(|s| {
+                    Json::Obj(vec![
+                        ("subsystem".into(), Json::str(s.subsystem.name())),
+                        ("records".into(), Json::u64_lossless(s.records)),
+                        ("cycles".into(), Json::u64_lossless(s.cycles)),
+                    ])
+                })
+                .collect(),
+        );
+        let stalls = Json::Arr(
+            self.stalls
+                .iter()
+                .map(|s| {
+                    Json::Obj(vec![
+                        ("reason".into(), Json::str(reason::name(s.reason))),
+                        ("count".into(), Json::u64_lossless(s.count)),
+                        ("cycles".into(), Json::u64_lossless(s.cycles)),
+                        ("max_width".into(), Json::u64_lossless(s.max_width)),
+                    ])
+                })
+                .collect(),
+        );
+        // trailing empty buckets are noise; keep the histogram dense
+        let hi = self.stall_width_buckets.iter().rposition(|&n| n > 0).map_or(0, |i| i + 1);
+        let buckets = Json::Arr(
+            self.stall_width_buckets[..hi]
+                .iter()
+                .map(|&n| Json::u64_lossless(n))
+                .collect(),
+        );
+        let hottest = Json::Arr(
+            self.hottest
+                .iter()
+                .map(|w| {
+                    Json::Obj(vec![
+                        ("start".into(), Json::u64_lossless(w.start)),
+                        ("end".into(), Json::u64_lossless(w.end)),
+                        ("records".into(), Json::u64_lossless(w.records)),
+                        ("cycles".into(), Json::u64_lossless(w.cycles)),
+                    ])
+                })
+                .collect(),
+        );
+        Json::Obj(vec![
+            ("total_records".into(), Json::u64_lossless(self.total_records)),
+            ("matched".into(), Json::u64_lossless(self.matched)),
+            ("first_cycle".into(), Json::u64_lossless(self.first_cycle)),
+            ("last_cycle".into(), Json::u64_lossless(self.last_cycle)),
+            ("attribution".into(), attribution),
+            ("engine_skip_cycles".into(), Json::u64_lossless(self.engine_skip_cycles)),
+            ("stalls".into(), stalls),
+            ("stall_width_buckets".into(), buckets),
+            ("window_cycles".into(), Json::u64_lossless(self.window_cycles)),
+            ("hottest_windows".into(), hottest),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(cycle: u64, kind: Kind, who: u8, a: u16, b: u32, c: u64, d: u64) -> Record {
+        Record { cycle, kind, who, a, b, c, d }
+    }
+
+    #[test]
+    fn record_codec_roundtrips_and_rejects_bad_kinds() {
+        let r = rec(0x0123_4567_89ab_cdef, Kind::TcdmSpan, 1, 0xbeef, 0xdead_beef, 42, u64::MAX);
+        let buf = r.encode();
+        assert_eq!(Record::decode(&buf), Some(r));
+        // kind byte sits at offset 8; 0 and out-of-range values reject
+        let mut bad = buf;
+        bad[8] = 0;
+        assert_eq!(Record::decode(&bad), None);
+        bad[8] = 200;
+        assert_eq!(Record::decode(&bad), None);
+        // all-zero buffers never decode (kind 0 reserved)
+        assert_eq!(Record::decode(&[0u8; RECORD_BYTES]), None);
+    }
+
+    #[test]
+    fn ring_is_bounded_and_counts_drops() {
+        let mut t = PerfTrace::new(true, 8);
+        for i in 0..100u64 {
+            t.emit(rec(i, Kind::ScalarCommit, 0, class::ALU, 0, 0, 0));
+        }
+        assert_eq!(t.len(), 8);
+        assert_eq!(t.records_total(), 100);
+        assert_eq!(t.records_dropped(), 92);
+        // newest records survive
+        let cycles: Vec<u64> = t.records().map(|r| r.cycle).collect();
+        assert_eq!(cycles, (92..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn disabled_recorder_is_a_no_op() {
+        let mut t = PerfTrace::disabled();
+        t.emit(rec(1, Kind::Marker, WHO_CLUSTER, 0, 0, 0, 0));
+        t.open_wait(0, reason::OFFLOAD, 5);
+        assert!(t.is_empty());
+        assert_eq!(t.records_total(), 0);
+        assert_eq!(t.close_wait(0), None);
+    }
+
+    #[test]
+    fn wait_episodes_open_once_and_close_with_begin() {
+        let mut t = PerfTrace::new(true, 16);
+        t.open_wait(1, reason::BARRIER, 10);
+        t.open_wait(1, reason::MEM, 12); // already open: ignored
+        assert_eq!(t.close_wait(1), Some((reason::BARRIER, 10)));
+        assert_eq!(t.close_wait(1), None);
+    }
+
+    #[test]
+    fn reset_clears_ring_counters_and_open_waits() {
+        let mut t = PerfTrace::new(true, 2);
+        t.emit(rec(1, Kind::Marker, 0, 0, 0, 0, 0));
+        t.emit(rec(2, Kind::Marker, 0, 0, 0, 0, 0));
+        t.emit(rec(3, Kind::Marker, 0, 0, 0, 0, 0));
+        t.open_wait(0, reason::FENCE, 3);
+        t.reset();
+        assert!(t.is_empty());
+        assert_eq!((t.records_total(), t.records_dropped()), (0, 0));
+        assert_eq!(t.close_wait(0), None);
+    }
+
+    #[test]
+    fn file_sink_roundtrips_every_record_past_ring_capacity() {
+        let path = std::env::temp_dir().join(format!("sptz_trace_{}.bin", std::process::id()));
+        let mut t = PerfTrace::new(true, 4);
+        t.attach_sink(&path).unwrap();
+        let mut want = Vec::new();
+        for i in 0..32u64 {
+            let r = rec(i, Kind::DmaBurst, WHO_CLUSTER, 0, 64, i * 2, 0);
+            want.push(r);
+            t.emit(r);
+        }
+        t.flush().unwrap();
+        let got = read_trace_file(&path).unwrap();
+        assert_eq!(got, want, "sink keeps what the ring dropped");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn read_trace_file_rejects_bad_magic_and_truncation() {
+        let dir = std::env::temp_dir();
+        let bad_magic = dir.join(format!("sptz_badmagic_{}.bin", std::process::id()));
+        std::fs::write(&bad_magic, b"NOTATRCE").unwrap();
+        assert!(read_trace_file(&bad_magic).is_err());
+        std::fs::remove_file(&bad_magic).ok();
+
+        let truncated = dir.join(format!("sptz_trunc_{}.bin", std::process::id()));
+        let mut bytes = MAGIC.to_vec();
+        bytes.extend_from_slice(&[1u8; 17]); // not a multiple of 32
+        std::fs::write(&truncated, &bytes).unwrap();
+        assert!(read_trace_file(&truncated).is_err());
+        std::fs::remove_file(&truncated).ok();
+    }
+
+    #[test]
+    fn attribution_ranks_by_cycles_and_reports_engine_separately() {
+        let records = vec![
+            rec(0, Kind::ScalarCommit, 0, class::ALU, 0, 0, 0),
+            rec(1, Kind::ScalarCommit, 1, class::MUL, 1, 0, 0),
+            rec(2, Kind::TcdmCycle, WHO_CLUSTER, 0, 8, 7, 0),
+            rec(3, Kind::TcdmSpan, 0, 0, 16, 30, 40),
+            rec(4, Kind::StallSpan, 0, reason::BARRIER, 0, 5, 0),
+            rec(5, Kind::SkipSpan, WHO_CLUSTER, skip::LSU, 0, 40, 0),
+        ];
+        let report = query(&records, &Filter::default(), 10, 16);
+        assert_eq!(report.total_records, 6);
+        assert_eq!(report.matched, 6);
+        assert_eq!(report.attribution[0].subsystem, Subsystem::Tcdm);
+        assert_eq!(report.attribution[0].cycles, 37);
+        assert_eq!(report.engine_skip_cycles, 40);
+        assert!(report.attribution.iter().all(|s| s.subsystem != Subsystem::Engine));
+        // stall stats picked up the barrier span
+        assert_eq!(report.stalls[0].reason, reason::BARRIER);
+        assert_eq!(report.stalls[0].cycles, 5);
+        // width 5 lands in bucket [4, 8)
+        assert_eq!(report.stall_width_buckets[2], 1);
+        // one hot window (all records land in [0, 16)): every non-engine
+        // cost summed — 2 commits + 7 + 30 conflicts + 5 barrier cycles
+        assert_eq!(report.hottest[0].cycles, 44);
+        assert_eq!(report.hottest.len(), 1);
+    }
+
+    #[test]
+    fn filters_select_by_range_subsystem_and_who() {
+        let records = vec![
+            rec(10, Kind::ScalarCommit, 0, class::ALU, 0, 0, 0),
+            rec(20, Kind::ScalarCommit, 1, class::ALU, 1, 0, 0),
+            rec(30, Kind::IcacheMiss, 1, 0, 2, 12, 0),
+        ];
+        let f = Filter { from: Some(15), to: Some(35), subsystem: None, who: Some(1) };
+        let report = query(&records, &f, 10, DEFAULT_WINDOW);
+        assert_eq!(report.matched, 2);
+        let f = Filter { subsystem: Some(Subsystem::Icache), ..Filter::default() };
+        let report = query(&records, &f, 10, DEFAULT_WINDOW);
+        assert_eq!(report.matched, 1);
+        assert_eq!(report.attribution[0].cycles, 12);
+    }
+
+    #[test]
+    fn query_json_shape_is_stable() {
+        let records = vec![rec(0, Kind::ScalarCommit, 0, class::ALU, 0, 0, 0)];
+        let j = query(&records, &Filter::default(), 3, DEFAULT_WINDOW).to_json();
+        assert_eq!(j.get("matched").unwrap().as_u64(), Some(1));
+        let attr = j.get("attribution").unwrap().as_arr().unwrap();
+        assert_eq!(attr[0].get("subsystem").unwrap().as_str(), Some("scalar"));
+        assert_eq!(attr[0].get("cycles").unwrap().as_u64(), Some(1));
+        // canonical encoding parses back
+        let encoded = j.encode();
+        assert_eq!(Json::parse(&encoded).unwrap(), j);
+    }
+
+    #[test]
+    fn subsystem_names_roundtrip() {
+        for s in Subsystem::all() {
+            assert_eq!(Subsystem::from_name(s.name()), Some(s));
+        }
+        assert_eq!(Subsystem::from_name("bogus"), None);
+    }
+}

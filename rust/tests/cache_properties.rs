@@ -111,11 +111,12 @@ fn prop_result_determining_knobs_change_the_key() {
         let job = arb_job(g);
         let key = job_key(&cfg, &job);
         let mut mutated = cfg.clone();
-        let which = g.int(0, 9);
+        let which = g.int(0, 10);
         match which {
             0 => mutated.seed ^= 1 + g.rng.next_u64() % 0xFFFF,
             1 => mutated.max_cycles += 1 + g.int(1, 1000) as u64,
             2 => mutated.trace = !mutated.trace,
+            9 => mutated.trace_capacity += 1 + g.int(1, 1024),
             3 => mutated.cluster.lanes *= 2,
             4 => mutated.cluster.vlen_bits *= 2,
             5 => mutated.cluster.tcdm_banks *= 2,

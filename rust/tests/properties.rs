@@ -397,3 +397,29 @@ fn prop_json_rejects_trailing_garbage_and_survives_truncation() {
         }
     });
 }
+
+#[test]
+fn prop_perf_record_codec_roundtrips_every_field() {
+    use spatzformer::trace::perf::{Kind, Record, RECORD_BYTES};
+    check("perf record encode/decode roundtrip", 512, |g| {
+        let kind = Kind::from_u8(g.int(1, 13) as u8).expect("kinds 1..=13 are valid");
+        let rec = Record {
+            cycle: g.rng.next_u64(),
+            kind,
+            who: (g.rng.next_u64() & 0xff) as u8,
+            a: (g.rng.next_u64() & 0xffff) as u16,
+            b: (g.rng.next_u64() & 0xffff_ffff) as u32,
+            c: g.rng.next_u64(),
+            d: g.rng.next_u64(),
+        };
+        let bytes = rec.encode();
+        assert_eq!(bytes.len(), RECORD_BYTES);
+        let back = Record::decode(&bytes).expect("valid kind must decode");
+        assert_eq!(back, rec, "roundtrip must preserve every field");
+        // corrupting the kind byte to an out-of-range value must be
+        // rejected, never misdecoded
+        let mut bad = bytes;
+        bad[8] = *g.choose(&[0u8, 14, 200, 255]);
+        assert!(Record::decode(&bad).is_none(), "kind {} accepted", bad[8]);
+    });
+}

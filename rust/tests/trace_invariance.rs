@@ -1,0 +1,136 @@
+//! Observability invariants for the structured perf trace.
+//!
+//! Two claims from DESIGN.md §Observability are pinned here:
+//!
+//! 1. **Tracing is write-only.** Turning the `[trace]` knob on must
+//!    never change a [`JobReport`] — not a counter, not a priced joule,
+//!    not a result byte. Both the struct `PartialEq` and the canonical
+//!    wire encoding ([`report_to_json`]) are compared, on *both* cycle
+//!    engines, so neither the per-cycle loop nor the fast-forward paths
+//!    can let observation perturb simulation.
+//! 2. **The trace localizes real pathologies.** A same-bank indexed
+//!    gather — every lane computes the identical address, defeating the
+//!    XOR bank scrambler — must surface the TCDM as the top
+//!    cycle-attribution line in `trace query`, again on both engines
+//!    (the naive engine emits per-cycle conflict records, the fast
+//!    engine closed-form span records; attribution must agree).
+
+use spatzformer::cluster::Cluster;
+use spatzformer::config::{EngineKind, SimConfig};
+use spatzformer::coordinator::{Coordinator, Job, JobReport, ModePolicy};
+use spatzformer::isa::{ElemWidth, Instr, Lmul, Program, VReg, VectorOp};
+use spatzformer::kernels::KernelId;
+use spatzformer::server::proto::report_to_json;
+use spatzformer::trace::perf::{query, DEFAULT_WINDOW, Filter, Subsystem};
+
+fn run_job(engine: EngineKind, trace: bool, job: &Job) -> JobReport {
+    let mut cfg = SimConfig::spatzformer();
+    cfg.engine = engine;
+    cfg.trace = trace;
+    let mut coord = Coordinator::new(cfg).expect("config must validate");
+    coord.submit(job).expect("job must simulate")
+}
+
+#[test]
+fn tracing_never_changes_a_job_report() {
+    let jobs = [
+        Job::Kernel { kernel: KernelId::Fft, policy: ModePolicy::Auto },
+        Job::Mixed { kernel: KernelId::Fmatmul, policy: ModePolicy::Split, coremark_iterations: 2 },
+    ];
+    for engine in [EngineKind::Fast, EngineKind::Naive] {
+        for job in &jobs {
+            let off = run_job(engine, false, job);
+            let on = run_job(engine, true, job);
+            assert_eq!(off, on, "{engine:?}/{}: tracing changed the report", job.name());
+            // Byte-level: the canonical wire encoding must be identical
+            // too (telemetry is off the wire, so even record counts
+            // cannot leak through).
+            assert_eq!(
+                report_to_json(&off).encode(),
+                report_to_json(&on).encode(),
+                "{engine:?}/{}: tracing changed the encoded report",
+                job.name()
+            );
+        }
+    }
+}
+
+/// Same-bank gather: stage 64 identical indices, then `LoadIndexed`
+/// through them so every lane hits one bank every cycle.
+fn conflict_program(cl: &mut Cluster) -> Program {
+    cl.stage_u32(0x2000, &[1024u32; 64]);
+    let mut p = Program::new("same-bank-gather");
+    p.vector(VectorOp::SetVl { avl: 64, ew: ElemWidth::E32, lmul: Lmul::M8 });
+    p.vector(VectorOp::Load { vd: VReg(8), base: 0x2000, stride: 1 });
+    p.vector(VectorOp::LoadIndexed { vd: VReg(16), base: 0, vidx: VReg(8) });
+    p.push(Instr::Fence);
+    p.push(Instr::Halt);
+    p
+}
+
+#[test]
+fn trace_query_localizes_same_bank_conflicts_on_both_engines() {
+    for engine in [EngineKind::Fast, EngineKind::Naive] {
+        let mut cfg = SimConfig::spatzformer();
+        cfg.engine = engine;
+
+        // Untraced reference run.
+        let mut plain = Cluster::new(cfg.clone()).unwrap();
+        let p = conflict_program(&mut plain);
+        plain.load_programs([p, Program::idle()]).unwrap();
+        let plain_cycles = plain.run().unwrap();
+
+        // Traced run: identical outcome, plus a queryable record log.
+        cfg.trace = true;
+        let mut traced = Cluster::new(cfg).unwrap();
+        let p = conflict_program(&mut traced);
+        traced.load_programs([p, Program::idle()]).unwrap();
+        let traced_cycles = traced.run().unwrap();
+
+        assert_eq!(plain_cycles, traced_cycles, "{engine:?}: tracing changed the cycle count");
+        assert_eq!(plain.metrics(0), traced.metrics(0), "{engine:?}: tracing changed the metrics");
+        assert!(
+            traced.tcdm.stats.conflicts >= 63,
+            "{engine:?}: same-address gather must conflict (got {})",
+            traced.tcdm.stats.conflicts
+        );
+
+        let records = traced.trace().snapshot();
+        assert!(!records.is_empty(), "{engine:?}: traced run emitted nothing");
+        let report = query(&records, &Filter::default(), 5, DEFAULT_WINDOW);
+        let top = report
+            .attribution
+            .first()
+            .unwrap_or_else(|| panic!("{engine:?}: no attribution lines"));
+        assert_eq!(
+            top.subsystem,
+            Subsystem::Tcdm,
+            "{engine:?}: TCDM must top the attribution, got {:?}",
+            report.attribution
+        );
+        assert!(
+            top.cycles >= traced.tcdm.stats.conflicts,
+            "{engine:?}: attributed TCDM cycles ({}) must cover the conflicts ({})",
+            top.cycles,
+            traced.tcdm.stats.conflicts
+        );
+    }
+}
+
+#[test]
+fn filtered_query_isolates_the_tcdm_view() {
+    let mut cfg = SimConfig::spatzformer();
+    cfg.trace = true;
+    let mut cl = Cluster::new(cfg).unwrap();
+    let p = conflict_program(&mut cl);
+    cl.load_programs([p, Program::idle()]).unwrap();
+    cl.run().unwrap();
+
+    let records = cl.trace().snapshot();
+    let filter = Filter { subsystem: Some(Subsystem::Tcdm), ..Filter::default() };
+    let report = query(&records, &filter, 5, DEFAULT_WINDOW);
+    assert!(report.matched > 0, "subsystem filter must keep TCDM records");
+    assert!(report.matched < report.total_records);
+    assert_eq!(report.attribution.len(), 1);
+    assert_eq!(report.attribution[0].subsystem, Subsystem::Tcdm);
+}

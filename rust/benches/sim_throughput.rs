@@ -44,17 +44,19 @@ fn main() {
         ("fft", "fft (gather/sync)", KernelId::Fft, Deployment::SplitDual),
     ] {
         let mut cycles_per_engine = Vec::new();
+        let mut steps_per_engine = Vec::new();
         let mut medians = Vec::new();
         let mut rates = Vec::new();
         for engine in [EngineKind::Naive, EngineKind::Fast] {
             let mut cfg = SimConfig::spatzformer();
             cfg.engine = engine;
             let inst = kernel.build(&cfg.cluster, deploy, 1);
-            // measure sim cycles once
+            // measure sim cycles + engine steps once
             let mut cl = Cluster::new(cfg.clone()).unwrap();
             let (m, _) = execute(&mut cl, &inst).unwrap();
             let sim_cycles = m.cycles;
             cycles_per_engine.push(sim_cycles);
+            steps_per_engine.push(cl.steps_executed());
             let r = Bencher::new(&format!("{name} [{}]", engine.name()))
                 .warmup(warmup)
                 .iters(iters)
@@ -84,6 +86,15 @@ fn main() {
             fmt_ratio(speedup),
             if key == "faxpy" { "; LSU fast-forward headline, bar: > 1" } else { "" }
         );
+        // bulk-coverage ratio: how many per-cycle steps the fast engine
+        // actually executed per simulated cycle (< 0.5 means the skip
+        // machinery — LSU schedules, coupled co-sim, scalar mem windows —
+        // covers most of the run; tracked in BENCH_REPORT.json)
+        let steps_ratio = steps_per_engine[1] as f64 / cycles_per_engine[1].max(1) as f64;
+        println!(
+            "  fast-engine coverage on {name}: {} steps over {} cycles ({:.3} steps/cycle)",
+            steps_per_engine[1], cycles_per_engine[1], steps_ratio
+        );
         kernel_rows.push((
             key.to_string(),
             Json::Obj(vec![
@@ -91,6 +102,8 @@ fn main() {
                 ("naive_msim_cycles_per_sec".to_string(), Json::num(rates[0])),
                 ("fast_msim_cycles_per_sec".to_string(), Json::num(rates[1])),
                 ("sim_cycles".to_string(), Json::u64_lossless(cycles_per_engine[0])),
+                ("fast_steps_executed".to_string(), Json::u64_lossless(steps_per_engine[1])),
+                ("fast_steps_per_sim_cycle".to_string(), Json::num(steps_ratio)),
             ]),
         ));
     }

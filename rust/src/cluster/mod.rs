@@ -13,7 +13,7 @@ pub use barrier::BarrierUnit;
 
 use crate::config::{ArchKind, ClusterConfig, EngineKind, Mode, SimConfig};
 use crate::isa::{Instr, Program};
-use crate::mem::{ConflictSchedule, Dma, ICache, Tcdm};
+use crate::mem::{ConflictSchedule, CoupledSchedule, Dma, ICache, Tcdm};
 use crate::metrics::{Counters, RunMetrics, Telemetry};
 use crate::reconfig::ReconfigStage;
 use crate::snitch::{CoreState, Snitch};
@@ -293,27 +293,38 @@ impl Cluster {
         self.now += 1;
     }
 
-    /// Cheap pre-check for the hot loop: an executing or memory-retrying
-    /// core touches shared state (icache, TCDM, dispatch) every cycle,
-    /// so the horizon is `now` and computing the full horizon would be
-    /// wasted work. Active LSU ops are *not* checked here — they are
-    /// handled by [`Self::try_lsu_fast_forward`].
-    fn core_pins_now(&self) -> bool {
-        self.cores
-            .iter()
-            .any(|c| matches!(c.state(), CoreState::Ready | CoreState::WaitMem { .. }))
+    /// Cheap pre-check for the hot loop: an *executing* core touches
+    /// shared state (icache, TCDM, dispatch) every cycle in ways only
+    /// the full step can resolve, so the horizon is `now` and computing
+    /// it would be wasted work. A core merely *retrying memory*
+    /// (`WaitMem`) no longer pins: its single TCDM access per cycle is
+    /// co-simulated by [`Self::try_mem_fast_forward`], like the active
+    /// LSU ops (also not checked here).
+    fn core_executes_now(&self) -> bool {
+        self.cores.iter().any(|c| matches!(c.state(), CoreState::Ready))
+    }
+
+    /// True when some core is parked on a TCDM bank retry — a window
+    /// [`Self::try_mem_fast_forward`] can resolve in closed form even
+    /// with no LSU in flight.
+    fn core_waits_mem(&self) -> bool {
+        self.cores.iter().any(|c| matches!(c.state(), CoreState::WaitMem { .. }))
     }
 
     /// The one component list both horizons are derived from — every
-    /// timed component appears exactly once, with the units' entry
-    /// supplied by the caller (`next_event` for the plain horizon,
-    /// `next_event_beyond_lsu` for LSU windows), so a future component
-    /// growing a real `next_event` cannot end up in one horizon but not
-    /// the other.
-    fn horizon_over(&self, unit_horizon: impl Fn(&SpatzUnit) -> Option<u64>) -> Option<u64> {
+    /// timed component appears exactly once, with the cores' and units'
+    /// entries supplied by the caller (`next_event` for the plain
+    /// horizon; `next_event_beyond_lsu` plus a `WaitMem` carve-out for
+    /// memory windows), so a future component growing a real
+    /// `next_event` cannot end up in one horizon but not the other.
+    fn horizon_over(
+        &self,
+        core_horizon: impl Fn(&Snitch) -> Option<u64>,
+        unit_horizon: impl Fn(&SpatzUnit) -> Option<u64>,
+    ) -> Option<u64> {
         [
-            self.cores[0].next_event(self.now, &self.reconfig, &self.units),
-            self.cores[1].next_event(self.now, &self.reconfig, &self.units),
+            core_horizon(&self.cores[0]),
+            core_horizon(&self.cores[1]),
             unit_horizon(&self.units[0]),
             unit_horizon(&self.units[1]),
             self.barrier.next_event(),
@@ -335,131 +346,320 @@ impl Cluster {
     /// again on its own — either everything is drained or the cluster is
     /// deadlocked (e.g. a barrier that can never release).
     fn next_horizon(&self) -> Option<u64> {
-        self.horizon_over(|u| u.next_event(self.now))
+        self.horizon_over(
+            |c| c.next_event(self.now, &self.reconfig, &self.units),
+            |u| u.next_event(self.now),
+        )
     }
 
-    /// Horizon for a window in which one or both LSUs stream while every
-    /// other component is quiescent: the minimum over the cores, the
-    /// units' non-LSU events (retires, non-memory head issues) and the
-    /// reactive components. The LSUs' own per-cycle arbitration is
-    /// excluded — [`Self::try_lsu_fast_forward`] bulk-applies it via the
-    /// TCDM's conflict-schedule oracle.
-    fn lsu_window_horizon(&self) -> Option<u64> {
-        self.horizon_over(|u| u.next_event_beyond_lsu(self.now))
+    /// Horizon for a window in which the TCDM requesters — one or both
+    /// LSUs, plus any scalar `WaitMem` retries — stream while every
+    /// other component is quiescent: the minimum over the cores' non-
+    /// memory events, the units' non-LSU events (retires, non-memory
+    /// head issues) and the reactive components. The LSUs' per-cycle
+    /// arbitration is excluded because [`Self::try_mem_fast_forward`]
+    /// bulk-applies it via the TCDM's schedule oracles; a `WaitMem`
+    /// core is excluded because the same caller resolves its retry
+    /// against the cycle-`now` bank schedule and folds in its exact
+    /// [`Snitch::mem_grant_horizon`] instead of the pessimistic `now`
+    /// pin its `next_event` reports.
+    fn mem_window_horizon(&self) -> Option<u64> {
+        self.horizon_over(
+            |c| match c.state() {
+                CoreState::WaitMem { .. } => None,
+                _ => c.next_event(self.now, &self.reconfig, &self.units),
+            },
+            |u| u.next_event_beyond_lsu(self.now),
+        )
     }
 
-    /// Closed-form fast-forward across active LSU bank arbitration.
+    /// Closed-form fast-forward across active TCDM arbitration: vector
+    /// LSU streams (solo, bank-disjoint, or genuinely coupled) plus any
+    /// scalar `WaitMem` retries.
     ///
-    /// Preconditions (checked by the caller): fast engine, at least one
-    /// LSU op in flight, no core in `Ready`/`WaitMem`. Within such a
-    /// window the *only* TCDM requesters are the active LSUs, so each
-    /// stream's grants, conflict rotations and retire timing are a pure
-    /// function of its addresses, the bank hash and the lane budget
-    /// ([`Tcdm::conflict_schedule`]) — except when both LSUs are live on
-    /// overlapping bank sets, the genuinely coupled case, where each
-    /// unit's rotations depend on the other's same-cycle reservations
-    /// and the rotating priority; then this returns `false` and the
-    /// loop replays per cycle exactly as before.
+    /// Preconditions (checked by the caller): fast engine, no core in
+    /// `Ready`, and at least one TCDM requester in flight (an active
+    /// LSU op or a `WaitMem` core). Within such a window every TCDM
+    /// requester is known, so the whole arbitration is a pure function
+    /// of the address streams, the bank hash, the lane budgets and the
+    /// rotating priority:
+    ///
+    /// * **Scalar retries** resolve in the window's first cycle — cores
+    ///   arbitrate before the units, in the rotating order, so the plan
+    ///   below decides each retry's grant/loss without touching state,
+    ///   reserves the granted banks for the units' first cycle, and
+    ///   folds each core's exact [`Snitch::mem_grant_horizon`] (losers:
+    ///   a `now + 1` retry) into the window horizon. The retries
+    ///   themselves are then *executed* (a normal traced core step) at
+    ///   commit time — one cycle of real work, with every later cycle
+    ///   of the window bulk-applied.
+    /// * **Solo / bank-disjoint LSUs** bulk-apply per-unit
+    ///   [`Tcdm::conflict_schedule_reserved`] oracles, exactly as
+    ///   before, now seeded with the scalar reservations.
+    /// * **Coupled LSUs** (overlapping bank sets, detected via the
+    ///   per-op cached masks from `SpatzUnit::lsu_bank_mask`) co-
+    ///   simulate both pending deques in [`Tcdm::coupled_schedule`] —
+    ///   O(stream) over two deques instead of full per-cycle cluster
+    ///   stepping, the last replay class the engine had left.
     ///
     /// The skip width is clamped to the earliest of: any other
-    /// component's event, each schedule's own stop (one cycle before
-    /// that stream's drain — completing an op has non-bulk effects), and
-    /// the watchdog cap. Applying a schedule bulk-adds the exact TCDM
-    /// grant/conflict counts and replaces the pending stream with the
-    /// state the replayed loop would have reached, so metrics stay
-    /// byte-identical (`rust/tests/engine_differential.rs`).
-    fn try_lsu_fast_forward(&mut self, cap: u64) -> bool {
-        if self.units[0].lsu_active() && self.units[1].lsu_active() {
-            // per-op cached bank masks: O(1) per cycle after the first
-            // fold, so a long coupled window (which replays per cycle
-            // below) does not pay an O(stream) scan every cycle
+    /// component's event, the scalar grant horizons, each schedule's
+    /// own stop (one cycle before a stream's drain — completing an op
+    /// has non-bulk effects), and the watchdog cap. Every schedule is
+    /// verified to span the common width *before anything commits*; a
+    /// mismatch returns `false` (per-cycle replay) instead of
+    /// bulk-applying a wrong-width schedule. Applying the schedules
+    /// bulk-adds the exact TCDM grant/conflict counts and replaces the
+    /// pending streams with the state the replayed loop would have
+    /// reached, so metrics stay byte-identical
+    /// (`rust/tests/engine_differential.rs`).
+    fn try_mem_fast_forward(&mut self, cap: u64) -> bool {
+        // ---- plan: decide cycle `now`'s scalar arbitration without
+        // mutating anything (every bail-out below must leave the
+        // cluster untouched) ----
+        let order = if (self.now & 1) == 1 { [1usize, 0] } else { [0usize, 1] };
+        let mut reserved: Vec<bool> = Vec::new();
+        let mut prestep = [false; 2];
+        let mut scalar_horizon = u64::MAX;
+        for &i in &order {
+            if let CoreState::WaitMem { addr, is_store } = self.cores[i].state() {
+                prestep[i] = true;
+                if reserved.is_empty() {
+                    reserved = vec![false; self.cfg.cluster.tcdm_banks];
+                }
+                let bank = self.tcdm.bank_of(addr);
+                let h = if reserved[bank] {
+                    // loses to the higher-priority core: retries at now+1
+                    self.now + 1
+                } else {
+                    reserved[bank] = true;
+                    self.cores[i].mem_grant_horizon(self.now, is_store)
+                };
+                scalar_horizon = scalar_horizon.min(h);
+            }
+        }
+        let any_lsu = self.units.iter().any(|u| u.lsu_active());
+        let coupled = if self.units[0].lsu_active() && self.units[1].lsu_active() {
+            // per-op cached bank masks: O(1) per window after the first
+            // fold, so repeated nearby events do not pay an O(stream)
+            // rescan
             let m0 = self.units[0].lsu_bank_mask(&self.tcdm);
             let m1 = self.units[1].lsu_bank_mask(&self.tcdm);
             match (m0, m1) {
-                (Some(a), Some(b)) if a & b == 0 => {} // disjoint: schedulable
-                _ => return false,                     // coupled: replay per cycle
+                (Some(a), Some(b)) => a & b != 0,
+                // mask overflow (>128 banks): conservatively replay
+                _ => return false,
             }
-        }
-        let horizon = self.lsu_window_horizon().unwrap_or(cap).min(cap);
+        } else {
+            false
+        };
+        let horizon = self.mem_window_horizon().unwrap_or(cap).min(cap).min(scalar_horizon);
         if horizon <= self.now {
             return false;
         }
         let budget = horizon - self.now;
+
+        // ---- schedule + verify (still no mutation) ----
+        let mut coupled_sched: Option<CoupledSchedule> = None;
         let mut scheds: [Option<ConflictSchedule>; 2] = [None, None];
         let mut span = budget;
-        for i in 0..2 {
-            if self.units[i].lsu_active() {
-                let s = self.tcdm.conflict_schedule(
-                    self.units[i].lsu_pending().unwrap(),
-                    self.units[i].lanes(),
-                    span,
-                );
-                span = span.min(s.cycles);
-                scheds[i] = Some(s);
+        if coupled {
+            let s = self.tcdm.coupled_schedule(
+                [self.units[0].lsu_pending().unwrap(), self.units[1].lsu_pending().unwrap()],
+                [self.units[0].lanes(), self.units[1].lanes()],
+                self.now,
+                budget,
+                &reserved,
+            );
+            if s.cycles == 0 {
+                return false;
             }
-        }
-        if span == 0 {
-            return false;
-        }
-        for i in 0..2 {
-            if let Some(s) = scheds[i].take() {
-                // a later stream's earlier stop truncates this one: the
-                // oracle is deterministic, so a smaller budget is a pure
-                // prefix recompute
-                let s = if s.cycles > span {
-                    self.tcdm.conflict_schedule(
+            span = s.cycles;
+            coupled_sched = Some(s);
+        } else {
+            for i in 0..2 {
+                if self.units[i].lsu_active() {
+                    let s = self.tcdm.conflict_schedule_reserved(
                         self.units[i].lsu_pending().unwrap(),
                         self.units[i].lanes(),
                         span,
-                    )
-                } else {
-                    s
-                };
-                debug_assert_eq!(s.cycles, span);
-                self.tcdm.apply_schedule(&s);
-                if self.trace.is_enabled() {
-                    // one span record stands in for the per-cycle TCDM
-                    // records the replayed loop would have produced
-                    self.trace.emit(Record {
-                        cycle: self.now,
-                        kind: Kind::TcdmSpan,
-                        who: i as u8,
-                        a: 0,
-                        b: s.grants as u32,
-                        c: s.conflicts,
-                        d: s.cycles,
-                    });
+                        &reserved,
+                    );
+                    span = span.min(s.cycles);
+                    scheds[i] = Some(s);
                 }
-                self.units[i].lsu_apply_schedule(s.remaining);
+            }
+            if span == 0 {
+                return false;
+            }
+            for i in 0..2 {
+                if let Some(s) = &mut scheds[i] {
+                    if s.cycles > span {
+                        // a later stream's earlier stop truncates this
+                        // one: the oracle is deterministic, so a smaller
+                        // budget is a pure prefix recompute
+                        *s = self.tcdm.conflict_schedule_reserved(
+                            self.units[i].lsu_pending().unwrap(),
+                            self.units[i].lanes(),
+                            span,
+                            &reserved,
+                        );
+                    }
+                    if s.cycles != span {
+                        // a schedule that cannot be cut to the common
+                        // width would bulk-apply the wrong window —
+                        // replay per cycle instead (a real invariant,
+                        // not a debug assert: release builds must not
+                        // silently diverge)
+                        return false;
+                    }
+                }
+            }
+        }
+
+        // ---- commit ----
+        self.commit_prestep(order, prestep);
+        if let Some(s) = coupled_sched {
+            self.tcdm.apply_coupled(&s);
+            let [r0, r1] = s.remaining;
+            self.emit_tcdm_span(0, s.grants[0], s.conflicts[0], s.cycles);
+            self.emit_tcdm_span(1, s.grants[1], s.conflicts[1], s.cycles);
+            self.units[0].lsu_apply_schedule(r0);
+            self.units[1].lsu_apply_schedule(r1);
+        } else {
+            for i in 0..2 {
+                if let Some(s) = scheds[i].take() {
+                    self.tcdm.apply_schedule(&s);
+                    self.emit_tcdm_span(i as u8, s.grants, s.conflicts, s.cycles);
+                    self.units[i].lsu_apply_schedule(s.remaining);
+                }
             }
         }
         if self.trace.is_enabled() {
+            let code = if coupled {
+                skip::LSU_COUPLED
+            } else if any_lsu {
+                skip::LSU
+            } else {
+                skip::MEM
+            };
             self.trace.emit(Record {
                 cycle: self.now,
                 kind: Kind::SkipSpan,
                 who: WHO_CLUSTER,
-                a: skip::LSU,
+                a: code,
                 b: 0,
                 c: span,
                 d: 0,
             });
         }
-        self.fast_forward(self.now + span);
+        self.fast_forward_mixed(self.now + span, prestep);
         true
+    }
+
+    /// Execute cycle `now`'s scalar `WaitMem` retries for real: one
+    /// `begin_cycle` plus the marked cores' normal traced steps in the
+    /// rotating priority order — exactly the prefix of [`Self::step`]
+    /// that touches them. The units' share of cycle `now` is the
+    /// schedules' reservation-seeded first cycle, and
+    /// [`Self::fast_forward_mixed`] completes the cycle's busy
+    /// accounting, so together they replay the full cycle. Mirrors
+    /// `step`'s conflict tracing: a retry that loses its bank gets the
+    /// per-cycle `TcdmCycle` record the naive loop would have emitted.
+    fn commit_prestep(&mut self, order: [usize; 2], prestep: [bool; 2]) {
+        if !prestep.iter().any(|&p| p) {
+            return;
+        }
+        self.tcdm.begin_cycle();
+        let pre_tcdm = if self.trace.is_enabled() { Some(self.tcdm.stats.clone()) } else { None };
+        for &i in &order {
+            if prestep[i] {
+                self.cores[i].step_traced(
+                    self.now,
+                    &mut self.icache,
+                    &mut self.tcdm,
+                    &mut self.reconfig,
+                    &mut self.units,
+                    &mut self.barrier,
+                    &mut self.counters,
+                    &mut self.trace,
+                );
+            }
+        }
+        if let Some(pre) = pre_tcdm {
+            let grants = self.tcdm.stats.accesses - pre.accesses;
+            let conflicts = self.tcdm.stats.conflicts - pre.conflicts;
+            if conflicts > 0 {
+                self.trace.emit(Record {
+                    cycle: self.now,
+                    kind: Kind::TcdmCycle,
+                    who: WHO_CLUSTER,
+                    a: 0,
+                    b: grants as u32,
+                    c: conflicts,
+                    d: 0,
+                });
+            }
+        }
+    }
+
+    /// One `TcdmSpan` record stands in for the per-cycle TCDM records a
+    /// replayed LSU window would have produced. The grant count rides
+    /// in the `a:u16`/`b:u32` pair as a 48-bit high/low split — a long
+    /// stream overflows a bare `u32` — saturating at `2^48 - 1` rather
+    /// than silently wrapping (decode with
+    /// [`crate::trace::perf::tcdm_span_grants`]).
+    fn emit_tcdm_span(&mut self, unit: u8, grants: u64, conflicts: u64, cycles: u64) {
+        if !self.trace.is_enabled() {
+            return;
+        }
+        let g = grants.min((1 << 48) - 1);
+        self.trace.emit(Record {
+            cycle: self.now,
+            kind: Kind::TcdmSpan,
+            who: unit,
+            a: (g >> 32) as u16,
+            b: g as u32,
+            c: conflicts,
+            d: cycles,
+        });
     }
 
     /// Jump `now` directly to `to`, bulk-accounting every skipped cycle
     /// exactly as the naive loop would have: countdowns decrement, wait
     /// counters (offload/fence/barrier) and per-block busy cycles grow by
     /// the skip width. Callers must not cross [`Self::next_horizon`]
-    /// (for LSU-active windows: [`Self::lsu_window_horizon`], with the
+    /// (for memory windows: [`Self::mem_window_horizon`], with the
     /// arbitration window bulk-applied first).
     fn fast_forward(&mut self, to: u64) {
+        self.fast_forward_mixed(to, [false, false]);
+    }
+
+    /// [`Self::fast_forward`] for windows whose first cycle was partly
+    /// executed: cores marked `prestepped` already took their
+    /// cycle-`now` step (a `WaitMem` retry in
+    /// [`Self::commit_prestep`]), so they owe cycle `now`'s busy
+    /// accounting directly and skip only the remaining `w - 1` cycles.
+    /// After a width-1 window no skip at all — the post-grant state may
+    /// be `Ready`, which [`Snitch::skip`] rightly rejects, and there is
+    /// nothing left to skip.
+    fn fast_forward_mixed(&mut self, to: u64, prestepped: [bool; 2]) {
         debug_assert!(to > self.now, "fast_forward must move time forward");
         let now = self.now;
         let w = to - now;
-        for core in self.cores.iter_mut() {
-            core.skip(w, &mut self.counters);
+        for (i, core) in self.cores.iter_mut().enumerate() {
+            if prestepped[i] {
+                // busy accounting for the executed first cycle (the
+                // state after a WaitMem retry is never halted/parked)
+                if core.busy() {
+                    self.counters.cycles_core_busy[i] += 1;
+                }
+                if w > 1 {
+                    core.skip(w - 1, &mut self.counters);
+                }
+            } else {
+                core.skip(w, &mut self.counters);
+            }
         }
         for unit in self.units.iter_mut() {
             // mirror the naive loop's idle-unit shortcut: idle units are
@@ -475,14 +675,15 @@ impl Cluster {
     ///
     /// With [`EngineKind::Fast`] (the default) the loop advances `now`
     /// straight to the next event horizon whenever every component is
-    /// quiescent — including across active vector-LSU bank arbitration,
-    /// whose grants and conflict replays are bulk-applied in closed form
-    /// via [`Tcdm::conflict_schedule`] unless both LSUs contend on
-    /// overlapping bank sets. With [`EngineKind::Naive`] it ticks every
-    /// cycle. Both produce byte-identical metrics and fire the
-    /// `max_cycles` watchdog at the identical cycle —
-    /// `rust/tests/engine_differential.rs` holds the engines to that
-    /// contract.
+    /// quiescent — including across active TCDM arbitration, whose
+    /// grants and conflict replays are bulk-applied in closed form:
+    /// solo/disjoint LSU streams via [`Tcdm::conflict_schedule`],
+    /// coupled dual-LSU streams via [`Tcdm::coupled_schedule`], and
+    /// scalar `WaitMem` retries co-simulated in the same window. With
+    /// [`EngineKind::Naive`] it ticks every cycle. Both produce
+    /// byte-identical metrics and fire the `max_cycles` watchdog at the
+    /// identical cycle — `rust/tests/engine_differential.rs` holds the
+    /// engines to that contract.
     pub fn run(&mut self) -> anyhow::Result<u64> {
         let start = self.now;
         let fast = self.cfg.engine == EngineKind::Fast;
@@ -499,9 +700,9 @@ impl Cluster {
                 "simulation exceeded max_cycles={} (deadlock?)",
                 self.cfg.max_cycles
             );
-            if fast && !self.core_pins_now() {
-                if self.units.iter().any(|u| u.lsu_active()) {
-                    if self.try_lsu_fast_forward(cap) {
+            if fast && !self.core_executes_now() {
+                if self.units.iter().any(|u| u.lsu_active()) || self.core_waits_mem() {
+                    if self.try_mem_fast_forward(cap) {
                         continue;
                     }
                 } else {
@@ -916,11 +1117,12 @@ mod tests {
     }
 
     #[test]
-    fn coupled_dual_lsu_streams_fall_back_and_stay_identical() {
+    fn coupled_dual_lsu_streams_fast_forward_and_stay_identical() {
         // both cores stream loads from the SAME region concurrently, so
         // the two LSUs are live on overlapping bank sets — the genuinely
-        // coupled case that must fall back to per-cycle replay and still
-        // match the naive loop exactly
+        // coupled case. It used to fall back to per-cycle replay; the
+        // co-simulated Tcdm::coupled_schedule must now skip most of it
+        // while matching the naive loop exactly.
         let mk_program = |name: &str, out: u32| {
             let mut p = Program::new(name);
             for strip in 0..2u32 {
@@ -945,7 +1147,8 @@ mod tests {
         };
         let mut fast = build(EngineKind::Fast);
         let mut naive = build(EngineKind::Naive);
-        assert_eq!(fast.run().unwrap(), naive.run().unwrap());
+        let cycles = fast.run().unwrap();
+        assert_eq!(cycles, naive.run().unwrap());
         assert_eq!(fast.counters, naive.counters);
         assert_eq!(fast.tcdm.stats, naive.tcdm.stats);
         assert_eq!(
@@ -955,6 +1158,111 @@ mod tests {
         assert_eq!(
             fast.tcdm.read_f32_slice(0xA000, 256),
             naive.tcdm.read_f32_slice(0xA000, 256)
+        );
+        assert!(
+            fast.steps_executed() * 2 < naive.steps_executed(),
+            "coupled dual-LSU windows no longer replay per cycle: stepped {} of {}",
+            fast.steps_executed(),
+            naive.steps_executed()
+        );
+    }
+
+    #[test]
+    fn asymmetric_disjoint_streams_take_the_recompute_path_exactly() {
+        // Two broadcast gathers on DISJOINT banks with very different
+        // stream lengths: both schedules are computed independently, the
+        // shorter one stops first, and the longer one must be recomputed
+        // to the common span (the once-debug-only invariant that now
+        // gates the commit). Exactness vs the naive engine proves the
+        // recompute landed on the right width.
+        let addr_a = 1024u32; // bank 1 (word 256)
+        let addr_b = 32u32; // bank 8 (word 8) — disjoint from bank 1
+        let mk = |name: &str, n: u32, idx_at: u32, out: u32| {
+            let mut p = Program::new(name);
+            p.vector(VectorOp::SetVl { avl: n, ew: ElemWidth::E32, lmul: Lmul::M8 });
+            p.vector(VectorOp::Load { vd: VReg(8), base: idx_at, stride: 1 });
+            p.vector(VectorOp::LoadIndexed { vd: VReg(16), base: 0, vidx: VReg(8) });
+            p.vector(VectorOp::Store { vs: VReg(16), base: out, stride: 1 });
+            p.push(Instr::Fence);
+            p.push(Instr::Halt);
+            p
+        };
+        let build = |engine| {
+            let mut cfg = SimConfig::spatzformer();
+            cfg.engine = engine;
+            let mut cl = Cluster::new(cfg).unwrap();
+            cl.stage_u32(0x6000, &[addr_a; 64]);
+            cl.stage_u32(0x7000, &[addr_b; 24]);
+            cl.load_programs([
+                mk("bcast-long", 64, 0x6000, 0x8000),
+                mk("bcast-short", 24, 0x7000, 0xA000),
+            ])
+            .unwrap();
+            cl
+        };
+        let mut fast = build(EngineKind::Fast);
+        let mut naive = build(EngineKind::Naive);
+        assert_eq!(fast.run().unwrap(), naive.run().unwrap());
+        assert_eq!(fast.counters, naive.counters);
+        assert_eq!(fast.tcdm.stats, naive.tcdm.stats);
+        assert!(
+            fast.steps_executed() < naive.steps_executed(),
+            "disjoint broadcast windows must still fast-forward"
+        );
+    }
+
+    #[test]
+    fn tcdm_span_grants_survive_u32_overflow() {
+        // Regression for the `b: grants as u32` truncation: a grant
+        // count past 2^32 must round-trip through the record's 48-bit
+        // a/b split, and saturate (not wrap) past 2^48.
+        let mut cfg = SimConfig::spatzformer();
+        cfg.trace = true;
+        let mut cl = Cluster::new(cfg).unwrap();
+        cl.emit_tcdm_span(0, (1u64 << 32) + 7, 3, 9);
+        cl.emit_tcdm_span(1, u64::MAX, 0, 1);
+        cl.emit_tcdm_span(0, 12, 0, 3);
+        let recs = cl.trace().snapshot();
+        use crate::trace::perf::tcdm_span_grants;
+        assert_eq!(tcdm_span_grants(&recs[0]), (1u64 << 32) + 7);
+        assert_eq!(tcdm_span_grants(&recs[1]), (1u64 << 48) - 1, "saturates, never wraps");
+        assert_eq!(tcdm_span_grants(&recs[2]), 12, "small counts unchanged");
+    }
+
+    #[test]
+    fn scalar_waitmem_windows_fast_forward_and_stay_identical() {
+        // Two cores hammer the SAME word with scalar loads while the
+        // TCDM latency is long enough that each grant parks the winner
+        // in a multi-cycle stall: the WaitMem retries used to pin the
+        // fast engine to per-cycle stepping; they are now co-simulated.
+        let mk = |name: &str| {
+            let mut p = Program::new(name);
+            for _ in 0..32 {
+                p.scalar(ScalarOp::Load { addr: 0x1000 });
+                p.scalar(ScalarOp::Alu);
+            }
+            p.push(Instr::Halt);
+            p
+        };
+        let build = |engine, p0: Program, p1: Program| {
+            let mut cfg = SimConfig::spatzformer();
+            cfg.engine = engine;
+            cfg.cluster.tcdm_latency = 4;
+            let mut cl = Cluster::new(cfg).unwrap();
+            cl.load_programs([p0, p1]).unwrap();
+            cl
+        };
+        let mut fast = build(EngineKind::Fast, mk("mem0"), mk("mem1"));
+        let mut naive = build(EngineKind::Naive, mk("mem0"), mk("mem1"));
+        let cycles = fast.run().unwrap();
+        assert_eq!(cycles, naive.run().unwrap());
+        assert_eq!(fast.counters, naive.counters);
+        assert_eq!(fast.tcdm.stats, naive.tcdm.stats);
+        assert!(
+            fast.steps_executed() < naive.steps_executed(),
+            "WaitMem stall windows must fast-forward: stepped {} of {}",
+            fast.steps_executed(),
+            naive.steps_executed()
         );
     }
 

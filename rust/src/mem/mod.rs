@@ -13,4 +13,4 @@ pub mod tcdm;
 
 pub use dma::{Dma, DmaStats};
 pub use icache::ICache;
-pub use tcdm::{ConflictSchedule, Tcdm, TcdmStats};
+pub use tcdm::{ConflictSchedule, CoupledSchedule, Tcdm, TcdmStats};

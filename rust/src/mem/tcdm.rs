@@ -39,6 +39,27 @@ pub struct ConflictSchedule {
     pub remaining: VecDeque<u32>,
 }
 
+/// Closed-form arbitration outcome for *two* requesters co-simulated
+/// against the shared banks, computed by [`Tcdm::coupled_schedule`]:
+/// the genuinely coupled dual-LSU case, where each stream's rotations
+/// depend on the other's same-cycle reservations and on the rotating
+/// arbitration priority. Index `i` is the unit id; the same
+/// stop-before-drain contract as [`ConflictSchedule`] applies, keyed
+/// to whichever stream drains first.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CoupledSchedule {
+    /// Complete arbitration cycles covered by this schedule (may be 0
+    /// when a stream would drain immediately — the caller then replays
+    /// per cycle).
+    pub cycles: u64,
+    /// Granted accesses per unit across those cycles.
+    pub grants: [u64; 2],
+    /// Lost-arbitration rotations per unit across those cycles.
+    pub conflicts: [u64; 2],
+    /// Each pending stream exactly as the replayed loop would leave it.
+    pub remaining: [VecDeque<u32>; 2],
+}
+
 /// The TCDM model.
 pub struct Tcdm {
     mem: Vec<u8>,
@@ -123,15 +144,19 @@ impl Tcdm {
     /// grant pops, a conflict rotates to the back (either way the lane
     /// is consumed). Mirrors `spatz::SpatzUnit::step` stage 2
     /// instruction-for-instruction — that mirror *is* the exactness
-    /// argument for [`Tcdm::conflict_schedule`]. Returns
-    /// `(grants, conflicts)` for the cycle.
-    fn arbitrate_one_cycle(
+    /// argument for [`Tcdm::conflict_schedule`]. Arbitrates against
+    /// whatever is *already* reserved in `taken` (callers clear or seed
+    /// it per cycle) — that is what lets one cycle chain several
+    /// requesters, scalar grants seeded first and then each LSU in the
+    /// rotating priority order, exactly as the per-cycle loop shares
+    /// `Tcdm::taken` within a cycle. Returns `(grants, conflicts)` for
+    /// the cycle.
+    fn arbitrate_into(
         &self,
         rem: &mut VecDeque<u32>,
         lanes: usize,
         taken: &mut [bool],
     ) -> (u64, u64) {
-        taken.fill(false);
         let (mut grants, mut conflicts) = (0u64, 0u64);
         let mut granted = 0;
         while granted < lanes {
@@ -152,13 +177,24 @@ impl Tcdm {
     }
 
     /// True when the next arbitration cycle would empty `rem` (the drain
-    /// cycle). Dry run on copies; only worth calling once
-    /// `rem.len() <= lanes` (a cycle pops at most `lanes` elements).
-    fn cycle_would_drain(&self, rem: &VecDeque<u32>, lanes: usize) -> bool {
+    /// cycle), with `seed` banks pre-reserved (scalar grants that land
+    /// in the same cycle; empty = nothing else arbitrates). Dry run on
+    /// copies; only worth calling once `rem.len() <= lanes` (a cycle
+    /// pops at most `lanes` elements).
+    fn cycle_would_drain(&self, rem: &VecDeque<u32>, lanes: usize, seed: &[bool]) -> bool {
         let mut probe = rem.clone();
         let mut taken = vec![false; self.banks];
-        self.arbitrate_one_cycle(&mut probe, lanes, &mut taken);
+        Self::seed_taken(&mut taken, seed);
+        self.arbitrate_into(&mut probe, lanes, &mut taken);
         probe.is_empty()
+    }
+
+    /// Reset `taken` to exactly the `seed` reservations (empty seed =
+    /// all free). `seed` is indexed by bank, at most `banks` long.
+    #[inline]
+    fn seed_taken(taken: &mut [bool], seed: &[bool]) {
+        taken.fill(false);
+        taken[..seed.len()].copy_from_slice(seed);
     }
 
     /// True when the first `groups` complete lane-groups of `pending`
@@ -211,6 +247,23 @@ impl Tcdm {
         lanes: usize,
         max_cycles: u64,
     ) -> ConflictSchedule {
+        self.conflict_schedule_reserved(pending, lanes, max_cycles, &[])
+    }
+
+    /// [`Tcdm::conflict_schedule`] with banks pre-reserved in the
+    /// window's *first* cycle: `reserved[b]` marks bank `b` as already
+    /// granted to a higher-priority requester (a scalar core resolving
+    /// its `WaitMem` retry — cores always arbitrate before the vector
+    /// units within a cycle). Scalar retries resolve in that one cycle
+    /// (grant or rotate to the next window), so later cycles of the
+    /// window see free banks again.
+    pub fn conflict_schedule_reserved(
+        &self,
+        pending: &VecDeque<u32>,
+        lanes: usize,
+        max_cycles: u64,
+        reserved: &[bool],
+    ) -> ConflictSchedule {
         debug_assert!(lanes >= 1);
         // Complete lane-groups strictly before the earliest possible
         // drain cycle (the drain cycle handles the final <= lanes tail),
@@ -218,10 +271,17 @@ impl Tcdm {
         // to be conflict-free — checking the whole stream would make a
         // repeatedly-clamped window (frequent nearby events) rescan
         // O(stream) per re-entry, and conflicts beyond the window never
-        // execute in it anyway.
+        // execute in it anyway. A reservation-seeded first cycle also
+        // needs its head lane-group clear of the reserved banks, or the
+        // arithmetic undercounts its rotations.
+        let head_clear = reserved.iter().all(|&r| !r)
+            || pending
+                .iter()
+                .take(lanes)
+                .all(|&a| !reserved.get(self.bank_of(a)).copied().unwrap_or(false));
         let full_groups = pending.len().saturating_sub(1) / lanes;
         let groups = full_groups.min(usize::try_from(max_cycles).unwrap_or(usize::MAX));
-        if self.lane_groups_conflict_free(pending, lanes, groups) {
+        if head_clear && self.lane_groups_conflict_free(pending, lanes, groups) {
             let cycles = groups as u64;
             let grants = cycles * lanes as u64;
             let remaining = pending.iter().copied().skip(grants as usize).collect();
@@ -231,15 +291,85 @@ impl Tcdm {
         let (mut cycles, mut grants, mut conflicts) = (0u64, 0u64, 0u64);
         let mut taken = vec![false; self.banks];
         while cycles < max_cycles && !rem.is_empty() {
-            if rem.len() <= lanes && self.cycle_would_drain(&rem, lanes) {
+            let seed: &[bool] = if cycles == 0 { reserved } else { &[] };
+            if rem.len() <= lanes && self.cycle_would_drain(&rem, lanes, seed) {
                 break;
             }
-            let (g, c) = self.arbitrate_one_cycle(&mut rem, lanes, &mut taken);
+            Self::seed_taken(&mut taken, seed);
+            let (g, c) = self.arbitrate_into(&mut rem, lanes, &mut taken);
             grants += g;
             conflicts += c;
             cycles += 1;
         }
         ConflictSchedule { cycles, grants, conflicts, remaining: rem }
+    }
+
+    /// Co-simulate *both* LSUs' pending streams against the shared
+    /// banks: the coupled dual-LSU oracle. Per cycle the units
+    /// arbitrate in the cluster's rotating priority order (unit
+    /// `(start + t) & 1 == 1 ? [1,0] : [0,1]` — the same `flip` the
+    /// per-cycle loop derives from `now`), sharing one reservation
+    /// vector, so every cross-stream conflict and every
+    /// rotation-priority hand-off lands exactly where the replayed loop
+    /// puts it. O(stream₀ + stream₁): each cycle after the
+    /// reservation-seeded first one grants at least the
+    /// priority-winner's first try.
+    ///
+    /// Stops one cycle before *either* stream drains (the drain cycle
+    /// has the usual non-bulk effects); `cycles` may therefore be 0,
+    /// in which case the caller replays per cycle. `reserved` seeds
+    /// the first cycle with scalar grants, as in
+    /// [`Tcdm::conflict_schedule_reserved`].
+    pub fn coupled_schedule(
+        &self,
+        pending: [&VecDeque<u32>; 2],
+        lanes: [usize; 2],
+        start: u64,
+        max_cycles: u64,
+        reserved: &[bool],
+    ) -> CoupledSchedule {
+        debug_assert!(lanes[0] >= 1 && lanes[1] >= 1);
+        let mut rem = [pending[0].clone(), pending[1].clone()];
+        let mut grants = [0u64; 2];
+        let mut conflicts = [0u64; 2];
+        let mut cycles = 0u64;
+        let mut taken = vec![false; self.banks];
+        while cycles < max_cycles && !rem[0].is_empty() && !rem[1].is_empty() {
+            let flip = ((start + cycles) & 1) == 1;
+            let order = if flip { [1usize, 0] } else { [0usize, 1] };
+            let seed: &[bool] = if cycles == 0 { reserved } else { &[] };
+            if (rem[0].len() <= lanes[0] || rem[1].len() <= lanes[1])
+                && self.coupled_cycle_would_drain(&rem, lanes, order, seed)
+            {
+                break;
+            }
+            Self::seed_taken(&mut taken, seed);
+            for &u in &order {
+                let (g, c) = self.arbitrate_into(&mut rem[u], lanes[u], &mut taken);
+                grants[u] += g;
+                conflicts[u] += c;
+            }
+            cycles += 1;
+        }
+        CoupledSchedule { cycles, grants, conflicts, remaining: rem }
+    }
+
+    /// True when the next co-simulated cycle would empty either stream.
+    /// Dry run on copies, seeded like the real cycle would be.
+    fn coupled_cycle_would_drain(
+        &self,
+        rem: &[VecDeque<u32>; 2],
+        lanes: [usize; 2],
+        order: [usize; 2],
+        seed: &[bool],
+    ) -> bool {
+        let mut probe = rem.clone();
+        let mut taken = vec![false; self.banks];
+        Self::seed_taken(&mut taken, seed);
+        for &u in &order {
+            self.arbitrate_into(&mut probe[u], lanes[u], &mut taken);
+        }
+        probe[0].is_empty() || probe[1].is_empty()
     }
 
     /// Bulk-apply a schedule's grant/conflict counts to the stats —
@@ -248,6 +378,15 @@ impl Tcdm {
     pub fn apply_schedule(&mut self, s: &ConflictSchedule) {
         self.stats.accesses += s.grants;
         self.stats.conflicts += s.conflicts;
+    }
+
+    /// Bulk-apply a coupled schedule's counts for both units — the
+    /// replayed loop attributes grants and rotations to the TCDM stats
+    /// identically regardless of which unit produced them, so the sum
+    /// is exact.
+    pub fn apply_coupled(&mut self, s: &CoupledSchedule) {
+        self.stats.accesses += s.grants[0] + s.grants[1];
+        self.stats.conflicts += s.conflicts[0] + s.conflicts[1];
     }
 
     /// Fold an address stream into its bank-set bitmask (bit `b` set iff
@@ -563,7 +702,8 @@ mod tests {
             let mut taken = vec![false; 16];
             let (mut grants, mut conflicts) = (0u64, 0u64);
             for _ in 0..s.cycles {
-                let (gr, co) = replay.arbitrate_one_cycle(&mut rem, lanes, &mut taken);
+                taken.fill(false);
+                let (gr, co) = replay.arbitrate_into(&mut rem, lanes, &mut taken);
                 grants += gr;
                 conflicts += co;
             }
@@ -602,6 +742,144 @@ mod tests {
             );
             assert_eq!(tail.stats, full.stats);
         });
+    }
+
+    /// Replay dual-LSU arbitration per cycle against a real `Tcdm`
+    /// exactly like the naive cluster loop: shared reservations within
+    /// a cycle, unit order rotating with cycle parity, scalar-grant
+    /// seed on the first cycle. Returns per-unit (grants, conflicts)
+    /// and the remaining streams.
+    #[allow(clippy::type_complexity)]
+    fn replay_coupled_cycles(
+        t: &mut Tcdm,
+        pending: [&VecDeque<u32>; 2],
+        lanes: [usize; 2],
+        start: u64,
+        cycles: u64,
+        reserved: &[bool],
+    ) -> ([u64; 2], [u64; 2], [VecDeque<u32>; 2]) {
+        let mut rem = [pending[0].clone(), pending[1].clone()];
+        let (mut grants, mut conflicts) = ([0u64; 2], [0u64; 2]);
+        for cyc in 0..cycles {
+            t.begin_cycle();
+            if cyc == 0 {
+                for (b, &r) in reserved.iter().enumerate() {
+                    if r {
+                        t.taken[b] = true;
+                    }
+                }
+            }
+            let flip = ((start + cyc) & 1) == 1;
+            let order = if flip { [1usize, 0] } else { [0usize, 1] };
+            for &u in &order {
+                let mut granted = 0;
+                while granted < lanes[u] {
+                    let Some(&addr) = rem[u].front() else { break };
+                    if t.try_access(addr) {
+                        rem[u].pop_front();
+                        grants[u] += 1;
+                    } else {
+                        let a = rem[u].pop_front().unwrap();
+                        rem[u].push_back(a);
+                        conflicts[u] += 1;
+                    }
+                    granted += 1;
+                }
+            }
+        }
+        (grants, conflicts, rem)
+    }
+
+    #[test]
+    fn prop_coupled_schedule_is_exact_vs_replayed_dual_arbitration() {
+        check("coupled schedule == replayed dual arbitration", 200, |g| {
+            let t = Tcdm::new(&ClusterConfig::default());
+            let lanes = [1 << g.int(0, 3), 1 << g.int(0, 3)];
+            // both priority parities and mid-stream windows
+            let start = g.int(0, 9) as u64;
+            let budget = g.int(0, 40) as u64;
+            let mut stream = |g: &mut crate::util::testutil::Gen| -> VecDeque<u32> {
+                let n = g.int(1, 32);
+                (0..n)
+                    .map(|_| {
+                        if g.bool() {
+                            (g.int(0, 8) * 4) as u32
+                        } else {
+                            (g.int(0, 1 << 12) * 4) as u32
+                        }
+                    })
+                    .collect()
+            };
+            let a = stream(g);
+            let b = stream(g);
+            // a scalar reservation on the first cycle, sometimes
+            let mut reserved = vec![false; 16];
+            if g.bool() {
+                reserved[g.int(0, 15)] = true;
+            }
+            let s = t.coupled_schedule([&a, &b], lanes, start, budget, &reserved);
+            assert!(s.cycles <= budget);
+            assert!(
+                !s.remaining[0].is_empty() && !s.remaining[1].is_empty(),
+                "schedule must stop before either stream's drain cycle"
+            );
+            let mut replay = Tcdm::new(&ClusterConfig::default());
+            let (grants, conflicts, rem) =
+                replay_coupled_cycles(&mut replay, [&a, &b], lanes, start, s.cycles, &reserved);
+            assert_eq!(rem, s.remaining, "a={a:?} b={b:?} lanes={lanes:?} start={start}");
+            assert_eq!((grants, conflicts), (s.grants, s.conflicts));
+            // bulk-applying the schedule reproduces the replayed stats
+            let mut bulk = Tcdm::new(&ClusterConfig::default());
+            bulk.apply_coupled(&s);
+            assert_eq!(bulk.stats, replay.stats);
+        });
+    }
+
+    #[test]
+    fn coupled_rotating_priority_alternates_same_bank_grants() {
+        // Both streams broadcast the same bank: only the priority winner
+        // grants each cycle, and the winner rotates with cycle parity.
+        let t = tcdm();
+        let a: VecDeque<u32> = vec![256u32; 8].into();
+        let b: VecDeque<u32> = vec![256u32; 8].into();
+        let even = t.coupled_schedule([&a, &b], [4, 4], 0, 1, &[]);
+        assert_eq!(even.grants, [1, 0], "even start: unit 0 has priority");
+        let odd = t.coupled_schedule([&a, &b], [4, 4], 1, 1, &[]);
+        assert_eq!(odd.grants, [0, 1], "odd start: unit 1 has priority");
+        // over two cycles the grant alternates, one per cycle
+        let two = t.coupled_schedule([&a, &b], [4, 4], 0, 2, &[]);
+        assert_eq!(two.grants, [1, 1]);
+        assert_eq!(two.remaining[0].len() + two.remaining[1].len(), 14);
+    }
+
+    #[test]
+    fn reserved_first_cycle_blocks_scalar_granted_banks() {
+        // A scalar grant holds the broadcast bank for the window's first
+        // cycle: every lane loses it, adding one cycle of pure rotation
+        // ahead of the unreserved schedule.
+        let t = tcdm();
+        let pending: VecDeque<u32> = vec![256u32; 5].into();
+        let mut reserved = vec![false; 16];
+        reserved[t.bank_of(256)] = true;
+        let plain = t.conflict_schedule(&pending, 4, u64::MAX);
+        let seeded = t.conflict_schedule_reserved(&pending, 4, u64::MAX, &reserved);
+        assert_eq!(seeded.cycles, plain.cycles + 1);
+        assert_eq!(seeded.grants, plain.grants);
+        assert_eq!(seeded.conflicts, plain.conflicts + 4);
+    }
+
+    #[test]
+    fn reserved_bank_off_the_stream_keeps_the_closed_form() {
+        // Unit-stride words 0..8 never touch bank 15; reserving it must
+        // not perturb the arithmetic fast path.
+        let t = tcdm();
+        let pending: VecDeque<u32> = (0..8u32).map(|w| w * 4).collect();
+        let mut reserved = vec![false; 16];
+        reserved[15] = true;
+        assert_eq!(
+            t.conflict_schedule_reserved(&pending, 4, u64::MAX, &reserved),
+            t.conflict_schedule(&pending, 4, u64::MAX)
+        );
     }
 
     #[test]

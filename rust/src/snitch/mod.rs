@@ -161,7 +161,12 @@ impl Snitch {
         match self.state {
             CoreState::Halted => None,
             // Executing and memory-retry states touch shared resources
-            // (icache, TCDM, dispatch) every cycle: never skip past them.
+            // (icache, TCDM, dispatch) every cycle: never skip past them
+            // blindly. `Ready` genuinely pins the loop; a `WaitMem`
+            // retry is a single TCDM access the cluster can co-simulate
+            // (`Cluster::try_mem_fast_forward` resolves it against the
+            // same-cycle bank schedule and takes
+            // [`Self::mem_grant_horizon`] as the core's real horizon).
             CoreState::Ready | CoreState::WaitMem { .. } => Some(now),
             CoreState::Stall(n) | CoreState::FetchStall(n) => {
                 Some(now + n.saturating_sub(1))
@@ -197,6 +202,24 @@ impl Snitch {
             CoreState::WaitModeSwitch { draining: false, remaining, .. } => {
                 Some(now + remaining.saturating_sub(1))
             }
+        }
+    }
+
+    /// Exact completion horizon for a `WaitMem` retry that *wins* its
+    /// bank in cycle `now`: the first later cycle at which stepping the
+    /// core does anything beyond a linear `Stall` countdown. A granted
+    /// store (or a zero-latency load) calls `advance` during `now` and
+    /// executes its next instruction at `now + 1`; a granted load parks
+    /// in `Stall(lat_tcdm)` during `now`, whose countdown-exhaustion
+    /// event lands at `now + lat_tcdm`. The cluster uses this to
+    /// include scalar TCDM requesters in a fast-forward window instead
+    /// of pinning the horizon at `now` (a retry that *loses* its bank
+    /// simply retries at `now + 1`).
+    pub fn mem_grant_horizon(&self, now: u64, is_store: bool) -> u64 {
+        if is_store || self.lat_tcdm == 0 {
+            now + 1
+        } else {
+            now + self.lat_tcdm
         }
     }
 

@@ -68,10 +68,9 @@ struct LsuActive {
     /// Bank-set bitmask of the op's addresses, folded lazily on first
     /// use by [`SpatzUnit::lsu_bank_mask`] and cached for the op's
     /// lifetime — `pending` only shrinks, so the mask stays a
-    /// conservative superset. The cluster's coupled-LSU check reads it
-    /// every non-skippable cycle; folding the deque each time would
-    /// cost O(stream) per cycle on exactly the windows that cannot be
-    /// skipped.
+    /// conservative superset. The cluster's coupled-LSU classification
+    /// reads it on every fast-forward window entry; folding the deque
+    /// each time would cost O(stream) per entry.
     bank_mask: Option<u128>,
 }
 
@@ -144,9 +143,10 @@ impl SpatzUnit {
     }
 
     /// True while a memory op is streaming through the LSU (the unit
-    /// then arbitrates TCDM banks every cycle; the cluster either
-    /// bulk-applies a [`crate::mem::ConflictSchedule`] for the window or
-    /// replays it per cycle in the coupled cases).
+    /// then arbitrates TCDM banks every cycle; the cluster bulk-applies
+    /// a [`crate::mem::ConflictSchedule`] for solo/disjoint windows and
+    /// a [`crate::mem::CoupledSchedule`] when both LSUs contend on
+    /// overlapping bank sets).
     pub fn lsu_active(&self) -> bool {
         self.lsu.is_some()
     }
@@ -169,7 +169,9 @@ impl SpatzUnit {
     /// op and cached (conservative — the pending stream only shrinks).
     /// `None` when no op is active or the bank count exceeds the mask
     /// width (treat as potentially-overlapping). The cluster uses two
-    /// of these to decide the coupled-LSU fallback in O(1) per cycle.
+    /// of these to classify a dual-LSU window as bank-disjoint
+    /// (independent schedules) or coupled (co-simulated schedule) in
+    /// O(1) per window.
     pub fn lsu_bank_mask(&mut self, tcdm: &Tcdm) -> Option<u128> {
         let active = self.lsu.as_mut()?;
         if active.bank_mask.is_none() {

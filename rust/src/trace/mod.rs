@@ -166,7 +166,7 @@ fn render_record(rec: &Record) -> String {
         Kind::TcdmSpan => format!(
             "unit{} tcdm span grants={} conflicts={} width={}",
             rec.who,
-            rec.b,
+            perf::tcdm_span_grants(rec),
             rec.c,
             rec.d
         ),

@@ -66,7 +66,9 @@ pub enum Kind {
     /// `who`=[`WHO_CLUSTER`], `b`=granted accesses, `c`=conflict replays.
     TcdmCycle = 5,
     /// Closed-form TCDM window applied under LSU fast-forward (span).
-    /// `who`=unit, `b`=grants, `c`=conflicts, `d`=width in cycles.
+    /// `who`=unit, `a`/`b`=grants as a 48-bit high/low split
+    /// (saturating; decode with [`tcdm_span_grants`]), `c`=conflicts,
+    /// `d`=width in cycles.
     TcdmSpan = 6,
     /// One DMA staging burst. `who`=[`WHO_CLUSTER`], `b`=bytes,
     /// `c`=cycles.
@@ -159,16 +161,32 @@ pub mod reason {
 pub mod skip {
     /// Event-horizon idle skip (no core pinning `now`).
     pub const IDLE: u16 = 1;
-    /// Closed-form LSU conflict-schedule window.
+    /// Closed-form LSU conflict-schedule window (solo or bank-disjoint
+    /// streams).
     pub const LSU: u16 = 2;
+    /// Coupled dual-LSU window: both streams co-simulated against the
+    /// shared banks (`Tcdm::coupled_schedule`).
+    pub const LSU_COUPLED: u16 = 3;
+    /// Scalar memory window: `WaitMem` retries resolved in closed form
+    /// with no LSU in flight.
+    pub const MEM: u16 = 4;
 
     pub fn name(code: u16) -> &'static str {
         match code {
             IDLE => "idle",
             LSU => "lsu",
+            LSU_COUPLED => "lsu-coupled",
+            MEM => "mem",
             _ => "unknown",
         }
     }
+}
+
+/// Decode a [`Kind::TcdmSpan`] record's grant count from its 48-bit
+/// `a`/`b` high/low split (the emitter saturates at `2^48 - 1`, so a
+/// decoded all-ones value means "at least this many").
+pub fn tcdm_span_grants(rec: &Record) -> u64 {
+    ((rec.a as u64) << 32) | rec.b as u64
 }
 
 /// Scalar instruction class codes (`Record::a` of

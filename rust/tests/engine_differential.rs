@@ -398,3 +398,90 @@ fn watchdog_trips_identically_on_a_true_deadlock() {
     assert_eq!(fast, naive);
     assert_eq!(fast.1 .0, 5000, "trip cycle must be start + max_cycles");
 }
+
+/// FFT is the paper's fine-grained-sync headline: gather-heavy butterfly
+/// stages with barriers between them, exactly the phases that used to
+/// pin the fast engine to per-cycle replay. The engines must agree
+/// byte-for-byte, and the fast engine must cover the run in fewer than
+/// half as many steps as it simulates cycles.
+#[test]
+fn fft_fast_forwards_under_half_steps() {
+    let run = |engine: EngineKind| {
+        let mut cfg = SimConfig::spatzformer();
+        cfg.engine = engine;
+        let inst =
+            KernelId::Fft.build(&cfg.cluster, spatzformer::kernels::Deployment::SplitDual, 1);
+        let mut cl = Cluster::new(cfg).unwrap();
+        let (m, out) = spatzformer::kernels::execute(&mut cl, &inst).unwrap();
+        (m, out, cl.steps_executed())
+    };
+    let fast = run(EngineKind::Fast);
+    let naive = run(EngineKind::Naive);
+    assert_eq!((&fast.0, &fast.1), (&naive.0, &naive.1), "fft diverged between engines");
+    assert!(
+        fast.2 * 2 < fast.0.cycles,
+        "fft must fast-forward most of its cycles: {} steps over {} cycles",
+        fast.2,
+        fast.0.cycles
+    );
+}
+
+/// Overlapping-bank dual gathers plus scalar `WaitMem` traffic: both
+/// LSUs broadcast-gather through the *same* bank (the coupled co-sim
+/// path) while both scalar cores issue multi-cycle TCDM loads
+/// (`tcdm_latency > 1`, the scalar memory-window path). The engines
+/// must stay byte-identical, and the fast engine must cover the run in
+/// fewer than half as many steps as it simulates cycles — i.e. neither
+/// class may fall back to per-cycle replay.
+#[test]
+fn coupled_gathers_with_scalar_waitmem_fast_forward_under_half_steps() {
+    let mk = |name: &str, idx_base: u32, out: u32| {
+        let mut p = Program::new(name);
+        for _ in 0..8 {
+            p.scalar(ScalarOp::Load { addr: 0x1000 });
+            p.scalar(ScalarOp::Alu);
+        }
+        p.vector(VectorOp::SetVl { avl: 64, ew: ElemWidth::E32, lmul: Lmul::M8 });
+        p.vector(VectorOp::Load { vd: VReg(8), base: idx_base, stride: 1 });
+        // every index names the same word: both units hammer one bank
+        p.vector(VectorOp::LoadIndexed { vd: VReg(16), base: 0, vidx: VReg(8) });
+        p.vector(VectorOp::Store { vs: VReg(16), base: out, stride: 1 });
+        p.push(Instr::Fence);
+        for _ in 0..8 {
+            p.scalar(ScalarOp::Load { addr: 0x1200 });
+            p.scalar(ScalarOp::Alu);
+        }
+        p.push(Instr::Halt);
+        p
+    };
+    let programs = [mk("coupled-wm0", 0x2000, 0x6000), mk("coupled-wm1", 0x2400, 0x7000)];
+    let run = |engine: EngineKind| {
+        let mut cfg = SimConfig::spatzformer();
+        cfg.engine = engine;
+        cfg.cluster.tcdm_latency = 3;
+        let mut cl = Cluster::new(cfg).unwrap();
+        cl.stage_f32(0, &[0.0f32; 256]);
+        cl.stage_f32(1024, &[7.25]);
+        cl.stage_u32(0x2000, &[1024u32; 64]);
+        cl.stage_u32(0x2400, &[1024u32; 64]);
+        cl.load_programs([programs[0].clone(), programs[1].clone()]).unwrap();
+        cl.run().unwrap();
+        // one span covering both output regions (0x6000.. and 0x7000..)
+        (fingerprint(&cl, 0x6000, 1088), cl.tcdm.stats.clone(), cl.steps_executed())
+    };
+    let fast = run(EngineKind::Fast);
+    let naive = run(EngineKind::Naive);
+    assert_eq!((&fast.0, &fast.1), (&naive.0, &naive.1), "engines diverged");
+    let out = &fast.0 .2;
+    assert!(out[..64].iter().all(|&b| f32::from_bits(b) == 7.25), "core 0 gather output");
+    assert!(out[1024..].iter().all(|&b| f32::from_bits(b) == 7.25), "core 1 gather output");
+    let cycles = fast.0 .0;
+    assert!(
+        fast.2 * 2 < cycles,
+        "fast engine must cover coupled + scalar-mem phases in bulk: \
+         {} steps over {} cycles",
+        fast.2,
+        cycles
+    );
+    assert!(fast.2 < naive.2, "naive must replay per cycle ({} vs {})", fast.2, naive.2);
+}

@@ -6,7 +6,8 @@
 //! spatzformer trace query t.sptz [--subsystem tcdm] [--from 0 --to 5000] [--json]
 //! spatzformer fleet --workers 8 --jobs 256 --seed 7 [--scenario storm] [--no-cache]
 //! spatzformer serve --addr 127.0.0.1:9738 --workers 4 --queue-depth 256
-//! spatzformer loadgen --addr 127.0.0.1:9738 --clients 4 --requests 32 [--shutdown]
+//! spatzformer route --addr 127.0.0.1:9800 --backend 127.0.0.1:9738 --backend 127.0.0.1:9739
+//! spatzformer loadgen --addr 127.0.0.1:9738 --clients 4 --requests 32 [--rate R] [--shutdown]
 //! spatzformer bench fig2-perf|fig2-energy|fig2-mixed|fig2-fleet|area|fmax|all
 //! spatzformer ppa
 //! spatzformer verify [--artifacts DIR]
@@ -39,9 +40,11 @@ COMMANDS:
            [--jobs M] [--no-cache] [--no-compile-cache]
   serve    run spatzd, the resident simulation service (newline-delimited
            JSON over TCP) [--addr HOST:PORT] [--workers N] [--queue-depth D]
+  route    run a digest-affinity shard router in front of N spatzd backends
+           --backend HOST:PORT ... [--addr HOST:PORT]
   loadgen  replay a deterministic request mix against a running spatzd
            [--addr HOST:PORT] [--clients C] [--requests R] [--scenario S]
-           [--smoke] [--shutdown]
+           [--rate R] [--label L] [--smoke] [--shutdown]
   bench    regenerate a paper artifact     <fig2-perf|fig2-energy|fig2-mixed|fig2-fleet|area|fmax|all>
   ppa      print the area/frequency model
   verify   cross-check all kernels vs the XLA artifacts [--artifacts DIR]
@@ -78,11 +81,22 @@ SERVE OPTIONS:
   --workers <N>                   worker threads / simulated clusters (default: server.workers, 0 = auto)
   --queue-depth <D>               bounded submission-queue depth (full => explicit 429 reject)
 
+ROUTE OPTIONS:
+  --addr <host:port>              frontend listen address (default: server.addr; port 0 = ephemeral)
+  --backend <host:port>           one spatzd backend (repeatable; required at least once);
+                                  submits shard by the FNV-1a result-cache digest, so
+                                  repeated jobs re-hit the backend that cached them
+
 LOADGEN OPTIONS:
-  --addr <host:port>              target daemon (default: server.addr)
+  --addr <host:port>              target daemon or router (default: server.addr)
   --clients <C>                   concurrent connections (default 4)
   --requests <R>                  requests per client (default 32)
   --scenario <name>               request mix generator (default storm)
+  --rate <R>                      open-loop mode: offered load in requests/s total,
+                                  seeded-Poisson arrivals, pipelined tagged sends,
+                                  latency from intended arrival (default: closed loop)
+  --label <L>                     key the --json report \"serve.<L>.c<clients>\" instead
+                                  of \"serve.c<clients>\" (e.g. router, openloop)
   --smoke                         tiny deterministic run (2 clients x 6 requests)
   --shutdown                      send {\"op\":\"shutdown\"} after the run
   --json <path>                   also write the report (jobs/s, p50/p95/p99, reject
@@ -463,6 +477,22 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_route(args: &Args) -> anyhow::Result<()> {
+    let cfg = build_config(args)?;
+    let opts = server::router::RouterOptions {
+        addr: args.get("addr").unwrap_or(cfg.server.addr.as_str()).to_string(),
+        backends: args.get_all("backend").iter().map(|s| s.to_string()).collect(),
+    };
+    let running = server::router::start(cfg, opts)?;
+    // same contract as spatzd's line: scripts parse the ephemeral port
+    println!("spatzd router listening on {}", running.addr());
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+    running.wait()?;
+    println!("spatzd router stopped");
+    Ok(())
+}
+
 fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
     let cfg = build_config(args)?;
     let smoke = args.get("smoke").is_some();
@@ -494,16 +524,21 @@ fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
         opts.scenario = ScenarioKind::from_name(name)
             .ok_or_else(|| anyhow::anyhow!("unknown scenario: {name} (see `spatzformer help`)"))?;
     }
+    if let Some(r) = args.get("rate") {
+        let rate: f64 = r.parse().map_err(|_| anyhow::anyhow!("bad --rate: {r}"))?;
+        anyhow::ensure!(rate > 0.0, "--rate must be positive");
+        opts.rate = Some(rate);
+    }
     let report = loadgen::run(&opts)?;
     println!("{}", report.render());
     if let Some(path) = args.get("json") {
-        let doc = crate::util::Json::Obj(vec![(
-            "serve".to_string(),
-            crate::util::Json::Obj(vec![(
-                format!("c{}", report.clients),
-                report.to_json(),
-            )]),
-        )]);
+        let key = format!("c{}", report.clients);
+        let keyed = crate::util::Json::Obj(vec![(key, report.to_json())]);
+        let serve = match args.get("label") {
+            Some(label) => crate::util::Json::Obj(vec![(label.to_string(), keyed)]),
+            None => keyed,
+        };
+        let doc = crate::util::Json::Obj(vec![("serve".to_string(), serve)]);
         std::fs::write(path, doc.encode() + "\n")
             .map_err(|e| anyhow::anyhow!("cannot write --json {path}: {e}"))?;
         println!("wrote tracked numbers to {path}");
@@ -642,6 +677,7 @@ pub fn main() -> i32 {
         "trace" => cmd_trace(&args),
         "fleet" => cmd_fleet(&args),
         "serve" => cmd_serve(&args),
+        "route" => cmd_route(&args),
         "loadgen" => cmd_loadgen(&args),
         "bench" => cmd_bench(&args),
         "ppa" => cmd_ppa(&args),
@@ -692,7 +728,26 @@ mod tests {
     #[test]
     fn missing_value_is_an_error() {
         let v = vec!["run".to_string(), "--kernel".to_string()];
-        assert!(Args::parse(&v).is_err());
+        assert!(Args::parse_with(&v, BOOL_FLAGS).is_err());
+    }
+
+    #[test]
+    fn route_collects_repeated_backends() {
+        let a = args(&[
+            "route",
+            "--addr",
+            "127.0.0.1:0",
+            "--backend",
+            "127.0.0.1:9738",
+            "--backend",
+            "127.0.0.1:9739",
+        ]);
+        assert_eq!(a.get_all("backend"), vec!["127.0.0.1:9738", "127.0.0.1:9739"]);
+        assert_eq!(a.get("addr"), Some("127.0.0.1:0"));
+        // loadgen's open-loop knobs parse as valued options
+        let a = args(&["loadgen", "--rate", "2000", "--label", "openloop"]);
+        assert_eq!(a.get("rate"), Some("2000"));
+        assert_eq!(a.get("label"), Some("openloop"));
     }
 
     #[test]

@@ -350,6 +350,16 @@ pub struct ServerConfig {
     /// Worker threads, one long-lived simulated cluster each (0 = one
     /// per available hardware thread).
     pub workers: usize,
+    /// Largest `batch` that may request `"reports":true` (full per-job
+    /// reports inline in the response). Bounds response size the same
+    /// way `queue_depth` bounds queue memory; 0 disables inline reports
+    /// entirely. Oversized requests are refused with an explicit `429`
+    /// before any job is generated.
+    pub batch_report_limit: usize,
+    /// Graceful-shutdown drain deadline, milliseconds: after a
+    /// `shutdown` request the daemon keeps answering already-admitted
+    /// jobs for at most this long before exiting anyway.
+    pub drain_ms: u64,
 }
 
 impl Default for ServerConfig {
@@ -358,6 +368,8 @@ impl Default for ServerConfig {
             addr: "127.0.0.1:9738".to_string(),
             queue_depth: 256,
             workers: 0,
+            batch_report_limit: 32,
+            drain_ms: 5000,
         }
     }
 }
@@ -517,6 +529,12 @@ impl SimConfig {
                 self.server.queue_depth = value.as_usize().ok_or_else(bad)?
             }
             "server.workers" => self.server.workers = value.as_usize().ok_or_else(bad)?,
+            "server.batch_report_limit" => {
+                self.server.batch_report_limit = value.as_usize().ok_or_else(bad)?
+            }
+            "server.drain_ms" => {
+                self.server.drain_ms = value.as_usize().ok_or_else(bad)? as u64
+            }
             "sim.engine" => {
                 self.engine = value
                     .as_str()
@@ -628,12 +646,18 @@ mod tests {
         let mut cfg = SimConfig::default();
         assert_eq!(cfg.server.workers, 0); // auto
         assert!(cfg.server.queue_depth >= 1);
+        assert_eq!(cfg.server.batch_report_limit, 32);
+        assert_eq!(cfg.server.drain_ms, 5000);
         cfg.apply("server.addr", &Value::Str("0.0.0.0:7000".into())).unwrap();
         cfg.apply("server.queue_depth", &Value::Int(32)).unwrap();
         cfg.apply("server.workers", &Value::Int(4)).unwrap();
+        cfg.apply("server.batch_report_limit", &Value::Int(8)).unwrap();
+        cfg.apply("server.drain_ms", &Value::Int(250)).unwrap();
         assert_eq!(cfg.server.addr, "0.0.0.0:7000");
         assert_eq!(cfg.server.queue_depth, 32);
         assert_eq!(cfg.server.workers, 4);
+        assert_eq!(cfg.server.batch_report_limit, 8);
+        assert_eq!(cfg.server.drain_ms, 250);
         assert!(cfg.apply("server.addr", &Value::Int(1)).is_err());
         assert!(cfg.apply("server.bogus", &Value::Int(1)).is_err());
         cfg.server.queue_depth = 0;

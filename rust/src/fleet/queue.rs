@@ -65,10 +65,17 @@ impl fmt::Display for SubmitError {
 
 impl std::error::Error for SubmitError {}
 
+/// What a worker calls when an admitted job finishes (success or
+/// rendered failure). Boxed so submitters choose their own delivery:
+/// [`JobReceipt`]s wrap an `mpsc` channel, while the server's readiness
+/// loop posts tagged completions into its single event channel instead
+/// of parking a thread per job.
+pub type DoneFn = Box<dyn FnOnce(Result<JobReport, String>) + Send + 'static>;
+
 /// One admitted job awaiting a worker.
 struct Ticket {
     fj: FleetJob,
-    tx: mpsc::Sender<Result<JobReport, String>>,
+    done: DoneFn,
 }
 
 struct QueueState {
@@ -162,6 +169,44 @@ impl JobQueue {
         &self,
         jobs: Vec<FleetJob>,
     ) -> Result<Vec<JobReceipt>, SubmitError> {
+        let mut receipts: Vec<JobReceipt> = Vec::with_capacity(jobs.len());
+        let mut senders: Vec<mpsc::Sender<Result<JobReport, String>>> =
+            Vec::with_capacity(jobs.len());
+        for _ in 0..jobs.len() {
+            let (tx, rx) = mpsc::channel();
+            receipts.push(JobReceipt { rx });
+            senders.push(tx);
+        }
+        let mut senders = senders.into_iter();
+        self.try_submit_batch_with(jobs, |_| {
+            let tx = senders.next().expect("one sender per admitted job");
+            // a submitter that gave up (dropped its receipt) is fine
+            Box::new(move |result| {
+                let _ = tx.send(result);
+            })
+        })?;
+        Ok(receipts)
+    }
+
+    /// Admit one job with a custom completion callback instead of a
+    /// [`JobReceipt`] — the non-parking form the server's readiness loop
+    /// uses (the callback runs on the worker thread that ran the job).
+    pub fn try_submit_with(&self, fj: FleetJob, done: DoneFn) -> Result<(), SubmitError> {
+        let mut done = Some(done);
+        self.try_submit_batch_with(vec![fj], |_| {
+            done.take().expect("one job admits one callback")
+        })
+    }
+
+    /// All-or-nothing admission with per-job completion callbacks:
+    /// `make_done(i)` builds the callback for the i-th job of the
+    /// request. Nothing is enqueued (and no callback is taken) when the
+    /// request does not fit.
+    pub fn try_submit_batch_with(
+        &self,
+        jobs: Vec<FleetJob>,
+        mut make_done: impl FnMut(usize) -> DoneFn,
+    ) -> Result<(), SubmitError> {
         let mut st = self.state.lock().expect("job queue poisoned");
         if !st.open {
             return Err(SubmitError::ShuttingDown);
@@ -173,17 +218,12 @@ impl JobQueue {
                 requested: jobs.len(),
             });
         }
-        let receipts: Vec<JobReceipt> = jobs
-            .into_iter()
-            .map(|fj| {
-                let (tx, rx) = mpsc::channel();
-                st.tickets.push_back(Ticket { fj, tx });
-                JobReceipt { rx }
-            })
-            .collect();
+        for (i, fj) in jobs.into_iter().enumerate() {
+            st.tickets.push_back(Ticket { fj, done: make_done(i) });
+        }
         drop(st);
         self.ready.notify_all();
-        Ok(receipts)
+        Ok(())
     }
 
     /// Worker side: block for the next job. `None` means the queue is
@@ -291,6 +331,21 @@ impl WorkerPool {
         self.queue.try_submit_batch(jobs)
     }
 
+    /// Admit one job with a completion callback (see [`JobQueue::try_submit_with`]).
+    pub fn submit_with(&self, fj: FleetJob, done: DoneFn) -> Result<(), SubmitError> {
+        self.queue.try_submit_with(fj, done)
+    }
+
+    /// Atomic batch admission with per-job callbacks
+    /// (see [`JobQueue::try_submit_batch_with`]).
+    pub fn submit_batch_with(
+        &self,
+        jobs: Vec<FleetJob>,
+        make_done: impl FnMut(usize) -> DoneFn,
+    ) -> Result<(), SubmitError> {
+        self.queue.try_submit_batch_with(jobs, make_done)
+    }
+
     /// Close the queue, drain admitted jobs, join the workers and return
     /// their lifetime stats. Idempotent: a second call (or a call racing
     /// another) returns empty stats.
@@ -335,8 +390,7 @@ fn drain(
         stats.jobs += 1;
         queue.in_flight.fetch_sub(1, Ordering::Relaxed);
         queue.completed.fetch_add(1, Ordering::Relaxed);
-        // a submitter that gave up (dropped its receipt) is fine
-        let _ = ticket.tx.send(result.map_err(|e| format!("{e:#}")));
+        (ticket.done)(result.map_err(|e| format!("{e:#}")));
     }
     stats
 }

@@ -9,14 +9,31 @@
 //! shared [`LatencyPercentiles`] shape. Admission-control refusals
 //! (`429`) are counted separately — a load test that overruns the queue
 //! should *see* the explicit rejects, not mistake them for successes.
+//!
+//! **Closed vs open loop.** The default is closed-loop: each client
+//! waits for a response before sending the next request, so offered
+//! load self-throttles to whatever the daemon sustains and queueing
+//! delay hides from the latency numbers (coordinated omission). With
+//! `--rate R` the run is open-loop: arrivals follow a seeded Poisson
+//! process at `R` requests/s total ([`arrival_offsets`] — pure, so the
+//! schedule replays exactly), every request is sent *at its scheduled
+//! time* regardless of outstanding responses (protocol-v2 pipelining,
+//! tags match responses back out of order), and latency is measured
+//! from the **intended** arrival, not the send. Past saturation an
+//! open-loop run shows exactly what the issue demands: explicit `429`
+//! rejects and honest queueing-inflated percentiles, never a hang.
 
 use crate::config::ArchKind;
 use crate::fleet::{scenario, LatencyPercentiles, ScenarioKind};
 use crate::server::proto::{self, Request};
-use crate::util::Json;
+use crate::util::{Json, SplitMix64};
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
+
+/// Distinguishes the arrival-schedule PRNG stream from the job-content
+/// stream: the same `--seed` drives both, but they must not correlate.
+const ARRIVAL_SALT: u64 = 0xA5A5_5A5A_C3C3_3C3C;
 
 /// Knobs of one loadgen run.
 #[derive(Debug, Clone)]
@@ -30,6 +47,10 @@ pub struct LoadgenOptions {
     /// Architecture the target daemon simulates (bounds which jobs the
     /// generator may emit — merge-mode jobs never target a baseline).
     pub arch: ArchKind,
+    /// Open-loop mode: total offered load in requests/s across all
+    /// clients (seeded-Poisson arrivals, pipelined sends, latency from
+    /// intended arrival time). `None` = classic closed-loop replay.
+    pub rate: Option<f64>,
     /// Send `{"op":"shutdown"}` after the measurement (CI smoke uses
     /// this to stop the daemon it started).
     pub send_shutdown: bool,
@@ -44,6 +65,7 @@ impl Default for LoadgenOptions {
             seed: 0xC0FFEE,
             scenario: ScenarioKind::Storm,
             arch: ArchKind::Spatzformer,
+            rate: None,
             send_shutdown: false,
         }
     }
@@ -53,6 +75,8 @@ impl Default for LoadgenOptions {
 #[derive(Debug, Clone)]
 pub struct LoadgenReport {
     pub clients: usize,
+    /// Offered open-loop rate (requests/s, total); `None` = closed-loop.
+    pub rate: Option<f64>,
     pub sent: u64,
     pub ok: u64,
     /// Explicit admission-control rejects (`429`/`503`).
@@ -81,8 +105,11 @@ impl LoadgenReport {
         let latency = |f: fn(&LatencyPercentiles) -> f64| {
             Json::opt(self.latency.as_ref(), |l| Json::num(f(l)))
         };
+        let mode = if self.rate.is_some() { "open-loop" } else { "closed-loop" };
         Json::Obj(vec![
             ("clients".to_string(), Json::u64_lossless(self.clients as u64)),
+            ("mode".to_string(), Json::str(mode)),
+            ("rate_req_per_sec".to_string(), Json::opt(self.rate.as_ref(), |&r| Json::num(r))),
             ("sent".to_string(), Json::u64_lossless(self.sent)),
             ("ok".to_string(), Json::u64_lossless(self.ok)),
             ("rejected".to_string(), Json::u64_lossless(self.rejected)),
@@ -98,11 +125,16 @@ impl LoadgenReport {
     pub fn render(&self) -> String {
         format!(
             "clients        : {}\n\
+             mode           : {}\n\
              requests       : {} sent, {} ok, {} rejected, {} errors\n\
              wall           : {:.1} ms\n\
              jobs/s         : {:.1}\n\
              latency        : {}",
             self.clients,
+            self.rate.map_or_else(
+                || "closed-loop".to_string(),
+                |r| format!("open-loop at {r:.1} req/s")
+            ),
             self.sent,
             self.ok,
             self.rejected,
@@ -136,6 +168,54 @@ pub fn request_lines(
                 job: fj.job.clone(),
                 seed: fj.seed,
             })
+        })
+        .collect()
+}
+
+/// The same deterministic stream as [`request_lines`], but each line is
+/// tagged with its index (`"id": 0..requests`) so an open-loop client
+/// can pipeline them and match the out-of-order responses back.
+pub fn tagged_request_lines(
+    arch: ArchKind,
+    kind: ScenarioKind,
+    seed: u64,
+    client: usize,
+    requests: usize,
+) -> Vec<String> {
+    let client_seed = seed ^ (client as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let s = scenario::generate(kind, arch, client_seed, requests);
+    s.jobs
+        .iter()
+        .enumerate()
+        .map(|(i, fj)| {
+            proto::encode_request_tagged(
+                &Request::Submit { job: fj.job.clone(), seed: fj.seed },
+                &Json::u64_lossless(i as u64),
+            )
+        })
+        .collect()
+}
+
+/// The seeded-Poisson arrival schedule of client `client`: `requests`
+/// offsets from the run's start, cumulative sums of exponential
+/// inter-arrival gaps at `rate_per_client` requests/s. Pure — same
+/// `(seed, client)` replays the identical schedule, which is what makes
+/// an open-loop run a *measurement* instead of an anecdote.
+pub fn arrival_offsets(
+    seed: u64,
+    client: usize,
+    requests: usize,
+    rate_per_client: f64,
+) -> Vec<Duration> {
+    assert!(rate_per_client > 0.0, "open-loop rate must be positive");
+    let client_seed = seed ^ (client as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let mut rng = SplitMix64::new(client_seed ^ ARRIVAL_SALT);
+    let mut t = 0.0f64;
+    (0..requests)
+        .map(|_| {
+            // inverse-CDF exponential; 1-u keeps ln's argument in (0,1]
+            t += -(1.0 - rng.next_f64()).ln() / rate_per_client;
+            Duration::from_secs_f64(t)
         })
         .collect()
 }
@@ -195,12 +275,101 @@ fn run_client(addr: &str, lines: &[String]) -> ClientOutcome {
     out
 }
 
+/// Replay one client's open-loop schedule: pipeline every request at
+/// its intended arrival time, match tagged responses back out of order,
+/// measure latency from the *intended* arrival (not the send — that is
+/// the whole point of open loop).
+fn run_client_open(
+    addr: &str,
+    lines: &[String],
+    offsets: &[Duration],
+    start: Instant,
+) -> ClientOutcome {
+    let n = lines.len();
+    let mut out = ClientOutcome::default();
+    let stream = match TcpStream::connect(addr) {
+        Ok(s) => s,
+        Err(_) => {
+            out.errors = n as u64;
+            return out;
+        }
+    };
+    let Ok(read_half) = stream.try_clone() else {
+        out.errors = n as u64;
+        return out;
+    };
+    // past-saturation safety net: a daemon that stops answering must
+    // surface as errors, never as a hung load test
+    let _ = read_half.set_read_timeout(Some(Duration::from_secs(30)));
+    std::thread::scope(|s| {
+        let reader = s.spawn(move || {
+            let mut reader = BufReader::new(read_half);
+            let mut got = ClientOutcome::default();
+            let mut answered = 0usize;
+            while answered < n {
+                let mut line = String::new();
+                match reader.read_line(&mut line) {
+                    Ok(len) if len > 0 => {}
+                    _ => break,
+                }
+                answered += 1;
+                let now = Instant::now();
+                match Json::parse(line.trim()) {
+                    Ok(j) if j.get("ok").and_then(Json::as_bool) == Some(true) => {
+                        got.ok += 1;
+                        let idx = j.get("id").and_then(Json::as_u64).map(|v| v as usize);
+                        if let Some(i) = idx.filter(|&i| i < n) {
+                            let intended = start + offsets[i];
+                            got.latencies_ms
+                                .push(now.saturating_duration_since(intended).as_secs_f64() * 1e3);
+                        }
+                    }
+                    Ok(j)
+                        if matches!(j.get("code").and_then(Json::as_u64), Some(429) | Some(503)) =>
+                    {
+                        got.rejected += 1;
+                    }
+                    _ => got.errors += 1,
+                }
+            }
+            got.errors += (n - answered) as u64;
+            got
+        });
+        let mut writer = BufWriter::new(stream);
+        for (i, line) in lines.iter().enumerate() {
+            let target = start + offsets[i];
+            let now = Instant::now();
+            if target > now {
+                std::thread::sleep(target - now);
+            }
+            if writeln!(writer, "{line}").is_err() || writer.flush().is_err() {
+                break; // reader's timeout accounts for the unanswered tail
+            }
+        }
+        out = reader.join().expect("loadgen reader panicked");
+    });
+    out
+}
+
 /// Run the full load test; optionally stop the daemon afterwards.
 pub fn run(opts: &LoadgenOptions) -> anyhow::Result<LoadgenReport> {
     anyhow::ensure!(opts.clients >= 1, "loadgen needs at least one client");
+    if let Some(rate) = opts.rate {
+        anyhow::ensure!(rate > 0.0, "--rate must be positive");
+    }
+    let open_loop = opts.rate.map(|rate| {
+        let per_client = rate / opts.clients as f64;
+        (0..opts.clients)
+            .map(|c| arrival_offsets(opts.seed, c, opts.requests, per_client))
+            .collect::<Vec<_>>()
+    });
     let streams: Vec<Vec<String>> = (0..opts.clients)
         .map(|c| {
-            request_lines(opts.arch, opts.scenario, opts.seed, c, opts.requests)
+            if open_loop.is_some() {
+                tagged_request_lines(opts.arch, opts.scenario, opts.seed, c, opts.requests)
+            } else {
+                request_lines(opts.arch, opts.scenario, opts.seed, c, opts.requests)
+            }
         })
         .collect();
     let t0 = Instant::now();
@@ -208,9 +377,14 @@ pub fn run(opts: &LoadgenOptions) -> anyhow::Result<LoadgenReport> {
     std::thread::scope(|s| {
         let handles: Vec<_> = streams
             .iter()
-            .map(|lines| {
+            .enumerate()
+            .map(|(c, lines)| {
                 let addr = opts.addr.as_str();
-                s.spawn(move || run_client(addr, lines))
+                let offsets = open_loop.as_ref().map(|o| o[c].as_slice());
+                s.spawn(move || match offsets {
+                    Some(offsets) => run_client_open(addr, lines, offsets, t0),
+                    None => run_client(addr, lines),
+                })
             })
             .collect();
         for h in handles {
@@ -227,6 +401,7 @@ pub fn run(opts: &LoadgenOptions) -> anyhow::Result<LoadgenReport> {
     }
     Ok(LoadgenReport {
         clients: opts.clients,
+        rate: opts.rate,
         sent: (opts.clients * opts.requests) as u64,
         ok: outcomes.iter().map(|o| o.ok).sum(),
         rejected: outcomes.iter().map(|o| o.rejected).sum(),
@@ -290,9 +465,41 @@ mod tests {
     }
 
     #[test]
+    fn arrival_schedules_are_pure_increasing_and_seed_sensitive() {
+        let a = arrival_offsets(7, 0, 64, 100.0);
+        let b = arrival_offsets(7, 0, 64, 100.0);
+        assert_eq!(a, b, "same (seed, client, rate) ⇒ identical schedule");
+        assert_eq!(a.len(), 64);
+        assert!(a.windows(2).all(|w| w[0] < w[1]), "offsets strictly increase");
+        assert_ne!(a, arrival_offsets(8, 0, 64, 100.0), "seed changes the schedule");
+        assert_ne!(a, arrival_offsets(7, 1, 64, 100.0), "clients draw distinct schedules");
+        // mean inter-arrival tracks 1/rate (law of large numbers, loose bound)
+        let mean_s = arrival_offsets(7, 0, 4096, 100.0).last().unwrap().as_secs_f64() / 4096.0;
+        assert!((mean_s - 0.01).abs() < 0.002, "mean inter-arrival {mean_s}s vs expected 0.01s");
+        // the arrival stream must not correlate with the job stream: the
+        // salt separates them even though both derive from the same seed
+        assert_ne!(ARRIVAL_SALT, 0);
+    }
+
+    #[test]
+    fn tagged_streams_carry_their_index_and_match_the_untagged_jobs() {
+        let plain = request_lines(ArchKind::Spatzformer, ScenarioKind::Storm, 7, 2, 8);
+        let tagged = tagged_request_lines(ArchKind::Spatzformer, ScenarioKind::Storm, 7, 2, 8);
+        assert_eq!(tagged.len(), plain.len());
+        for (i, (t, p)) in tagged.iter().zip(&plain).enumerate() {
+            let env = proto::parse_envelope(t).unwrap();
+            assert_eq!(env.id, Some(Json::u64_lossless(i as u64)), "{t}");
+            // identical job content: re-encoding the envelope's request
+            // untagged reproduces the closed-loop line
+            assert_eq!(&proto::encode_request(&env.req), p);
+        }
+    }
+
+    #[test]
     fn report_renders_the_headline_numbers() {
         let r = LoadgenReport {
             clients: 2,
+            rate: None,
             sent: 10,
             ok: 8,
             rejected: 1,
@@ -311,6 +518,7 @@ mod tests {
     fn report_json_carries_the_tracked_numbers() {
         let r = LoadgenReport {
             clients: 4,
+            rate: None,
             sent: 12,
             ok: 10,
             rejected: 2,
@@ -327,7 +535,15 @@ mod tests {
         let wire = j.encode();
         assert_eq!(Json::parse(&wire).unwrap(), j);
         // no latency samples -> explicit nulls, not fake zeros
-        let empty = LoadgenReport { latency: None, ..r };
+        let empty = LoadgenReport { latency: None, ..r.clone() };
         assert_eq!(empty.to_json().get("p99_ms"), Some(&Json::Null));
+        // mode and offered rate are recorded, so a bench artifact says
+        // which question it answered
+        assert_eq!(r.to_json().get("mode"), Some(&Json::str("closed-loop")));
+        assert_eq!(r.to_json().get("rate_req_per_sec"), Some(&Json::Null));
+        let open = LoadgenReport { rate: Some(2000.0), ..r };
+        assert_eq!(open.to_json().get("mode"), Some(&Json::str("open-loop")));
+        assert_eq!(open.to_json().get("rate_req_per_sec").and_then(Json::as_f64), Some(2000.0));
+        assert!(open.render().contains("open-loop at 2000.0 req/s"), "{}", open.render());
     }
 }

@@ -2,6 +2,12 @@
 //! latency percentiles, reusing the fleet's [`LatencyPercentiles`] shape
 //! so the daemon, the batch fleet and the `loadgen` client all quote
 //! p50/p95/p99 the same way.
+//!
+//! Latency is tracked in **one bounded window per request class**
+//! ([`OpClass`]): a daemon answering thousands of cheap `status` probes
+//! per second must not wash a few expensive `submit` tails out of a
+//! shared ring, and a batch's wall time (N jobs) is not comparable to a
+//! single submit's anyway.
 
 use crate::fleet::LatencyPercentiles;
 use crate::metrics::Telemetry;
@@ -10,10 +16,52 @@ use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 /// Latency-sample window: percentiles are computed over the most recent
-/// `LATENCY_WINDOW` request latencies. Bounded on purpose — a resident
-/// daemon runs indefinitely, so an unbounded sample Vec would grow (and
-/// the percentile sort would slow) forever.
+/// `LATENCY_WINDOW` latencies *of each request class*. Bounded on
+/// purpose — a resident daemon runs indefinitely, so an unbounded
+/// sample Vec would grow (and the percentile sort would slow) forever.
 const LATENCY_WINDOW: usize = 4096;
+
+/// Which latency window a completed request lands in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpClass {
+    Submit,
+    Batch,
+    Status,
+}
+
+impl OpClass {
+    fn name(self) -> &'static str {
+        match self {
+            OpClass::Submit => "submit",
+            OpClass::Batch => "batch",
+            OpClass::Status => "status",
+        }
+    }
+}
+
+/// A bounded sliding ring of latency samples (milliseconds).
+#[derive(Debug, Default)]
+struct LatencyRing {
+    samples_ms: Vec<f64>,
+    /// Next slot to overwrite once the ring is full.
+    next: usize,
+}
+
+impl LatencyRing {
+    fn push(&mut self, sample_ms: f64) {
+        if self.samples_ms.len() < LATENCY_WINDOW {
+            self.samples_ms.push(sample_ms);
+        } else {
+            let slot = self.next;
+            self.samples_ms[slot] = sample_ms;
+        }
+        self.next = (self.next + 1) % LATENCY_WINDOW;
+    }
+
+    fn percentiles(&self) -> Option<LatencyPercentiles> {
+        LatencyPercentiles::from_samples_ms(&self.samples_ms)
+    }
+}
 
 #[derive(Debug, Default)]
 struct Inner {
@@ -26,12 +74,10 @@ struct Inner {
     rejected: u64,
     /// Requests that failed (`400`/`500`).
     errors: u64,
-    /// Per-request wall-clock latency, milliseconds (submit/batch only —
-    /// status and metrics probes would skew the percentiles). A ring of
-    /// the last [`LATENCY_WINDOW`] samples.
-    latencies_ms: Vec<f64>,
-    /// Next ring slot to overwrite once the window is full.
-    latency_next: usize,
+    /// Per-class request latency rings (see [`OpClass`]).
+    lat_submit: LatencyRing,
+    lat_batch: LatencyRing,
+    lat_status: LatencyRing,
     /// Engine cycles actually stepped across all answered jobs (the
     /// fast engine's stepped-vs-simulated ratio, fleet-wide).
     sim_steps: u64,
@@ -40,6 +86,16 @@ struct Inner {
     trace_records: u64,
     /// Trace records the bounded in-memory ring dropped.
     trace_dropped: u64,
+}
+
+impl Inner {
+    fn ring(&mut self, class: OpClass) -> &mut LatencyRing {
+        match class {
+            OpClass::Submit => &mut self.lat_submit,
+            OpClass::Batch => &mut self.lat_batch,
+            OpClass::Status => &mut self.lat_status,
+        }
+    }
 }
 
 /// Shared request accounting. One mutex is plenty: requests touch it
@@ -59,8 +115,10 @@ pub struct MetricsSnapshot {
     pub jobs_completed: u64,
     pub rejected: u64,
     pub errors: u64,
-    /// Percentiles over the most recent `LATENCY_WINDOW` requests.
-    pub latency: Option<LatencyPercentiles>,
+    /// Per-class percentiles over each class's most recent
+    /// `LATENCY_WINDOW` requests, in [`OpClass`] order
+    /// (submit, batch, status).
+    pub latency: [(OpClass, Option<LatencyPercentiles>); 3],
     /// Engine cycles actually stepped across all answered jobs.
     pub sim_steps: u64,
     /// Perf-trace records emitted across all answered jobs.
@@ -79,16 +137,33 @@ impl MetricsSnapshot {
         self.jobs_completed as f64 / secs
     }
 
-    /// The `metrics` response payload fields.
+    /// One class's percentiles (`None` when that class has no samples).
+    pub fn latency_of(&self, class: OpClass) -> Option<&LatencyPercentiles> {
+        self.latency
+            .iter()
+            .find(|(c, _)| *c == class)
+            .and_then(|(_, l)| l.as_ref())
+    }
+
+    /// The `metrics` response payload fields. `latency_ms` is an object
+    /// keyed by request class, each value the p50/p95/p99 triple or
+    /// `null` when that class has no samples yet.
     pub fn to_json_fields(&self) -> Vec<(String, Json)> {
-        let latency = match &self.latency {
-            Some(l) => Json::Obj(vec![
+        let triple = |l: &LatencyPercentiles| {
+            Json::Obj(vec![
                 ("p50_ms".into(), Json::num(l.p50_ms)),
                 ("p95_ms".into(), Json::num(l.p95_ms)),
                 ("p99_ms".into(), Json::num(l.p99_ms)),
-            ]),
-            None => Json::Null,
+            ])
         };
+        let latency = Json::Obj(
+            self.latency
+                .iter()
+                .map(|(class, l)| {
+                    (class.name().to_string(), Json::opt(l.as_ref(), triple))
+                })
+                .collect(),
+        );
         vec![
             ("uptime_ms".into(), Json::num(self.uptime.as_secs_f64() * 1e3)),
             ("requests".into(), Json::u64_lossless(self.requests)),
@@ -107,12 +182,18 @@ impl MetricsSnapshot {
 
     /// Human-readable block (printed by `spatzformer serve` on exit).
     pub fn render(&self) -> String {
+        let lat = |class: OpClass| {
+            self.latency_of(class)
+                .map_or_else(|| "n/a".to_string(), |l| l.render())
+        };
         format!(
             "uptime         : {:.1} s\n\
              requests       : {} ({} submit, {} batch, {} rejected, {} errors)\n\
              jobs completed : {}\n\
              jobs/s         : {:.1}\n\
-             latency        : {}\n\
+             submit latency : {}\n\
+             batch latency  : {}\n\
+             status latency : {}\n\
              sim steps      : {}\n\
              trace records  : {} ({} dropped from the ring)",
             self.uptime.as_secs_f64(),
@@ -123,8 +204,9 @@ impl MetricsSnapshot {
             self.errors,
             self.jobs_completed,
             self.jobs_per_sec(),
-            self.latency
-                .map_or_else(|| "n/a".to_string(), |l| l.render()),
+            lat(OpClass::Submit),
+            lat(OpClass::Batch),
+            lat(OpClass::Status),
             self.sim_steps,
             self.trace_records,
             self.trace_dropped,
@@ -155,19 +237,12 @@ impl ServerMetrics {
         }
     }
 
-    /// A job-running request finished: record jobs answered + latency
-    /// (into the bounded sliding window).
-    pub fn completed(&self, jobs: u64, latency: Duration) {
+    /// A request of `class` finished: record jobs answered + latency
+    /// (into that class's bounded sliding window).
+    pub fn completed(&self, class: OpClass, jobs: u64, latency: Duration) {
         let mut m = self.lock();
         m.jobs_completed += jobs;
-        let sample = latency.as_secs_f64() * 1e3;
-        if m.latencies_ms.len() < LATENCY_WINDOW {
-            m.latencies_ms.push(sample);
-        } else {
-            let slot = m.latency_next;
-            m.latencies_ms[slot] = sample;
-        }
-        m.latency_next = (m.latency_next + 1) % LATENCY_WINDOW;
+        m.ring(class).push(latency.as_secs_f64() * 1e3);
     }
 
     pub fn rejected(&self) {
@@ -204,7 +279,11 @@ impl ServerMetrics {
             jobs_completed: m.jobs_completed,
             rejected: m.rejected,
             errors: m.errors,
-            latency: LatencyPercentiles::from_samples_ms(&m.latencies_ms),
+            latency: [
+                (OpClass::Submit, m.lat_submit.percentiles()),
+                (OpClass::Batch, m.lat_batch.percentiles()),
+                (OpClass::Status, m.lat_status.percentiles()),
+            ],
             sim_steps: m.sim_steps,
             trace_records: m.trace_records,
             trace_dropped: m.trace_dropped,
@@ -228,8 +307,8 @@ mod tests {
         m.request("submit");
         m.request("batch");
         m.request("status");
-        m.completed(1, Duration::from_millis(2));
-        m.completed(64, Duration::from_millis(40));
+        m.completed(OpClass::Submit, 1, Duration::from_millis(2));
+        m.completed(OpClass::Batch, 64, Duration::from_millis(40));
         m.rejected();
         m.error();
         let s = m.snapshot();
@@ -237,10 +316,29 @@ mod tests {
         assert_eq!((s.submits, s.batches), (1, 1));
         assert_eq!(s.jobs_completed, 65);
         assert_eq!((s.rejected, s.errors), (1, 1));
-        let l = s.latency.unwrap();
-        assert!(l.p50_ms >= 2.0 && l.p99_ms <= 40.0, "{l:?}");
+        let l = s.latency_of(OpClass::Submit).unwrap();
+        assert!(l.p50_ms >= 2.0 && l.p99_ms <= 2.0 + 1e-9, "{l:?}");
         assert!(s.jobs_per_sec() > 0.0);
         assert!(s.render().contains("jobs/s"));
+    }
+
+    #[test]
+    fn latency_windows_are_split_per_class() {
+        let m = ServerMetrics::new();
+        // a flood of sub-millisecond status calls ...
+        for _ in 0..LATENCY_WINDOW {
+            m.completed(OpClass::Status, 0, Duration::from_micros(100));
+        }
+        // ... must not wash out a few slow submits
+        for _ in 0..4 {
+            m.completed(OpClass::Submit, 1, Duration::from_millis(500));
+        }
+        let s = m.snapshot();
+        let submit = s.latency_of(OpClass::Submit).unwrap();
+        assert!(submit.p99_ms >= 500.0, "submit tail survived: {submit:?}");
+        let status = s.latency_of(OpClass::Status).unwrap();
+        assert!(status.p99_ms < 1.0, "{status:?}");
+        assert!(s.latency_of(OpClass::Batch).is_none(), "no batch samples");
     }
 
     #[test]
@@ -248,16 +346,16 @@ mod tests {
         let m = ServerMetrics::new();
         // overfill the window: early 1000 ms samples must be evicted
         for _ in 0..LATENCY_WINDOW {
-            m.completed(1, Duration::from_millis(1000));
+            m.completed(OpClass::Submit, 1, Duration::from_millis(1000));
         }
         for _ in 0..LATENCY_WINDOW {
-            m.completed(1, Duration::from_millis(1));
+            m.completed(OpClass::Submit, 1, Duration::from_millis(1));
         }
         let s = m.snapshot();
         assert_eq!(s.jobs_completed, 2 * LATENCY_WINDOW as u64);
-        let l = s.latency.unwrap();
+        let l = s.latency_of(OpClass::Submit).unwrap();
         assert!(l.p99_ms < 1000.0, "old samples must slide out: {l:?}");
-        assert_eq!(m.lock().latencies_ms.len(), LATENCY_WINDOW, "bounded");
+        assert_eq!(m.lock().lat_submit.samples_ms.len(), LATENCY_WINDOW, "bounded");
     }
 
     #[test]
@@ -290,11 +388,24 @@ mod tests {
     }
 
     #[test]
+    fn latency_json_is_keyed_by_class() {
+        let m = ServerMetrics::new();
+        m.completed(OpClass::Submit, 1, Duration::from_millis(3));
+        let fields = m.snapshot().to_json_fields();
+        let lat = &fields.iter().find(|(k, _)| k == "latency_ms").unwrap().1;
+        let submit = lat.get("submit").unwrap();
+        assert!(submit.get("p99_ms").unwrap().as_f64().unwrap() >= 3.0 - 1e-9);
+        assert!(lat.get("batch").unwrap().is_null());
+        assert!(lat.get("status").unwrap().is_null());
+    }
+
+    #[test]
     fn empty_snapshot_is_safe() {
         let s = ServerMetrics::new().snapshot();
-        assert!(s.latency.is_none());
+        assert!(s.latency.iter().all(|(_, l)| l.is_none()));
         assert!(s.render().contains("n/a"));
         let fields = s.to_json_fields();
-        assert!(fields.iter().any(|(k, v)| k == "latency_ms" && v.is_null()));
+        let lat = &fields.iter().find(|(k, _)| k == "latency_ms").unwrap().1;
+        assert!(lat.get("submit").unwrap().is_null());
     }
 }

@@ -1,4 +1,4 @@
-//! `spatzd` — the resident simulation service.
+//! `spatzd` — the resident, multiplexed simulation service.
 //!
 //! Every CLI invocation pays process startup, config parsing and cluster
 //! construction per run; the compile cache and `Cluster::reset` only
@@ -11,48 +11,61 @@
 //! with hot artifacts, the way the paper's deployment model hands mixed
 //! scalar-vector jobs to an already-configured accelerator at runtime.
 //!
-//! * **Protocol** ([`proto`]): newline-delimited JSON request/response
-//!   over TCP (grammar in `DESIGN.md` §The server), hand-rolled codec in
-//!   [`crate::util::json`].
-//! * **Admission control**: requests feed the pool's *bounded* queue;
-//!   a request that does not fit — one `submit` slot, or all `N` slots
-//!   of a `batch`, atomically — is refused immediately with an explicit
-//!   `429`-style response. Nothing blocks, nothing is dropped silently.
-//! * **Metrics** ([`metrics`]): request counters plus per-request
-//!   latency percentiles in the fleet's p50/p95/p99 shape.
+//! * **Protocol v2** ([`proto`]): newline-delimited JSON over TCP
+//!   (grammar in `DESIGN.md` §The server, codec in
+//!   [`crate::util::json`]). Requests may carry a client-chosen `id`
+//!   tag, echoed on the response — tagged requests pipeline, and their
+//!   responses arrive **out of order** (a `status` answers immediately
+//!   while an earlier `submit` still simulates).
+//! * **Readiness loop** ([`mux`]): one I/O thread owns the listener and
+//!   every connection, all nonblocking — no thread per connection, so
+//!   thousands of idle clients cost zero threads. Job completions cross
+//!   back on an `mpsc` channel ([`crate::fleet::DoneFn`]), which doubles
+//!   as the loop's sleep/wake mechanism — no `libc`, no poller dep.
+//! * **Admission control**, three explicit bounds, all `429`s: the
+//!   pool's bounded queue (one `submit` slot or all `N` batch slots,
+//!   atomically), per-connection in-flight tags
+//!   ([`MAX_INFLIGHT_PER_CONN`]), and inline batch reports
+//!   (`[server] batch_report_limit`, checked *before* job generation).
+//!   A slow reader's responses queue in its bounded write buffer; past
+//!   [`WRITE_PAUSE`] the loop stops reading that connection until it
+//!   drains. Nothing blocks, nothing is dropped silently.
+//! * **Metrics** ([`metrics`]): request counters plus per-class
+//!   (`submit`/`batch`/`status`) latency windows in the fleet's
+//!   p50/p95/p99 shape.
 //! * **Determinism**: a served report is byte-identical to a direct
-//!   coordinator run of the same `(SimConfig, Job)` —
+//!   coordinator run of the same `(SimConfig, Job)` — under pipelining
+//!   and through the shard router ([`router`]) too;
 //!   `rust/tests/server_integration.rs` proves it over loopback.
-//! * **Load generation** ([`loadgen`]): a deterministic multi-client
-//!   replay tool (`spatzformer loadgen`) measuring achieved jobs/s and
-//!   latency percentiles against a running daemon.
+//! * **Load generation** ([`loadgen`]): deterministic closed-loop
+//!   replay plus a seeded-Poisson open-loop mode (`--rate`).
 //!
-//! Shutdown is graceful: `{"op":"shutdown"}` (or
-//! [`RunningServer::shutdown`]) stops accepting, already-admitted jobs
-//! drain and answer, connection handlers wind down — idle ones within
-//! one 500 ms read-poll tick, a connection stuck on a half-sent request
-//! line within two (bounded grace, so a stalled client cannot wedge the
-//! join) — and [`RunningServer::wait`] returns the final metrics
-//! snapshot.
+//! Shutdown is graceful and *bounded*: `{"op":"shutdown"}` (or
+//! [`RunningServer::shutdown`]) stops accepting, new work is refused
+//! with `503`, already-admitted jobs drain and answer for at most
+//! `[server] drain_ms` milliseconds, then the loop exits regardless —
+//! a stalled client or a wedged job cannot hold the join hostage.
+//! [`RunningServer::wait`] returns the final metrics snapshot.
 
 pub mod loadgen;
 pub mod metrics;
+pub mod mux;
 pub mod proto;
+pub mod router;
 
-pub use metrics::{MetricsSnapshot, ServerMetrics};
+pub use metrics::{MetricsSnapshot, OpClass, ServerMetrics};
 
 use crate::config::SimConfig;
-use crate::fleet::{scenario, FleetJob, SubmitError, WorkerPool};
+use crate::coordinator::JobReport;
+use crate::fleet::{scenario, FleetJob, ScenarioKind, SubmitError, WorkerPool};
 use crate::util::Json;
-use proto::Request;
-use std::io::{BufRead, BufReader, BufWriter, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use mux::{Conn, LineEvent};
+use proto::{Envelope, Request};
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
-
-/// How often an idle connection handler re-checks the stop flag.
-const READ_POLL: Duration = Duration::from_millis(500);
 
 /// Longest accepted request line. Requests are a few hundred bytes; the
 /// cap exists because the line buffer grows with whatever a client
@@ -60,34 +73,49 @@ const READ_POLL: Duration = Duration::from_millis(500);
 /// connection could exhaust daemon memory.
 const MAX_LINE: usize = 1 << 20;
 
-/// Most concurrent connections (thread-per-connection); excess accepts
-/// are dropped immediately (client sees EOF) instead of spawning
-/// unboundedly many OS threads.
+/// Most concurrent connections; excess accepts are dropped immediately
+/// (client sees EOF). Idle connections cost a socket and two buffers,
+/// not a thread — the cap bounds fd usage, not threads.
 const MAX_CONNS: usize = 1024;
 
-/// Shared daemon state.
+/// Most unanswered requests one connection may pipeline; the excess gets
+/// an explicit `429` instead of unbounded response queuing.
+pub const MAX_INFLIGHT_PER_CONN: usize = 64;
+
+/// Write-buffer high-water mark: past this, the loop stops *reading*
+/// that connection (backpressure) until the peer drains its responses.
+const WRITE_PAUSE: usize = 256 * 1024;
+
+/// Idle tick: the loop sleeps on its completion channel at most this
+/// long, so external stop flags are noticed promptly even with no
+/// traffic and no completions.
+const IDLE_TICK: Duration = Duration::from_millis(1);
+
+/// Shared daemon state (I/O thread + [`RunningServer`] handle).
 struct Ctl {
     cfg: SimConfig,
     pool: WorkerPool,
     metrics: ServerMetrics,
     stopping: AtomicBool,
     addr: SocketAddr,
+    open_conns: AtomicUsize,
 }
 
 /// A live daemon: the CLI blocks on [`RunningServer::wait`]; tests drive
 /// it in-process over loopback.
 pub struct RunningServer {
     ctl: Arc<Ctl>,
-    accept_thread: std::thread::JoinHandle<()>,
+    io_thread: std::thread::JoinHandle<()>,
 }
 
-/// Bind `cfg.server.addr`, start the worker pool and the accept loop.
-/// Returns immediately; the daemon runs until a `shutdown` request (or
-/// [`RunningServer::shutdown`]) arrives.
+/// Bind `cfg.server.addr`, start the worker pool and the readiness
+/// loop. Returns immediately; the daemon runs until a `shutdown`
+/// request (or [`RunningServer::shutdown`]) arrives.
 pub fn serve(cfg: SimConfig) -> anyhow::Result<RunningServer> {
     cfg.validate()?;
     let listener = TcpListener::bind(cfg.server.addr.as_str())
         .map_err(|e| anyhow::anyhow!("cannot bind {}: {e}", cfg.server.addr))?;
+    listener.set_nonblocking(true)?;
     let addr = listener.local_addr()?;
     let pool = WorkerPool::start(cfg.clone(), cfg.server.workers, cfg.server.queue_depth)?;
     let ctl = Arc::new(Ctl {
@@ -96,10 +124,11 @@ pub fn serve(cfg: SimConfig) -> anyhow::Result<RunningServer> {
         metrics: ServerMetrics::new(),
         stopping: AtomicBool::new(false),
         addr,
+        open_conns: AtomicUsize::new(0),
     });
-    let accept_ctl = ctl.clone();
-    let accept_thread = std::thread::spawn(move || accept_loop(listener, accept_ctl));
-    Ok(RunningServer { ctl, accept_thread })
+    let io_ctl = ctl.clone();
+    let io_thread = std::thread::spawn(move || EventLoop::new(listener, io_ctl).run());
+    Ok(RunningServer { ctl, io_thread })
 }
 
 impl RunningServer {
@@ -112,300 +141,509 @@ impl RunningServer {
         self.ctl.pool.workers()
     }
 
-    /// Trigger a graceful stop without a client (tests, signal handlers).
+    /// Trigger a graceful stop without a client (tests, signal
+    /// handlers). The readiness loop notices within one idle tick — no
+    /// loopback poke needed, the loop never blocks on `accept`.
     pub fn shutdown(&self) {
-        trigger_stop(&self.ctl);
+        self.ctl.stopping.store(true, Ordering::SeqCst);
     }
 
-    /// Block until the daemon has fully stopped: accept loop and every
-    /// connection handler joined, queue drained, workers joined. Returns
-    /// the final metrics snapshot.
+    /// Block until the daemon has fully stopped: readiness loop joined
+    /// (bounded drain — see module docs), queue drained, workers joined.
+    /// Returns the final metrics snapshot.
     pub fn wait(self) -> anyhow::Result<MetricsSnapshot> {
-        self.accept_thread
+        self.io_thread
             .join()
-            .map_err(|_| anyhow::anyhow!("accept loop panicked"))?;
+            .map_err(|_| anyhow::anyhow!("readiness loop panicked"))?;
         self.ctl.pool.shutdown();
         Ok(self.ctl.metrics.snapshot())
     }
 }
 
-/// Flip the stop flag (once) and poke the blocking `accept` awake with a
-/// throwaway loopback connection.
-fn trigger_stop(ctl: &Ctl) {
-    if ctl.stopping.swap(true, Ordering::SeqCst) {
-        return;
-    }
-    let _ = TcpStream::connect(ctl.addr);
+/// A worker-side completion crossing back to the I/O thread.
+enum Done {
+    Submit {
+        conn: u64,
+        id: Option<Json>,
+        t0: Instant,
+        result: Result<JobReport, String>,
+    },
+    BatchJob {
+        batch: u64,
+        index: usize,
+        result: Result<JobReport, String>,
+    },
 }
 
-fn accept_loop(listener: TcpListener, ctl: Arc<Ctl>) {
-    let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
-    for stream in listener.incoming() {
-        if ctl.stopping.load(Ordering::SeqCst) {
-            break;
-        }
-        let Ok(stream) = stream else { continue };
-        // Sweep finished handlers each accept so a long-resident daemon
-        // does not accumulate join handles without bound (dropping a
-        // finished handle reclaims the thread's resources).
-        handlers.retain(|h| !h.is_finished());
-        if handlers.len() >= MAX_CONNS {
-            drop(stream); // over the connection cap: refuse with EOF
-            continue;
-        }
-        let conn_ctl = ctl.clone();
-        handlers.push(std::thread::spawn(move || handle_conn(stream, conn_ctl)));
-    }
-    // Connection handlers poll the stop flag between lines, so every
-    // thread exits within one READ_POLL tick of the stop trigger (or as
-    // soon as its client hangs up).
-    for h in handlers {
-        let _ = h.join();
-    }
+/// A batch whose jobs are still completing: slots fill out of order,
+/// the response is built when the last one lands.
+struct PendingBatch {
+    conn: u64,
+    id: Option<Json>,
+    kind: ScenarioKind,
+    seed: u64,
+    t0: Instant,
+    want_reports: bool,
+    slots: Vec<Option<JobReport>>,
+    remaining: usize,
+    first_err: Option<String>,
 }
 
-/// Serve one client connection: read request lines, answer each in
-/// order, until EOF / error / daemon stop.
-///
-/// Lines are assembled as raw bytes via `read_until`, not `read_line`:
-/// on a read-timeout tick, `read_until` guarantees already-consumed
-/// bytes stay appended to the buffer, whereas `read_line`'s UTF-8 guard
-/// silently discards them when the partial line happens to end inside a
-/// multi-byte character — which would desync the request stream. UTF-8
-/// is validated once per complete line instead (invalid ⇒ `400`).
-fn handle_conn(stream: TcpStream, ctl: Arc<Ctl>) {
-    if stream.set_read_timeout(Some(READ_POLL)).is_err() {
-        return;
+/// The readiness loop: one thread, every socket, nothing blocking.
+struct EventLoop {
+    ctl: Arc<Ctl>,
+    /// `None` once draining — new connections are refused by the OS.
+    listener: Option<TcpListener>,
+    conns: HashMap<u64, Conn>,
+    next_conn: u64,
+    batches: HashMap<u64, PendingBatch>,
+    next_batch: u64,
+    tx: mpsc::Sender<Done>,
+    rx: mpsc::Receiver<Done>,
+    /// Jobs admitted to the pool whose completions have not crossed the
+    /// channel yet (a batch of N counts N).
+    pending_jobs: usize,
+    /// Set once the stop flag is first observed.
+    drain_deadline: Option<Instant>,
+}
+
+impl EventLoop {
+    fn new(listener: TcpListener, ctl: Arc<Ctl>) -> Self {
+        let (tx, rx) = mpsc::channel();
+        Self {
+            ctl,
+            listener: Some(listener),
+            conns: HashMap::new(),
+            next_conn: 0,
+            batches: HashMap::new(),
+            next_batch: 0,
+            tx,
+            rx,
+            pending_jobs: 0,
+            drain_deadline: None,
+        }
     }
-    let Ok(read_half) = stream.try_clone() else {
-        return;
-    };
-    let mut reader = BufReader::new(read_half);
-    let mut writer = BufWriter::new(stream);
-    let mut line: Vec<u8> = Vec::new();
-    // Poll ticks seen since the stop flag while a line is half-read: a
-    // client that never finishes its line must not wedge the shutdown
-    // join, so it gets one bounded grace tick and then the connection
-    // is abandoned.
-    let mut stop_ticks = 0u32;
-    loop {
-        if ctl.stopping.load(Ordering::SeqCst) && line.is_empty() {
-            return;
-        }
-        // a newline-less byte stream must not grow the buffer forever —
-        // past the cap the stream cannot be re-synced, so answer 400
-        // and drop the connection
-        if line.len() > MAX_LINE {
-            let _ = writeln!(
-                writer,
-                "{}",
-                proto::error_response(400, "request line exceeds maximum length")
-            );
-            let _ = writer.flush();
-            ctl.metrics.error();
-            return;
-        }
-        match reader.read_until(b'\n', &mut line) {
-            Ok(0) => return, // EOF: client closed
-            Ok(_) => {
-                if line.len() > MAX_LINE {
-                    continue; // handled by the cap check above
+
+    /// One round per iteration: accept, apply completions, pump every
+    /// connection (flush → read → handle), retire finished connections.
+    /// When a whole round makes no progress, sleep on the completion
+    /// channel — a finishing job wakes the loop instantly, and the idle
+    /// tick bounds how stale the stop flag can get.
+    fn run(mut self) {
+        loop {
+            let mut progress = self.accept_new();
+            progress |= self.drain_completions();
+            progress |= self.pump_conns();
+            self.reap();
+            if self.stop_check() {
+                break;
+            }
+            if !progress {
+                // a timeout here is the idle tick; the loop re-checks everything
+                if let Ok(done) = self.rx.recv_timeout(IDLE_TICK) {
+                    self.handle_done(done);
                 }
-                let raw = std::mem::take(&mut line);
-                let (response, stop_after) = match std::str::from_utf8(&raw) {
-                    Ok(text) => {
-                        let text = text.trim();
-                        if text.is_empty() {
-                            continue;
+            }
+        }
+        self.ctl.open_conns.store(0, Ordering::Relaxed);
+    }
+
+    fn accept_new(&mut self) -> bool {
+        let Some(listener) = &self.listener else {
+            return false;
+        };
+        let mut progress = false;
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    progress = true;
+                    if self.conns.len() >= MAX_CONNS {
+                        drop(stream); // over the connection cap: refuse with EOF
+                        continue;
+                    }
+                    if let Ok(conn) = Conn::new(stream) {
+                        let tok = self.next_conn;
+                        self.next_conn += 1;
+                        self.conns.insert(tok, conn);
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+        self.ctl.open_conns.store(self.conns.len(), Ordering::Relaxed);
+        progress
+    }
+
+    fn drain_completions(&mut self) -> bool {
+        let mut progress = false;
+        while let Ok(done) = self.rx.try_recv() {
+            progress = true;
+            self.handle_done(done);
+        }
+        progress
+    }
+
+    fn pump_conns(&mut self) -> bool {
+        let mut progress = false;
+        let tokens: Vec<u64> = self.conns.keys().copied().collect();
+        let mut events = Vec::new();
+        for tok in tokens {
+            let mut conn = self.conns.remove(&tok).expect("token just listed");
+            // flush first: responses already queued go out before new
+            // requests are consumed, so an immediate answer (status)
+            // enqueued this round still beats next round's completions
+            progress |= conn.try_flush();
+            // backpressure: a slow reader stops being read until its
+            // response backlog drains below the high-water mark
+            if conn.pending_write() <= WRITE_PAUSE {
+                events.clear();
+                progress |= conn.try_read(MAX_LINE, &mut events);
+                for ev in events.drain(..) {
+                    match ev {
+                        LineEvent::Line(raw) => self.handle_raw_line(tok, &mut conn, &raw),
+                        LineEvent::Overflow => {
+                            self.ctl.metrics.error();
+                            conn.enqueue_line(&proto::error_response(
+                                400,
+                                "request line exceeds maximum length",
+                            ));
                         }
-                        handle_line(&ctl, text)
                     }
-                    Err(_) => {
-                        ctl.metrics.error();
-                        (
-                            proto::error_response(400, "request line is not valid UTF-8"),
-                            false,
-                        )
-                    }
-                };
-                if writeln!(writer, "{response}").is_err() || writer.flush().is_err() {
-                    return;
                 }
-                if stop_after {
-                    trigger_stop(&ctl);
-                    return;
-                }
+                progress |= conn.try_flush();
             }
-            Err(e)
-                if matches!(
-                    e.kind(),
-                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-                ) =>
-            {
-                if ctl.stopping.load(Ordering::SeqCst) {
-                    stop_ticks += 1;
-                    if stop_ticks >= 2 {
-                        return; // half-read line at shutdown: give up
-                    }
-                }
-                continue; // poll tick: re-check the stop flag
+            self.conns.insert(tok, conn);
+        }
+        progress
+    }
+
+    /// Retire connections that are either broken or fully settled
+    /// (peer stopped sending, every admitted request answered, every
+    /// byte flushed). A half-closed peer still receives its pipelined
+    /// responses before the socket drops.
+    fn reap(&mut self) {
+        self.conns.retain(|_, c| {
+            !c.dead && !(c.read_closed && c.inflight == 0 && c.pending_write() == 0)
+        });
+        self.ctl.open_conns.store(self.conns.len(), Ordering::Relaxed);
+    }
+
+    /// Drive the bounded drain: on the first stopped round, close the
+    /// listener and start the `drain_ms` clock; exit once every admitted
+    /// job has answered and flushed, or the deadline passes.
+    fn stop_check(&mut self) -> bool {
+        if !self.ctl.stopping.load(Ordering::SeqCst) {
+            return false;
+        }
+        if self.drain_deadline.is_none() {
+            self.listener = None;
+            self.drain_deadline =
+                Some(Instant::now() + Duration::from_millis(self.ctl.cfg.server.drain_ms));
+        }
+        let deadline = self.drain_deadline.expect("set above");
+        let drained =
+            self.pending_jobs == 0 && self.conns.values().all(|c| c.pending_write() == 0);
+        drained || Instant::now() >= deadline
+    }
+
+    fn handle_raw_line(&mut self, tok: u64, conn: &mut Conn, raw: &[u8]) {
+        let Ok(text) = std::str::from_utf8(raw) else {
+            self.ctl.metrics.error();
+            conn.enqueue_line(&proto::error_response(400, "request line is not valid UTF-8"));
+            return;
+        };
+        let text = text.trim();
+        if text.is_empty() {
+            return;
+        }
+        match proto::parse_envelope(text) {
+            Ok(env) => self.handle_request(tok, conn, env),
+            Err(e) => {
+                self.ctl.metrics.error();
+                // a malformed line cannot be tagged: its id (if any)
+                // did not validate either
+                conn.enqueue_line(&proto::error_response(400, &format!("{e:#}")));
             }
-            Err(_) => return,
         }
     }
-}
 
-/// Dispatch one request line; returns `(response_line, stop_after)`.
-fn handle_line(ctl: &Ctl, line: &str) -> (String, bool) {
-    let request = match proto::parse_request(line) {
-        Ok(r) => r,
-        Err(e) => {
-            ctl.metrics.error();
-            return (proto::error_response(400, &format!("{e:#}")), false);
-        }
-    };
-    match request {
-        Request::Submit { job, seed } => {
-            ctl.metrics.request("submit");
-            let t0 = Instant::now();
-            match ctl.pool.submit(FleetJob { job, seed }) {
-                Err(e) => (refusal(ctl, e), false),
-                Ok(receipt) => match receipt.wait() {
-                    Ok(report) => {
-                        ctl.metrics.completed(1, t0.elapsed());
-                        ctl.metrics.observed_job(&report.metrics.telemetry);
-                        (
-                            proto::ok_response(vec![(
-                                "report".into(),
-                                proto::report_to_json(&report),
-                            )]),
-                            false,
-                        )
+    fn handle_request(&mut self, tok: u64, conn: &mut Conn, env: Envelope) {
+        let Envelope { id, req } = env;
+        let stopping = self.ctl.stopping.load(Ordering::SeqCst);
+        match req {
+            Request::Submit { job, seed } => {
+                self.ctl.metrics.request("submit");
+                if stopping {
+                    conn.enqueue_line(&self.refusal(id.as_ref(), SubmitError::ShuttingDown));
+                    return;
+                }
+                if conn.inflight >= MAX_INFLIGHT_PER_CONN {
+                    self.ctl.metrics.rejected();
+                    conn.enqueue_line(&proto::error_response_tagged(
+                        id.as_ref(),
+                        429,
+                        &format!(
+                            "too many in-flight requests on this connection \
+                             (max {MAX_INFLIGHT_PER_CONN})"
+                        ),
+                    ));
+                    return;
+                }
+                let t0 = Instant::now();
+                let tx = self.tx.clone();
+                let done_id = id.clone();
+                let done = Box::new(move |result| {
+                    let _ = tx.send(Done::Submit { conn: tok, id: done_id, t0, result });
+                });
+                match self.ctl.pool.submit_with(FleetJob { job, seed }, done) {
+                    Ok(()) => {
+                        conn.inflight += 1;
+                        self.pending_jobs += 1;
                     }
-                    Err(e) => {
-                        ctl.metrics.error();
-                        (proto::error_response(500, &format!("{e:#}")), false)
-                    }
-                },
+                    Err(e) => conn.enqueue_line(&self.refusal(id.as_ref(), e)),
+                }
             }
-        }
-        Request::Batch { kind, jobs, seed } => {
-            ctl.metrics.request("batch");
-            // Admission check BEFORE generation: `jobs` is
-            // client-controlled, and a batch larger than the queue can
-            // never be admitted — rejecting here keeps a hostile
-            // `"jobs":10^12` from allocating a scenario at all.
-            let depth = ctl.pool.queue().depth();
-            if jobs > depth {
-                ctl.metrics.rejected();
-                return (
-                    proto::error_response(
+            Request::Batch { kind, jobs, seed, reports } => {
+                self.ctl.metrics.request("batch");
+                if stopping {
+                    conn.enqueue_line(&self.refusal(id.as_ref(), SubmitError::ShuttingDown));
+                    return;
+                }
+                if conn.inflight >= MAX_INFLIGHT_PER_CONN {
+                    self.ctl.metrics.rejected();
+                    conn.enqueue_line(&proto::error_response_tagged(
+                        id.as_ref(),
+                        429,
+                        &format!(
+                            "too many in-flight requests on this connection \
+                             (max {MAX_INFLIGHT_PER_CONN})"
+                        ),
+                    ));
+                    return;
+                }
+                // Admission checks BEFORE generation: `jobs` is
+                // client-controlled, and a batch larger than the queue
+                // (or the inline-report bound) can never be served —
+                // rejecting here keeps a hostile `"jobs":10^12` from
+                // allocating a scenario at all.
+                let depth = self.ctl.pool.queue().depth();
+                if jobs > depth {
+                    self.ctl.metrics.rejected();
+                    conn.enqueue_line(&proto::error_response_tagged(
+                        id.as_ref(),
                         429,
                         &format!("queue full: a batch of {jobs} can never fit depth {depth}"),
-                    ),
-                    false,
-                );
+                    ));
+                    return;
+                }
+                let limit = self.ctl.cfg.server.batch_report_limit;
+                if reports && jobs > limit {
+                    self.ctl.metrics.rejected();
+                    conn.enqueue_line(&proto::error_response_tagged(
+                        id.as_ref(),
+                        429,
+                        &format!(
+                            "inline reports are bounded: a batch of {jobs} exceeds \
+                             server.batch_report_limit {limit}"
+                        ),
+                    ));
+                    return;
+                }
+                let t0 = Instant::now();
+                let scenario_seed = seed.unwrap_or(self.ctl.cfg.seed);
+                let generated =
+                    scenario::generate(kind, self.ctl.cfg.cluster.arch, scenario_seed, jobs);
+                let key = self.next_batch;
+                let admitted = self.ctl.pool.submit_batch_with(generated.jobs, |i| {
+                    let tx = self.tx.clone();
+                    Box::new(move |result| {
+                        let _ = tx.send(Done::BatchJob { batch: key, index: i, result });
+                    })
+                });
+                match admitted {
+                    Ok(()) => {
+                        self.next_batch += 1;
+                        self.pending_jobs += jobs;
+                        conn.inflight += 1;
+                        self.batches.insert(
+                            key,
+                            PendingBatch {
+                                conn: tok,
+                                id,
+                                kind,
+                                seed: scenario_seed,
+                                t0,
+                                want_reports: reports,
+                                slots: vec![None; jobs],
+                                remaining: jobs,
+                                first_err: None,
+                            },
+                        );
+                    }
+                    Err(e) => conn.enqueue_line(&self.refusal(id.as_ref(), e)),
+                }
             }
-            let t0 = Instant::now();
-            let scenario_seed = seed.unwrap_or(ctl.cfg.seed);
-            let scenario =
-                scenario::generate(kind, ctl.cfg.cluster.arch, scenario_seed, jobs);
-            match ctl.pool.submit_batch(scenario.jobs) {
-                Err(e) => (refusal(ctl, e), false),
-                Ok(receipts) => {
-                    let mut reports = Vec::with_capacity(receipts.len());
-                    for r in receipts {
-                        match r.wait() {
-                            Ok(report) => reports.push(report),
-                            Err(e) => {
-                                ctl.metrics.error();
-                                return (
-                                    proto::error_response(500, &format!("{e:#}")),
-                                    false,
-                                );
-                            }
+            Request::Status => {
+                self.ctl.metrics.request("status");
+                let t0 = Instant::now();
+                let q = self.ctl.pool.queue();
+                let line = proto::ok_response_tagged(
+                    id.as_ref(),
+                    vec![
+                        ("accepting".into(), Json::Bool(!stopping)),
+                        (
+                            "workers".into(),
+                            Json::u64_lossless(self.ctl.pool.workers() as u64),
+                        ),
+                        ("queue_depth".into(), Json::u64_lossless(q.depth() as u64)),
+                        ("queued".into(), Json::u64_lossless(q.queued() as u64)),
+                        ("in_flight".into(), Json::u64_lossless(q.in_flight() as u64)),
+                        ("completed".into(), Json::u64_lossless(q.completed())),
+                        (
+                            "rejected".into(),
+                            Json::u64_lossless(self.ctl.metrics.rejected_total()),
+                        ),
+                        (
+                            // this conn is detached from the map while
+                            // being pumped — count it back in
+                            "connections".into(),
+                            Json::u64_lossless(self.conns.len() as u64 + 1),
+                        ),
+                    ],
+                );
+                conn.enqueue_line(&line);
+                self.ctl.metrics.completed(OpClass::Status, 0, t0.elapsed());
+            }
+            Request::Metrics => {
+                self.ctl.metrics.request("metrics");
+                let mut fields = self.ctl.metrics.snapshot().to_json_fields();
+                let rc = self.ctl.pool.result_cache();
+                fields.push(("result_cache_hits".into(), Json::u64_lossless(rc.hits())));
+                fields.push((
+                    "result_cache_misses".into(),
+                    Json::u64_lossless(rc.misses()),
+                ));
+                if let Some(cc) = self.ctl.pool.compile_cache() {
+                    fields.push(("compile_cache_hits".into(), Json::u64_lossless(cc.hits())));
+                    fields.push((
+                        "compile_cache_misses".into(),
+                        Json::u64_lossless(cc.misses()),
+                    ));
+                }
+                conn.enqueue_line(&proto::ok_response_tagged(id.as_ref(), fields));
+            }
+            Request::Shutdown => {
+                self.ctl.metrics.request("shutdown");
+                conn.enqueue_line(&proto::ok_response_tagged(
+                    id.as_ref(),
+                    vec![("shutting_down".into(), Json::Bool(true))],
+                ));
+                self.ctl.stopping.store(true, Ordering::SeqCst);
+            }
+        }
+    }
+
+    fn handle_done(&mut self, done: Done) {
+        self.pending_jobs = self.pending_jobs.saturating_sub(1);
+        match done {
+            Done::Submit { conn, id, t0, result } => {
+                let line = match result {
+                    Ok(report) => {
+                        self.ctl.metrics.completed(OpClass::Submit, 1, t0.elapsed());
+                        self.ctl.metrics.observed_job(&report.metrics.telemetry);
+                        proto::ok_response_tagged(
+                            id.as_ref(),
+                            vec![("report".into(), proto::report_to_json(&report))],
+                        )
+                    }
+                    Err(msg) => {
+                        self.ctl.metrics.error();
+                        proto::error_response_tagged(id.as_ref(), 500, &msg)
+                    }
+                };
+                self.respond(conn, &line);
+            }
+            Done::BatchJob { batch, index, result } => {
+                let Some(pb) = self.batches.get_mut(&batch) else {
+                    return; // batch state lost (cannot happen in practice)
+                };
+                pb.remaining -= 1;
+                match result {
+                    Ok(report) => pb.slots[index] = Some(report),
+                    Err(msg) => {
+                        if pb.first_err.is_none() {
+                            pb.first_err = Some(msg);
                         }
                     }
-                    let wall = t0.elapsed();
-                    ctl.metrics.completed(reports.len() as u64, wall);
-                    for r in &reports {
-                        ctl.metrics.observed_job(&r.metrics.telemetry);
-                    }
-                    let digest = proto::reports_digest(reports.iter());
-                    let sim_cycles: u64 =
-                        reports.iter().map(|r| r.metrics.cycles).sum();
-                    (
-                        proto::ok_response(vec![
-                            ("scenario".into(), Json::str(kind.name())),
-                            ("jobs".into(), Json::u64_lossless(reports.len() as u64)),
-                            ("seed".into(), Json::u64_lossless(scenario_seed)),
-                            ("digest".into(), Json::str(format!("{digest:#018x}"))),
-                            ("sim_cycles_total".into(), Json::u64_lossless(sim_cycles)),
-                            (
-                                "wall_ms".into(),
-                                Json::num(wall.as_secs_f64() * 1e3),
-                            ),
-                        ]),
-                        false,
-                    )
+                }
+                if pb.remaining == 0 {
+                    let pb = self.batches.remove(&batch).expect("present above");
+                    let conn = pb.conn;
+                    let line = self.finish_batch(pb);
+                    self.respond(conn, &line);
                 }
             }
         }
-        Request::Status => {
-            ctl.metrics.request("status");
-            let q = ctl.pool.queue();
-            (
-                proto::ok_response(vec![
-                    (
-                        "accepting".into(),
-                        Json::Bool(!ctl.stopping.load(Ordering::SeqCst)),
-                    ),
-                    ("workers".into(), Json::u64_lossless(ctl.pool.workers() as u64)),
-                    ("queue_depth".into(), Json::u64_lossless(q.depth() as u64)),
-                    ("queued".into(), Json::u64_lossless(q.queued() as u64)),
-                    ("in_flight".into(), Json::u64_lossless(q.in_flight() as u64)),
-                    ("completed".into(), Json::u64_lossless(q.completed())),
-                    (
-                        "rejected".into(),
-                        Json::u64_lossless(ctl.metrics.rejected_total()),
-                    ),
-                ]),
-                false,
-            )
+    }
+
+    /// Build the response of a fully completed batch.
+    fn finish_batch(&mut self, pb: PendingBatch) -> String {
+        let wall = pb.t0.elapsed();
+        if let Some(msg) = pb.first_err {
+            self.ctl.metrics.error();
+            return proto::error_response_tagged(pb.id.as_ref(), 500, &msg);
         }
-        Request::Metrics => {
-            ctl.metrics.request("metrics");
-            let mut fields = ctl.metrics.snapshot().to_json_fields();
-            let rc = ctl.pool.result_cache();
-            fields.push(("result_cache_hits".into(), Json::u64_lossless(rc.hits())));
+        let reports: Vec<JobReport> = pb
+            .slots
+            .into_iter()
+            .map(|s| s.expect("remaining hit zero with no failures"))
+            .collect();
+        self.ctl.metrics.completed(OpClass::Batch, reports.len() as u64, wall);
+        for r in &reports {
+            self.ctl.metrics.observed_job(&r.metrics.telemetry);
+        }
+        let digest = proto::reports_digest(reports.iter());
+        let sim_cycles: u64 = reports.iter().map(|r| r.metrics.cycles).sum();
+        let mut fields = vec![
+            ("scenario".to_string(), Json::str(pb.kind.name())),
+            ("jobs".to_string(), Json::u64_lossless(reports.len() as u64)),
+            ("seed".to_string(), Json::u64_lossless(pb.seed)),
+            ("digest".to_string(), Json::str(format!("{digest:#018x}"))),
+            ("sim_cycles_total".to_string(), Json::u64_lossless(sim_cycles)),
+            ("wall_ms".to_string(), Json::num(wall.as_secs_f64() * 1e3)),
+        ];
+        if pb.want_reports {
             fields.push((
-                "result_cache_misses".into(),
-                Json::u64_lossless(rc.misses()),
+                "reports".to_string(),
+                Json::Arr(reports.iter().map(proto::report_to_json).collect()),
             ));
-            if let Some(cc) = ctl.pool.compile_cache() {
-                fields.push(("compile_cache_hits".into(), Json::u64_lossless(cc.hits())));
-                fields.push((
-                    "compile_cache_misses".into(),
-                    Json::u64_lossless(cc.misses()),
-                ));
-            }
-            (proto::ok_response(fields), false)
         }
-        Request::Shutdown => {
-            ctl.metrics.request("shutdown");
-            (
-                proto::ok_response(vec![("shutting_down".into(), Json::Bool(true))]),
-                true,
-            )
+        proto::ok_response_tagged(pb.id.as_ref(), fields)
+    }
+
+    /// Deliver a completed response to its connection — or drop it, if
+    /// the client already hung up (the job still ran and is counted;
+    /// there is just no one left to tell).
+    fn respond(&mut self, tok: u64, line: &str) {
+        if let Some(conn) = self.conns.get_mut(&tok) {
+            conn.inflight = conn.inflight.saturating_sub(1);
+            if !conn.dead {
+                conn.enqueue_line(line);
+            }
         }
     }
-}
 
-/// Map a queue refusal to its wire response (`429` full, `503` closing).
-fn refusal(ctl: &Ctl, e: SubmitError) -> String {
-    ctl.metrics.rejected();
-    match e {
-        SubmitError::QueueFull { .. } => proto::error_response(429, &e.to_string()),
-        SubmitError::ShuttingDown => proto::error_response(503, &e.to_string()),
+    /// Map a queue refusal to its wire response (`429` full, `503`
+    /// closing).
+    fn refusal(&self, id: Option<&Json>, e: SubmitError) -> String {
+        self.ctl.metrics.rejected();
+        match e {
+            SubmitError::QueueFull { .. } => {
+                proto::error_response_tagged(id, 429, &e.to_string())
+            }
+            SubmitError::ShuttingDown => proto::error_response_tagged(id, 503, &e.to_string()),
+        }
     }
 }

@@ -1,0 +1,298 @@
+//! Nonblocking connection plumbing for the readiness loops.
+//!
+//! Both the `spatzd` event loop ([`super`]) and the shard router
+//! ([`super::router`]) own many sockets on **one** I/O thread, so no
+//! socket may ever block it. This module is the per-connection state
+//! machine they share: a nonblocking [`std::net::TcpStream`] plus a
+//! read buffer (bytes accumulate until a newline completes a request
+//! line) and a write buffer (response lines queue until the peer can
+//! take them). Everything is `std`-only — no `libc`, no poller crate —
+//! in the same no-new-deps spirit as `util::json`; readiness is
+//! discovered by *trying* (`WouldBlock` means "not now") and the owning
+//! loop sleeps on its completion channel between rounds, so idle
+//! connections cost zero threads and zero wakeups.
+//!
+//! The loops enforce two bounds through this type:
+//! * a line cap (hostile newline-less streams): [`Conn::try_read`]
+//!   yields [`LineEvent::Overflow`] and stops reading — the stream
+//!   cannot be re-synced past a half-consumed oversized line;
+//! * a write-buffer pause (slow readers): the owner checks
+//!   [`Conn::pending_write`] and simply stops reading that connection
+//!   until the peer drains, so one stalled client bounds its own memory
+//!   instead of the daemon's.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+/// Per-`try_read` byte bound: a firehosing peer yields the loop back
+/// after this much, instead of starving every other connection.
+const READ_ROUND: usize = 256 * 1024;
+
+/// One chunk per `read` syscall.
+const CHUNK: usize = 16 * 1024;
+
+/// What [`Conn::try_read`] found in the byte stream.
+#[derive(Debug, PartialEq, Eq)]
+pub enum LineEvent {
+    /// One complete request line (newline stripped, raw bytes — UTF-8
+    /// is the caller's check so a bad line can be answered, not dropped).
+    Line(Vec<u8>),
+    /// A line exceeded the cap; reading is over for this connection
+    /// (the stream cannot be re-synced), pending writes still flush.
+    Overflow,
+}
+
+/// One nonblocking connection: socket + read/write buffers + lifecycle
+/// flags. The owning loop drives it with [`Conn::try_read`] /
+/// [`Conn::try_flush`] and decides retirement from the flags.
+pub struct Conn {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    /// Bytes of `wbuf` already written to the socket.
+    wpos: usize,
+    /// Peer closed its write half (EOF) or overflowed the line cap: no
+    /// more requests will arrive, but queued responses still flush.
+    pub read_closed: bool,
+    /// Hard I/O error: the connection is unusable in both directions.
+    pub dead: bool,
+    /// Requests admitted but not yet answered on this connection (the
+    /// owner's pipelining bound; maintained by the owner).
+    pub inflight: usize,
+}
+
+impl Conn {
+    /// Adopt an accepted (or connected) stream, switching it nonblocking.
+    pub fn new(stream: TcpStream) -> std::io::Result<Self> {
+        stream.set_nonblocking(true)?;
+        Ok(Self {
+            stream,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            read_closed: false,
+            dead: false,
+            inflight: 0,
+        })
+    }
+
+    /// Dial a peer (bounded blocking connect — the router does this once
+    /// per backend, not per request) and adopt the stream.
+    pub fn connect(addr: &str, timeout: Duration) -> anyhow::Result<Self> {
+        let sa = addr
+            .to_socket_addrs()
+            .map_err(|e| anyhow::anyhow!("cannot resolve {addr}: {e}"))?
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("{addr} resolves to no address"))?;
+        let stream = TcpStream::connect_timeout(&sa, timeout)
+            .map_err(|e| anyhow::anyhow!("cannot connect to {addr}: {e}"))?;
+        Self::new(stream).map_err(|e| anyhow::anyhow!("cannot prepare {addr}: {e}"))
+    }
+
+    /// Queue one response line (newline appended) for [`Conn::try_flush`].
+    pub fn enqueue_line(&mut self, line: &str) {
+        self.wbuf.extend_from_slice(line.as_bytes());
+        self.wbuf.push(b'\n');
+    }
+
+    /// Bytes queued but not yet accepted by the socket.
+    pub fn pending_write(&self) -> usize {
+        self.wbuf.len() - self.wpos
+    }
+
+    /// Write as much buffered output as the socket takes right now.
+    /// Returns whether any bytes moved.
+    pub fn try_flush(&mut self) -> bool {
+        let mut progress = false;
+        while self.wpos < self.wbuf.len() && !self.dead {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => self.dead = true,
+                Ok(n) => {
+                    self.wpos += n;
+                    progress = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => self.dead = true,
+            }
+        }
+        if self.wpos == self.wbuf.len() {
+            self.wbuf.clear();
+            self.wpos = 0;
+        } else if self.wpos > CHUNK {
+            // reclaim the flushed prefix so a long-lived slow reader
+            // does not hold its whole response history in memory
+            self.wbuf.drain(..self.wpos);
+            self.wpos = 0;
+        }
+        progress
+    }
+
+    /// Read whatever the socket has (bounded per round) and append every
+    /// complete line to `events`. Lines (or an unterminated tail) past
+    /// `max_line` yield [`LineEvent::Overflow`] once and close the read
+    /// half. Returns whether any bytes arrived.
+    pub fn try_read(&mut self, max_line: usize, events: &mut Vec<LineEvent>) -> bool {
+        if self.read_closed || self.dead {
+            return false;
+        }
+        let mut progress = false;
+        let mut round = 0usize;
+        let mut chunk = [0u8; CHUNK];
+        while round < READ_ROUND {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    self.read_closed = true;
+                    break;
+                }
+                Ok(n) => {
+                    progress = true;
+                    round += n;
+                    self.rbuf.extend_from_slice(&chunk[..n]);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    return progress;
+                }
+            }
+        }
+        // split complete lines out of the buffer
+        let mut start = 0;
+        while let Some(pos) = self.rbuf[start..].iter().position(|&b| b == b'\n') {
+            let line = &self.rbuf[start..start + pos];
+            if line.len() > max_line {
+                events.push(LineEvent::Overflow);
+                self.read_closed = true;
+                self.rbuf.clear();
+                return progress;
+            }
+            events.push(LineEvent::Line(line.to_vec()));
+            start += pos + 1;
+        }
+        self.rbuf.drain(..start);
+        if self.rbuf.len() > max_line {
+            events.push(LineEvent::Overflow);
+            self.read_closed = true;
+            self.rbuf.clear();
+        }
+        progress
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufRead, BufReader, Write as _};
+    use std::net::TcpListener;
+
+    /// A blocking peer socket wired to a fresh [`Conn`] over loopback.
+    fn pair() -> (Conn, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let peer = TcpStream::connect(addr).unwrap();
+        let (accepted, _) = listener.accept().unwrap();
+        (Conn::new(accepted).unwrap(), peer)
+    }
+
+    fn read_all_lines(conn: &mut Conn, max_line: usize) -> Vec<LineEvent> {
+        let mut events = Vec::new();
+        // the peer write is in flight: poll briefly until bytes land
+        for _ in 0..200 {
+            conn.try_read(max_line, &mut events);
+            if !events.is_empty() || conn.read_closed || conn.dead {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        events
+    }
+
+    #[test]
+    fn splits_pipelined_lines_and_flushes_responses() {
+        let (mut conn, mut peer) = pair();
+        peer.write_all(b"one\ntwo\nthree\n").unwrap();
+        let events = read_all_lines(&mut conn, 1 << 20);
+        assert_eq!(
+            events,
+            vec![
+                LineEvent::Line(b"one".to_vec()),
+                LineEvent::Line(b"two".to_vec()),
+                LineEvent::Line(b"three".to_vec()),
+            ]
+        );
+        conn.enqueue_line("ack-1");
+        conn.enqueue_line("ack-2");
+        assert_eq!(conn.pending_write(), 12);
+        assert!(conn.try_flush());
+        assert_eq!(conn.pending_write(), 0);
+        let mut reader = BufReader::new(peer);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line, "ack-1\n");
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line, "ack-2\n");
+    }
+
+    #[test]
+    fn partial_lines_wait_for_their_newline() {
+        let (mut conn, mut peer) = pair();
+        peer.write_all(b"hal").unwrap();
+        let mut events = Vec::new();
+        for _ in 0..200 {
+            conn.try_read(1 << 20, &mut events);
+            if !conn.rbuf.is_empty() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(events.is_empty(), "no newline yet: {events:?}");
+        peer.write_all(b"f\n").unwrap();
+        let events = read_all_lines(&mut conn, 1 << 20);
+        assert_eq!(events, vec![LineEvent::Line(b"half".to_vec())]);
+    }
+
+    #[test]
+    fn oversized_line_overflows_and_closes_reading() {
+        let (mut conn, mut peer) = pair();
+        peer.write_all(&[b'x'; 64]).unwrap();
+        peer.write_all(b"\n").unwrap();
+        let events = read_all_lines(&mut conn, 16);
+        assert_eq!(events, vec![LineEvent::Overflow]);
+        assert!(conn.read_closed);
+        // responses still flush after a read-side overflow
+        conn.enqueue_line("bye");
+        conn.try_flush();
+        let mut line = String::new();
+        BufReader::new(peer).read_line(&mut line).unwrap();
+        assert_eq!(line, "bye\n");
+    }
+
+    #[test]
+    fn peer_eof_closes_the_read_half() {
+        let (mut conn, peer) = pair();
+        drop(peer);
+        let mut events = Vec::new();
+        for _ in 0..200 {
+            conn.try_read(1 << 20, &mut events);
+            if conn.read_closed {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(conn.read_closed);
+        assert!(events.is_empty());
+    }
+
+    #[test]
+    fn connect_refused_is_an_error() {
+        // bind-then-drop: the port existed a moment ago, nobody listens now
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        drop(listener);
+        assert!(Conn::connect(&addr.to_string(), Duration::from_millis(200)).is_err());
+    }
+}

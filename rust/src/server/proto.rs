@@ -1,19 +1,30 @@
-//! The `spatzd` wire protocol: newline-delimited JSON over TCP.
+//! The `spatzd` wire protocol (v2): newline-delimited JSON over TCP.
 //!
-//! One request object per line, one response object per line, in order.
-//! The full grammar is documented in `DESIGN.md` §The server; the shapes:
+//! One request object per line, one response object per line. The full
+//! grammar is documented in `DESIGN.md` §The server; the shapes:
 //!
 //! ```text
-//! {"op":"submit","job":{"type":"kernel","kernel":"fft","mode":"merge"},"seed":7}
+//! {"id":7,"op":"submit","job":{"type":"kernel","kernel":"fft","mode":"merge"},"seed":7}
 //! {"op":"submit","job":{"type":"mixed","kernel":"fmatmul","mode":"auto","iters":2}}
-//! {"op":"batch","scenario":"storm","jobs":64,"seed":7}
+//! {"op":"batch","scenario":"storm","jobs":64,"seed":7,"reports":true}
 //! {"op":"status"} | {"op":"metrics"} | {"op":"shutdown"}
 //! ```
 //!
-//! Responses always carry `"ok"`: `{"ok":true,...}` on success,
-//! `{"ok":false,"code":C,"error":"..."}` on refusal — `400` malformed,
-//! `429` admission-control reject (bounded queue full), `503` shutting
-//! down, `500` execution failure.
+//! **Tagging.** A request may carry a client-chosen `id` (a string or a
+//! non-negative integer); the matching response echoes it verbatim as
+//! its *first* field. Tagged requests may be pipelined — many in flight
+//! on one connection — and their responses may arrive **out of order**
+//! (job completions interleave with immediate `status` answers), so the
+//! tag is the only correlation. Untagged requests still get untagged
+//! responses, which keeps every v1 client working; an untagged client
+//! that pipelines gets whatever order completions happen in, so serial
+//! request/response (v1 behavior) is the only sensible untagged use.
+//!
+//! Responses always carry `"ok"`: `{"id":...,"ok":true,...}` on success,
+//! `{"id":...,"ok":false,"code":C,"error":"..."}` on refusal — `400`
+//! malformed, `429` admission-control reject (bounded queue full, too
+//! many in-flight tags, oversized report request), `503` shutting down,
+//! `500` execution failure, `502` router-to-backend failure.
 //!
 //! **Byte-identity.** [`report_to_json`]/[`report_from_json`] cover
 //! every *result* field of [`JobReport`] (all counters, priced energy,
@@ -41,11 +52,15 @@ pub enum Request {
     Submit { job: Job, seed: Option<u64> },
     /// Generate a scenario server-side and run the whole batch through
     /// the admission-controlled queue; the response carries aggregate
-    /// numbers plus a content digest of the reports.
+    /// numbers plus a content digest of the reports. With
+    /// `"reports":true` it additionally returns every per-job report —
+    /// allowed only up to `[server] batch_report_limit` jobs (oversized
+    /// ⇒ explicit `429` before any job is generated).
     Batch {
         kind: ScenarioKind,
         jobs: usize,
         seed: Option<u64>,
+        reports: bool,
     },
     /// Queue/worker occupancy snapshot.
     Status,
@@ -353,19 +368,46 @@ pub fn reports_digest<'a>(reports: impl IntoIterator<Item = &'a JobReport>) -> u
 
 // ---- requests ----
 
-/// Parse one request line.
-pub fn parse_request(line: &str) -> anyhow::Result<Request> {
+/// A request plus its optional client-chosen correlation tag. The tag is
+/// echoed verbatim as the first field of the matching response, which is
+/// what lets a pipelining client (or the router) match out-of-order
+/// completions back to requests.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Envelope {
+    /// `None` on untagged (v1-style) requests; their responses carry no
+    /// `id` field either.
+    pub id: Option<Json>,
+    pub req: Request,
+}
+
+/// Validate and extract a request's `id` tag: a string or a
+/// non-negative integer (either form re-encodes canonically, so the
+/// echo is byte-exact). Anything else is a `400` — a silently dropped
+/// tag would desync the client's correlation map.
+fn request_id(obj: &Json) -> anyhow::Result<Option<Json>> {
+    match obj.get("id") {
+        None => Ok(None),
+        Some(v) if v.is_null() => Ok(None),
+        Some(v @ Json::Str(_)) => Ok(Some(v.clone())),
+        Some(v @ Json::Num(_)) if v.as_u64().is_some() => Ok(Some(v.clone())),
+        Some(_) => anyhow::bail!("field `id` must be a string or a non-negative integer"),
+    }
+}
+
+/// Parse one request line into its envelope (tag + request).
+pub fn parse_envelope(line: &str) -> anyhow::Result<Envelope> {
     let j = Json::parse(line).map_err(|e| anyhow::anyhow!("{e}"))?;
     anyhow::ensure!(
         matches!(j, Json::Obj(_)),
         "request must be a JSON object"
     );
+    let id = request_id(&j)?;
     let seed = opt_u64(&j, "seed")?;
-    match need_str(&j, "op")? {
-        "submit" => Ok(Request::Submit {
+    let req = match need_str(&j, "op")? {
+        "submit" => Request::Submit {
             job: job_from_json(need(&j, "job")?)?,
             seed,
-        }),
+        },
         "batch" => {
             let name = need_str(&j, "scenario")?;
             let kind = ScenarioKind::from_name(name).ok_or_else(|| {
@@ -373,19 +415,28 @@ pub fn parse_request(line: &str) -> anyhow::Result<Request> {
             })?;
             let jobs = need_u64(&j, "jobs")? as usize;
             anyhow::ensure!(jobs >= 1, "`jobs` must be >= 1");
-            Ok(Request::Batch { kind, jobs, seed })
+            let reports = match j.get("reports") {
+                None => false,
+                Some(Json::Bool(b)) => *b,
+                Some(_) => anyhow::bail!("field `reports` must be a boolean"),
+            };
+            Request::Batch { kind, jobs, seed, reports }
         }
-        "status" => Ok(Request::Status),
-        "metrics" => Ok(Request::Metrics),
-        "shutdown" => Ok(Request::Shutdown),
+        "status" => Request::Status,
+        "metrics" => Request::Metrics,
+        "shutdown" => Request::Shutdown,
         other => anyhow::bail!("unknown op `{other}` (submit|batch|status|metrics|shutdown)"),
-    }
+    };
+    Ok(Envelope { id, req })
 }
 
-/// Canonical request lines (what `loadgen` sends; the parser inverts
-/// them exactly — tested).
-pub fn encode_request(req: &Request) -> String {
-    let j = match req {
+/// Parse one request line, discarding any tag (v1 callers and tests).
+pub fn parse_request(line: &str) -> anyhow::Result<Request> {
+    parse_envelope(line).map(|e| e.req)
+}
+
+fn request_to_json(req: &Request) -> Json {
+    match req {
         Request::Submit { job, seed } => {
             let mut fields = vec![
                 ("op".to_string(), Json::str("submit")),
@@ -396,7 +447,7 @@ pub fn encode_request(req: &Request) -> String {
             }
             Json::Obj(fields)
         }
-        Request::Batch { kind, jobs, seed } => {
+        Request::Batch { kind, jobs, seed, reports } => {
             let mut fields = vec![
                 ("op".to_string(), Json::str("batch")),
                 ("scenario".to_string(), Json::str(kind.name())),
@@ -405,32 +456,68 @@ pub fn encode_request(req: &Request) -> String {
             if let Some(s) = seed {
                 fields.push(("seed".to_string(), u(*s)));
             }
+            if *reports {
+                fields.push(("reports".to_string(), Json::Bool(true)));
+            }
             Json::Obj(fields)
         }
         Request::Status => Json::Obj(vec![("op".into(), Json::str("status"))]),
         Request::Metrics => Json::Obj(vec![("op".into(), Json::str("metrics"))]),
         Request::Shutdown => Json::Obj(vec![("op".into(), Json::str("shutdown"))]),
+    }
+}
+
+/// Canonical request lines (what `loadgen` sends; the parser inverts
+/// them exactly — tested).
+pub fn encode_request(req: &Request) -> String {
+    request_to_json(req).encode()
+}
+
+/// The canonical tagged request line: [`encode_request`] with `id` as
+/// the leading field.
+pub fn encode_request_tagged(req: &Request, id: &Json) -> String {
+    let Json::Obj(mut fields) = request_to_json(req) else {
+        unreachable!("requests encode as objects")
     };
-    j.encode()
+    fields.insert(0, ("id".to_string(), id.clone()));
+    Json::Obj(fields).encode()
 }
 
 // ---- responses (server side builders, shared with loadgen's decoder) ----
 
-/// `{"ok":false,"code":C,"error":...}`.
-pub fn error_response(code: u16, msg: &str) -> String {
-    Json::Obj(vec![
-        ("ok".into(), Json::Bool(false)),
-        ("code".into(), u(code as u64)),
-        ("error".into(), Json::str(msg)),
-    ])
-    .encode()
+/// `{"id":...,"ok":false,"code":C,"error":...}` (no `id` field when the
+/// request was untagged).
+pub fn error_response_tagged(id: Option<&Json>, code: u16, msg: &str) -> String {
+    let mut fields = Vec::with_capacity(4);
+    if let Some(id) = id {
+        fields.push(("id".to_string(), id.clone()));
+    }
+    fields.push(("ok".to_string(), Json::Bool(false)));
+    fields.push(("code".to_string(), u(code as u64)));
+    fields.push(("error".to_string(), Json::str(msg)));
+    Json::Obj(fields).encode()
 }
 
-/// Wrap success fields as `{"ok":true,<fields...>}`.
-pub fn ok_response(fields: Vec<(String, Json)>) -> String {
-    let mut all = vec![("ok".to_string(), Json::Bool(true))];
+/// Wrap success fields as `{"id":...,"ok":true,<fields...>}` (no `id`
+/// field when the request was untagged).
+pub fn ok_response_tagged(id: Option<&Json>, fields: Vec<(String, Json)>) -> String {
+    let mut all = Vec::with_capacity(fields.len() + 2);
+    if let Some(id) = id {
+        all.push(("id".to_string(), id.clone()));
+    }
+    all.push(("ok".to_string(), Json::Bool(true)));
     all.extend(fields);
     Json::Obj(all).encode()
+}
+
+/// Untagged `{"ok":false,...}` (v1 form).
+pub fn error_response(code: u16, msg: &str) -> String {
+    error_response_tagged(None, code, msg)
+}
+
+/// Untagged `{"ok":true,...}` (v1 form).
+pub fn ok_response(fields: Vec<(String, Json)>) -> String {
+    ok_response_tagged(None, fields)
 }
 
 #[cfg(test)]
@@ -523,7 +610,13 @@ mod tests {
                 },
                 seed: None,
             },
-            Request::Batch { kind: ScenarioKind::Storm, jobs: 64, seed: Some(7) },
+            Request::Batch { kind: ScenarioKind::Storm, jobs: 64, seed: Some(7), reports: false },
+            Request::Batch {
+                kind: ScenarioKind::KernelSweep,
+                jobs: 8,
+                seed: None,
+                reports: true,
+            },
             Request::Status,
             Request::Metrics,
             Request::Shutdown,
@@ -532,7 +625,47 @@ mod tests {
             let line = encode_request(req);
             let back = parse_request(&line).unwrap();
             assert_eq!(&back, req, "{line}");
+            // the tagged form parses to the same request with the tag attached
+            let tagged = encode_request_tagged(req, &Json::str("t-1"));
+            let env = parse_envelope(&tagged).unwrap();
+            assert_eq!(env.id, Some(Json::str("t-1")), "{tagged}");
+            assert_eq!(&env.req, req, "{tagged}");
         }
+    }
+
+    #[test]
+    fn envelope_tags_roundtrip_and_validate() {
+        let line = r#"{"id":7,"op":"status"}"#;
+        let env = parse_envelope(line).unwrap();
+        assert_eq!(env.id, Some(Json::num(7.0)));
+        assert_eq!(env.req, Request::Status);
+        // untagged and null-tagged both mean "no tag"
+        assert_eq!(parse_envelope(r#"{"op":"status"}"#).unwrap().id, None);
+        assert_eq!(parse_envelope(r#"{"id":null,"op":"status"}"#).unwrap().id, None);
+        // bad tags are a hard 400, not a silent drop
+        for bad in [
+            r#"{"id":-1,"op":"status"}"#,
+            r#"{"id":1.5,"op":"status"}"#,
+            r#"{"id":[1],"op":"status"}"#,
+            r#"{"id":true,"op":"status"}"#,
+        ] {
+            assert!(parse_envelope(bad).is_err(), "should reject: {bad}");
+        }
+        // `reports` must be a boolean when present
+        assert!(parse_envelope(r#"{"op":"batch","scenario":"storm","jobs":2,"reports":1}"#)
+            .is_err());
+    }
+
+    #[test]
+    fn tagged_responses_echo_the_id_first() {
+        let id = Json::num(42.0);
+        let ok = ok_response_tagged(Some(&id), vec![("x".into(), Json::num(1.0))]);
+        assert!(ok.starts_with(r#"{"id":42,"ok":true"#), "{ok}");
+        let err = error_response_tagged(Some(&Json::str("a")), 429, "full");
+        assert!(err.starts_with(r#"{"id":"a","ok":false"#), "{err}");
+        // untagged builders stay byte-identical to the v1 forms
+        assert_eq!(ok_response_tagged(None, vec![]), ok_response(vec![]));
+        assert_eq!(error_response_tagged(None, 400, "m"), error_response(400, "m"));
     }
 
     #[test]

@@ -1,0 +1,461 @@
+//! Digest-affinity shard router: one address, N `spatzd` backends.
+//!
+//! `spatzformer route --addr HOST:PORT --backend ADDR...` speaks
+//! protocol v2 on the front and back: each client request is re-tagged
+//! with an internal sequence number, forwarded to one backend, and the
+//! backend's response is re-tagged with the client's original `id` (or
+//! untagged, matching what the client sent) before delivery. Because
+//! both codec directions are canonical ([`crate::util::json`] re-encodes
+//! a parsed canonical document byte-identically), the `report` node a
+//! client receives through the router is byte-for-byte the one the
+//! backend produced — the determinism contract survives the extra hop.
+//!
+//! **Affinity policy.** `submit` routes by the *existing* FNV-1a
+//! result-cache digest ([`crate::fleet::cache::job_key`]) of
+//! `(config, job)` under the router's base config — the same key every
+//! backend uses for its own result cache — so a repeated job lands on
+//! the backend that already cached it, and cache hit rates survive
+//! horizontal scale-out. `batch` routes by a digest of
+//! `(scenario, jobs, seed)` (same idea: identical batches re-hit one
+//! backend's caches). `status`/`metrics` have no content to digest and
+//! round-robin instead. `shutdown` broadcasts: every backend is asked
+//! to stop, their acks are awaited (bounded), then the client gets its
+//! ok and the router exits.
+//!
+//! One router thread owns every socket (the [`super::mux`] readiness
+//! style): nonblocking client conns, one persistent nonblocking conn
+//! per backend (dialed on first use, re-dialed after failure), explicit
+//! `502` to the affected clients when a backend dies mid-request.
+
+use super::mux::{Conn, LineEvent};
+use super::proto::{self, Envelope, Request};
+use super::MAX_INFLIGHT_PER_CONN;
+use crate::config::SimConfig;
+use crate::fleet::{cache, FleetJob};
+use crate::util::{Fnv1a, Json};
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Same line cap as the daemon.
+const MAX_LINE: usize = 1 << 20;
+
+/// Same slow-reader pause as the daemon.
+const WRITE_PAUSE: usize = 256 * 1024;
+
+const IDLE_TICK: Duration = Duration::from_millis(1);
+
+/// Bounded blocking dial of a backend (once per backend lifetime, not
+/// per request).
+const CONNECT_TIMEOUT: Duration = Duration::from_millis(500);
+
+/// Knobs of one router instance.
+#[derive(Debug, Clone)]
+pub struct RouterOptions {
+    /// Frontend listen address, `HOST:PORT` (port 0 = ephemeral).
+    pub addr: String,
+    /// Backend daemon addresses; affinity is `digest % backends.len()`.
+    pub backends: Vec<String>,
+}
+
+/// A live router: the CLI blocks on [`RunningRouter::wait`]; tests
+/// drive it in-process over loopback.
+pub struct RunningRouter {
+    addr: SocketAddr,
+    stopping: Arc<AtomicBool>,
+    thread: std::thread::JoinHandle<()>,
+}
+
+impl RunningRouter {
+    /// The actual bound frontend address.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Trigger a stop without a client: broadcasts `shutdown` to every
+    /// backend, then exits (same path as a wire `shutdown`).
+    pub fn shutdown(&self) {
+        self.stopping.store(true, Ordering::SeqCst);
+    }
+
+    /// Block until the router thread exits.
+    pub fn wait(self) -> anyhow::Result<()> {
+        self.thread
+            .join()
+            .map_err(|_| anyhow::anyhow!("router loop panicked"))
+    }
+}
+
+/// Bind the frontend and start the router loop. `cfg` is the digest
+/// base for affinity — it should match the backends' config so the
+/// affinity key equals their result-cache key (any config still
+/// *routes* correctly, it just loses cache affinity).
+pub fn start(cfg: SimConfig, opts: RouterOptions) -> anyhow::Result<RunningRouter> {
+    anyhow::ensure!(
+        !opts.backends.is_empty(),
+        "router needs at least one backend address"
+    );
+    cfg.validate()?;
+    let listener = TcpListener::bind(opts.addr.as_str())
+        .map_err(|e| anyhow::anyhow!("cannot bind {}: {e}", opts.addr))?;
+    listener.set_nonblocking(true)?;
+    let addr = listener.local_addr()?;
+    let stopping = Arc::new(AtomicBool::new(false));
+    let drain_ms = cfg.server.drain_ms;
+    let flag = stopping.clone();
+    let loop_ = RouterLoop {
+        cfg,
+        listener: Some(listener),
+        clients: HashMap::new(),
+        next_client: 0,
+        backends: opts
+            .backends
+            .into_iter()
+            .map(|addr| Backend { addr, conn: None, inflight: HashMap::new() })
+            .collect(),
+        next_seq: 0,
+        rr: 0,
+        stopping: flag,
+        drain_ms,
+        shutdown_reply: None,
+        broadcast_sent: false,
+        acks_pending: 0,
+        deadline: None,
+    };
+    let thread = std::thread::spawn(move || loop_.run());
+    Ok(RunningRouter { addr, stopping, thread })
+}
+
+/// A routed request awaiting its backend response.
+struct Pending {
+    /// Destination client token; `None` for the router's own shutdown
+    /// broadcast (the ack is counted, not forwarded).
+    client: Option<u64>,
+    /// The client's original tag, restored on the way back.
+    id: Option<Json>,
+}
+
+struct Backend {
+    addr: String,
+    /// Dialed on first routed request; `None` again after a failure
+    /// (the next request re-dials).
+    conn: Option<Conn>,
+    /// Internal sequence tag → who asked.
+    inflight: HashMap<u64, Pending>,
+}
+
+struct RouterLoop {
+    cfg: SimConfig,
+    listener: Option<TcpListener>,
+    clients: HashMap<u64, Conn>,
+    next_client: u64,
+    backends: Vec<Backend>,
+    next_seq: u64,
+    /// Round-robin cursor for undigestable requests.
+    rr: usize,
+    stopping: Arc<AtomicBool>,
+    drain_ms: u64,
+    /// The wire client owed the final shutdown ok, if any.
+    shutdown_reply: Option<(u64, Option<Json>)>,
+    broadcast_sent: bool,
+    acks_pending: usize,
+    deadline: Option<Instant>,
+}
+
+impl RouterLoop {
+    fn run(mut self) {
+        loop {
+            let mut progress = self.accept_new();
+            progress |= self.pump_backends();
+            progress |= self.pump_clients();
+            self.reap();
+            if self.stop_check() {
+                break;
+            }
+            if !progress {
+                std::thread::sleep(IDLE_TICK);
+            }
+        }
+    }
+
+    fn accept_new(&mut self) -> bool {
+        let Some(listener) = &self.listener else {
+            return false;
+        };
+        let mut progress = false;
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    progress = true;
+                    if let Ok(conn) = Conn::new(stream) {
+                        let tok = self.next_client;
+                        self.next_client += 1;
+                        self.clients.insert(tok, conn);
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+        progress
+    }
+
+    fn pump_clients(&mut self) -> bool {
+        let mut progress = false;
+        let tokens: Vec<u64> = self.clients.keys().copied().collect();
+        let mut events = Vec::new();
+        for tok in tokens {
+            let mut conn = self.clients.remove(&tok).expect("token just listed");
+            progress |= conn.try_flush();
+            if conn.pending_write() <= WRITE_PAUSE {
+                events.clear();
+                progress |= conn.try_read(MAX_LINE, &mut events);
+                for ev in events.drain(..) {
+                    match ev {
+                        LineEvent::Line(raw) => self.handle_client_line(tok, &mut conn, &raw),
+                        LineEvent::Overflow => conn.enqueue_line(&proto::error_response(
+                            400,
+                            "request line exceeds maximum length",
+                        )),
+                    }
+                }
+                progress |= conn.try_flush();
+            }
+            self.clients.insert(tok, conn);
+        }
+        progress
+    }
+
+    fn pump_backends(&mut self) -> bool {
+        let mut progress = false;
+        let mut events = Vec::new();
+        for b in 0..self.backends.len() {
+            let Some(mut conn) = self.backends[b].conn.take() else {
+                continue;
+            };
+            progress |= conn.try_flush();
+            events.clear();
+            progress |= conn.try_read(MAX_LINE, &mut events);
+            for ev in events.drain(..) {
+                if let LineEvent::Line(raw) = ev {
+                    self.handle_backend_line(b, &raw);
+                }
+            }
+            if conn.dead || conn.read_closed {
+                self.fail_backend(b);
+            } else {
+                self.backends[b].conn = Some(conn);
+            }
+        }
+        progress
+    }
+
+    /// A backend died: every request in flight on it gets an explicit
+    /// `502`; the connection slot empties so the next request re-dials.
+    fn fail_backend(&mut self, b: usize) {
+        let addr = self.backends[b].addr.clone();
+        let inflight = std::mem::take(&mut self.backends[b].inflight);
+        for (_, pending) in inflight {
+            match pending.client {
+                Some(tok) => {
+                    let line = proto::error_response_tagged(
+                        pending.id.as_ref(),
+                        502,
+                        &format!("backend {addr} dropped the connection"),
+                    );
+                    self.deliver(tok, &line);
+                }
+                None => self.acks_pending = self.acks_pending.saturating_sub(1),
+            }
+        }
+    }
+
+    fn reap(&mut self) {
+        self.clients.retain(|_, c| {
+            !c.dead && !(c.read_closed && c.inflight == 0 && c.pending_write() == 0)
+        });
+    }
+
+    /// Broadcast shutdown once, await backend acks (bounded by
+    /// `drain_ms`), answer the requesting client, flush, exit.
+    fn stop_check(&mut self) -> bool {
+        if !self.stopping.load(Ordering::SeqCst) {
+            return false;
+        }
+        if !self.broadcast_sent {
+            self.broadcast_sent = true;
+            self.listener = None;
+            self.deadline = Some(Instant::now() + Duration::from_millis(self.drain_ms));
+            let mut seq = self.next_seq;
+            let mut acks = 0usize;
+            for backend in &mut self.backends {
+                if backend.conn.is_none() {
+                    backend.conn = Conn::connect(&backend.addr, CONNECT_TIMEOUT).ok();
+                }
+                let tag = seq;
+                seq += 1;
+                if let Some(conn) = backend.conn.as_mut() {
+                    conn.enqueue_line(&proto::encode_request_tagged(
+                        &Request::Shutdown,
+                        &Json::u64_lossless(tag),
+                    ));
+                    conn.try_flush();
+                    backend.inflight.insert(tag, Pending { client: None, id: None });
+                    acks += 1;
+                }
+            }
+            self.next_seq = seq;
+            self.acks_pending += acks;
+        }
+        let deadline = self.deadline.expect("set with the broadcast");
+        if self.acks_pending > 0 && Instant::now() < deadline {
+            return false;
+        }
+        if let Some((tok, id)) = self.shutdown_reply.take() {
+            let line = proto::ok_response_tagged(
+                id.as_ref(),
+                vec![("shutting_down".into(), Json::Bool(true))],
+            );
+            self.deliver(tok, &line);
+        }
+        // bounded final flush so the last acks actually reach clients
+        let end = Instant::now() + Duration::from_millis(500);
+        while Instant::now() < end
+            && self.clients.values().any(|c| !c.dead && c.pending_write() > 0)
+        {
+            for c in self.clients.values_mut() {
+                c.try_flush();
+            }
+            std::thread::sleep(IDLE_TICK);
+        }
+        true
+    }
+
+    fn handle_client_line(&mut self, tok: u64, conn: &mut Conn, raw: &[u8]) {
+        let Ok(text) = std::str::from_utf8(raw) else {
+            conn.enqueue_line(&proto::error_response(400, "request line is not valid UTF-8"));
+            return;
+        };
+        let text = text.trim();
+        if text.is_empty() {
+            return;
+        }
+        let env = match proto::parse_envelope(text) {
+            Ok(env) => env,
+            Err(e) => {
+                conn.enqueue_line(&proto::error_response(400, &format!("{e:#}")));
+                return;
+            }
+        };
+        let Envelope { id, req } = env;
+        if self.stopping.load(Ordering::SeqCst) {
+            conn.enqueue_line(&proto::error_response_tagged(id.as_ref(), 503, "shutting down"));
+            return;
+        }
+        let n = self.backends.len() as u64;
+        match req {
+            Request::Shutdown => {
+                // answered from stop_check once every backend acked
+                self.shutdown_reply = Some((tok, id));
+                conn.inflight += 1;
+                self.stopping.store(true, Ordering::SeqCst);
+            }
+            Request::Status | Request::Metrics => {
+                let b = self.rr % self.backends.len();
+                self.rr += 1;
+                self.forward(b, tok, conn, id, &req);
+            }
+            Request::Submit { ref job, seed } => {
+                let fj = FleetJob { job: job.clone(), seed };
+                let key = cache::job_key(&fj.config(&self.cfg), &fj.job);
+                self.forward((key % n) as usize, tok, conn, id, &req);
+            }
+            Request::Batch { kind, jobs, seed, .. } => {
+                let mut h = Fnv1a::new();
+                h.write(kind.name().as_bytes());
+                h.write(&(jobs as u64).to_le_bytes());
+                h.write(&seed.unwrap_or(self.cfg.seed).to_le_bytes());
+                self.forward((h.finish() % n) as usize, tok, conn, id, &req);
+            }
+        }
+    }
+
+    /// Re-tag and forward one request to backend `b`.
+    fn forward(&mut self, b: usize, tok: u64, conn: &mut Conn, id: Option<Json>, req: &Request) {
+        if conn.inflight >= MAX_INFLIGHT_PER_CONN {
+            conn.enqueue_line(&proto::error_response_tagged(
+                id.as_ref(),
+                429,
+                &format!(
+                    "too many in-flight requests on this connection \
+                     (max {MAX_INFLIGHT_PER_CONN})"
+                ),
+            ));
+            return;
+        }
+        if self.backends[b].conn.is_none() {
+            match Conn::connect(&self.backends[b].addr, CONNECT_TIMEOUT) {
+                Ok(c) => self.backends[b].conn = Some(c),
+                Err(e) => {
+                    conn.enqueue_line(&proto::error_response_tagged(
+                        id.as_ref(),
+                        502,
+                        &format!("{e:#}"),
+                    ));
+                    return;
+                }
+            }
+        }
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let backend = &mut self.backends[b];
+        let bc = backend.conn.as_mut().expect("connected above");
+        bc.enqueue_line(&proto::encode_request_tagged(req, &Json::u64_lossless(seq)));
+        bc.try_flush();
+        backend.inflight.insert(seq, Pending { client: Some(tok), id });
+        conn.inflight += 1;
+    }
+
+    /// One backend response: strip the internal tag, restore the
+    /// client's, deliver. Untagged or unknown-tag lines are dropped —
+    /// they correlate to nothing.
+    fn handle_backend_line(&mut self, b: usize, raw: &[u8]) {
+        let Ok(text) = std::str::from_utf8(raw) else {
+            return;
+        };
+        let Ok(j) = Json::parse(text.trim()) else {
+            return;
+        };
+        let Some(seq) = j.get("id").and_then(Json::as_u64) else {
+            return;
+        };
+        let Some(pending) = self.backends[b].inflight.remove(&seq) else {
+            return;
+        };
+        let Some(client) = pending.client else {
+            self.acks_pending = self.acks_pending.saturating_sub(1);
+            return;
+        };
+        let Json::Obj(fields) = j else {
+            return;
+        };
+        let mut fields: Vec<(String, Json)> =
+            fields.into_iter().filter(|(k, _)| k != "id").collect();
+        if let Some(orig) = pending.id {
+            fields.insert(0, ("id".to_string(), orig));
+        }
+        self.deliver(client, &Json::Obj(fields).encode());
+    }
+
+    fn deliver(&mut self, tok: u64, line: &str) {
+        if let Some(conn) = self.clients.get_mut(&tok) {
+            conn.inflight = conn.inflight.saturating_sub(1);
+            if !conn.dead {
+                conn.enqueue_line(line);
+            }
+        }
+    }
+}

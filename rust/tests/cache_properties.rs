@@ -58,6 +58,8 @@ fn prop_scheduling_knobs_never_change_the_key() {
         mutated.server.addr = format!("10.0.0.{}:{}", g.int(1, 254), g.int(1024, 65535));
         mutated.server.queue_depth = g.int(1, 4096);
         mutated.server.workers = g.int(0, 64);
+        mutated.server.batch_report_limit = g.int(0, 1024);
+        mutated.server.drain_ms = g.int(0, 60_000) as u64;
         assert_eq!(
             job_key(&mutated, &job),
             key,

@@ -48,8 +48,18 @@ impl Client {
 
     /// Send one request line, return the decoded response.
     fn roundtrip(&mut self, line: &str) -> Json {
+        self.send(line);
+        self.read_response()
+    }
+
+    /// Send without waiting — protocol v2 pipelining.
+    fn send(&mut self, line: &str) {
         writeln!(self.writer, "{line}").unwrap();
         self.writer.flush().unwrap();
+    }
+
+    /// Read and decode the next response line.
+    fn read_response(&mut self) -> Json {
         let mut response = String::new();
         let n = self.reader.read_line(&mut response).unwrap();
         assert!(n > 0, "daemon closed the connection mid-request");
@@ -150,6 +160,7 @@ fn full_queue_yields_explicit_reject_not_a_hang() {
         kind: ScenarioKind::Storm,
         jobs: 64,
         seed: Some(7),
+        reports: false,
     }));
     assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
     assert_eq!(resp.get("code").and_then(Json::as_u64), Some(429));
@@ -168,6 +179,7 @@ fn full_queue_yields_explicit_reject_not_a_hang() {
         kind: ScenarioKind::Storm,
         jobs: 2,
         seed: Some(7),
+        reports: false,
     }));
     assert_ok(&resp);
     assert_eq!(resp.get("jobs").and_then(Json::as_u64), Some(2));
@@ -193,6 +205,7 @@ fn batch_digest_matches_locally_computed_reports() {
         kind: ScenarioKind::KernelSweep,
         jobs: 10,
         seed: Some(0xFEED),
+        reports: false,
     });
     let first = client.roundtrip(&req);
     let second = client.roundtrip(&req);
@@ -274,7 +287,11 @@ fn loadgen_replays_deterministically_and_round_trips() {
     assert_ok(&metrics);
     assert_eq!(metrics.get("submits").and_then(Json::as_u64), Some(8));
     assert_eq!(metrics.get("jobs_completed").and_then(Json::as_u64), Some(8));
-    assert!(metrics.get("latency_ms").unwrap().get("p99_ms").is_some());
+    // latency windows split per request type: 8 submits populate the
+    // submit window, the batch/status windows stay explicit nulls
+    let lat = metrics.get("latency_ms").unwrap();
+    assert!(lat.get("submit").unwrap().get("p99_ms").and_then(Json::as_f64).is_some(), "{lat}");
+    assert_eq!(lat.get("batch"), Some(&Json::Null), "{lat}");
     assert!(metrics.get("result_cache_hits").is_some());
     assert!(metrics.get("compile_cache_misses").is_some());
 
@@ -309,6 +326,231 @@ fn wire_shutdown_stops_the_daemon_cleanly() {
         TcpStream::connect(addr).is_err(),
         "daemon must stop listening after shutdown"
     );
+}
+
+/// Protocol v2: two requests in one flush; the cheap `status` overtakes
+/// the simulation, and tags match each response back to its request.
+#[test]
+fn pipelined_requests_answer_out_of_order_by_tag() {
+    let cfg = SimConfig::spatzformer();
+    let daemon = start(cfg.clone());
+    let mut client = Client::connect(daemon.addr());
+    let job = Job::Kernel { kernel: KernelId::Fdotp, policy: ModePolicy::Split };
+    let submit = proto::encode_request_tagged(
+        &proto::Request::Submit { job: job.clone(), seed: None },
+        &Json::str("slow"),
+    );
+    let status = proto::encode_request_tagged(&proto::Request::Status, &Json::u64_lossless(42));
+    client.send(&submit);
+    client.send(&status);
+    // status answers first: its response is queued while the submit is
+    // still inside the worker pool
+    let first = client.read_response();
+    assert_eq!(first.get("id").and_then(Json::as_u64), Some(42), "{first}");
+    assert_ok(&first);
+    assert!(first.get("queue_depth").and_then(Json::as_u64).unwrap() >= 1, "{first}");
+    assert!(first.get("in_flight").and_then(Json::as_u64).is_some(), "{first}");
+    assert!(first.get("connections").and_then(Json::as_u64).unwrap() >= 1, "{first}");
+    let second = client.read_response();
+    assert_eq!(second.get("id").and_then(Json::as_str), Some("slow"), "{second}");
+    assert_ok(&second);
+    // out-of-order delivery does not perturb the report bytes
+    let direct = Coordinator::new(cfg).unwrap().submit(&job).unwrap();
+    assert_eq!(
+        second.get("report").unwrap().encode(),
+        proto::report_to_json(&direct).encode(),
+        "pipelined report must stay byte-identical to the direct run"
+    );
+    drop(client);
+    daemon.shutdown();
+    daemon.wait().unwrap();
+}
+
+/// A client that pipelines past the per-connection in-flight cap without
+/// reading gets explicit tagged `429`s, never a hang — and every tag is
+/// answered exactly once.
+#[test]
+fn pipelining_past_the_inflight_cap_rejects_explicitly() {
+    let mut cfg = SimConfig::spatzformer();
+    cfg.server.workers = 1;
+    cfg.server.queue_depth = 256;
+    let daemon = start(cfg);
+    let mut client = Client::connect(daemon.addr());
+    let total = 100usize; // > the 64-request per-connection cap
+    for i in 0..total {
+        let line = proto::encode_request_tagged(
+            &proto::Request::Submit {
+                job: Job::Kernel { kernel: KernelId::Faxpy, policy: ModePolicy::Split },
+                seed: None,
+            },
+            &Json::u64_lossless(i as u64),
+        );
+        writeln!(client.writer, "{line}").unwrap();
+    }
+    client.writer.flush().unwrap();
+    let mut seen = vec![0usize; total];
+    let (mut ok, mut rejected) = (0u64, 0u64);
+    for _ in 0..total {
+        let resp = client.read_response();
+        let id = resp.get("id").and_then(Json::as_u64).expect("every response is tagged") as usize;
+        assert!(id < total, "{resp}");
+        seen[id] += 1;
+        if resp.get("ok").and_then(Json::as_bool) == Some(true) {
+            ok += 1;
+        } else {
+            assert_eq!(resp.get("code").and_then(Json::as_u64), Some(429), "{resp}");
+            rejected += 1;
+        }
+    }
+    assert!(seen.iter().all(|&n| n == 1), "every tag answered exactly once: {seen:?}");
+    assert_eq!(ok + rejected, total as u64);
+    assert!(ok >= 1, "some requests must be admitted");
+    assert!(rejected >= 1, "the cap must trip when 100 requests pipeline unread");
+    // the connection and the daemon both survive the overload
+    let status = client.roundtrip(&proto::encode_request(&proto::Request::Status));
+    assert_ok(&status);
+    drop(client);
+    daemon.shutdown();
+    daemon.wait().unwrap();
+}
+
+/// The shard router forwards by result-cache digest, keeps reports
+/// byte-identical through the extra hop, survives pipelined tags, and
+/// broadcasts shutdown to every backend.
+#[test]
+fn router_preserves_byte_identity_and_shards_by_digest() {
+    let cfg = SimConfig::spatzformer();
+    let d1 = start(cfg.clone());
+    let d2 = start(cfg.clone());
+    let router = server::router::start(
+        cfg.clone(),
+        server::router::RouterOptions {
+            addr: "127.0.0.1:0".to_string(),
+            backends: vec![d1.addr().to_string(), d2.addr().to_string()],
+        },
+    )
+    .unwrap();
+    let mut client = Client::connect(router.addr());
+    let job = Job::Kernel { kernel: KernelId::Fdotp, policy: ModePolicy::Merge };
+    let resp = client.submit(&job);
+    assert_ok(&resp);
+    let direct = Coordinator::new(cfg.clone()).unwrap().submit(&job).unwrap();
+    assert_eq!(
+        resp.get("report").unwrap().encode(),
+        proto::report_to_json(&direct).encode(),
+        "the router hop must not perturb report bytes"
+    );
+    // digest affinity: the duplicate lands on the same backend, whose
+    // result cache serves it — visible in the backends' own metrics
+    let resp2 = client.submit(&job);
+    assert_ok(&resp2);
+    assert_eq!(resp.get("report").unwrap().encode(), resp2.get("report").unwrap().encode());
+    let hits: u64 = [d1.addr(), d2.addr()]
+        .iter()
+        .map(|&a| {
+            let mut c = Client::connect(a);
+            let m = c.roundtrip(&proto::encode_request(&proto::Request::Metrics));
+            m.get("result_cache_hits").and_then(Json::as_u64).unwrap()
+        })
+        .sum();
+    assert!(hits >= 1, "duplicate submit must re-hit one backend's result cache");
+    // client tags survive the double rewrite (client id -> internal seq -> client id)
+    let resp = client.roundtrip(&proto::encode_request_tagged(
+        &proto::Request::Status,
+        &Json::str("st-9"),
+    ));
+    assert_eq!(resp.get("id").and_then(Json::as_str), Some("st-9"), "{resp}");
+    assert_ok(&resp);
+    // wire shutdown broadcasts: both backends stop, then the router acks
+    let ack = client.roundtrip(&proto::encode_request(&proto::Request::Shutdown));
+    assert_ok(&ack);
+    assert_eq!(ack.get("shutting_down").and_then(Json::as_bool), Some(true));
+    drop(client);
+    router.wait().unwrap();
+    d1.wait().unwrap();
+    d2.wait().unwrap();
+}
+
+/// Open-loop loadgen: the seeded schedule replays, every request is
+/// answered (ok or explicit reject), nothing hangs, nothing errors.
+#[test]
+fn open_loop_loadgen_answers_every_scheduled_request() {
+    let daemon = start(SimConfig::spatzformer());
+    let opts = loadgen::LoadgenOptions {
+        addr: daemon.addr().to_string(),
+        clients: 4,
+        requests: 5,
+        seed: 11,
+        rate: Some(200.0),
+        ..Default::default()
+    };
+    let report = loadgen::run(&opts).unwrap();
+    assert_eq!(report.sent, 20);
+    assert_eq!(report.ok + report.rejected, 20, "{report:?}");
+    assert_eq!(report.errors, 0, "{report:?}");
+    assert!(report.ok > 0, "{report:?}");
+    assert!(report.render().contains("open-loop"), "{}", report.render());
+    daemon.shutdown();
+    daemon.wait().unwrap();
+}
+
+/// `batch` with `"reports": true` returns inline per-job reports that
+/// match the local oracle byte-for-byte; past `server.batch_report_limit`
+/// the refusal is explicit and happens before any job runs.
+#[test]
+fn batch_inline_reports_match_the_oracle_and_stay_bounded() {
+    let mut cfg = SimConfig::spatzformer();
+    cfg.server.batch_report_limit = 2;
+    let daemon = start(cfg.clone());
+    let mut client = Client::connect(daemon.addr());
+    let resp = client.roundtrip(&proto::encode_request(&proto::Request::Batch {
+        kind: ScenarioKind::KernelSweep,
+        jobs: 2,
+        seed: Some(5),
+        reports: true,
+    }));
+    assert_ok(&resp);
+    let reports = match resp.get("reports") {
+        Some(Json::Arr(a)) => a,
+        other => panic!("expected an inline reports array, got {other:?}"),
+    };
+    assert_eq!(reports.len(), 2);
+    let batch = scenario::generate(ScenarioKind::KernelSweep, cfg.cluster.arch, 5, 2);
+    let mut coord = Coordinator::new(cfg.clone()).unwrap();
+    for (node, fj) in reports.iter().zip(&batch.jobs) {
+        coord.set_seed(fj.seed.unwrap_or(cfg.seed));
+        let direct = coord.submit(&fj.job).unwrap();
+        assert_eq!(
+            node.encode(),
+            proto::report_to_json(&direct).encode(),
+            "inline batch report must match the direct run byte-for-byte"
+        );
+    }
+    // over the bound: explicit 429 before generation, not a truncated array
+    let resp = client.roundtrip(&proto::encode_request(&proto::Request::Batch {
+        kind: ScenarioKind::KernelSweep,
+        jobs: 3,
+        seed: Some(5),
+        reports: true,
+    }));
+    assert_eq!(resp.get("code").and_then(Json::as_u64), Some(429), "{resp}");
+    assert!(
+        resp.get("error").and_then(Json::as_str).unwrap().contains("batch_report_limit"),
+        "{resp}"
+    );
+    // the bound is on inline reports only — the same batch without the
+    // flag runs fine and stays digest-only
+    let resp = client.roundtrip(&proto::encode_request(&proto::Request::Batch {
+        kind: ScenarioKind::KernelSweep,
+        jobs: 3,
+        seed: Some(5),
+        reports: false,
+    }));
+    assert_ok(&resp);
+    assert!(resp.get("reports").is_none(), "{resp}");
+    drop(client);
+    daemon.shutdown();
+    daemon.wait().unwrap();
 }
 
 /// `loadgen --shutdown` (the CI smoke path) works end to end.

@@ -22,7 +22,7 @@ use crate::isa::asm;
 use crate::kernels::{Deployment, KernelId};
 use crate::metrics::Table;
 use crate::server::{self, loadgen};
-use crate::trace::perf;
+use crate::trace::{perf, service as svc};
 
 const USAGE: &str = "\
 spatzformer — reconfigurable dual-core RVV cluster simulator (paper reproduction)
@@ -35,6 +35,9 @@ COMMANDS:
   mixed    kernel ∥ CoreMark-workalike     --kernel <name> --mode <split|merge|auto> [--iters N]
   trace    query a binary perf trace       query <file> [--from N] [--to N]
            [--subsystem S] [--who K] [--top N] [--window W] [--json]
+           or a service trace: query <file> --service [--trace-id T]
+           [--op <submit|batch|status|metrics|shutdown>] [--backend B]
+           [--slowest N] [--json]
   fleet    batch-simulate a generated scenario across N simulated clusters
            [--scenario <kernel-sweep|mixed-sweep|storm>] [--workers N]
            [--jobs M] [--no-cache] [--no-compile-cache]
@@ -68,6 +71,11 @@ TRACE OPTIONS (trace query):
   --top <N>                       hottest windows to rank (default 5)
   --window <W>                    hot-window width in cycles (default 1024)
   --json                          machine-readable output (canonical JSON)
+  --service                       the file is a service (request-lifecycle) trace
+                                  from `serve/route --trace-out`; per-stage
+                                  attribution + slowest requests
+  --trace-id <T> / --op <name> / --backend <B> / --slowest <N>
+                                  service-trace filters (default slowest 10)
 
 FLEET OPTIONS:
   --scenario <name>               generator: kernel-sweep, mixed-sweep, storm (default storm)
@@ -80,12 +88,16 @@ SERVE OPTIONS:
   --addr <host:port>              listen address (default: server.addr; port 0 = ephemeral)
   --workers <N>                   worker threads / simulated clusters (default: server.workers, 0 = auto)
   --queue-depth <D>               bounded submission-queue depth (full => explicit 429 reject)
+  --service-trace                 record per-request lifecycle spans (server.trace)
+  --trace-out <file>              stream service spans to <file> for
+                                  `trace query <file> --service` (implies --service-trace)
 
 ROUTE OPTIONS:
   --addr <host:port>              frontend listen address (default: server.addr; port 0 = ephemeral)
   --backend <host:port>           one spatzd backend (repeatable; required at least once);
                                   submits shard by the FNV-1a result-cache digest, so
                                   repeated jobs re-hit the backend that cached them
+  --service-trace / --trace-out   as under serve: router-side lifecycle spans
 
 LOADGEN OPTIONS:
   --addr <host:port>              target daemon or router (default: server.addr)
@@ -107,12 +119,12 @@ KERNELS: fmatmul conv2d fft fdotp faxpy fdct
 ";
 
 /// Options that take no value (presence == true).
-const BOOL_FLAGS: &[&str] = &["no-cache", "no-compile-cache", "smoke", "shutdown"];
+const BOOL_FLAGS: &[&str] = &["no-cache", "no-compile-cache", "smoke", "shutdown", "service-trace"];
 
 /// Bool flags for `trace` subcommands. Separate from [`BOOL_FLAGS`]
 /// because `--json` is valueless here but takes a path under `loadgen` —
 /// per-command lists keep both meanings parseable.
-const TRACE_BOOL_FLAGS: &[&str] = &["json"];
+const TRACE_BOOL_FLAGS: &[&str] = &["json", "service"];
 
 struct Args {
     positional: Vec<String>,
@@ -288,7 +300,9 @@ fn cmd_mixed(args: &Args) -> anyhow::Result<()> {
 }
 
 const TRACE_USAGE: &str = "usage: spatzformer trace query <file> \
-[--from N] [--to M] [--subsystem S] [--who K] [--top N] [--window W] [--json]";
+[--from N] [--to M] [--subsystem S] [--who K] [--top N] [--window W] [--json]
+       spatzformer trace query <file> --service [--trace-id T] [--op NAME] \
+[--backend B] [--slowest N] [--json]";
 
 fn cmd_trace(args: &Args) -> anyhow::Result<()> {
     match args.positional.get(1).map(|s| s.as_str()) {
@@ -300,6 +314,9 @@ fn cmd_trace(args: &Args) -> anyhow::Result<()> {
         .positional
         .get(2)
         .ok_or_else(|| anyhow::anyhow!("trace query needs a trace file (see `run --trace-out`)"))?;
+    if args.get("service").is_some() {
+        return cmd_trace_service(args, file);
+    }
     let records = perf::read_trace_file(std::path::Path::new(file))?;
 
     let mut filter = perf::Filter::default();
@@ -338,6 +355,36 @@ fn cmd_trace(args: &Args) -> anyhow::Result<()> {
         println!("{}", report.to_json().encode());
     } else {
         print!("{}", render_trace_report(&report));
+    }
+    Ok(())
+}
+
+/// The `--service` arm of `trace query`: per-stage latency attribution
+/// over a service (request-lifecycle) trace written by `serve`/`route`
+/// with `--trace-out`.
+fn cmd_trace_service(args: &Args, file: &str) -> anyhow::Result<()> {
+    let records = svc::read_trace_file(std::path::Path::new(file))?;
+    let mut filter = svc::ServiceFilter::default();
+    if let Some(v) = args.get("trace-id") {
+        filter.trace_id = Some(v.parse().map_err(|_| anyhow::anyhow!("bad --trace-id: {v}"))?);
+    }
+    if let Some(v) = args.get("op") {
+        filter.op = Some(svc::op::from_name(v).ok_or_else(|| {
+            anyhow::anyhow!("unknown op `{v}` (submit|batch|status|metrics|shutdown)")
+        })?);
+    }
+    if let Some(v) = args.get("backend") {
+        filter.backend = Some(v.parse().map_err(|_| anyhow::anyhow!("bad --backend: {v}"))?);
+    }
+    let slowest: usize = match args.get("slowest") {
+        None => svc::DEFAULT_SLOWEST,
+        Some(v) => v.parse().map_err(|_| anyhow::anyhow!("bad --slowest: {v}"))?,
+    };
+    let report = svc::service_query(&records, &filter, slowest);
+    if args.get("json").is_some() {
+        println!("{}", report.to_json().encode());
+    } else {
+        print!("{}", report.render());
     }
     Ok(())
 }
@@ -444,6 +491,19 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `serve`/`route`: `--service-trace` flips `server.trace`; `--trace-out`
+/// names the streaming span sink and implies tracing on (mirrors how
+/// `run --trace-out` implies `[trace]`).
+fn apply_service_trace(cfg: &mut SimConfig, args: &Args) {
+    if args.get("service-trace").is_some() {
+        cfg.server.trace = true;
+    }
+    if let Some(path) = args.get("trace-out") {
+        cfg.server.trace = true;
+        cfg.server.trace_out = path.to_string();
+    }
+}
+
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let mut cfg = build_config(args)?;
     if let Some(addr) = args.get("addr") {
@@ -459,6 +519,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             .parse()
             .map_err(|_| anyhow::anyhow!("bad --queue-depth: {d}"))?;
     }
+    apply_service_trace(&mut cfg, args);
     let queue_depth = cfg.server.queue_depth;
     let running = server::serve(cfg)?;
     // The "listening on" line is the daemon's contract with scripts (CI
@@ -478,7 +539,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_route(args: &Args) -> anyhow::Result<()> {
-    let cfg = build_config(args)?;
+    let mut cfg = build_config(args)?;
+    apply_service_trace(&mut cfg, args);
     let opts = server::router::RouterOptions {
         addr: args.get("addr").unwrap_or(cfg.server.addr.as_str()).to_string(),
         backends: args.get_all("backend").iter().map(|s| s.to_string()).collect(),
@@ -781,6 +843,35 @@ mod tests {
         assert_eq!(a.get("subsystem"), Some("tcdm"));
         let a = args(&["loadgen", "--json", "out.json"]);
         assert_eq!(a.get("json"), Some("out.json"));
+    }
+
+    #[test]
+    fn service_trace_flags_parse_and_apply() {
+        // --service-trace is valueless under serve/route; --trace-out is valued
+        let a =
+            args(&["serve", "--service-trace", "--trace-out", "svc.sptz", "--addr", "127.0.0.1:0"]);
+        assert_eq!(a.get("service-trace"), Some("true"));
+        assert_eq!(a.get("trace-out"), Some("svc.sptz"));
+        let mut cfg = build_config(&a).unwrap();
+        assert!(!cfg.server.trace);
+        apply_service_trace(&mut cfg, &a);
+        assert!(cfg.server.trace);
+        assert_eq!(cfg.server.trace_out, "svc.sptz");
+        // --trace-out alone implies tracing on
+        let a = args(&["route", "--trace-out", "r.sptz", "--backend", "127.0.0.1:9738"]);
+        let mut cfg = build_config(&a).unwrap();
+        apply_service_trace(&mut cfg, &a);
+        assert!(cfg.server.trace);
+        // under `trace`, --service is presence-only and the filters are valued
+        let v: Vec<String> =
+            ["trace", "query", "s.sptz", "--service", "--op", "submit", "--slowest", "3"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let a = Args::parse_with(&v, TRACE_BOOL_FLAGS).unwrap();
+        assert_eq!(a.get("service"), Some("true"));
+        assert_eq!(a.get("op"), Some("submit"));
+        assert_eq!(a.get("slowest"), Some("3"));
     }
 
     #[test]

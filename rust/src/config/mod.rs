@@ -360,6 +360,24 @@ pub struct ServerConfig {
     /// `shutdown` request the daemon keeps answering already-admitted
     /// jobs for at most this long before exiting anyway.
     pub drain_ms: u64,
+    /// Service-plane request tracing ([`crate::trace::service`]): every
+    /// request's admission / queue-wait / execute / encode / flush
+    /// lifecycle lands in a bounded span ring. Off by default; served
+    /// reports are byte-identical either way (the invariance test pins
+    /// it).
+    pub trace: bool,
+    /// Service-span ring capacity, in records.
+    pub trace_capacity: usize,
+    /// Stream every service span to this file as it is emitted (same
+    /// sink shape as `[trace] out`; query offline with
+    /// `spatzformer trace query FILE --service`). Empty = ring only.
+    pub trace_out: String,
+    /// Router health-probe period, milliseconds: each backend gets a
+    /// cheap tagged `status` ping this often.
+    pub probe_ms: u64,
+    /// Consecutive probe failures before a backend is marked down (and
+    /// skipped by the shard map until a probe succeeds again).
+    pub probe_threshold: usize,
 }
 
 impl Default for ServerConfig {
@@ -370,6 +388,11 @@ impl Default for ServerConfig {
             workers: 0,
             batch_report_limit: 32,
             drain_ms: 5000,
+            trace: false,
+            trace_capacity: crate::trace::service::DEFAULT_CAPACITY,
+            trace_out: String::new(),
+            probe_ms: 1000,
+            probe_threshold: 3,
         }
     }
 }
@@ -535,6 +558,19 @@ impl SimConfig {
             "server.drain_ms" => {
                 self.server.drain_ms = value.as_usize().ok_or_else(bad)? as u64
             }
+            "server.trace" => self.server.trace = value.as_bool().ok_or_else(bad)?,
+            "server.trace_capacity" => {
+                self.server.trace_capacity = value.as_usize().ok_or_else(bad)?
+            }
+            "server.trace_out" => {
+                self.server.trace_out = value.as_str().ok_or_else(bad)?.to_string()
+            }
+            "server.probe_ms" => {
+                self.server.probe_ms = value.as_usize().ok_or_else(bad)? as u64
+            }
+            "server.probe_threshold" => {
+                self.server.probe_threshold = value.as_usize().ok_or_else(bad)?
+            }
             "sim.engine" => {
                 self.engine = value
                     .as_str()
@@ -574,6 +610,15 @@ impl SimConfig {
         anyhow::ensure!(
             self.trace_capacity >= 1,
             "trace_capacity must hold at least one record"
+        );
+        anyhow::ensure!(
+            self.server.trace_capacity >= 1,
+            "server.trace_capacity must hold at least one record"
+        );
+        anyhow::ensure!(self.server.probe_ms >= 1, "server.probe_ms must be >= 1");
+        anyhow::ensure!(
+            self.server.probe_threshold >= 1,
+            "server.probe_threshold must be >= 1"
         );
         Ok(())
     }
@@ -658,8 +703,29 @@ mod tests {
         assert_eq!(cfg.server.workers, 4);
         assert_eq!(cfg.server.batch_report_limit, 8);
         assert_eq!(cfg.server.drain_ms, 250);
+        cfg.apply("server.trace", &Value::Bool(true)).unwrap();
+        cfg.apply("server.trace_capacity", &Value::Int(512)).unwrap();
+        cfg.apply("server.trace_out", &Value::Str("svc.sptz".into())).unwrap();
+        cfg.apply("server.probe_ms", &Value::Int(50)).unwrap();
+        cfg.apply("server.probe_threshold", &Value::Int(2)).unwrap();
+        assert!(cfg.server.trace);
+        assert_eq!(cfg.server.trace_capacity, 512);
+        assert_eq!(cfg.server.trace_out, "svc.sptz");
+        assert_eq!(cfg.server.probe_ms, 50);
+        assert_eq!(cfg.server.probe_threshold, 2);
         assert!(cfg.apply("server.addr", &Value::Int(1)).is_err());
         assert!(cfg.apply("server.bogus", &Value::Int(1)).is_err());
+        assert!(cfg.apply("server.trace", &Value::Int(1)).is_err());
+        cfg.validate().unwrap();
+        cfg.server.probe_ms = 0;
+        assert!(cfg.validate().is_err(), "zero probe period rejected");
+        cfg.server.probe_ms = 1000;
+        cfg.server.probe_threshold = 0;
+        assert!(cfg.validate().is_err(), "zero probe threshold rejected");
+        cfg.server.probe_threshold = 3;
+        cfg.server.trace_capacity = 0;
+        assert!(cfg.validate().is_err(), "zero service-trace ring rejected");
+        cfg.server.trace_capacity = 1;
         cfg.server.queue_depth = 0;
         assert!(cfg.validate().is_err(), "zero-depth queue rejected");
     }

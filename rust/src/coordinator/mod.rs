@@ -211,6 +211,25 @@ impl Coordinator {
             .map_err(|e| anyhow::anyhow!("cannot open trace sink {}: {e}", path.display()))
     }
 
+    /// Bridge a service-plane request into the perf-trace ring: emit a
+    /// [`crate::trace::perf::Kind::Marker`] carrying the request's trace
+    /// id in `c`, so a per-cycle perf trace and a service trace taken in
+    /// the same run can be joined on the id. Called by pool workers
+    /// *after* the job ran (the marker must never perturb the report);
+    /// a no-op unless `[trace]` is on.
+    pub fn mark_request(&mut self, trace_id: u64) {
+        use crate::trace::perf::{Kind, Record, WHO_CLUSTER};
+        self.cluster.trace_mut().emit(Record {
+            cycle: 0,
+            kind: Kind::Marker,
+            who: WHO_CLUSTER,
+            a: 0,
+            b: 0,
+            c: trace_id,
+            d: 0,
+        });
+    }
+
     /// Flush buffered trace-sink bytes to disk (call after the last job).
     pub fn flush_trace(&mut self) -> anyhow::Result<()> {
         self.cluster

@@ -38,7 +38,7 @@ pub mod scenario;
 
 pub use cache::ResultCache;
 pub use metrics::{FleetMetrics, LatencyPercentiles, WorkerStats};
-pub use queue::{DoneFn, JobQueue, SubmitError, WorkerPool};
+pub use queue::{DoneFn, JobQueue, SubmitError, TicketSpan, WorkerPool};
 pub use scenario::{Scenario, ScenarioKind};
 
 use crate::compile::CompileCache;

@@ -33,13 +33,19 @@
 use crate::compile::CompileCache;
 use crate::config::SimConfig;
 use crate::coordinator::{Coordinator, JobReport};
-use crate::fleet::{cache::ResultCache, metrics::WorkerStats, FleetJob};
+use crate::fleet::{cache::ResultCache, metrics::WorkerStats, FleetJob, LatencyPercentiles};
+use crate::trace::service::{self as svc, ServiceTrace};
 use std::collections::VecDeque;
 use std::fmt;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
+
+/// Queue-wait sample window (most recent claims): bounded for the same
+/// reason as the server's latency rings — a resident pool runs
+/// indefinitely.
+const WAIT_WINDOW: usize = 4096;
 
 /// Why a submission was refused. Both variants are immediate — the
 /// queue never blocks a submitter.
@@ -72,15 +78,33 @@ impl std::error::Error for SubmitError {}
 /// of parking a thread per job.
 pub type DoneFn = Box<dyn FnOnce(Result<JobReport, String>) + Send + 'static>;
 
+/// Service-plane tracing context attached to an admitted job: the
+/// shared recorder plus the request's trace id and op code. The worker
+/// that claims the ticket emits the `QueueWait` and `Execute` spans
+/// against it (see [`crate::trace::service`]); the server only attaches
+/// one when tracing is on, so the untraced hot path carries a `None`.
+pub struct TicketSpan {
+    pub svc: Arc<ServiceTrace>,
+    pub trace_id: u64,
+    pub op: u8,
+}
+
 /// One admitted job awaiting a worker.
 struct Ticket {
     fj: FleetJob,
     done: DoneFn,
+    /// When admission enqueued the ticket — start of its queue wait.
+    enqueued: Instant,
+    span: Option<TicketSpan>,
 }
 
 struct QueueState {
     tickets: VecDeque<Ticket>,
     open: bool,
+    /// Sliding window of recent queue waits (enqueue→claim), in ms.
+    /// Fed by [`JobQueue::pop`] under the same lock that hands out the
+    /// ticket, read by [`JobQueue::wait_percentiles`].
+    wait_ms: VecDeque<f64>,
 }
 
 /// Completion handle for one admitted job.
@@ -119,6 +143,7 @@ impl JobQueue {
             state: Mutex::new(QueueState {
                 tickets: VecDeque::new(),
                 open: true,
+                wait_ms: VecDeque::new(),
             }),
             ready: Condvar::new(),
             depth: depth.max(1),
@@ -192,10 +217,24 @@ impl JobQueue {
     /// [`JobReceipt`] — the non-parking form the server's readiness loop
     /// uses (the callback runs on the worker thread that ran the job).
     pub fn try_submit_with(&self, fj: FleetJob, done: DoneFn) -> Result<(), SubmitError> {
+        self.try_submit_traced(fj, done, None)
+    }
+
+    /// [`JobQueue::try_submit_with`] plus a service-tracing context the
+    /// claiming worker will emit queue-wait/execute spans against.
+    pub fn try_submit_traced(
+        &self,
+        fj: FleetJob,
+        done: DoneFn,
+        span: Option<TicketSpan>,
+    ) -> Result<(), SubmitError> {
         let mut done = Some(done);
-        self.try_submit_batch_with(vec![fj], |_| {
-            done.take().expect("one job admits one callback")
-        })
+        let mut span = Some(span);
+        self.try_submit_batch_traced(
+            vec![fj],
+            |_| done.take().expect("one job admits one callback"),
+            |_| span.take().expect("one job admits one span"),
+        )
     }
 
     /// All-or-nothing admission with per-job completion callbacks:
@@ -205,7 +244,18 @@ impl JobQueue {
     pub fn try_submit_batch_with(
         &self,
         jobs: Vec<FleetJob>,
+        make_done: impl FnMut(usize) -> DoneFn,
+    ) -> Result<(), SubmitError> {
+        self.try_submit_batch_traced(jobs, make_done, |_| None)
+    }
+
+    /// [`JobQueue::try_submit_batch_with`] plus per-job service-tracing
+    /// contexts (`make_span(i)`, `None` when tracing is off).
+    pub fn try_submit_batch_traced(
+        &self,
+        jobs: Vec<FleetJob>,
         mut make_done: impl FnMut(usize) -> DoneFn,
+        mut make_span: impl FnMut(usize) -> Option<TicketSpan>,
     ) -> Result<(), SubmitError> {
         let mut st = self.state.lock().expect("job queue poisoned");
         if !st.open {
@@ -218,12 +268,28 @@ impl JobQueue {
                 requested: jobs.len(),
             });
         }
+        let enqueued = Instant::now();
         for (i, fj) in jobs.into_iter().enumerate() {
-            st.tickets.push_back(Ticket { fj, done: make_done(i) });
+            st.tickets.push_back(Ticket {
+                fj,
+                done: make_done(i),
+                enqueued,
+                span: make_span(i),
+            });
         }
         drop(st);
         self.ready.notify_all();
         Ok(())
+    }
+
+    /// Queue-wait percentiles over the most recent `WAIT_WINDOW` claims
+    /// (`None` until a worker has claimed at least one job). Surfaced by
+    /// the server's `metrics` op next to its per-op-class latencies.
+    pub fn wait_percentiles(&self) -> Option<LatencyPercentiles> {
+        let st = self.state.lock().expect("job queue poisoned");
+        let samples: Vec<f64> = st.wait_ms.iter().copied().collect();
+        drop(st);
+        LatencyPercentiles::from_samples_ms(&samples)
     }
 
     /// Worker side: block for the next job. `None` means the queue is
@@ -233,6 +299,13 @@ impl JobQueue {
         loop {
             if let Some(t) = st.tickets.pop_front() {
                 self.in_flight.fetch_add(1, Ordering::Relaxed);
+                // The claim defines the end of the queue wait; sample it
+                // under the lock that handed the ticket out so the
+                // window stays ordered with the claims it describes.
+                if st.wait_ms.len() == WAIT_WINDOW {
+                    st.wait_ms.pop_front();
+                }
+                st.wait_ms.push_back(t.enqueued.elapsed().as_secs_f64() * 1e3);
                 return Some(t);
             }
             if !st.open {
@@ -336,6 +409,17 @@ impl WorkerPool {
         self.queue.try_submit_with(fj, done)
     }
 
+    /// Admit one job with a completion callback and a service-tracing
+    /// context (see [`JobQueue::try_submit_traced`]).
+    pub fn submit_traced(
+        &self,
+        fj: FleetJob,
+        done: DoneFn,
+        span: Option<TicketSpan>,
+    ) -> Result<(), SubmitError> {
+        self.queue.try_submit_traced(fj, done, span)
+    }
+
     /// Atomic batch admission with per-job callbacks
     /// (see [`JobQueue::try_submit_batch_with`]).
     pub fn submit_batch_with(
@@ -344,6 +428,17 @@ impl WorkerPool {
         make_done: impl FnMut(usize) -> DoneFn,
     ) -> Result<(), SubmitError> {
         self.queue.try_submit_batch_with(jobs, make_done)
+    }
+
+    /// Atomic batch admission with per-job callbacks and tracing
+    /// contexts (see [`JobQueue::try_submit_batch_traced`]).
+    pub fn submit_batch_traced(
+        &self,
+        jobs: Vec<FleetJob>,
+        make_done: impl FnMut(usize) -> DoneFn,
+        make_span: impl FnMut(usize) -> Option<TicketSpan>,
+    ) -> Result<(), SubmitError> {
+        self.queue.try_submit_batch_traced(jobs, make_done, make_span)
     }
 
     /// Close the queue, drain admitted jobs, join the workers and return
@@ -372,6 +467,18 @@ fn drain(
     let mut stats = WorkerStats::default();
     let mut coord: Option<Coordinator> = None;
     while let Some(ticket) = queue.pop() {
+        if let Some(span) = &ticket.span {
+            // The queue wait ended when `pop` handed the ticket over.
+            span.svc.emit(svc::Record {
+                t_us: span.svc.instant_us(ticket.enqueued),
+                stage: svc::Stage::QueueWait,
+                op: span.op,
+                code: 0,
+                backend: 0,
+                trace_id: span.trace_id,
+                dur_us: ticket.enqueued.elapsed().as_micros() as u64,
+            });
+        }
         let t0 = Instant::now();
         let result = super::run_job(
             base,
@@ -388,6 +495,17 @@ fn drain(
         // own bounded window (`server::metrics`).
         stats.busy += t0.elapsed();
         stats.jobs += 1;
+        if let Some(span) = &ticket.span {
+            span.svc
+                .span_since(svc::Stage::Execute, span.op, 0, span.trace_id, t0);
+            // Bridge into the job's perf ring *after* the run, so the
+            // marker can never perturb the report (trace invariance).
+            if span.svc.is_enabled() {
+                if let Some(c) = coord.as_mut() {
+                    c.mark_request(span.trace_id);
+                }
+            }
+        }
         queue.in_flight.fetch_sub(1, Ordering::Relaxed);
         queue.completed.fetch_add(1, Ordering::Relaxed);
         (ticket.done)(result.map_err(|e| format!("{e:#}")));

@@ -82,8 +82,20 @@ pub struct LoadgenReport {
     /// Explicit admission-control rejects (`429`/`503`).
     pub rejected: u64,
     pub errors: u64,
+    /// Status-code breakdown of the non-ok responses: queue/inflight
+    /// rejects, router bad-gateway, shutdown refusals. (`errors` also
+    /// counts I/O failures and unparseable lines, so the three do not
+    /// have to sum to `rejected + errors`.)
+    pub status_429: u64,
+    pub status_502: u64,
+    pub status_503: u64,
     pub wall: Duration,
     pub latency: Option<LatencyPercentiles>,
+    /// The daemon's own queue-wait (enqueue→claim) percentiles, fetched
+    /// via `metrics` after the run — server-side queueing next to the
+    /// client-observed latency. `None` when the daemon does not expose
+    /// them (or is already gone).
+    pub queue_wait: Option<LatencyPercentiles>,
 }
 
 impl LoadgenReport {
@@ -114,11 +126,26 @@ impl LoadgenReport {
             ("ok".to_string(), Json::u64_lossless(self.ok)),
             ("rejected".to_string(), Json::u64_lossless(self.rejected)),
             ("errors".to_string(), Json::u64_lossless(self.errors)),
+            ("status_429".to_string(), Json::u64_lossless(self.status_429)),
+            ("status_502".to_string(), Json::u64_lossless(self.status_502)),
+            ("status_503".to_string(), Json::u64_lossless(self.status_503)),
             ("wall_ms".to_string(), Json::num(self.wall.as_secs_f64() * 1e3)),
             ("jobs_per_sec".to_string(), Json::num(self.jobs_per_sec())),
             ("p50_ms".to_string(), latency(|l| l.p50_ms)),
             ("p95_ms".to_string(), latency(|l| l.p95_ms)),
             ("p99_ms".to_string(), latency(|l| l.p99_ms)),
+            (
+                "queue_wait_p50_ms".to_string(),
+                Json::opt(self.queue_wait.as_ref(), |l| Json::num(l.p50_ms)),
+            ),
+            (
+                "queue_wait_p95_ms".to_string(),
+                Json::opt(self.queue_wait.as_ref(), |l| Json::num(l.p95_ms)),
+            ),
+            (
+                "queue_wait_p99_ms".to_string(),
+                Json::opt(self.queue_wait.as_ref(), |l| Json::num(l.p99_ms)),
+            ),
         ])
     }
 
@@ -127,9 +154,11 @@ impl LoadgenReport {
             "clients        : {}\n\
              mode           : {}\n\
              requests       : {} sent, {} ok, {} rejected, {} errors\n\
+             by status      : {} x429, {} x502, {} x503\n\
              wall           : {:.1} ms\n\
              jobs/s         : {:.1}\n\
-             latency        : {}",
+             latency        : {}\n\
+             queue wait     : {}",
             self.clients,
             self.rate.map_or_else(
                 || "closed-loop".to_string(),
@@ -139,10 +168,16 @@ impl LoadgenReport {
             self.ok,
             self.rejected,
             self.errors,
+            self.status_429,
+            self.status_502,
+            self.status_503,
             self.wall.as_secs_f64() * 1e3,
             self.jobs_per_sec(),
             self.latency
                 .map_or_else(|| "n/a".to_string(), |l| l.render()),
+            self.queue_wait
+                .as_ref()
+                .map_or_else(|| "n/a (server did not report)".to_string(), |l| l.render()),
         )
     }
 }
@@ -226,7 +261,34 @@ struct ClientOutcome {
     ok: u64,
     rejected: u64,
     errors: u64,
+    status_429: u64,
+    status_502: u64,
+    status_503: u64,
     latencies_ms: Vec<f64>,
+}
+
+impl ClientOutcome {
+    /// Classify one non-ok response by its `code` field: 429/503 are
+    /// explicit admission rejects, 502 is a router-reported dead
+    /// backend (an error — the job never ran), anything else is a
+    /// generic error.
+    fn record_failure(&mut self, j: &Json) {
+        match j.get("code").and_then(Json::as_u64) {
+            Some(429) => {
+                self.rejected += 1;
+                self.status_429 += 1;
+            }
+            Some(503) => {
+                self.rejected += 1;
+                self.status_503 += 1;
+            }
+            Some(502) => {
+                self.errors += 1;
+                self.status_502 += 1;
+            }
+            _ => self.errors += 1,
+        }
+    }
 }
 
 /// Replay one client's stream over one connection.
@@ -261,15 +323,8 @@ fn run_client(addr: &str, lines: &[String]) -> ClientOutcome {
                 out.ok += 1;
                 out.latencies_ms.push(t0.elapsed().as_secs_f64() * 1e3);
             }
-            Ok(j)
-                if matches!(
-                    j.get("code").and_then(Json::as_u64),
-                    Some(429) | Some(503)
-                ) =>
-            {
-                out.rejected += 1;
-            }
-            _ => out.errors += 1,
+            Ok(j) => out.record_failure(&j),
+            Err(_) => out.errors += 1,
         }
     }
     out
@@ -324,12 +379,8 @@ fn run_client_open(
                                 .push(now.saturating_duration_since(intended).as_secs_f64() * 1e3);
                         }
                     }
-                    Ok(j)
-                        if matches!(j.get("code").and_then(Json::as_u64), Some(429) | Some(503)) =>
-                    {
-                        got.rejected += 1;
-                    }
-                    _ => got.errors += 1,
+                    Ok(j) => got.record_failure(&j),
+                    Err(_) => got.errors += 1,
                 }
             }
             got.errors += (n - answered) as u64;
@@ -392,6 +443,9 @@ pub fn run(opts: &LoadgenOptions) -> anyhow::Result<LoadgenReport> {
         }
     });
     let wall = t0.elapsed();
+    // server-side queue wait, read before the daemon is shut down;
+    // best-effort (None when unreachable or the field is absent)
+    let queue_wait = fetch_queue_wait(&opts.addr);
     if opts.send_shutdown {
         shutdown_daemon(&opts.addr)?;
     }
@@ -406,8 +460,35 @@ pub fn run(opts: &LoadgenOptions) -> anyhow::Result<LoadgenReport> {
         ok: outcomes.iter().map(|o| o.ok).sum(),
         rejected: outcomes.iter().map(|o| o.rejected).sum(),
         errors: outcomes.iter().map(|o| o.errors).sum(),
+        status_429: outcomes.iter().map(|o| o.status_429).sum(),
+        status_502: outcomes.iter().map(|o| o.status_502).sum(),
+        status_503: outcomes.iter().map(|o| o.status_503).sum(),
         wall,
         latency: LatencyPercentiles::from_samples_ms(&latencies),
+        queue_wait,
+    })
+}
+
+/// Ask the daemon (or router — the aggregated shape carries the same
+/// field) for its `queue_wait_ms` percentiles over one fresh
+/// connection. Best-effort: any failure or an absent/null field yields
+/// `None` rather than failing the load test.
+fn fetch_queue_wait(addr: &str) -> Option<LatencyPercentiles> {
+    let stream = TcpStream::connect(addr).ok()?;
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+    let read_half = stream.try_clone().ok()?;
+    let mut reader = BufReader::new(read_half);
+    let mut writer = BufWriter::new(stream);
+    writeln!(writer, "{}", proto::encode_request(&Request::Metrics)).ok()?;
+    writer.flush().ok()?;
+    let mut line = String::new();
+    reader.read_line(&mut line).ok()?;
+    let j = Json::parse(line.trim()).ok()?;
+    let qw = j.get("queue_wait_ms")?;
+    Some(LatencyPercentiles {
+        p50_ms: qw.get("p50_ms")?.as_f64()?,
+        p95_ms: qw.get("p95_ms")?.as_f64()?,
+        p99_ms: qw.get("p99_ms")?.as_f64()?,
     })
 }
 
@@ -504,14 +585,20 @@ mod tests {
             ok: 8,
             rejected: 1,
             errors: 1,
+            status_429: 1,
+            status_502: 1,
+            status_503: 0,
             wall: Duration::from_millis(400),
             latency: LatencyPercentiles::from_samples_ms(&[1.0, 2.0, 3.0]),
+            queue_wait: None,
         };
         assert!((r.jobs_per_sec() - 20.0).abs() < 1e-9);
         let s = r.render();
         assert!(s.contains("jobs/s"), "{s}");
         assert!(s.contains("p50/p95/p99"), "{s}");
         assert!(s.contains("8 ok, 1 rejected"), "{s}");
+        assert!(s.contains("1 x429, 1 x502, 0 x503"), "{s}");
+        assert!(s.contains("queue wait"), "{s}");
     }
 
     #[test]
@@ -523,11 +610,27 @@ mod tests {
             ok: 10,
             rejected: 2,
             errors: 0,
+            status_429: 2,
+            status_502: 0,
+            status_503: 0,
             wall: Duration::from_millis(500),
             latency: LatencyPercentiles::from_samples_ms(&[1.0, 2.0, 3.0]),
+            queue_wait: Some(LatencyPercentiles {
+                p50_ms: 0.5,
+                p95_ms: 1.5,
+                p99_ms: 2.5,
+            }),
         };
         let j = r.to_json();
         assert_eq!(j.get("clients").and_then(Json::as_u64), Some(4));
+        // status-code breakdown and the server-reported queue wait ride
+        // along in the bench artifact
+        assert_eq!(j.get("status_429").and_then(Json::as_u64), Some(2));
+        assert_eq!(j.get("status_502").and_then(Json::as_u64), Some(0));
+        assert_eq!(j.get("status_503").and_then(Json::as_u64), Some(0));
+        assert_eq!(j.get("queue_wait_p95_ms").and_then(Json::as_f64), Some(1.5));
+        let no_qw = LoadgenReport { queue_wait: None, ..r.clone() };
+        assert_eq!(no_qw.to_json().get("queue_wait_p95_ms"), Some(&Json::Null));
         assert_eq!(j.get("jobs_per_sec").and_then(Json::as_f64), Some(20.0));
         let p99 = j.get("p99_ms").and_then(Json::as_f64).unwrap();
         assert!((p99 - 2.98).abs() < 1e-9, "p99={p99}");

@@ -125,6 +125,15 @@ pub struct MetricsSnapshot {
     pub trace_records: u64,
     /// Trace records dropped by the bounded in-memory ring.
     pub trace_dropped: u64,
+    /// Queue-wait (enqueue→claim) percentiles over the pool's recent
+    /// claims. Filled in by the server from `JobQueue::wait_percentiles`
+    /// after [`ServerMetrics::snapshot`]; `None` with no claims yet.
+    pub queue_wait: Option<LatencyPercentiles>,
+    /// Service-plane span records emitted / dropped by the bounded ring
+    /// (see `trace::service`; filled in by the server, 0 when tracing
+    /// is off).
+    pub service_trace_records: u64,
+    pub service_trace_dropped: u64,
 }
 
 impl MetricsSnapshot {
@@ -174,9 +183,18 @@ impl MetricsSnapshot {
             ("errors".into(), Json::u64_lossless(self.errors)),
             ("jobs_per_sec".into(), Json::num(self.jobs_per_sec())),
             ("latency_ms".into(), latency),
+            ("queue_wait_ms".into(), Json::opt(self.queue_wait.as_ref(), triple)),
             ("sim_steps".into(), Json::u64_lossless(self.sim_steps)),
             ("trace_records".into(), Json::u64_lossless(self.trace_records)),
             ("trace_dropped".into(), Json::u64_lossless(self.trace_dropped)),
+            (
+                "service_trace_records".into(),
+                Json::u64_lossless(self.service_trace_records),
+            ),
+            (
+                "service_trace_dropped".into(),
+                Json::u64_lossless(self.service_trace_dropped),
+            ),
         ]
     }
 
@@ -194,8 +212,10 @@ impl MetricsSnapshot {
              submit latency : {}\n\
              batch latency  : {}\n\
              status latency : {}\n\
+             queue wait     : {}\n\
              sim steps      : {}\n\
-             trace records  : {} ({} dropped from the ring)",
+             trace records  : {} ({} dropped from the ring)\n\
+             service spans  : {} ({} dropped from the ring)",
             self.uptime.as_secs_f64(),
             self.requests,
             self.submits,
@@ -207,9 +227,14 @@ impl MetricsSnapshot {
             lat(OpClass::Submit),
             lat(OpClass::Batch),
             lat(OpClass::Status),
+            self.queue_wait
+                .as_ref()
+                .map_or_else(|| "n/a".to_string(), |l| l.render()),
             self.sim_steps,
             self.trace_records,
             self.trace_dropped,
+            self.service_trace_records,
+            self.service_trace_dropped,
         )
     }
 }
@@ -287,6 +312,9 @@ impl ServerMetrics {
             sim_steps: m.sim_steps,
             trace_records: m.trace_records,
             trace_dropped: m.trace_dropped,
+            queue_wait: None,
+            service_trace_records: 0,
+            service_trace_dropped: 0,
         }
     }
 }
@@ -407,5 +435,27 @@ mod tests {
         let fields = s.to_json_fields();
         let lat = &fields.iter().find(|(k, _)| k == "latency_ms").unwrap().1;
         assert!(lat.get("submit").unwrap().is_null());
+    }
+
+    #[test]
+    fn queue_wait_and_service_counters_serialize() {
+        let m = ServerMetrics::new();
+        let mut s = m.snapshot();
+        // the server fills these in after snapshot(); default is absent
+        let fields = s.to_json_fields();
+        assert!(fields.iter().find(|(k, _)| k == "queue_wait_ms").unwrap().1.is_null());
+        s.queue_wait = Some(LatencyPercentiles { p50_ms: 1.0, p95_ms: 2.0, p99_ms: 3.0 });
+        s.service_trace_records = 12;
+        s.service_trace_dropped = 2;
+        let fields = s.to_json_fields();
+        let qw = &fields.iter().find(|(k, _)| k == "queue_wait_ms").unwrap().1;
+        assert_eq!(qw.get("p95_ms").unwrap().as_f64(), Some(2.0));
+        let get = |k: &str| {
+            fields.iter().find(|(key, _)| key == k).and_then(|(_, v)| v.as_u64())
+        };
+        assert_eq!(get("service_trace_records"), Some(12));
+        assert_eq!(get("service_trace_dropped"), Some(2));
+        assert!(s.render().contains("queue wait"));
+        assert!(s.render().contains("service spans"));
     }
 }

@@ -57,13 +57,14 @@ pub use metrics::{MetricsSnapshot, OpClass, ServerMetrics};
 
 use crate::config::SimConfig;
 use crate::coordinator::JobReport;
-use crate::fleet::{scenario, FleetJob, ScenarioKind, SubmitError, WorkerPool};
+use crate::fleet::{scenario, FleetJob, ScenarioKind, SubmitError, TicketSpan, WorkerPool};
+use crate::trace::service::{self as svc, ServiceTrace};
 use crate::util::Json;
 use mux::{Conn, LineEvent};
 use proto::{Envelope, Request};
 use std::collections::HashMap;
 use std::net::{SocketAddr, TcpListener};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
@@ -99,6 +100,11 @@ struct Ctl {
     stopping: AtomicBool,
     addr: SocketAddr,
     open_conns: AtomicUsize,
+    /// Service-plane span recorder (`server.trace`; disabled recorder
+    /// when off, so every emit is a cheap early return).
+    svc: Arc<ServiceTrace>,
+    /// Next locally-assigned trace id (requests arriving without one).
+    next_trace: AtomicU64,
 }
 
 /// A live daemon: the CLI blocks on [`RunningServer::wait`]; tests drive
@@ -118,6 +124,16 @@ pub fn serve(cfg: SimConfig) -> anyhow::Result<RunningServer> {
     listener.set_nonblocking(true)?;
     let addr = listener.local_addr()?;
     let pool = WorkerPool::start(cfg.clone(), cfg.server.workers, cfg.server.queue_depth)?;
+    let svc = Arc::new(ServiceTrace::new(
+        cfg.server.trace,
+        cfg.server.trace_capacity,
+    ));
+    if cfg.server.trace && !cfg.server.trace_out.is_empty() {
+        svc.attach_sink(std::path::Path::new(&cfg.server.trace_out))
+            .map_err(|e| {
+                anyhow::anyhow!("cannot open service trace sink {}: {e}", cfg.server.trace_out)
+            })?;
+    }
     let ctl = Arc::new(Ctl {
         cfg,
         pool,
@@ -125,6 +141,8 @@ pub fn serve(cfg: SimConfig) -> anyhow::Result<RunningServer> {
         stopping: AtomicBool::new(false),
         addr,
         open_conns: AtomicUsize::new(0),
+        svc,
+        next_trace: AtomicU64::new(0),
     });
     let io_ctl = ctl.clone();
     let io_thread = std::thread::spawn(move || EventLoop::new(listener, io_ctl).run());
@@ -148,6 +166,12 @@ impl RunningServer {
         self.ctl.stopping.store(true, Ordering::SeqCst);
     }
 
+    /// The daemon's service-span recorder (tests read the ring; a
+    /// disabled recorder when `server.trace` is off).
+    pub fn service_trace(&self) -> &Arc<ServiceTrace> {
+        &self.ctl.svc
+    }
+
     /// Block until the daemon has fully stopped: readiness loop joined
     /// (bounded drain — see module docs), queue drained, workers joined.
     /// Returns the final metrics snapshot.
@@ -156,7 +180,12 @@ impl RunningServer {
             .join()
             .map_err(|_| anyhow::anyhow!("readiness loop panicked"))?;
         self.ctl.pool.shutdown();
-        Ok(self.ctl.metrics.snapshot())
+        let _ = self.ctl.svc.flush();
+        let mut snap = self.ctl.metrics.snapshot();
+        snap.queue_wait = self.ctl.pool.queue().wait_percentiles();
+        snap.service_trace_records = self.ctl.svc.records_total();
+        snap.service_trace_dropped = self.ctl.svc.records_dropped();
+        Ok(snap)
     }
 }
 
@@ -165,6 +194,7 @@ enum Done {
     Submit {
         conn: u64,
         id: Option<Json>,
+        trace: u64,
         t0: Instant,
         result: Result<JobReport, String>,
     },
@@ -180,6 +210,7 @@ enum Done {
 struct PendingBatch {
     conn: u64,
     id: Option<Json>,
+    trace: u64,
     kind: ScenarioKind,
     seed: u64,
     t0: Instant,
@@ -314,6 +345,13 @@ impl EventLoop {
                 }
                 progress |= conn.try_flush();
             }
+            // close each traced response's lifecycle: the mux recorded
+            // when the flush covering its bytes completed
+            if self.ctl.svc.is_enabled() {
+                for (trace, op, enqueued) in conn.take_flushed() {
+                    self.ctl.svc.span_since(svc::Stage::Flush, op, 0, trace, enqueued);
+                }
+            }
             self.conns.insert(tok, conn);
         }
         progress
@@ -370,17 +408,35 @@ impl EventLoop {
     }
 
     fn handle_request(&mut self, tok: u64, conn: &mut Conn, env: Envelope) {
-        let Envelope { id, req } = env;
+        let Envelope { id, trace, req } = env;
+        // First hop assigns the trace id; a router upstream already did
+        // (top bit set — see `router`), in which case we propagate it.
+        let trace = trace
+            .unwrap_or_else(|| self.ctl.next_trace.fetch_add(1, Ordering::Relaxed) + 1);
+        let op = match &req {
+            Request::Submit { .. } => svc::op::SUBMIT,
+            Request::Batch { .. } => svc::op::BATCH,
+            Request::Status => svc::op::STATUS,
+            Request::Metrics => svc::op::METRICS,
+            Request::Shutdown => svc::op::SHUTDOWN,
+        };
+        self.ctl.svc.event(svc::Stage::Recv, op, 0, trace);
         let stopping = self.ctl.stopping.load(Ordering::SeqCst);
         match req {
             Request::Submit { job, seed } => {
                 self.ctl.metrics.request("submit");
                 if stopping {
-                    conn.enqueue_line(&self.refusal(id.as_ref(), SubmitError::ShuttingDown));
+                    conn.enqueue_line(&self.refusal(
+                        id.as_ref(),
+                        op,
+                        trace,
+                        SubmitError::ShuttingDown,
+                    ));
                     return;
                 }
                 if conn.inflight >= MAX_INFLIGHT_PER_CONN {
                     self.ctl.metrics.rejected();
+                    self.ctl.svc.event(svc::Stage::Reject, op, 429, trace);
                     conn.enqueue_line(&proto::error_response_tagged(
                         id.as_ref(),
                         429,
@@ -395,24 +451,32 @@ impl EventLoop {
                 let tx = self.tx.clone();
                 let done_id = id.clone();
                 let done = Box::new(move |result| {
-                    let _ = tx.send(Done::Submit { conn: tok, id: done_id, t0, result });
+                    let _ = tx.send(Done::Submit { conn: tok, id: done_id, trace, t0, result });
                 });
-                match self.ctl.pool.submit_with(FleetJob { job, seed }, done) {
+                let span = self.ticket_span(trace, op);
+                match self.ctl.pool.submit_traced(FleetJob { job, seed }, done, span) {
                     Ok(()) => {
+                        self.ctl.svc.event(svc::Stage::Admit, op, 0, trace);
                         conn.inflight += 1;
                         self.pending_jobs += 1;
                     }
-                    Err(e) => conn.enqueue_line(&self.refusal(id.as_ref(), e)),
+                    Err(e) => conn.enqueue_line(&self.refusal(id.as_ref(), op, trace, e)),
                 }
             }
             Request::Batch { kind, jobs, seed, reports } => {
                 self.ctl.metrics.request("batch");
                 if stopping {
-                    conn.enqueue_line(&self.refusal(id.as_ref(), SubmitError::ShuttingDown));
+                    conn.enqueue_line(&self.refusal(
+                        id.as_ref(),
+                        op,
+                        trace,
+                        SubmitError::ShuttingDown,
+                    ));
                     return;
                 }
                 if conn.inflight >= MAX_INFLIGHT_PER_CONN {
                     self.ctl.metrics.rejected();
+                    self.ctl.svc.event(svc::Stage::Reject, op, 429, trace);
                     conn.enqueue_line(&proto::error_response_tagged(
                         id.as_ref(),
                         429,
@@ -431,6 +495,7 @@ impl EventLoop {
                 let depth = self.ctl.pool.queue().depth();
                 if jobs > depth {
                     self.ctl.metrics.rejected();
+                    self.ctl.svc.event(svc::Stage::Reject, op, 429, trace);
                     conn.enqueue_line(&proto::error_response_tagged(
                         id.as_ref(),
                         429,
@@ -441,6 +506,7 @@ impl EventLoop {
                 let limit = self.ctl.cfg.server.batch_report_limit;
                 if reports && jobs > limit {
                     self.ctl.metrics.rejected();
+                    self.ctl.svc.event(svc::Stage::Reject, op, 429, trace);
                     conn.enqueue_line(&proto::error_response_tagged(
                         id.as_ref(),
                         429,
@@ -456,14 +522,20 @@ impl EventLoop {
                 let generated =
                     scenario::generate(kind, self.ctl.cfg.cluster.arch, scenario_seed, jobs);
                 let key = self.next_batch;
-                let admitted = self.ctl.pool.submit_batch_with(generated.jobs, |i| {
-                    let tx = self.tx.clone();
-                    Box::new(move |result| {
-                        let _ = tx.send(Done::BatchJob { batch: key, index: i, result });
-                    })
-                });
+                let admitted = self.ctl.pool.submit_batch_traced(
+                    generated.jobs,
+                    |i| {
+                        let tx = self.tx.clone();
+                        Box::new(move |result| {
+                            let _ = tx.send(Done::BatchJob { batch: key, index: i, result });
+                        })
+                    },
+                    // every job of a batch shares the request's trace id
+                    |_| self.ticket_span(trace, op),
+                );
                 match admitted {
                     Ok(()) => {
+                        self.ctl.svc.event(svc::Stage::Admit, op, 0, trace);
                         self.next_batch += 1;
                         self.pending_jobs += jobs;
                         conn.inflight += 1;
@@ -472,6 +544,7 @@ impl EventLoop {
                             PendingBatch {
                                 conn: tok,
                                 id,
+                                trace,
                                 kind,
                                 seed: scenario_seed,
                                 t0,
@@ -482,7 +555,7 @@ impl EventLoop {
                             },
                         );
                     }
-                    Err(e) => conn.enqueue_line(&self.refusal(id.as_ref(), e)),
+                    Err(e) => conn.enqueue_line(&self.refusal(id.as_ref(), op, trace, e)),
                 }
             }
             Request::Status => {
@@ -513,12 +586,18 @@ impl EventLoop {
                         ),
                     ],
                 );
-                conn.enqueue_line(&line);
+                self.ctl.svc.span_since(svc::Stage::Encode, op, 0, trace, t0);
+                self.enqueue_traced(conn, &line, trace, op);
                 self.ctl.metrics.completed(OpClass::Status, 0, t0.elapsed());
             }
             Request::Metrics => {
                 self.ctl.metrics.request("metrics");
-                let mut fields = self.ctl.metrics.snapshot().to_json_fields();
+                let t0 = Instant::now();
+                let mut snap = self.ctl.metrics.snapshot();
+                snap.queue_wait = self.ctl.pool.queue().wait_percentiles();
+                snap.service_trace_records = self.ctl.svc.records_total();
+                snap.service_trace_dropped = self.ctl.svc.records_dropped();
+                let mut fields = snap.to_json_fields();
                 let rc = self.ctl.pool.result_cache();
                 fields.push(("result_cache_hits".into(), Json::u64_lossless(rc.hits())));
                 fields.push((
@@ -532,23 +611,47 @@ impl EventLoop {
                         Json::u64_lossless(cc.misses()),
                     ));
                 }
-                conn.enqueue_line(&proto::ok_response_tagged(id.as_ref(), fields));
+                let line = proto::ok_response_tagged(id.as_ref(), fields);
+                self.ctl.svc.span_since(svc::Stage::Encode, op, 0, trace, t0);
+                self.enqueue_traced(conn, &line, trace, op);
             }
             Request::Shutdown => {
                 self.ctl.metrics.request("shutdown");
-                conn.enqueue_line(&proto::ok_response_tagged(
+                let line = proto::ok_response_tagged(
                     id.as_ref(),
                     vec![("shutting_down".into(), Json::Bool(true))],
-                ));
+                );
+                self.enqueue_traced(conn, &line, trace, op);
                 self.ctl.stopping.store(true, Ordering::SeqCst);
             }
+        }
+    }
+
+    /// A tracing context for an admitted ticket — `None` when service
+    /// tracing is off, so the untraced hot path allocates nothing.
+    fn ticket_span(&self, trace: u64, op: u8) -> Option<TicketSpan> {
+        self.ctl.svc.is_enabled().then(|| TicketSpan {
+            svc: self.ctl.svc.clone(),
+            trace_id: trace,
+            op,
+        })
+    }
+
+    /// Enqueue a response, bookmarking it for a `Flush` span when
+    /// tracing is on (the mux reports the flush that covered its bytes).
+    fn enqueue_traced(&self, conn: &mut Conn, line: &str, trace: u64, op: u8) {
+        if self.ctl.svc.is_enabled() {
+            conn.enqueue_line_traced(line, trace, op);
+        } else {
+            conn.enqueue_line(line);
         }
     }
 
     fn handle_done(&mut self, done: Done) {
         self.pending_jobs = self.pending_jobs.saturating_sub(1);
         match done {
-            Done::Submit { conn, id, t0, result } => {
+            Done::Submit { conn, id, trace, t0, result } => {
+                let enc0 = Instant::now();
                 let line = match result {
                     Ok(report) => {
                         self.ctl.metrics.completed(OpClass::Submit, 1, t0.elapsed());
@@ -563,7 +666,10 @@ impl EventLoop {
                         proto::error_response_tagged(id.as_ref(), 500, &msg)
                     }
                 };
-                self.respond(conn, &line);
+                self.ctl
+                    .svc
+                    .span_since(svc::Stage::Encode, svc::op::SUBMIT, 0, trace, enc0);
+                self.respond(conn, &line, trace, svc::op::SUBMIT);
             }
             Done::BatchJob { batch, index, result } => {
                 let Some(pb) = self.batches.get_mut(&batch) else {
@@ -581,8 +687,13 @@ impl EventLoop {
                 if pb.remaining == 0 {
                     let pb = self.batches.remove(&batch).expect("present above");
                     let conn = pb.conn;
+                    let trace = pb.trace;
+                    let enc0 = Instant::now();
                     let line = self.finish_batch(pb);
-                    self.respond(conn, &line);
+                    self.ctl
+                        .svc
+                        .span_since(svc::Stage::Encode, svc::op::BATCH, 0, trace, enc0);
+                    self.respond(conn, &line, trace, svc::op::BATCH);
                 }
             }
         }
@@ -626,24 +737,28 @@ impl EventLoop {
     /// Deliver a completed response to its connection — or drop it, if
     /// the client already hung up (the job still ran and is counted;
     /// there is just no one left to tell).
-    fn respond(&mut self, tok: u64, line: &str) {
+    fn respond(&mut self, tok: u64, line: &str, trace: u64, op: u8) {
         if let Some(conn) = self.conns.get_mut(&tok) {
             conn.inflight = conn.inflight.saturating_sub(1);
             if !conn.dead {
-                conn.enqueue_line(line);
+                if self.ctl.svc.is_enabled() {
+                    conn.enqueue_line_traced(line, trace, op);
+                } else {
+                    conn.enqueue_line(line);
+                }
             }
         }
     }
 
     /// Map a queue refusal to its wire response (`429` full, `503`
-    /// closing).
-    fn refusal(&self, id: Option<&Json>, e: SubmitError) -> String {
+    /// closing), recording the rejection as a `Reject` span.
+    fn refusal(&self, id: Option<&Json>, op: u8, trace: u64, e: SubmitError) -> String {
         self.ctl.metrics.rejected();
-        match e {
-            SubmitError::QueueFull { .. } => {
-                proto::error_response_tagged(id, 429, &e.to_string())
-            }
-            SubmitError::ShuttingDown => proto::error_response_tagged(id, 503, &e.to_string()),
-        }
+        let code = match e {
+            SubmitError::QueueFull { .. } => 429,
+            SubmitError::ShuttingDown => 503,
+        };
+        self.ctl.svc.event(svc::Stage::Reject, op, code, trace);
+        proto::error_response_tagged(id, code, &e.to_string())
     }
 }

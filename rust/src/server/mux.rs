@@ -21,9 +21,10 @@
 //!   until the peer drains, so one stalled client bounds its own memory
 //!   instead of the daemon's.
 
+use std::collections::VecDeque;
 use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Per-`try_read` byte bound: a firehosing peer yields the loop back
 /// after this much, instead of starving every other connection.
@@ -43,6 +44,18 @@ pub enum LineEvent {
     Overflow,
 }
 
+/// A service-tracing bookmark on the write buffer: when every byte up
+/// to `end` has been handed to the kernel, the response for `trace` has
+/// fully left the process (see [`Conn::enqueue_line_traced`]).
+struct FlushMark {
+    /// Offset into `wbuf` one past the marked response's newline.
+    end: usize,
+    trace: u64,
+    op: u8,
+    /// When the response line was enqueued (start of the flush span).
+    enqueued: Instant,
+}
+
 /// One nonblocking connection: socket + read/write buffers + lifecycle
 /// flags. The owning loop drives it with [`Conn::try_read`] /
 /// [`Conn::try_flush`] and decides retirement from the flags.
@@ -52,6 +65,13 @@ pub struct Conn {
     wbuf: Vec<u8>,
     /// Bytes of `wbuf` already written to the socket.
     wpos: usize,
+    /// Pending flush bookmarks in enqueue (= buffer-offset) order; only
+    /// populated through [`Conn::enqueue_line_traced`], so untraced
+    /// servers never touch it.
+    marks: VecDeque<FlushMark>,
+    /// Marks whose bytes have fully flushed, awaiting collection by the
+    /// owner ([`Conn::take_flushed`]).
+    flushed: Vec<(u64, u8, Instant)>,
     /// Peer closed its write half (EOF) or overflowed the line cap: no
     /// more requests will arrive, but queued responses still flush.
     pub read_closed: bool,
@@ -71,6 +91,8 @@ impl Conn {
             rbuf: Vec::new(),
             wbuf: Vec::new(),
             wpos: 0,
+            marks: VecDeque::new(),
+            flushed: Vec::new(),
             read_closed: false,
             dead: false,
             inflight: 0,
@@ -96,6 +118,26 @@ impl Conn {
         self.wbuf.push(b'\n');
     }
 
+    /// [`Conn::enqueue_line`] plus a flush bookmark: once the line's
+    /// last byte reaches the kernel, `(trace, op, enqueued)` becomes
+    /// collectible via [`Conn::take_flushed`] so the owner can emit a
+    /// `Flush` span. Only called when service tracing is on.
+    pub fn enqueue_line_traced(&mut self, line: &str, trace: u64, op: u8) {
+        self.enqueue_line(line);
+        self.marks.push_back(FlushMark {
+            end: self.wbuf.len(),
+            trace,
+            op,
+            enqueued: Instant::now(),
+        });
+    }
+
+    /// Drain the responses whose bytes have fully flushed since the last
+    /// call: `(trace, op, enqueued)` per response.
+    pub fn take_flushed(&mut self) -> Vec<(u64, u8, Instant)> {
+        std::mem::take(&mut self.flushed)
+    }
+
     /// Bytes queued but not yet accepted by the socket.
     pub fn pending_write(&self) -> usize {
         self.wbuf.len() - self.wpos
@@ -117,13 +159,22 @@ impl Conn {
                 Err(_) => self.dead = true,
             }
         }
+        // collect bookmarks whose bytes are fully out
+        while matches!(self.marks.front(), Some(m) if m.end <= self.wpos) {
+            let m = self.marks.pop_front().expect("front checked above");
+            self.flushed.push((m.trace, m.op, m.enqueued));
+        }
         if self.wpos == self.wbuf.len() {
             self.wbuf.clear();
             self.wpos = 0;
         } else if self.wpos > CHUNK {
             // reclaim the flushed prefix so a long-lived slow reader
-            // does not hold its whole response history in memory
+            // does not hold its whole response history in memory;
+            // surviving bookmarks shift down with the buffer
             self.wbuf.drain(..self.wpos);
+            for m in &mut self.marks {
+                m.end -= self.wpos;
+            }
             self.wpos = 0;
         }
         progress
@@ -285,6 +336,52 @@ mod tests {
         }
         assert!(conn.read_closed);
         assert!(events.is_empty());
+    }
+
+    #[test]
+    fn flush_marks_survive_partial_flushes_and_buffer_reclaim() {
+        let (mut conn, peer) = pair();
+        conn.enqueue_line_traced("r-1", 1, 1);
+        conn.enqueue_line_traced("r-2", 2, 1);
+        assert!(conn.take_flushed().is_empty(), "nothing flushed yet");
+        // loopback sockets take these 8 bytes in one flush
+        assert!(conn.try_flush());
+        let got: Vec<(u64, u8)> =
+            conn.take_flushed().into_iter().map(|(t, o, _)| (t, o)).collect();
+        assert_eq!(got, vec![(1, 1), (2, 1)]);
+        assert!(conn.take_flushed().is_empty(), "drained");
+
+        // force the CHUNK-reclaim path: a response larger than one chunk
+        // followed by a marked small one — offsets must shift with the
+        // buffer so the second mark still resolves
+        let big = "x".repeat(64 * super::CHUNK);
+        conn.enqueue_line_traced(&big, 3, 2);
+        conn.enqueue_line_traced("tail", 4, 2);
+        let mut sink = peer;
+        sink.set_nonblocking(true).unwrap();
+        let mut seen = Vec::new();
+        let mut drained = 0usize;
+        let want = big.len() + "tail".len() + 2;
+        let mut scratch = [0u8; 4096];
+        for _ in 0..10_000 {
+            conn.try_flush();
+            seen.extend(conn.take_flushed());
+            match std::io::Read::read(&mut sink, &mut scratch) {
+                Ok(n) => drained += n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_micros(50));
+                }
+                Err(e) => panic!("peer read failed: {e}"),
+            }
+            if drained == want && conn.pending_write() == 0 {
+                conn.try_flush();
+                seen.extend(conn.take_flushed());
+                break;
+            }
+        }
+        assert_eq!(drained, want, "peer saw every byte");
+        let ids: Vec<u64> = seen.iter().map(|(t, _, _)| *t).collect();
+        assert_eq!(ids, vec![3, 4], "both marks resolved in order");
     }
 
     #[test]

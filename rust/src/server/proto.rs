@@ -377,6 +377,12 @@ pub struct Envelope {
     /// `None` on untagged (v1-style) requests; their responses carry no
     /// `id` field either.
     pub id: Option<Json>,
+    /// Service-plane trace id (see `trace::service`). Assigned by the
+    /// first hop (the router, when present) and propagated on forwarded
+    /// *requests* only: responses never echo it, so tracing cannot
+    /// perturb response bytes. A server receiving a request without one
+    /// assigns its own.
+    pub trace: Option<u64>,
     pub req: Request,
 }
 
@@ -402,6 +408,7 @@ pub fn parse_envelope(line: &str) -> anyhow::Result<Envelope> {
         "request must be a JSON object"
     );
     let id = request_id(&j)?;
+    let trace = opt_u64(&j, "trace")?;
     let seed = opt_u64(&j, "seed")?;
     let req = match need_str(&j, "op")? {
         "submit" => Request::Submit {
@@ -427,7 +434,7 @@ pub fn parse_envelope(line: &str) -> anyhow::Result<Envelope> {
         "shutdown" => Request::Shutdown,
         other => anyhow::bail!("unknown op `{other}` (submit|batch|status|metrics|shutdown)"),
     };
-    Ok(Envelope { id, req })
+    Ok(Envelope { id, trace, req })
 }
 
 /// Parse one request line, discarding any tag (v1 callers and tests).
@@ -479,6 +486,18 @@ pub fn encode_request_tagged(req: &Request, id: &Json) -> String {
     let Json::Obj(mut fields) = request_to_json(req) else {
         unreachable!("requests encode as objects")
     };
+    fields.insert(0, ("id".to_string(), id.clone()));
+    Json::Obj(fields).encode()
+}
+
+/// A tagged request line carrying a service-plane trace id (what the
+/// router forwards when tracing is on, so backend spans share the
+/// router-assigned id).
+pub fn encode_request_traced(req: &Request, id: &Json, trace: u64) -> String {
+    let Json::Obj(mut fields) = request_to_json(req) else {
+        unreachable!("requests encode as objects")
+    };
+    fields.insert(0, ("trace".to_string(), Json::u64_lossless(trace)));
     fields.insert(0, ("id".to_string(), id.clone()));
     Json::Obj(fields).encode()
 }
@@ -654,6 +673,24 @@ mod tests {
         // `reports` must be a boolean when present
         assert!(parse_envelope(r#"{"op":"batch","scenario":"storm","jobs":2,"reports":1}"#)
             .is_err());
+    }
+
+    #[test]
+    fn trace_ids_parse_propagate_and_validate() {
+        // absent by default
+        assert_eq!(parse_envelope(r#"{"op":"status"}"#).unwrap().trace, None);
+        // the traced encoding round-trips both the tag and the trace id,
+        // including router-namespace ids above 2^53 (string-encoded by
+        // the lossless u64 form)
+        let big = (1u64 << 63) | 12345;
+        let line = encode_request_traced(&Request::Status, &Json::str("t-2"), big);
+        let env = parse_envelope(&line).unwrap();
+        assert_eq!(env.id, Some(Json::str("t-2")));
+        assert_eq!(env.trace, Some(big));
+        assert_eq!(env.req, Request::Status);
+        // non-integer trace ids are a hard 400
+        assert!(parse_envelope(r#"{"trace":-1,"op":"status"}"#).is_err());
+        assert!(parse_envelope(r#"{"trace":[1],"op":"status"}"#).is_err());
     }
 
     #[test]

@@ -17,10 +17,34 @@
 //! the backend that already cached it, and cache hit rates survive
 //! horizontal scale-out. `batch` routes by a digest of
 //! `(scenario, jobs, seed)` (same idea: identical batches re-hit one
-//! backend's caches). `status`/`metrics` have no content to digest and
-//! round-robin instead. `shutdown` broadcasts: every backend is asked
-//! to stop, their acks are awaited (bounded), then the client gets its
-//! ok and the router exits.
+//! backend's caches). When the digest's preferred backend is marked
+//! unhealthy, the request moves to the next healthy slot (wrapping) —
+//! affinity degrades gracefully instead of 502ing. `status` answers
+//! **locally** with the router's own view (accepting flag plus one
+//! sub-document per backend: health, in-flight count, up/down
+//! transitions). `metrics` **fans out** to every reachable backend and
+//! returns one aggregated snapshot: monotonic counters summed,
+//! `uptime_ms` the max, latency/queue-wait percentiles merged as a
+//! count-weighted average (an approximation — true percentiles cannot
+//! be pooled from triples), with each backend's unmerged snapshot
+//! under `"backends"` keyed by address. `shutdown` broadcasts: every
+//! backend is asked to stop, their acks are awaited (bounded), then
+//! the client gets its ok and the router exits.
+//!
+//! **Health probes.** Every `[server] probe_ms` the router pings each
+//! backend with a cheap tagged `status`; `probe_threshold` consecutive
+//! failures (failed dial, dropped connection, or an unanswered
+//! previous probe) mark the backend *down* — the shard map skips it —
+//! and the first successful probe afterwards marks it back *up*.
+//! Requests already in flight on a dying backend still get their
+//! explicit `502`; probing only protects *future* routing decisions.
+//!
+//! **Tracing.** With `[server] trace` on, the router stamps every
+//! client request that does not already carry a trace id with a fresh
+//! one (top bit set, so router-assigned ids never collide with a
+//! backend's own counter), records `RouterRecv`/`RouterForward` spans
+//! ([`crate::trace::service`]), and propagates the id on the forwarded
+//! envelope so the backend's spans correlate end to end.
 //!
 //! One router thread owns every socket (the [`super::mux`] readiness
 //! style): nonblocking client conns, one persistent nonblocking conn
@@ -32,6 +56,7 @@ use super::proto::{self, Envelope, Request};
 use super::MAX_INFLIGHT_PER_CONN;
 use crate::config::SimConfig;
 use crate::fleet::{cache, FleetJob};
+use crate::trace::service::{self as svc, ServiceTrace};
 use crate::util::{Fnv1a, Json};
 use std::collections::HashMap;
 use std::net::{SocketAddr, TcpListener};
@@ -104,37 +129,59 @@ pub fn start(cfg: SimConfig, opts: RouterOptions) -> anyhow::Result<RunningRoute
     let addr = listener.local_addr()?;
     let stopping = Arc::new(AtomicBool::new(false));
     let drain_ms = cfg.server.drain_ms;
+    let svc = Arc::new(ServiceTrace::new(
+        cfg.server.trace,
+        cfg.server.trace_capacity,
+    ));
+    if cfg.server.trace && !cfg.server.trace_out.is_empty() {
+        svc.attach_sink(std::path::Path::new(&cfg.server.trace_out))
+            .map_err(|e| {
+                anyhow::anyhow!("cannot open service trace sink {}: {e}", cfg.server.trace_out)
+            })?;
+    }
     let flag = stopping.clone();
     let loop_ = RouterLoop {
         cfg,
         listener: Some(listener),
         clients: HashMap::new(),
         next_client: 0,
-        backends: opts
-            .backends
-            .into_iter()
-            .map(|addr| Backend { addr, conn: None, inflight: HashMap::new() })
-            .collect(),
+        backends: opts.backends.into_iter().map(Backend::new).collect(),
         next_seq: 0,
-        rr: 0,
         stopping: flag,
         drain_ms,
         shutdown_reply: None,
         broadcast_sent: false,
         acks_pending: 0,
         deadline: None,
+        aggs: HashMap::new(),
+        next_agg: 0,
+        svc,
+        next_trace: 0,
     };
     let thread = std::thread::spawn(move || loop_.run());
     Ok(RunningRouter { addr, stopping, thread })
 }
 
 /// A routed request awaiting its backend response.
-struct Pending {
-    /// Destination client token; `None` for the router's own shutdown
-    /// broadcast (the ack is counted, not forwarded).
-    client: Option<u64>,
-    /// The client's original tag, restored on the way back.
+enum Pending {
+    /// A forwarded client request: re-tag the response and deliver.
+    Client { tok: u64, id: Option<Json> },
+    /// The router's own shutdown broadcast: count the ack.
+    ShutdownAck,
+    /// A health probe: an answer marks the backend up.
+    Probe,
+    /// One slot of an aggregated `metrics` fan-out.
+    Agg { key: u64, slot: usize },
+}
+
+/// An in-flight `metrics` fan-out: one slot per backend, answered out
+/// of order, merged and delivered when the last one lands (or fails).
+struct MetricsAgg {
+    client: u64,
     id: Option<Json>,
+    /// Per-backend snapshot (`None`: skipped, failed, or not yet in).
+    slots: Vec<Option<Json>>,
+    remaining: usize,
 }
 
 struct Backend {
@@ -144,6 +191,35 @@ struct Backend {
     conn: Option<Conn>,
     /// Internal sequence tag → who asked.
     inflight: HashMap<u64, Pending>,
+    /// Shard-map eligibility: optimistic `true` at startup, flipped by
+    /// the probe loop (`probe_threshold` consecutive failures → down,
+    /// one success → up).
+    healthy: bool,
+    /// Consecutive probe failures since the last success.
+    fails: usize,
+    /// When the last probe was sent (`None` = never, probe now).
+    last_probe: Option<Instant>,
+    /// A probe is in flight; still unanswered at the next due time, it
+    /// counts as a failure (a hung backend must not stay "up").
+    probe_pending: bool,
+    up_transitions: u64,
+    down_transitions: u64,
+}
+
+impl Backend {
+    fn new(addr: String) -> Self {
+        Self {
+            addr,
+            conn: None,
+            inflight: HashMap::new(),
+            healthy: true,
+            fails: 0,
+            last_probe: None,
+            probe_pending: false,
+            up_transitions: 0,
+            down_transitions: 0,
+        }
+    }
 }
 
 struct RouterLoop {
@@ -153,8 +229,6 @@ struct RouterLoop {
     next_client: u64,
     backends: Vec<Backend>,
     next_seq: u64,
-    /// Round-robin cursor for undigestable requests.
-    rr: usize,
     stopping: Arc<AtomicBool>,
     drain_ms: u64,
     /// The wire client owed the final shutdown ok, if any.
@@ -162,12 +236,22 @@ struct RouterLoop {
     broadcast_sent: bool,
     acks_pending: usize,
     deadline: Option<Instant>,
+    /// In-flight `metrics` fan-outs by aggregation key.
+    aggs: HashMap<u64, MetricsAgg>,
+    next_agg: u64,
+    /// Service-plane span recorder (disabled unless `[server] trace`).
+    svc: Arc<ServiceTrace>,
+    /// Counter behind router-assigned trace ids (top bit set on wire).
+    next_trace: u64,
 }
 
 impl RouterLoop {
     fn run(mut self) {
         loop {
             let mut progress = self.accept_new();
+            if !self.stopping.load(Ordering::SeqCst) {
+                self.probe_backends();
+            }
             progress |= self.pump_backends();
             progress |= self.pump_clients();
             self.reap();
@@ -178,6 +262,78 @@ impl RouterLoop {
                 std::thread::sleep(IDLE_TICK);
             }
         }
+    }
+
+    /// Send one cheap tagged `status` per backend every `probe_ms`;
+    /// track consecutive failures and flip health state (see module
+    /// docs). Due-gated, so calling every loop iteration is cheap.
+    fn probe_backends(&mut self) {
+        let period = Duration::from_millis(self.cfg.server.probe_ms);
+        let now = Instant::now();
+        for b in 0..self.backends.len() {
+            let due = match self.backends[b].last_probe {
+                None => true,
+                Some(t) => now.duration_since(t) >= period,
+            };
+            if !due {
+                continue;
+            }
+            self.backends[b].last_probe = Some(now);
+            if self.backends[b].probe_pending {
+                // the previous probe went unanswered for a whole period
+                self.backends[b].probe_pending = false;
+                self.probe_failed(b);
+            }
+            if self.backends[b].conn.is_none() {
+                match Conn::connect(&self.backends[b].addr, CONNECT_TIMEOUT) {
+                    Ok(c) => self.backends[b].conn = Some(c),
+                    Err(_) => {
+                        self.probe_failed(b);
+                        continue;
+                    }
+                }
+            }
+            let seq = self.next_seq;
+            self.next_seq += 1;
+            let backend = &mut self.backends[b];
+            let bc = backend.conn.as_mut().expect("connected above");
+            bc.enqueue_line(&proto::encode_request_tagged(
+                &Request::Status,
+                &Json::u64_lossless(seq),
+            ));
+            bc.try_flush();
+            backend.inflight.insert(seq, Pending::Probe);
+            backend.probe_pending = true;
+        }
+    }
+
+    fn probe_failed(&mut self, b: usize) {
+        let threshold = self.cfg.server.probe_threshold;
+        let backend = &mut self.backends[b];
+        backend.fails += 1;
+        if backend.healthy && backend.fails >= threshold {
+            backend.healthy = false;
+            backend.down_transitions += 1;
+        }
+    }
+
+    fn probe_succeeded(&mut self, b: usize) {
+        let backend = &mut self.backends[b];
+        backend.fails = 0;
+        backend.probe_pending = false;
+        if !backend.healthy {
+            backend.healthy = true;
+            backend.up_transitions += 1;
+        }
+    }
+
+    /// The digest's preferred backend, or the next healthy one after it
+    /// (wrapping). `None` when every backend is marked down.
+    fn pick_healthy(&self, preferred: usize) -> Option<usize> {
+        let n = self.backends.len();
+        (0..n)
+            .map(|k| (preferred + k) % n)
+            .find(|&b| self.backends[b].healthy)
     }
 
     fn accept_new(&mut self) -> bool {
@@ -254,22 +410,46 @@ impl RouterLoop {
     }
 
     /// A backend died: every request in flight on it gets an explicit
-    /// `502`; the connection slot empties so the next request re-dials.
+    /// `502` (aggregation slots come back empty, probes count as
+    /// failures); the connection slot empties so the next request
+    /// re-dials.
     fn fail_backend(&mut self, b: usize) {
         let addr = self.backends[b].addr.clone();
         let inflight = std::mem::take(&mut self.backends[b].inflight);
+        let mut probe_lost = false;
         for (_, pending) in inflight {
-            match pending.client {
-                Some(tok) => {
+            match pending {
+                Pending::Client { tok, id } => {
                     let line = proto::error_response_tagged(
-                        pending.id.as_ref(),
+                        id.as_ref(),
                         502,
                         &format!("backend {addr} dropped the connection"),
                     );
                     self.deliver(tok, &line);
                 }
-                None => self.acks_pending = self.acks_pending.saturating_sub(1),
+                Pending::ShutdownAck => {
+                    self.acks_pending = self.acks_pending.saturating_sub(1);
+                }
+                Pending::Probe => probe_lost = true,
+                Pending::Agg { key, slot } => self.agg_slot_failed(key, slot),
             }
+        }
+        if probe_lost {
+            self.backends[b].probe_pending = false;
+            self.probe_failed(b);
+        }
+    }
+
+    /// One fan-out slot will never answer; finish the aggregation if it
+    /// was the last one outstanding.
+    fn agg_slot_failed(&mut self, key: u64, _slot: usize) {
+        let Some(agg) = self.aggs.get_mut(&key) else {
+            return;
+        };
+        agg.remaining = agg.remaining.saturating_sub(1);
+        if agg.remaining == 0 {
+            let agg = self.aggs.remove(&key).expect("present above");
+            self.finish_agg(agg);
         }
     }
 
@@ -303,7 +483,7 @@ impl RouterLoop {
                         &Json::u64_lossless(tag),
                     ));
                     conn.try_flush();
-                    backend.inflight.insert(tag, Pending { client: None, id: None });
+                    backend.inflight.insert(tag, Pending::ShutdownAck);
                     acks += 1;
                 }
             }
@@ -331,6 +511,7 @@ impl RouterLoop {
             }
             std::thread::sleep(IDLE_TICK);
         }
+        let _ = self.svc.flush();
         true
     }
 
@@ -350,11 +531,26 @@ impl RouterLoop {
                 return;
             }
         };
-        let Envelope { id, req } = env;
+        let Envelope { id, trace, req } = env;
         if self.stopping.load(Ordering::SeqCst) {
             conn.enqueue_line(&proto::error_response_tagged(id.as_ref(), 503, "shutting down"));
             return;
         }
+        // Stamp requests arriving without a trace id. Router-assigned
+        // ids set the top bit so they can never collide with a
+        // backend's own (counter-assigned) namespace.
+        let trace = trace.unwrap_or_else(|| {
+            self.next_trace += 1;
+            (1u64 << 63) | self.next_trace
+        });
+        let op = match &req {
+            Request::Submit { .. } => svc::op::SUBMIT,
+            Request::Batch { .. } => svc::op::BATCH,
+            Request::Status => svc::op::STATUS,
+            Request::Metrics => svc::op::METRICS,
+            Request::Shutdown => svc::op::SHUTDOWN,
+        };
+        self.svc.event(svc::Stage::RouterRecv, op, 0, trace);
         let n = self.backends.len() as u64;
         match req {
             Request::Shutdown => {
@@ -363,28 +559,164 @@ impl RouterLoop {
                 conn.inflight += 1;
                 self.stopping.store(true, Ordering::SeqCst);
             }
-            Request::Status | Request::Metrics => {
-                let b = self.rr % self.backends.len();
-                self.rr += 1;
-                self.forward(b, tok, conn, id, &req);
+            Request::Status => {
+                // answered locally: the router's own view of the fleet
+                let backends = Json::Obj(
+                    self.backends
+                        .iter()
+                        .map(|be| {
+                            (
+                                be.addr.clone(),
+                                Json::Obj(vec![
+                                    ("healthy".into(), Json::Bool(be.healthy)),
+                                    (
+                                        "inflight".into(),
+                                        Json::u64_lossless(be.inflight.len() as u64),
+                                    ),
+                                    (
+                                        "up_transitions".into(),
+                                        Json::u64_lossless(be.up_transitions),
+                                    ),
+                                    (
+                                        "down_transitions".into(),
+                                        Json::u64_lossless(be.down_transitions),
+                                    ),
+                                ]),
+                            )
+                        })
+                        .collect(),
+                );
+                conn.enqueue_line(&proto::ok_response_tagged(
+                    id.as_ref(),
+                    vec![
+                        ("router".into(), Json::Bool(true)),
+                        ("accepting".into(), Json::Bool(true)),
+                        ("backends".into(), backends),
+                    ],
+                ));
             }
+            Request::Metrics => self.fan_out_metrics(tok, conn, id, trace),
             Request::Submit { ref job, seed } => {
                 let fj = FleetJob { job: job.clone(), seed };
                 let key = cache::job_key(&fj.config(&self.cfg), &fj.job);
-                self.forward((key % n) as usize, tok, conn, id, &req);
+                self.route((key % n) as usize, tok, conn, id, trace, op, &req);
             }
             Request::Batch { kind, jobs, seed, .. } => {
                 let mut h = Fnv1a::new();
                 h.write(kind.name().as_bytes());
                 h.write(&(jobs as u64).to_le_bytes());
                 h.write(&seed.unwrap_or(self.cfg.seed).to_le_bytes());
-                self.forward((h.finish() % n) as usize, tok, conn, id, &req);
+                self.route((h.finish() % n) as usize, tok, conn, id, trace, op, &req);
             }
         }
     }
 
+    /// Fan one `metrics` request out to every healthy backend; the
+    /// aggregated answer is built in [`RouterLoop::finish_agg`] once the
+    /// last slot lands.
+    fn fan_out_metrics(&mut self, tok: u64, conn: &mut Conn, id: Option<Json>, trace: u64) {
+        if conn.inflight >= MAX_INFLIGHT_PER_CONN {
+            conn.enqueue_line(&proto::error_response_tagged(
+                id.as_ref(),
+                429,
+                &format!(
+                    "too many in-flight requests on this connection \
+                     (max {MAX_INFLIGHT_PER_CONN})"
+                ),
+            ));
+            return;
+        }
+        let key = self.next_agg;
+        let mut sent = 0usize;
+        for b in 0..self.backends.len() {
+            if !self.backends[b].healthy {
+                continue;
+            }
+            if self.backends[b].conn.is_none() {
+                match Conn::connect(&self.backends[b].addr, CONNECT_TIMEOUT) {
+                    Ok(c) => self.backends[b].conn = Some(c),
+                    Err(_) => continue, // aggregate over whoever is reachable
+                }
+            }
+            let seq = self.next_seq;
+            self.next_seq += 1;
+            self.svc.emit(svc::Record {
+                t_us: self.svc.now_us(),
+                stage: svc::Stage::RouterForward,
+                op: svc::op::METRICS,
+                code: 0,
+                backend: b as u32,
+                trace_id: trace,
+                dur_us: 0,
+            });
+            let backend = &mut self.backends[b];
+            let bc = backend.conn.as_mut().expect("connected above");
+            bc.enqueue_line(&proto::encode_request_traced(
+                &Request::Metrics,
+                &Json::u64_lossless(seq),
+                trace,
+            ));
+            bc.try_flush();
+            backend.inflight.insert(seq, Pending::Agg { key, slot: b });
+            sent += 1;
+        }
+        if sent == 0 {
+            conn.enqueue_line(&proto::error_response_tagged(
+                id.as_ref(),
+                502,
+                "no healthy backend reachable for the metrics fan-out",
+            ));
+            return;
+        }
+        self.next_agg += 1;
+        self.aggs.insert(
+            key,
+            MetricsAgg {
+                client: tok,
+                id,
+                slots: vec![None; self.backends.len()],
+                remaining: sent,
+            },
+        );
+        conn.inflight += 1;
+    }
+
+    /// Route to the digest's preferred backend — or the next healthy
+    /// one — then re-tag and forward.
+    #[allow(clippy::too_many_arguments)]
+    fn route(
+        &mut self,
+        preferred: usize,
+        tok: u64,
+        conn: &mut Conn,
+        id: Option<Json>,
+        trace: u64,
+        op: u8,
+        req: &Request,
+    ) {
+        let Some(b) = self.pick_healthy(preferred) else {
+            conn.enqueue_line(&proto::error_response_tagged(
+                id.as_ref(),
+                502,
+                "no healthy backend available",
+            ));
+            return;
+        };
+        self.forward(b, tok, conn, id, trace, op, req);
+    }
+
     /// Re-tag and forward one request to backend `b`.
-    fn forward(&mut self, b: usize, tok: u64, conn: &mut Conn, id: Option<Json>, req: &Request) {
+    #[allow(clippy::too_many_arguments)]
+    fn forward(
+        &mut self,
+        b: usize,
+        tok: u64,
+        conn: &mut Conn,
+        id: Option<Json>,
+        trace: u64,
+        op: u8,
+        req: &Request,
+    ) {
         if conn.inflight >= MAX_INFLIGHT_PER_CONN {
             conn.enqueue_line(&proto::error_response_tagged(
                 id.as_ref(),
@@ -411,17 +743,31 @@ impl RouterLoop {
         }
         let seq = self.next_seq;
         self.next_seq += 1;
+        self.svc.emit(svc::Record {
+            t_us: self.svc.now_us(),
+            stage: svc::Stage::RouterForward,
+            op,
+            code: 0,
+            backend: b as u32,
+            trace_id: trace,
+            dur_us: 0,
+        });
         let backend = &mut self.backends[b];
         let bc = backend.conn.as_mut().expect("connected above");
-        bc.enqueue_line(&proto::encode_request_tagged(req, &Json::u64_lossless(seq)));
+        bc.enqueue_line(&proto::encode_request_traced(
+            req,
+            &Json::u64_lossless(seq),
+            trace,
+        ));
         bc.try_flush();
-        backend.inflight.insert(seq, Pending { client: Some(tok), id });
+        backend.inflight.insert(seq, Pending::Client { tok, id });
         conn.inflight += 1;
     }
 
-    /// One backend response: strip the internal tag, restore the
-    /// client's, deliver. Untagged or unknown-tag lines are dropped —
-    /// they correlate to nothing.
+    /// One backend response: strip the internal tag, resolve what was
+    /// waiting on it (client forward, shutdown ack, probe, aggregation
+    /// slot). Untagged or unknown-tag lines are dropped — they
+    /// correlate to nothing.
     fn handle_backend_line(&mut self, b: usize, raw: &[u8]) {
         let Ok(text) = std::str::from_utf8(raw) else {
             return;
@@ -435,19 +781,124 @@ impl RouterLoop {
         let Some(pending) = self.backends[b].inflight.remove(&seq) else {
             return;
         };
-        let Some(client) = pending.client else {
-            self.acks_pending = self.acks_pending.saturating_sub(1);
-            return;
-        };
-        let Json::Obj(fields) = j else {
-            return;
-        };
-        let mut fields: Vec<(String, Json)> =
-            fields.into_iter().filter(|(k, _)| k != "id").collect();
-        if let Some(orig) = pending.id {
-            fields.insert(0, ("id".to_string(), orig));
+        match pending {
+            Pending::ShutdownAck => {
+                self.acks_pending = self.acks_pending.saturating_sub(1);
+            }
+            Pending::Probe => self.probe_succeeded(b),
+            Pending::Client { tok, id } => {
+                let Json::Obj(fields) = j else {
+                    return;
+                };
+                let mut fields: Vec<(String, Json)> =
+                    fields.into_iter().filter(|(k, _)| k != "id").collect();
+                if let Some(orig) = id {
+                    fields.insert(0, ("id".to_string(), orig));
+                }
+                self.deliver(tok, &Json::Obj(fields).encode());
+            }
+            Pending::Agg { key, slot } => {
+                let Json::Obj(fields) = j else {
+                    self.agg_slot_failed(key, slot);
+                    return;
+                };
+                let doc = Json::Obj(
+                    fields.into_iter().filter(|(k, _)| k != "id").collect(),
+                );
+                let Some(agg) = self.aggs.get_mut(&key) else {
+                    return;
+                };
+                agg.slots[slot] = Some(doc);
+                agg.remaining = agg.remaining.saturating_sub(1);
+                if agg.remaining == 0 {
+                    let agg = self.aggs.remove(&key).expect("present above");
+                    self.finish_agg(agg);
+                }
+            }
         }
-        self.deliver(client, &Json::Obj(fields).encode());
+    }
+
+    /// Merge a completed `metrics` fan-out into one aggregated snapshot
+    /// (see module docs for the per-field policy) and deliver it.
+    fn finish_agg(&mut self, agg: MetricsAgg) {
+        let docs: Vec<(String, Json)> = agg
+            .slots
+            .into_iter()
+            .enumerate()
+            .filter_map(|(b, doc)| Some((self.backends[b].addr.clone(), doc?)))
+            .collect();
+        if docs.is_empty() {
+            let line = proto::error_response_tagged(
+                agg.id.as_ref(),
+                502,
+                "no backend answered the metrics fan-out",
+            );
+            self.deliver(agg.client, &line);
+            return;
+        }
+        let sum_u64 = |key: &str| -> u64 {
+            docs.iter()
+                .filter_map(|(_, d)| d.get(key).and_then(Json::as_u64))
+                .sum()
+        };
+        let mut fields: Vec<(String, Json)> = Vec::new();
+        // uptime: the oldest backend's, not a sum — "how long has this
+        // cluster been up" is bounded by its longest-lived member
+        let uptime = docs
+            .iter()
+            .filter_map(|(_, d)| d.get("uptime_ms").and_then(Json::as_f64))
+            .fold(0.0, f64::max);
+        fields.push(("uptime_ms".into(), Json::num(uptime)));
+        for key in ["requests", "submits", "batches", "jobs_completed", "rejected", "errors"] {
+            fields.push((key.into(), Json::u64_lossless(sum_u64(key))));
+        }
+        let jps: f64 = docs
+            .iter()
+            .filter_map(|(_, d)| d.get("jobs_per_sec").and_then(Json::as_f64))
+            .sum();
+        fields.push(("jobs_per_sec".into(), Json::num(jps)));
+        let latency = Json::Obj(
+            ["submit", "batch", "status"]
+                .iter()
+                .map(|class| {
+                    let merged = merge_triples(docs.iter().map(|(_, d)| {
+                        (weight_for(d, class), d.get("latency_ms").and_then(|l| l.get(class)))
+                    }));
+                    (class.to_string(), merged)
+                })
+                .collect(),
+        );
+        fields.push(("latency_ms".into(), latency));
+        let queue_wait = merge_triples(docs.iter().map(|(_, d)| {
+            (
+                d.get("jobs_completed").and_then(Json::as_u64).unwrap_or(0) as f64,
+                d.get("queue_wait_ms"),
+            )
+        }));
+        fields.push(("queue_wait_ms".into(), queue_wait));
+        for key in [
+            "sim_steps",
+            "trace_records",
+            "trace_dropped",
+            "service_trace_records",
+            "service_trace_dropped",
+        ] {
+            fields.push((key.into(), Json::u64_lossless(sum_u64(key))));
+        }
+        // cache counters are conditional in the daemon payload; only
+        // aggregate the ones at least one backend reported
+        for key in [
+            "result_cache_hits",
+            "result_cache_misses",
+            "compile_cache_hits",
+            "compile_cache_misses",
+        ] {
+            if docs.iter().any(|(_, d)| d.get(key).is_some()) {
+                fields.push((key.into(), Json::u64_lossless(sum_u64(key))));
+            }
+        }
+        fields.push(("backends".into(), Json::Obj(docs)));
+        self.deliver(agg.client, &proto::ok_response_tagged(agg.id.as_ref(), fields));
     }
 
     fn deliver(&mut self, tok: u64, line: &str) {
@@ -457,5 +908,56 @@ impl RouterLoop {
                 conn.enqueue_line(line);
             }
         }
+    }
+}
+
+/// Count-weighted average of p50/p95/p99 triples. An approximation —
+/// true percentiles cannot be pooled from per-backend summaries — but
+/// it weights each backend by the traffic behind its numbers instead
+/// of letting an idle backend drag the merge around. `null` / missing
+/// entries are skipped; all-skipped merges back to `null`. Weights are
+/// floored at 1 so a backend with samples but a zero counter cannot
+/// zero the divisor.
+fn merge_triples<'a>(parts: impl Iterator<Item = (f64, Option<&'a Json>)>) -> Json {
+    let mut total = 0.0f64;
+    let mut acc = [0.0f64; 3];
+    let mut any = false;
+    for (w, triple) in parts {
+        let Some(t) = triple else {
+            continue;
+        };
+        let (Some(p50), Some(p95), Some(p99)) = (
+            t.get("p50_ms").and_then(Json::as_f64),
+            t.get("p95_ms").and_then(Json::as_f64),
+            t.get("p99_ms").and_then(Json::as_f64),
+        ) else {
+            continue;
+        };
+        let w = w.max(1.0);
+        any = true;
+        total += w;
+        acc[0] += w * p50;
+        acc[1] += w * p95;
+        acc[2] += w * p99;
+    }
+    if !any {
+        return Json::Null;
+    }
+    Json::Obj(vec![
+        ("p50_ms".into(), Json::num(acc[0] / total)),
+        ("p95_ms".into(), Json::num(acc[1] / total)),
+        ("p99_ms".into(), Json::num(acc[2] / total)),
+    ])
+}
+
+/// The class-appropriate merge weight of one backend snapshot: its
+/// request count in that latency class (status has no dedicated
+/// counter; everything that is not a submit or batch approximates it).
+fn weight_for(doc: &Json, class: &str) -> f64 {
+    let get = |k: &str| doc.get(k).and_then(Json::as_u64).unwrap_or(0);
+    match class {
+        "submit" => get("submits") as f64,
+        "batch" => get("batches") as f64,
+        _ => get("requests").saturating_sub(get("submits") + get("batches")) as f64,
     }
 }

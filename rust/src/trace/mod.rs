@@ -14,6 +14,7 @@
 //! query the perf log directly.
 
 pub mod perf;
+pub mod service;
 
 use crate::config::Mode;
 use crate::isa::Instr;

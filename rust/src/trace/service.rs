@@ -1,0 +1,777 @@
+//! Service-plane request tracing: lifecycle spans from router to worker.
+//!
+//! Where [`super::perf`] explains where *simulated cycles* go inside one
+//! job, this module explains where *wall-clock microseconds* go between
+//! a request arriving at a socket and its response leaving one. Every
+//! request is assigned a compact `u64` trace id (carried on the v2
+//! envelope, see `server::proto`), and each hop appends fixed-width
+//! 32-byte [`Record`]s to a shared [`ServiceTrace`]: router
+//! receive/forward, server admission decision, queue wait
+//! (enqueue→claim in `fleet::queue`), worker execute, response encode,
+//! and the final socket flush in `server::mux`.
+//!
+//! The recorder deliberately mirrors `trace::perf`'s shape — same record
+//! width, same bounded-ring-plus-optional-streaming-sink policy, same
+//! magic-tagged file format (a different [`MAGIC`], so the two stream
+//! kinds can never be confused) — because the query workflow is the
+//! same: run with `--trace-out`, then `spatzformer trace query FILE
+//! --service` for per-stage attribution and slowest-request ranking.
+//!
+//! **Tracing never changes responses.** Spans are recorded off the
+//! response path (after encode, after flush), the trace id is carried on
+//! *requests* only (responses never echo it), and the worker-side bridge
+//! into the perf ring emits its [`super::perf::Kind::Marker`] *after*
+//! the job ran. `rust/tests/trace_invariance.rs` pins served reports
+//! byte-identical with service tracing on vs off.
+//!
+//! Unlike [`super::perf::PerfTrace`] (owned by one cluster, `&mut`
+//! emission), a [`ServiceTrace`] is shared by the listener thread, every
+//! worker, and the connection pump, so emission takes `&self` behind one
+//! internal mutex — request rates are orders of magnitude below record
+//! rates inside the simulator, so the lock is never hot.
+
+use crate::metrics::Table;
+use crate::util::Json;
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufWriter, Read as IoRead, Write as IoWrite};
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// File-sink header: 8 magic bytes, then raw 32-byte records. Distinct
+/// from [`super::perf::MAGIC`] so a perf trace can never be mis-queried
+/// as a service trace (or vice versa).
+pub const MAGIC: &[u8; 8] = b"SPTZSVC1";
+
+/// Fixed on-wire record width in bytes (same as the perf stream).
+pub const RECORD_BYTES: usize = 32;
+
+/// Default in-memory ring capacity (records) when `server.trace_capacity`
+/// is not set.
+pub const DEFAULT_CAPACITY: usize = 65536;
+
+/// Request lifecycle stages. Discriminants are the on-wire `stage` byte;
+/// 0 is reserved as invalid so an all-zero buffer never decodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Stage {
+    /// A complete request line was parsed off a client socket
+    /// (point event, `dur_us` 0).
+    Recv = 1,
+    /// Admission control accepted the request into the queue
+    /// (point event).
+    Admit = 2,
+    /// Admission control refused the request; `code` carries the
+    /// protocol status (429/503) (point event).
+    Reject = 3,
+    /// Enqueue→claim span in `fleet::queue`: `t_us` is the enqueue
+    /// instant, `dur_us` the wait until a worker claimed the ticket.
+    QueueWait = 4,
+    /// Worker compile+execute span (cache hits included — a served-from-
+    /// cache job is a very short execute).
+    Execute = 5,
+    /// Response serialization span (report → canonical JSON line).
+    Encode = 6,
+    /// Write-buffer residence span: response enqueued → last byte handed
+    /// to the kernel by `server::mux`.
+    Flush = 7,
+    /// Router parsed a request line from a client (point event).
+    RouterRecv = 8,
+    /// Router forwarded the request to backend `backend` (point event).
+    RouterForward = 9,
+}
+
+impl Stage {
+    pub fn from_u8(v: u8) -> Option<Stage> {
+        Some(match v {
+            1 => Stage::Recv,
+            2 => Stage::Admit,
+            3 => Stage::Reject,
+            4 => Stage::QueueWait,
+            5 => Stage::Execute,
+            6 => Stage::Encode,
+            7 => Stage::Flush,
+            8 => Stage::RouterRecv,
+            9 => Stage::RouterForward,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Recv => "recv",
+            Stage::Admit => "admit",
+            Stage::Reject => "reject",
+            Stage::QueueWait => "queue_wait",
+            Stage::Execute => "execute",
+            Stage::Encode => "encode",
+            Stage::Flush => "flush",
+            Stage::RouterRecv => "router_recv",
+            Stage::RouterForward => "router_forward",
+        }
+    }
+}
+
+/// Request-op codes (`Record::op`); 0 means unknown/unparsed.
+pub mod op {
+    pub const SUBMIT: u8 = 1;
+    pub const BATCH: u8 = 2;
+    pub const STATUS: u8 = 3;
+    pub const METRICS: u8 = 4;
+    pub const SHUTDOWN: u8 = 5;
+
+    pub fn name(code: u8) -> &'static str {
+        match code {
+            SUBMIT => "submit",
+            BATCH => "batch",
+            STATUS => "status",
+            METRICS => "metrics",
+            SHUTDOWN => "shutdown",
+            _ => "unknown",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<u8> {
+        Some(match s {
+            "submit" => SUBMIT,
+            "batch" => BATCH,
+            "status" => STATUS,
+            "metrics" => METRICS,
+            "shutdown" => SHUTDOWN,
+            _ => return None,
+        })
+    }
+}
+
+/// One fixed-width service span. Layout (little-endian, 32 bytes):
+/// `t_us:u64 | stage:u8 | op:u8 | code:u16 | backend:u32 | trace_id:u64
+/// | dur_us:u64`.
+///
+/// `t_us` is microseconds since the recording process's trace epoch (the
+/// [`ServiceTrace`] construction instant), so records from one process
+/// are totally ordered but records from *different* processes (router vs
+/// backend) are only ordered within their own timeline. `code` is the
+/// protocol status for rejections/errors (429/502/503), 0 for success.
+/// `backend` is the router's backend index on router-side records, 0
+/// elsewhere.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Record {
+    pub t_us: u64,
+    pub stage: Stage,
+    pub op: u8,
+    pub code: u16,
+    pub backend: u32,
+    pub trace_id: u64,
+    pub dur_us: u64,
+}
+
+impl Record {
+    pub fn encode(&self) -> [u8; RECORD_BYTES] {
+        let mut buf = [0u8; RECORD_BYTES];
+        buf[0..8].copy_from_slice(&self.t_us.to_le_bytes());
+        buf[8] = self.stage as u8;
+        buf[9] = self.op;
+        buf[10..12].copy_from_slice(&self.code.to_le_bytes());
+        buf[12..16].copy_from_slice(&self.backend.to_le_bytes());
+        buf[16..24].copy_from_slice(&self.trace_id.to_le_bytes());
+        buf[24..32].copy_from_slice(&self.dur_us.to_le_bytes());
+        buf
+    }
+
+    /// Decode one record; `None` on an invalid stage byte.
+    pub fn decode(buf: &[u8; RECORD_BYTES]) -> Option<Record> {
+        let stage = Stage::from_u8(buf[8])?;
+        Some(Record {
+            t_us: u64::from_le_bytes(buf[0..8].try_into().unwrap()),
+            stage,
+            op: buf[9],
+            code: u16::from_le_bytes(buf[10..12].try_into().unwrap()),
+            backend: u32::from_le_bytes(buf[12..16].try_into().unwrap()),
+            trace_id: u64::from_le_bytes(buf[16..24].try_into().unwrap()),
+            dur_us: u64::from_le_bytes(buf[24..32].try_into().unwrap()),
+        })
+    }
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    ring: std::collections::VecDeque<Record>,
+    records_total: u64,
+    records_dropped: u64,
+    sink: Option<BufWriter<File>>,
+}
+
+/// The shared, bounded service-span recorder: an in-memory ring of the
+/// newest `capacity` records plus an optional streaming file sink that
+/// keeps everything. Cloned by `Arc` across the listener, workers and
+/// the connection pump; all methods take `&self`.
+#[derive(Debug)]
+pub struct ServiceTrace {
+    enabled: bool,
+    capacity: usize,
+    epoch: Instant,
+    inner: Mutex<Inner>,
+}
+
+impl ServiceTrace {
+    /// A recorder holding at most `capacity` records in memory
+    /// (`capacity` is clamped to at least 1).
+    pub fn new(enabled: bool, capacity: usize) -> Self {
+        Self {
+            enabled,
+            capacity: capacity.max(1),
+            epoch: Instant::now(),
+            inner: Mutex::new(Inner::default()),
+        }
+    }
+
+    /// A disabled recorder (every emit is a no-op).
+    pub fn disabled() -> Self {
+        Self::new(false, 1)
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Microseconds since the trace epoch (the timestamp domain of
+    /// `Record::t_us`).
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// `instant` expressed in the trace's timestamp domain (saturating
+    /// to 0 for instants predating the epoch).
+    pub fn instant_us(&self, instant: Instant) -> u64 {
+        instant.saturating_duration_since(self.epoch).as_micros() as u64
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().expect("service trace poisoned")
+    }
+
+    /// Append one record (no-op when disabled). The ring drops its
+    /// oldest record when full; the sink, if attached, sees everything.
+    pub fn emit(&self, rec: Record) {
+        if !self.enabled {
+            return;
+        }
+        let mut t = self.lock();
+        t.records_total += 1;
+        if let Some(w) = t.sink.as_mut() {
+            // A sink write error abandons the sink rather than wedging
+            // the server: tracing must never change service behavior.
+            if w.write_all(&rec.encode()).is_err() {
+                t.sink = None;
+            }
+        }
+        if t.ring.len() == self.capacity {
+            t.ring.pop_front();
+            t.records_dropped += 1;
+        }
+        t.ring.push_back(rec);
+    }
+
+    /// Emit a point event stamped `now` (`dur_us` 0, `backend` 0).
+    pub fn event(&self, stage: Stage, op: u8, code: u16, trace_id: u64) {
+        if !self.enabled {
+            return;
+        }
+        self.emit(Record {
+            t_us: self.now_us(),
+            stage,
+            op,
+            code,
+            backend: 0,
+            trace_id,
+            dur_us: 0,
+        });
+    }
+
+    /// Emit a span that began at `start` and ends now.
+    pub fn span_since(&self, stage: Stage, op: u8, code: u16, trace_id: u64, start: Instant) {
+        if !self.enabled {
+            return;
+        }
+        self.emit(Record {
+            t_us: self.instant_us(start),
+            stage,
+            op,
+            code,
+            backend: 0,
+            trace_id,
+            dur_us: start.elapsed().as_micros() as u64,
+        });
+    }
+
+    /// Records currently held in the ring.
+    pub fn len(&self) -> usize {
+        self.lock().ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lock().ring.is_empty()
+    }
+
+    /// Total records emitted (including those the ring has dropped).
+    pub fn records_total(&self) -> u64 {
+        self.lock().records_total
+    }
+
+    /// Records evicted from the ring to stay within capacity. The file
+    /// sink, when attached, still has them.
+    pub fn records_dropped(&self) -> u64 {
+        self.lock().records_dropped
+    }
+
+    /// Snapshot the ring contents, oldest first.
+    pub fn snapshot(&self) -> Vec<Record> {
+        self.lock().ring.iter().copied().collect()
+    }
+
+    /// Stream every future record to `path` (the in-memory ring keeps
+    /// working as the bounded query view). Writes the [`MAGIC`] header.
+    pub fn attach_sink(&self, path: &Path) -> std::io::Result<()> {
+        let mut w = BufWriter::new(File::create(path)?);
+        w.write_all(MAGIC)?;
+        self.lock().sink = Some(w);
+        Ok(())
+    }
+
+    /// Flush the file sink (call before reading the file back).
+    pub fn flush(&self) -> std::io::Result<()> {
+        match self.lock().sink.as_mut() {
+            Some(w) => w.flush(),
+            None => Ok(()),
+        }
+    }
+}
+
+/// Read a service `--trace-out` file back into records. Validates the
+/// [`MAGIC`] header and rejects truncated or unknown-stage records.
+pub fn read_trace_file(path: &Path) -> anyhow::Result<Vec<Record>> {
+    let mut bytes = Vec::new();
+    File::open(path)?.read_to_end(&mut bytes)?;
+    if bytes.len() < MAGIC.len() || &bytes[..MAGIC.len()] != MAGIC {
+        anyhow::bail!(
+            "{}: not a spatzformer service trace (bad magic; perf traces \
+             are queried without --service)",
+            path.display()
+        );
+    }
+    let body = &bytes[MAGIC.len()..];
+    if body.len() % RECORD_BYTES != 0 {
+        anyhow::bail!(
+            "{}: truncated service trace ({} trailing bytes)",
+            path.display(),
+            body.len() % RECORD_BYTES
+        );
+    }
+    let mut out = Vec::with_capacity(body.len() / RECORD_BYTES);
+    for (i, chunk) in body.chunks_exact(RECORD_BYTES).enumerate() {
+        let buf: &[u8; RECORD_BYTES] = chunk.try_into().unwrap();
+        let rec = Record::decode(buf)
+            .ok_or_else(|| anyhow::anyhow!("{}: bad stage at index {i}", path.display()))?;
+        out.push(rec);
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// Query layer (`spatzformer trace query FILE --service`)
+// ---------------------------------------------------------------------
+
+/// Record filter: by trace id, op code and router backend index.
+#[derive(Debug, Clone, Default)]
+pub struct ServiceFilter {
+    pub trace_id: Option<u64>,
+    pub op: Option<u8>,
+    pub backend: Option<u32>,
+}
+
+impl ServiceFilter {
+    pub fn matches(&self, rec: &Record) -> bool {
+        if let Some(id) = self.trace_id {
+            if rec.trace_id != id {
+                return false;
+            }
+        }
+        if let Some(op) = self.op {
+            if rec.op != op {
+                return false;
+            }
+        }
+        if let Some(b) = self.backend {
+            if rec.backend != b {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// Per-stage attribution line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StageSummary {
+    pub stage: Stage,
+    pub count: u64,
+    pub total_us: u64,
+    pub max_us: u64,
+}
+
+/// One request's lifecycle, folded from every record sharing its trace
+/// id. `total_us` spans the earliest record start to the latest record
+/// end; `code` is the largest status code seen (0 = clean).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RequestSummary {
+    pub trace_id: u64,
+    pub op: u8,
+    pub start_us: u64,
+    pub stages: u64,
+    pub total_us: u64,
+    pub queue_wait_us: u64,
+    pub execute_us: u64,
+    pub code: u16,
+}
+
+/// Aggregated query output: everything `trace query --service` prints.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServiceReport {
+    /// Records seen before filtering.
+    pub total_records: u64,
+    /// Records passing the filter.
+    pub matched: u64,
+    /// Distinct trace ids among matched records.
+    pub requests_total: u64,
+    /// Per-stage attribution over matched records, in stage order.
+    pub stages: Vec<StageSummary>,
+    /// Slowest N requests by `total_us`, descending (ties by trace id).
+    pub slowest: Vec<RequestSummary>,
+}
+
+/// Default slowest-request list length.
+pub const DEFAULT_SLOWEST: usize = 10;
+
+/// Run the filter + per-stage and per-request aggregation.
+pub fn service_query(records: &[Record], filter: &ServiceFilter, slowest: usize) -> ServiceReport {
+    let mut matched = 0u64;
+    let mut stages: BTreeMap<u8, StageSummary> = BTreeMap::new();
+    let mut requests: BTreeMap<u64, RequestSummary> = BTreeMap::new();
+    // per-request [start, end) extents, folded alongside the summaries
+    let mut extents: BTreeMap<u64, (u64, u64)> = BTreeMap::new();
+    for rec in records {
+        if !filter.matches(rec) {
+            continue;
+        }
+        matched += 1;
+        let s = stages.entry(rec.stage as u8).or_insert(StageSummary {
+            stage: rec.stage,
+            count: 0,
+            total_us: 0,
+            max_us: 0,
+        });
+        s.count += 1;
+        s.total_us += rec.dur_us;
+        s.max_us = s.max_us.max(rec.dur_us);
+        let r = requests.entry(rec.trace_id).or_insert(RequestSummary {
+            trace_id: rec.trace_id,
+            op: 0,
+            start_us: u64::MAX,
+            stages: 0,
+            total_us: 0,
+            queue_wait_us: 0,
+            execute_us: 0,
+            code: 0,
+        });
+        r.stages += 1;
+        if rec.op != 0 {
+            r.op = rec.op;
+        }
+        r.code = r.code.max(rec.code);
+        match rec.stage {
+            Stage::QueueWait => r.queue_wait_us += rec.dur_us,
+            Stage::Execute => r.execute_us += rec.dur_us,
+            _ => {}
+        }
+        let e = extents.entry(rec.trace_id).or_insert((u64::MAX, 0));
+        e.0 = e.0.min(rec.t_us);
+        e.1 = e.1.max(rec.t_us.saturating_add(rec.dur_us));
+    }
+    for (id, (start, end)) in &extents {
+        if let Some(r) = requests.get_mut(id) {
+            r.start_us = *start;
+            r.total_us = end.saturating_sub(*start);
+        }
+    }
+    let requests_total = requests.len() as u64;
+    let mut slow: Vec<RequestSummary> = requests.into_values().collect();
+    slow.sort_by(|x, y| {
+        y.total_us.cmp(&x.total_us).then_with(|| x.trace_id.cmp(&y.trace_id))
+    });
+    slow.truncate(slowest);
+    ServiceReport {
+        total_records: records.len() as u64,
+        matched,
+        requests_total,
+        stages: stages.into_values().collect(),
+        slowest: slow,
+    }
+}
+
+impl ServiceReport {
+    /// Canonical JSON form (the `--json` CLI output; the CI smoke
+    /// asserts a traced request decomposes into ≥ 3 stages).
+    pub fn to_json(&self) -> Json {
+        let stages = Json::Arr(
+            self.stages
+                .iter()
+                .map(|s| {
+                    Json::Obj(vec![
+                        ("stage".into(), Json::str(s.stage.name())),
+                        ("count".into(), Json::u64_lossless(s.count)),
+                        ("total_us".into(), Json::u64_lossless(s.total_us)),
+                        ("max_us".into(), Json::u64_lossless(s.max_us)),
+                    ])
+                })
+                .collect(),
+        );
+        let slowest = Json::Arr(
+            self.slowest
+                .iter()
+                .map(|r| {
+                    Json::Obj(vec![
+                        ("trace_id".into(), Json::u64_lossless(r.trace_id)),
+                        ("op".into(), Json::str(op::name(r.op))),
+                        ("start_us".into(), Json::u64_lossless(r.start_us)),
+                        ("stages".into(), Json::u64_lossless(r.stages)),
+                        ("total_us".into(), Json::u64_lossless(r.total_us)),
+                        ("queue_wait_us".into(), Json::u64_lossless(r.queue_wait_us)),
+                        ("execute_us".into(), Json::u64_lossless(r.execute_us)),
+                        ("code".into(), Json::u64_lossless(r.code as u64)),
+                    ])
+                })
+                .collect(),
+        );
+        Json::Obj(vec![
+            ("total_records".into(), Json::u64_lossless(self.total_records)),
+            ("matched".into(), Json::u64_lossless(self.matched)),
+            ("requests".into(), Json::u64_lossless(self.requests_total)),
+            ("stages".into(), stages),
+            ("slowest".into(), slowest),
+        ])
+    }
+
+    /// Human-readable report: stage attribution table + slowest-request
+    /// table.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "service trace: {} records, {} matched, {} requests\n\n",
+            self.total_records, self.matched, self.requests_total
+        );
+        let mut t = Table::new(&["stage", "count", "total_us", "max_us"]);
+        for s in &self.stages {
+            t.row(&[
+                s.stage.name().to_string(),
+                s.count.to_string(),
+                s.total_us.to_string(),
+                s.max_us.to_string(),
+            ]);
+        }
+        out.push_str(&t.render());
+        if !self.slowest.is_empty() {
+            out.push('\n');
+            let mut t = Table::new(&[
+                "trace_id", "op", "stages", "total_us", "queue_wait_us", "execute_us", "code",
+            ]);
+            for r in &self.slowest {
+                t.row(&[
+                    format!("{:#x}", r.trace_id),
+                    op::name(r.op).to_string(),
+                    r.stages.to_string(),
+                    r.total_us.to_string(),
+                    r.queue_wait_us.to_string(),
+                    r.execute_us.to_string(),
+                    r.code.to_string(),
+                ]);
+            }
+            out.push_str(&t.render());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(t_us: u64, stage: Stage, op_: u8, code: u16, id: u64, dur: u64) -> Record {
+        Record { t_us, stage, op: op_, code, backend: 0, trace_id: id, dur_us: dur }
+    }
+
+    #[test]
+    fn record_codec_roundtrips_and_rejects_bad_stages() {
+        let r = Record {
+            t_us: 0x0123_4567_89ab_cdef,
+            stage: Stage::QueueWait,
+            op: op::SUBMIT,
+            code: 429,
+            backend: 7,
+            trace_id: u64::MAX,
+            dur_us: 42,
+        };
+        let buf = r.encode();
+        assert_eq!(Record::decode(&buf), Some(r));
+        let mut bad = buf;
+        bad[8] = 0;
+        assert_eq!(Record::decode(&bad), None);
+        bad[8] = 200;
+        assert_eq!(Record::decode(&bad), None);
+        assert_eq!(Record::decode(&[0u8; RECORD_BYTES]), None);
+    }
+
+    #[test]
+    fn ring_is_bounded_shared_and_counts_drops() {
+        let t = ServiceTrace::new(true, 8);
+        for i in 0..100u64 {
+            t.emit(rec(i, Stage::Recv, op::STATUS, 0, i, 0));
+        }
+        assert_eq!(t.len(), 8);
+        assert_eq!(t.records_total(), 100);
+        assert_eq!(t.records_dropped(), 92);
+        let ids: Vec<u64> = t.snapshot().iter().map(|r| r.trace_id).collect();
+        assert_eq!(ids, (92..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn disabled_recorder_is_a_no_op() {
+        let t = ServiceTrace::disabled();
+        t.emit(rec(1, Stage::Recv, op::SUBMIT, 0, 1, 0));
+        t.event(Stage::Admit, op::SUBMIT, 0, 1);
+        t.span_since(Stage::Execute, op::SUBMIT, 0, 1, Instant::now());
+        assert!(t.is_empty());
+        assert_eq!(t.records_total(), 0);
+    }
+
+    #[test]
+    fn emission_is_safe_across_threads() {
+        let t = std::sync::Arc::new(ServiceTrace::new(true, 1024));
+        let handles: Vec<_> = (0..4u64)
+            .map(|who| {
+                let t = t.clone();
+                std::thread::spawn(move || {
+                    for i in 0..100u64 {
+                        t.emit(rec(i, Stage::Execute, op::SUBMIT, 0, who * 1000 + i, 5));
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(t.records_total(), 400);
+    }
+
+    #[test]
+    fn file_sink_roundtrips_past_ring_capacity_with_service_magic() {
+        let path =
+            std::env::temp_dir().join(format!("sptz_svc_{}.bin", std::process::id()));
+        let t = ServiceTrace::new(true, 4);
+        t.attach_sink(&path).unwrap();
+        let mut want = Vec::new();
+        for i in 0..32u64 {
+            let r = rec(i, Stage::Flush, op::BATCH, 0, i, i * 3);
+            want.push(r);
+            t.emit(r);
+        }
+        t.flush().unwrap();
+        let got = read_trace_file(&path).unwrap();
+        assert_eq!(got, want, "sink keeps what the ring dropped");
+        // a perf-magic file must be rejected by the service reader
+        std::fs::write(&path, super::super::perf::MAGIC).unwrap();
+        assert!(read_trace_file(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn query_attributes_stages_and_ranks_slowest_requests() {
+        let records = vec![
+            // request 1: 10 us wait, 100 us execute, total extent 5..130
+            rec(5, Stage::Recv, op::SUBMIT, 0, 1, 0),
+            rec(6, Stage::Admit, op::SUBMIT, 0, 1, 0),
+            rec(6, Stage::QueueWait, op::SUBMIT, 0, 1, 10),
+            rec(16, Stage::Execute, op::SUBMIT, 0, 1, 100),
+            rec(120, Stage::Encode, op::SUBMIT, 0, 1, 4),
+            rec(124, Stage::Flush, op::SUBMIT, 0, 1, 6),
+            // request 2: rejected at admission
+            rec(40, Stage::Recv, op::SUBMIT, 0, 2, 0),
+            rec(41, Stage::Reject, op::SUBMIT, 429, 2, 0),
+        ];
+        let report = service_query(&records, &ServiceFilter::default(), 10);
+        assert_eq!(report.matched, 8);
+        assert_eq!(report.requests_total, 2);
+        let wait = report.stages.iter().find(|s| s.stage == Stage::QueueWait).unwrap();
+        assert_eq!((wait.count, wait.total_us, wait.max_us), (1, 10, 10));
+        // slowest-first: request 1 spans 5..130 = 125 us
+        assert_eq!(report.slowest[0].trace_id, 1);
+        assert_eq!(report.slowest[0].total_us, 125);
+        assert_eq!(report.slowest[0].queue_wait_us, 10);
+        assert_eq!(report.slowest[0].execute_us, 100);
+        assert_eq!(report.slowest[0].stages, 6);
+        assert_eq!(report.slowest[1].code, 429);
+        // the sum-of-stages decomposition covers the request extent
+        let r = &report.slowest[0];
+        assert!(r.queue_wait_us + r.execute_us <= r.total_us);
+    }
+
+    #[test]
+    fn filters_select_by_trace_id_op_and_backend() {
+        let mut fwd = rec(1, Stage::RouterForward, op::SUBMIT, 0, 9, 0);
+        fwd.backend = 1;
+        let records = vec![
+            rec(0, Stage::RouterRecv, op::SUBMIT, 0, 9, 0),
+            fwd,
+            rec(2, Stage::Recv, op::STATUS, 0, 10, 0),
+        ];
+        let f = ServiceFilter { trace_id: Some(9), ..Default::default() };
+        assert_eq!(service_query(&records, &f, 10).matched, 2);
+        let f = ServiceFilter { op: Some(op::STATUS), ..Default::default() };
+        assert_eq!(service_query(&records, &f, 10).matched, 1);
+        let f = ServiceFilter { backend: Some(1), ..Default::default() };
+        let report = service_query(&records, &f, 10);
+        assert_eq!(report.matched, 1);
+        assert_eq!(report.stages[0].stage, Stage::RouterForward);
+    }
+
+    #[test]
+    fn report_json_and_render_are_stable() {
+        let records = vec![
+            rec(0, Stage::Recv, op::SUBMIT, 0, 3, 0),
+            rec(1, Stage::Execute, op::SUBMIT, 0, 3, 50),
+        ];
+        let report = service_query(&records, &ServiceFilter::default(), 5);
+        let j = report.to_json();
+        assert_eq!(j.get("requests").unwrap().as_u64(), Some(1));
+        let slow = j.get("slowest").unwrap().as_arr().unwrap();
+        assert_eq!(slow[0].get("stages").unwrap().as_u64(), Some(2));
+        assert_eq!(slow[0].get("op").unwrap().as_str(), Some("submit"));
+        let encoded = j.encode();
+        assert_eq!(Json::parse(&encoded).unwrap(), j);
+        let text = report.render();
+        assert!(text.contains("execute"));
+        assert!(text.contains("trace_id"));
+    }
+
+    #[test]
+    fn op_and_stage_names_roundtrip() {
+        for code in [op::SUBMIT, op::BATCH, op::STATUS, op::METRICS, op::SHUTDOWN] {
+            assert_eq!(op::from_name(op::name(code)), Some(code));
+        }
+        assert_eq!(op::from_name("bogus"), None);
+        for v in 1..=9u8 {
+            let s = Stage::from_u8(v).unwrap();
+            assert_eq!(s as u8, v);
+            assert!(!s.name().is_empty());
+        }
+    }
+}

@@ -60,6 +60,13 @@ fn prop_scheduling_knobs_never_change_the_key() {
         mutated.server.workers = g.int(0, 64);
         mutated.server.batch_report_limit = g.int(0, 1024);
         mutated.server.drain_ms = g.int(0, 60_000) as u64;
+        // observability knobs ride in [server] precisely so they stay
+        // out of the digest: service tracing must never split the cache
+        mutated.server.trace = g.bool();
+        mutated.server.trace_capacity = g.int(1, 1 << 20);
+        mutated.server.trace_out = format!("svc-{}.sptz", g.int(0, 999));
+        mutated.server.probe_ms = g.int(1, 60_000) as u64;
+        mutated.server.probe_threshold = g.int(1, 16);
         assert_eq!(
             job_key(&mutated, &job),
             key,

@@ -20,6 +20,7 @@ use spatzformer::coordinator::{Coordinator, Job, JobReport, ModePolicy};
 use spatzformer::fleet::scenario::{self, ScenarioKind};
 use spatzformer::kernels::KernelId;
 use spatzformer::server::{self, loadgen, proto, RunningServer};
+use spatzformer::trace::service as svc;
 use spatzformer::util::Json;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpStream};
@@ -551,6 +552,247 @@ fn batch_inline_reports_match_the_oracle_and_stay_bounded() {
     drop(client);
     daemon.shutdown();
     daemon.wait().unwrap();
+}
+
+/// Service tracing is write-only: a daemon with `server.trace` on
+/// serves byte-identical reports to an untraced daemon and to a direct
+/// coordinator run, and responses never echo the trace id.
+#[test]
+fn service_tracing_never_changes_served_bytes() {
+    let cfg = SimConfig::spatzformer();
+    let mut traced_cfg = cfg.clone();
+    traced_cfg.server.trace = true;
+    let plain = start(cfg.clone());
+    let traced = start(traced_cfg);
+    let mut pc = Client::connect(plain.addr());
+    let mut tc = Client::connect(traced.addr());
+    let jobs = [
+        Job::Kernel { kernel: KernelId::Fft, policy: ModePolicy::Auto },
+        Job::Mixed { kernel: KernelId::Faxpy, policy: ModePolicy::Split, coremark_iterations: 1 },
+    ];
+    let mut direct = Coordinator::new(cfg).unwrap();
+    for job in &jobs {
+        let a = pc.submit(job);
+        let b = tc.submit(job);
+        assert_ok(&a);
+        assert_ok(&b);
+        assert!(b.get("trace").is_none(), "responses must not echo the trace id: {b}");
+        assert_eq!(
+            a.encode(),
+            b.encode(),
+            "service tracing changed the served bytes ({})",
+            job.name()
+        );
+        let oracle = direct.submit(job).unwrap();
+        assert_eq!(
+            b.get("report").unwrap().encode(),
+            proto::report_to_json(&oracle).encode(),
+            "traced daemon diverged from the direct run ({})",
+            job.name()
+        );
+    }
+    drop(pc);
+    drop(tc);
+    plain.shutdown();
+    traced.shutdown();
+    plain.wait().unwrap();
+    traced.wait().unwrap();
+}
+
+fn temp_trace_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("spatzformer-svc-{}-{tag}.sptz", std::process::id()))
+}
+
+/// Saturate one worker with pipelined submits and check the span
+/// algebra: every request decomposes into recv → admit → queue-wait →
+/// execute → encode → flush with consistent timestamps, and the
+/// queue-wait stage actually measures waiting (some job waited while
+/// its predecessor held the only worker).
+#[test]
+fn service_trace_spans_decompose_queue_wait_under_saturation() {
+    let sink = temp_trace_path("queuewait");
+    let mut cfg = SimConfig::spatzformer();
+    cfg.server.workers = 1;
+    cfg.server.trace = true;
+    cfg.server.trace_out = sink.to_string_lossy().into_owned();
+    let daemon = start(cfg);
+    let mut client = Client::connect(daemon.addr());
+    let total = 6usize;
+    for i in 0..total {
+        client.send(&proto::encode_request_tagged(
+            &proto::Request::Submit {
+                job: Job::Kernel { kernel: KernelId::Faxpy, policy: ModePolicy::Split },
+                seed: None,
+            },
+            &Json::u64_lossless(i as u64),
+        ));
+    }
+    for _ in 0..total {
+        assert_ok(&client.read_response());
+    }
+    drop(client);
+    daemon.shutdown();
+    let snap = daemon.wait().unwrap();
+    assert!(snap.queue_wait.is_some(), "snapshot must surface queue-wait percentiles");
+    assert!(snap.service_trace_records > 0);
+
+    let records = svc::read_trace_file(&sink).expect("trace sink must parse back");
+    std::fs::remove_file(&sink).ok();
+    // fold per-trace stage timelines: (t_us, dur_us) per stage
+    use std::collections::BTreeMap;
+    let mut by_trace: BTreeMap<u64, BTreeMap<u8, (u64, u64)>> = BTreeMap::new();
+    for r in &records {
+        by_trace.entry(r.trace_id).or_default().insert(r.stage as u8, (r.t_us, r.dur_us));
+    }
+    let full: Vec<_> = by_trace
+        .values()
+        .filter(|stages| stages.contains_key(&(svc::Stage::Execute as u8)))
+        .collect();
+    assert_eq!(full.len(), total, "every submit must leave a full lifecycle");
+    let mut waited = 0usize;
+    for stages in &full {
+        let recv = stages[&(svc::Stage::Recv as u8)];
+        let admit = stages[&(svc::Stage::Admit as u8)];
+        let qw = stages[&(svc::Stage::QueueWait as u8)];
+        let exec = stages[&(svc::Stage::Execute as u8)];
+        let enc = stages[&(svc::Stage::Encode as u8)];
+        let flush = stages[&(svc::Stage::Flush as u8)];
+        assert!(recv.0 <= qw.0, "recv must precede enqueue");
+        assert!(qw.0 <= admit.0, "enqueue happens inside admission");
+        assert!(qw.0 + qw.1 <= exec.0, "queue wait ends before execution starts");
+        assert!(exec.0 <= enc.0, "execution precedes response encoding");
+        assert!(enc.0 <= flush.0, "encoding precedes the socket flush");
+        if qw.1 > 0 {
+            waited += 1;
+        }
+    }
+    assert!(
+        waited >= 1,
+        "with one worker and {total} pipelined submits, someone must have waited"
+    );
+    // the offline query decomposes the same data: each slowest entry
+    // carries the full stage count (the CI smoke asserts >= 3)
+    let report = svc::service_query(&records, &svc::ServiceFilter::default(), 3);
+    assert_eq!(report.requests_total, total as u64);
+    assert!(report.slowest.iter().all(|r| r.stages >= 3), "{:?}", report.slowest);
+    let sub = svc::ServiceFilter { op: Some(svc::op::SUBMIT), ..Default::default() };
+    assert_eq!(svc::service_query(&records, &sub, 3).requests_total, total as u64);
+}
+
+/// The router's `metrics` op fans out to every healthy backend and
+/// returns one aggregated snapshot whose counters are exactly the sum
+/// of the per-backend sub-documents it embeds.
+#[test]
+fn router_metrics_aggregates_across_backends() {
+    let cfg = SimConfig::spatzformer();
+    let d1 = start(cfg.clone());
+    let d2 = start(cfg.clone());
+    let router = server::router::start(
+        cfg,
+        server::router::RouterOptions {
+            addr: "127.0.0.1:0".to_string(),
+            backends: vec![d1.addr().to_string(), d2.addr().to_string()],
+        },
+    )
+    .unwrap();
+    let mut client = Client::connect(router.addr());
+    let mut sent = 0u64;
+    for kernel in KernelId::all() {
+        let resp = client.submit(&Job::Kernel { kernel, policy: ModePolicy::Split });
+        assert_ok(&resp);
+        sent += 1;
+    }
+    let m = client.roundtrip(&proto::encode_request(&proto::Request::Metrics));
+    assert_ok(&m);
+    let backends = match m.get("backends") {
+        Some(Json::Obj(fields)) => fields,
+        other => panic!("aggregated metrics must embed per-backend docs, got {other:?}"),
+    };
+    assert_eq!(backends.len(), 2, "both backends must answer the fan-out");
+    for (addr, _) in backends {
+        assert!(
+            [d1.addr().to_string(), d2.addr().to_string()].contains(addr),
+            "sub-docs are keyed by backend address, got {addr}"
+        );
+    }
+    for key in ["requests", "submits", "jobs_completed", "rejected", "errors"] {
+        let total = m.get(key).and_then(Json::as_u64).unwrap_or_else(|| panic!("no {key}: {m}"));
+        let parts: u64 = backends
+            .iter()
+            .map(|(_, d)| d.get(key).and_then(Json::as_u64).unwrap())
+            .sum();
+        assert_eq!(total, parts, "aggregated {key} must equal the per-backend sum");
+    }
+    assert_eq!(m.get("submits").and_then(Json::as_u64), Some(sent));
+    let completed: u64 = backends
+        .iter()
+        .map(|(_, d)| d.get("jobs_completed").and_then(Json::as_u64).unwrap())
+        .sum();
+    assert_eq!(completed, sent, "every routed submit completed on some backend");
+
+    let ack = client.roundtrip(&proto::encode_request(&proto::Request::Shutdown));
+    assert_ok(&ack);
+    drop(client);
+    router.wait().unwrap();
+    d1.wait().unwrap();
+    d2.wait().unwrap();
+}
+
+/// Health probes: a backend that dies is marked down after the failure
+/// threshold and the shard map routes around it; `status` surfaces the
+/// transition.
+#[test]
+fn router_probes_detect_dead_backend_and_reroute() {
+    let mut cfg = SimConfig::spatzformer();
+    cfg.server.probe_ms = 25;
+    cfg.server.probe_threshold = 2;
+    let d1 = start(cfg.clone());
+    let d2 = start(cfg.clone());
+    let router = server::router::start(
+        cfg,
+        server::router::RouterOptions {
+            addr: "127.0.0.1:0".to_string(),
+            backends: vec![d1.addr().to_string(), d2.addr().to_string()],
+        },
+    )
+    .unwrap();
+    let dead_addr = d1.addr().to_string();
+    // kill backend 1 out from under the router
+    let mut direct = Client::connect(d1.addr());
+    assert_ok(&direct.roundtrip(&proto::encode_request(&proto::Request::Shutdown)));
+    drop(direct);
+    d1.wait().unwrap();
+
+    let mut client = Client::connect(router.addr());
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    loop {
+        let status = client.roundtrip(&proto::encode_request(&proto::Request::Status));
+        assert_ok(&status);
+        assert_eq!(status.get("router").and_then(Json::as_bool), Some(true));
+        let entry = status.get("backends").and_then(|b| b.get(&dead_addr)).unwrap();
+        if entry.get("healthy").and_then(Json::as_bool) == Some(false) {
+            assert!(
+                entry.get("down_transitions").and_then(Json::as_u64).unwrap() >= 1,
+                "{status}"
+            );
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "router never marked the dead backend down: {status}"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+    // every submit now lands on the survivor, whatever its digest prefers
+    for kernel in [KernelId::Faxpy, KernelId::Fdotp, KernelId::Fft] {
+        let resp = client.submit(&Job::Kernel { kernel, policy: ModePolicy::Split });
+        assert_ok(&resp);
+    }
+    let ack = client.roundtrip(&proto::encode_request(&proto::Request::Shutdown));
+    assert_ok(&ack);
+    drop(client);
+    router.wait().unwrap();
+    d2.wait().unwrap();
 }
 
 /// `loadgen --shutdown` (the CI smoke path) works end to end.

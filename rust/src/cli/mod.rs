@@ -9,6 +9,7 @@
 //! spatzformer route --addr 127.0.0.1:9800 --backend 127.0.0.1:9738 --backend 127.0.0.1:9739
 //! spatzformer loadgen --addr 127.0.0.1:9738 --clients 4 --requests 32 [--rate R] [--shutdown]
 //! spatzformer bench fig2-perf|fig2-energy|fig2-mixed|fig2-fleet|area|fmax|all
+//! spatzformer bench scaling [--smoke] [--json scaling.json]
 //! spatzformer ppa
 //! spatzformer verify [--artifacts DIR]
 //! spatzformer disasm --kernel fdotp --mode split
@@ -25,7 +26,9 @@ use crate::server::{self, loadgen};
 use crate::trace::{perf, service as svc};
 
 const USAGE: &str = "\
-spatzformer — reconfigurable dual-core RVV cluster simulator (paper reproduction)
+spatzformer — reconfigurable RVV cluster simulator with a parameterized
+N-core × M-cluster topology (paper reproduction; default shape is the
+paper's dual-core single-cluster)
 
 USAGE:
   spatzformer <COMMAND> [OPTIONS]
@@ -49,6 +52,7 @@ COMMANDS:
            [--addr HOST:PORT] [--clients C] [--requests R] [--scenario S]
            [--rate R] [--label L] [--smoke] [--shutdown]
   bench    regenerate a paper artifact     <fig2-perf|fig2-energy|fig2-mixed|fig2-fleet|area|fmax|all>
+           or the topology scaling study   scaling [--smoke] [--json F]
   ppa      print the area/frequency model
   verify   cross-check all kernels vs the XLA artifacts [--artifacts DIR]
   disasm   print a kernel's vector program --kernel <name> --mode <split|merge>
@@ -76,6 +80,15 @@ TRACE OPTIONS (trace query):
                                   attribution + slowest requests
   --trace-id <T> / --op <name> / --backend <B> / --slowest <N>
                                   service-trace filters (default slowest 10)
+
+SCALING OPTIONS (bench scaling):
+  --smoke                         reduced grid (2 kernels, clusters {1,2}); still
+                                  sweeps cores {1,2,4,8} so the CI guardrails hold
+  --json <path>                   write the sweep as JSON keyed
+                                  \"sim_scaling.<kernel>.c<cores>x<clusters>\" —
+                                  CI's bench-report job merges it into BENCH_REPORT.json
+  --workers <N>                   host worker threads for the sweep (0 = auto);
+                                  decoupled from the simulated cores/clusters grid
 
 FLEET OPTIONS:
   --scenario <name>               generator: kernel-sweep, mixed-sweep, storm (default storm)
@@ -258,6 +271,9 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     apply_trace_out(&mut cfg, args);
     let kernel = parse_kernel(args)?;
     let policy = parse_policy(args)?;
+    // physical FPU lanes are cores × lanes regardless of mode (a merged
+    // unit is two units wide), so utilization follows the topology knob
+    let (units, lanes) = (cfg.cluster.cores, cfg.cluster.lanes);
     let mut c = Coordinator::new(cfg)?;
     attach_runtime_if_available(&mut c, args);
     attach_trace_out(&mut c, args)?;
@@ -268,7 +284,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     println!("flop/cyc  : {:.3}", r.flop_per_cycle());
     println!("energy    : {:.1} nJ", r.metrics.energy_pj / 1000.0);
     println!("GFLOPS/W  : {:.2}", r.metrics.gflops_per_watt());
-    println!("fpu util  : {:.1}%", r.metrics.fpu_utilization(2, 4) * 100.0);
+    println!("fpu util  : {:.1}%", r.metrics.fpu_utilization(units, lanes) * 100.0);
     if let Some(err) = r.verified_max_rel_err {
         println!("verified  : OK (max rel err {err:.2e} vs XLA artifact)");
     }
@@ -642,6 +658,21 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             let rows = experiments::fig2_rows_fleet(seed, 0);
             println!("{}", experiments::render_fig2_perf(&rows));
             println!("{}", experiments::render_fig2_energy(&rows));
+        }
+        "scaling" => {
+            let smoke = args.get("smoke").is_some();
+            let workers: usize = match args.get("workers") {
+                None => 0,
+                Some(w) => w.parse().map_err(|_| anyhow::anyhow!("bad --workers: {w}"))?,
+            };
+            let rows = experiments::scaling_rows(seed, smoke, workers);
+            println!("{}", experiments::render_scaling(&rows));
+            if let Some(path) = args.get("json") {
+                let doc = experiments::scaling_json(&rows, smoke);
+                std::fs::write(path, doc.encode() + "\n")
+                    .map_err(|e| anyhow::anyhow!("cannot write --json {path}: {e}"))?;
+                println!("wrote tracked numbers to {path}");
+            }
         }
         "area" => println!("{}", experiments::render_area()),
         "fmax" => println!("{}", experiments::render_fmax()),

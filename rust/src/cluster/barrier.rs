@@ -7,23 +7,38 @@
 
 use crate::snitch::BarrierPort;
 
+/// Bitmask with one bit set per core of an N-core cluster.
+pub fn all_cores_mask(cores: usize) -> u64 {
+    assert!(cores >= 1 && cores <= 64, "core count {cores} exceeds the barrier mask");
+    if cores == 64 {
+        u64::MAX
+    } else {
+        (1u64 << cores) - 1
+    }
+}
+
 /// The barrier unit.
 pub struct BarrierUnit {
     latency: u64,
-    participants: u8,
-    arrived: u8,
+    /// All-cores mask for the owning cluster's topology; the default
+    /// participant set, restored by [`BarrierUnit::reset`].
+    all_mask: u64,
+    participants: u64,
+    arrived: u64,
     releasing: bool,
     release_at: u64,
-    consumed: u8,
+    consumed: u64,
     /// Completed barrier episodes.
     pub episodes: u64,
 }
 
 impl BarrierUnit {
-    pub fn new(latency: u64) -> Self {
+    pub fn new(latency: u64, cores: usize) -> Self {
+        let all_mask = all_cores_mask(cores);
         Self {
             latency,
-            participants: 0b11, // both cores by default
+            all_mask,
+            participants: all_mask, // every core by default
             arrived: 0,
             releasing: false,
             release_at: 0,
@@ -34,8 +49,13 @@ impl BarrierUnit {
 
     /// Set which cores participate (bitmask). A barrier instruction from
     /// a non-participating core is a programming error.
-    pub fn set_participants(&mut self, mask: u8) {
+    pub fn set_participants(&mut self, mask: u64) {
         assert!(mask != 0, "barrier needs at least one participant");
+        assert!(
+            mask & !self.all_mask == 0,
+            "participant mask {mask:#b} names cores beyond the cluster ({:#b})",
+            self.all_mask
+        );
         assert!(
             self.arrived == 0 && !self.releasing,
             "cannot change participants mid-episode"
@@ -43,15 +63,15 @@ impl BarrierUnit {
         self.participants = mask;
     }
 
-    pub fn participants(&self) -> u8 {
+    pub fn participants(&self) -> u64 {
         self.participants
     }
 
-    /// Restore the pristine post-construction state (both cores
+    /// Restore the pristine post-construction state (every core
     /// participating, no episode in flight, episode counter zeroed).
     /// [`crate::cluster::Cluster::reset`] calls this between jobs.
     pub fn reset(&mut self) {
-        self.participants = 0b11;
+        self.participants = self.all_mask;
         self.arrived = 0;
         self.releasing = false;
         self.release_at = 0;
@@ -70,7 +90,7 @@ impl BarrierUnit {
 
 impl BarrierPort for BarrierUnit {
     fn arrive(&mut self, core: usize, now: u64) {
-        let bit = 1u8 << core;
+        let bit = 1u64 << core;
         assert!(
             self.participants & bit != 0,
             "core {core} is not a barrier participant (mask {:#b})",
@@ -85,7 +105,7 @@ impl BarrierPort for BarrierUnit {
     }
 
     fn poll(&mut self, core: usize, now: u64) -> bool {
-        let bit = 1u8 << core;
+        let bit = 1u64 << core;
         if self.releasing && now >= self.release_at && self.arrived & bit != 0 {
             self.consumed |= bit;
             if self.consumed == self.participants {
@@ -108,7 +128,7 @@ mod tests {
 
     #[test]
     fn releases_after_latency_when_all_arrive() {
-        let mut b = BarrierUnit::new(8);
+        let mut b = BarrierUnit::new(8, 2);
         b.arrive(0, 10);
         assert!(!b.poll(0, 11));
         b.arrive(1, 20);
@@ -120,7 +140,7 @@ mod tests {
 
     #[test]
     fn reusable_across_episodes() {
-        let mut b = BarrierUnit::new(0);
+        let mut b = BarrierUnit::new(0, 2);
         for ep in 0..5u64 {
             let t = ep * 10;
             b.arrive(0, t);
@@ -133,7 +153,7 @@ mod tests {
 
     #[test]
     fn single_participant_barrier() {
-        let mut b = BarrierUnit::new(2);
+        let mut b = BarrierUnit::new(2, 2);
         b.set_participants(0b01);
         b.arrive(0, 0);
         assert!(!b.poll(0, 1));
@@ -142,7 +162,7 @@ mod tests {
 
     #[test]
     fn horizon_is_the_release_cycle() {
-        let mut b = BarrierUnit::new(8);
+        let mut b = BarrierUnit::new(8, 2);
         assert_eq!(b.next_event(), None);
         b.arrive(0, 10);
         assert_eq!(b.next_event(), None); // still waiting for core 1
@@ -156,7 +176,7 @@ mod tests {
     #[test]
     #[should_panic(expected = "arrived twice")]
     fn double_arrival_is_an_error() {
-        let mut b = BarrierUnit::new(1);
+        let mut b = BarrierUnit::new(1, 2);
         b.arrive(0, 0);
         b.arrive(0, 1);
     }
@@ -164,8 +184,47 @@ mod tests {
     #[test]
     #[should_panic(expected = "not a barrier participant")]
     fn non_participant_arrival_is_an_error() {
-        let mut b = BarrierUnit::new(1);
+        let mut b = BarrierUnit::new(1, 2);
         b.set_participants(0b01);
         b.arrive(1, 0);
+    }
+
+    #[test]
+    fn n_core_barrier_releases_on_last_arrival() {
+        let mut b = BarrierUnit::new(4, 8);
+        assert_eq!(b.participants(), 0xFF);
+        for c in 0..7 {
+            b.arrive(c, c as u64);
+            assert_eq!(b.next_event(), None);
+        }
+        b.arrive(7, 100);
+        assert_eq!(b.next_event(), Some(104));
+        for c in 0..8 {
+            assert!(b.poll(c, 104));
+        }
+        assert_eq!(b.episodes, 1);
+    }
+
+    #[test]
+    fn all_cores_mask_covers_the_topology_range() {
+        assert_eq!(all_cores_mask(1), 0b1);
+        assert_eq!(all_cores_mask(2), 0b11);
+        assert_eq!(all_cores_mask(8), 0xFF);
+        assert_eq!(all_cores_mask(64), u64::MAX);
+    }
+
+    #[test]
+    #[should_panic(expected = "beyond the cluster")]
+    fn participants_outside_topology_rejected() {
+        let mut b = BarrierUnit::new(1, 2);
+        b.set_participants(0b100);
+    }
+
+    #[test]
+    fn reset_restores_topology_default_mask() {
+        let mut b = BarrierUnit::new(1, 4);
+        b.set_participants(0b0101);
+        b.reset();
+        assert_eq!(b.participants(), 0b1111);
     }
 }

@@ -1,11 +1,15 @@
-//! The dual-core cluster: wiring + cycle loop.
+//! The N-core cluster: wiring + cycle loop.
 //!
-//! Owns the two Snitch cores, the two Spatz units, the reconfiguration
-//! stage, the TCDM, the shared icache, the barrier unit and the DMA
-//! engine, and advances everything one cycle at a time. The step order
-//! within a cycle is the TCDM arbitration priority: scalar cores first
-//! (their accesses are rare and latency-critical), then vector LSUs,
-//! with the intra-class order rotating every cycle for fairness.
+//! Owns `cluster.cores` Snitch cores with one Spatz unit each, the
+//! reconfiguration stage, the TCDM, the shared icache, the barrier unit
+//! and the DMA engine, and advances everything one cycle at a time. The
+//! step order within a cycle is the TCDM arbitration priority: scalar
+//! cores first (their accesses are rare and latency-critical), then
+//! vector LSUs, with the intra-class order rotating every cycle for
+//! fairness (start index `now mod N`; at N = 2 this is the historical
+//! even/odd flip). The paper's machine is the dual-core point of this
+//! family; see DESIGN.md §Topology for how merge mode pairs adjacent
+//! cores at wider shapes.
 
 pub mod barrier;
 
@@ -27,8 +31,8 @@ pub struct Cluster {
     pub tcdm: Tcdm,
     pub icache: ICache,
     pub dma: Dma,
-    cores: [Snitch; 2],
-    units: [SpatzUnit; 2],
+    cores: Vec<Snitch>,
+    units: Vec<SpatzUnit>,
     pub reconfig: ReconfigStage,
     barrier: BarrierUnit,
     pub counters: Counters,
@@ -40,8 +44,8 @@ pub struct Cluster {
     /// DMA staging cycles accumulated by workload setup.
     pub dma_cycles: u64,
     /// Cycle at which each core halted (mixed workloads measure the
-    /// kernel core's completion independently of the co-runner).
-    halt_cycle: [Option<u64>; 2],
+    /// kernel cores' completion independently of the co-runner).
+    halt_cycle: Vec<Option<u64>>,
     /// Cycles actually stepped (vs fast-forwarded). Engine-strategy
     /// telemetry: surfaced through [`crate::metrics::Telemetry`], which
     /// is deliberately transparent to [`RunMetrics`] equality so
@@ -55,24 +59,30 @@ pub struct Cluster {
 impl Cluster {
     pub fn new(cfg: SimConfig) -> anyhow::Result<Self> {
         cfg.validate()?;
+        let n = cfg.cluster.cores;
         Ok(Self {
             tcdm: Tcdm::new(&cfg.cluster),
             icache: ICache::new(&cfg.cluster),
             dma: Dma::default(),
-            cores: [Snitch::new(0, &cfg.cluster), Snitch::new(1, &cfg.cluster)],
-            units: [SpatzUnit::new(0, &cfg.cluster), SpatzUnit::new(1, &cfg.cluster)],
+            cores: (0..n).map(|i| Snitch::new(i, &cfg.cluster)).collect(),
+            units: (0..n).map(|i| SpatzUnit::new(i, &cfg.cluster)).collect(),
             reconfig: ReconfigStage::new(&cfg.cluster),
-            barrier: BarrierUnit::new(cfg.cluster.barrier_latency),
-            counters: Counters::default(),
+            barrier: BarrierUnit::new(cfg.cluster.barrier_latency, n),
+            counters: Counters::for_cores(n),
             now: 0,
             next_stream: 0,
             retire_buf: Vec::with_capacity(8),
             trace: PerfTrace::new(cfg.trace, cfg.trace_capacity),
             cfg,
             dma_cycles: 0,
-            halt_cycle: [None; 2],
+            halt_cycle: vec![None; n],
             steps_executed: 0,
         })
+    }
+
+    /// Number of cores (= vector units) in this cluster.
+    pub fn cores(&self) -> usize {
+        self.cores.len()
     }
 
     pub fn now(&self) -> u64 {
@@ -166,18 +176,25 @@ impl Cluster {
         }
     }
 
-    /// Load programs onto the cores. Validates them against the
+    /// Load one program per core. Validates them against the
     /// architecture (the baseline cluster rejects `setmode`) and the
-    /// current mode (merge mode forbids vector work on core 1). The
+    /// current mode (merge mode forbids vector work on non-leader
+    /// cores). The program count must equal `cluster.cores`. The
     /// barrier participant set is every core with a non-trivial program
-    /// containing a barrier. Accepts owned [`Program`]s or `Arc`-shared
-    /// ones (compile-stage artifacts are loaded without copying).
-    pub fn load_programs<P: Into<Arc<Program>>>(
-        &mut self,
-        programs: [P; 2],
-    ) -> anyhow::Result<()> {
-        let [p0, p1] = programs;
-        let programs: [Arc<Program>; 2] = [p0.into(), p1.into()];
+    /// containing a barrier. Accepts any iterator of owned [`Program`]s
+    /// or `Arc`-shared ones (compile-stage artifacts are loaded without
+    /// copying) — arrays, `Vec`s and slices of clones all work:
+    ///
+    /// ```ignore
+    /// cl.load_programs([p0, p1])?;            // dual-core array
+    /// cl.load_programs(per_core_programs)?;   // Vec<Arc<Program>>
+    /// ```
+    pub fn load_programs<I>(&mut self, programs: I) -> anyhow::Result<()>
+    where
+        I: IntoIterator,
+        I::Item: Into<Arc<Program>>,
+    {
+        let programs: Vec<Arc<Program>> = programs.into_iter().map(Into::into).collect();
         let barrier_mask = validate_programs(
             &self.cfg.cluster,
             self.reconfig.mode() == Mode::Merge,
@@ -196,21 +213,22 @@ impl Cluster {
     /// Crate-private: the public surface always validates.
     pub(crate) fn load_programs_prevalidated(
         &mut self,
-        programs: [Arc<Program>; 2],
-        barrier_mask: u8,
+        programs: Vec<Arc<Program>>,
+        barrier_mask: u64,
     ) {
+        debug_assert_eq!(programs.len(), self.cores.len());
         if barrier_mask != 0 {
             self.barrier.set_participants(barrier_mask);
         }
-        let [p0, p1] = programs;
         let s0 = self.next_stream;
-        self.cores[0].load(p0, s0);
-        self.cores[1].load(p1, s0 + 1);
-        self.next_stream += 2;
-        self.halt_cycle = [None; 2];
+        self.next_stream += self.cores.len() as u32;
+        for (i, p) in programs.into_iter().enumerate() {
+            self.cores[i].load(p, s0 + i as u32);
+        }
+        self.halt_cycle.fill(None);
     }
 
-    /// True when both cores halted and the vector pipeline is empty.
+    /// True when all cores halted and the vector pipeline is empty.
     pub fn finished(&self) -> bool {
         self.cores.iter().all(|c| c.halted())
             && self.units.iter().all(|u| u.is_idle())
@@ -221,12 +239,11 @@ impl Cluster {
     pub fn step(&mut self) {
         self.steps_executed += 1;
         self.tcdm.begin_cycle();
-        let flip = (self.now & 1) == 1;
+        let n = self.cores.len();
         let pre_tcdm = if self.trace.is_enabled() { Some(self.tcdm.stats.clone()) } else { None };
 
         // scalar cores (rotating priority)
-        let order = if flip { [1usize, 0] } else { [0usize, 1] };
-        for &i in &order {
+        for i in rotation(self.now, n) {
             self.cores[i].step_traced(
                 self.now,
                 &mut self.icache,
@@ -242,7 +259,7 @@ impl Cluster {
         // vector units (rotating priority; skip fully-idle units — a
         // measured 10-20% of the cycle loop on single-unit phases)
         self.retire_buf.clear();
-        for &i in &order {
+        for i in rotation(self.now, n) {
             if self.units[i].is_idle() {
                 self.units[i].busy_this_cycle = false;
             } else {
@@ -278,7 +295,7 @@ impl Cluster {
         }
 
         // busy accounting for the leakage model + halt timestamps
-        for i in 0..2 {
+        for i in 0..n {
             if self.cores[i].busy() {
                 self.counters.cycles_core_busy[i] += 1;
             }
@@ -322,21 +339,21 @@ impl Cluster {
         core_horizon: impl Fn(&Snitch) -> Option<u64>,
         unit_horizon: impl Fn(&SpatzUnit) -> Option<u64>,
     ) -> Option<u64> {
-        [
-            core_horizon(&self.cores[0]),
-            core_horizon(&self.cores[1]),
-            unit_horizon(&self.units[0]),
-            unit_horizon(&self.units[1]),
-            self.barrier.next_event(),
-            // purely reactive today (always None), but consulted so that a
-            // mem component growing timed state cannot be silently skipped
-            self.tcdm.next_event(),
-            self.icache.next_event(),
-            self.dma.next_event(),
-        ]
-        .into_iter()
-        .flatten()
-        .min()
+        self.cores
+            .iter()
+            .map(core_horizon)
+            .chain(self.units.iter().map(unit_horizon))
+            .chain([
+                self.barrier.next_event(),
+                // purely reactive today (always None), but consulted so that
+                // a mem component growing timed state cannot be silently
+                // skipped
+                self.tcdm.next_event(),
+                self.icache.next_event(),
+                self.dma.next_event(),
+            ])
+            .flatten()
+            .min()
     }
 
     /// Earliest cycle `>= now` at which stepping the cluster could do
@@ -352,8 +369,8 @@ impl Cluster {
         )
     }
 
-    /// Horizon for a window in which the TCDM requesters — one or both
-    /// LSUs, plus any scalar `WaitMem` retries — stream while every
+    /// Horizon for a window in which the TCDM requesters — any number
+    /// of live LSUs, plus any scalar `WaitMem` retries — stream while every
     /// other component is quiescent: the minimum over the cores' non-
     /// memory events, the units' non-LSU events (retires, non-memory
     /// head issues) and the reactive components. The LSUs' per-cycle
@@ -374,8 +391,10 @@ impl Cluster {
     }
 
     /// Closed-form fast-forward across active TCDM arbitration: vector
-    /// LSU streams (solo, bank-disjoint, or genuinely coupled) plus any
-    /// scalar `WaitMem` retries.
+    /// LSU streams (solo, bank-disjoint at any core count, or a
+    /// genuinely coupled dual-core pair) plus any scalar `WaitMem`
+    /// retries. Three or more live LSUs with overlapping bank sets have
+    /// no closed-form oracle and replay per cycle (exact, just slower).
     ///
     /// Preconditions (checked by the caller): fast engine, no core in
     /// `Ready`, and at least one TCDM requester in flight (an active
@@ -417,9 +436,10 @@ impl Cluster {
         // ---- plan: decide cycle `now`'s scalar arbitration without
         // mutating anything (every bail-out below must leave the
         // cluster untouched) ----
-        let order = if (self.now & 1) == 1 { [1usize, 0] } else { [0usize, 1] };
+        let n = self.cores.len();
+        let order: Vec<usize> = rotation(self.now, n).collect();
         let mut reserved: Vec<bool> = Vec::new();
-        let mut prestep = [false; 2];
+        let mut prestep = vec![false; n];
         let mut scalar_horizon = u64::MAX;
         for &i in &order {
             if let CoreState::WaitMem { addr, is_store } = self.cores[i].state() {
@@ -429,7 +449,7 @@ impl Cluster {
                 }
                 let bank = self.tcdm.bank_of(addr);
                 let h = if reserved[bank] {
-                    // loses to the higher-priority core: retries at now+1
+                    // loses to a higher-priority core: retries at now+1
                     self.now + 1
                 } else {
                     reserved[bank] = true;
@@ -438,21 +458,37 @@ impl Cluster {
                 scalar_horizon = scalar_horizon.min(h);
             }
         }
-        let any_lsu = self.units.iter().any(|u| u.lsu_active());
-        let coupled = if self.units[0].lsu_active() && self.units[1].lsu_active() {
+        let active: Vec<usize> = (0..n).filter(|&i| self.units[i].lsu_active()).collect();
+        let any_lsu = !active.is_empty();
+        let mut coupled = false;
+        if active.len() >= 2 {
             // per-op cached bank masks: O(1) per window after the first
             // fold, so repeated nearby events do not pay an O(stream)
             // rescan
-            let m0 = self.units[0].lsu_bank_mask(&self.tcdm);
-            let m1 = self.units[1].lsu_bank_mask(&self.tcdm);
-            match (m0, m1) {
-                (Some(a), Some(b)) => a & b != 0,
-                // mask overflow (>128 banks): conservatively replay
-                _ => return false,
+            let mut masks = Vec::with_capacity(active.len());
+            for &i in &active {
+                match self.units[i].lsu_bank_mask(&self.tcdm) {
+                    Some(m) => masks.push(m),
+                    // mask overflow (>128 banks): conservatively replay
+                    None => return false,
+                }
             }
-        } else {
-            false
-        };
+            let overlap = (0..masks.len())
+                .any(|a| (a + 1..masks.len()).any(|b| masks[a] & masks[b] != 0));
+            if overlap {
+                if n == 2 {
+                    coupled = true;
+                } else {
+                    // the coupled oracle co-simulates exactly two
+                    // requesters under the two-core rotation; wider
+                    // clusters with overlapping live streams replay per
+                    // cycle (exact, just slower)
+                    return false;
+                }
+            }
+            // all-disjoint live streams never contend with each other,
+            // so the per-unit oracles below stay exact at any width
+        }
         let horizon = self.mem_window_horizon().unwrap_or(cap).min(cap).min(scalar_horizon);
         if horizon <= self.now {
             return false;
@@ -461,7 +497,7 @@ impl Cluster {
 
         // ---- schedule + verify (still no mutation) ----
         let mut coupled_sched: Option<CoupledSchedule> = None;
-        let mut scheds: [Option<ConflictSchedule>; 2] = [None, None];
+        let mut scheds: Vec<Option<ConflictSchedule>> = (0..n).map(|_| None).collect();
         let mut span = budget;
         if coupled {
             let s = self.tcdm.coupled_schedule(
@@ -477,22 +513,20 @@ impl Cluster {
             span = s.cycles;
             coupled_sched = Some(s);
         } else {
-            for i in 0..2 {
-                if self.units[i].lsu_active() {
-                    let s = self.tcdm.conflict_schedule_reserved(
-                        self.units[i].lsu_pending().unwrap(),
-                        self.units[i].lanes(),
-                        span,
-                        &reserved,
-                    );
-                    span = span.min(s.cycles);
-                    scheds[i] = Some(s);
-                }
+            for &i in &active {
+                let s = self.tcdm.conflict_schedule_reserved(
+                    self.units[i].lsu_pending().unwrap(),
+                    self.units[i].lanes(),
+                    span,
+                    &reserved,
+                );
+                span = span.min(s.cycles);
+                scheds[i] = Some(s);
             }
             if span == 0 {
                 return false;
             }
-            for i in 0..2 {
+            for i in 0..n {
                 if let Some(s) = &mut scheds[i] {
                     if s.cycles > span {
                         // a later stream's earlier stop truncates this
@@ -518,7 +552,7 @@ impl Cluster {
         }
 
         // ---- commit ----
-        self.commit_prestep(order, prestep);
+        self.commit_prestep(&order, &prestep);
         if let Some(s) = coupled_sched {
             self.tcdm.apply_coupled(&s);
             let [r0, r1] = s.remaining;
@@ -527,7 +561,7 @@ impl Cluster {
             self.units[0].lsu_apply_schedule(r0);
             self.units[1].lsu_apply_schedule(r1);
         } else {
-            for i in 0..2 {
+            for i in 0..n {
                 if let Some(s) = scheds[i].take() {
                     self.tcdm.apply_schedule(&s);
                     self.emit_tcdm_span(i as u8, s.grants, s.conflicts, s.cycles);
@@ -553,7 +587,7 @@ impl Cluster {
                 d: 0,
             });
         }
-        self.fast_forward_mixed(self.now + span, prestep);
+        self.fast_forward_mixed(self.now + span, &prestep);
         true
     }
 
@@ -566,13 +600,13 @@ impl Cluster {
     /// accounting, so together they replay the full cycle. Mirrors
     /// `step`'s conflict tracing: a retry that loses its bank gets the
     /// per-cycle `TcdmCycle` record the naive loop would have emitted.
-    fn commit_prestep(&mut self, order: [usize; 2], prestep: [bool; 2]) {
+    fn commit_prestep(&mut self, order: &[usize], prestep: &[bool]) {
         if !prestep.iter().any(|&p| p) {
             return;
         }
         self.tcdm.begin_cycle();
         let pre_tcdm = if self.trace.is_enabled() { Some(self.tcdm.stats.clone()) } else { None };
-        for &i in &order {
+        for &i in order {
             if prestep[i] {
                 self.cores[i].step_traced(
                     self.now,
@@ -632,7 +666,7 @@ impl Cluster {
     /// (for memory windows: [`Self::mem_window_horizon`], with the
     /// arbitration window bulk-applied first).
     fn fast_forward(&mut self, to: u64) {
-        self.fast_forward_mixed(to, [false, false]);
+        self.fast_forward_mixed(to, &[]);
     }
 
     /// [`Self::fast_forward`] for windows whose first cycle was partly
@@ -643,12 +677,12 @@ impl Cluster {
     /// After a width-1 window no skip at all — the post-grant state may
     /// be `Ready`, which [`Snitch::skip`] rightly rejects, and there is
     /// nothing left to skip.
-    fn fast_forward_mixed(&mut self, to: u64, prestepped: [bool; 2]) {
+    fn fast_forward_mixed(&mut self, to: u64, prestepped: &[bool]) {
         debug_assert!(to > self.now, "fast_forward must move time forward");
         let now = self.now;
         let w = to - now;
         for (i, core) in self.cores.iter_mut().enumerate() {
-            if prestepped[i] {
+            if prestepped.get(i).copied().unwrap_or(false) {
                 // busy accounting for the executed first cycle (the
                 // state after a WaitMem retry is never halted/parked)
                 if core.busy() {
@@ -751,7 +785,7 @@ impl Cluster {
     /// (used between the warmup/setup phase and a measured region).
     pub fn reset_stats(&mut self) {
         self.now = 0;
-        self.counters = Counters::default();
+        self.counters = Counters::for_cores(self.cores.len());
         self.tcdm.stats = Default::default();
         self.icache.stats = Default::default();
         self.dma_cycles = 0;
@@ -782,12 +816,12 @@ impl Cluster {
         }
         self.reconfig.reset();
         self.barrier.reset();
-        self.counters = Counters::default();
+        self.counters = Counters::for_cores(self.cores.len());
         self.now = 0;
         self.next_stream = 0;
         self.retire_buf.clear();
         self.dma_cycles = 0;
-        self.halt_cycle = [None; 2];
+        self.halt_cycle.fill(None);
         self.steps_executed = 0;
         // The trace resets with the cluster but deliberately survives
         // `reset_stats`: workloads that stage data and then rewind the
@@ -796,10 +830,21 @@ impl Cluster {
     }
 }
 
-/// Validate a program pair against a cluster configuration and operating
-/// mode: static program validity, `setmode` legality, and the merge-mode
-/// core-1 vector restriction. Returns the barrier participant mask (bit
-/// per core whose program contains a barrier).
+/// Cycle-`now` rotating arbitration order over an N-core cluster's
+/// cores/units: start at `now mod N` and wrap. At N = 2 this reduces to
+/// the historical even/odd `[0, 1]` / `[1, 0]` flip, so dual-core runs
+/// stay byte-identical.
+fn rotation(now: u64, n: usize) -> impl Iterator<Item = usize> {
+    let start = (now % n as u64) as usize;
+    (0..n).map(move |k| (start + k) % n)
+}
+
+/// Validate one program per core against a cluster configuration and
+/// operating mode: per-core program count, static program validity,
+/// `setmode` legality, and the merge-mode restriction that only pair
+/// leaders (even cores with an odd neighbour) issue vector work. Returns
+/// the barrier participant mask (bit per core whose program contains a
+/// barrier).
 ///
 /// The single source of truth for load-time program rules: the
 /// validating [`Cluster::load_programs`] path calls it per load, and the
@@ -808,14 +853,20 @@ impl Cluster {
 pub(crate) fn validate_programs(
     cfg: &ClusterConfig,
     merge: bool,
-    programs: &[Arc<Program>; 2],
-) -> anyhow::Result<u8> {
-    let mut barrier_mask = 0u8;
+    programs: &[Arc<Program>],
+) -> anyhow::Result<u64> {
+    anyhow::ensure!(
+        programs.len() == cfg.cores,
+        "got {} programs for a {}-core cluster (one per core required)",
+        programs.len(),
+        cfg.cores
+    );
+    let mut barrier_mask = 0u64;
     for (i, p) in programs.iter().enumerate() {
         p.validate(cfg.vregs)?;
         let uses_setmode = p.instrs.iter().any(|x| matches!(x, Instr::SetMode(_)));
         if p.instrs.iter().any(|x| matches!(x, Instr::Barrier)) {
-            barrier_mask |= 1 << i;
+            barrier_mask |= 1u64 << i;
         }
         if cfg.arch == ArchKind::Baseline {
             anyhow::ensure!(
@@ -827,10 +878,11 @@ pub(crate) fn validate_programs(
         if uses_setmode {
             anyhow::ensure!(i == 0, "program '{}': only core 0 may reconfigure", p.name);
         }
-        if merge && i == 1 {
+        let pair_leader = i % 2 == 0 && i + 1 < cfg.cores;
+        if merge && !pair_leader {
             anyhow::ensure!(
                 p.vector_count() == 0,
-                "program '{}': core 1 cannot issue vector work in merge mode",
+                "program '{}': core {i} cannot issue vector work in merge mode (not a pair leader)",
                 p.name
             );
         }
@@ -1336,6 +1388,112 @@ mod tests {
         );
         assert_eq!(reused.core_halt_cycle(0), fresh.core_halt_cycle(0));
         assert_eq!(reused.core_halt_cycle(1), fresh.core_halt_cycle(1));
+    }
+
+    #[test]
+    fn single_core_cluster_end_to_end() {
+        let mut cfg = SimConfig::spatzformer();
+        cfg.cluster.cores = 1;
+        let mut cl = Cluster::new(cfg).unwrap();
+        let x: Vec<f32> = (0..256).map(|i| i as f32).collect();
+        cl.stage_f32(0, &x);
+        cl.load_programs([vec_program("solo", 0, 256, 2.0)]).unwrap();
+        cl.run().unwrap();
+        let out = cl.tcdm.read_f32_slice(0x4000, 256);
+        for (i, &o) in out.iter().enumerate() {
+            assert_eq!(o, x[i] * 2.0, "elem {i}");
+        }
+        assert!(cl.core_halt_cycle(0).is_some());
+    }
+
+    #[test]
+    fn quad_core_split_mode_end_to_end() {
+        let mut cfg = SimConfig::spatzformer();
+        cfg.cluster.cores = 4;
+        let mut cl = Cluster::new(cfg).unwrap();
+        let x: Vec<f32> = (0..1024).map(|i| i as f32 * 0.25).collect();
+        cl.stage_f32(0, &x);
+        let programs: Vec<Program> = (0..4u32)
+            .map(|c| vec_program(&format!("q{c}"), c * 1024, 256, 2.0))
+            .collect();
+        cl.load_programs(programs).unwrap();
+        cl.run().unwrap();
+        for c in 0..4usize {
+            let out = cl.tcdm.read_f32_slice(c as u32 * 1024 + 0x4000, 256);
+            for (i, &o) in out.iter().enumerate() {
+                assert_eq!(o, x[c * 256 + i] * 2.0, "quarter {c} elem {i}");
+            }
+            assert!(cl.core_halt_cycle(c).is_some(), "core {c} must halt");
+        }
+    }
+
+    #[test]
+    fn quad_core_engines_stay_byte_identical() {
+        let build = |engine| {
+            let mut cfg = SimConfig::spatzformer();
+            cfg.cluster.cores = 4;
+            cfg.engine = engine;
+            let mut cl = Cluster::new(cfg).unwrap();
+            let x: Vec<f32> = (0..1024).map(|i| (i as f32).sin()).collect();
+            cl.stage_f32(0, &x);
+            let programs: Vec<Program> = (0..4u32)
+                .map(|c| vec_program(&format!("q{c}"), c * 1024, 256, 1.5))
+                .collect();
+            cl.load_programs(programs).unwrap();
+            cl
+        };
+        let mut fast = build(EngineKind::Fast);
+        let mut naive = build(EngineKind::Naive);
+        assert_eq!(fast.run().unwrap(), naive.run().unwrap());
+        assert_eq!(fast.counters, naive.counters);
+        assert_eq!(fast.tcdm.stats, naive.tcdm.stats);
+        assert_eq!(fast.icache.stats, naive.icache.stats);
+        assert_eq!(
+            fast.tcdm.read_f32_slice(0x4000, 1024),
+            naive.tcdm.read_f32_slice(0x4000, 1024)
+        );
+    }
+
+    #[test]
+    fn quad_core_merge_leaders_drive_adjacent_units() {
+        let mut cfg = SimConfig::spatzformer();
+        cfg.cluster.cores = 4;
+        let mut cl = Cluster::new(cfg).unwrap();
+        cl.set_mode(Mode::Merge).unwrap();
+        let x: Vec<f32> = (0..512).map(|i| (i as f32).cos()).collect();
+        cl.stage_f32(0, &x);
+        let mk = |name: &str, base: u32| {
+            let mut p = Program::new(name);
+            p.vector(VectorOp::SetVl { avl: 256, ew: ElemWidth::E32, lmul: Lmul::M8 });
+            p.vector(VectorOp::Load { vd: VReg(8), base, stride: 1 });
+            p.vector(VectorOp::AddVF { vd: VReg(16), vs: VReg(8), f: 1.0 });
+            p.vector(VectorOp::Store { vs: VReg(16), base: 0x4000 + base, stride: 1 });
+            p.push(Instr::Fence);
+            p.push(Instr::Halt);
+            p
+        };
+        // leaders 0 and 2 each drive a 256-wide merged strip; odd cores
+        // stay scalar-only
+        cl.load_programs([mk("lead0", 0), Program::idle(), mk("lead2", 1024), Program::idle()])
+            .unwrap();
+        cl.run().unwrap();
+        let out = cl.tcdm.read_f32_slice(0x4000, 512);
+        for (i, &o) in out.iter().enumerate() {
+            assert_eq!(o, x[i] + 1.0, "elem {i}");
+        }
+        for u in 0..4 {
+            assert!(cl.counters.cycles_unit_busy[u] > 0, "unit {u} must have worked");
+        }
+    }
+
+    #[test]
+    fn load_programs_rejects_wrong_program_count() {
+        let mut cl = Cluster::new(SimConfig::spatzformer()).unwrap();
+        let err = cl.load_programs([Program::idle()]).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("2-core cluster"),
+            "error names the topology: {err:#}"
+        );
     }
 
     #[test]

@@ -44,9 +44,10 @@ pub struct CompiledJob {
     pub kernel: KernelId,
     /// Deployment the mode policy resolved to.
     pub deploy: Deployment,
-    /// Final per-core instruction streams. For mixed jobs core 1 carries
-    /// the CoreMark-workalike program instead of the kernel's.
-    pub programs: [Arc<Program>; 2],
+    /// Final per-core instruction streams (`cluster.cores` entries). For
+    /// mixed jobs the last core carries the CoreMark-workalike program
+    /// instead of the kernel's.
+    pub programs: Vec<Arc<Program>>,
     /// Kernel staging set, artifact-ordered inputs, output locations and
     /// FLOP count (shared — the execute stage never mutates it).
     pub inst: Arc<KernelInstance>,
@@ -58,14 +59,14 @@ pub struct CompiledJob {
     pub staging: StagingImage,
     /// Scalar co-task work proof (mixed jobs).
     pub coremark_checksum: Option<u16>,
-    /// Whether core 1 runs a scalar co-task (mixed job shape).
+    /// Whether the last core runs a scalar co-task (mixed job shape).
     pub mixed: bool,
     /// Barrier participant mask (bit per core whose program contains a
     /// barrier; 0 = leave the cluster default). Precomputed here — with
     /// full program validation — so the execute stage loads a cached
-    /// artifact in O(1) instead of re-validating and re-scanning both
-    /// instruction streams on every run.
-    pub barrier_mask: u8,
+    /// artifact in O(1) instead of re-validating and re-scanning every
+    /// instruction stream on every run.
+    pub barrier_mask: u64,
     /// Digest of the `(ClusterConfig, seed)` the artifact was built for;
     /// the execute stage refuses artifacts compiled for a different
     /// configuration.
@@ -81,21 +82,28 @@ pub struct CompiledJob {
 fn validate_programs(
     cluster: &ClusterConfig,
     deploy: Deployment,
-    programs: &[Arc<Program>; 2],
-) -> anyhow::Result<u8> {
+    programs: &[Arc<Program>],
+) -> anyhow::Result<u64> {
     crate::cluster::validate_programs(cluster, deploy == Deployment::Merge, programs)
 }
 
-/// Resolve the deployment a mode policy maps to on `arch`.
+/// Resolve the deployment a mode policy maps to on `arch`. The table is
+/// topology-independent — each deployment then scales to the configured
+/// core count through [`crate::kernels`]'s active-core rule:
 ///
 /// * `Split`, pure kernel → [`Deployment::SplitDual`] (the problem is
-///   divided across both cores);
-/// * `Split`, mixed → [`Deployment::SplitSingle`] (core 1 must stay free
-///   for the scalar task);
+///   divided across all `cluster.cores` cores);
+/// * `Split`, mixed → [`Deployment::SplitSingle`] (the last core must
+///   stay free for the scalar task);
 /// * `Merge` → [`Deployment::Merge`], rejected on the baseline cluster;
+///   adjacent cores pair up (even leader drives both units), so it needs
+///   at least 2 cores — an unpaired trailing core stays scalar-only;
 /// * `Auto`, mixed → merge on Spatzformer (frees a core without halving
-///   vector throughput), single-core split on the baseline;
-/// * `Auto`, pure kernel → split-dual (the baseline-equivalent choice).
+///   vector throughput — on any core count the pair leaders keep the
+///   full unit complement busy while the last core runs the co-task),
+///   single-core split on the baseline;
+/// * `Auto`, pure kernel → split-dual (the baseline-equivalent choice,
+///   and the all-cores-active one on every topology).
 pub fn resolve_deploy(
     arch: ArchKind,
     policy: ModePolicy,
@@ -177,8 +185,15 @@ fn compile_with_cfg_key(cfg: &SimConfig, key: u64, job: &Job) -> anyhow::Result<
     match *job {
         Job::Kernel { kernel, policy } => {
             let deploy = resolve_deploy(arch, policy, false)?;
+            if deploy == Deployment::Merge {
+                anyhow::ensure!(
+                    cfg.cluster.cores >= 2,
+                    "merge mode pairs adjacent cores and needs cluster.cores >= 2 (got {})",
+                    cfg.cluster.cores
+                );
+            }
             let inst = kernel.build(&cfg.cluster, deploy, cfg.seed);
-            let programs = [inst.programs[0].clone(), inst.programs[1].clone()];
+            let programs = inst.programs.clone();
             let barrier_mask = validate_programs(&cfg.cluster, deploy, &programs)?;
             let staging = StagingImage::from_instance(&inst);
             Ok(CompiledJob {
@@ -200,10 +215,20 @@ fn compile_with_cfg_key(cfg: &SimConfig, key: u64, job: &Job) -> anyhow::Result<
                 deploy != Deployment::SplitDual,
                 "mixed jobs need a free scalar core"
             );
+            anyhow::ensure!(
+                cfg.cluster.cores >= 2,
+                "mixed jobs need a free scalar core (cluster.cores = {})",
+                cfg.cluster.cores
+            );
             let inst = kernel.build(&cfg.cluster, deploy, cfg.seed);
             let scalar = coremark(&cfg.cluster, coremark_iterations, cfg.seed ^ 0x5CA1A8);
-            // kernel occupies core 0; the scalar task takes core 1
-            let programs = [inst.programs[0].clone(), Arc::new(scalar.program)];
+            // the kernel's active cores never include the last core under
+            // a non-split-dual deployment (split-single uses core 0 only;
+            // merge leaders are even cores below the last) — the scalar
+            // task takes that free last core
+            let mut programs = inst.programs.clone();
+            let last = programs.len() - 1;
+            programs[last] = Arc::new(scalar.program);
             let barrier_mask = validate_programs(&cfg.cluster, deploy, &programs)?;
             let staging = StagingImage::from_instance(&inst);
             Ok(CompiledJob {
@@ -384,16 +409,66 @@ mod tests {
     }
 
     #[test]
-    fn mixed_compile_places_coremark_on_core1() {
+    fn mixed_compile_places_coremark_on_last_core() {
         let cfg = SimConfig::spatzformer();
         let cj = compile(&cfg, &mixed_job(2)).unwrap();
         assert!(cj.mixed);
         assert_eq!(cj.deploy, Deployment::Merge);
         assert!(cj.coremark_checksum.is_some());
+        assert_eq!(cj.programs.len(), cfg.cluster.cores);
         assert_eq!(cj.programs[1].vector_count(), 0, "co-task must be scalar");
         assert!(cj.programs[1].len() > 1000, "co-task carries real work");
         // core 0 still runs the kernel program from the instance
         assert_eq!(cj.programs[0], cj.inst.programs[0]);
+    }
+
+    /// Satellite of the topology API: `Auto` resolution is
+    /// topology-independent, and on wider-than-dual clusters the mixed
+    /// co-task lands on the last core while the kernel's active cores
+    /// keep their instance programs.
+    #[test]
+    fn auto_resolution_and_mixed_placement_scale_past_two_cores() {
+        let mut cfg = SimConfig::spatzformer();
+        cfg.cluster.cores = 4;
+        cfg.validate().unwrap();
+        // Auto, pure kernel → split-dual across all 4 cores
+        let cj = compile(
+            &cfg,
+            &Job::Kernel { kernel: KernelId::Faxpy, policy: ModePolicy::Auto },
+        )
+        .unwrap();
+        assert_eq!(cj.deploy, Deployment::SplitDual);
+        assert_eq!(cj.programs.len(), 4);
+        assert!(cj.programs.iter().all(|p| p.vector_count() > 0));
+        // Auto, mixed → merge; leaders 0 and 2 carry vector work, the
+        // last core carries the scalar co-task, core 1 idles
+        let cj = compile(&cfg, &mixed_job(2)).unwrap();
+        assert_eq!(cj.deploy, Deployment::Merge);
+        assert_eq!(cj.programs.len(), 4);
+        assert!(cj.programs[0].vector_count() > 0);
+        assert_eq!(cj.programs[1].vector_count(), 0);
+        assert!(cj.programs[2].vector_count() > 0);
+        assert_eq!(cj.programs[3].vector_count(), 0, "co-task must be scalar");
+        assert!(cj.programs[3].len() > 1000, "co-task carries real work");
+        assert_eq!(cj.programs[0], cj.inst.programs[0]);
+        assert_eq!(cj.programs[2], cj.inst.programs[2]);
+    }
+
+    /// Merge pairing and mixed co-task placement both need a second
+    /// core; compile names the topology field when refusing.
+    #[test]
+    fn single_core_cluster_rejects_merge_and_mixed() {
+        let mut cfg = SimConfig::spatzformer();
+        cfg.cluster.cores = 1;
+        cfg.validate().unwrap();
+        let err = compile(
+            &cfg,
+            &Job::Kernel { kernel: KernelId::Faxpy, policy: ModePolicy::Merge },
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("cluster.cores"), "{err:#}");
+        let err = compile(&cfg, &mixed_job(1)).unwrap_err();
+        assert!(format!("{err:#}").contains("free scalar core"), "{err:#}");
     }
 
     #[test]

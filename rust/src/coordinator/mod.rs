@@ -277,12 +277,20 @@ impl Coordinator {
         )?;
         price_run(&mut metrics, &self.cfg, self.cfg.cluster.arch);
         let verified = self.verify(&compiled.inst, &outputs)?;
-        let halt0 = self.cluster.core_halt_cycle(0).unwrap_or(metrics.cycles);
+        let n = self.cluster.cores();
+        let halt_max = |cores: std::ops::Range<usize>| {
+            cores
+                .filter_map(|i| self.cluster.core_halt_cycle(i))
+                .max()
+                .unwrap_or(metrics.cycles)
+        };
         let (kernel_cycles, scalar_cycles) = if compiled.mixed {
-            (halt0, self.cluster.core_halt_cycle(1))
+            // the kernel occupies every core but the last, which runs
+            // the scalar co-task
+            (halt_max(0..n - 1), self.cluster.core_halt_cycle(n - 1))
         } else {
-            // pure kernel: dual deployments finish at the slower core
-            (halt0.max(self.cluster.core_halt_cycle(1).unwrap_or(0)), None)
+            // pure kernel: multi-core deployments finish at the slowest core
+            (halt_max(0..n), None)
         };
         Ok(JobReport {
             job_name: compiled.job_name.clone(),

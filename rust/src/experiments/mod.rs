@@ -9,6 +9,7 @@
 //! | E3 | Fig. 2 right axis, mixed-workload speedup | [`mixed_rows`] + [`render_fig2_mixed`] |
 //! | E4 | area table | [`render_area`] |
 //! | E5 | fmax corners | [`render_fmax`] |
+//! | E6 | topology scaling study (beyond the paper) | [`scaling_rows`] + [`render_scaling`] |
 
 use crate::config::{ArchKind, Corner, SimConfig};
 use crate::coordinator::{Coordinator, Job, JobReport, ModePolicy};
@@ -16,7 +17,7 @@ use crate::fleet::{Fleet, FleetJob};
 use crate::kernels::KernelId;
 use crate::metrics::Table;
 use crate::ppa::{AreaModel, FreqModel};
-use crate::util::Summary;
+use crate::util::{Json, Summary};
 
 /// One kernel's numbers across the three cluster variants.
 #[derive(Debug, Clone)]
@@ -263,6 +264,167 @@ pub fn render_fig2_mixed(rows: &[MixedRow]) -> String {
     t.render()
 }
 
+/// Per-cluster core counts swept by `bench scaling` (the acceptance
+/// grid: these four counts must appear in `BENCH_REPORT.json` even
+/// under `--smoke`).
+pub const SCALING_CORES: [usize; 4] = [1, 2, 4, 8];
+
+/// One point of the topology scaling study (E6, `spatzformer bench
+/// scaling`): a kernel on a cores × clusters shape, split deployment.
+#[derive(Debug, Clone)]
+pub struct ScalingRow {
+    pub kernel: KernelId,
+    pub cores: usize,
+    pub clusters: usize,
+    /// Kernel cycles on one cluster of the shape.
+    pub cycles: u64,
+    /// Analytic system makespan: all `clusters` replicas compute
+    /// concurrently but stage operands through the one shared L2/DMA
+    /// port, so each extra cluster finishes one staging window later:
+    /// `cycles + (clusters - 1) × dma_cycles`.
+    pub makespan: u64,
+    /// FPU utilization over the shape's cores × lanes.
+    pub fpu_utilization: f64,
+    /// Cycle speedup of this shape over the paper's dual-core
+    /// single-cluster shape on the same kernel (2c×1 itself reads 1.0).
+    pub speedup_vs_dual: f64,
+}
+
+/// The `bench scaling` sweep. Full grid: every kernel × cores {1,2,4,8}
+/// × clusters {1,2,4}; `--smoke` trims to two kernels and clusters
+/// {1,2} but keeps all four core counts so the CI guardrails
+/// (`sim_scaling.faxpy.c{1,2,4,8}x{1,2}`) always resolve.
+pub fn scaling_rows(seed: u64, smoke: bool, workers: usize) -> Vec<ScalingRow> {
+    let kernels: Vec<KernelId> = if smoke {
+        vec![KernelId::Faxpy, KernelId::Fmatmul]
+    } else {
+        KernelId::all().to_vec()
+    };
+    let clusters: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4] };
+    scaling_rows_for(&kernels, &SCALING_CORES, clusters, seed, workers)
+}
+
+/// [`scaling_rows`] over an explicit kernel/shape grid (tests shrink it;
+/// the grid must include the 2-core × 1-cluster reference shape).
+pub fn scaling_rows_for(
+    kernels: &[KernelId],
+    cores: &[usize],
+    clusters: &[usize],
+    seed: u64,
+    workers: usize,
+) -> Vec<ScalingRow> {
+    let mut cfg = SimConfig::spatzformer();
+    cfg.seed = seed;
+    let lanes = cfg.cluster.lanes;
+    let mut shapes = Vec::new();
+    for &m in clusters {
+        for &n in cores {
+            shapes.push((n, m));
+        }
+    }
+    // One fleet batch, grouped by shape: a worker re-grows its simulated
+    // cluster only on a shape transition, and worker count stays a host
+    // knob — fully decoupled from the simulated cores/clusters grid.
+    let jobs: Vec<FleetJob> = shapes
+        .iter()
+        .flat_map(|&(n, m)| {
+            kernels.iter().map(move |&kernel| {
+                FleetJob::with_topology(Job::Kernel { kernel, policy: ModePolicy::Split }, n, m)
+            })
+        })
+        .collect();
+    let reports = Fleet::new(cfg)
+        .expect("config")
+        .with_workers(workers)
+        .run(&jobs)
+        .expect("scaling sweep")
+        .reports;
+    let mut rows = Vec::new();
+    let mut it = reports.iter();
+    for &(n, m) in &shapes {
+        for &kernel in kernels {
+            let r = it.next().expect("one report per job");
+            rows.push(ScalingRow {
+                kernel,
+                cores: n,
+                clusters: m,
+                cycles: r.kernel_cycles,
+                makespan: r.kernel_cycles + (m as u64 - 1) * r.metrics.dma_cycles,
+                fpu_utilization: r.metrics.fpu_utilization(n, lanes),
+                speedup_vs_dual: 0.0,
+            });
+        }
+    }
+    let dual: Vec<(KernelId, u64)> = rows
+        .iter()
+        .filter(|d| d.cores == 2 && d.clusters == 1)
+        .map(|d| (d.kernel, d.cycles))
+        .collect();
+    for row in &mut rows {
+        let base = dual
+            .iter()
+            .find(|(k, _)| *k == row.kernel)
+            .expect("the grid always contains the 2-core x 1-cluster reference")
+            .1;
+        row.speedup_vs_dual = base as f64 / row.cycles as f64;
+    }
+    rows
+}
+
+/// E6 human-readable form: one row per kernel × shape.
+pub fn render_scaling(rows: &[ScalingRow]) -> String {
+    let mut t = Table::new(&[
+        "kernel",
+        "cores",
+        "clusters",
+        "cycles",
+        "makespan",
+        "fpu util",
+        "vs 2c x 1",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.kernel.name().into(),
+            r.cores.to_string(),
+            r.clusters.to_string(),
+            r.cycles.to_string(),
+            r.makespan.to_string(),
+            format!("{:.1}%", r.fpu_utilization * 100.0),
+            format!("{:.3}x", r.speedup_vs_dual),
+        ]);
+    }
+    t.render()
+}
+
+/// E6 machine-readable form for CI's bench-report job:
+/// `sim_scaling.<kernel>.c<cores>x<clusters>.{cycles, makespan_cycles,
+/// fpu_utilization, speedup_vs_dual}` plus a `smoke` marker, merged into
+/// `BENCH_REPORT.json` alongside the other tracked fragments.
+pub fn scaling_json(rows: &[ScalingRow], smoke: bool) -> Json {
+    let mut kernels: Vec<(String, Vec<(String, Json)>)> = Vec::new();
+    for r in rows {
+        let name = r.kernel.name().to_string();
+        if !kernels.iter().any(|(k, _)| *k == name) {
+            kernels.push((name.clone(), Vec::new()));
+        }
+        let shapes = &mut kernels.iter_mut().find(|(k, _)| *k == name).expect("just inserted").1;
+        shapes.push((
+            format!("c{}x{}", r.cores, r.clusters),
+            Json::Obj(vec![
+                ("cores".to_string(), Json::u64_lossless(r.cores as u64)),
+                ("clusters".to_string(), Json::u64_lossless(r.clusters as u64)),
+                ("cycles".to_string(), Json::u64_lossless(r.cycles)),
+                ("makespan_cycles".to_string(), Json::u64_lossless(r.makespan)),
+                ("fpu_utilization".to_string(), Json::num(r.fpu_utilization)),
+                ("speedup_vs_dual".to_string(), Json::num(r.speedup_vs_dual)),
+            ]),
+        ));
+    }
+    let mut fields: Vec<(String, Json)> = vec![("smoke".to_string(), Json::Bool(smoke))];
+    fields.extend(kernels.into_iter().map(|(k, v)| (k, Json::Obj(v))));
+    Json::Obj(vec![("sim_scaling".to_string(), Json::Obj(fields))])
+}
+
 /// E4: the area comparison.
 pub fn render_area() -> String {
     let base = AreaModel::baseline();
@@ -331,6 +493,34 @@ mod tests {
         assert_eq!(rows[0].baseline, run_kernel(&base_cfg, KernelId::Faxpy, ModePolicy::Split));
         assert_eq!(rows[0].sm, run_kernel(&sf_cfg, KernelId::Faxpy, ModePolicy::Split));
         assert_eq!(rows[0].mm, run_kernel(&sf_cfg, KernelId::Faxpy, ModePolicy::Merge));
+    }
+
+    #[test]
+    fn scaling_grid_speedups_and_json_keys() {
+        // one cheap kernel on a 2x2 sub-grid; the full {1,2,4,8} x
+        // {1,2,4} sweep is CI's `bench scaling` step
+        let rows = scaling_rows_for(&[KernelId::Faxpy], &[1, 2], &[1, 2], 7, 2);
+        assert_eq!(rows.len(), 4);
+        let at = |n: usize, m: usize| {
+            rows.iter().find(|r| r.cores == n && r.clusters == m).expect("row")
+        };
+        // the reference shape reads exactly 1x by construction
+        assert!((at(2, 1).speedup_vs_dual - 1.0).abs() < 1e-12);
+        // the second core pulls real weight on faxpy (CI pins >= 1.3x)
+        assert!(
+            at(1, 1).cycles as f64 >= 1.3 * at(2, 1).cycles as f64,
+            "1c={} 2c={}",
+            at(1, 1).cycles,
+            at(2, 1).cycles
+        );
+        // replicas change the staged makespan, never per-cluster cycles
+        assert_eq!(at(2, 2).cycles, at(2, 1).cycles);
+        assert!(at(2, 2).makespan > at(2, 2).cycles);
+        assert_eq!(at(2, 1).makespan, at(2, 1).cycles);
+        let doc = scaling_json(&rows, true).encode();
+        for key in ["\"sim_scaling\"", "\"faxpy\"", "\"c2x1\"", "\"speedup_vs_dual\""] {
+            assert!(doc.contains(key), "{key} missing from {doc}");
+        }
     }
 
     #[test]

@@ -48,20 +48,36 @@ use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-/// One queued unit of fleet work: a coordinator job plus an optional
-/// workload-seed override on the base [`SimConfig`] (scenario sweeps
-/// vary the seed axis without cloning whole configs per job).
+/// One queued unit of fleet work: a coordinator job plus optional
+/// overrides on the base [`SimConfig`] — the workload seed and the
+/// simulated topology (scenario sweeps vary these axes without cloning
+/// whole configs per job). Worker threads are a host-side scheduling
+/// resource and stay decoupled from the simulated shape: any worker can
+/// run a job for any topology, rebuilding its simulated cluster when the
+/// shape changes.
 #[derive(Debug, Clone)]
 pub struct FleetJob {
     pub job: Job,
     /// `Some(s)` replaces `SimConfig::seed` for this job.
     pub seed: Option<u64>,
+    /// `Some(n)` replaces `cluster.cores` (simulated core count) for
+    /// this job.
+    pub cores: Option<usize>,
+    /// `Some(m)` replaces `cluster.clusters` (simulated clusters sharing
+    /// the L2/DMA stage) for this job.
+    pub clusters: Option<usize>,
 }
 
 impl FleetJob {
-    /// A job at the base config's seed.
+    /// A job at the base config's seed and topology.
     pub fn new(job: Job) -> Self {
-        Self { job, seed: None }
+        Self { job, seed: None, cores: None, clusters: None }
+    }
+
+    /// A job with an explicit simulated topology (`cores` per cluster,
+    /// `clusters` sharing the L2/DMA stage).
+    pub fn with_topology(job: Job, cores: usize, clusters: usize) -> Self {
+        Self { job, seed: None, cores: Some(cores), clusters: Some(clusters) }
     }
 
     /// The config this job actually simulates under. Public so benches
@@ -71,6 +87,12 @@ impl FleetJob {
         let mut cfg = base.clone();
         if let Some(seed) = self.seed {
             cfg.seed = seed;
+        }
+        if let Some(cores) = self.cores {
+            cfg.cluster.cores = cores;
+        }
+        if let Some(clusters) = self.clusters {
+            cfg.cluster.clusters = clusters;
         }
         cfg
     }
@@ -274,6 +296,15 @@ pub(crate) fn run_job(
         None
     };
     let seed = cfg.seed;
+    // Rebuild the worker's simulated cluster when the job's topology
+    // override changes the shape (workers are host threads, decoupled
+    // from the simulated topology); a seed-only change reuses it.
+    if coord
+        .as_ref()
+        .is_some_and(|c| c.config().cluster != cfg.cluster)
+    {
+        *coord = None;
+    }
     if coord.is_none() {
         let mut c = Coordinator::new(cfg)?;
         // The fleet's compile-cache policy overrides the per-coordinator
@@ -342,11 +373,11 @@ mod tests {
 
     fn axpy_job(seed: u64) -> FleetJob {
         FleetJob {
-            job: Job::Kernel {
+            seed: Some(seed),
+            ..FleetJob::new(Job::Kernel {
                 kernel: KernelId::Faxpy,
                 policy: ModePolicy::Split,
-            },
-            seed: Some(seed),
+            })
         }
     }
 
@@ -428,6 +459,35 @@ mod tests {
             .unwrap();
         assert_eq!((out2.metrics.compile_hits, out2.metrics.compile_misses), (0, 0));
         assert_eq!(out.reports, out2.reports);
+    }
+
+    /// Topology overrides: one batch mixing 1-, 2- and 4-core shapes
+    /// runs on a single worker (which must rebuild its cluster between
+    /// shapes) and matches per-shape sequential coordinators exactly.
+    #[test]
+    fn topology_overrides_rebuild_worker_clusters_deterministically() {
+        let base = SimConfig::spatzformer();
+        let job = Job::Kernel { kernel: KernelId::Faxpy, policy: ModePolicy::Split };
+        let jobs: Vec<FleetJob> = [1usize, 2, 4, 2, 1]
+            .iter()
+            .map(|&n| FleetJob::with_topology(job.clone(), n, 1))
+            .collect();
+        let out = Fleet::new(base.clone())
+            .unwrap()
+            .with_workers(1)
+            .with_cache(false)
+            .run(&jobs)
+            .unwrap();
+        for (fj, got) in jobs.iter().zip(&out.reports) {
+            let mut seq = Coordinator::new(fj.config(&base)).unwrap();
+            let want = seq.submit(&fj.job).unwrap();
+            assert_eq!(got, &want, "cores={:?}", fj.cores);
+        }
+        // same shape ⇒ same report; more cores ⇒ fewer kernel cycles
+        assert_eq!(out.reports[1], out.reports[3]);
+        assert_eq!(out.reports[0], out.reports[4]);
+        assert!(out.reports[2].kernel_cycles < out.reports[1].kernel_cycles);
+        assert!(out.reports[1].kernel_cycles < out.reports[0].kernel_cycles);
     }
 
     #[test]

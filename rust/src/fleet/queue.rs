@@ -521,11 +521,11 @@ mod tests {
 
     fn axpy(seed: u64) -> FleetJob {
         FleetJob {
-            job: Job::Kernel {
+            seed: Some(seed),
+            ..FleetJob::new(Job::Kernel {
                 kernel: KernelId::Faxpy,
                 policy: ModePolicy::Split,
-            },
-            seed: Some(seed),
+            })
         }
     }
 

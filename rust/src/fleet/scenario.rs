@@ -111,8 +111,8 @@ fn kernel_sweep(arch: ArchKind, seed: u64, count: usize) -> Vec<FleetJob> {
         for kernel in KernelId::all() {
             for &policy in kernel_policies(arch) {
                 grid.push(FleetJob {
-                    job: Job::Kernel { kernel, policy },
                     seed: Some(s),
+                    ..FleetJob::new(Job::Kernel { kernel, policy })
                 });
             }
         }
@@ -129,12 +129,12 @@ fn mixed_sweep(arch: ArchKind, seed: u64, count: usize) -> Vec<FleetJob> {
             for &policy in mixed_policies(arch) {
                 for iters in [1u32, 2, 4] {
                     grid.push(FleetJob {
-                        job: Job::Mixed {
+                        seed: Some(s),
+                        ..FleetJob::new(Job::Mixed {
                             kernel,
                             policy,
                             coremark_iterations: iters,
-                        },
-                        seed: Some(s),
+                        })
                     });
                 }
             }
@@ -154,21 +154,21 @@ fn storm(arch: ArchKind, seed: u64, count: usize) -> Vec<FleetJob> {
             if rng.chance(0.5) {
                 let policies = mixed_policies(arch);
                 FleetJob {
-                    job: Job::Mixed {
+                    seed: s,
+                    ..FleetJob::new(Job::Mixed {
                         kernel,
                         policy: policies[rng.range(0, policies.len())],
                         coremark_iterations: [1u32, 2, 3][rng.range(0, 3)],
-                    },
-                    seed: s,
+                    })
                 }
             } else {
                 let policies = kernel_policies(arch);
                 FleetJob {
-                    job: Job::Kernel {
+                    seed: s,
+                    ..FleetJob::new(Job::Kernel {
                         kernel,
                         policy: policies[rng.range(0, policies.len())],
-                    },
-                    seed: s,
+                    })
                 }
             }
         })

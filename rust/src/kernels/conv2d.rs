@@ -5,7 +5,9 @@
 //! `vfmacc.vf` over shifted input-row loads. Output rows are split
 //! across cores in split-dual mode (disjoint outputs, no barriers).
 
-use super::{gen_input, loop_overhead, Alloc, Deployment, KernelId, KernelInstance};
+use super::{
+    active_cores, chunk, gen_input, loop_overhead, Alloc, Deployment, KernelId, KernelInstance,
+};
 use crate::config::ClusterConfig;
 use crate::isa::{ElemWidth, Instr, Lmul, Program, ScalarOp, VReg, VectorOp};
 
@@ -25,15 +27,15 @@ pub fn build(cfg: &ClusterConfig, deploy: Deployment, seed: u64) -> KernelInstan
     let img_base = alloc.words(IN * IN);
     let out_base = alloc.words(OUT * OUT);
 
-    let ranges: [(usize, usize); 2] = match deploy {
-        Deployment::SplitDual => [(0, OUT / 2), (OUT / 2, OUT)],
-        _ => [(0, OUT), (0, 0)],
-    };
+    let active = active_cores(cfg, deploy);
+    let mut ranges: Vec<(usize, usize)> = vec![(0, 0); cfg.cores];
+    for (rank, &core) in active.iter().enumerate() {
+        ranges[core] = chunk(OUT, rank, active.len());
+    }
 
-    let mut programs: [Program; 2] = [
-        Program::new(&format!("conv2d-{}-c0", deploy.name())),
-        Program::new(&format!("conv2d-{}-c1", deploy.name())),
-    ];
+    let mut programs: Vec<Program> = (0..cfg.cores)
+        .map(|c| Program::new(&format!("conv2d-{}-c{c}", deploy.name())))
+        .collect();
     for (core, &(lo, hi)) in ranges.iter().enumerate() {
         let p = &mut programs[core];
         if lo < hi {
@@ -72,7 +74,7 @@ pub fn build(cfg: &ClusterConfig, deploy: Deployment, seed: u64) -> KernelInstan
     KernelInstance {
         id: KernelId::Conv2d,
         deploy,
-        programs: programs.map(std::sync::Arc::new),
+        programs: programs.into_iter().map(std::sync::Arc::new).collect(),
         staging_f32: vec![(img_base, img.clone())],
         staging_u32: vec![],
         artifact_inputs: vec![img, ker],

@@ -5,7 +5,9 @@
 //! store. Merge mode halves the strip count (vl doubles), which is
 //! exactly the instruction-fetch amortization the paper credits MM with.
 
-use super::{gen_input, loop_overhead, max_vl, Alloc, Deployment, KernelId, KernelInstance};
+use super::{
+    active_cores, gen_input, loop_overhead, max_vl, Alloc, Deployment, KernelId, KernelInstance,
+};
 use crate::config::ClusterConfig;
 use crate::isa::{ElemWidth, Instr, Lmul, Program, ScalarOp, VReg, VectorOp};
 
@@ -26,21 +28,18 @@ pub fn build(cfg: &ClusterConfig, deploy: Deployment, seed: u64) -> KernelInstan
 
     let vl = max_vl(cfg, deploy);
     // Strips are assigned round-robin across the active cores
-    // (static,1 strip-mined scheduling): the two LSUs then stream one
-    // full strip apart and do not collide on banks.
+    // (static,1 strip-mined scheduling): neighbouring LSUs then stream
+    // one full strip apart and do not collide on banks.
     let nstrips = N / vl as usize;
-    let strips: [Vec<usize>; 2] = match deploy {
-        Deployment::SplitDual => [
-            (0..nstrips).step_by(2).collect(),
-            (1..nstrips).step_by(2).collect(),
-        ],
-        _ => [(0..nstrips).collect(), Vec::new()],
-    };
+    let active = active_cores(cfg, deploy);
+    let mut strips: Vec<Vec<usize>> = vec![Vec::new(); cfg.cores];
+    for (rank, &core) in active.iter().enumerate() {
+        strips[core] = (rank..nstrips).step_by(active.len()).collect();
+    }
 
-    let mut programs: [Program; 2] = [
-        Program::new(&format!("faxpy-{}-c0", deploy.name())),
-        Program::new(&format!("faxpy-{}-c1", deploy.name())),
-    ];
+    let mut programs: Vec<Program> = (0..cfg.cores)
+        .map(|c| Program::new(&format!("faxpy-{}-c{c}", deploy.name())))
+        .collect();
     for (core, mine) in strips.iter().enumerate() {
         let p = &mut programs[core];
         if !mine.is_empty() {
@@ -74,7 +73,7 @@ pub fn build(cfg: &ClusterConfig, deploy: Deployment, seed: u64) -> KernelInstan
     KernelInstance {
         id: KernelId::Faxpy,
         deploy,
-        programs: programs.map(std::sync::Arc::new),
+        programs: programs.into_iter().map(std::sync::Arc::new).collect(),
         staging_f32: vec![(x_base, x.clone()), (y_base, y.clone())],
         staging_u32: vec![],
         artifact_inputs: vec![vec![ALPHA], x, y],

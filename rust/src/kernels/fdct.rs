@@ -15,10 +15,14 @@
 //! deliberate: the paper's kernel set spans "various degrees of data
 //! reuse", and fdct is the pathological-stride representative.
 //!
-//! split-dual: block-rows/columns split across cores with barriers
-//! between the four phases; merge: single stream, no barriers.
+//! split-dual: block-rows/columns split across the active cores with
+//! barriers between the four phases; merge on the dual-core machine:
+//! single stream, no barriers (multi-leader merge shapes barrier like
+//! split-dual).
 
-use super::{gen_input, loop_overhead, Alloc, Deployment, KernelId, KernelInstance};
+use super::{
+    active_cores, chunk, gen_input, loop_overhead, Alloc, Deployment, KernelId, KernelInstance,
+};
 use crate::config::ClusterConfig;
 use crate::isa::{ElemWidth, Instr, Lmul, Program, ScalarOp, VReg, VectorOp};
 
@@ -100,59 +104,64 @@ pub fn build(cfg: &ClusterConfig, deploy: Deployment, seed: u64) -> KernelInstan
     let t2_base = alloc.words(DIM * DIM);
     let out_base = alloc.words(DIM * DIM);
 
-    let dual = deploy == Deployment::SplitDual;
-    let br_ranges: [(usize, usize); 2] = if dual { [(0, 4), (4, 8)] } else { [(0, 8), (0, 0)] };
-    let col_ranges: [(usize, usize); 2] =
-        if dual { [(0, DIM / 2), (DIM / 2, DIM)] } else { [(0, DIM), (0, 0)] };
+    let active = active_cores(cfg, deploy);
+    let nact = active.len();
+    // more than one active core (split-dual, or merge with several pair
+    // leaders) exchanges data between phases and must barrier
+    let sync = nact >= 2;
+    let mut ranks: Vec<Option<usize>> = vec![None; cfg.cores];
+    for (rank, &core) in active.iter().enumerate() {
+        ranks[core] = Some(rank);
+    }
 
-    let mut programs: [Program; 2] = [
-        Program::new(&format!("fdct-{}-c0", deploy.name())),
-        Program::new(&format!("fdct-{}-c1", deploy.name())),
-    ];
-    for core in 0..2 {
-        let p = &mut programs[core];
-        let (blo, bhi) = br_ranges[core];
-        let (clo, chi) = col_ranges[core];
-        let active = blo < bhi;
+    let mut programs: Vec<Program> = (0..cfg.cores)
+        .map(|c| Program::new(&format!("fdct-{}-c{c}", deploy.name())))
+        .collect();
+    for (core, p) in programs.iter_mut().enumerate() {
         p.scalar(ScalarOp::Alu);
-        // Phase boundaries: split-dual exchanges data between cores and
-        // must drain + barrier; a single hart's in-order LSUs (and the MM
-        // retire-merge stage) keep phase stores ahead of the next phase's
-        // loads without software synchronization.
-        // phase 1: T = blockdiag(D) * X
-        if active {
-            emit_pass(p, &d, img_base, t_base, blo, bhi);
-            if dual {
+        if let Some(rank) = ranks[core] {
+            let (blo, bhi) = chunk(8, rank, nact);
+            let (clo, chi) = chunk(DIM, rank, nact);
+            // Phase boundaries: multi-active shapes exchange data between
+            // cores and must drain + barrier; a single hart's in-order
+            // LSUs (and the MM retire-merge stage) keep phase stores
+            // ahead of the next phase's loads without software
+            // synchronization.
+            // phase 1: T = blockdiag(D) * X
+            if blo < bhi {
+                emit_pass(p, &d, img_base, t_base, blo, bhi);
+                if sync {
+                    p.push(Instr::Fence);
+                }
+            }
+            if sync {
+                p.push(Instr::Barrier);
+            }
+            // phase 2: T2 = T^t
+            if clo < chi {
+                emit_transpose(p, t_base, t2_base, clo, chi);
+                if sync {
+                    p.push(Instr::Fence);
+                }
+            }
+            if sync {
+                p.push(Instr::Barrier);
+            }
+            // phase 3: T = blockdiag(D) * T2 (reuse T)
+            if blo < bhi {
+                emit_pass(p, &d, t2_base, t_base, blo, bhi);
+                if sync {
+                    p.push(Instr::Fence);
+                }
+            }
+            if sync {
+                p.push(Instr::Barrier);
+            }
+            // phase 4: out = T^t
+            if clo < chi {
+                emit_transpose(p, t_base, out_base, clo, chi);
                 p.push(Instr::Fence);
             }
-        }
-        if dual {
-            p.push(Instr::Barrier);
-        }
-        // phase 2: T2 = T^t
-        if active {
-            emit_transpose(p, t_base, t2_base, clo, chi);
-            if dual {
-                p.push(Instr::Fence);
-            }
-        }
-        if dual {
-            p.push(Instr::Barrier);
-        }
-        // phase 3: T = blockdiag(D) * T2 (reuse T)
-        if active {
-            emit_pass(p, &d, t2_base, t_base, blo, bhi);
-            if dual {
-                p.push(Instr::Fence);
-            }
-        }
-        if dual {
-            p.push(Instr::Barrier);
-        }
-        // phase 4: out = T^t
-        if active {
-            emit_transpose(p, t_base, out_base, clo, chi);
-            p.push(Instr::Fence);
         }
         p.push(Instr::Halt);
     }
@@ -160,7 +169,7 @@ pub fn build(cfg: &ClusterConfig, deploy: Deployment, seed: u64) -> KernelInstan
     KernelInstance {
         id: KernelId::Fdct,
         deploy,
-        programs: programs.map(std::sync::Arc::new),
+        programs: programs.into_iter().map(std::sync::Arc::new).collect(),
         staging_f32: vec![(img_base, img.clone())],
         staging_u32: vec![],
         artifact_inputs: vec![img],

@@ -6,7 +6,9 @@
 //! cross-core reduction pattern merge mode eliminates (the MM reduction
 //! instead pays a small cross-unit merge inside the reconfig stage).
 
-use super::{gen_input, loop_overhead, max_vl, Alloc, Deployment, KernelId, KernelInstance};
+use super::{
+    active_cores, gen_input, loop_overhead, max_vl, Alloc, Deployment, KernelId, KernelInstance,
+};
 use crate::config::ClusterConfig;
 use crate::isa::{ElemWidth, Instr, Lmul, Program, ScalarOp, VReg, VectorOp};
 
@@ -20,31 +22,35 @@ pub fn build(cfg: &ClusterConfig, deploy: Deployment, seed: u64) -> KernelInstan
     let x = gen_input(seed, 0x41, N, -1.0, 1.0);
     let y = gen_input(seed, 0x42, N, -1.0, 1.0);
 
+    let active = active_cores(cfg, deploy);
+    let nact = active.len();
+    // partials are combined by the first active core after a barrier
+    // whenever more than one core reduces (split-dual, or merge with
+    // several pair leaders)
+    let sync = nact >= 2;
+
     let mut alloc = Alloc::new(cfg);
     let x_base = alloc.words(N);
     let y_base = alloc.words(N);
-    let partial_base = alloc.words(2); // per-core partial sums
+    let partial_base = alloc.words(nact.max(2)); // per-core partial sums
     let out_base = alloc.words(1);
 
     let vl = max_vl(cfg, deploy);
-    let dual = deploy == Deployment::SplitDual;
-    // round-robin strip assignment (see faxpy): keeps the two LSUs a
-    // full strip apart in bank phase
+    // round-robin strip assignment (see faxpy): keeps neighbouring LSUs
+    // a full strip apart in bank phase
     let nstrips = N / vl as usize;
-    let strips: [Vec<usize>; 2] = if dual {
-        [
-            (0..nstrips).step_by(2).collect(),
-            (1..nstrips).step_by(2).collect(),
-        ]
-    } else {
-        [(0..nstrips).collect(), Vec::new()]
-    };
+    let mut strips: Vec<Vec<usize>> = vec![Vec::new(); cfg.cores];
+    let mut ranks: Vec<Option<usize>> = vec![None; cfg.cores];
+    for (rank, &core) in active.iter().enumerate() {
+        strips[core] = (rank..nstrips).step_by(nact).collect();
+        ranks[core] = Some(rank);
+    }
 
-    let mut programs: [Program; 2] = [
-        Program::new(&format!("fdotp-{}-c0", deploy.name())),
-        Program::new(&format!("fdotp-{}-c1", deploy.name())),
-    ];
+    let mut programs: Vec<Program> = (0..cfg.cores)
+        .map(|c| Program::new(&format!("fdotp-{}-c{c}", deploy.name())))
+        .collect();
     for (core, mine) in strips.iter().enumerate() {
+        let rank = ranks[core];
         let p = &mut programs[core];
         if !mine.is_empty() {
             p.scalar(ScalarOp::Alu);
@@ -66,23 +72,28 @@ pub fn build(cfg: &ClusterConfig, deploy: Deployment, seed: u64) -> KernelInstan
                 p.vector(VectorOp::MacVV { vd: VReg(8), vs1: VReg(16), vs2: VReg(24) });
                 loop_overhead(p, si + 1 < mine.len());
             }
-            // reduce accumulator, store partial
+            // reduce accumulator, store partial at this core's rank slot
             p.vector(VectorOp::RedSum { vd: VReg(0), vs: VReg(8) });
             p.vector(VectorOp::SetVl { avl: 1, ew: ElemWidth::E32, lmul: Lmul::M1 });
             p.vector(VectorOp::Store {
                 vs: VReg(0),
-                base: partial_base + (core * 4) as u32,
+                base: partial_base + (rank.unwrap() * 4) as u32,
                 stride: 1,
             });
             p.push(Instr::Fence);
         }
-        if dual {
+        if sync && rank.is_some() {
             p.push(Instr::Barrier);
         }
-        if core == 0 {
-            // combine partials (core 1's partial is zero outside dual)
-            if dual {
-                p.vector(VectorOp::SetVl { avl: 2, ew: ElemWidth::E32, lmul: Lmul::M1 });
+        if rank == Some(0) {
+            // combine partials (unwritten slots are zero when a rank
+            // received no strips)
+            if sync {
+                p.vector(VectorOp::SetVl {
+                    avl: nact as u32,
+                    ew: ElemWidth::E32,
+                    lmul: Lmul::M1,
+                });
                 p.vector(VectorOp::Load { vd: VReg(1), base: partial_base, stride: 1 });
                 p.vector(VectorOp::RedSum { vd: VReg(2), vs: VReg(1) });
                 p.vector(VectorOp::SetVl { avl: 1, ew: ElemWidth::E32, lmul: Lmul::M1 });
@@ -100,7 +111,7 @@ pub fn build(cfg: &ClusterConfig, deploy: Deployment, seed: u64) -> KernelInstan
     KernelInstance {
         id: KernelId::Fdotp,
         deploy,
-        programs: programs.map(std::sync::Arc::new),
+        programs: programs.into_iter().map(std::sync::Arc::new).collect(),
         staging_f32: vec![(x_base, x.clone()), (y_base, y.clone())],
         staging_u32: vec![],
         artifact_inputs: vec![x, y],

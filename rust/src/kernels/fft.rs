@@ -6,14 +6,17 @@
 //! * log2(N) = 8 butterfly stages; stage tables (a/b element offsets and
 //!   twiddle factors per butterfly) are precomputed and staged into the
 //!   TCDM, so each stage is gathers + vector arithmetic + scatters;
-//! * **split-dual**: each core processes half the butterflies of every
-//!   stage; because consecutive stages exchange data between the halves,
-//!   a `fence + barrier` separates stages — 9 cluster barriers total.
-//! * **merge**: a single instruction stream at doubled vl processes each
-//!   stage whole; no barriers at all. The removed synchronization is the
-//!   mechanism behind the paper's MM-fft speedup.
+//! * **split-dual**: each active core processes an even share of every
+//!   stage's butterflies; because consecutive stages exchange data
+//!   between the shares, a `fence + barrier` separates stages — 9
+//!   barrier episodes total (one arrival per active core each).
+//! * **merge**: each pair leader's instruction stream runs at doubled
+//!   vl; on the dual-core machine the single leader processes stages
+//!   whole with no barriers at all — the removed synchronization is the
+//!   mechanism behind the paper's MM-fft speedup. Multi-leader merge
+//!   shapes synchronize stages like split-dual does.
 
-use super::{loop_overhead, Alloc, Deployment, KernelId, KernelInstance};
+use super::{active_cores, chunk, loop_overhead, Alloc, Deployment, KernelId, KernelInstance};
 use crate::config::ClusterConfig;
 use crate::isa::{ElemWidth, Instr, Lmul, Program, ScalarOp, VReg, VectorOp};
 use crate::util::SplitMix64;
@@ -84,18 +87,12 @@ pub fn build(cfg: &ClusterConfig, deploy: Deployment, seed: u64) -> KernelInstan
         staging_f32.push((wim, wim_t));
     }
 
-    let dual = deploy == Deployment::SplitDual;
-    // butterfly range per core per stage, and bitrev element ranges
-    let bf_ranges: [(usize, usize); 2] = if dual {
-        [(0, NBF / 2), (NBF / 2, NBF)]
-    } else {
-        [(0, NBF), (0, 0)]
-    };
-    let el_ranges: [(usize, usize); 2] = if dual {
-        [(0, N / 2), (N / 2, N)]
-    } else {
-        [(0, N), (0, 0)]
-    };
+    let active = active_cores(cfg, deploy);
+    let nact = active.len();
+    // Stages exchange data across the whole array, so any shape with
+    // more than one active core (split-dual, or merge with several pair
+    // leaders) needs the per-stage fence + barrier.
+    let sync = nact >= 2;
     // vl per strip: split-single must strip stages in two (64-cap at m4)
     let m4_cap = match deploy {
         Deployment::Merge => 2 * cfg.vlmax(32, 4),
@@ -106,15 +103,15 @@ pub fn build(cfg: &ClusterConfig, deploy: Deployment, seed: u64) -> KernelInstan
         _ => cfg.vlmax(32, 8),
     } as u32;
 
-    let mut programs: [Program; 2] = [
-        Program::new(&format!("fft-{}-c0", deploy.name())),
-        Program::new(&format!("fft-{}-c1", deploy.name())),
-    ];
+    let mut programs: Vec<Program> = (0..cfg.cores)
+        .map(|c| Program::new(&format!("fft-{}-c{c}", deploy.name())))
+        .collect();
 
-    for core in 0..2 {
+    for (rank, &core) in active.iter().enumerate() {
         let p = &mut programs[core];
-        let (elo, ehi) = el_ranges[core];
-        let (blo, bhi) = bf_ranges[core];
+        // butterfly range per stage, and bitrev element range
+        let (elo, ehi) = chunk(N, rank, nact);
+        let (blo, bhi) = chunk(NBF, rank, nact);
 
         // ---- bit-reversal permutation: w <- x[brv] (LMUL=8 strips) ----
         if elo < ehi {
@@ -143,11 +140,11 @@ pub fn build(cfg: &ClusterConfig, deploy: Deployment, seed: u64) -> KernelInstan
                 loop_overhead(p, off + (step as usize) < ehi);
                 off += step as usize;
             }
-            if dual {
+            if sync {
                 p.push(Instr::Fence);
             }
         }
-        if dual {
+        if sync {
             p.push(Instr::Barrier);
         }
 
@@ -191,31 +188,34 @@ pub fn build(cfg: &ClusterConfig, deploy: Deployment, seed: u64) -> KernelInstan
                     off += step as usize;
                 }
                 // Cross-core data exchange needs a software drain +
-                // barrier per stage (split-dual only). Within one hart
-                // the in-order LSUs (and, in MM, the retire-merge stage)
-                // preserve memory order without draining the pipeline —
-                // this is precisely the synchronization overhead the
-                // paper's merge mode removes.
-                if dual {
+                // barrier per stage (multi-active shapes only). Within
+                // one hart the in-order LSUs (and, in MM, the
+                // retire-merge stage) preserve memory order without
+                // draining the pipeline — this is precisely the
+                // synchronization overhead the paper's dual-core merge
+                // mode removes.
+                if sync {
                     p.push(Instr::Fence);
                 }
             }
-            if dual && s + 1 < STAGES {
+            if sync && s + 1 < STAGES {
                 p.push(Instr::Barrier);
             }
         }
-        if dual {
+        if sync {
             p.push(Instr::Barrier); // final stage completion
         } else if blo < bhi {
             p.push(Instr::Fence);
         }
+    }
+    for p in &mut programs {
         p.push(Instr::Halt);
     }
 
     KernelInstance {
         id: KernelId::Fft,
         deploy,
-        programs: programs.map(std::sync::Arc::new),
+        programs: programs.into_iter().map(std::sync::Arc::new).collect(),
         staging_f32,
         staging_u32,
         artifact_inputs: vec![re, im],

@@ -10,7 +10,9 @@
 //! * split-single: all rows on core 0.
 //! * merge: one stream, each vl=128 op splits 64/64 across the units.
 
-use super::{gen_input, loop_overhead, Alloc, Deployment, KernelId, KernelInstance};
+use super::{
+    active_cores, chunk, gen_input, loop_overhead, Alloc, Deployment, KernelId, KernelInstance,
+};
 use crate::config::ClusterConfig;
 use crate::isa::{ElemWidth, Instr, Lmul, Program, ScalarOp, VReg, VectorOp};
 
@@ -31,28 +33,30 @@ pub fn build(cfg: &ClusterConfig, deploy: Deployment, seed: u64) -> KernelInstan
     let b_base = alloc.words(K * N);
     let c_base = alloc.words(M * N);
 
-    // row-pair ranges per core
+    // row-pair ranges per active core
     let pairs = M / 2;
-    let ranges: [(usize, usize); 2] = match deploy {
-        Deployment::SplitDual => [(0, pairs / 2), (pairs / 2, pairs)],
-        _ => [(0, pairs), (0, 0)],
-    };
+    let active = active_cores(cfg, deploy);
+    let nact = active.len();
+    let mut ranges: Vec<(usize, usize, usize)> = vec![(0, 0, 0); cfg.cores];
+    for (rank, &core) in active.iter().enumerate() {
+        let (lo, hi) = chunk(pairs, rank, nact);
+        ranges[core] = (lo, hi, rank);
+    }
 
-    let mut programs: [Program; 2] = [
-        Program::new(&format!("fmatmul-{}-c0", deploy.name())),
-        Program::new(&format!("fmatmul-{}-c1", deploy.name())),
-    ];
-    for (core, &(lo, hi)) in ranges.iter().enumerate() {
+    let mut programs: Vec<Program> = (0..cfg.cores)
+        .map(|c| Program::new(&format!("fmatmul-{}-c{c}", deploy.name())))
+        .collect();
+    for (core, &(lo, hi, rank)) in ranges.iter().enumerate() {
         let p = &mut programs[core];
         if lo < hi {
             // prologue: pointer setup
             p.scalar(ScalarOp::Alu);
             p.scalar(ScalarOp::Alu);
             p.vector(VectorOp::SetVl { avl: N as u32, ew: ElemWidth::E32, lmul: Lmul::M8 });
-            // Cores start the k loop half-way apart: kernels written for
-            // multi-core Spatz stagger shared-operand streams so the two
-            // LSUs do not fetch the very same B row in lockstep.
-            let k0 = core * K / 2;
+            // Active cores start the k loop evenly staggered: kernels
+            // written for multi-core Spatz offset shared-operand streams
+            // so the LSUs do not fetch the very same B row in lockstep.
+            let k0 = rank * K / nact;
             for pr in lo..hi {
                 let i = pr * 2;
                 p.vector(VectorOp::MovVF { vd: VReg(8), f: 0.0 });
@@ -88,7 +92,7 @@ pub fn build(cfg: &ClusterConfig, deploy: Deployment, seed: u64) -> KernelInstan
     KernelInstance {
         id: KernelId::Fmatmul,
         deploy,
-        programs: programs.map(std::sync::Arc::new),
+        programs: programs.into_iter().map(std::sync::Arc::new).collect(),
         staging_f32: vec![(a_base, a.clone()), (b_base, b.clone())],
         staging_u32: vec![],
         artifact_inputs: vec![a, b],

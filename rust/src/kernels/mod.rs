@@ -9,14 +9,18 @@
 //! compiled RVV binary's scalar loop would feed the accelerator port —
 //! including the scalar loop-overhead instructions.
 //!
-//! Deployments:
-//! * [`Deployment::SplitDual`] — split mode, problem divided across both
-//!   cores (cluster barriers where phases share data). This is also the
-//!   baseline cluster's only deployment.
+//! Deployments (generalized over the N-core topology — see
+//! [`active_cores`] for exactly which cores carry kernel work):
+//! * [`Deployment::SplitDual`] — split mode, problem divided across all
+//!   `cluster.cores` cores (cluster barriers where phases share data).
+//!   This is also the baseline cluster's only deployment.
 //! * [`Deployment::SplitSingle`] — split mode on core 0 only (the shape
-//!   used in mixed workloads, where core 1 runs the scalar task).
-//! * [`Deployment::Merge`] — merge mode: one instruction stream on
-//!   core 0 drives both units at doubled VLMAX, no barriers.
+//!   used in mixed workloads, where the last core runs the scalar task).
+//! * [`Deployment::Merge`] — merge mode: one instruction stream per pair
+//!   leader (even core with an odd neighbour) drives both units of its
+//!   pair at doubled VLMAX. A single leader (the dual-core machine) runs
+//!   barrier-free; multiple leaders synchronize data-exchange phases
+//!   with cluster barriers like split-dual does.
 
 pub mod conv2d;
 pub mod faxpy;
@@ -146,7 +150,9 @@ impl Deployment {
 pub struct KernelInstance {
     pub id: KernelId,
     pub deploy: Deployment,
-    pub programs: [Arc<Program>; 2],
+    /// One program per core (`cluster.cores` entries; inactive cores get
+    /// a trivial halt-only program).
+    pub programs: Vec<Arc<Program>>,
     /// f32 arrays to stage into TCDM before the run.
     pub staging_f32: Vec<(u32, Vec<f32>)>,
     /// u32 arrays (index tables) to stage.
@@ -232,6 +238,27 @@ impl Alloc {
     }
 }
 
+/// The cores that carry kernel work under a deployment on an N-core
+/// cluster, in rank order:
+/// * split-dual — every core;
+/// * split-single — core 0 only;
+/// * merge — the pair leaders (even cores with an odd neighbour; an
+///   unpaired trailing core never leads and stays scalar-only).
+pub(crate) fn active_cores(cfg: &ClusterConfig, deploy: Deployment) -> Vec<usize> {
+    match deploy {
+        Deployment::SplitDual => (0..cfg.cores).collect(),
+        Deployment::SplitSingle => vec![0],
+        Deployment::Merge => (0..cfg.cores.saturating_sub(1)).step_by(2).collect(),
+    }
+}
+
+/// Contiguous `[lo, hi)` share of `total` items for active-core `rank`
+/// of `n` (the standard balanced split; at `n = 2` this is the historic
+/// half/half partition).
+pub(crate) fn chunk(total: usize, rank: usize, n: usize) -> (usize, usize) {
+    (rank * total / n, (rank + 1) * total / n)
+}
+
 /// Hart-level max vl for E32/LMUL=8 under a deployment.
 pub(crate) fn max_vl(cfg: &ClusterConfig, deploy: Deployment) -> u32 {
     let base = cfg.vlmax(32, 8) as u32;
@@ -259,8 +286,8 @@ pub(crate) fn loop_overhead(p: &mut Program, taken: bool) {
 /// Stage, run and read back a kernel instance on a fresh-state cluster
 /// (fresh-built or [`crate::cluster::Cluster::reset`] in place), running
 /// the instance's own programs. See [`execute_with_programs`] when core
-/// programs are overridden (mixed jobs swap a scalar co-task onto
-/// core 1).
+/// programs are overridden (mixed jobs swap a scalar co-task onto the
+/// last core).
 pub fn execute(
     cluster: &mut crate::cluster::Cluster,
     inst: &KernelInstance,
@@ -275,7 +302,7 @@ pub fn execute(
 pub fn execute_with_programs(
     cluster: &mut crate::cluster::Cluster,
     inst: &KernelInstance,
-    programs: [Arc<Program>; 2],
+    programs: Vec<Arc<Program>>,
 ) -> anyhow::Result<(crate::metrics::RunMetrics, Vec<Vec<f32>>)> {
     stage_and_run(cluster, inst, stage_arrays, |cl| cl.load_programs(programs))
 }
@@ -290,8 +317,8 @@ pub fn execute_with_programs(
 pub(crate) fn execute_prevalidated(
     cluster: &mut crate::cluster::Cluster,
     inst: &KernelInstance,
-    programs: [Arc<Program>; 2],
-    barrier_mask: u8,
+    programs: Vec<Arc<Program>>,
+    barrier_mask: u64,
     staging: &StagingImage,
 ) -> anyhow::Result<(crate::metrics::RunMetrics, Vec<Vec<f32>>)> {
     stage_and_run(
@@ -453,6 +480,70 @@ mod tests {
         }
     }
 
+    /// Cores carrying kernel work per deployment over the topology family.
+    #[test]
+    fn active_cores_follows_topology() {
+        let mut cfg = ClusterConfig::default();
+        for (cores, dual, single, merge) in [
+            (1, vec![0], vec![0], vec![]),
+            (2, vec![0, 1], vec![0], vec![0]),
+            (3, vec![0, 1, 2], vec![0], vec![0]),
+            (4, vec![0, 1, 2, 3], vec![0], vec![0, 2]),
+            (8, (0..8).collect(), vec![0], vec![0, 2, 4, 6]),
+        ] {
+            cfg.cores = cores;
+            assert_eq!(active_cores(&cfg, Deployment::SplitDual), dual);
+            assert_eq!(active_cores(&cfg, Deployment::SplitSingle), single);
+            assert_eq!(active_cores(&cfg, Deployment::Merge), merge);
+        }
+    }
+
+    /// Balanced contiguous partition: covers the whole range, in order,
+    /// and halves exactly at n = 2.
+    #[test]
+    fn chunk_partitions_exactly() {
+        for total in [8, 62, 64, 128] {
+            for n in [1, 2, 3, 4, 8] {
+                let mut next = 0;
+                for r in 0..n {
+                    let (lo, hi) = chunk(total, r, n);
+                    assert_eq!(lo, next);
+                    assert!(hi >= lo);
+                    next = hi;
+                }
+                assert_eq!(next, total);
+            }
+            assert_eq!(chunk(total, 0, 2), (0, total / 2));
+        }
+    }
+
+    /// Every kernel builds one program per core on wider-than-dual
+    /// topologies too, and all of them validate.
+    #[test]
+    fn kernels_build_per_core_programs_on_wide_clusters() {
+        let mut cfg = ClusterConfig::default();
+        for cores in [1, 3, 4, 8] {
+            cfg.cores = cores;
+            for k in KernelId::all() {
+                for d in [Deployment::SplitDual, Deployment::SplitSingle, Deployment::Merge] {
+                    let inst = k.build(&cfg, d, 7);
+                    assert_eq!(
+                        inst.programs.len(),
+                        cores,
+                        "{} {} at {cores} cores",
+                        k.name(),
+                        d.name()
+                    );
+                    for (c, prog) in inst.programs.iter().enumerate() {
+                        prog.validate(cfg.vregs).unwrap_or_else(|e| {
+                            panic!("{} {} core{c}/{cores}: {e}", k.name(), d.name())
+                        });
+                    }
+                }
+            }
+        }
+    }
+
     /// Every kernel × deployment builds, validates, and its program uses
     /// barriers only where phases require them.
     #[test]
@@ -461,16 +552,19 @@ mod tests {
         for k in KernelId::all() {
             for d in [Deployment::SplitDual, Deployment::SplitSingle, Deployment::Merge] {
                 let inst = k.build(&cfg, d, 42);
-                inst.programs[0].validate(cfg.vregs).unwrap_or_else(|e| {
-                    panic!("{} {} core0: {e}", k.name(), d.name())
-                });
-                inst.programs[1].validate(cfg.vregs).unwrap_or_else(|e| {
-                    panic!("{} {} core1: {e}", k.name(), d.name())
-                });
+                assert_eq!(inst.programs.len(), cfg.cores);
+                for (c, prog) in inst.programs.iter().enumerate() {
+                    prog.validate(cfg.vregs).unwrap_or_else(|e| {
+                        panic!("{} {} core{c}: {e}", k.name(), d.name())
+                    });
+                }
                 assert!(inst.flops > 0, "{}", k.name());
                 assert!(!inst.outputs.is_empty(), "{}", k.name());
                 if d != Deployment::SplitDual {
-                    // only split-dual may use cluster barriers
+                    // with a single active core (split-single) or a
+                    // single pair leader (merge on the dual-core
+                    // default), no cross-core phases exist — barriers
+                    // would be pure overhead
                     for prog in &inst.programs {
                         assert!(
                             !prog.instrs.iter().any(|i| matches!(i, crate::isa::Instr::Barrier)),

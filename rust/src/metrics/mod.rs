@@ -47,11 +47,22 @@ pub struct Counters {
     pub fence_wait_cycles: u64,
     pub mode_switches: u64,
     // ---- per-block busy cycles (leakage/clock-gating model) ----
-    pub cycles_core_busy: [u64; 2],
-    pub cycles_unit_busy: [u64; 2],
+    // One slot per core / vector unit; sized by the cluster topology
+    // ([`Counters::for_cores`]). `Default` leaves them empty.
+    pub cycles_core_busy: Vec<u64>,
+    pub cycles_unit_busy: Vec<u64>,
 }
 
 impl Counters {
+    /// Zeroed counters with per-core slots for an N-core cluster.
+    pub fn for_cores(cores: usize) -> Self {
+        Self {
+            cycles_core_busy: vec![0; cores],
+            cycles_unit_busy: vec![0; cores],
+            ..Self::default()
+        }
+    }
+
     pub fn add(&mut self, other: &Counters) {
         self.scalar_ifetch += other.scalar_ifetch;
         self.scalar_alu += other.scalar_alu;
@@ -76,10 +87,8 @@ impl Counters {
         self.barrier_wait_cycles += other.barrier_wait_cycles;
         self.fence_wait_cycles += other.fence_wait_cycles;
         self.mode_switches += other.mode_switches;
-        for i in 0..2 {
-            self.cycles_core_busy[i] += other.cycles_core_busy[i];
-            self.cycles_unit_busy[i] += other.cycles_unit_busy[i];
-        }
+        add_per_core(&mut self.cycles_core_busy, &other.cycles_core_busy);
+        add_per_core(&mut self.cycles_unit_busy, &other.cycles_unit_busy);
     }
 
     /// Total scalar instructions executed.
@@ -100,6 +109,17 @@ impl Counters {
             + self.vec_elem_move
             + self.vec_elem_red
             + self.vec_elem_mem
+    }
+}
+
+/// Accumulate per-core slots, widening `dst` when `src` came from a
+/// wider topology (fleet summaries mix shapes).
+fn add_per_core(dst: &mut Vec<u64>, src: &[u64]) {
+    if dst.len() < src.len() {
+        dst.resize(src.len(), 0);
+    }
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d += s;
     }
 }
 
@@ -272,11 +292,11 @@ mod tests {
 
     #[test]
     fn counters_add() {
-        let mut a = Counters::default();
+        let mut a = Counters::for_cores(2);
         a.scalar_alu = 5;
         a.vec_elem_mac = 10;
         a.cycles_unit_busy[1] = 3;
-        let mut b = Counters::default();
+        let mut b = Counters::for_cores(2);
         b.scalar_alu = 2;
         b.vec_elem_mac = 1;
         b.cycles_unit_busy[1] = 4;
@@ -284,6 +304,20 @@ mod tests {
         assert_eq!(a.scalar_alu, 7);
         assert_eq!(a.vec_elem_mac, 11);
         assert_eq!(a.cycles_unit_busy[1], 7);
+    }
+
+    #[test]
+    fn counters_add_widens_across_topologies() {
+        let mut a = Counters::for_cores(1);
+        a.cycles_core_busy[0] = 2;
+        let mut b = Counters::for_cores(4);
+        b.cycles_core_busy[3] = 9;
+        a.add(&b);
+        assert_eq!(a.cycles_core_busy, vec![2, 0, 0, 9]);
+        // empty default absorbs any shape
+        let mut c = Counters::default();
+        c.add(&a);
+        assert_eq!(c.cycles_core_busy, a.cycles_core_busy);
     }
 
     #[test]

@@ -91,10 +91,15 @@ pub fn breakdown(m: &RunMetrics, cfg: &SimConfig, arch: ArchKind) -> EnergyBreak
         let busy = busy as f64;
         busy * pj + (total - busy) * pj * idle
     };
-    e.static_clock = gated(c.cycles_core_busy[0], p.pj_cycle_scalar_core)
-        + gated(c.cycles_core_busy[1], p.pj_cycle_scalar_core)
-        + gated(c.cycles_unit_busy[0], p.pj_cycle_vec_unit)
-        + gated(c.cycles_unit_busy[1], p.pj_cycle_vec_unit)
+    e.static_clock = c
+        .cycles_core_busy
+        .iter()
+        .map(|&b| gated(b, p.pj_cycle_scalar_core))
+        .sum::<f64>()
+        + c.cycles_unit_busy
+            .iter()
+            .map(|&b| gated(b, p.pj_cycle_vec_unit))
+            .sum::<f64>()
         + total * (p.pj_cycle_tcdm + p.pj_cycle_icache + p.pj_cycle_interconnect);
 
     // the price of reconfigurability: the added broadcast/retire-merge
@@ -141,8 +146,8 @@ mod tests {
             vec_elem_mem: 1000,
             vrf_read: 6000,
             vrf_write: 3000,
-            cycles_core_busy: [cycles, cycles / 2],
-            cycles_unit_busy: [cycles / 2, cycles / 2],
+            cycles_core_busy: vec![cycles, cycles / 2],
+            cycles_unit_busy: vec![cycles / 2, cycles / 2],
             ..Default::default()
         };
         m.tcdm.accesses = 1000;
@@ -204,9 +209,9 @@ mod tests {
     fn idle_blocks_cost_less_than_busy() {
         let cfg = SimConfig::default();
         let mut busy = metrics(1000);
-        busy.counters.cycles_unit_busy = [1000, 1000];
+        busy.counters.cycles_unit_busy = vec![1000, 1000];
         let mut idle = metrics(1000);
-        idle.counters.cycles_unit_busy = [0, 0];
+        idle.counters.cycles_unit_busy = vec![0, 0];
         let eb = breakdown(&busy, &cfg, ArchKind::Baseline).static_clock;
         let ei = breakdown(&idle, &cfg, ArchKind::Baseline).static_clock;
         assert!(eb > ei);

@@ -1,19 +1,23 @@
 //! The Spatzformer reconfiguration stage — the paper's architectural
 //! contribution (§II).
 //!
-//! Sits between the scalar cores' accelerator ports and the two vector
-//! units:
+//! Sits between the scalar cores' accelerator ports and the cluster's
+//! vector units (one per core):
 //!
 //! * **Split mode**: core *i*'s offloads route straight to unit *i*
 //!   (combinational bypass — zero added latency, matching the paper's
 //!   "no fmax degradation / baseline-identical SM timing").
-//! * **Merge mode**: core 0's offloads are *broadcast* to both units.
-//!   The hart-level vl is split `[0, vl0)` / `[vl0, vl)` between units
-//!   (vl0 = per-unit VLMAX), giving the single hart a doubled VLMAX.
-//!   Dispatches cross one pipeline stage (`broadcast_latency`) and
-//!   retires are *merged*: an instruction retires at the hart level when
-//!   both halves have completed. Reductions pay an extra cross-unit
-//!   merge (`mm_reduction_merge_latency`).
+//! * **Merge mode**: adjacent cores pair up. Each even core *c* with a
+//!   neighbour (*c*+1 < cores) is a *leader* whose offloads are
+//!   *broadcast* to units *c* and *c*+1; the odd core of the pair is
+//!   freed for scalar work, and an unpaired trailing core stays
+//!   scalar-only. The hart-level vl is split between the pair's units,
+//!   giving the leader a doubled VLMAX. Dispatches cross one pipeline
+//!   stage (`broadcast_latency`) and retires are *merged*: an
+//!   instruction retires at the hart level when both halves have
+//!   completed. Reductions pay an extra cross-unit merge
+//!   (`mm_reduction_merge_latency`). With two cores this is exactly the
+//!   paper's merge mode (leader 0 drives both units).
 //!
 //! This module also owns the hart-level vector CSR state (vl/LMUL set by
 //! `vsetvli`) and performs the *functional* execution of every vector
@@ -54,10 +58,12 @@ impl Default for VState {
 pub struct ReconfigStage {
     arch: ArchKind,
     mode: Mode,
-    vstate: [VState; 2],
+    /// Cores in the owning cluster (one vector unit each).
+    cores: usize,
+    vstate: Vec<VState>,
     /// Outstanding (dispatched, not yet retired) instructions per hart —
     /// drives fences and mode-switch drains.
-    outstanding: [u64; 2],
+    outstanding: Vec<u64>,
     seq_counter: u64,
     /// MM broadcasts awaiting both halves: (seq, halves remaining).
     pending_merge: Vec<(u64, u8)>,
@@ -78,8 +84,9 @@ impl ReconfigStage {
         Self {
             arch: cfg.arch,
             mode: Mode::Split,
-            vstate: [VState::default(); 2],
-            outstanding: [0; 2],
+            cores: cfg.cores,
+            vstate: vec![VState::default(); cfg.cores],
+            outstanding: vec![0; cfg.cores],
             seq_counter: 0,
             pending_merge: Vec::new(),
             vlmax_unit_e32: cfg.elems_per_vreg(32),
@@ -108,16 +115,24 @@ impl ReconfigStage {
     /// baseline cluster *to* split mode is always legal.
     pub fn reset(&mut self) {
         self.mode = Mode::Split;
-        self.vstate = [VState::default(); 2];
-        self.outstanding = [0; 2];
+        self.vstate = vec![VState::default(); self.cores];
+        self.outstanding = vec![0; self.cores];
         self.seq_counter = 0;
         self.pending_merge.clear();
     }
 
+    /// Is `hart` a merge-mode pair leader right now? Leaders are the
+    /// even-indexed cores with an adjacent odd neighbour; they drive
+    /// units `hart` and `hart + 1`. Everything else (the odd cores, and
+    /// an unpaired trailing core) stays scalar-only in merge mode.
+    pub fn is_merge_leader(&self, hart: usize) -> bool {
+        self.mode == Mode::Merge && hart % 2 == 0 && hart + 1 < self.cores
+    }
+
     /// Effective VLMAX for `hart` at E32 with the given LMUL under the
-    /// current mode (merge mode doubles it for hart 0).
+    /// current mode (merge mode doubles it for pair leaders).
     pub fn vlmax(&self, hart: usize, lmul: Lmul) -> u32 {
-        let units = if self.mode == Mode::Merge && hart == 0 { 2 } else { 1 };
+        let units = if self.is_merge_leader(hart) { 2 } else { 1 };
         (self.vlmax_unit_e32 * lmul.factor() * units) as u32
     }
 
@@ -168,7 +183,7 @@ impl ReconfigStage {
         &self,
         hart: usize,
         op: VectorOp,
-        units: &[SpatzUnit; 2],
+        units: &[SpatzUnit],
     ) -> bool {
         if matches!(op, VectorOp::SetVl { .. }) {
             return false; // executes in the stage itself
@@ -177,9 +192,10 @@ impl ReconfigStage {
         if vl == 0 {
             return false; // architectural no-op
         }
-        if self.mode == Mode::Merge {
+        if self.is_merge_leader(hart) {
             let vl1 = vl - self.split_count(vl, 0);
-            !units[0].queue_has_space() || (vl1 > 0 && !units[1].queue_has_space())
+            !units[hart].queue_has_space()
+                || (vl1 > 0 && !units[hart + 1].queue_has_space())
         } else {
             !units[hart].queue_has_space()
         }
@@ -192,16 +208,16 @@ impl ReconfigStage {
         &mut self,
         hart: usize,
         op: VectorOp,
-        units: &mut [SpatzUnit; 2],
+        units: &mut [SpatzUnit],
         tcdm: &mut Tcdm,
         counters: &mut Counters,
         now: u64,
     ) -> DispatchResult {
         let merged = self.mode == Mode::Merge;
         if merged {
-            assert_eq!(
-                hart, 0,
-                "merge mode: only core 0 may issue vector instructions"
+            assert!(
+                self.is_merge_leader(hart),
+                "merge mode: only pair leaders (even cores with a neighbour) may issue vector instructions (hart {hart})"
             );
         }
 
@@ -225,10 +241,11 @@ impl ReconfigStage {
         }
 
         // Work split across units. Merge mode stripes the hart-level vl
-        // across both units at lane-group granularity (element i goes to
-        // unit (i/lanes) mod 2): the wide engine's natural interleaving,
-        // which keeps the two LSUs on complementary banks for strided
-        // streams and engages both units even when vl <= per-unit VLMAX.
+        // across the leader pair's two units at lane-group granularity
+        // (element i goes to unit hart + (i/lanes) mod 2): the wide
+        // engine's natural interleaving, which keeps the two LSUs on
+        // complementary banks for strided streams and engages both units
+        // even when vl <= per-unit VLMAX.
         let (vl0, vl1) = if merged {
             let v0 = self.split_count(vl, 0);
             (v0, vl - v0)
@@ -237,9 +254,9 @@ impl ReconfigStage {
         };
         let targets: &[(usize, u32)] = &if merged {
             if vl1 > 0 {
-                vec![(0usize, vl0), (1usize, vl1)]
+                vec![(hart, vl0), (hart + 1, vl1)]
             } else {
-                vec![(0, vl0)]
+                vec![(hart, vl0)]
             }
         } else {
             vec![(hart, vl)]
@@ -280,7 +297,7 @@ impl ReconfigStage {
         }
         let is_reduction = op.class() == VecOpClass::Reduction;
         for &(unit_id, uvl) in targets {
-            let addrs = self.element_addrs(&op, unit_id, vl, uvl, merged, &units[unit_id]);
+            let addrs = self.element_addrs(&op, hart, unit_id, vl, uvl, merged, &units[unit_id]);
             let entry = OffloadEntry {
                 op,
                 vl: uvl,
@@ -302,13 +319,14 @@ impl ReconfigStage {
 
     /// Map a hart-level element index to (unit, local element) under the
     /// current split (split mode: everything on `hart`'s unit; merge
-    /// mode: lane-group striping).
+    /// mode: lane-group striping across the leader pair's units).
     #[inline]
     fn locate(&self, hart: usize, merged: bool, e: u32) -> (usize, usize) {
         locate_elem(self.lanes as u32, hart, merged, e)
     }
 
-    /// Number of the hart-level vl's elements owned by `unit` in MM.
+    /// Number of the hart-level vl's elements owned by the pair's
+    /// `unit`-th unit (0 = the leader's own, 1 = the neighbour's) in MM.
     fn split_count(&self, vl: u32, unit: usize) -> u32 {
         let lanes = self.lanes as u32;
         let full_groups = vl / lanes;
@@ -326,9 +344,11 @@ impl ReconfigStage {
 
     /// TCDM addresses touched by this unit's share of a memory op (used
     /// for bank-conflict timing), in local element order.
+    #[allow(clippy::too_many_arguments)]
     fn element_addrs(
         &self,
         op: &VectorOp,
+        hart: usize,
         unit_id: usize,
         vl: u32,
         uvl: u32,
@@ -339,7 +359,7 @@ impl ReconfigStage {
         match *op {
             VectorOp::Load { base, stride, .. } | VectorOp::Store { vs: _, base, stride } => {
                 for e in 0..vl {
-                    let (u, _) = self.locate(0, merged, e);
+                    let (u, _) = self.locate(hart, merged, e);
                     if merged && u != unit_id {
                         continue;
                     }
@@ -363,15 +383,16 @@ impl ReconfigStage {
 
     /// Functional execution against the VRFs and the TCDM; in split mode
     /// all elements live on `units[hart]`, in merge mode they are striped
-    /// per [`Self::locate`]. Operands are staged through stack buffers so
-    /// the elementwise math runs over plain slices (hot path: this is
-    /// where the simulated cluster's real data flows).
+    /// across the leader pair's units per [`Self::locate`]. Operands are
+    /// staged through stack buffers so the elementwise math runs over
+    /// plain slices (hot path: this is where the simulated cluster's real
+    /// data flows).
     fn exec_functional(
         &mut self,
         op: &VectorOp,
         hart: usize,
         vl: u32,
-        units: &mut [SpatzUnit; 2],
+        units: &mut [SpatzUnit],
         tcdm: &mut Tcdm,
         merged: bool,
     ) {
@@ -382,7 +403,7 @@ impl ReconfigStage {
         let a = &mut *self.buf_a;
         let b = &mut *self.buf_b;
         let d = &mut *self.buf_d;
-        let g = |units: &[SpatzUnit; 2], reg, buf: &mut [u32; VLCAP]| {
+        let g = |units: &[SpatzUnit], reg, buf: &mut [u32; VLCAP]| {
             gather_vals(lanes, units, hart, merged, reg, n, buf)
         };
         macro_rules! ew {
@@ -499,10 +520,10 @@ impl ReconfigStage {
                     acc += f32::from_bits(w);
                 }
                 // result lands in element 0; in merge mode the merge
-                // network broadcasts it to both units' vd[0]
+                // network broadcasts it to both of the pair's units' vd[0]
                 if merged {
-                    units[0].vrf.write_f32(vd, 0, acc);
-                    units[1].vrf.write_f32(vd, 0, acc);
+                    units[hart].vrf.write_f32(vd, 0, acc);
+                    units[hart + 1].vrf.write_f32(vd, 0, acc);
                 } else {
                     units[hart].vrf.write_f32(vd, 0, acc);
                 }
@@ -512,15 +533,15 @@ impl ReconfigStage {
 }
 
 /// Element -> (unit, local element) mapping for merge-mode lane-group
-/// striping (free function: used on the functional hot path without
-/// borrowing the stage).
+/// striping across the leader pair `(hart, hart + 1)` (free function:
+/// used on the functional hot path without borrowing the stage).
 #[inline]
 fn locate_elem(lanes: u32, hart: usize, merged: bool, e: u32) -> (usize, usize) {
     if !merged {
         return (hart, e as usize);
     }
     let group = e / lanes;
-    let unit = (group & 1) as usize;
+    let unit = hart + (group & 1) as usize;
     let local = (group / 2) * lanes + e % lanes;
     (unit, local as usize)
 }
@@ -530,7 +551,7 @@ fn locate_elem(lanes: u32, hart: usize, merged: bool, e: u32) -> (usize, usize) 
 #[inline]
 fn gather_vals(
     lanes: u32,
-    units: &[SpatzUnit; 2],
+    units: &[SpatzUnit],
     hart: usize,
     merged: bool,
     reg: VReg,
@@ -551,7 +572,7 @@ fn gather_vals(
 #[inline]
 fn scatter_vals(
     lanes: u32,
-    units: &mut [SpatzUnit; 2],
+    units: &mut [SpatzUnit],
     hart: usize,
     merged: bool,
     reg: VReg,
@@ -583,7 +604,7 @@ mod tests {
         let units = [SpatzUnit::new(0, &cfg), SpatzUnit::new(1, &cfg)];
         let tcdm = Tcdm::new(&cfg);
         let stage = ReconfigStage::new(&cfg);
-        (units, tcdm, stage, Counters::default())
+        (units, tcdm, stage, Counters::for_cores(2))
     }
 
     fn setvl(
@@ -591,7 +612,7 @@ mod tests {
         hart: usize,
         avl: u32,
         lmul: Lmul,
-        units: &mut [SpatzUnit; 2],
+        units: &mut [SpatzUnit],
         tcdm: &mut Tcdm,
         c: &mut Counters,
     ) {
@@ -876,12 +897,99 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "only core 0")]
+    #[should_panic(expected = "only pair leaders")]
     fn merge_mode_rejects_hart1_vector_ops() {
         let (mut units, mut tcdm, mut stage, mut c) = setup(ArchKind::Spatzformer);
         stage.set_mode(Mode::Merge);
         stage.try_dispatch(
             1,
+            VectorOp::MovVF { vd: VReg(0), f: 0.0 },
+            &mut units,
+            &mut tcdm,
+            &mut c,
+            0,
+        );
+    }
+
+    fn setup_n(arch: ArchKind, cores: usize) -> (Vec<SpatzUnit>, Tcdm, ReconfigStage, Counters) {
+        let mut cfg = ClusterConfig::default();
+        cfg.arch = arch;
+        cfg.cores = cores;
+        let units: Vec<SpatzUnit> = (0..cores).map(|i| SpatzUnit::new(i, &cfg)).collect();
+        let tcdm = Tcdm::new(&cfg);
+        let stage = ReconfigStage::new(&cfg);
+        (units, tcdm, stage, Counters::for_cores(cores))
+    }
+
+    #[test]
+    fn four_core_merge_pairs_adjacent_cores() {
+        let (mut units, mut tcdm, mut stage, mut c) = setup_n(ArchKind::Spatzformer, 4);
+        stage.set_mode(Mode::Merge);
+        // leaders are the even cores; odd cores and their vlmax stay single
+        assert!(stage.is_merge_leader(0) && stage.is_merge_leader(2));
+        assert!(!stage.is_merge_leader(1) && !stage.is_merge_leader(3));
+        assert_eq!(stage.vlmax(2, Lmul::M8), 256);
+        assert_eq!(stage.vlmax(3, Lmul::M8), 128);
+        // leader 2 broadcasts to its own pair only
+        setvl(&mut stage, 2, 256, Lmul::M8, &mut units, &mut tcdm, &mut c);
+        let r = stage.try_dispatch(
+            2,
+            VectorOp::MovVF { vd: VReg(0), f: 2.5 },
+            &mut units,
+            &mut tcdm,
+            &mut c,
+            0,
+        );
+        assert_eq!(r, DispatchResult::Accepted);
+        assert!(units[0].is_idle() && units[1].is_idle());
+        assert!(!units[2].is_idle() && !units[3].is_idle());
+        assert_eq!(units[2].vrf.read_f32(VReg(0), 0), 2.5);
+        assert_eq!(units[3].vrf.read_f32(VReg(0), 127), 2.5);
+    }
+
+    #[test]
+    fn four_core_merge_store_is_functionally_seamless() {
+        let (mut units, mut tcdm, mut stage, mut c) = setup_n(ArchKind::Spatzformer, 4);
+        stage.set_mode(Mode::Merge);
+        let data: Vec<f32> = (0..256).map(|i| (i as f32).cos()).collect();
+        tcdm.write_f32_slice(0x1000, &data);
+        setvl(&mut stage, 2, 256, Lmul::M8, &mut units, &mut tcdm, &mut c);
+        stage.try_dispatch(
+            2,
+            VectorOp::Load { vd: VReg(8), base: 0x1000, stride: 1 },
+            &mut units,
+            &mut tcdm,
+            &mut c,
+            0,
+        );
+        stage.try_dispatch(
+            2,
+            VectorOp::Store { vs: VReg(8), base: 0x2000, stride: 1 },
+            &mut units,
+            &mut tcdm,
+            &mut c,
+            0,
+        );
+        assert_eq!(tcdm.read_f32_slice(0x2000, 256), data);
+    }
+
+    #[test]
+    fn unpaired_trailing_core_is_not_a_merge_leader() {
+        let (_, _, mut stage, _) = setup_n(ArchKind::Spatzformer, 3);
+        stage.set_mode(Mode::Merge);
+        assert!(stage.is_merge_leader(0));
+        assert!(!stage.is_merge_leader(1), "odd core of the pair follows");
+        assert!(!stage.is_merge_leader(2), "unpaired trailing core stays scalar-only");
+        assert_eq!(stage.vlmax(2, Lmul::M8), 128);
+    }
+
+    #[test]
+    #[should_panic(expected = "only pair leaders")]
+    fn merge_mode_rejects_unpaired_core_vector_ops() {
+        let (mut units, mut tcdm, mut stage, mut c) = setup_n(ArchKind::Spatzformer, 3);
+        stage.set_mode(Mode::Merge);
+        stage.try_dispatch(
+            2,
             VectorOp::MovVF { vd: VReg(0), f: 0.0 },
             &mut units,
             &mut tcdm,

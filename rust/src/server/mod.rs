@@ -454,7 +454,11 @@ impl EventLoop {
                     let _ = tx.send(Done::Submit { conn: tok, id: done_id, trace, t0, result });
                 });
                 let span = self.ticket_span(trace, op);
-                match self.ctl.pool.submit_traced(FleetJob { job, seed }, done, span) {
+                match self
+                    .ctl
+                    .pool
+                    .submit_traced(FleetJob { seed, ..FleetJob::new(job) }, done, span)
+                {
                     Ok(()) => {
                         self.ctl.svc.event(svc::Stage::Admit, op, 0, trace);
                         conn.inflight += 1;

@@ -212,18 +212,17 @@ fn counters_to_json(c: &Counters) -> Json {
     ])
 }
 
-fn pair_u64(j: &Json, key: &str) -> anyhow::Result<[u64; 2]> {
+fn per_core_u64(j: &Json, key: &str) -> anyhow::Result<Vec<u64>> {
     let arr = need(j, key)?
         .as_arr()
         .ok_or_else(|| anyhow::anyhow!("field `{key}` must be an array"))?;
-    anyhow::ensure!(arr.len() == 2, "field `{key}` must have 2 entries");
-    let a = arr[0]
-        .as_u64()
-        .ok_or_else(|| anyhow::anyhow!("field `{key}`[0] must be an integer"))?;
-    let b = arr[1]
-        .as_u64()
-        .ok_or_else(|| anyhow::anyhow!("field `{key}`[1] must be an integer"))?;
-    Ok([a, b])
+    arr.iter()
+        .enumerate()
+        .map(|(i, v)| {
+            v.as_u64()
+                .ok_or_else(|| anyhow::anyhow!("field `{key}`[{i}] must be an integer"))
+        })
+        .collect()
 }
 
 fn counters_from_json(j: &Json) -> anyhow::Result<Counters> {
@@ -251,8 +250,8 @@ fn counters_from_json(j: &Json) -> anyhow::Result<Counters> {
         barrier_wait_cycles: need_u64(j, "barrier_wait_cycles")?,
         fence_wait_cycles: need_u64(j, "fence_wait_cycles")?,
         mode_switches: need_u64(j, "mode_switches")?,
-        cycles_core_busy: pair_u64(j, "cycles_core_busy")?,
-        cycles_unit_busy: pair_u64(j, "cycles_unit_busy")?,
+        cycles_core_busy: per_core_u64(j, "cycles_core_busy")?,
+        cycles_unit_busy: per_core_u64(j, "cycles_unit_busy")?,
     })
 }
 

@@ -597,7 +597,7 @@ impl RouterLoop {
             }
             Request::Metrics => self.fan_out_metrics(tok, conn, id, trace),
             Request::Submit { ref job, seed } => {
-                let fj = FleetJob { job: job.clone(), seed };
+                let fj = FleetJob { seed, ..FleetJob::new(job.clone()) };
                 let key = cache::job_key(&fj.config(&self.cfg), &fj.job);
                 self.route((key % n) as usize, tok, conn, id, trace, op, &req);
             }

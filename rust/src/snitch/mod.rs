@@ -156,7 +156,7 @@ impl Snitch {
         &self,
         now: u64,
         reconfig: &ReconfigStage,
-        units: &[SpatzUnit; 2],
+        units: &[SpatzUnit],
     ) -> Option<u64> {
         match self.state {
             CoreState::Halted => None,
@@ -267,7 +267,7 @@ impl Snitch {
         icache: &mut ICache,
         tcdm: &mut Tcdm,
         reconfig: &mut ReconfigStage,
-        units: &mut [SpatzUnit; 2],
+        units: &mut [SpatzUnit],
         barrier: &mut dyn BarrierPort,
         counters: &mut Counters,
     ) {
@@ -371,7 +371,7 @@ impl Snitch {
         icache: &mut ICache,
         tcdm: &mut Tcdm,
         reconfig: &mut ReconfigStage,
-        units: &mut [SpatzUnit; 2],
+        units: &mut [SpatzUnit],
         barrier: &mut dyn BarrierPort,
         counters: &mut Counters,
         trace: &mut PerfTrace,
@@ -485,7 +485,7 @@ impl Snitch {
         now: u64,
         tcdm: &mut Tcdm,
         reconfig: &mut ReconfigStage,
-        units: &mut [SpatzUnit; 2],
+        units: &mut [SpatzUnit],
         barrier: &mut dyn BarrierPort,
         counters: &mut Counters,
     ) {
@@ -643,7 +643,7 @@ mod tests {
             reconfig: ReconfigStage::new(&cfg.cluster),
             units: [SpatzUnit::new(0, &cfg.cluster), SpatzUnit::new(1, &cfg.cluster)],
             barrier: StubBarrier::new(1),
-            counters: Counters::default(),
+            counters: Counters::for_cores(2),
             now: 0,
         }
     }
@@ -815,7 +815,7 @@ mod tests {
     #[test]
     fn skip_replays_countdowns_and_wait_counters() {
         let mut r = rig(Program::idle());
-        let mut c = Counters::default();
+        let mut c = Counters::for_cores(2);
         r.core.state = CoreState::Stall(5);
         r.core.skip(3, &mut c);
         assert_eq!(r.core.state(), CoreState::Stall(2));

@@ -730,7 +730,7 @@ mod tests {
         t.begin_cycle();
         u.step(0, &mut t, &mut retires); // issue: fpu busy until 32, retire at 35
         assert_eq!(u.next_event(1), Some(35));
-        let mut bulk = Counters::default();
+        let mut bulk = Counters::for_cores(1);
         u.skip(1, 34, &mut bulk);
         // the naive loop would count busy_this_cycle for cycles 1..=31
         assert_eq!(bulk.cycles_unit_busy[0], 31);
@@ -831,7 +831,7 @@ mod tests {
         let mut retires = Vec::new();
         t.begin_cycle();
         u.step(0, &mut t, &mut retires); // LSU op becomes active
-        let mut bulk = Counters::default();
+        let mut bulk = Counters::for_cores(1);
         u.skip(1, 3, &mut bulk);
         assert_eq!(bulk.cycles_unit_busy[0], 3);
     }

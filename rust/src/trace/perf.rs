@@ -318,7 +318,8 @@ pub struct PerfTrace {
     records_dropped: u64,
     sink: Option<BufWriter<File>>,
     /// Per-core open wait episode: `(reason code, begin cycle)`.
-    open_wait: [Option<(u16, u64)>; 2],
+    /// Grows on demand to the owning cluster's core count.
+    open_wait: Vec<Option<(u16, u64)>>,
 }
 
 impl PerfTrace {
@@ -332,7 +333,7 @@ impl PerfTrace {
             records_total: 0,
             records_dropped: 0,
             sink: None,
-            open_wait: [None, None],
+            open_wait: Vec::new(),
         }
     }
 
@@ -408,6 +409,9 @@ impl PerfTrace {
         if !self.enabled {
             return;
         }
+        if self.open_wait.len() <= core {
+            self.open_wait.resize(core + 1, None);
+        }
         if self.open_wait[core].is_none() {
             self.open_wait[core] = Some((reason_code, now));
         }
@@ -419,7 +423,7 @@ impl PerfTrace {
         if !self.enabled {
             return None;
         }
-        self.open_wait[core].take()
+        self.open_wait.get_mut(core)?.take()
     }
 
     /// Stream every future record to `path` (the in-memory ring keeps
@@ -445,7 +449,7 @@ impl PerfTrace {
         self.ring.clear();
         self.records_total = 0;
         self.records_dropped = 0;
-        self.open_wait = [None, None];
+        self.open_wait.clear();
     }
 }
 

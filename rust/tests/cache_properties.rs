@@ -153,6 +153,56 @@ fn prop_result_determining_knobs_change_the_key() {
 }
 
 #[test]
+fn prop_topology_fields_split_both_digests() {
+    // The N-core × M-cluster knobs are artifact inputs: mutating either
+    // must re-key the compile artifact AND the result cache — a stale
+    // hit across shapes would replay the wrong per-core programs.
+    use spatzformer::compile::compile_key;
+    check("cores/clusters mutations split compile and result keys", 128, |g| {
+        let cfg = arb_base(g);
+        let job = arb_job(g);
+        let rkey = job_key(&cfg, &job);
+        let ckey = compile_key(&cfg.cluster, cfg.seed, &job);
+        let mut mutated = cfg.clone();
+        if g.bool() {
+            mutated.cluster.cores += g.int(1, 6);
+        } else {
+            mutated.cluster.clusters += g.int(1, 6);
+        }
+        assert_ne!(job_key(&mutated, &job), rkey, "result digest must track the topology");
+        assert_ne!(
+            compile_key(&mutated.cluster, mutated.seed, &job),
+            ckey,
+            "compile digest must track the topology"
+        );
+    });
+}
+
+#[test]
+fn default_dual_core_digests_ignore_spelled_out_topology_defaults() {
+    // Cache-churn guard for the paper's shape: the digest preimage (the
+    // cluster's Debug rendering) omits `clusters` when it is 1, so a
+    // config that spells out the default topology hashes identically to
+    // one that never touched the fields — existing dual-core cache
+    // entries and golden digests stay valid.
+    use spatzformer::compile::compile_key;
+    let cfg = SimConfig::spatzformer();
+    assert_eq!((cfg.cluster.cores, cfg.cluster.clusters), (2, 1));
+    let mut spelled = cfg.clone();
+    spelled.cluster.cores = 2;
+    spelled.cluster.clusters = 1;
+    let job = Job::Kernel { kernel: KernelId::Fft, policy: ModePolicy::Merge };
+    assert_eq!(job_key(&cfg, &job), job_key(&spelled, &job));
+    assert_eq!(
+        compile_key(&cfg.cluster, cfg.seed, &job),
+        compile_key(&spelled.cluster, cfg.seed, &job)
+    );
+    let d = format!("{:?}", cfg.cluster);
+    assert!(d.contains("cores: 2"), "{d}");
+    assert!(!d.contains("clusters"), "preimage must omit the default cluster count: {d}");
+}
+
+#[test]
 fn prop_job_identity_decides_key_equality() {
     check("same job same key, different job different key", 256, |g| {
         let cfg = arb_base(g);

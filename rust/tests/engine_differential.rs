@@ -88,6 +88,37 @@ fn mixed_sweep_and_storm_scenarios_are_engine_invariant() {
     assert_engines_agree(&baseline, &storm_b.jobs);
 }
 
+#[test]
+fn prop_random_topologies_are_engine_invariant() {
+    // The dual-core contract, generalized: whatever cores × clusters
+    // shape a job pins, the fast engine must stay byte-identical to the
+    // per-cycle oracle — exact `JobReport` equality, topology included.
+    check("fast vs naive over random topologies", 10, |g| {
+        let base = SimConfig::spatzformer();
+        let cores = g.int(1, 4);
+        let clusters = g.int(1, 2);
+        let kernels = KernelId::all();
+        let kernel = kernels[g.int(0, kernels.len() - 1)];
+        // merge pairs adjacent cores and mixed needs a free scalar core:
+        // both require at least two cores per cluster
+        let policy = if cores >= 2 && g.bool() { ModePolicy::Merge } else { ModePolicy::Split };
+        let job = if cores >= 2 && g.bool() {
+            Job::Mixed { kernel, policy, coremark_iterations: 1 }
+        } else {
+            Job::Kernel { kernel, policy }
+        };
+        let fj = FleetJob::with_topology(job, cores, clusters);
+        let fast = run_with(EngineKind::Fast, &base, &fj);
+        let naive = run_with(EngineKind::Naive, &base, &fj);
+        assert_eq!(
+            fast,
+            naive,
+            "{} {policy:?} diverged at cores={cores} clusters={clusters}",
+            kernel.name()
+        );
+    });
+}
+
 /// Full post-run cluster fingerprint for cluster-level comparisons.
 fn fingerprint(cl: &Cluster, out_base: u32, out_len: usize) -> (u64, String, Vec<u32>) {
     let m = cl.metrics(0);

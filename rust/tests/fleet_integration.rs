@@ -9,15 +9,12 @@ use spatzformer::kernels::KernelId;
 use spatzformer::util::testutil::check;
 
 /// Reference: run the same batch through sequential `Coordinator::submit`
-/// calls, applying per-job seed overrides exactly as the fleet does.
+/// calls, applying per-job seed/topology overrides exactly as the fleet
+/// does ([`FleetJob::config`]).
 fn sequential(base: &SimConfig, jobs: &[FleetJob]) -> Vec<JobReport> {
     jobs.iter()
         .map(|fj| {
-            let mut cfg = base.clone();
-            if let Some(seed) = fj.seed {
-                cfg.seed = seed;
-            }
-            let mut coord = Coordinator::new(cfg).unwrap();
+            let mut coord = Coordinator::new(fj.config(base)).unwrap();
             coord.submit(&fj.job).unwrap()
         })
         .collect()
@@ -118,11 +115,11 @@ fn prop_fleet_determinism_across_worker_counts() {
 fn cache_serves_repeats_single_worker_exactly() {
     let base = SimConfig::spatzformer();
     let job = FleetJob {
-        job: Job::Kernel {
+        seed: Some(0xCAFE),
+        ..FleetJob::new(Job::Kernel {
             kernel: KernelId::Faxpy,
             policy: ModePolicy::Split,
-        },
-        seed: Some(0xCAFE),
+        })
     };
     let jobs = vec![job; 8];
     let fleet = Fleet::new(base).unwrap().with_workers(1);
@@ -140,11 +137,11 @@ fn cache_misses_bounded_by_concurrency() {
     // before the first insert lands; every later lookup must hit.
     let base = SimConfig::spatzformer();
     let job = FleetJob {
-        job: Job::Kernel {
+        seed: Some(0xBEEF),
+        ..FleetJob::new(Job::Kernel {
             kernel: KernelId::Fdotp,
             policy: ModePolicy::Merge,
-        },
-        seed: Some(0xBEEF),
+        })
     };
     let jobs = vec![job; 12];
     let workers = 3;
@@ -166,11 +163,11 @@ fn cache_misses_bounded_by_concurrency() {
 fn disabled_cache_simulates_everything() {
     let base = SimConfig::spatzformer();
     let job = FleetJob {
-        job: Job::Kernel {
+        seed: Some(1),
+        ..FleetJob::new(Job::Kernel {
             kernel: KernelId::Faxpy,
             policy: ModePolicy::Split,
-        },
-        seed: Some(1),
+        })
     };
     let jobs = vec![job; 6];
     let out = Fleet::new(base)
@@ -192,11 +189,11 @@ fn oversubscribed_fleet_drains_every_queue() {
     let base = SimConfig::spatzformer();
     let jobs: Vec<FleetJob> = (0..3)
         .map(|i| FleetJob {
-            job: Job::Kernel {
+            seed: Some(1000 + i),
+            ..FleetJob::new(Job::Kernel {
                 kernel: KernelId::Faxpy,
                 policy: ModePolicy::Split,
-            },
-            seed: Some(1000 + i),
+            })
         })
         .collect();
     let out = Fleet::new(base.clone()).unwrap().with_workers(8).run(&jobs).unwrap();

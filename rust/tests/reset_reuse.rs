@@ -87,6 +87,31 @@ fn grid_reuse_is_byte_identical_on_spatzformer() {
 }
 
 #[test]
+fn grid_reuse_is_byte_identical_on_a_quad_core_cluster() {
+    // The same contract off the paper's dual-core shape: four cores per
+    // cluster (merge pairs 0+1 and 2+3; mixed parks the co-task on core
+    // 3), two clusters behind the shared staging tier. reset() must
+    // scrub every per-core structure the wider shape grew.
+    let mut jobs = Vec::new();
+    for kernel in KernelId::all() {
+        for policy in [ModePolicy::Split, ModePolicy::Merge] {
+            jobs.push(Job::Kernel { kernel, policy });
+        }
+        jobs.push(Job::Mixed {
+            kernel,
+            policy: ModePolicy::Auto,
+            coremark_iterations: 1,
+        });
+    }
+    for engine in [EngineKind::Fast, EngineKind::Naive] {
+        let mut cfg = cfg_with(engine, false);
+        cfg.cluster.cores = 4;
+        cfg.cluster.clusters = 2;
+        assert_identical(&cfg, &jobs, "quad-core grid");
+    }
+}
+
+#[test]
 fn grid_reuse_is_byte_identical_on_baseline() {
     let mut jobs = Vec::new();
     for kernel in KernelId::all() {
